@@ -1,0 +1,177 @@
+//! End-to-end driver — the full system on a real (synthetic-scaled)
+//! workload, proving all three layers compose:
+//!
+//!   corpus -> beam-lite partition pipeline -> streaming format ->
+//!   WordPiece -> FedAvg/FedSGD over the AOT transformer via PJRT ->
+//!   loss curves + pre/post-personalization evaluation (Table 5 shape).
+//!
+//! Python never runs here: the transformer (Pallas flash-attention +
+//! fused-CE kernels inside a JAX model) was lowered once by
+//! `make artifacts`; this binary loads the HLO text and drives it through
+//! the `xla` crate's PJRT CPU client.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example federated_pretraining -- \
+//!     [--model small] [--rounds 40] [--cohort 4] [--tau 8] [--groups 300]
+//! ```
+//!
+//! The run recorded in EXPERIMENTS.md §E2E used the defaults.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+use grouper::config::{FedAlgorithm, FedConfig, ScheduleKind};
+use grouper::corpus::DatasetSpec;
+use grouper::corpus::SyntheticTextDataset;
+use grouper::fed::trainer::build_eval_clients;
+use grouper::fed::{personalization_eval, train, TrainerConfig};
+use grouper::grouper::{partition_dataset, PartitionedDataset};
+use grouper::pipeline::{FeatureKey, PartitionOptions};
+use grouper::runtime::{ModelBackend, ModelRuntime};
+use grouper::tokenizer::VocabBuilder;
+use grouper::util::table::{write_series_csv, Table};
+use grouper::util::timer::Timer;
+
+fn arg<T: std::str::FromStr>(name: &str, default: T) -> T {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let model: String = arg("--model", "small".to_string());
+    let rounds: usize = arg("--rounds", 40);
+    let cohort: usize = arg("--cohort", 4);
+    let tau: usize = arg("--tau", 8);
+    let groups: usize = arg("--groups", 300);
+    let eval_groups: usize = arg("--eval-groups", 24);
+
+    println!("== federated pretraining e2e: model={model} rounds={rounds} cohort={cohort} tau={tau}");
+    let work = PathBuf::from("work/e2e");
+    std::fs::create_dir_all("results")?;
+
+    // ---- 1. Data pipeline: generate + partition FedC4-mini. ------------
+    let t = Timer::start();
+    let train_ds = SyntheticTextDataset::new(DatasetSpec::fedc4_mini(groups, 42));
+    let eval_ds = SyntheticTextDataset::new(DatasetSpec::fedc4_mini(eval_groups, 43)); // held-out
+    if !work.join("train.gindex").exists() {
+        let r = partition_dataset(
+            &train_ds,
+            &FeatureKey::new("domain"),
+            &work,
+            "train",
+            &PartitionOptions::default(),
+        )?;
+        println!(
+            "pipeline: {} examples -> {} groups ({} words) in {:.1}s",
+            r.num_examples,
+            r.num_groups,
+            grouper::util::humanize::count(r.total_words as f64),
+            r.wall_secs
+        );
+        partition_dataset(
+            &eval_ds,
+            &FeatureKey::new("domain"),
+            &work,
+            "eval",
+            &PartitionOptions::default(),
+        )?;
+    } else {
+        println!("pipeline: reusing {}", work.display());
+    }
+
+    // ---- 2. Runtime + tokenizer. ----------------------------------------
+    let rt = ModelRuntime::load(std::path::Path::new("artifacts"), &model)
+        .context("run `make artifacts` first")?;
+    println!(
+        "runtime: platform={} tensors={} fused taus={:?} ({:.1}s elapsed)",
+        rt.platform(),
+        rt.num_param_tensors(),
+        rt.manifest.tau_variants(),
+        t.elapsed_secs()
+    );
+    let mut vb = VocabBuilder::new();
+    for text in train_ds.stream_all_text() {
+        vb.feed(&text);
+    }
+    let wp = vb.build(rt.vocab_size());
+    println!(
+        "tokenizer: {} tokens over {} corpus words",
+        wp.vocab_size(),
+        vb.total_words()
+    );
+
+    // ---- 3. Train FedAvg and FedSGD. ------------------------------------
+    let train_pd = PartitionedDataset::open(&work, "train")?;
+    let eval_pd = PartitionedDataset::open(&work, "eval")?;
+    let mut curves: Vec<Vec<f64>> = Vec::new();
+    let mut table = Table::new(
+        "Pre/post-personalization validation loss (Table 5 shape)",
+        &["Algorithm", "Pre p10", "Pre median", "Pre p90", "Post p10", "Post median", "Post p90"],
+    );
+
+    for algorithm in [FedAlgorithm::FedAvg, FedAlgorithm::FedSgd] {
+        let name = match algorithm {
+            FedAlgorithm::FedAvg => "FedAvg",
+            FedAlgorithm::FedSgd => "FedSGD",
+        };
+        let fed = FedConfig {
+            algorithm,
+            rounds,
+            cohort_size: cohort,
+            tau,
+            client_lr: 0.1,
+            server_lr: 1e-3,
+            schedule: ScheduleKind::Constant,
+            shuffle_buffer: 64,
+            seed: 7,
+        };
+        println!("-- training {name} for {rounds} rounds");
+        let mut tc = TrainerConfig::new(fed.clone());
+        tc.log_every = (rounds / 10).max(1);
+        let t = Timer::start();
+        let out = train(&rt, &train_pd, &wp, &tc)?;
+        let data_share: f64 = {
+            let d: f64 = out.rounds.iter().map(|r| r.data_secs).sum();
+            let c: f64 = out.rounds.iter().map(|r| r.train_secs).sum();
+            100.0 * d / (d + c)
+        };
+        println!(
+            "{name}: final loss {:.4} in {:.1}s (data iteration {:.1}% of round time)",
+            out.final_loss(),
+            t.elapsed_secs(),
+            data_share
+        );
+        for r in &out.rounds {
+            curves.push(vec![
+                if algorithm == FedAlgorithm::FedAvg { 0.0 } else { 1.0 },
+                r.round as f64,
+                r.train_loss as f64,
+            ]);
+        }
+
+        // ---- 4. Personalization eval (Appendix C.5). --------------------
+        let clients = build_eval_clients(&eval_pd, &wp, &rt, tau, eval_groups)?;
+        let res = personalization_eval(&rt, &out.params, &clients, fed.client_lr)?;
+        let pre = res.pre_summary();
+        let post = res.post_summary();
+        table.row(vec![
+            name.into(),
+            format!("{:.3}", pre.p10),
+            format!("{:.3}", pre.median),
+            format!("{:.3}", pre.p90),
+            format!("{:.3}", post.p10),
+            format!("{:.3}", post.median),
+            format!("{:.3}", post.p90),
+        ]);
+    }
+
+    write_series_csv("results/e2e_loss_curves.csv", &["algo", "round", "loss"], &curves)?;
+    table.print();
+    table.write_csv("results/e2e_personalization.csv")?;
+    println!("wrote results/e2e_loss_curves.csv, results/e2e_personalization.csv");
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Quickstart — the paper's Listing 1 + Listing 2, in Rust.
+//!
+//! Partition a labeled dataset by label (one group per label, the MNIST
+//! example of Appendix A.1), then open the materialization and iterate the
+//! nested group stream: an iterator of group datasets, each of which is an
+//! iterator of examples.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use grouper::corpus::GroupedCifarLike;
+use grouper::formats::streaming::StreamingConfig;
+use grouper::grouper::{partition_dataset, PartitionedDataset};
+use grouper::pipeline::{FeatureKey, PartitionOptions};
+
+fn main() -> Result<()> {
+    let out = std::env::temp_dir().join("grouper_quickstart");
+    let _ = std::fs::remove_dir_all(&out);
+
+    // 1. A base dataset: 100 groups x 100 synthetic 32x32x3 images, with
+    //    `label == group`. (Stand-in for tfds.builder("mnist"); see
+    //    DESIGN.md §2 for the substitution table.)
+    let dataset = GroupedCifarLike::standard(/*seed=*/ 0);
+
+    // 2. The partition function: `get_key_fn(example) -> group_id`.
+    //    Partitioning by the label feature, exactly Listing 1.
+    let get_label_fn = FeatureKey::new("label");
+
+    // 3. Build + run the partitioning pipeline.
+    let report = partition_dataset(
+        &dataset,
+        &get_label_fn,
+        &out,
+        "mnist_like",
+        &PartitionOptions { num_shards: 4, count_words: false, ..Default::default() },
+    )?;
+    println!(
+        "partitioned {} examples into {} groups in {:.2}s",
+        report.num_examples, report.num_groups, report.wall_secs
+    );
+
+    // 4. Listing 2: open the partitioned dataset and iterate the group
+    //    stream (buffered shuffle + interleave; streaming access only).
+    let partitioned = PartitionedDataset::open(&out, "mnist_like")?;
+    let config = StreamingConfig { shuffle_buffer: 16, seed: 7, ..Default::default() };
+    let mut groups = 0usize;
+    let mut examples = 0usize;
+    for group in partitioned.build_group_stream(config)? {
+        let mut group = group?;
+        groups += 1;
+        let label = group.key.clone();
+        group.for_each_example(|ex| {
+            assert_eq!(
+                ex.get_ints("label").unwrap()[0].to_string().as_bytes(),
+                &label[..]
+            );
+            examples += 1;
+            true // keep iterating this client's stream
+        })?;
+    }
+    println!("iterated {groups} groups / {examples} examples via the group stream");
+
+    // 5. Cohort batching for FL: windows of 10 clients per round.
+    let cohorts = partitioned
+        .build_cohort_stream(
+            StreamingConfig { shuffle_buffer: 16, seed: 7, ..Default::default() },
+            10,
+        )?
+        .count();
+    println!("that is {cohorts} training cohorts of 10 clients each");
+    Ok(())
+}

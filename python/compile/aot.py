@@ -1,0 +1,163 @@
+"""AOT export: lower the L2 model to HLO *text* artifacts for the Rust runtime.
+
+HLO text — NOT a serialized HloModuleProto — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate links)
+rejects (``proto.id() <= INT_MAX``).  The HLO text parser reassigns ids, so
+text round-trips cleanly.  See /opt/xla-example/README.md.
+
+Artifacts written to ``--out-dir`` (default ``artifacts/``), per config:
+
+  <cfg>_eval_loss.hlo.txt
+  <cfg>_grad.hlo.txt
+  <cfg>_sgd_step.hlo.txt
+  <cfg>_local_train_tau<T>.hlo.txt     (one per cfg.tau_variants)
+  <cfg>_init_params.npz-like flat .bin (raw f32 params, manifest order)
+  <cfg>.manifest                       (text manifest parsed by rust)
+
+Manifest grammar (line-oriented, whitespace-separated):
+
+  meta <key> <value>
+  param <name> <dtype> <rank> <dims...>
+  artifact <fn> <file> [tau]
+
+Usage:  cd python && python -m compile.aot [--configs tiny,small] [--out-dir D]
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as model_lib
+from compile.configs import CONFIGS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (gen_hlo.py recipe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_config(cfg_name: str, out_dir: str, verbose: bool = True) -> dict:
+    cfg = CONFIGS[cfg_name]
+    entries = model_lib.make_entry_points(cfg, use_pallas=True)
+    spec = model_lib.param_spec(cfg)
+    artifacts = []
+
+    def lower_and_write(fn_name, fn, specs, fname, tau=None):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append((fn_name, fname, tau))
+        if verbose:
+            print(
+                f"  [{cfg_name}] {fn_name}{'' if tau is None else f'(tau={tau})'}"
+                f" -> {fname} ({len(text) / 1e6:.2f} MB, {time.time() - t0:.1f}s)"
+            )
+
+    lower_and_write(
+        "eval_loss",
+        entries["eval_loss"],
+        model_lib.arg_specs(cfg, "eval_loss"),
+        f"{cfg_name}_eval_loss.hlo.txt",
+    )
+    lower_and_write(
+        "grad",
+        entries["grad"],
+        model_lib.arg_specs(cfg, "grad"),
+        f"{cfg_name}_grad.hlo.txt",
+    )
+    lower_and_write(
+        "sgd_step",
+        entries["sgd_step"],
+        model_lib.arg_specs(cfg, "sgd_step"),
+        f"{cfg_name}_sgd_step.hlo.txt",
+    )
+    for tau in cfg.tau_variants:
+        lower_and_write(
+            "local_train",
+            entries["make_local_train"](tau),
+            model_lib.arg_specs(cfg, "local_train", tau=tau),
+            f"{cfg_name}_local_train_tau{tau}.hlo.txt",
+            tau=tau,
+        )
+        lower_and_write(
+            "grad_multi",
+            entries["make_grad_multi"](tau),
+            model_lib.arg_specs(cfg, "grad_multi", tau=tau),
+            f"{cfg_name}_grad_multi_tau{tau}.hlo.txt",
+            tau=tau,
+        )
+
+    # Initial parameters: raw little-endian f32, concatenated in manifest
+    # order.  The Rust side slices this by the manifest shapes.
+    params = model_lib.init_params(cfg, seed=0)
+    flat = model_lib.flatten_params(params, cfg)
+    blob = b"".join(np.asarray(p, dtype="<f4").tobytes() for p in flat)
+    with open(os.path.join(out_dir, f"{cfg_name}_init_params.bin"), "wb") as f:
+        f.write(blob)
+
+    with open(os.path.join(out_dir, f"{cfg_name}.manifest"), "w") as f:
+        f.write(f"meta config {cfg_name}\n")
+        f.write(f"meta vocab_size {cfg.vocab_size}\n")
+        f.write(f"meta d_model {cfg.d_model}\n")
+        f.write(f"meta n_heads {cfg.n_heads}\n")
+        f.write(f"meta n_layers {cfg.n_layers}\n")
+        f.write(f"meta d_ff {cfg.d_ff}\n")
+        f.write(f"meta seq_len {cfg.seq_len}\n")
+        f.write(f"meta batch_size {cfg.batch_size}\n")
+        f.write(f"meta tau {cfg.tau}\n")
+        f.write(f"meta pad_id {cfg.pad_id}\n")
+        f.write(f"meta num_params {model_lib.num_params(cfg)}\n")
+        f.write(f"meta init_params {cfg_name}_init_params.bin\n")
+        for name, shape in spec:
+            dims = " ".join(str(d) for d in shape)
+            f.write(f"param {name} f32 {len(shape)} {dims}\n")
+        for fn_name, fname, tau in artifacts:
+            if tau is None:
+                f.write(f"artifact {fn_name} {fname}\n")
+            else:
+                f.write(f"artifact {fn_name} {fname} {tau}\n")
+
+    return {"config": cfg_name, "artifacts": artifacts}
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--configs",
+        default="tiny,small,base",
+        help="comma-separated config names (see compile/configs.py)",
+    )
+    parser.add_argument("--out-dir", default=None)
+    args = parser.parse_args()
+
+    out_dir = args.out_dir
+    if out_dir is None:
+        # python/ is the cwd per the Makefile; artifacts/ sits at repo root.
+        out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    out_dir = os.path.abspath(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    names = [c.strip() for c in args.configs.split(",") if c.strip()]
+    for name in names:
+        if name not in CONFIGS:
+            raise SystemExit(f"unknown config {name!r}; have {sorted(CONFIGS)}")
+        print(f"exporting config {name} -> {out_dir}")
+        export_config(name, out_dir)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

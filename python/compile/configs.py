@@ -1,0 +1,86 @@
+"""Model configurations for the AOT-compiled decoder-only transformers.
+
+The paper trains 108M- and 1B-parameter decoder-only transformers on a
+16x TPU-v3 pod (Appendix C.2/C.6).  This reproduction runs on a CPU PJRT
+client, so the configs are scaled down while keeping the architecture
+family (pre-LN decoder-only transformer, causal LM loss, tied embeddings):
+
+  * ``tiny``  — unit-test scale (~50K params).
+  * ``small`` — the workhorse for the federated-training experiments
+                (Figure 4 / Table 5 analogues), ~1.6M params.
+  * ``base``  — the "scaling" config standing in for the paper's 1B model
+                (Figure 8 analogue), ~9M params.
+
+``seq_len`` is the number of *predicted* positions: clients feed token
+sequences of length ``seq_len + 1`` (paper: 129 tokens -> 128 predictions).
+``tau_variants`` are the batches-per-client values for which a fused
+``local_train`` artifact (lax.scan over tau SGD steps) is exported; any
+other tau can still be run by looping the ``sgd_step`` artifact from Rust.
+"""
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+    seq_len: int
+    batch_size: int
+    tau: int  # default batches per client (paper: 64)
+    tau_variants: Tuple[int, ...]
+    pad_id: int = 0
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def tokens_per_example(self) -> int:
+        return self.seq_len + 1
+
+
+CONFIGS = {
+    "tiny": ModelConfig(
+        name="tiny",
+        vocab_size=256,
+        d_model=32,
+        n_heads=2,
+        n_layers=2,
+        d_ff=64,
+        seq_len=32,
+        batch_size=4,
+        tau=4,
+        tau_variants=(1, 2, 4, 8, 16),
+    ),
+    "small": ModelConfig(
+        name="small",
+        vocab_size=1024,
+        d_model=128,
+        n_heads=4,
+        n_layers=4,
+        d_ff=256,
+        seq_len=64,
+        batch_size=8,
+        tau=8,
+        tau_variants=(1, 4, 8, 16),
+    ),
+    "base": ModelConfig(
+        name="base",
+        vocab_size=8192,
+        d_model=256,
+        n_heads=8,
+        n_layers=8,
+        d_ff=512,
+        seq_len=128,
+        batch_size=8,
+        tau=4,
+        tau_variants=(4,),
+    ),
+}

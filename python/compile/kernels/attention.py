@@ -1,0 +1,302 @@
+"""Fused causal flash-attention as Pallas kernels (forward + backward).
+
+This is the L1 compute hot-spot of the reproduction.  The paper trains
+decoder-only transformers on TPU v3; its attention is the classic
+O(S^2 d) bottleneck.  We implement the FlashAttention schedule as Pallas
+kernels so that the attention matrix ``[S, S]`` is never materialized in
+HBM: the forward pass streams K/V blocks through VMEM with an
+online-softmax accumulator, and the backward pass recomputes the
+probabilities blockwise from the saved log-sum-exp.
+
+Hardware adaptation (paper targets TPU; we must run on a CPU PJRT client):
+the kernels are always lowered with ``interpret=True`` so they become plain
+HLO ops executable by the CPU plugin — real TPU lowering would emit a
+Mosaic custom-call the CPU client cannot run.  Block shapes are still
+chosen TPU-style (see DESIGN.md §Hardware-Adaptation): Q/K tiles sized so
+q-tile + k-tile + v-tile + accumulators fit comfortably in a 16 MiB VMEM
+budget, with the contracting dimension (``d_head``) feeding the MXU.
+
+Gradients are wired with ``jax.custom_vjp``: the backward pass runs two
+dedicated Pallas kernels (one grid over Q blocks producing dQ; one grid
+over K blocks producing dK/dV), which is the standard FlashAttention-v1
+backward split.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block size along the sequence dimension.  Must divide seq_len.
+DEFAULT_BLOCK = 32
+
+_NEG_INF = -1e30
+
+
+def _pick_block(seq_len: int, requested: int) -> int:
+    """Largest block <= requested that divides seq_len."""
+    b = min(requested, seq_len)
+    while seq_len % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_q, block_k, scale):
+    """One (batch*head, q-block) grid step of causal flash attention.
+
+    Refs (VMEM blocks):
+      q_ref:   [1, block_q, d_head]   -- this grid step's query tile
+      k_ref:   [1, seq, d_head]       -- all keys for this batch*head
+      v_ref:   [1, seq, d_head]       -- all values
+      o_ref:   [1, block_q, d_head]   -- output tile
+      lse_ref: [1, block_q]           -- log-sum-exp per query row (for bwd)
+    """
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :] * scale  # [bq, dh]
+    d_head = q.shape[-1]
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # [bq]
+
+    m0 = jnp.full((block_q,), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d_head), dtype=jnp.float32)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0, :, :], j * block_k, block_k, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0, :, :], j * block_k, block_k, 0)
+        s = jnp.dot(q, k.T)  # [bq, bk]
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(causal, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    # Causality: K blocks strictly after this Q block contribute nothing.
+    # With block_q == block_k the valid K blocks are j in [0, qi].
+    n_valid = (qi * block_q + block_q + block_k - 1) // block_k
+    m, l, acc = jax.lax.fori_loop(0, n_valid, body, (m0, l0, acc0))
+
+    o_ref[0, :, :] = (acc / l[:, None]).astype(o_ref.dtype)
+    lse_ref[0, :] = (m + jnp.log(l)).astype(lse_ref.dtype)
+
+
+def _fwd(q, k, v, *, block: int):
+    """q, k, v: [bh, seq, d_head] -> (o [bh, seq, d_head], lse [bh, seq])."""
+    bh, seq, d_head = q.shape
+    block_q = block_k = _pick_block(seq, block)
+    scale = 1.0 / math.sqrt(d_head)
+    grid = (bh, seq // block_q)
+    kernel = functools.partial(
+        _fwd_kernel, block_q=block_q, block_k=block_k, scale=scale
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d_head), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq, d_head), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq, d_head), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d_head), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, seq, d_head), q.dtype),
+            jax.ShapeDtypeStruct((bh, seq), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *, block_q, block_k, scale
+):
+    """Grid over (bh, q-blocks): dQ tile.
+
+    dS = P * (dO V^T - delta);  dQ = scale * dS K.
+    """
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :]
+    do = do_ref[0, :, :]
+    lse = lse_ref[0, :]
+    delta = delta_ref[0, :]
+    d_head = q.shape[-1]
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    acc0 = jnp.zeros((block_q, d_head), dtype=jnp.float32)
+
+    def body(j, acc):
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0, :, :], j * block_k, block_k, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0, :, :], j * block_k, block_k, 0)
+        s = jnp.dot(q, k.T) * scale
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        p = jnp.where(causal, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jnp.dot(do, v.T)
+        ds = p * (dp - delta[:, None]) * scale
+        return acc + jnp.dot(ds, k)
+
+    n_valid = (qi * block_q + block_q + block_k - 1) // block_k
+    acc = jax.lax.fori_loop(0, n_valid, body, acc0)
+    dq_ref[0, :, :] = acc.astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+    *, block_q, block_k, seq, scale
+):
+    """Grid over (bh, k-blocks): dK/dV tiles.
+
+    dV = P^T dO;  dK = scale * dS^T Q.
+    """
+    ki = pl.program_id(1)
+    k = jax.lax.dynamic_slice_in_dim(k_ref[0, :, :], ki * block_k, block_k, 0)
+    v = jax.lax.dynamic_slice_in_dim(v_ref[0, :, :], ki * block_k, block_k, 0)
+    d_head = k.shape[-1]
+    k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+
+    dk0 = jnp.zeros((block_k, d_head), dtype=jnp.float32)
+    dv0 = jnp.zeros((block_k, d_head), dtype=jnp.float32)
+
+    def body(i, carry):
+        dk, dv = carry
+        q = jax.lax.dynamic_slice_in_dim(q_ref[0, :, :], i * block_q, block_q, 0)
+        do = jax.lax.dynamic_slice_in_dim(do_ref[0, :, :], i * block_q, block_q, 0)
+        lse = jax.lax.dynamic_slice_in_dim(lse_ref[0, :], i * block_q, block_q, 0)
+        delta = jax.lax.dynamic_slice_in_dim(delta_ref[0, :], i * block_q, block_q, 0)
+        s = jnp.dot(q, k.T) * scale  # [bq, bk]
+        q_pos = i * block_q + jax.lax.iota(jnp.int32, block_q)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        p = jnp.where(causal, jnp.exp(s - lse[:, None]), 0.0)
+        dv_new = dv + jnp.dot(p.T, do)
+        dp = jnp.dot(do, v.T)
+        ds = p * (dp - delta[:, None]) * scale
+        dk_new = dk + jnp.dot(ds.T, q)
+        return dk_new, dv_new
+
+    # Q blocks strictly before this K block see nothing of it.
+    i0 = (ki * block_k) // block_q
+    n_q = seq // block_q
+    dk, dv = jax.lax.fori_loop(i0, n_q, body, (dk0, dv0))
+    dk_ref[0, :, :] = dk.astype(dk_ref.dtype)
+    dv_ref[0, :, :] = dv.astype(dv_ref.dtype)
+
+
+def _bwd(q, k, v, o, lse, do, *, block: int):
+    bh, seq, d_head = q.shape
+    block_q = block_k = _pick_block(seq, block)
+    scale = 1.0 / math.sqrt(d_head)
+    delta = jnp.sum(do * o, axis=-1)  # [bh, seq]
+
+    full = pl.BlockSpec((1, seq, d_head), lambda b, i: (b, 0, 0))
+    full_vec = pl.BlockSpec((1, seq), lambda b, i: (b, 0))
+
+    dq = pl.pallas_call(
+        functools.partial(
+            _bwd_dq_kernel, block_q=block_q, block_k=block_k, scale=scale
+        ),
+        grid=(bh, seq // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d_head), lambda b, i: (b, i, 0)),
+            full,
+            full,
+            pl.BlockSpec((1, block_q, d_head), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d_head), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, d_head), q.dtype),
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(
+            _bwd_dkv_kernel, block_q=block_q, block_k=block_k, seq=seq, scale=scale
+        ),
+        grid=(bh, seq // block_k),
+        in_specs=[full, full, full, full, full_vec, full_vec],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d_head), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d_head), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, seq, d_head), k.dtype),
+            jax.ShapeDtypeStruct((bh, seq, d_head), v.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Public API: custom-vjp flash attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention(q, k, v, block: int = DEFAULT_BLOCK):
+    """Causal multi-head attention, fused.
+
+    Args:
+      q, k, v: ``[batch*heads, seq, d_head]`` float arrays.
+      block: sequence block size (static); clipped to divide ``seq``.
+
+    Returns:
+      ``[batch*heads, seq, d_head]`` attention output.
+    """
+    o, _ = _fwd(q, k, v, block=block)
+    return o
+
+
+def _flash_fwd(q, k, v, block):
+    o, lse = _fwd(q, k, v, block=block)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(block, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _bwd(q, k, v, o, lse, do, block=block)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def mha(q, k, v, n_heads: int, block: int = DEFAULT_BLOCK):
+    """Multi-head wrapper: q/k/v ``[B, S, D]`` -> ``[B, S, D]``.
+
+    Splits heads, flattens (batch, head) into the kernel grid dimension,
+    runs the fused kernel, and merges heads back.
+    """
+    b, s, d = q.shape
+    d_head = d // n_heads
+
+    def split(x):
+        x = x.reshape(b, s, n_heads, d_head)
+        x = x.transpose(0, 2, 1, 3)  # [B, H, S, dh]
+        return x.reshape(b * n_heads, s, d_head)
+
+    def merge(x):
+        x = x.reshape(b, n_heads, s, d_head).transpose(0, 2, 1, 3)
+        return x.reshape(b, s, d)
+
+    return merge(flash_attention(split(q), split(k), split(v), block))

@@ -1,0 +1,165 @@
+"""Fused softmax-cross-entropy as a Pallas kernel (forward + backward).
+
+The second hot-spot of causal LM training is the final softmax over the
+vocabulary: naive ``log_softmax(logits)[labels]`` materializes an
+``[N, V]`` probability tensor.  This kernel streams the vocabulary
+dimension through VMEM in blocks, keeping only a running max / sum-exp
+and the gathered label logit per token — the standard online-softmax CE.
+
+Backward is also a Pallas kernel: ``dlogits = (softmax(logits) - onehot)
+* dloss`` computed blockwise from the saved log-sum-exp, so the softmax
+is never materialized on the host path either.
+
+Like all L1 kernels in this repo the kernel is lowered with
+``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls); block
+shapes are chosen as if for TPU VMEM (see DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_N_BLOCK = 128   # tokens per grid step
+DEFAULT_V_BLOCK = 512   # vocab slice streamed through VMEM
+
+_NEG_INF = -1e30
+
+
+def _pick_block(n: int, requested: int) -> int:
+    b = min(requested, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _fwd_kernel(logits_ref, labels_ref, loss_ref, lse_ref, *, block_v, vocab):
+    """Grid over token blocks; streams vocab blocks.
+
+    Refs:
+      logits_ref: [block_n, vocab]
+      labels_ref: [block_n]
+      loss_ref:   [block_n]   per-token loss = lse - logit[label]
+      lse_ref:    [block_n]   saved for the backward kernel
+    """
+    labels = labels_ref[...]
+    block_n = labels.shape[0]
+
+    m0 = jnp.full((block_n,), _NEG_INF, dtype=jnp.float32)
+    s0 = jnp.zeros((block_n,), dtype=jnp.float32)
+    g0 = jnp.zeros((block_n,), dtype=jnp.float32)
+
+    def body(j, carry):
+        m, s, gathered = carry
+        blk = jax.lax.dynamic_slice_in_dim(
+            logits_ref[...], j * block_v, block_v, axis=1
+        ).astype(jnp.float32)
+        m_new = jnp.maximum(m, jnp.max(blk, axis=-1))
+        s_new = s * jnp.exp(m - m_new) + jnp.sum(jnp.exp(blk - m_new[:, None]), axis=-1)
+        # Gather the label logit if the label falls inside this vocab block.
+        local = labels - j * block_v
+        in_blk = (local >= 0) & (local < block_v)
+        idx = jnp.clip(local, 0, block_v - 1)
+        val = jnp.take_along_axis(blk, idx[:, None], axis=1)[:, 0]
+        gathered_new = gathered + jnp.where(in_blk, val, 0.0)
+        return m_new, s_new, gathered_new
+
+    m, s, gathered = jax.lax.fori_loop(0, vocab // block_v, body, (m0, s0, g0))
+    lse = m + jnp.log(s)
+    loss_ref[...] = (lse - gathered).astype(loss_ref.dtype)
+    lse_ref[...] = lse.astype(lse_ref.dtype)
+
+
+def _bwd_kernel(logits_ref, labels_ref, lse_ref, dloss_ref, dlogits_ref, *, block_v, vocab):
+    """dlogits = (exp(logits - lse) - onehot(labels)) * dloss."""
+    labels = labels_ref[...]
+    lse = lse_ref[...]
+    dloss = dloss_ref[...]
+
+    def body(j, _):
+        blk = jax.lax.dynamic_slice_in_dim(
+            logits_ref[...], j * block_v, block_v, axis=1
+        ).astype(jnp.float32)
+        p = jnp.exp(blk - lse[:, None])
+        cols = j * block_v + jax.lax.iota(jnp.int32, block_v)
+        onehot = (labels[:, None] == cols[None, :]).astype(jnp.float32)
+        d = (p - onehot) * dloss[:, None]
+        pl.store(
+            dlogits_ref,
+            (slice(None), pl.dslice(j * block_v, block_v)),
+            d.astype(dlogits_ref.dtype),
+        )
+        return 0
+
+    jax.lax.fori_loop(0, vocab // block_v, body, 0)
+
+
+def _fwd(logits, labels, *, v_block):
+    n, vocab = logits.shape
+    block_n = _pick_block(n, DEFAULT_N_BLOCK)
+    block_v = _pick_block(vocab, v_block)
+    grid = (n // block_n,)
+    loss, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, block_v=block_v, vocab=vocab),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, vocab), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(logits, labels)
+    return loss, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def cross_entropy_per_token(logits, labels, v_block: int = DEFAULT_V_BLOCK):
+    """Per-token CE loss, fused online-softmax.
+
+    Args:
+      logits: ``[N, V]`` float array.
+      labels: ``[N]`` int32 array in ``[0, V)``.
+      v_block: vocab streaming block (static).
+
+    Returns:
+      ``[N]`` float32 per-token negative log-likelihood.
+    """
+    loss, _ = _fwd(logits, labels, v_block=v_block)
+    return loss
+
+
+def _ce_fwd(logits, labels, v_block):
+    loss, lse = _fwd(logits, labels, v_block=v_block)
+    return loss, (logits, labels, lse)
+
+
+def _ce_bwd(v_block, res, dloss):
+    logits, labels, lse = res
+    n, vocab = logits.shape
+    block_n = _pick_block(n, DEFAULT_N_BLOCK)
+    block_v = _pick_block(vocab, v_block)
+    dlogits = pl.pallas_call(
+        functools.partial(_bwd_kernel, block_v=block_v, vocab=vocab),
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, vocab), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, vocab), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, vocab), logits.dtype),
+        interpret=True,
+    )(logits, labels, lse, dloss)
+    return dlogits, None
+
+
+cross_entropy_per_token.defvjp(_ce_fwd, _ce_bwd)

@@ -1,0 +1,49 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the reference implementations the pytest suite checks the fused
+kernels against (values and gradients).  They are intentionally the most
+direct possible expression of the math — O(S^2) attention matrix and full
+log-softmax — so any disagreement implicates the kernel, not the oracle.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v):
+    """Causal softmax attention. q/k/v: [bh, seq, d_head]."""
+    _, seq, d_head = q.shape
+    scale = 1.0 / math.sqrt(d_head)
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+    s = jnp.where(mask[None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def ref_mha(q, k, v, n_heads: int):
+    """Multi-head wrapper matching kernels.attention.mha."""
+    b, s, d = q.shape
+    d_head = d // n_heads
+
+    def split(x):
+        return (
+            x.reshape(b, s, n_heads, d_head)
+            .transpose(0, 2, 1, 3)
+            .reshape(b * n_heads, s, d_head)
+        )
+
+    def merge(x):
+        return (
+            x.reshape(b, n_heads, s, d_head).transpose(0, 2, 1, 3).reshape(b, s, d)
+        )
+
+    return merge(ref_attention(split(q), split(k), split(v)))
+
+
+def ref_cross_entropy_per_token(logits, labels):
+    """Per-token CE: [N, V] logits, [N] labels -> [N] nll."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]

@@ -1,0 +1,274 @@
+"""L2: the paper's decoder-only transformer (fwd/bwd) in JAX.
+
+Architecture (Appendix C.2, scaled — see configs.py): pre-LN decoder-only
+transformer with learned positional embeddings, GELU MLP, tied input/output
+embeddings, causal LM loss (next-token cross-entropy).  The attention and
+the final softmax-CE call the L1 Pallas kernels; ``use_pallas=False``
+switches to the pure-jnp reference kernels so the whole model has an
+oracle for testing.
+
+Everything here is *build-time only*: ``aot.py`` lowers the functions below
+to HLO text once, and the Rust coordinator executes them via PJRT.  To keep
+the Rust FFI simple, the exported entry points take the parameters as a
+flat positional tuple in the canonical order defined by ``param_spec``;
+the same order is recorded in the artifact manifest.
+
+Exported entry points (per config):
+  * ``eval_loss(params..., tokens)          -> (loss,)``
+  * ``grad(params..., tokens)               -> (*grads, loss)``       (FedSGD)
+  * ``sgd_step(params..., tokens, lr)       -> (*params', loss)``     (FedAvg)
+  * ``local_train(params..., tokens[tau], lr) -> (*params', mean_loss)``
+     — ``lax.scan`` over tau SGD steps: the FedAvg client hot path, one
+     PJRT execute per client per round instead of tau.
+
+Token layout: ``tokens`` is ``[B, S+1]`` int32; position ``t`` predicts
+token ``t+1`` (paper: sequences of 129 tokens -> 128 predictions).  Padding
+(token id == pad_id) is masked out of the loss; an all-pad batch yields 0.
+"""
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.configs import CONFIGS, ModelConfig
+from compile.kernels import attention as attn_k
+from compile.kernels import cross_entropy as ce_k
+from compile.kernels import ref as ref_k
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec / init / flatten
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical (name, shape) list — the single source of truth for the
+    flat parameter order used by the AOT artifacts and the Rust runtime."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab_size, cfg.d_model)),
+        ("pos", (cfg.seq_len, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln1.scale", (cfg.d_model,)),
+            (p + "ln1.bias", (cfg.d_model,)),
+            (p + "attn.wq", (cfg.d_model, cfg.d_model)),
+            (p + "attn.wk", (cfg.d_model, cfg.d_model)),
+            (p + "attn.wv", (cfg.d_model, cfg.d_model)),
+            (p + "attn.wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2.scale", (cfg.d_model,)),
+            (p + "ln2.bias", (cfg.d_model,)),
+            (p + "mlp.w1", (cfg.d_model, cfg.d_ff)),
+            (p + "mlp.b1", (cfg.d_ff,)),
+            (p + "mlp.w2", (cfg.d_ff, cfg.d_model)),
+            (p + "mlp.b2", (cfg.d_model,)),
+        ]
+    spec += [
+        ("ln_f.scale", (cfg.d_model,)),
+        ("ln_f.bias", (cfg.d_model,)),
+    ]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Normal(0, 0.02) weights, ones/zeros for LayerNorm, zero biases."""
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".scale"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(".bias") or name.endswith(".b1") or name.endswith(".b2"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def flatten_params(params: Params, cfg: ModelConfig) -> List[jnp.ndarray]:
+    return [params[name] for name, _ in param_spec(cfg)]
+
+
+def unflatten_params(flat, cfg: ModelConfig) -> Params:
+    names = [name for name, _ in param_spec(cfg)]
+    assert len(flat) == len(names), (len(flat), len(names))
+    return dict(zip(names, flat))
+
+
+def num_params(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in param_spec(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _block(params: Params, i: int, x, cfg: ModelConfig, use_pallas: bool):
+    p = f"layer{i}."
+    h = _layer_norm(x, params[p + "ln1.scale"], params[p + "ln1.bias"])
+    q = h @ params[p + "attn.wq"]
+    k = h @ params[p + "attn.wk"]
+    v = h @ params[p + "attn.wv"]
+    if use_pallas:
+        a = attn_k.mha(q, k, v, cfg.n_heads)
+    else:
+        a = ref_k.ref_mha(q, k, v, cfg.n_heads)
+    x = x + a @ params[p + "attn.wo"]
+    h = _layer_norm(x, params[p + "ln2.scale"], params[p + "ln2.bias"])
+    h = jax.nn.gelu(h @ params[p + "mlp.w1"] + params[p + "mlp.b1"])
+    x = x + h @ params[p + "mlp.w2"] + params[p + "mlp.b2"]
+    return x
+
+
+def loss_fn(params: Params, tokens, cfg: ModelConfig, use_pallas: bool = True):
+    """Masked mean causal-LM loss over a ``[B, S+1]`` int32 token batch."""
+    inputs = tokens[:, :-1]  # [B, S]
+    targets = tokens[:, 1:]  # [B, S]
+    b, s = inputs.shape
+
+    x = params["embed"][inputs] + params["pos"][None, :s, :]
+    for i in range(cfg.n_layers):
+        x = _block(params, i, x, cfg, use_pallas)
+    x = _layer_norm(x, params["ln_f.scale"], params["ln_f.bias"])
+    logits = x @ params["embed"].T  # tied embeddings, [B, S, V]
+
+    flat_logits = logits.reshape(b * s, cfg.vocab_size)
+    flat_targets = targets.reshape(b * s).astype(jnp.int32)
+    if use_pallas:
+        nll = ce_k.cross_entropy_per_token(flat_logits, flat_targets)
+    else:
+        nll = ref_k.ref_cross_entropy_per_token(flat_logits, flat_targets)
+
+    mask = (flat_targets != cfg.pad_id).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom
+
+
+# ---------------------------------------------------------------------------
+# Exported entry points (flat-parameter signatures)
+# ---------------------------------------------------------------------------
+
+
+def make_entry_points(cfg: ModelConfig, use_pallas: bool = True):
+    """Build the four flat-signature functions lowered by aot.py."""
+    n = len(param_spec(cfg))
+
+    def eval_loss(*args):
+        params = unflatten_params(list(args[:n]), cfg)
+        tokens = args[n]
+        return (loss_fn(params, tokens, cfg, use_pallas),)
+
+    def grad(*args):
+        params = unflatten_params(list(args[:n]), cfg)
+        tokens = args[n]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, tokens, cfg, use_pallas)
+        )(params)
+        return tuple(flatten_params(grads, cfg)) + (loss,)
+
+    def sgd_step(*args):
+        params = unflatten_params(list(args[:n]), cfg)
+        tokens, lr = args[n], args[n + 1]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, tokens, cfg, use_pallas)
+        )(params)
+        new = {k: params[k] - lr * grads[k] for k in params}
+        return tuple(flatten_params(new, cfg)) + (loss,)
+
+    def make_grad_multi(tau: int):
+        """Fused FedSGD client: mean gradient over tau batches, all at the
+        broadcast parameters (lax.scan; one PJRT execute per client per
+        round instead of tau — see EXPERIMENTS.md §Perf)."""
+
+        def grad_multi(*args):
+            params = unflatten_params(list(args[:n]), cfg)
+            batches = args[n]  # [tau, B, S+1]
+
+            def step(acc, tokens):
+                acc_grads, acc_loss = acc
+                loss, grads = jax.value_and_grad(
+                    lambda q: loss_fn(q, tokens, cfg, use_pallas)
+                )(params)
+                new_grads = {k: acc_grads[k] + grads[k] for k in acc_grads}
+                return (new_grads, acc_loss + loss), 0.0
+
+            zero = {k: jnp.zeros_like(v) for k, v in params.items()}
+            (sum_grads, sum_loss), _ = jax.lax.scan(
+                step, (zero, jnp.float32(0.0)), batches
+            )
+            mean = {k: v / tau for k, v in sum_grads.items()}
+            return tuple(flatten_params(mean, cfg)) + (sum_loss / tau,)
+
+        return grad_multi
+
+    def make_local_train(tau: int):
+        def local_train(*args):
+            params = unflatten_params(list(args[:n]), cfg)
+            batches, lr = args[n], args[n + 1]  # [tau, B, S+1]
+
+            def step(p, tokens):
+                loss, grads = jax.value_and_grad(
+                    lambda q: loss_fn(q, tokens, cfg, use_pallas)
+                )(p)
+                return {k: p[k] - lr * grads[k] for k in p}, loss
+
+            params, losses = jax.lax.scan(step, params, batches)
+            return tuple(flatten_params(params, cfg)) + (jnp.mean(losses),)
+
+        return local_train
+
+    return {
+        "eval_loss": eval_loss,
+        "grad": grad,
+        "sgd_step": sgd_step,
+        "make_local_train": make_local_train,
+        "make_grad_multi": make_grad_multi,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Example-arg specs for lowering
+# ---------------------------------------------------------------------------
+
+
+def arg_specs(cfg: ModelConfig, fn: str, tau: int = None):
+    """ShapeDtypeStructs matching each entry point's positional signature."""
+    f32 = jnp.float32
+    specs = [jax.ShapeDtypeStruct(shape, f32) for _, shape in param_spec(cfg)]
+    tok = jax.ShapeDtypeStruct((cfg.batch_size, cfg.seq_len + 1), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), f32)
+    if fn == "eval_loss" or fn == "grad":
+        return specs + [tok]
+    if fn == "sgd_step":
+        return specs + [tok, lr]
+    if fn == "local_train":
+        assert tau is not None
+        toks = jax.ShapeDtypeStruct(
+            (tau, cfg.batch_size, cfg.seq_len + 1), jnp.int32
+        )
+        return specs + [toks, lr]
+    if fn == "grad_multi":
+        assert tau is not None
+        toks = jax.ShapeDtypeStruct(
+            (tau, cfg.batch_size, cfg.seq_len + 1), jnp.int32
+        )
+        return specs + [toks]
+    raise ValueError(fn)

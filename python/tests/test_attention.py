@@ -1,0 +1,135 @@
+"""L1 correctness: fused flash-attention kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (batch*heads, seq, d_head, block) and dtypes;
+every case asserts forward values and custom-vjp gradients against
+``ref.py`` with ``assert_allclose``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bh=st.sampled_from([1, 2, 6]),
+    seq=st.sampled_from([8, 16, 32, 48, 64]),
+    d_head=st.sampled_from([4, 8, 16, 32]),
+    block=st.sampled_from([8, 16, 32, 64]),
+)
+def test_forward_matches_ref(bh, seq, d_head, block):
+    q, k, v = (_rand(i, (bh, seq, d_head), jnp.float32) for i in range(3))
+    out = A.flash_attention(q, k, v, block)
+    ref = R.ref_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    bh=st.sampled_from([1, 2, 4]),
+    seq=st.sampled_from([8, 16, 32]),
+    d_head=st.sampled_from([4, 8, 16]),
+    block=st.sampled_from([8, 16]),
+)
+def test_grads_match_ref(bh, seq, d_head, block):
+    q, k, v = (_rand(i + 7, (bh, seq, d_head), jnp.float32) for i in range(3))
+
+    def f(q, k, v):
+        return jnp.sum(jnp.sin(A.flash_attention(q, k, v, block)))
+
+    def fr(q, k, v):
+        return jnp.sum(jnp.sin(R.ref_attention(q, k, v)))
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-5, atol=5e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    q, k, v = (_rand(i, (2, 16, 8), dtype) for i in range(3))
+    out = A.flash_attention(q, k, v, 8)
+    assert out.dtype == dtype
+    ref = R.ref_attention(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32), np.asarray(ref), **_tol(dtype)
+    )
+
+
+def test_causality():
+    """Future tokens must not influence the output at position t."""
+    q, k, v = (_rand(i, (1, 32, 8), jnp.float32) for i in range(3))
+    out1 = A.flash_attention(q, k, v, 16)
+    # Perturb only the last key/value: all positions except the last must
+    # be bit-identical.
+    k2 = k.at[:, -1, :].add(100.0)
+    v2 = v.at[:, -1, :].add(100.0)
+    out2 = A.flash_attention(q, k2, v2, 16)
+    np.testing.assert_array_equal(np.asarray(out1[:, :-1]), np.asarray(out2[:, :-1]))
+    assert not np.allclose(np.asarray(out1[:, -1]), np.asarray(out2[:, -1]))
+
+
+def test_block_size_invariance():
+    """Output must not depend on the block-size schedule."""
+    q, k, v = (_rand(i, (2, 64, 16), jnp.float32) for i in range(3))
+    outs = [A.flash_attention(q, k, v, b) for b in (8, 16, 32, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(
+            np.asarray(outs[0]), np.asarray(o), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_block_not_dividing_seq_is_clipped():
+    q, k, v = (_rand(i, (1, 24, 8), jnp.float32) for i in range(3))
+    out = A.flash_attention(q, k, v, 16)  # 16 does not divide 24 -> clipped
+    ref = R.ref_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_mha_matches_ref_mha():
+    b, s, d, h = 2, 32, 32, 4
+    q, k, v = (_rand(i, (b, s, d), jnp.float32) for i in range(3))
+    np.testing.assert_allclose(
+        np.asarray(A.mha(q, k, v, h)),
+        np.asarray(R.ref_mha(q, k, v, h)),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+
+
+def test_numerical_stability_large_logits():
+    """Online softmax must survive large score magnitudes."""
+    q = 30.0 * _rand(0, (1, 16, 8), jnp.float32)
+    k = 30.0 * _rand(1, (1, 16, 8), jnp.float32)
+    v = _rand(2, (1, 16, 8), jnp.float32)
+    out = A.flash_attention(q, k, v, 8)
+    assert np.isfinite(np.asarray(out)).all()
+    ref = R.ref_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_first_row_attends_only_self():
+    """Position 0 output == v[0] (softmax over a single element)."""
+    q, k, v = (_rand(i, (3, 16, 8), jnp.float32) for i in range(3))
+    out = A.flash_attention(q, k, v, 8)
+    np.testing.assert_allclose(
+        np.asarray(out[:, 0, :]), np.asarray(v[:, 0, :]), rtol=1e-6, atol=1e-6
+    )

@@ -1,0 +1,92 @@
+"""L1 correctness: fused online-softmax cross-entropy vs the jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cross_entropy as C
+from compile.kernels import ref as R
+
+
+def _case(seed, n, vocab, scale=1.0):
+    logits = scale * jax.random.normal(jax.random.PRNGKey(seed), (n, vocab), jnp.float32)
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 1), (n,), 0, vocab)
+    return logits, labels
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.sampled_from([4, 16, 64, 128, 257]),
+    vocab=st.sampled_from([32, 100, 256, 1000]),
+    v_block=st.sampled_from([16, 64, 512]),
+)
+def test_forward_matches_ref(n, vocab, v_block):
+    logits, labels = _case(0, n, vocab)
+    out = C.cross_entropy_per_token(logits, labels, v_block)
+    ref = R.ref_cross_entropy_per_token(logits, labels)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.sampled_from([8, 32, 128]),
+    vocab=st.sampled_from([64, 256, 1000]),
+    v_block=st.sampled_from([32, 512]),
+)
+def test_grads_match_ref(n, vocab, v_block):
+    logits, labels = _case(3, n, vocab)
+    w = jnp.linspace(0.0, 1.0, n)
+
+    def f(x):
+        return jnp.sum(C.cross_entropy_per_token(x, labels, v_block) * w)
+
+    def fr(x):
+        return jnp.sum(R.ref_cross_entropy_per_token(x, labels) * w)
+
+    g, gr = jax.grad(f)(logits), jax.grad(fr)(logits)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-4, atol=1e-5)
+
+
+def test_extreme_logits_stable():
+    logits, labels = _case(5, 32, 128, scale=50.0)
+    out = C.cross_entropy_per_token(logits, labels)
+    assert np.isfinite(np.asarray(out)).all()
+    ref = R.ref_cross_entropy_per_token(logits, labels)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_perfect_prediction_near_zero_loss():
+    n, vocab = 16, 64
+    labels = jnp.arange(n) % vocab
+    logits = 100.0 * jax.nn.one_hot(labels, vocab)
+    out = C.cross_entropy_per_token(logits, labels)
+    np.testing.assert_allclose(np.asarray(out), np.zeros(n), atol=1e-5)
+
+
+def test_uniform_logits_log_vocab():
+    n, vocab = 8, 128
+    logits = jnp.zeros((n, vocab))
+    labels = jnp.zeros((n,), jnp.int32)
+    out = C.cross_entropy_per_token(logits, labels)
+    np.testing.assert_allclose(np.asarray(out), np.log(vocab) * np.ones(n), rtol=1e-6)
+
+
+def test_vblock_invariance():
+    logits, labels = _case(9, 64, 384)
+    outs = [
+        C.cross_entropy_per_token(logits, labels, vb) for vb in (16, 48, 128, 384)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    logits, labels = _case(11, 32, 64)
+    logits = logits.astype(dtype)
+    out = C.cross_entropy_per_token(logits, labels)
+    ref = R.ref_cross_entropy_per_token(logits.astype(jnp.float32), labels)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=tol, atol=tol)

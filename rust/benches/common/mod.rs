@@ -1,0 +1,72 @@
+#![allow(dead_code)]
+
+//! Shared helpers for the bench harness (hand-rolled; the offline registry
+//! has no criterion). Each bench binary regenerates one paper table or
+//! figure: it prints the paper-shaped output and writes `results/*.csv`.
+
+use std::path::PathBuf;
+
+use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
+use grouper::grouper::{partition_dataset, PartitionedDataset};
+use grouper::pipeline::{FeatureKey, PartitionOptions};
+use grouper::runtime::ModelBackend;
+use grouper::tokenizer::{VocabBuilder, WordPiece};
+
+/// Bench working directory (kept across runs so repeated benches reuse
+/// materializations; `make clean` removes it).
+pub fn bench_dir(name: &str) -> PathBuf {
+    let dir = PathBuf::from("work/bench").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Scale factor: `GROUPER_BENCH_SCALE=0.1` shrinks every workload 10x for
+/// smoke runs; default 1.0 (the EXPERIMENTS.md numbers).
+pub fn scale() -> f64 {
+    std::env::var("GROUPER_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0)
+}
+
+pub fn scaled(n: usize) -> usize {
+    ((n as f64 * scale()).round() as usize).max(2)
+}
+
+/// Materialize a spec (reusing an existing materialization if present).
+pub fn materialize(spec: &DatasetSpec, dir: &std::path::Path, prefix: &str) -> PartitionedDataset {
+    if !dir.join(format!("{prefix}.gindex")).exists() {
+        let ds = SyntheticTextDataset::new(spec.clone());
+        partition_dataset(
+            &ds,
+            &FeatureKey::new(spec.key_feature),
+            dir,
+            prefix,
+            &PartitionOptions::default(),
+        )
+        .unwrap();
+    }
+    PartitionedDataset::open(dir, prefix).unwrap()
+}
+
+/// Train a WordPiece vocab sized for `backend` from a spec's corpus.
+pub fn vocab_for(spec: &DatasetSpec, backend: &dyn ModelBackend) -> WordPiece {
+    let ds = SyntheticTextDataset::new(spec.clone());
+    let mut vb = VocabBuilder::new();
+    for t in ds.stream_all_text() {
+        vb.feed(&t);
+    }
+    vb.build(backend.vocab_size())
+}
+
+/// True when artifacts for `config` exist (benches that need PJRT skip
+/// politely otherwise).
+pub fn have_artifacts(config: &str) -> bool {
+    let ok = std::path::Path::new("artifacts")
+        .join(format!("{config}.manifest"))
+        .exists();
+    if !ok {
+        println!("SKIP: artifacts/{config}.manifest missing — run `make artifacts`");
+    }
+    ok
+}

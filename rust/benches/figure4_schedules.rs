@@ -1,0 +1,85 @@
+//! Figure 4: FedAvg/FedSGD training-loss curves under three server LR
+//! schedules (constant, warmup+exponential, warmup+cosine), with the
+//! paper's tuned learning rates (Table 9): FedAvg eta_s=1e-3 (all
+//! schedules), FedSGD eta_s=1e-4 constant / 1e-3 with schedules; client
+//! lr 1e-1.
+//!
+//! Expected shape: schedules matter a lot for FedSGD, little for FedAvg,
+//! and FedAvg's *reported* train loss is lower (it tracks the locally
+//! adapting model).
+
+mod common;
+
+use grouper::config::{FedAlgorithm, FedConfig, ScheduleKind};
+use grouper::corpus::DatasetSpec;
+use grouper::fed::{train, TrainerConfig};
+use grouper::runtime::ModelRuntime;
+use grouper::util::table::{write_series_csv, Table};
+
+fn main() {
+    if !common::have_artifacts("tiny") {
+        return;
+    }
+    let rounds = common::scaled(150);
+    let dir = common::bench_dir("figure4");
+    let spec = DatasetSpec::fedc4_mini(common::scaled(400), 42);
+    let pd = common::materialize(&spec, &dir, "train");
+    let rt = ModelRuntime::load(std::path::Path::new("artifacts"), "tiny").unwrap();
+    let wp = common::vocab_for(&spec, &rt);
+
+    let schedules = [
+        ("constant", ScheduleKind::Constant),
+        ("warmup+exp", ScheduleKind::WarmupExp),
+        ("warmup+cosine", ScheduleKind::WarmupCosine),
+    ];
+
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut summary = Table::new(
+        &format!("Figure 4 — final/mean train loss by schedule ({rounds} rounds, tiny)"),
+        &["Algorithm", "Schedule", "Server LR", "Final loss", "Mean loss (last 20%)"],
+    );
+
+    for (ai, alg) in [FedAlgorithm::FedAvg, FedAlgorithm::FedSgd].iter().enumerate() {
+        for (si, (sname, skind)) in schedules.iter().enumerate() {
+            // Table 9's tuned learning rates.
+            let server_lr = match (alg, skind) {
+                (FedAlgorithm::FedSgd, ScheduleKind::Constant) => 1e-4,
+                _ => 1e-3,
+            };
+            let fed = FedConfig {
+                algorithm: *alg,
+                rounds,
+                cohort_size: 8,
+                tau: 4,
+                client_lr: 0.1,
+                server_lr,
+                schedule: *skind,
+                shuffle_buffer: 32,
+                seed: 11,
+            };
+            let out = train(&rt, &pd, &wp, &TrainerConfig::new(fed)).unwrap();
+            for r in &out.rounds {
+                rows.push(vec![ai as f64, si as f64, r.round as f64, r.train_loss as f64]);
+            }
+            let tail = &out.rounds[out.rounds.len() * 4 / 5..];
+            let tail_mean: f64 =
+                tail.iter().map(|r| r.train_loss as f64).sum::<f64>() / tail.len() as f64;
+            summary.row(vec![
+                format!("{alg:?}"),
+                sname.to_string(),
+                format!("{server_lr:.0e}"),
+                format!("{:.4}", out.final_loss()),
+                format!("{tail_mean:.4}"),
+            ]);
+        }
+    }
+    summary.print();
+    summary.write_csv("results/figure4_schedule_summary.csv").unwrap();
+    write_series_csv(
+        "results/figure4_loss_curves.csv",
+        &["algo_idx", "schedule_idx", "round", "loss"],
+        &rows,
+    )
+    .unwrap();
+    println!("paper claims: (a) scheduling matters for FedSGD, FedAvg robust; (b) FedAvg train loss lower (local adaptation).");
+}

@@ -1,0 +1,107 @@
+//! Figures 6/7 (+ Appendix D.1's Figures 10-13): task-specific
+//! personalization — evaluate the FedC4-trained models on *other*
+//! datasets' clients (FedBookCO here; FedCCnews/FedWiki via --all).
+//!
+//! Reuses the checkpoints saved by `table5_personalization` when present
+//! (exact paper workflow: same trained models, new client population);
+//! otherwise trains short runs itself.
+
+mod common;
+
+use grouper::config::{FedAlgorithm, FedConfig, ScheduleKind};
+use grouper::corpus::DatasetSpec;
+use grouper::fed::trainer::build_eval_clients;
+use grouper::fed::{personalization_eval, train, TrainerConfig};
+use grouper::runtime::{load_params, ModelRuntime, Params};
+use grouper::util::table::{write_series_csv, Table};
+
+fn get_or_train(
+    rt: &ModelRuntime,
+    alg: FedAlgorithm,
+    dir: &std::path::Path,
+) -> Params {
+    let name = if alg == FedAlgorithm::FedAvg { "fedavg" } else { "fedsgd" };
+    let ckpt = common::bench_dir("table5").join(format!("{name}.params"));
+    if let Ok(p) = load_params(&ckpt) {
+        println!("reusing checkpoint {}", ckpt.display());
+        return p;
+    }
+    println!("checkpoint missing; training {name} fresh ({} rounds)", common::scaled(300));
+    let spec = DatasetSpec::fedc4_mini(common::scaled(400), 42);
+    let pd = common::materialize(&spec, dir, "train");
+    let wp = common::vocab_for(&spec, rt);
+    let fed = FedConfig {
+        algorithm: alg,
+        rounds: common::scaled(300),
+        cohort_size: 8,
+        tau: 8,
+        client_lr: 0.1,
+        server_lr: if alg == FedAlgorithm::FedAvg { 1e-3 } else { 1e-4 },
+        schedule: ScheduleKind::Constant,
+        shuffle_buffer: 32,
+        seed: 21,
+    };
+    train(rt, &pd, &wp, &TrainerConfig::new(fed)).unwrap().params
+}
+
+fn main() {
+    if !common::have_artifacts("tiny") {
+        return;
+    }
+    let all = std::env::args().any(|a| a == "--all");
+    let dir = common::bench_dir("figure6");
+    let rt = ModelRuntime::load(std::path::Path::new("artifacts"), "tiny").unwrap();
+    // Tokenizer MUST be the training one (FedC4 vocab), as in the paper.
+    let train_spec = DatasetSpec::fedc4_mini(common::scaled(400), 42);
+    let wp = common::vocab_for(&train_spec, &rt);
+
+    let mut targets = vec![{
+        let mut s = DatasetSpec::fedbookco_mini(common::scaled(40), 77);
+        s.max_group_words = 60_000;
+        s
+    }];
+    if all {
+        targets.push(DatasetSpec::fedccnews_mini(common::scaled(80), 78));
+        targets.push(DatasetSpec::fedwiki_mini(common::scaled(120), 79));
+    }
+
+    let p_avg = get_or_train(&rt, FedAlgorithm::FedAvg, &dir);
+    let p_sgd = get_or_train(&rt, FedAlgorithm::FedSgd, &dir);
+
+    let mut table = Table::new(
+        "Figures 6/7 — transfer personalization of FedC4-trained models",
+        &["Target dataset", "Algorithm", "Pre p10/median/p90", "Post p10/median/p90"],
+    );
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (ti, spec) in targets.iter().enumerate() {
+        let sub = dir.join(spec.name);
+        std::fs::create_dir_all(&sub).unwrap();
+        let pd = common::materialize(spec, &sub, "data");
+        let clients = build_eval_clients(&pd, &wp, &rt, 8, pd.num_groups()).unwrap();
+        for (ai, (name, params)) in
+            [("FedAvg", &p_avg), ("FedSGD", &p_sgd)].iter().enumerate()
+        {
+            let res = personalization_eval(&rt, params, &clients, 0.3).unwrap();
+            let pre = res.pre_summary();
+            let post = res.post_summary();
+            table.row(vec![
+                spec.name.into(),
+                name.to_string(),
+                format!("{:.2}/{:.2}/{:.2}", pre.p10, pre.median, pre.p90),
+                format!("{:.2}/{:.2}/{:.2}", post.p10, post.median, post.p90),
+            ]);
+            for (ci, (a, b)) in res.pre.iter().zip(&res.post).enumerate() {
+                rows.push(vec![ti as f64, ai as f64, ci as f64, *a as f64, *b as f64]);
+            }
+        }
+    }
+    table.print();
+    table.write_csv("results/figure6_7_transfer.csv").unwrap();
+    write_series_csv(
+        "results/figure6_7_client_losses.csv",
+        &["target_idx", "algo_idx", "client", "pre", "post"],
+        &rows,
+    )
+    .unwrap();
+    println!("paper reference (FedBookCO after FedC4, last ckpt): FedAvg pre 5.0 post 2.9; FedSGD pre 4.3 post 4.0 — FedAvg's personalization advantage is robust to the distribution shift.");
+}

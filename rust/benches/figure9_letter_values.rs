@@ -1,0 +1,51 @@
+//! Figure 9 (Appendix B): letter-value plots of words per client for the
+//! four datasets — boxplots-for-big-data showing the heavy tails.
+
+mod common;
+
+use grouper::corpus::DatasetSpec;
+use grouper::metrics::letter_values;
+use grouper::util::humanize::count;
+use grouper::util::table::{write_series_csv, Table};
+
+fn main() {
+    let dir = common::bench_dir("table1");
+    let specs = vec![
+        DatasetSpec::fedc4_mini(common::scaled(2000), 42),
+        DatasetSpec::fedwiki_mini(common::scaled(2000), 43),
+        DatasetSpec::fedbookco_mini(common::scaled(200), 44),
+        DatasetSpec::fedccnews_mini(common::scaled(500), 45),
+    ];
+
+    let mut table = Table::new(
+        "Figure 9 — letter values of words per client",
+        &["Dataset", "median", "F (25/75)", "E (12.5/87.5)", "D (6.25/93.75)"],
+    );
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        let sub = dir.join(spec.name);
+        std::fs::create_dir_all(&sub).unwrap();
+        let pd = common::materialize(spec, &sub, "data");
+        let words: Vec<f64> = pd.index().entries.iter().map(|e| e.words as f64).collect();
+        let (median, levels) = letter_values(&words);
+        let fmt = |j: usize| {
+            levels
+                .get(j)
+                .map(|l| format!("[{}, {}]", count(l.lower), count(l.upper)))
+                .unwrap_or_else(|| "-".into())
+        };
+        table.row(vec![spec.name.into(), count(median), fmt(0), fmt(1), fmt(2)]);
+        rows.push(vec![i as f64, 0.5, median, median]);
+        for l in &levels {
+            rows.push(vec![i as f64, l.tail, l.lower, l.upper]);
+        }
+    }
+    table.print();
+    table.write_csv("results/figure9_letter_values_summary.csv").unwrap();
+    write_series_csv(
+        "results/figure9_letter_values.csv",
+        &["dataset_idx", "tail_prob", "lower", "upper"],
+        &rows,
+    )
+    .unwrap();
+}

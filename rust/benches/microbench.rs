@@ -1,0 +1,143 @@
+//! Microbenchmarks of the L3 hot paths (profiling support for the §Perf
+//! pass — not a paper table): CRC32C, TFRecord framing, the Example
+//! codec, WordPiece encoding, Zipf text generation, streaming iteration
+//! throughput, and partition-pipeline worker scaling.
+
+mod common;
+
+use grouper::corpus::text::TextModel;
+use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
+use grouper::formats::streaming::{StreamingConfig, StreamingDataset};
+use grouper::pipeline::{run_partition, FeatureKey, PartitionOptions};
+use grouper::records::crc32c::crc32c;
+use grouper::records::{Example, RecordReader, RecordWriter};
+use grouper::tokenizer::VocabBuilder;
+use grouper::util::humanize::{bytes, secs};
+use grouper::util::rng::Rng;
+use grouper::util::timer::Timer;
+
+fn bench<F: FnMut()>(name: &str, work_bytes: usize, iters: usize, mut f: F) {
+    // warmup
+    f();
+    let t = Timer::start();
+    for _ in 0..iters {
+        f();
+    }
+    let total = t.elapsed_secs();
+    let per = total / iters as f64;
+    if work_bytes > 0 {
+        let throughput = work_bytes as f64 * iters as f64 / total;
+        println!("{name:<38} {:>10}/iter  {:>12}/s", secs(per), bytes(throughput as usize));
+    } else {
+        println!("{name:<38} {:>10}/iter", secs(per));
+    }
+}
+
+fn main() {
+    println!("== microbench (L3 hot paths) ==\n");
+    let mut rng = Rng::new(7);
+
+    // CRC32C
+    let payload: Vec<u8> = (0..1 << 20).map(|_| rng.next_u64() as u8).collect();
+    bench("crc32c 1MiB", payload.len(), 64, || {
+        std::hint::black_box(crc32c(&payload));
+    });
+
+    // TFRecord framing
+    let record = vec![0xABu8; 4096];
+    bench("tfrecord write 4KiB x256", 4096 * 256, 32, || {
+        let mut w = RecordWriter::new(Vec::with_capacity(1 << 21));
+        for _ in 0..256 {
+            w.write_record(&record).unwrap();
+        }
+        std::hint::black_box(w.into_inner());
+    });
+    let mut w = RecordWriter::new(Vec::new());
+    for _ in 0..256 {
+        w.write_record(&record).unwrap();
+    }
+    let framed = w.into_inner();
+    bench("tfrecord read 4KiB x256 (reused buf)", framed.len(), 32, || {
+        let mut r = RecordReader::new(&framed[..]);
+        let mut buf = Vec::new();
+        let mut n = 0;
+        while r.read_into(&mut buf).unwrap() {
+            n += 1;
+        }
+        assert_eq!(n, 256);
+    });
+
+    // Example codec
+    let ex = Example::text(&"lorem ipsum dolor ".repeat(64));
+    let enc = ex.encode();
+    bench("example encode (1KiB text)", enc.len(), 2000, || {
+        std::hint::black_box(ex.encode());
+    });
+    bench("example decode (1KiB text)", enc.len(), 2000, || {
+        std::hint::black_box(Example::decode(&enc).unwrap());
+    });
+
+    // Zipf text generation
+    let model = TextModel::new(12_000, 1.15);
+    bench("zipf text generate 10K words", 60_000, 16, || {
+        let mut r = Rng::new(3);
+        std::hint::black_box(model.generate(&mut r, 10_000, 0, 0.35));
+    });
+
+    // WordPiece encoding
+    let mut vb = VocabBuilder::new();
+    let mut r2 = Rng::new(9);
+    let corpus = model.generate(&mut r2, 50_000, 0, 0.2);
+    vb.feed(&corpus);
+    let wp = vb.build(1024);
+    bench("wordpiece encode 50K words", corpus.len(), 8, || {
+        let mut ids = Vec::with_capacity(80_000);
+        wp.encode(&corpus, &mut ids);
+        std::hint::black_box(ids.len());
+    });
+
+    // Streaming iteration throughput
+    let dir = common::bench_dir("micro_stream");
+    let mut spec = DatasetSpec::fedccnews_mini(200, 5);
+    spec.max_group_words = 30_000;
+    let ds = SyntheticTextDataset::new(spec);
+    if !dir.join("s.gindex").exists() {
+        run_partition(&ds, &FeatureKey::new("domain"), &dir, "s", &PartitionOptions::default())
+            .unwrap();
+    }
+    let payload: u64 = {
+        let sd = StreamingDataset::open(&dir, "s", StreamingConfig::sequential()).unwrap();
+        sd.index().entries.iter().map(|e| e.bytes).sum()
+    };
+    bench("streaming full iteration (decode)", payload as usize, 8, || {
+        let sd = StreamingDataset::open(&dir, "s", StreamingConfig::sequential()).unwrap();
+        let mut n = 0u64;
+        for g in sd.stream() {
+            g.unwrap()
+                .for_each_example(|_| {
+                    n += 1;
+                    true
+                })
+                .unwrap();
+        }
+        std::hint::black_box(n);
+    });
+
+    // Pipeline worker scaling
+    println!("\n== partition pipeline scaling (same dataset, varying workers) ==");
+    for workers in [1usize, 2, 4, 8] {
+        let out = std::env::temp_dir().join(format!("grouper_micro_pipe_{workers}"));
+        let _ = std::fs::remove_dir_all(&out);
+        let t = Timer::start();
+        run_partition(
+            &ds,
+            &FeatureKey::new("domain"),
+            &out,
+            "p",
+            &PartitionOptions { num_workers: workers, ..Default::default() },
+        )
+        .unwrap();
+        println!("  workers={workers:<2}  {:.2}s", t.elapsed_secs());
+        let _ = std::fs::remove_dir_all(&out);
+    }
+}

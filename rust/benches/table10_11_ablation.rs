@@ -1,0 +1,127 @@
+//! Tables 10/11 (Appendix D.2): the batches-per-client ablation.
+//!
+//! Vary tau (batches per client per round) and report median pre/post-
+//! personalization loss under two normalizations:
+//!   Table 10 — equal *communication rounds* across tau;
+//!   Table 11 — equal *total tokens* (rounds ∝ 1/tau).
+//!
+//! Paper tau grid {1, 4, 16, 64}, scaled here to {1, 4, 8, 16} (the
+//! fused local_train artifacts exist for each).
+//!
+//! Expected shape (equal rounds): FedAvg pre-personalization degrades and
+//! post-personalization improves as tau grows; FedSGD barely moves.
+//! Equal tokens: small tau best pre-personalization for both; post flat
+//! for tau >= 4.
+
+mod common;
+
+use grouper::config::{FedAlgorithm, FedConfig, ScheduleKind};
+use grouper::corpus::DatasetSpec;
+use grouper::fed::trainer::build_eval_clients;
+use grouper::fed::{personalization_eval, train, TrainerConfig};
+use grouper::runtime::ModelRuntime;
+use grouper::util::table::Table;
+
+const TAUS: [usize; 4] = [1, 4, 8, 16];
+
+fn main() {
+    if !common::have_artifacts("tiny") {
+        return;
+    }
+    let base_rounds = common::scaled(100);
+    let dir = common::bench_dir("table10");
+    let train_spec = DatasetSpec::fedc4_mini(common::scaled(300), 42);
+    let eval_spec = DatasetSpec::fedc4_mini(common::scaled(48), 1042);
+    let train_pd = common::materialize(&train_spec, &dir, "train");
+    let eval_pd = common::materialize(&eval_spec, &dir, "eval");
+    let rt = ModelRuntime::load(std::path::Path::new("artifacts"), "tiny").unwrap();
+    let wp = common::vocab_for(&train_spec, &rt);
+
+    let mut run = |alg: FedAlgorithm, tau: usize, rounds: usize| -> (f64, f64) {
+        let fed = FedConfig {
+            algorithm: alg,
+            rounds,
+            cohort_size: 8,
+            tau,
+            client_lr: 0.1,
+            server_lr: if alg == FedAlgorithm::FedAvg { 1e-3 } else { 1e-4 },
+            schedule: ScheduleKind::WarmupCosine,
+            shuffle_buffer: 32,
+            seed: 17,
+        };
+        let out = train(&rt, &train_pd, &wp, &TrainerConfig::new(fed)).unwrap();
+        // Personalization always uses the paper's scheme: tau_eval batches,
+        // one epoch of SGD (use tau of the run, matching Appendix D.2).
+        let clients = build_eval_clients(&eval_pd, &wp, &rt, tau.max(4), eval_pd.num_groups())
+            .unwrap();
+        let res = personalization_eval(&rt, &out.params, &clients, 0.1).unwrap();
+        (res.pre_summary().median, res.post_summary().median)
+    };
+
+    // ---- Table 10: equal communication rounds. --------------------------
+    let mut t10 = Table::new(
+        &format!("Table 10 — median pre/post loss, equal rounds ({base_rounds})"),
+        &["Algorithm", "Loss", "tau=1", "tau=4", "tau=8", "tau=16"],
+    );
+    let mut t10_rows: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    for alg in [FedAlgorithm::FedAvg, FedAlgorithm::FedSgd] {
+        let name = if alg == FedAlgorithm::FedAvg { "FedAvg" } else { "FedSGD" };
+        let vals: Vec<(f64, f64)> =
+            TAUS.iter().map(|&tau| run(alg, tau, base_rounds)).collect();
+        println!("{name} equal-rounds done: {vals:?}");
+        t10_rows.push((name.to_string(), vals));
+    }
+    for (name, vals) in &t10_rows {
+        t10.row(
+            std::iter::once(name.clone())
+                .chain(std::iter::once("Pre".into()))
+                .chain(vals.iter().map(|(p, _)| format!("{p:.2}")))
+                .collect(),
+        );
+        t10.row(
+            std::iter::once(name.clone())
+                .chain(std::iter::once("Post".into()))
+                .chain(vals.iter().map(|(_, q)| format!("{q:.3}")))
+                .collect(),
+        );
+    }
+    t10.print();
+    t10.write_csv("results/table10_equal_rounds.csv").unwrap();
+
+    // ---- Table 11: equal tokens (rounds ∝ 1/tau, anchored at tau=16). ---
+    let anchor = base_rounds / 2;
+    let mut t11 = Table::new(
+        &format!("Table 11 — median pre/post loss, equal tokens (rounds = {} * 16/tau)", anchor),
+        &["Algorithm", "Loss", "tau=1", "tau=4", "tau=8", "tau=16"],
+    );
+    let mut t11_rows: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    for alg in [FedAlgorithm::FedAvg, FedAlgorithm::FedSgd] {
+        let name = if alg == FedAlgorithm::FedAvg { "FedAvg" } else { "FedSGD" };
+        let vals: Vec<(f64, f64)> = TAUS
+            .iter()
+            .map(|&tau| run(alg, tau, anchor * 16 / tau))
+            .collect();
+        println!("{name} equal-tokens done: {vals:?}");
+        t11_rows.push((name.to_string(), vals));
+    }
+    for (name, vals) in &t11_rows {
+        t11.row(
+            std::iter::once(name.clone())
+                .chain(std::iter::once("Pre".into()))
+                .chain(vals.iter().map(|(p, _)| format!("{p:.2}")))
+                .collect(),
+        );
+        t11.row(
+            std::iter::once(name.clone())
+                .chain(std::iter::once("Post".into()))
+                .chain(vals.iter().map(|(_, q)| format!("{q:.3}")))
+                .collect(),
+        );
+    }
+    t11.print();
+    t11.write_csv("results/table11_equal_tokens.csv").unwrap();
+
+    println!("paper reference (tau = 1/4/16/64):");
+    println!("  T10 FedAvg pre -/4.2/4.8/5.2, post -/1.9/0.009/0.008; FedSGD pre -/4.4/4.4/4.2, post -/3.4/3.4/3.3");
+    println!("  T11 FedAvg pre 3.6/3.8/4.3/5.2, post 3.8/0.006/0.007/0.007; FedSGD pre 3.6/3.7/3.9/4.2, post 3.9/3.5/3.3/3.3");
+}

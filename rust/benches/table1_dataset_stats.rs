@@ -1,0 +1,83 @@
+//! Table 1 / Table 6 / Table 7 + Figure 1: per-group and per-example
+//! statistics of the four new federated text datasets.
+//!
+//! Regenerates the paper's headline dataset table at mini scale (group
+//! counts ~1000x smaller; per-group distributions keep the paper's fitted
+//! log-normal parameters, so medians/percentiles land near the paper's
+//! values — see EXPERIMENTS.md §Table1 for the comparison).
+
+mod common;
+
+use grouper::corpus::DatasetSpec;
+use grouper::grouper::dataset_statistics;
+use grouper::util::humanize::count;
+use grouper::util::table::{write_series_csv, Table};
+
+fn main() {
+    let dir = common::bench_dir("table1");
+    let specs = vec![
+        (DatasetSpec::fedc4_mini(common::scaled(2000), 42), "Domain"),
+        (DatasetSpec::fedwiki_mini(common::scaled(2000), 43), "Article"),
+        (DatasetSpec::fedbookco_mini(common::scaled(200), 44), "Book"),
+        (DatasetSpec::fedccnews_mini(common::scaled(500), 45), "Domain"),
+    ];
+
+    let mut t6 = Table::new(
+        "Table 1/6 — per-group (per-client) statistics",
+        &["Dataset", "Group by", "Words", "Groups", "w/g p10", "w/g median", "w/g p90"],
+    );
+    let mut t7 = Table::new(
+        "Table 1/7 — per-example (per-sequence) statistics",
+        &["Dataset", "Examples", "w/e p10", "w/e median", "w/e p90"],
+    );
+    let mut fig1_rows: Vec<Vec<f64>> = Vec::new();
+
+    for (spec, group_by) in &specs {
+        let sub = dir.join(spec.name);
+        std::fs::create_dir_all(&sub).unwrap();
+        let _pd = common::materialize(spec, &sub, "data");
+        let stats = dataset_statistics(&sub, "data", spec.name, group_by).unwrap();
+        let w = &stats.words_per_group;
+        t6.row(vec![
+            spec.name.into(),
+            group_by.to_string(),
+            count(stats.total_words as f64),
+            count(stats.num_groups as f64),
+            count(w.p10),
+            count(w.median),
+            count(w.p90),
+        ]);
+        let e = stats.words_per_example.as_ref().unwrap();
+        t7.row(vec![
+            spec.name.into(),
+            count(stats.num_examples as f64),
+            count(e.p10),
+            count(e.median),
+            count(e.p90),
+        ]);
+        // Figure 1 series: per-group word-count distribution (log bins).
+        let mut hist = grouper::metrics::Histogram::new_log10(1.0, 1e7, 40);
+        let pd = grouper::grouper::PartitionedDataset::open(&sub, "data").unwrap();
+        for entry in &pd.index().entries {
+            hist.add(entry.words as f64);
+        }
+        for (c, d) in hist.centers().iter().zip(hist.density()) {
+            fig1_rows.push(vec![
+                specs.iter().position(|(s, _)| s.name == spec.name).unwrap() as f64,
+                *c,
+                d,
+            ]);
+        }
+    }
+    t6.print();
+    t7.print();
+    t6.write_csv("results/table6_words_per_group.csv").unwrap();
+    t7.write_csv("results/table7_words_per_example.csv").unwrap();
+    write_series_csv(
+        "results/figure1_group_size_distributions.csv",
+        &["dataset_idx", "words_per_group_bin", "density"],
+        &fig1_rows,
+    )
+    .unwrap();
+    println!("paper reference (Table 6 medians): FedC4 815, FedWiki 198, FedBookCO 52K, FedCCnews 5K");
+}

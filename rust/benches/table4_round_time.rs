@@ -1,0 +1,62 @@
+//! Table 4: average per-round data-iteration time vs training time, for
+//! cohort sizes {8, 16, 32} — the paper's "dataset iteration takes under
+//! 10% of the round, even at larger cohorts" claim.
+//!
+//! Uses the `tiny` AOT transformer by default so the bench completes in
+//! seconds; set GROUPER_BENCH_MODEL=small for the paper-scale analogue
+//! (numbers recorded in EXPERIMENTS.md).
+
+mod common;
+
+use grouper::config::{FedAlgorithm, FedConfig, ScheduleKind};
+use grouper::corpus::DatasetSpec;
+use grouper::fed::{train, TrainerConfig};
+use grouper::runtime::ModelRuntime;
+use grouper::util::table::Table;
+use grouper::util::timer::MeanStd;
+
+fn main() {
+    let model = std::env::var("GROUPER_BENCH_MODEL").unwrap_or_else(|_| "tiny".into());
+    if !common::have_artifacts(&model) {
+        return;
+    }
+    let rounds = common::scaled(30);
+    let dir = common::bench_dir("table4");
+    let spec = DatasetSpec::fedc4_mini(common::scaled(400), 42);
+    let pd = common::materialize(&spec, &dir, "train");
+    let rt = ModelRuntime::load(std::path::Path::new("artifacts"), &model).unwrap();
+    let wp = common::vocab_for(&spec, &rt);
+
+    let mut table = Table::new(
+        &format!("Table 4 — per-round timing, FedAvg/{model}, {rounds} rounds"),
+        &["Cohort Size", "Data Iteration (s)", "Training (s)", "Data Iteration (%)"],
+    );
+    for cohort in [8usize, 16, 32] {
+        let fed = FedConfig {
+            algorithm: FedAlgorithm::FedAvg,
+            rounds,
+            cohort_size: cohort,
+            tau: 8,
+            client_lr: 0.1,
+            server_lr: 1e-3,
+            schedule: ScheduleKind::Constant,
+            shuffle_buffer: 2 * cohort,
+            seed: 1,
+        };
+        let out = train(&rt, &pd, &wp, &TrainerConfig::new(fed)).unwrap();
+        let data: Vec<f64> = out.rounds.iter().map(|r| r.data_secs).collect();
+        let comp: Vec<f64> = out.rounds.iter().map(|r| r.train_secs).collect();
+        let d = MeanStd::of(&data);
+        let c = MeanStd::of(&comp);
+        let pct = 100.0 * d.mean / (d.mean + c.mean);
+        table.row(vec![
+            format!("{cohort}"),
+            format!("{d}"),
+            format!("{c}"),
+            format!("{pct:.2}"),
+        ]);
+    }
+    table.print();
+    table.write_csv("results/table4_round_time.csv").unwrap();
+    println!("paper reference (%, 108M model on TPU): 7.78 / 10.43 / 9.33 — claim: data iteration stays < ~10%");
+}

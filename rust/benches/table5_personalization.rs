@@ -1,0 +1,98 @@
+//! Table 5: validation loss of FedAvg and FedSGD before and after
+//! personalizing on each client's dataset (percentiles across the FedC4
+//! validation clients).
+//!
+//! Trains both algorithms (constant LR, Table 9's tuned values) on the
+//! `tiny` transformer, then runs Appendix C.5 personalization on held-out
+//! clients. Saves the trained parameters + per-client losses so
+//! figure5/figure6_7 reuse them instead of retraining.
+//!
+//! Expected shape: FedSGD better pre-personalization; FedAvg dramatically
+//! better post-personalization (the meta-learning result).
+
+mod common;
+
+use grouper::config::{FedAlgorithm, FedConfig, ScheduleKind};
+use grouper::corpus::DatasetSpec;
+use grouper::fed::trainer::build_eval_clients;
+use grouper::fed::{personalization_eval, train, TrainerConfig};
+use grouper::runtime::{save_params, ModelRuntime};
+use grouper::util::table::{write_series_csv, Table};
+
+fn main() {
+    if !common::have_artifacts("tiny") {
+        return;
+    }
+    let rounds = common::scaled(300);
+    let tau = 8;
+    let dir = common::bench_dir("table5");
+    let train_spec = DatasetSpec::fedc4_mini(common::scaled(400), 42);
+    let eval_spec = DatasetSpec::fedc4_mini(common::scaled(100), 1042); // validation split
+    let train_pd = common::materialize(&train_spec, &dir, "train");
+    let eval_pd = common::materialize(&eval_spec, &dir, "eval");
+    let rt = ModelRuntime::load(std::path::Path::new("artifacts"), "tiny").unwrap();
+    let wp = common::vocab_for(&train_spec, &rt);
+
+    let eval_clients =
+        build_eval_clients(&eval_pd, &wp, &rt, tau, eval_pd.num_groups()).unwrap();
+    println!("validation clients: {}", eval_clients.len());
+
+    let mut table = Table::new(
+        &format!("Table 5 — pre/post-personalization loss ({rounds} rounds, tiny)"),
+        &["Algorithm", "Pre p10", "Pre median", "Pre p90", "Post p10", "Post median", "Post p90"],
+    );
+    let mut client_rows: Vec<Vec<f64>> = Vec::new();
+
+    for (ai, alg) in [FedAlgorithm::FedAvg, FedAlgorithm::FedSgd].iter().enumerate() {
+        let name = if *alg == FedAlgorithm::FedAvg { "FedAvg" } else { "FedSGD" };
+        let fed = FedConfig {
+            algorithm: *alg,
+            rounds,
+            cohort_size: 8,
+            tau,
+            client_lr: 0.1,
+            // Each algorithm at its tuned best (Table 9): FedAvg constant
+            // 1e-3; FedSGD warmup+cosine 1e-3 (its constant-lr config is
+            // stuck at 1e-4 and undertrains at our round budget).
+            server_lr: 1e-3,
+            schedule: if *alg == FedAlgorithm::FedAvg {
+                ScheduleKind::Constant
+            } else {
+                ScheduleKind::WarmupCosine
+            },
+            shuffle_buffer: 32,
+            seed: 21,
+        };
+        println!("training {name} ({rounds} rounds)...");
+        let out = train(&rt, &train_pd, &wp, &TrainerConfig::new(fed)).unwrap();
+        save_params(&out.params, &dir.join(format!("{}.params", name.to_lowercase())))
+            .unwrap();
+
+        // One personalization epoch here is 8 steps (paper: 64); lr 0.3
+        // compensates the shorter adaptation budget.
+        let res = personalization_eval(&rt, &out.params, &eval_clients, 0.3).unwrap();
+        let pre = res.pre_summary();
+        let post = res.post_summary();
+        table.row(vec![
+            name.into(),
+            format!("{:.3}", pre.p10),
+            format!("{:.3}", pre.median),
+            format!("{:.3}", pre.p90),
+            format!("{:.3}", post.p10),
+            format!("{:.3}", post.median),
+            format!("{:.3}", post.p90),
+        ]);
+        for (i, (a, b)) in res.pre.iter().zip(&res.post).enumerate() {
+            client_rows.push(vec![ai as f64, i as f64, *a as f64, *b as f64]);
+        }
+    }
+    table.print();
+    table.write_csv("results/table5_personalization.csv").unwrap();
+    write_series_csv(
+        "results/table5_client_losses.csv",
+        &["algo_idx", "client", "pre", "post"],
+        &client_rows,
+    )
+    .unwrap();
+    println!("paper reference (108M): FedAvg pre 5.13/5.64/6.27 post 0.002/0.012/0.934; FedSGD pre 4.38/4.93/5.40 post 1.25/3.38/4.53");
+}

@@ -1,0 +1,9 @@
+//! Experiment configuration: a minimal TOML-subset parser (offline build —
+//! no serde/toml crates) plus the typed configs the CLI and benches
+//! consume. See `configs/*.toml` for examples.
+
+pub mod toml_lite;
+pub mod types;
+
+pub use toml_lite::{parse, TomlValue};
+pub use types::{DataConfig, ExperimentConfig, FedAlgorithm, FedConfig, ScheduleKind};

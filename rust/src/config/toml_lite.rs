@@ -1,0 +1,216 @@
+//! A small TOML-subset parser: `[section]` and `[section.sub]` headers,
+//! `key = value` with string / integer / float / bool / flat-array values,
+//! `#` comments. Enough for experiment configs without external crates.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat map of `section.key` -> value (root keys have no prefix).
+pub type TomlDoc = BTreeMap<String, TomlValue>;
+
+/// Parse a TOML-subset document.
+pub fn parse(input: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::new();
+    let mut section = String::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {}: unterminated section header", lineno + 1);
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            if section.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let full_key =
+            if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        let parsed = parse_value(value.trim())
+            .with_context(|| format!("line {}: bad value for {full_key}", lineno + 1))?;
+        doc.insert(full_key, parsed);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue> {
+    if v.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(stripped) = v.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if v.starts_with('[') {
+        let Some(inner) = v.strip_prefix('[').and_then(|s| s.strip_suffix(']')) else {
+            bail!("unterminated array");
+        };
+        let mut items = Vec::new();
+        let mut depth = 0usize;
+        let mut cur = String::new();
+        for c in inner.chars() {
+            match c {
+                '[' => {
+                    depth += 1;
+                    cur.push(c);
+                }
+                ']' => {
+                    depth -= 1;
+                    cur.push(c);
+                }
+                ',' if depth == 0 => {
+                    if !cur.trim().is_empty() {
+                        items.push(parse_value(cur.trim())?);
+                    }
+                    cur.clear();
+                }
+                _ => cur.push(c),
+            }
+        }
+        if !cur.trim().is_empty() {
+            items.push(parse_value(cur.trim())?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = v.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {v:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = parse(
+            r#"
+# experiment
+name = "demo"
+rounds = 100
+lr = 1e-3
+verbose = true
+
+[data]
+dataset = "fedc4-mini"
+groups = 2_000
+taus = [1, 4, 16]
+
+[fed.server]
+optimizer = "adam"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc["name"], TomlValue::Str("demo".into()));
+        assert_eq!(doc["rounds"], TomlValue::Int(100));
+        assert_eq!(doc["lr"], TomlValue::Float(1e-3));
+        assert_eq!(doc["verbose"], TomlValue::Bool(true));
+        assert_eq!(doc["data.dataset"].as_str(), Some("fedc4-mini"));
+        assert_eq!(doc["data.groups"].as_int(), Some(2000));
+        assert_eq!(
+            doc["data.taus"],
+            TomlValue::Array(vec![TomlValue::Int(1), TomlValue::Int(4), TomlValue::Int(16)])
+        );
+        assert_eq!(doc["fed.server.optimizer"].as_str(), Some("adam"));
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let doc = parse("s = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(doc["s"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_located() {
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("novalue\n").is_err());
+        assert!(parse("x = \n").is_err());
+        assert!(parse("x = zzz\n").is_err());
+        assert!(parse("x = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn float_vs_int_coercion() {
+        let doc = parse("a = 3\nb = 3.5\n").unwrap();
+        assert_eq!(doc["a"].as_float(), Some(3.0));
+        assert_eq!(doc["b"].as_float(), Some(3.5));
+        assert_eq!(doc["b"].as_int(), None);
+    }
+}

@@ -1,0 +1,284 @@
+//! Typed experiment configuration, loadable from TOML-subset files.
+//!
+//! One `ExperimentConfig` fully describes a federated run: which synthetic
+//! corpus to build, how to partition it, which AOT model config to load,
+//! and the federated-optimization hyperparameters of Appendix C.3/C.4.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::toml_lite::{parse, TomlDoc};
+
+/// Which federated algorithm (Appendix C.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FedAlgorithm {
+    FedAvg,
+    FedSgd,
+}
+
+impl std::str::FromStr for FedAlgorithm {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fedavg" => Ok(FedAlgorithm::FedAvg),
+            "fedsgd" => Ok(FedAlgorithm::FedSgd),
+            other => bail!("unknown algorithm {other:?} (fedavg|fedsgd)"),
+        }
+    }
+}
+
+/// Server learning-rate schedule (§5.2 / Appendix C.4): constant, or 10%
+/// linear warmup followed by exponential / cosine decay to 0.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    Constant,
+    WarmupExp,
+    WarmupCosine,
+}
+
+impl std::str::FromStr for ScheduleKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "constant" => Ok(ScheduleKind::Constant),
+            "warmup_exp" | "warmup+exp" => Ok(ScheduleKind::WarmupExp),
+            "warmup_cosine" | "warmup+cosine" => Ok(ScheduleKind::WarmupCosine),
+            other => bail!("unknown schedule {other:?}"),
+        }
+    }
+}
+
+/// Data-side configuration.
+#[derive(Debug, Clone)]
+pub struct DataConfig {
+    /// Synthetic corpus name: fedc4-mini | fedwiki-mini | fedbookco-mini |
+    /// fedccnews-mini.
+    pub dataset: String,
+    pub num_groups: usize,
+    pub num_shards: usize,
+    pub seed: u64,
+    /// Held-out validation groups (disjoint seed).
+    pub num_eval_groups: usize,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            dataset: "fedc4-mini".into(),
+            num_groups: 500,
+            num_shards: 8,
+            seed: 42,
+            num_eval_groups: 100,
+        }
+    }
+}
+
+/// Federated-training configuration (Appendix C).
+#[derive(Debug, Clone)]
+pub struct FedConfig {
+    pub algorithm: FedAlgorithm,
+    pub rounds: usize,
+    pub cohort_size: usize,
+    /// Batches per client per round (tau; paper default 64).
+    pub tau: usize,
+    /// Client SGD learning rate (FedAvg only).
+    pub client_lr: f32,
+    /// Server Adam learning rate.
+    pub server_lr: f32,
+    pub schedule: ScheduleKind,
+    pub shuffle_buffer: usize,
+    pub seed: u64,
+}
+
+impl Default for FedConfig {
+    fn default() -> Self {
+        FedConfig {
+            algorithm: FedAlgorithm::FedAvg,
+            rounds: 100,
+            cohort_size: 8,
+            tau: 8,
+            client_lr: 0.1,
+            server_lr: 1e-3,
+            schedule: ScheduleKind::Constant,
+            shuffle_buffer: 64,
+            seed: 0,
+        }
+    }
+}
+
+/// The full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// AOT model config name (tiny|small|base) — must exist in artifacts/.
+    pub model: String,
+    pub artifacts_dir: String,
+    pub work_dir: String,
+    pub data: DataConfig,
+    pub fed: FedConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            model: "small".into(),
+            artifacts_dir: "artifacts".into(),
+            work_dir: "work".into(),
+            data: DataConfig::default(),
+            fed: FedConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_toml_str(s: &str) -> Result<Self> {
+        let doc = parse(s)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let s = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml_str(&s).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        let gets = |k: &str| doc.get(k).and_then(|v| v.as_str().map(|s| s.to_string()));
+        let geti = |k: &str| doc.get(k).and_then(|v| v.as_int());
+        let getf = |k: &str| doc.get(k).and_then(|v| v.as_float());
+
+        if let Some(v) = gets("name") {
+            cfg.name = v;
+        }
+        if let Some(v) = gets("model") {
+            cfg.model = v;
+        }
+        if let Some(v) = gets("artifacts_dir") {
+            cfg.artifacts_dir = v;
+        }
+        if let Some(v) = gets("work_dir") {
+            cfg.work_dir = v;
+        }
+        if let Some(v) = gets("data.dataset") {
+            cfg.data.dataset = v;
+        }
+        if let Some(v) = geti("data.num_groups") {
+            cfg.data.num_groups = v as usize;
+        }
+        if let Some(v) = geti("data.num_shards") {
+            cfg.data.num_shards = v as usize;
+        }
+        if let Some(v) = geti("data.seed") {
+            cfg.data.seed = v as u64;
+        }
+        if let Some(v) = geti("data.num_eval_groups") {
+            cfg.data.num_eval_groups = v as usize;
+        }
+        if let Some(v) = gets("fed.algorithm") {
+            cfg.fed.algorithm = v.parse()?;
+        }
+        if let Some(v) = geti("fed.rounds") {
+            cfg.fed.rounds = v as usize;
+        }
+        if let Some(v) = geti("fed.cohort_size") {
+            cfg.fed.cohort_size = v as usize;
+        }
+        if let Some(v) = geti("fed.tau") {
+            cfg.fed.tau = v as usize;
+        }
+        if let Some(v) = getf("fed.client_lr") {
+            cfg.fed.client_lr = v as f32;
+        }
+        if let Some(v) = getf("fed.server_lr") {
+            cfg.fed.server_lr = v as f32;
+        }
+        if let Some(v) = gets("fed.schedule") {
+            cfg.fed.schedule = v.parse()?;
+        }
+        if let Some(v) = geti("fed.shuffle_buffer") {
+            cfg.fed.shuffle_buffer = v as usize;
+        }
+        if let Some(v) = geti("fed.seed") {
+            cfg.fed.seed = v as u64;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.fed.rounds == 0 || self.fed.cohort_size == 0 || self.fed.tau == 0 {
+            bail!("rounds, cohort_size, tau must be positive");
+        }
+        if self.data.num_groups < self.fed.cohort_size {
+            bail!(
+                "num_groups ({}) < cohort_size ({})",
+                self.data.num_groups,
+                self.fed.cohort_size
+            );
+        }
+        if !(self.fed.client_lr > 0.0 && self.fed.server_lr > 0.0) {
+            bail!("learning rates must be positive");
+        }
+        let known = ["fedc4-mini", "fedwiki-mini", "fedbookco-mini", "fedccnews-mini"];
+        if !known.contains(&self.data.dataset.as_str()) {
+            bail!("unknown dataset {:?}; have {:?}", self.data.dataset, known);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+name = "fig4"
+model = "small"
+
+[data]
+dataset = "fedccnews-mini"
+num_groups = 300
+seed = 7
+
+[fed]
+algorithm = "fedsgd"
+rounds = 50
+cohort_size = 16
+tau = 4
+client_lr = 0.1
+server_lr = 0.001
+schedule = "warmup_cosine"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "fig4");
+        assert_eq!(cfg.fed.algorithm, FedAlgorithm::FedSgd);
+        assert_eq!(cfg.fed.schedule, ScheduleKind::WarmupCosine);
+        assert_eq!(cfg.data.num_groups, 300);
+        assert_eq!(cfg.fed.tau, 4);
+    }
+
+    #[test]
+    fn validation_failures() {
+        assert!(ExperimentConfig::from_toml_str("[fed]\nrounds = 0\n").is_err());
+        assert!(
+            ExperimentConfig::from_toml_str("[data]\ndataset = \"imagenet\"\n").is_err()
+        );
+        assert!(ExperimentConfig::from_toml_str(
+            "[data]\nnum_groups = 4\n[fed]\ncohort_size = 8\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_str("[fed]\nalgorithm = \"sgd\"\n").is_err());
+    }
+}

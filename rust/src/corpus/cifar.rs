@@ -1,0 +1,141 @@
+//! Grouped CIFAR-100-like dataset: 100 groups x 100 examples of 32x32x3
+//! synthetic images — the small-scale baseline row of the paper's Table 3
+//! and Table 12 (a federated CIFAR-100 partitioned across 100 groups).
+//!
+//! Pixels are deterministic pseudo-random bytes; labels equal the group id
+//! (the paper's Listing 1 partitions MNIST by label the same way).
+
+use super::BaseDataset;
+use crate::records::{Example, Feature};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct GroupedCifarLike {
+    pub num_groups: usize,
+    pub examples_per_group: usize,
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub seed: u64,
+}
+
+impl GroupedCifarLike {
+    /// The paper's Table 3 configuration.
+    pub fn standard(seed: u64) -> Self {
+        GroupedCifarLike {
+            num_groups: 100,
+            examples_per_group: 100,
+            height: 32,
+            width: 32,
+            channels: 3,
+            seed,
+        }
+    }
+
+    pub fn image_bytes(&self) -> usize {
+        self.height * self.width * self.channels
+    }
+
+    fn make_example(&self, group: usize, index: usize) -> Example {
+        let mut rng = Rng::new(self.seed)
+            .fork(group as u64)
+            .fork(index as u64);
+        let n = self.image_bytes();
+        let mut img = vec![0u8; n];
+        // Fill 8 bytes at a time; speed matters for Table 3's baseline.
+        for chunk in img.chunks_exact_mut(8) {
+            chunk.copy_from_slice(&rng.next_u64().to_le_bytes());
+        }
+        let rem = n - n % 8;
+        if rem < n {
+            let tail = rng.next_u64().to_le_bytes();
+            img[rem..].copy_from_slice(&tail[..n - rem]);
+        }
+        Example::new()
+            .with("image", Feature::Bytes(vec![img]))
+            .with("label", Feature::ints(vec![group as i64]))
+            .with("example_index", Feature::ints(vec![index as i64]))
+    }
+
+    pub fn group_examples_iter(
+        &self,
+        group: usize,
+    ) -> impl Iterator<Item = Example> + Send + use<> {
+        let this = self.clone();
+        (0..self.examples_per_group).map(move |i| this.make_example(group, i))
+    }
+}
+
+impl BaseDataset for GroupedCifarLike {
+    fn name(&self) -> &str {
+        "cifar100-like"
+    }
+
+    fn examples(&self) -> Box<dyn Iterator<Item = Example> + Send> {
+        let this = self.clone();
+        Box::new(
+            (0..self.num_groups).flat_map(move |g| this.group_examples_iter(g)),
+        )
+    }
+
+    fn len(&self) -> usize {
+        self.num_groups * self.examples_per_group
+    }
+
+    fn splits(&self, n: usize) -> Vec<Box<dyn Iterator<Item = Example> + Send>> {
+        super::group_range_splits(self.num_groups, n)
+            .into_iter()
+            .map(|range| {
+                let this = self.clone();
+                Box::new(range.flat_map(move |g| this.group_examples_iter(g)))
+                    as Box<dyn Iterator<Item = Example> + Send>
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_shape() {
+        let ds = GroupedCifarLike::standard(0);
+        assert_eq!(ds.len(), 10_000);
+        assert_eq!(ds.image_bytes(), 3072);
+    }
+
+    #[test]
+    fn examples_have_image_and_label() {
+        let ds = GroupedCifarLike { num_groups: 3, examples_per_group: 2, height: 4, width: 4, channels: 3, seed: 5 };
+        let all: Vec<Example> = ds.examples().collect();
+        assert_eq!(all.len(), 6);
+        for (i, ex) in all.iter().enumerate() {
+            assert_eq!(ex.get_bytes("image").unwrap().len(), 48);
+            assert_eq!(ex.get_ints("label").unwrap()[0], (i / 2) as i64);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a: Vec<_> = GroupedCifarLike::standard(9).examples().take(5).map(|e| e.encode()).collect();
+        let b: Vec<_> = GroupedCifarLike::standard(9).examples().take(5).map(|e| e.encode()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_examples_differ() {
+        let ds = GroupedCifarLike::standard(1);
+        let mut it = ds.examples();
+        let a = it.next().unwrap();
+        let b = it.next().unwrap();
+        assert_ne!(a.get_bytes("image"), b.get_bytes("image"));
+    }
+
+    #[test]
+    fn odd_image_size_filled() {
+        let ds = GroupedCifarLike { num_groups: 1, examples_per_group: 1, height: 3, width: 3, channels: 1, seed: 2 };
+        let ex = ds.examples().next().unwrap();
+        assert_eq!(ex.get_bytes("image").unwrap().len(), 9);
+    }
+}

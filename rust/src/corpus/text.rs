@@ -1,0 +1,159 @@
+//! Zipfian synthetic text: a deterministic pronounceable vocabulary plus a
+//! Zipf(s) sampler over it.
+//!
+//! Words are built from syllables so the WordPiece vocab builder sees
+//! realistic sub-word structure (shared prefixes/suffixes across words),
+//! and frequency follows Zipf's law as in natural corpora.
+
+use crate::util::rng::{Rng, Zipf};
+
+const ONSETS: [&str; 16] = [
+    "b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z", "ch", "st",
+];
+const NUCLEI: [&str; 8] = ["a", "e", "i", "o", "u", "ai", "ou", "ea"];
+const CODAS: [&str; 8] = ["", "n", "r", "s", "t", "l", "m", "ck"];
+
+/// Deterministic pronounceable word for a given id.
+pub fn word_for_id(id: usize) -> String {
+    // Mix the id so consecutive ranks don't share prefixes systematically.
+    let mut x = (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x5851_F42D;
+    let mut w = String::new();
+    let syllables = 1 + (id % 3); // frequent words are shorter, Zipf-style
+    for _ in 0..=syllables {
+        let onset = ONSETS[(x % 16) as usize];
+        x /= 16;
+        let nucleus = NUCLEI[(x % 8) as usize];
+        x /= 8;
+        let coda = CODAS[(x % 8) as usize];
+        x /= 8;
+        w.push_str(onset);
+        w.push_str(nucleus);
+        w.push_str(coda);
+        if x == 0 {
+            x = (id as u64).wrapping_add(0xABCD);
+        }
+    }
+    w
+}
+
+/// A synthetic language: `vocab_size` distinct words with Zipf(s)
+/// frequencies. Construction is O(vocab); sampling is O(log vocab).
+pub struct TextModel {
+    words: Vec<String>,
+    zipf: Zipf,
+}
+
+impl TextModel {
+    pub fn new(vocab_size: usize, zipf_s: f64) -> Self {
+        let words = (0..vocab_size).map(word_for_id).collect();
+        TextModel { words, zipf: Zipf::new(vocab_size, zipf_s) }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn word(&self, rank: usize) -> &str {
+        &self.words[rank]
+    }
+
+    /// Sample `n` words into a space-separated string. A deterministic
+    /// per-group topic bias is layered on top of the global Zipf
+    /// distribution: with probability `topic_weight` the word is drawn
+    /// from the group's preferred sub-range, producing the inter-group
+    /// *feature heterogeneity* federated experiments need.
+    pub fn generate(&self, rng: &mut Rng, n: usize, topic: usize, topic_weight: f64) -> String {
+        let v = self.words.len();
+        // each topic biases towards a contiguous slice of the vocabulary
+        let slice = (v / 8).max(1);
+        // SplitMix-style mix so adjacent topic ids land far apart.
+        let mut t = (topic as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        t ^= t >> 31;
+        t = t.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        let topic_start = (t % (v - slice + 1) as u64) as usize;
+        let mut out = String::with_capacity(n * 7);
+        for i in 0..n {
+            let rank = if rng.next_f64() < topic_weight {
+                topic_start + rng.gen_range_usize(slice)
+            } else {
+                self.zipf.sample(rng)
+            };
+            if i > 0 {
+                out.push(' ');
+            }
+            out.push_str(&self.words[rank]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::word_count;
+
+    #[test]
+    fn words_deterministic_and_nonempty() {
+        for id in 0..1000 {
+            let w = word_for_id(id);
+            assert!(!w.is_empty());
+            assert_eq!(w, word_for_id(id));
+            assert!(w.chars().all(|c| c.is_ascii_lowercase()));
+        }
+    }
+
+    #[test]
+    fn vocabulary_mostly_distinct() {
+        let model = TextModel::new(5000, 1.1);
+        let set: std::collections::HashSet<&String> = model.words.iter().collect();
+        // Syllable collisions are possible but must be rare.
+        assert!(set.len() > 4500, "too many collisions: {}", set.len());
+    }
+
+    #[test]
+    fn generate_word_count_exact() {
+        let model = TextModel::new(100, 1.1);
+        let mut rng = Rng::new(1);
+        for &n in &[0usize, 1, 7, 100] {
+            let text = model.generate(&mut rng, n, 0, 0.0);
+            assert_eq!(word_count(&text), n);
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let model = TextModel::new(200, 1.2);
+        let a = model.generate(&mut Rng::new(9), 50, 3, 0.3);
+        let b = model.generate(&mut Rng::new(9), 50, 3, 0.3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn topic_bias_shifts_distribution() {
+        let model = TextModel::new(1000, 1.1);
+        let mut r1 = Rng::new(2);
+        let mut r2 = Rng::new(2);
+        let t0 = model.generate(&mut r1, 2000, 0, 0.9);
+        let t1 = model.generate(&mut r2, 2000, 4, 0.9);
+        let set0: std::collections::HashSet<&str> = t0.split(' ').collect();
+        let set1: std::collections::HashSet<&str> = t1.split(' ').collect();
+        let inter = set0.intersection(&set1).count();
+        let union = set0.union(&set1).count();
+        let jaccard = inter as f64 / union as f64;
+        assert!(jaccard < 0.5, "topics not heterogeneous enough: {jaccard}");
+    }
+
+    #[test]
+    fn zipf_head_dominates_in_text() {
+        let model = TextModel::new(500, 1.3);
+        let mut rng = Rng::new(3);
+        let text = model.generate(&mut rng, 20_000, 0, 0.0);
+        let mut counts = std::collections::HashMap::new();
+        for w in text.split(' ') {
+            *counts.entry(w).or_insert(0u64) += 1;
+        }
+        let top = counts.get(model.word(0)).copied().unwrap_or(0);
+        let mid = counts.get(model.word(99)).copied().unwrap_or(0);
+        assert!(top > mid.max(1) * 10, "top {top} mid {mid}");
+    }
+}

@@ -1,0 +1,213 @@
+//! FedAvg and FedSGD round computations (Appendix C.3).
+//!
+//! Both algorithms broadcast the server model `x^t` to the round's cohort;
+//! each client computes gradients over its `tau` batches. They differ in
+//! *where*:
+//!
+//! * **FedAvg** — the client locally updates after every batch (`tau`
+//!   SGD steps, executed as one fused `local_train` PJRT call when the
+//!   artifact exists) and returns `delta_c = x^t - x_c^t`.
+//! * **FedSGD** — all `tau` gradients are computed *at* `x^t` and
+//!   averaged; `delta_c` is that average gradient.
+//!
+//! The server averages `delta_c` uniformly over the cohort (weighted ==
+//! uniform here: every client is equalized to `tau` batches) and hands the
+//! pseudo-gradient to the server optimizer.
+
+use anyhow::Result;
+
+use super::client_data::ClientBatches;
+use crate::runtime::{ModelBackend, Params};
+
+/// One round's aggregate: the pseudo-gradient and the mean client loss
+/// (computed exactly as the paper's Figure 4 does — average over batches
+/// within a client, then over clients; for FedAvg this tracks the locally
+/// adapting model, for FedSGD the broadcast model).
+pub struct RoundOutput {
+    pub pseudo_grad: Params,
+    pub mean_client_loss: f32,
+    pub clients: usize,
+}
+
+fn zeros_like(p: &Params) -> Params {
+    p.iter().map(|t| vec![0.0f32; t.len()]).collect()
+}
+
+fn accumulate(acc: &mut Params, x: &Params, scale: f32) {
+    for (a, t) in acc.iter_mut().zip(x) {
+        for (av, tv) in a.iter_mut().zip(t) {
+            *av += scale * tv;
+        }
+    }
+}
+
+/// FedAvg: fused tau-step local SGD per client.
+pub fn fedavg_round(
+    backend: &dyn ModelBackend,
+    params: &Params,
+    cohort: &[ClientBatches],
+    client_lr: f32,
+) -> Result<RoundOutput> {
+    assert!(!cohort.is_empty());
+    let mut pseudo = zeros_like(params);
+    let mut loss_sum = 0.0f32;
+    let scale = 1.0 / cohort.len() as f32;
+    for cb in cohort {
+        let (client_params, mean_loss) =
+            backend.local_train(params, &cb.tokens, cb.tau, client_lr)?;
+        loss_sum += mean_loss;
+        // delta_c = x^t - x_c^t  (a descent direction for the server).
+        for ((acc, x0), x1) in pseudo.iter_mut().zip(params).zip(&client_params) {
+            for k in 0..acc.len() {
+                acc[k] += scale * (x0[k] - x1[k]);
+            }
+        }
+    }
+    Ok(RoundOutput {
+        pseudo_grad: pseudo,
+        mean_client_loss: loss_sum / cohort.len() as f32,
+        clients: cohort.len(),
+    })
+}
+
+/// FedSGD: tau minibatch gradients at the broadcast model, averaged.
+/// Executed as one fused `grad_multi` call per client when the backend has
+/// the artifact (EXPERIMENTS.md §Perf L2-1), falling back to per-batch
+/// `grad` otherwise — both paths are numerically identical.
+pub fn fedsgd_round(
+    backend: &dyn ModelBackend,
+    params: &Params,
+    cohort: &[ClientBatches],
+) -> Result<RoundOutput> {
+    assert!(!cohort.is_empty());
+    let mut pseudo = zeros_like(params);
+    let mut loss_sum = 0.0f32;
+    let cohort_scale = 1.0 / cohort.len() as f32;
+    for cb in cohort {
+        let (g, mean_loss) = backend.grad_multi(params, &cb.tokens, cb.tau)?;
+        accumulate(&mut pseudo, &g, cohort_scale);
+        loss_sum += mean_loss;
+    }
+    Ok(RoundOutput {
+        pseudo_grad: pseudo,
+        mean_client_loss: loss_sum / cohort.len() as f32,
+        clients: cohort.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockRuntime;
+
+    fn batches_for(mock: &MockRuntime, tau: usize, fill: impl Fn(usize) -> i32) -> ClientBatches {
+        let (b, t) = mock.batch_shape();
+        ClientBatches {
+            tokens: (0..tau * b * t).map(fill).collect(),
+            tau,
+            batch_size: b,
+            tokens_per_example: t,
+            distinct_sequences: tau * b,
+            raw_tokens: tau * b * t,
+        }
+    }
+
+    #[test]
+    fn fedsgd_equals_large_batch_gradient() {
+        // With one client, FedSGD's pseudo-grad must equal the mean of the
+        // per-batch gradients at the broadcast model — exactly.
+        let mock = MockRuntime::standard();
+        let p = mock.init_params();
+        let cb = batches_for(&mock, 3, |i| 1 + (i as i32 * 7) % 50);
+        let out = fedsgd_round(&mock, &p, &[cb.clone()]).unwrap();
+        let per = cb.batch_size * cb.tokens_per_example;
+        let mut want = vec![0.0f32; 16];
+        for i in 0..3 {
+            let (g, _) = mock.grad(&p, &cb.tokens[i * per..(i + 1) * per]).unwrap();
+            for k in 0..16 {
+                want[k] += g[0][k] / 3.0;
+            }
+        }
+        for k in 0..16 {
+            assert!((out.pseudo_grad[0][k] - want[k]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fedavg_tau1_direction_matches_fedsgd() {
+        // tau=1: FedAvg's delta = lr * grad, i.e. proportional to FedSGD's
+        // pseudo-gradient ("effectively the same algorithm up to
+        // normalization", Appendix D.2).
+        let mock = MockRuntime::standard();
+        let p = mock.init_params();
+        let cb = batches_for(&mock, 1, |i| 1 + (i as i32 * 11) % 50);
+        let avg = fedavg_round(&mock, &p, &[cb.clone()], 0.25).unwrap();
+        let sgd = fedsgd_round(&mock, &p, &[cb]).unwrap();
+        for k in 0..16 {
+            assert!(
+                (avg.pseudo_grad[0][k] - 0.25 * sgd.pseudo_grad[0][k]).abs() < 1e-6,
+                "coord {k}"
+            );
+        }
+    }
+
+    #[test]
+    fn fedavg_loss_below_fedsgd_loss_on_same_data() {
+        // The paper's §5.2 observation: FedAvg's reported train loss is
+        // lower because the client adapts while computing it.
+        let mock = MockRuntime::standard();
+        let p = mock.init_params();
+        let cohort: Vec<ClientBatches> = (0..4)
+            .map(|c| batches_for(&mock, 8, move |i| 1 + ((i + 13 * c) as i32 * 5) % 50))
+            .collect();
+        let avg = fedavg_round(&mock, &p, &cohort, 0.3).unwrap();
+        let sgd = fedsgd_round(&mock, &p, &cohort).unwrap();
+        assert!(
+            avg.mean_client_loss < sgd.mean_client_loss,
+            "{} !< {}",
+            avg.mean_client_loss,
+            sgd.mean_client_loss
+        );
+    }
+
+    #[test]
+    fn cohort_average_is_uniform() {
+        let mock = MockRuntime::standard();
+        let p = mock.init_params();
+        let a = batches_for(&mock, 2, |i| 1 + (i as i32) % 30);
+        let b = batches_for(&mock, 2, |i| 31 + (i as i32) % 30);
+        let out_ab = fedsgd_round(&mock, &p, &[a.clone(), b.clone()]).unwrap();
+        let out_a = fedsgd_round(&mock, &p, &[a]).unwrap();
+        let out_b = fedsgd_round(&mock, &p, &[b]).unwrap();
+        for k in 0..16 {
+            let want = 0.5 * (out_a.pseudo_grad[0][k] + out_b.pseudo_grad[0][k]);
+            assert!((out_ab.pseudo_grad[0][k] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fedavg_descends_under_server_sgd() {
+        use crate::fed::server_opt::{ServerOptimizer, Sgd};
+        let mock = MockRuntime::standard();
+        let mut p = mock.init_params();
+        let cohort: Vec<ClientBatches> = (0..3)
+            .map(|c| batches_for(&mock, 4, move |i| 1 + ((i * 3 + c * 17) as i32) % 50))
+            .collect();
+        let eval = |p: &crate::runtime::Params| {
+            cohort
+                .iter()
+                .map(|cb| mock.eval_loss(p, cb.batch(0)).unwrap())
+                .sum::<f32>()
+        };
+        let before = eval(&p);
+        let mut opt = Sgd;
+        for _ in 0..30 {
+            let out = fedavg_round(&mock, &p, &cohort, 0.2).unwrap();
+            opt.step(&mut p, &out.pseudo_grad, 1.0);
+        }
+        let after = eval(&p);
+        // The mock has an irreducible heterogeneity floor (clients disagree
+        // per bucket), so require solid but not total descent.
+        assert!(after < before * 0.85, "{before} -> {after}");
+    }
+}

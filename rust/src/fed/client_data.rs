@@ -1,0 +1,227 @@
+//! The client-side data pipeline (Appendix C.1, scaled):
+//!
+//! 1. tokenize the client's text (WordPiece);
+//! 2. concatenate all tokens into sequences of length S+1, padding the
+//!    last sequence as needed;
+//! 3. batch with batch size B;
+//! 4. repeat (cycling sequences) and truncate so the client yields exactly
+//!    `tau` batches per round (paper: every client is equalized to 1024
+//!    examples = 64 batches of 16).
+//!
+//! Reading the group's examples stops as soon as enough tokens are
+//! buffered (`max_tokens`), which is the nested-stream payoff: a client
+//! backed by a 100MB book costs only `tau*B*(S+1)` tokens of work.
+
+use anyhow::Result;
+
+use crate::formats::streaming::StreamedGroup;
+use crate::tokenizer::WordPiece;
+
+/// A client's round-ready token batches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientBatches {
+    /// `tau` batches, each `batch_size * (seq_len+1)` i32 ids, concatenated.
+    pub tokens: Vec<i32>,
+    pub tau: usize,
+    pub batch_size: usize,
+    pub tokens_per_example: usize,
+    /// Distinct (pre-repeat) sequences the client actually had.
+    pub distinct_sequences: usize,
+    /// Raw token count before repeat/truncate.
+    pub raw_tokens: usize,
+}
+
+impl ClientBatches {
+    /// Tokens of batch `i`.
+    pub fn batch(&self, i: usize) -> &[i32] {
+        let per = self.batch_size * self.tokens_per_example;
+        &self.tokens[i * per..(i + 1) * per]
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.tau
+    }
+}
+
+/// Build round batches for one client from a streamed group.
+///
+/// `pad_id` fills the tail of the client's last (partial) sequence;
+/// clients cycle through their own sequences when they have fewer than
+/// `tau * batch_size`.
+pub fn build_client_batches(
+    group: &mut StreamedGroup,
+    tokenizer: &WordPiece,
+    tau: usize,
+    batch_size: usize,
+    tokens_per_example: usize,
+    pad_id: i32,
+) -> Result<ClientBatches> {
+    assert!(tau > 0 && batch_size > 0 && tokens_per_example > 1);
+    let needed_tokens = tau * batch_size * tokens_per_example;
+
+    // 1+2: tokenize and concatenate, stopping early once we have enough.
+    let mut ids: Vec<u32> = Vec::with_capacity(needed_tokens.min(1 << 20));
+    group.for_each_example(|ex| {
+        if let Some(text) = ex.get_str("text") {
+            tokenizer.encode(text, &mut ids);
+        }
+        ids.len() < needed_tokens
+    })?;
+    let raw_tokens = ids.len();
+
+    // Sequences of S+1, padding the final partial one.
+    let mut sequences: Vec<Vec<i32>> = ids
+        .chunks(tokens_per_example)
+        .map(|c| c.iter().map(|&t| t as i32).collect())
+        .collect();
+    if sequences.is_empty() {
+        sequences.push(vec![pad_id; tokens_per_example]);
+    }
+    if let Some(last) = sequences.last_mut() {
+        while last.len() < tokens_per_example {
+            last.push(pad_id);
+        }
+    }
+    let distinct_sequences = sequences.len();
+
+    // 3+4: batch, repeat (cycle), truncate to exactly tau batches.
+    let total_sequences = tau * batch_size;
+    let mut tokens = Vec::with_capacity(needed_tokens);
+    for i in 0..total_sequences {
+        tokens.extend_from_slice(&sequences[i % sequences.len()]);
+    }
+
+    Ok(ClientBatches {
+        tokens,
+        tau,
+        batch_size,
+        tokens_per_example,
+        distinct_sequences,
+        raw_tokens,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{DatasetSpec, SyntheticTextDataset};
+    use crate::formats::streaming::{StreamingConfig, StreamingDataset};
+    use crate::pipeline::{run_partition, FeatureKey, PartitionOptions};
+    use crate::tokenizer::{VocabBuilder, PAD_ID};
+
+    fn setup(groups: usize, max_words: usize) -> (StreamingDataset, WordPiece) {
+        let dir = std::env::temp_dir().join(format!("grouper_cdata_test_{groups}_{max_words}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = DatasetSpec::fedccnews_mini(groups, 31);
+        spec.max_group_words = max_words;
+        let ds = SyntheticTextDataset::new(spec);
+        run_partition(
+            &ds,
+            &FeatureKey::new("domain"),
+            &dir,
+            "d",
+            &PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        let mut vb = VocabBuilder::new();
+        for g in ds.stream_all_text() {
+            vb.feed(&g);
+        }
+        let wp = vb.build(512);
+        let sd = StreamingDataset::open(&dir, "d", StreamingConfig::sequential()).unwrap();
+        (sd, wp)
+    }
+
+    #[test]
+    fn batches_have_exact_shape() {
+        let (sd, wp) = setup(6, 3000);
+        for g in sd.stream() {
+            let mut g = g.unwrap();
+            let cb = build_client_batches(&mut g, &wp, 3, 4, 17, PAD_ID as i32).unwrap();
+            assert_eq!(cb.tokens.len(), 3 * 4 * 17);
+            assert_eq!(cb.num_batches(), 3);
+            assert_eq!(cb.batch(2).len(), 4 * 17);
+            assert!(cb.tokens.iter().all(|&t| t >= 0 && (t as usize) < wp.vocab_size()));
+        }
+    }
+
+    #[test]
+    fn small_clients_repeat_their_sequences() {
+        let (sd, wp) = setup(8, 30); // tiny clients
+        let mut g = sd.stream().next().unwrap().unwrap();
+        let cb = build_client_batches(&mut g, &wp, 4, 4, 33, PAD_ID as i32).unwrap();
+        // A client with ~30 words can't fill 16 distinct 33-token
+        // sequences: repetition must occur.
+        assert!(cb.distinct_sequences < 16);
+        let per = 33;
+        let first = &cb.tokens[..per];
+        let reps = cb
+            .tokens
+            .chunks(per)
+            .filter(|c| *c == first)
+            .count();
+        assert!(reps >= 2, "expected cycling, found {reps} copies");
+    }
+
+    #[test]
+    fn large_clients_stop_reading_early() {
+        let (sd, wp) = setup(4, 50_000);
+        let mut g = sd.stream().next().unwrap().unwrap();
+        let cb = build_client_batches(&mut g, &wp, 2, 2, 17, PAD_ID as i32).unwrap();
+        // Early stop: raw tokens buffered stay within one example of the
+        // need (examples are ~316 words), not the client's ~50K words.
+        assert!(cb.raw_tokens < 2 * 2 * 17 + 4000, "read too much: {}", cb.raw_tokens);
+        assert!(cb.distinct_sequences >= 2 * 2);
+    }
+
+    #[test]
+    fn deterministic_given_same_group() {
+        let (sd, wp) = setup(5, 2000);
+        let collect = || {
+            let sd2 = StreamingDataset::open(
+                // reopen the same materialization
+                std::path::Path::new(&std::env::temp_dir().join("grouper_cdata_test_5_2000")),
+                "d",
+                StreamingConfig::sequential(),
+            );
+            let _ = sd2;
+        };
+        collect();
+        let mut g1 = sd.stream().next().unwrap().unwrap();
+        let cb1 = build_client_batches(&mut g1, &wp, 3, 2, 9, PAD_ID as i32).unwrap();
+        let sd2 = setup(5, 2000).0;
+        let mut g2 = sd2.stream().next().unwrap().unwrap();
+        let cb2 = build_client_batches(&mut g2, &wp, 3, 2, 9, PAD_ID as i32).unwrap();
+        assert_eq!(cb1, cb2);
+    }
+
+    #[test]
+    fn empty_group_yields_all_pad() {
+        // Construct a group whose example has no text feature.
+        let dir = std::env::temp_dir().join("grouper_cdata_empty");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = crate::corpus::GroupedCifarLike {
+            num_groups: 2,
+            examples_per_group: 2,
+            height: 2,
+            width: 2,
+            channels: 1,
+            seed: 0,
+        };
+        run_partition(
+            &ds,
+            &FeatureKey::new("label"),
+            &dir,
+            "img",
+            &PartitionOptions { num_shards: 1, num_workers: 1, count_words: false, ..Default::default() },
+        )
+        .unwrap();
+        let sd = StreamingDataset::open(&dir, "img", StreamingConfig::sequential()).unwrap();
+        let mut vb = VocabBuilder::new();
+        vb.feed("a b c");
+        let wp = vb.build(64);
+        let mut g = sd.stream().next().unwrap().unwrap();
+        let cb = build_client_batches(&mut g, &wp, 1, 2, 5, PAD_ID as i32).unwrap();
+        assert!(cb.tokens.iter().all(|&t| t == PAD_ID as i32));
+    }
+}

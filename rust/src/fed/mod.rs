@@ -1,0 +1,32 @@
+//! Federated training over group streams — the paper's §5 experiment
+//! engine (Appendix C semantics, scaled):
+//!
+//! * [`schedules`] — server LR schedules: constant, 10% linear warmup +
+//!   exponential decay, warmup + cosine decay (Figure 4).
+//! * [`server_opt`] — FedOpt server optimizers (Adam with the paper's
+//!   beta/epsilon defaults; SGD for ablations) applied to the averaged
+//!   client delta ("pseudo-gradient", Reddi et al. [30]).
+//! * [`client_data`] — the client-side data pipeline: tokenize, concatenate
+//!   into length-(S+1) sequences (pad the last), batch, repeat/truncate to
+//!   tau batches per round.
+//! * [`algorithms`] — FedAvg (client SGD local steps via the fused
+//!   `local_train` artifact) and FedSGD (average of tau minibatch
+//!   gradients at the broadcast model).
+//! * [`personalize`] — pre-/post-personalization evaluation (Table 5,
+//!   Figures 5-7): fine-tune one epoch of client SGD, compare losses.
+//! * [`trainer`] — the round loop: cohort stream -> client work -> server
+//!   update, with per-round data-vs-compute timing (Table 4).
+
+pub mod algorithms;
+pub mod client_data;
+pub mod personalize;
+pub mod schedules;
+pub mod server_opt;
+pub mod trainer;
+
+pub use algorithms::{fedavg_round, fedsgd_round, RoundOutput};
+pub use client_data::ClientBatches;
+pub use personalize::{personalization_eval, PersonalizationResult};
+pub use schedules::Schedule;
+pub use server_opt::{Adam, ServerOptimizer, Sgd};
+pub use trainer::{train, RoundMetrics, TrainOutput, TrainerConfig};

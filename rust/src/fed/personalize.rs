@@ -1,0 +1,127 @@
+//! Pre-/post-personalization evaluation (§5.2, Table 5, Figures 5-7).
+//!
+//! For every validation client: (1) **pre** — average loss of the trained
+//! model over the client's batches; (2) personalize — one epoch of client
+//! SGD on those batches (the same scheme FedAvg clients use in training);
+//! (3) **post** — average loss of the personalized model on the same
+//! batches. Appendix C.5 semantics.
+
+use anyhow::Result;
+
+use super::client_data::ClientBatches;
+use crate::metrics::percentile::Summary;
+use crate::runtime::{ModelBackend, Params};
+
+/// Per-client pre/post losses plus the cohort-level summaries.
+#[derive(Debug, Clone)]
+pub struct PersonalizationResult {
+    pub pre: Vec<f32>,
+    pub post: Vec<f32>,
+}
+
+impl PersonalizationResult {
+    pub fn pre_summary(&self) -> Summary {
+        Summary::of(&self.pre.iter().map(|&x| x as f64).collect::<Vec<_>>())
+    }
+
+    pub fn post_summary(&self) -> Summary {
+        Summary::of(&self.post.iter().map(|&x| x as f64).collect::<Vec<_>>())
+    }
+}
+
+/// Average eval loss over a client's batches.
+pub fn client_eval_loss(
+    backend: &dyn ModelBackend,
+    params: &Params,
+    cb: &ClientBatches,
+) -> Result<f32> {
+    let mut sum = 0.0f32;
+    for i in 0..cb.tau {
+        sum += backend.eval_loss(params, cb.batch(i))?;
+    }
+    Ok(sum / cb.tau as f32)
+}
+
+/// Evaluate one client: returns (pre, post) losses.
+pub fn personalize_client(
+    backend: &dyn ModelBackend,
+    params: &Params,
+    cb: &ClientBatches,
+    personalize_lr: f32,
+) -> Result<(f32, f32)> {
+    let pre = client_eval_loss(backend, params, cb)?;
+    // One epoch of client SGD = tau steps over the client's batches.
+    let (personalized, _) = backend.local_train(params, &cb.tokens, cb.tau, personalize_lr)?;
+    let post = client_eval_loss(backend, &personalized, cb)?;
+    Ok((pre, post))
+}
+
+/// Evaluate a set of validation clients.
+pub fn personalization_eval(
+    backend: &dyn ModelBackend,
+    params: &Params,
+    clients: &[ClientBatches],
+    personalize_lr: f32,
+) -> Result<PersonalizationResult> {
+    let mut pre = Vec::with_capacity(clients.len());
+    let mut post = Vec::with_capacity(clients.len());
+    for cb in clients {
+        let (a, b) = personalize_client(backend, params, cb, personalize_lr)?;
+        pre.push(a);
+        post.push(b);
+    }
+    Ok(PersonalizationResult { pre, post })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockRuntime;
+
+    fn client(mock: &MockRuntime, tau: usize, offset: i32) -> ClientBatches {
+        let (b, t) = mock.batch_shape();
+        ClientBatches {
+            tokens: (0..tau * b * t).map(|i| 1 + (i as i32 + offset) % 50).collect(),
+            tau,
+            batch_size: b,
+            tokens_per_example: t,
+            distinct_sequences: tau * b,
+            raw_tokens: tau * b * t,
+        }
+    }
+
+    #[test]
+    fn personalization_reduces_loss() {
+        let mock = MockRuntime::standard();
+        let params = mock.init_params();
+        let clients: Vec<ClientBatches> = (0..6).map(|c| client(&mock, 6, 7 * c)).collect();
+        let res = personalization_eval(&mock, &params, &clients, 0.4).unwrap();
+        assert_eq!(res.pre.len(), 6);
+        for (a, b) in res.pre.iter().zip(&res.post) {
+            assert!(b < a, "post {b} !< pre {a}");
+        }
+        let s_pre = res.pre_summary();
+        let s_post = res.post_summary();
+        assert!(s_post.median < s_pre.median);
+    }
+
+    #[test]
+    fn pre_loss_matches_direct_eval() {
+        let mock = MockRuntime::standard();
+        let params = mock.init_params();
+        let cb = client(&mock, 4, 3);
+        let (pre, _) = personalize_client(&mock, &params, &cb, 0.1).unwrap();
+        let direct = client_eval_loss(&mock, &params, &cb).unwrap();
+        assert_eq!(pre, direct);
+    }
+
+    #[test]
+    fn personalization_does_not_mutate_global_params() {
+        let mock = MockRuntime::standard();
+        let params = mock.init_params();
+        let snapshot = params.clone();
+        let clients = vec![client(&mock, 3, 0)];
+        personalization_eval(&mock, &params, &clients, 0.5).unwrap();
+        assert_eq!(params, snapshot);
+    }
+}

@@ -1,0 +1,102 @@
+//! Server learning-rate schedules (§5.2, Appendix C.4).
+//!
+//! All schedules are applied at the *server* (the paper applies none at
+//! clients). Warmup is linear from 0 over the first 10% of rounds; decay
+//! then runs to (near) zero at the final round. `eta` is the *maximum*
+//! learning rate (attained at the end of warmup), matching the paper's
+//! convention for tuned values.
+
+use crate::config::ScheduleKind;
+
+/// A resolved schedule: total rounds + peak LR + shape.
+#[derive(Debug, Clone, Copy)]
+pub struct Schedule {
+    pub kind: ScheduleKind,
+    pub eta: f32,
+    pub total_rounds: usize,
+    pub warmup_rounds: usize,
+}
+
+impl Schedule {
+    pub fn new(kind: ScheduleKind, eta: f32, total_rounds: usize) -> Self {
+        assert!(total_rounds > 0 && eta > 0.0);
+        let warmup_rounds = match kind {
+            ScheduleKind::Constant => 0,
+            _ => (total_rounds / 10).max(1),
+        };
+        Schedule { kind, eta, total_rounds, warmup_rounds }
+    }
+
+    /// LR at round `t` (0-based).
+    pub fn lr(&self, t: usize) -> f32 {
+        match self.kind {
+            ScheduleKind::Constant => self.eta,
+            _ => {
+                if t < self.warmup_rounds {
+                    // Linear warmup starting at 0 (first step slightly above).
+                    return self.eta * (t as f32 + 1.0) / (self.warmup_rounds as f32);
+                }
+                let remain = (self.total_rounds - self.warmup_rounds).max(1) as f32;
+                let progress = (t - self.warmup_rounds) as f32 / remain; // [0, 1)
+                match self.kind {
+                    ScheduleKind::WarmupExp => {
+                        // Decay to ~1e-3 * eta at the end.
+                        self.eta * (0.001f32).powf(progress)
+                    }
+                    ScheduleKind::WarmupCosine => {
+                        self.eta * 0.5 * (1.0 + (std::f32::consts::PI * progress).cos())
+                    }
+                    ScheduleKind::Constant => unreachable!(),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_flat() {
+        let s = Schedule::new(ScheduleKind::Constant, 1e-3, 100);
+        assert_eq!(s.lr(0), 1e-3);
+        assert_eq!(s.lr(99), 1e-3);
+    }
+
+    #[test]
+    fn warmup_rises_then_decays() {
+        for kind in [ScheduleKind::WarmupExp, ScheduleKind::WarmupCosine] {
+            let s = Schedule::new(kind, 1.0, 100);
+            assert_eq!(s.warmup_rounds, 10);
+            // rising during warmup
+            assert!(s.lr(0) < s.lr(5));
+            assert!(s.lr(5) < s.lr(9));
+            // peak at end of warmup
+            assert!((s.lr(10) - 1.0).abs() < 0.06, "{kind:?} {}", s.lr(10));
+            // monotone decay afterwards
+            let mut prev = s.lr(10);
+            for t in 11..100 {
+                let v = s.lr(t);
+                assert!(v <= prev + 1e-7, "{kind:?} rose at {t}");
+                prev = v;
+            }
+            // near zero at the end
+            assert!(s.lr(99) < 0.01, "{kind:?} final {}", s.lr(99));
+        }
+    }
+
+    #[test]
+    fn cosine_halfway_is_half() {
+        let s = Schedule::new(ScheduleKind::WarmupCosine, 2.0, 110);
+        let mid = 11 + (110 - 11) / 2;
+        assert!((s.lr(mid) - 1.0).abs() < 0.05, "{}", s.lr(mid));
+    }
+
+    #[test]
+    fn warmup_at_least_one_round() {
+        let s = Schedule::new(ScheduleKind::WarmupExp, 1.0, 5);
+        assert_eq!(s.warmup_rounds, 1);
+        assert!(s.lr(0) > 0.0);
+    }
+}

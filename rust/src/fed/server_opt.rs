@@ -1,0 +1,148 @@
+//! FedOpt server optimizers (Reddi et al. [30], Appendix C.4).
+//!
+//! The server treats the cohort-averaged client delta as a gradient
+//! estimate ("pseudo-gradient") and applies a first-order optimizer to the
+//! global model. The paper's configuration: Adam with beta1=0.9,
+//! beta2=0.999, eps=1e-8; only the learning rate is tuned/scheduled.
+
+use crate::runtime::Params;
+
+/// A server optimizer: consumes the pseudo-gradient, updates the model.
+pub trait ServerOptimizer {
+    /// Apply one update. `lr` comes from the round's schedule.
+    fn step(&mut self, params: &mut Params, pseudo_grad: &Params, lr: f32);
+
+    fn name(&self) -> &'static str;
+}
+
+/// Plain server SGD (the FedAvg of McMahan et al. is Adam->SGD with lr=1).
+pub struct Sgd;
+
+impl ServerOptimizer for Sgd {
+    fn step(&mut self, params: &mut Params, g: &Params, lr: f32) {
+        for (p, gi) in params.iter_mut().zip(g) {
+            debug_assert_eq!(p.len(), gi.len());
+            for (pv, gv) in p.iter_mut().zip(gi) {
+                *pv -= lr * gv;
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// Adam with bias correction (the paper's server optimizer).
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Option<Params>,
+    v: Option<Params>,
+    t: u64,
+}
+
+impl Adam {
+    /// Paper defaults: beta1=0.9, beta2=0.999, eps=1e-8.
+    pub fn new() -> Self {
+        Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8, m: None, v: None, t: 0 }
+    }
+}
+
+impl Default for Adam {
+    fn default() -> Self {
+        Adam::new()
+    }
+}
+
+impl ServerOptimizer for Adam {
+    fn step(&mut self, params: &mut Params, g: &Params, lr: f32) {
+        if self.m.is_none() {
+            self.m = Some(g.iter().map(|t| vec![0.0; t.len()]).collect());
+            self.v = Some(g.iter().map(|t| vec![0.0; t.len()]).collect());
+        }
+        self.t += 1;
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let m = self.m.as_mut().unwrap();
+        let v = self.v.as_mut().unwrap();
+        for ((p, gi), (mi, vi)) in params.iter_mut().zip(g).zip(m.iter_mut().zip(v.iter_mut())) {
+            debug_assert_eq!(p.len(), gi.len());
+            for k in 0..p.len() {
+                mi[k] = b1 * mi[k] + (1.0 - b1) * gi[k];
+                vi[k] = b2 * vi[k] + (1.0 - b2) * gi[k] * gi[k];
+                let mhat = mi[k] / bc1;
+                let vhat = vi[k] / bc2;
+                p[k] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(v: &[f32]) -> Params {
+        vec![v.to_vec()]
+    }
+
+    #[test]
+    fn sgd_step_exact() {
+        let mut p = params(&[1.0, 2.0]);
+        Sgd.step(&mut p, &params(&[0.5, -1.0]), 0.1);
+        assert_eq!(p[0], vec![0.95, 2.1]);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // With bias correction, |first update| ~= lr regardless of gradient
+        // magnitude (the classic Adam property).
+        for scale in [1e-3f32, 1.0, 1e3] {
+            let mut p = params(&[0.0]);
+            let mut adam = Adam::new();
+            adam.step(&mut p, &params(&[scale]), 0.01);
+            assert!((p[0][0] + 0.01).abs() < 1e-4, "scale {scale}: {}", p[0][0]);
+        }
+    }
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // min (x-3)^2 via its gradient.
+        let mut p = params(&[0.0]);
+        let mut adam = Adam::new();
+        for _ in 0..2000 {
+            let g = params(&[2.0 * (p[0][0] - 3.0)]);
+            adam.step(&mut p, &g, 0.05);
+        }
+        assert!((p[0][0] - 3.0).abs() < 0.05, "{}", p[0][0]);
+    }
+
+    #[test]
+    fn adam_matches_reference_trace() {
+        // Hand-computed two-step trace (g = [1], lr = 0.1).
+        let mut p = params(&[0.0]);
+        let mut adam = Adam::new();
+        adam.step(&mut p, &params(&[1.0]), 0.1);
+        // t=1: mhat=1, vhat=1 -> p = -0.1 * 1/(1+eps) ~ -0.1
+        assert!((p[0][0] + 0.1).abs() < 1e-6);
+        adam.step(&mut p, &params(&[1.0]), 0.1);
+        // t=2: m=0.19/bc1(0.19)=1, v and vhat = 1 -> another -0.1
+        assert!((p[0][0] + 0.2).abs() < 1e-5, "{}", p[0][0]);
+    }
+
+    #[test]
+    fn multi_tensor_shapes() {
+        let mut p = vec![vec![1.0, 1.0], vec![2.0]];
+        let g = vec![vec![1.0, -1.0], vec![0.5]];
+        let mut adam = Adam::new();
+        adam.step(&mut p, &g, 0.1);
+        assert!(p[0][0] < 1.0 && p[0][1] > 1.0 && p[1][0] < 2.0);
+    }
+}

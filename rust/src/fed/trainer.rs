@@ -1,0 +1,265 @@
+//! The federated round loop: cohort stream -> client computation -> server
+//! update, with the per-round data-iteration vs training-time accounting
+//! that backs the Table 4 reproduction.
+//!
+//! Matches §5.1/Appendix C: clients are shuffled (buffered) once into a
+//! stream and consumed in windows of `cohort_size`; every client is
+//! equalized to `tau` batches; the server optimizer is Adam under the
+//! configured LR schedule.
+
+use anyhow::{Context, Result};
+
+use super::algorithms::{fedavg_round, fedsgd_round};
+use super::client_data::{build_client_batches, ClientBatches};
+use super::schedules::Schedule;
+use super::server_opt::{Adam, ServerOptimizer};
+use crate::config::{FedAlgorithm, FedConfig};
+use crate::formats::streaming::StreamingConfig;
+use crate::grouper::PartitionedDataset;
+use crate::runtime::{ModelBackend, Params};
+use crate::tokenizer::WordPiece;
+use crate::util::timer::Timer;
+
+/// Per-round record (Figure 4's curves; Table 4's timing columns).
+#[derive(Debug, Clone)]
+pub struct RoundMetrics {
+    pub round: usize,
+    pub lr: f32,
+    pub train_loss: f32,
+    /// Seconds spent pulling groups + tokenizing + batching.
+    pub data_secs: f64,
+    /// Seconds spent in backend computation (client work + server update).
+    pub train_secs: f64,
+}
+
+/// Completed training run.
+pub struct TrainOutput {
+    pub params: Params,
+    pub rounds: Vec<RoundMetrics>,
+}
+
+impl TrainOutput {
+    pub fn final_loss(&self) -> f32 {
+        self.rounds.last().map(|r| r.train_loss).unwrap_or(f32::NAN)
+    }
+
+    pub fn loss_curve(&self) -> Vec<(usize, f32)> {
+        self.rounds.iter().map(|r| (r.round, r.train_loss)).collect()
+    }
+}
+
+/// Extra knobs beyond [`FedConfig`].
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub fed: FedConfig,
+    /// Print a progress line every N rounds (0 = silent).
+    pub log_every: usize,
+}
+
+impl TrainerConfig {
+    pub fn new(fed: FedConfig) -> Self {
+        TrainerConfig { fed, log_every: 0 }
+    }
+}
+
+/// Build the validation clients used by personalization eval: the first
+/// `n` groups of `dataset`'s (sequential) stream, batched like training
+/// clients.
+pub fn build_eval_clients(
+    dataset: &PartitionedDataset,
+    tokenizer: &WordPiece,
+    backend: &dyn ModelBackend,
+    tau: usize,
+    n: usize,
+) -> Result<Vec<ClientBatches>> {
+    let (b, t) = backend.batch_shape();
+    let mut out = Vec::with_capacity(n);
+    for g in dataset.build_group_stream(StreamingConfig::sequential())?.take(n) {
+        let mut g = g?;
+        out.push(build_client_batches(&mut g, tokenizer, tau, b, t, backend.pad_id())?);
+    }
+    Ok(out)
+}
+
+/// Run federated training; returns the final model and per-round metrics.
+pub fn train(
+    backend: &dyn ModelBackend,
+    dataset: &PartitionedDataset,
+    tokenizer: &WordPiece,
+    cfg: &TrainerConfig,
+) -> Result<TrainOutput> {
+    let fed = &cfg.fed;
+    let (b, t) = backend.batch_shape();
+    let schedule = Schedule::new(fed.schedule, fed.server_lr, fed.rounds);
+    let mut server_opt = Adam::new();
+    let mut params = backend.init_params();
+
+    // Infinite shuffled client stream consumed in cohort windows.
+    let stream_cfg = StreamingConfig {
+        repeats: None,
+        shuffle_buffer: fed.shuffle_buffer.max(2 * fed.cohort_size),
+        seed: fed.seed,
+        ..Default::default()
+    };
+    let mut cohorts = dataset.build_cohort_stream(stream_cfg, fed.cohort_size)?;
+
+    let mut rounds = Vec::with_capacity(fed.rounds);
+    for round in 0..fed.rounds {
+        // --- data phase: pull the cohort and build client batches.
+        let data_t = Timer::start();
+        let cohort_groups = cohorts
+            .next()
+            .context("client stream ended unexpectedly")??;
+        let mut cohort: Vec<ClientBatches> = Vec::with_capacity(fed.cohort_size);
+        for mut g in cohort_groups {
+            cohort.push(build_client_batches(
+                &mut g,
+                tokenizer,
+                fed.tau,
+                b,
+                t,
+                backend.pad_id(),
+            )?);
+        }
+        let data_secs = data_t.elapsed_secs();
+
+        // --- compute phase: client work + server update.
+        let train_t = Timer::start();
+        let lr = schedule.lr(round);
+        let out = match fed.algorithm {
+            FedAlgorithm::FedAvg => fedavg_round(backend, &params, &cohort, fed.client_lr)?,
+            FedAlgorithm::FedSgd => fedsgd_round(backend, &params, &cohort)?,
+        };
+        server_opt.step(&mut params, &out.pseudo_grad, lr);
+        let train_secs = train_t.elapsed_secs();
+
+        if cfg.log_every > 0 && (round % cfg.log_every == 0 || round + 1 == fed.rounds) {
+            println!(
+                "round {round:>5}  loss {:.4}  lr {lr:.2e}  data {:.3}s  train {:.3}s",
+                out.mean_client_loss, data_secs, train_secs
+            );
+        }
+        rounds.push(RoundMetrics {
+            round,
+            lr,
+            train_loss: out.mean_client_loss,
+            data_secs,
+            train_secs,
+        });
+    }
+    Ok(TrainOutput { params, rounds })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScheduleKind;
+    use crate::corpus::{DatasetSpec, SyntheticTextDataset};
+    use crate::pipeline::{run_partition, FeatureKey, PartitionOptions};
+    use crate::runtime::MockRuntime;
+    use crate::tokenizer::VocabBuilder;
+
+    fn setup() -> (PartitionedDataset, WordPiece, MockRuntime) {
+        let dir = std::env::temp_dir().join("grouper_trainer_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = DatasetSpec::fedccnews_mini(24, 77);
+        spec.max_group_words = 800;
+        let ds = SyntheticTextDataset::new(spec);
+        run_partition(
+            &ds,
+            &FeatureKey::new("domain"),
+            &dir,
+            "train",
+            &PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        let mut vb = VocabBuilder::new();
+        for text in ds.stream_all_text() {
+            vb.feed(&text);
+        }
+        let wp = vb.build(64); // matches MockRuntime vocab
+        let pd = PartitionedDataset::open(&dir, "train").unwrap();
+        (pd, wp, MockRuntime::standard())
+    }
+
+    fn fed(alg: FedAlgorithm, rounds: usize) -> FedConfig {
+        FedConfig {
+            algorithm: alg,
+            rounds,
+            cohort_size: 4,
+            tau: 3,
+            client_lr: 0.3,
+            server_lr: 0.05,
+            schedule: ScheduleKind::Constant,
+            shuffle_buffer: 8,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn fedavg_training_reduces_loss() {
+        let (pd, wp, mock) = setup();
+        let out = train(&mock, &pd, &wp, &TrainerConfig::new(fed(FedAlgorithm::FedAvg, 40)))
+            .unwrap();
+        assert_eq!(out.rounds.len(), 40);
+        let first = out.rounds[0].train_loss;
+        let last = out.final_loss();
+        // The mock's heterogeneity floor bounds how far the global loss
+        // can fall; require clear descent.
+        assert!(last < first * 0.85, "{first} -> {last}");
+    }
+
+    #[test]
+    fn fedsgd_training_reduces_loss() {
+        let (pd, wp, mock) = setup();
+        let out = train(&mock, &pd, &wp, &TrainerConfig::new(fed(FedAlgorithm::FedSgd, 40)))
+            .unwrap();
+        let first = out.rounds[0].train_loss;
+        let last = out.final_loss();
+        assert!(last < first * 0.9, "{first} -> {last}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (pd, wp, mock) = setup();
+        let a = train(&mock, &pd, &wp, &TrainerConfig::new(fed(FedAlgorithm::FedAvg, 5)))
+            .unwrap();
+        let b = train(&mock, &pd, &wp, &TrainerConfig::new(fed(FedAlgorithm::FedAvg, 5)))
+            .unwrap();
+        assert_eq!(a.params, b.params);
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.train_loss, y.train_loss);
+        }
+    }
+
+    #[test]
+    fn schedule_is_applied() {
+        let (pd, wp, mock) = setup();
+        let mut f = fed(FedAlgorithm::FedAvg, 20);
+        f.schedule = ScheduleKind::WarmupCosine;
+        let out = train(&mock, &pd, &wp, &TrainerConfig::new(f)).unwrap();
+        assert!(out.rounds[0].lr < out.rounds[2].lr, "warmup missing");
+        assert!(out.rounds[19].lr < out.rounds[3].lr, "decay missing");
+    }
+
+    #[test]
+    fn eval_clients_built_consistently() {
+        let (pd, wp, mock) = setup();
+        let clients = build_eval_clients(&pd, &wp, &mock, 3, 10).unwrap();
+        assert_eq!(clients.len(), 10);
+        let (b, t) = mock.batch_shape();
+        for c in &clients {
+            assert_eq!(c.tokens.len(), 3 * b * t);
+        }
+    }
+
+    #[test]
+    fn timing_fields_populated() {
+        let (pd, wp, mock) = setup();
+        let out = train(&mock, &pd, &wp, &TrainerConfig::new(fed(FedAlgorithm::FedAvg, 3)))
+            .unwrap();
+        for r in &out.rounds {
+            assert!(r.data_secs >= 0.0 && r.train_secs >= 0.0);
+        }
+    }
+}

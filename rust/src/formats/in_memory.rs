@@ -1,0 +1,151 @@
+//! The in-memory format: a key -> Vec<Example> map, as used by LEAF [12]
+//! and FedNLP [13]. Very fast arbitrary access, zero scalability — loading
+//! FedBookCO-scale data OOMs in the paper's Table 3, and its peak memory
+//! in Table 12 is the whole dataset.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::pipeline::GroupIndex;
+use crate::records::sharded::discover_shards;
+use crate::records::tfrecord::RecordReader;
+use crate::records::Example;
+
+/// Entire partitioned dataset resident in RAM.
+pub struct InMemoryDataset {
+    groups: HashMap<Vec<u8>, Vec<Example>>,
+    /// Deterministic key order (index order) for reproducible iteration.
+    keys: Vec<Vec<u8>>,
+}
+
+impl InMemoryDataset {
+    /// Load a pipeline materialization (`<prefix>-*.tfrecord` +
+    /// `<prefix>.gindex`) fully into memory.
+    pub fn load(dir: &Path, prefix: &str) -> Result<Self> {
+        let index = GroupIndex::read(dir.join(format!("{prefix}.gindex")))
+            .with_context(|| format!("loading index for {prefix}"))?;
+        let shards = discover_shards(dir, prefix)?;
+        let mut groups = HashMap::with_capacity(index.num_groups());
+        let mut keys = Vec::with_capacity(index.num_groups());
+        for e in &index.entries {
+            let mut r = RecordReader::open(&shards[e.shard as usize])?;
+            r.seek_to(e.offset)?;
+            let mut examples = Vec::with_capacity(e.num_examples as usize);
+            for _ in 0..e.num_examples {
+                let bytes = r
+                    .next_record()?
+                    .context("index claims more examples than shard holds")?;
+                examples.push(Example::decode(&bytes)?);
+            }
+            keys.push(e.key.clone());
+            groups.insert(e.key.clone(), examples);
+        }
+        Ok(InMemoryDataset { groups, keys })
+    }
+
+    /// Build directly from an iterator of (key, example) pairs (tests).
+    pub fn from_pairs(pairs: impl IntoIterator<Item = (Vec<u8>, Example)>) -> Self {
+        let mut groups: HashMap<Vec<u8>, Vec<Example>> = HashMap::new();
+        let mut keys = Vec::new();
+        for (k, ex) in pairs {
+            if !groups.contains_key(&k) {
+                keys.push(k.clone());
+            }
+            groups.entry(k).or_default().push(ex);
+        }
+        InMemoryDataset { groups, keys }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn keys(&self) -> &[Vec<u8>] {
+        &self.keys
+    }
+
+    /// O(1) arbitrary group access — the format's defining strength.
+    pub fn group(&self, key: &[u8]) -> Option<&[Example]> {
+        self.groups.get(key).map(|v| v.as_slice())
+    }
+
+    /// Visit every example of every group, following `order` (the paper's
+    /// Table 3 iterates all groups serially in a random order).
+    pub fn visit_all(&self, order: &[Vec<u8>], mut f: impl FnMut(&[u8], &Example)) {
+        for key in order {
+            if let Some(examples) = self.groups.get(key) {
+                for ex in examples {
+                    f(key, ex);
+                }
+            }
+        }
+    }
+
+    /// Approximate resident payload bytes (Table 12 accounting aid).
+    pub fn approx_bytes(&self) -> usize {
+        self.groups
+            .iter()
+            .map(|(k, v)| k.len() + v.iter().map(|e| e.approx_bytes()).sum::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
+    use crate::pipeline::{run_partition, FeatureKey, PartitionOptions};
+
+    fn materialized() -> (std::path::PathBuf, SyntheticTextDataset) {
+        let dir = std::env::temp_dir().join("grouper_inmem_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = DatasetSpec::fedwiki_mini(25, 3);
+        spec.max_group_words = 500;
+        let ds = SyntheticTextDataset::new(spec);
+        run_partition(
+            &ds,
+            &FeatureKey::new("article"),
+            &dir,
+            "wiki",
+            &PartitionOptions { num_shards: 3, num_workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        (dir, ds)
+    }
+
+    #[test]
+    fn load_and_access() {
+        let (dir, ds) = materialized();
+        let mem = InMemoryDataset::load(&dir, "wiki").unwrap();
+        assert_eq!(mem.num_groups(), 25);
+        // Arbitrary access returns the full group.
+        let key = ds.spec.group_key(7).into_bytes();
+        let g = mem.group(&key).unwrap();
+        assert_eq!(g.len(), ds.spec.group_examples(7));
+        assert!(mem.group(b"nonexistent").is_none());
+    }
+
+    #[test]
+    fn visit_all_counts_every_example() {
+        let (dir, ds) = materialized();
+        let mem = InMemoryDataset::load(&dir, "wiki").unwrap();
+        let mut count = 0;
+        let order = mem.keys().to_vec();
+        mem.visit_all(&order, |_, _| count += 1);
+        assert_eq!(count, ds.len());
+    }
+
+    #[test]
+    fn from_pairs_preserves_insertion_order_of_keys() {
+        let mem = InMemoryDataset::from_pairs(vec![
+            (b"b".to_vec(), Example::text("1")),
+            (b"a".to_vec(), Example::text("2")),
+            (b"b".to_vec(), Example::text("3")),
+        ]);
+        assert_eq!(mem.keys(), &[b"b".to_vec(), b"a".to_vec()]);
+        assert_eq!(mem.group(b"b").unwrap().len(), 2);
+        assert!(mem.approx_bytes() > 0);
+    }
+}

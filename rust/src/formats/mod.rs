@@ -1,0 +1,33 @@
+//! The three group-structured dataset format archetypes of the paper's
+//! §3.1 (Table 2), with the trade-offs reproduced honestly:
+//!
+//! | format | scalability | group access time | access patterns |
+//! |---|---|---|---|
+//! | [`in_memory`] | limited (whole dataset in RAM) | very fast | arbitrary |
+//! | [`hierarchical`] | high | slow (seek per *example*) | arbitrary |
+//! | [`streaming`] | high | fast | shuffle + streaming only |
+//!
+//! **In-memory** (LEAF/FedNLP style) is a key→examples hash map.
+//!
+//! **Hierarchical** (TFF's SQL-backed style) stores examples in arrival
+//! order, scattered round-robin across shards, with a per-example offset
+//! index. Constructing one group's dataset costs one random read per
+//! example — that is the real reason the paper's Table 3 hierarchical
+//! column blows up on large datasets ("bottlenecked by indexing and
+//! searching over a large number of files").
+//!
+//! **Streaming** (Dataset Grouper's contribution) stores each group's
+//! examples contiguously (the pipeline's external group-by-key did the
+//! work once, at prep time) and then restricts access to stream-level
+//! operations: interleave across shards, *buffered* shuffle of group
+//! handles, repeat — in exchange it gets pure sequential I/O, prefetch,
+//! and per-group cost independent of the total dataset size.
+
+pub mod btree_index;
+pub mod hierarchical;
+pub mod in_memory;
+pub mod streaming;
+
+pub use hierarchical::{HierarchicalReader, HierarchicalStore};
+pub use in_memory::InMemoryDataset;
+pub use streaming::{StreamedGroup, StreamingConfig, StreamingDataset};

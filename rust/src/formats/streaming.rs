@@ -1,0 +1,502 @@
+//! The streaming format — Dataset Grouper's core contribution (§3.1).
+//!
+//! Groups live contiguously inside TFRecord shards (the pipeline's
+//! group-by-key paid that cost once). Reading then restricts itself to
+//! stream-level operations, in exchange for sequential I/O and
+//! total-iteration time that scales linearly in the number of groups:
+//!
+//! * **interleave(cycle)** — round-robin across shards at group
+//!   granularity, like `tf.data.interleave` over per-shard group streams;
+//! * **buffered shuffle(B)** — a fixed-size buffer of *group handles*
+//!   (index extents, not data!) sampled uniformly, exactly tf.data's
+//!   `shuffle` lifted to the group stream — arbitrary access is never
+//!   required;
+//! * **repeat(n | forever)** — re-iteration for multi-epoch training;
+//! * **prefetch** — a background thread reads upcoming group extents
+//!   (raw framed bytes) into a bounded channel, overlapping I/O with
+//!   consumer compute.
+//!
+//! A yielded [`StreamedGroup`] decodes its examples lazily; extents larger
+//! than `prefetch_cap_bytes` bypass prefetch and stream straight from the
+//! file so a pathological group never has to fit in memory.
+
+use std::collections::VecDeque;
+use std::io::BufReader;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::pipeline::{GroupIndex, GroupIndexEntry};
+use crate::records::sharded::discover_shards;
+use crate::records::tfrecord::RecordReader;
+use crate::records::Example;
+use crate::util::rng::Rng;
+
+/// Stream construction options.
+#[derive(Debug, Clone)]
+pub struct StreamingConfig {
+    /// Shards cycled per interleave round.
+    pub interleave: usize,
+    /// Buffered-shuffle size over group handles (0 or 1 = no shuffle).
+    pub shuffle_buffer: usize,
+    pub seed: u64,
+    /// Number of passes over the group stream (None = infinite repeat).
+    pub repeats: Option<usize>,
+    /// Groups prefetched ahead of the consumer.
+    pub prefetch_groups: usize,
+    /// Extents above this size bypass prefetch and stream from the file.
+    pub prefetch_cap_bytes: u64,
+}
+
+impl Default for StreamingConfig {
+    fn default() -> Self {
+        StreamingConfig {
+            interleave: 4,
+            shuffle_buffer: 64,
+            seed: 0,
+            repeats: Some(1),
+            prefetch_groups: 8,
+            prefetch_cap_bytes: 32 << 20,
+        }
+    }
+}
+
+impl StreamingConfig {
+    /// Plain sequential single-pass read (Table 3's serial iteration).
+    pub fn sequential() -> Self {
+        StreamingConfig { shuffle_buffer: 0, ..Default::default() }
+    }
+}
+
+/// One group pulled from the stream; decodes examples lazily.
+pub struct StreamedGroup {
+    pub key: Vec<u8>,
+    pub num_examples: u64,
+    pub words: u64,
+    source: GroupSource,
+}
+
+enum GroupSource {
+    /// Raw framed bytes of the whole extent (prefetched).
+    Buffer(Vec<u8>),
+    /// Large extent: positioned reader + remaining record count.
+    File { reader: RecordReader<BufReader<std::fs::File>>, remaining: u64 },
+}
+
+impl StreamedGroup {
+    /// Visit each example in order; stop early by returning `false`.
+    pub fn for_each_example(&mut self, mut f: impl FnMut(Example) -> bool) -> Result<()> {
+        match &mut self.source {
+            GroupSource::Buffer(bytes) => {
+                let mut r = RecordReader::new(&bytes[..]);
+                let mut buf = Vec::new();
+                while r.read_into(&mut buf)? {
+                    if !f(Example::decode(&buf)?) {
+                        break;
+                    }
+                }
+            }
+            GroupSource::File { reader, remaining } => {
+                let mut buf = Vec::new();
+                while *remaining > 0 {
+                    if !reader.read_into(&mut buf)? {
+                        anyhow::bail!("shard truncated mid-group");
+                    }
+                    *remaining -= 1;
+                    if !f(Example::decode(&buf)?) {
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Collect all examples (tests / small groups).
+    pub fn examples(&mut self) -> Result<Vec<Example>> {
+        let mut out = Vec::new();
+        self.for_each_example(|e| {
+            out.push(e);
+            true
+        })?;
+        Ok(out)
+    }
+}
+
+/// The open streaming dataset.
+pub struct StreamingDataset {
+    shards: Vec<PathBuf>,
+    index: GroupIndex,
+    config: StreamingConfig,
+}
+
+impl StreamingDataset {
+    pub fn open(dir: &Path, prefix: &str, config: StreamingConfig) -> Result<Self> {
+        let mut index = GroupIndex::read(dir.join(format!("{prefix}.gindex")))
+            .with_context(|| format!("opening streaming dataset {prefix}"))?;
+        index.sort_physical();
+        let shards = discover_shards(dir, prefix)?;
+        Ok(StreamingDataset { shards, index, config })
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.index.num_groups()
+    }
+
+    pub fn total_examples(&self) -> u64 {
+        self.index.total_examples()
+    }
+
+    pub fn index(&self) -> &GroupIndex {
+        &self.index
+    }
+
+    /// The interleaved + buffer-shuffled order of group handles for one
+    /// epoch. Pure function of (index, config, epoch).
+    fn epoch_order(&self, epoch: usize) -> Vec<usize> {
+        // Per-shard queues in physical order.
+        let nshards = self.shards.len();
+        let mut per_shard: Vec<VecDeque<usize>> = vec![VecDeque::new(); nshards];
+        for (i, e) in self.index.entries.iter().enumerate() {
+            per_shard[e.shard as usize].push_back(i);
+        }
+        // Interleave: cycle over `interleave` open shards, one group each.
+        let mut interleaved = Vec::with_capacity(self.index.num_groups());
+        let cycle = self.config.interleave.max(1);
+        let mut open: VecDeque<usize> = (0..nshards).collect();
+        let mut active: VecDeque<usize> = VecDeque::new();
+        while !open.is_empty() || !active.is_empty() {
+            while active.len() < cycle && !open.is_empty() {
+                active.push_back(open.pop_front().unwrap());
+            }
+            let Some(s) = active.pop_front() else { break };
+            if let Some(g) = per_shard[s].pop_front() {
+                interleaved.push(g);
+                active.push_back(s);
+            } // else: shard exhausted, drop from rotation
+        }
+        // Buffered shuffle over handles.
+        let b = self.config.shuffle_buffer;
+        if b <= 1 {
+            return interleaved;
+        }
+        let mut rng = Rng::new(self.config.seed ^ (epoch as u64).wrapping_mul(0x9E37));
+        let mut out = Vec::with_capacity(interleaved.len());
+        let mut buf: Vec<usize> = Vec::with_capacity(b);
+        for g in interleaved {
+            buf.push(g);
+            if buf.len() == b {
+                let i = rng.gen_range_usize(buf.len());
+                out.push(buf.swap_remove(i));
+            }
+        }
+        while !buf.is_empty() {
+            let i = rng.gen_range_usize(buf.len());
+            out.push(buf.swap_remove(i));
+        }
+        out
+    }
+
+    /// Start the stream: spawns the prefetch thread, returns the iterator.
+    pub fn stream(&self) -> GroupStream {
+        let (tx, rx) = sync_channel::<Result<Prefetched>>(self.config.prefetch_groups.max(1));
+        let shards = self.shards.clone();
+        let entries = self.index.entries.clone();
+        let config = self.config.clone();
+        let orders: Vec<Vec<usize>> = match config.repeats {
+            Some(n) => (0..n).map(|e| self.epoch_order(e)).collect(),
+            None => Vec::new(), // generated on the fly below
+        };
+        let dataset_for_infinite = if config.repeats.is_none() {
+            Some((self.index.clone(), self.shards.len()))
+        } else {
+            None
+        };
+        let this_config = config.clone();
+        let handle = std::thread::spawn(move || {
+            prefetch_loop(tx, shards, entries, orders, dataset_for_infinite, this_config)
+        });
+        GroupStream { rx, _handle: handle }
+    }
+}
+
+struct Prefetched {
+    entry: GroupIndexEntry,
+    source: GroupSource,
+}
+
+fn prefetch_loop(
+    tx: SyncSender<Result<Prefetched>>,
+    shards: Vec<PathBuf>,
+    entries: Vec<GroupIndexEntry>,
+    orders: Vec<Vec<usize>>,
+    infinite: Option<(GroupIndex, usize)>,
+    config: StreamingConfig,
+) {
+    // Persistent per-shard raw file handles: extents are read with
+    // positioned reads (`read_exact_at`), so no per-group open/seek
+    // syscalls and no reader state to maintain (§Perf L3-2: the previous
+    // implementation re-opened the shard file for every group).
+    let mut files: Vec<Option<std::fs::File>> = (0..shards.len()).map(|_| None).collect();
+
+    let mut fetch = |gi: usize| -> Result<Prefetched> {
+        use std::os::unix::fs::FileExt;
+        let e = &entries[gi];
+        let shard = e.shard as usize;
+        let file = match &mut files[shard] {
+            Some(f) => f,
+            slot => {
+                *slot = Some(std::fs::File::open(&shards[shard])?);
+                slot.as_mut().unwrap()
+            }
+        };
+        if e.bytes <= config.prefetch_cap_bytes {
+            // Read the whole extent's framed bytes in one positioned read.
+            let mut raw = vec![0u8; e.bytes as usize];
+            file.read_exact_at(&mut raw, e.offset)
+                .map_err(|err| anyhow::anyhow!("shard truncated mid-extent: {err}"))?;
+            Ok(Prefetched { entry: e.clone(), source: GroupSource::Buffer(raw) })
+        } else {
+            // Too large to buffer: hand the consumer its own positioned reader.
+            let mut r = RecordReader::open(&shards[shard])?;
+            r.seek_to(e.offset)?;
+            Ok(Prefetched {
+                entry: e.clone(),
+                source: GroupSource::File { reader: r, remaining: e.num_examples },
+            })
+        }
+    };
+
+    match infinite {
+        None => {
+            for order in orders {
+                for gi in order {
+                    let item = fetch(gi);
+                    let failed = item.is_err();
+                    if tx.send(item).is_err() || failed {
+                        return; // consumer dropped or error delivered
+                    }
+                }
+            }
+        }
+        Some((index, _nshards)) => {
+            // Infinite repeat: regenerate each epoch's order lazily.
+            let ds = StreamingDataset {
+                shards: shards.clone(),
+                index,
+                config: config.clone(),
+            };
+            let mut epoch = 0usize;
+            loop {
+                for gi in ds.epoch_order(epoch) {
+                    let item = fetch(gi);
+                    let failed = item.is_err();
+                    if tx.send(item).is_err() || failed {
+                        return;
+                    }
+                }
+                epoch += 1;
+            }
+        }
+    }
+}
+
+/// The consumer side: an iterator of [`StreamedGroup`]s.
+pub struct GroupStream {
+    rx: Receiver<Result<Prefetched>>,
+    _handle: JoinHandle<()>,
+}
+
+impl Iterator for GroupStream {
+    type Item = Result<StreamedGroup>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        match self.rx.recv() {
+            Err(_) => None, // prefetcher finished
+            Ok(Err(e)) => Some(Err(e)),
+            Ok(Ok(p)) => Some(Ok(StreamedGroup {
+                key: p.entry.key,
+                num_examples: p.entry.num_examples,
+                words: p.entry.words,
+                source: p.source,
+            })),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
+    use crate::pipeline::{run_partition, FeatureKey, PartitionOptions};
+
+    fn materialize(name: &str, groups: usize) -> (PathBuf, SyntheticTextDataset) {
+        let dir = std::env::temp_dir().join("grouper_streaming_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = DatasetSpec::fedccnews_mini(groups, 21);
+        spec.max_group_words = 1200;
+        let ds = SyntheticTextDataset::new(spec);
+        run_partition(
+            &ds,
+            &FeatureKey::new("domain"),
+            &dir,
+            "s",
+            &PartitionOptions { num_shards: 4, num_workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        (dir, ds)
+    }
+
+    #[test]
+    fn sequential_stream_covers_everything_once() {
+        let (dir, ds) = materialize("cover", 20);
+        let sd = StreamingDataset::open(&dir, "s", StreamingConfig::sequential()).unwrap();
+        assert_eq!(sd.num_groups(), 20);
+        let mut seen_groups = 0;
+        let mut seen_examples = 0u64;
+        for g in sd.stream() {
+            let mut g = g.unwrap();
+            seen_groups += 1;
+            g.for_each_example(|_| {
+                seen_examples += 1;
+                true
+            })
+            .unwrap();
+        }
+        assert_eq!(seen_groups, 20);
+        assert_eq!(seen_examples as usize, ds.len());
+    }
+
+    #[test]
+    fn group_contents_match_oracle() {
+        let (dir, ds) = materialize("oracle", 12);
+        let sd = StreamingDataset::open(&dir, "s", StreamingConfig::sequential()).unwrap();
+        let mut by_key: std::collections::HashMap<Vec<u8>, Vec<Vec<u8>>> = Default::default();
+        for g in sd.stream() {
+            let mut g = g.unwrap();
+            let key = g.key.clone();
+            let ex = g.examples().unwrap();
+            by_key.insert(key, ex.into_iter().map(|e| e.encode()).collect());
+        }
+        for gi in 0..12 {
+            let key = ds.spec.group_key(gi).into_bytes();
+            let want: Vec<_> = ds.group_examples_iter(gi).map(|e| e.encode()).collect();
+            assert_eq!(by_key.get(&key).unwrap(), &want, "group {gi}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation_and_seed_dependent() {
+        let (dir, _) = materialize("shuffle", 30);
+        let order_with = |seed| {
+            let cfg = StreamingConfig { shuffle_buffer: 8, seed, ..Default::default() };
+            let sd = StreamingDataset::open(&dir, "s", cfg).unwrap();
+            sd.stream().map(|g| g.unwrap().key).collect::<Vec<_>>()
+        };
+        let a = order_with(1);
+        let b = order_with(1);
+        let c = order_with(2);
+        assert_eq!(a, b, "same seed must reproduce");
+        assert_ne!(a, c, "different seeds must differ");
+        let mut sa = a.clone();
+        let mut sc = c.clone();
+        sa.sort();
+        sc.sort();
+        assert_eq!(sa, sc, "shuffle must be a permutation");
+        assert_eq!(a.len(), 30);
+    }
+
+    #[test]
+    fn repeats_multiply_the_stream() {
+        let (dir, _) = materialize("repeat", 10);
+        let cfg = StreamingConfig { repeats: Some(3), shuffle_buffer: 4, ..Default::default() };
+        let sd = StreamingDataset::open(&dir, "s", cfg).unwrap();
+        let keys: Vec<_> = sd.stream().map(|g| g.unwrap().key).collect();
+        assert_eq!(keys.len(), 30);
+        let mut counts: std::collections::HashMap<&Vec<u8>, usize> = Default::default();
+        for k in &keys {
+            *counts.entry(k).or_default() += 1;
+        }
+        assert!(counts.values().all(|&c| c == 3));
+    }
+
+    #[test]
+    fn early_drop_of_stream_is_clean() {
+        let (dir, _) = materialize("drop", 20);
+        let sd = StreamingDataset::open(&dir, "s", StreamingConfig::sequential()).unwrap();
+        let mut stream = sd.stream();
+        let _first = stream.next().unwrap().unwrap();
+        drop(stream); // prefetcher must exit without panicking
+    }
+
+    #[test]
+    fn early_stop_within_group() {
+        let (dir, _) = materialize("stop", 8);
+        let sd = StreamingDataset::open(&dir, "s", StreamingConfig::sequential()).unwrap();
+        for g in sd.stream() {
+            let mut g = g.unwrap();
+            let mut n = 0;
+            g.for_each_example(|_| {
+                n += 1;
+                n < 2 // stop after 2
+            })
+            .unwrap();
+            assert!(n <= 2);
+        }
+    }
+
+    #[test]
+    fn large_extents_use_file_fallback() {
+        let (dir, ds) = materialize("fallback", 10);
+        let cfg = StreamingConfig {
+            prefetch_cap_bytes: 64, // force the File path for all groups
+            shuffle_buffer: 0,
+            ..Default::default()
+        };
+        let sd = StreamingDataset::open(&dir, "s", cfg).unwrap();
+        let mut total = 0u64;
+        for g in sd.stream() {
+            let mut g = g.unwrap();
+            assert!(matches!(g.source, GroupSource::File { .. }));
+            g.for_each_example(|_| {
+                total += 1;
+                true
+            })
+            .unwrap();
+        }
+        assert_eq!(total as usize, ds.len());
+    }
+
+    #[test]
+    fn infinite_repeat_streams_beyond_one_epoch() {
+        let (dir, _) = materialize("inf", 6);
+        let cfg = StreamingConfig { repeats: None, shuffle_buffer: 3, ..Default::default() };
+        let sd = StreamingDataset::open(&dir, "s", cfg).unwrap();
+        let keys: Vec<_> = sd.stream().take(20).map(|g| g.unwrap().key).collect();
+        assert_eq!(keys.len(), 20);
+    }
+
+    #[test]
+    fn interleave_mixes_shards() {
+        let (dir, _) = materialize("interleave", 40);
+        let cfg = StreamingConfig { interleave: 4, shuffle_buffer: 0, ..Default::default() };
+        let sd = StreamingDataset::open(&dir, "s", cfg).unwrap();
+        // Map keys back to shards via the index.
+        let shard_of: std::collections::HashMap<Vec<u8>, u32> = sd
+            .index()
+            .entries
+            .iter()
+            .map(|e| (e.key.clone(), e.shard))
+            .collect();
+        let shards_in_order: Vec<u32> = sd
+            .stream()
+            .map(|g| shard_of[&g.unwrap().key])
+            .collect();
+        // The first few items must not all come from one shard.
+        let head: std::collections::HashSet<u32> =
+            shards_in_order.iter().take(4).copied().collect();
+        assert!(head.len() >= 2, "no interleaving: {shards_in_order:?}");
+    }
+}

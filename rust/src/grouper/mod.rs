@@ -1,0 +1,173 @@
+//! The user-facing Dataset Grouper API, mirroring the paper's Listing 1/2:
+//! partition a base dataset with a `get_key_fn`, then open the
+//! materialization as a `PartitionedDataset` and iterate its group stream
+//! (optionally batched into cohorts, as FL training does).
+
+pub mod stats;
+
+pub use stats::{dataset_statistics, DatasetStatistics};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::corpus::BaseDataset;
+use crate::formats::streaming::{GroupStream, StreamedGroup, StreamingConfig, StreamingDataset};
+use crate::pipeline::{run_partition, GroupIndex, PartitionOptions, PartitionReport, Partitioner};
+
+/// Listing-1 analogue: partition `dataset` by `get_key_fn` into
+/// `dir/<prefix>-*.tfrecord` (+ group index), returning the run report.
+pub fn partition_dataset(
+    dataset: &dyn BaseDataset,
+    get_key_fn: &dyn Partitioner,
+    dir: &Path,
+    prefix: &str,
+    options: &PartitionOptions,
+) -> Result<PartitionReport> {
+    run_partition(dataset, get_key_fn, dir, prefix, options)
+}
+
+/// Listing-2 analogue: a materialized group-structured dataset.
+pub struct PartitionedDataset {
+    dir: PathBuf,
+    prefix: String,
+    index: GroupIndex,
+}
+
+impl PartitionedDataset {
+    pub fn open(dir: &Path, prefix: &str) -> Result<Self> {
+        let index = GroupIndex::read(dir.join(format!("{prefix}.gindex")))?;
+        Ok(PartitionedDataset { dir: dir.to_path_buf(), prefix: prefix.to_string(), index })
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.index.num_groups()
+    }
+
+    pub fn num_examples(&self) -> u64 {
+        self.index.total_examples()
+    }
+
+    pub fn total_words(&self) -> u64 {
+        self.index.total_words()
+    }
+
+    pub fn index(&self) -> &GroupIndex {
+        &self.index
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn prefix(&self) -> &str {
+        &self.prefix
+    }
+
+    /// `build_group_stream()`: the nested iterator of Listing 2 — an
+    /// iterator of group datasets, each an iterator of examples.
+    pub fn build_group_stream(&self, config: StreamingConfig) -> Result<GroupStream> {
+        Ok(StreamingDataset::open(&self.dir, &self.prefix, config)?.stream())
+    }
+
+    /// Cohort batching: FL "processes cohorts of clients ... achieved by
+    /// applying a batch operation on the client stream" (Appendix A.1).
+    pub fn build_cohort_stream(
+        &self,
+        config: StreamingConfig,
+        cohort_size: usize,
+    ) -> Result<CohortStream> {
+        assert!(cohort_size > 0);
+        Ok(CohortStream { inner: self.build_group_stream(config)?, cohort_size })
+    }
+}
+
+/// Batches the group stream into fixed-size cohorts (last partial cohort
+/// of a finite stream is dropped, matching windowed FL training).
+pub struct CohortStream {
+    inner: GroupStream,
+    cohort_size: usize,
+}
+
+impl Iterator for CohortStream {
+    type Item = Result<Vec<StreamedGroup>>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let mut cohort = Vec::with_capacity(self.cohort_size);
+        for g in self.inner.by_ref() {
+            match g {
+                Ok(g) => cohort.push(g),
+                Err(e) => return Some(Err(e)),
+            }
+            if cohort.len() == self.cohort_size {
+                return Some(Ok(cohort));
+            }
+        }
+        None // drop partial tail cohort
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{DatasetSpec, SyntheticTextDataset};
+    use crate::pipeline::FeatureKey;
+
+    fn materialize() -> (PathBuf, usize) {
+        let dir = std::env::temp_dir().join("grouper_api_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = DatasetSpec::fedwiki_mini(23, 4);
+        spec.max_group_words = 300;
+        let ds = SyntheticTextDataset::new(spec);
+        partition_dataset(
+            &ds,
+            &FeatureKey::new("article"),
+            &dir,
+            "wiki",
+            &PartitionOptions { num_shards: 3, num_workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        (dir, 23)
+    }
+
+    #[test]
+    fn open_and_stream() {
+        let (dir, n) = materialize();
+        let pd = PartitionedDataset::open(&dir, "wiki").unwrap();
+        assert_eq!(pd.num_groups(), n);
+        assert!(pd.total_words() > 0);
+        let groups: Vec<_> = pd
+            .build_group_stream(StreamingConfig::sequential())
+            .unwrap()
+            .collect::<Result<Vec<_>>>()
+            .unwrap();
+        assert_eq!(groups.len(), n);
+    }
+
+    #[test]
+    fn cohorts_are_full_and_partial_dropped() {
+        let (dir, n) = materialize(); // 23 groups
+        let pd = PartitionedDataset::open(&dir, "wiki").unwrap();
+        let cohorts: Vec<_> = pd
+            .build_cohort_stream(StreamingConfig::sequential(), 5)
+            .unwrap()
+            .collect::<Result<Vec<_>>>()
+            .unwrap();
+        assert_eq!(cohorts.len(), n / 5);
+        assert!(cohorts.iter().all(|c| c.len() == 5));
+    }
+
+    #[test]
+    fn infinite_stream_supplies_unlimited_cohorts() {
+        let (dir, _) = materialize();
+        let pd = PartitionedDataset::open(&dir, "wiki").unwrap();
+        let cfg = StreamingConfig { repeats: None, shuffle_buffer: 8, ..Default::default() };
+        let cohorts: Vec<_> = pd
+            .build_cohort_stream(cfg, 16)
+            .unwrap()
+            .take(10)
+            .collect::<Result<Vec<_>>>()
+            .unwrap();
+        assert_eq!(cohorts.len(), 10); // > one epoch's worth of groups
+    }
+}

@@ -1,0 +1,113 @@
+//! Dataset statistics — the engine behind Tables 1/6/7 and Figures 1/9.
+//!
+//! Everything is computed from the group index (words/examples per group)
+//! plus one streaming pass for per-example word counts, so statistics
+//! never require the dataset in memory.
+
+use anyhow::Result;
+
+use crate::formats::streaming::{StreamingConfig, StreamingDataset};
+use crate::metrics::percentile::Summary;
+use crate::pipeline::GroupIndex;
+
+/// The per-dataset row of Tables 1/6/7.
+#[derive(Debug, Clone)]
+pub struct DatasetStatistics {
+    pub name: String,
+    pub group_by: String,
+    pub num_groups: usize,
+    pub num_examples: u64,
+    pub total_words: u64,
+    /// Words per group distribution (Table 6).
+    pub words_per_group: Summary,
+    /// Examples per group distribution.
+    pub examples_per_group: Summary,
+    /// Words per example distribution (Table 7) — needs a data pass.
+    pub words_per_example: Option<Summary>,
+}
+
+/// Index-only statistics (no data pass).
+pub fn stats_from_index(name: &str, group_by: &str, index: &GroupIndex) -> DatasetStatistics {
+    let wpg: Vec<f64> = index.entries.iter().map(|e| e.words as f64).collect();
+    let epg: Vec<f64> = index.entries.iter().map(|e| e.num_examples as f64).collect();
+    DatasetStatistics {
+        name: name.to_string(),
+        group_by: group_by.to_string(),
+        num_groups: index.num_groups(),
+        num_examples: index.total_examples(),
+        total_words: index.total_words(),
+        words_per_group: Summary::of(&wpg),
+        examples_per_group: Summary::of(&epg),
+        words_per_example: None,
+    }
+}
+
+/// Full statistics, including the per-example pass (streamed).
+pub fn dataset_statistics(
+    dir: &std::path::Path,
+    prefix: &str,
+    name: &str,
+    group_by: &str,
+) -> Result<DatasetStatistics> {
+    let sd = StreamingDataset::open(dir, prefix, StreamingConfig::sequential())?;
+    let mut stats = stats_from_index(name, group_by, sd.index());
+    let mut wpe: Vec<f64> = Vec::with_capacity(stats.num_examples as usize);
+    for g in sd.stream() {
+        let mut g = g?;
+        g.for_each_example(|ex| {
+            let words = ex.get_str("text").map(crate::corpus::word_count).unwrap_or(0);
+            wpe.push(words as f64);
+            true
+        })?;
+    }
+    if !wpe.is_empty() {
+        stats.words_per_example = Some(Summary::of(&wpe));
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
+    use crate::pipeline::{run_partition, FeatureKey, PartitionOptions};
+
+    #[test]
+    fn stats_match_generator_ground_truth() {
+        let dir = std::env::temp_dir().join("grouper_stats_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = DatasetSpec::fedccnews_mini(40, 2);
+        spec.max_group_words = 2000;
+        let ds = SyntheticTextDataset::new(spec.clone());
+        run_partition(
+            &ds,
+            &FeatureKey::new("domain"),
+            &dir,
+            "news",
+            &PartitionOptions { num_shards: 4, num_workers: 2, ..Default::default() },
+        )
+        .unwrap();
+
+        let stats = dataset_statistics(&dir, "news", "fedccnews-mini", "Domain").unwrap();
+        assert_eq!(stats.num_groups, 40);
+        assert_eq!(stats.num_examples as usize, ds.len());
+        let want_words: u64 = (0..40).map(|g| spec.group_words(g) as u64).sum();
+        assert_eq!(stats.total_words, want_words);
+
+        // Median words/group must equal the generator's median.
+        let mut sizes: Vec<f64> = (0..40).map(|g| spec.group_words(g) as f64).collect();
+        sizes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(stats.words_per_group.median, (sizes[19] + sizes[20]) / 2.0);
+
+        // Per-example pass: median tracks the spec's log-normal median.
+        let wpe = stats.words_per_example.unwrap();
+        let median_target = spec.words_per_example.unwrap() as f64;
+        assert!(
+            wpe.median > median_target * 0.5 && wpe.median < median_target * 2.0,
+            "median {} vs target {}",
+            wpe.median,
+            median_target
+        );
+        assert_eq!(wpe.count as u64, stats.num_examples);
+    }
+}

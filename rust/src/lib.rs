@@ -1,0 +1,33 @@
+//! # grouper — scalable dataset pipelines for group-structured learning
+//!
+//! A from-scratch reproduction of *"Towards Federated Foundation Models:
+//! Scalable Dataset Pipelines for Group-Structured Learning"* (NeurIPS 2023)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: the Dataset
+//!   Grouper partitioning pipeline ([`pipeline`]), the three
+//!   group-structured dataset formats ([`formats`]), the federated
+//!   training coordinator ([`fed`]), plus every substrate they depend on
+//!   (TFRecord I/O, synthetic corpora, a WordPiece tokenizer, metrics).
+//! * **L2/L1 (python/, build-time only)** — a decoder-only transformer in
+//!   JAX whose attention and softmax-CE hot-spots are Pallas kernels,
+//!   AOT-lowered to HLO text artifacts.
+//! * **[`runtime`]** — loads those artifacts through the PJRT C API (`xla`
+//!   crate) and executes them from the Rust hot path. Python never runs at
+//!   request time.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every table/figure of the paper to a bench target, and
+//! `EXPERIMENTS.md` for measured results.
+
+pub mod config;
+pub mod corpus;
+pub mod fed;
+pub mod formats;
+pub mod grouper;
+pub mod metrics;
+pub mod pipeline;
+pub mod records;
+pub mod runtime;
+pub mod tokenizer;
+pub mod util;

@@ -1,0 +1,364 @@
+//! `grouper` — the Dataset Grouper CLI (leader entrypoint).
+//!
+//! Subcommands (a hand-rolled parser; the offline registry has no clap):
+//!
+//! ```text
+//! grouper partition --dataset fedc4-mini --groups 500 --out work/fedc4 [--by feature|random:N|dirichlet:A]
+//! grouper stats     --dir work/fedc4 --prefix data
+//! grouper vocab     --dataset fedc4-mini --groups 500 --size 1024 --out work/vocab.txt
+//! grouper train     --config configs/fig4_fedavg.toml
+//! grouper personalize --config configs/fig4_fedavg.toml
+//! grouper info      [--artifacts artifacts]
+//! ```
+//!
+//! Experiment regeneration lives in `cargo bench --bench <table|figure>`;
+//! the CLI is the interactive/production surface over the same library.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use grouper::config::ExperimentConfig;
+use grouper::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
+use grouper::fed::trainer::build_eval_clients;
+use grouper::fed::{personalization_eval, train, TrainerConfig};
+use grouper::grouper::{dataset_statistics, partition_dataset, PartitionedDataset};
+use grouper::pipeline::{
+    DirichletPartitioner, FeatureKey, PartitionOptions, Partitioner, RandomPartitioner,
+};
+use grouper::runtime::{ModelBackend, ModelRuntime};
+use grouper::tokenizer::{VocabBuilder, WordPiece};
+use grouper::util::humanize;
+use grouper::util::table::Table;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let Some((cmd, rest)) = args.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = Flags::parse(rest)?;
+    match cmd.as_str() {
+        "partition" => cmd_partition(&flags),
+        "stats" => cmd_stats(&flags),
+        "vocab" => cmd_vocab(&flags),
+        "train" => cmd_train(&flags, false),
+        "personalize" => cmd_train(&flags, true),
+        "info" => cmd_info(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `grouper help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "grouper — scalable dataset pipelines for group-structured learning\n\n\
+         commands:\n\
+         \u{20}  partition    materialize a group-structured dataset\n\
+         \u{20}  stats        Table-1-style statistics of a materialization\n\
+         \u{20}  vocab        train a WordPiece vocabulary from a corpus\n\
+         \u{20}  train        federated training (FedAvg/FedSGD) per a TOML config\n\
+         \u{20}  personalize  train + pre/post-personalization eval (Table 5)\n\
+         \u{20}  info         show exported artifact/model information\n\n\
+         see README.md for flags and examples"
+    );
+}
+
+/// Tiny `--key value` flag parser.
+struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut m = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = args[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {:?}", args[i]))?;
+            let v = args.get(i + 1).with_context(|| format!("--{k} needs a value"))?;
+            m.insert(k.to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Flags(m))
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.0.get(k).map(|s| s.as_str())
+    }
+
+    fn get_or<'a>(&'a self, k: &str, default: &'a str) -> &'a str {
+        self.get(k).unwrap_or(default)
+    }
+
+    fn usize_or(&self, k: &str, default: usize) -> Result<usize> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{k} must be an integer")),
+        }
+    }
+
+    fn required(&self, k: &str) -> Result<&str> {
+        self.get(k).with_context(|| format!("missing required flag --{k}"))
+    }
+}
+
+fn make_dataset(name: &str, groups: usize, seed: u64) -> Result<SyntheticTextDataset> {
+    let spec = match name {
+        "fedc4-mini" => DatasetSpec::fedc4_mini(groups, seed),
+        "fedwiki-mini" => DatasetSpec::fedwiki_mini(groups, seed),
+        "fedbookco-mini" => DatasetSpec::fedbookco_mini(groups, seed),
+        "fedccnews-mini" => DatasetSpec::fedccnews_mini(groups, seed),
+        other => bail!("unknown dataset {other:?}"),
+    };
+    Ok(SyntheticTextDataset::new(spec))
+}
+
+fn make_partitioner(spec: &str, key_feature: &str, seed: u64) -> Result<Box<dyn Partitioner>> {
+    if spec == "feature" {
+        return Ok(Box::new(FeatureKey::new(key_feature)));
+    }
+    if let Some(n) = spec.strip_prefix("random:") {
+        return Ok(Box::new(RandomPartitioner::new(n.parse()?, seed)));
+    }
+    if let Some(a) = spec.strip_prefix("dirichlet:") {
+        return Ok(Box::new(DirichletPartitioner::new(a.parse()?, 10_000, seed)));
+    }
+    bail!("--by must be feature | random:N | dirichlet:ALPHA")
+}
+
+fn cmd_partition(f: &Flags) -> Result<()> {
+    let name = f.get_or("dataset", "fedc4-mini");
+    let groups = f.usize_or("groups", 500)?;
+    let seed = f.usize_or("seed", 42)? as u64;
+    let out = PathBuf::from(f.required("out")?);
+    let prefix = f.get_or("prefix", "data").to_string();
+    let shards = f.usize_or("shards", 8)?;
+    let workers = f.usize_or("workers", 0)?;
+
+    let ds = make_dataset(name, groups, seed)?;
+    let p = make_partitioner(f.get_or("by", "feature"), ds.spec.key_feature, seed)?;
+    let mut opts = PartitionOptions { num_shards: shards, ..Default::default() };
+    if workers > 0 {
+        opts.num_workers = workers;
+    }
+    println!(
+        "partitioning {name} ({} groups, {} examples) by {} into {}",
+        groups,
+        ds.len(),
+        p.name(),
+        out.display()
+    );
+    let report = partition_dataset(&ds, p.as_ref(), &out, &prefix, &opts)?;
+    println!(
+        "done: {} examples -> {} groups, {} words, map {:.2}s group {:.2}s ({:.2}s total)",
+        report.num_examples,
+        report.num_groups,
+        humanize::count(report.total_words as f64),
+        report.map_secs,
+        report.group_secs,
+        report.wall_secs
+    );
+    Ok(())
+}
+
+fn cmd_stats(f: &Flags) -> Result<()> {
+    let dir = PathBuf::from(f.required("dir")?);
+    let prefix = f.get_or("prefix", "data");
+    let stats = dataset_statistics(&dir, prefix, prefix, "-")?;
+    let mut t = Table::new(
+        &format!("Statistics of {}/{}", dir.display(), prefix),
+        &["metric", "value"],
+    );
+    t.row(vec!["groups".into(), format!("{}", stats.num_groups)]);
+    t.row(vec!["examples".into(), humanize::count(stats.num_examples as f64)]);
+    t.row(vec!["words".into(), humanize::count(stats.total_words as f64)]);
+    let w = &stats.words_per_group;
+    t.row(vec![
+        "words/group p10/p50/p90".into(),
+        format!(
+            "{} / {} / {}",
+            humanize::count(w.p10),
+            humanize::count(w.median),
+            humanize::count(w.p90)
+        ),
+    ]);
+    if let Some(e) = &stats.words_per_example {
+        t.row(vec![
+            "words/example p10/p50/p90".into(),
+            format!(
+                "{} / {} / {}",
+                humanize::count(e.p10),
+                humanize::count(e.median),
+                humanize::count(e.p90)
+            ),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_vocab(f: &Flags) -> Result<()> {
+    let name = f.get_or("dataset", "fedc4-mini");
+    let groups = f.usize_or("groups", 200)?;
+    let size = f.usize_or("size", 1024)?;
+    let seed = f.usize_or("seed", 42)? as u64;
+    let out = PathBuf::from(f.required("out")?);
+    let ds = make_dataset(name, groups, seed)?;
+    let mut vb = VocabBuilder::new();
+    for text in ds.stream_all_text() {
+        vb.feed(&text);
+    }
+    let wp = vb.build(size);
+    wp.save(&out)?;
+    println!(
+        "vocab of {size} tokens from {} words ({} distinct) -> {}",
+        vb.total_words(),
+        vb.distinct_words(),
+        out.display()
+    );
+    Ok(())
+}
+
+/// Shared train/personalize flow driven by an ExperimentConfig.
+fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
+    let cfg = match f.get("config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    println!("experiment {:?}: model={} data={}", cfg.name, cfg.model, cfg.data.dataset);
+
+    // 1. Materialize train (+ eval) splits if absent.
+    let work = PathBuf::from(&cfg.work_dir).join(&cfg.name);
+    let ds = make_dataset(&cfg.data.dataset, cfg.data.num_groups, cfg.data.seed)?;
+    if !work.join("train.gindex").exists() {
+        println!("materializing train split into {}", work.display());
+        partition_dataset(
+            &ds,
+            &FeatureKey::new(ds.spec.key_feature),
+            &work,
+            "train",
+            &PartitionOptions { num_shards: cfg.data.num_shards, ..Default::default() },
+        )?;
+    }
+    let eval_ds = make_dataset(
+        &cfg.data.dataset,
+        cfg.data.num_eval_groups,
+        cfg.data.seed ^ 0x5EED_E7A1,
+    )?;
+    if !work.join("eval.gindex").exists() {
+        partition_dataset(
+            &eval_ds,
+            &FeatureKey::new(eval_ds.spec.key_feature),
+            &work,
+            "eval",
+            &PartitionOptions { num_shards: cfg.data.num_shards, ..Default::default() },
+        )?;
+    }
+
+    // 2. Load runtime + vocabulary sized to the model.
+    let rt = ModelRuntime::load(Path::new(&cfg.artifacts_dir), &cfg.model)?;
+    println!(
+        "runtime up: platform={} param tensors={}",
+        rt.platform(),
+        rt.num_param_tensors()
+    );
+    let vocab_path = work.join("vocab.txt");
+    let wp = if vocab_path.exists() {
+        WordPiece::load(&vocab_path)?
+    } else {
+        let mut vb = VocabBuilder::new();
+        for text in ds.stream_all_text() {
+            vb.feed(&text);
+        }
+        let wp = vb.build(rt.vocab_size());
+        wp.save(&vocab_path)?;
+        wp
+    };
+
+    // 3. Train.
+    let train_pd = PartitionedDataset::open(&work, "train")?;
+    let mut tc = TrainerConfig::new(cfg.fed.clone());
+    tc.log_every = (cfg.fed.rounds / 20).max(1);
+    let out = train(&rt, &train_pd, &wp, &tc)?;
+    println!("final train loss: {:.4}", out.final_loss());
+
+    // Persist the loss curve.
+    std::fs::create_dir_all("results")?;
+    let curve: Vec<Vec<f64>> = out
+        .rounds
+        .iter()
+        .map(|r| vec![r.round as f64, r.train_loss as f64, r.lr as f64])
+        .collect();
+    grouper::util::table::write_series_csv(
+        format!("results/{}_loss.csv", cfg.name),
+        &["round", "loss", "lr"],
+        &curve,
+    )?;
+
+    // 4. Optional personalization eval (Table 5 semantics).
+    if personalize {
+        let eval_pd = PartitionedDataset::open(&work, "eval")?;
+        let clients =
+            build_eval_clients(&eval_pd, &wp, &rt, cfg.fed.tau, cfg.data.num_eval_groups)?;
+        let res = personalization_eval(&rt, &out.params, &clients, cfg.fed.client_lr)?;
+        let pre = res.pre_summary();
+        let post = res.post_summary();
+        let mut t = Table::new(
+            &format!("Personalization ({} clients)", clients.len()),
+            &["metric", "10th perc.", "Median", "90th perc."],
+        );
+        t.row(vec![
+            "pre-personalization loss".into(),
+            format!("{:.3}", pre.p10),
+            format!("{:.3}", pre.median),
+            format!("{:.3}", pre.p90),
+        ]);
+        t.row(vec![
+            "post-personalization loss".into(),
+            format!("{:.3}", post.p10),
+            format!("{:.3}", post.median),
+            format!("{:.3}", post.p90),
+        ]);
+        t.print();
+        t.write_csv(format!("results/{}_personalization.csv", cfg.name))?;
+    }
+    Ok(())
+}
+
+fn cmd_info(f: &Flags) -> Result<()> {
+    let dir = PathBuf::from(f.get_or("artifacts", "artifacts"));
+    for cfg in ["tiny", "small", "base"] {
+        match grouper::runtime::Manifest::load(&dir, cfg) {
+            Err(_) => println!("{cfg}: not exported"),
+            Ok(m) => {
+                println!(
+                    "{cfg}: vocab={} d_model={} layers={} seq={} batch={} params={} ({}), taus={:?}",
+                    m.meta["vocab_size"],
+                    m.meta["d_model"],
+                    m.meta["n_layers"],
+                    m.meta["seq_len"],
+                    m.meta["batch_size"],
+                    humanize::count(m.num_params() as f64),
+                    humanize::bytes(4 * m.num_params()),
+                    m.tau_variants(),
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,162 @@
+//! Fixed-bin histograms for Figures 5/7/11/13 (pre-/post-personalization
+//! loss distributions across clients) with log-scale support for Figure 1.
+
+/// Equal-width histogram over [lo, hi]; out-of-range values clamp to the
+/// edge bins (the paper's loss histograms have finite axes).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub n: u64,
+    /// Bin values in log10 space (Figure 1's per-group-size axes).
+    pub log_scale: bool,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo);
+        Histogram { lo, hi, counts: vec![0; bins], n: 0, log_scale: false }
+    }
+
+    pub fn new_log10(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo);
+        Histogram { lo: lo.log10(), hi: hi.log10(), counts: vec![0; bins], n: 0, log_scale: true }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let x = if self.log_scale {
+            if x <= 0.0 {
+                self.lo
+            } else {
+                x.log10()
+            }
+        } else {
+            x
+        };
+        let bins = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let i = ((t * bins as f64).floor() as i64).clamp(0, bins as i64 - 1) as usize;
+        self.counts[i] += 1;
+        self.n += 1;
+    }
+
+    pub fn add_all(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    /// Bin centers in data space.
+    pub fn centers(&self) -> Vec<f64> {
+        let bins = self.counts.len();
+        let w = (self.hi - self.lo) / bins as f64;
+        (0..bins)
+            .map(|i| {
+                let c = self.lo + (i as f64 + 0.5) * w;
+                if self.log_scale {
+                    10f64.powf(c)
+                } else {
+                    c
+                }
+            })
+            .collect()
+    }
+
+    /// Fraction of mass in each bin.
+    pub fn density(&self) -> Vec<f64> {
+        let n = self.n.max(1) as f64;
+        self.counts.iter().map(|&c| c as f64 / n).collect()
+    }
+
+    /// Fraction of mass at or below `x` — used to compare tails
+    /// ("post-personalization distribution for FedAvg is extremely
+    /// light-tailed", §5.2).
+    pub fn cdf_at(&self, x: f64) -> f64 {
+        let xv = if self.log_scale { x.max(1e-300).log10() } else { x };
+        let bins = self.counts.len();
+        let w = (self.hi - self.lo) / bins as f64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let right = self.lo + (i as f64 + 1.0) * w;
+            if right <= xv {
+                acc += c;
+            }
+        }
+        acc as f64 / self.n.max(1) as f64
+    }
+
+    /// ASCII rendering for terminal reports.
+    pub fn render(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(0).max(1);
+        let centers = self.centers();
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width) / max as usize);
+            out.push_str(&format!("{:>12.3} | {:<width$} {}\n", centers[i], bar, c));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_clamping() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add_all(&[0.5, 1.5, 9.5, -5.0, 50.0]);
+        assert_eq!(h.n, 5);
+        assert_eq!(h.counts[0], 2); // 0.5 and clamped -5.0
+        assert_eq!(h.counts[9], 2); // 9.5 and clamped 50.0
+        assert_eq!(h.counts[1], 1);
+    }
+
+    #[test]
+    fn density_sums_to_one() {
+        let mut h = Histogram::new(0.0, 1.0, 7);
+        for i in 0..100 {
+            h.add(i as f64 / 100.0);
+        }
+        let s: f64 = h.density().iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_scale_bins() {
+        let mut h = Histogram::new_log10(1.0, 1e6, 6);
+        h.add(10.0);
+        h.add(1e5);
+        assert_eq!(h.counts[1], 1);
+        assert_eq!(h.counts[5], 1);
+        let centers = h.centers();
+        assert!(centers[0] > 1.0 && centers[0] < 10.0);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..100 {
+            h.add(i as f64 / 10.0);
+        }
+        let mut prev = -1.0;
+        for x in [1.0, 3.0, 5.0, 9.0, 10.0] {
+            let c = h.cdf_at(x);
+            assert!(c >= prev);
+            prev = c;
+        }
+        assert!((h.cdf_at(10.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_contains_bars() {
+        let mut h = Histogram::new(0.0, 1.0, 2);
+        h.add(0.1);
+        h.add(0.2);
+        h.add(0.9);
+        let s = h.render(10);
+        assert!(s.contains('#'));
+        assert_eq!(s.lines().count(), 2);
+    }
+}

@@ -1,0 +1,100 @@
+//! Letter-value summaries (Hofmann, Wickham & Kafadar [92]) — the
+//! boxplot-for-big-data behind the paper's Figure 9 (words per client
+//! across the four datasets).
+//!
+//! Letter values are successive tail quantiles: M (median), F (fourths,
+//! 25/75), E (eighths), D (sixteenths), ... stopping when the tail regions
+//! contain too few points to estimate reliably (the standard rule: stop
+//! when the depth falls below ~ log2(n) trustworthiness).
+
+use super::percentile::percentile_sorted;
+
+/// One letter-value level: label + lower/upper quantile values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LetterValue {
+    pub label: char,
+    /// Tail probability of this level (0.25 for F, 0.125 for E, ...).
+    pub tail: f64,
+    pub lower: f64,
+    pub upper: f64,
+}
+
+/// Compute letter values of `xs`. Returns (median, levels from F outward).
+pub fn letter_values(xs: &[f64]) -> (f64, Vec<LetterValue>) {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    let median = percentile_sorted(&v, 50.0);
+
+    // Number of levels per the letter-value rule: k = floor(log2 n) - 3,
+    // at least 1 (F) when n >= 2.
+    let max_levels = if n < 2 {
+        0
+    } else {
+        (((n as f64).log2()).floor() as i64 - 3).max(1) as usize
+    };
+    let labels = ['F', 'E', 'D', 'C', 'B', 'A', 'Z', 'Y', 'X', 'W'];
+    let mut out = Vec::new();
+    let mut tail = 0.25;
+    for i in 0..max_levels.min(labels.len()) {
+        out.push(LetterValue {
+            label: labels[i],
+            tail,
+            lower: percentile_sorted(&v, tail * 100.0),
+            upper: percentile_sorted(&v, (1.0 - tail) * 100.0),
+        });
+        tail /= 2.0;
+    }
+    (median, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{check, gen_vec, prop_assert};
+
+    #[test]
+    fn median_and_fourths() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let (m, lv) = letter_values(&xs);
+        assert!((m - 50.5).abs() < 1e-9);
+        assert_eq!(lv[0].label, 'F');
+        assert!((lv[0].lower - 25.75).abs() < 1e-9);
+        assert!((lv[0].upper - 75.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn level_count_grows_with_n() {
+        let small: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let big: Vec<f64> = (0..10_000).map(|i| i as f64).collect();
+        let (_, a) = letter_values(&small);
+        let (_, b) = letter_values(&big);
+        assert!(b.len() > a.len());
+    }
+
+    #[test]
+    fn nesting_property() {
+        // Each deeper letter value must contain the shallower one.
+        check(50, |rng| {
+            let xs = gen_vec(rng, 16..=500, |r| r.log_normal(3.0, 1.5));
+            let (m, lv) = letter_values(&xs);
+            let mut prev_lo = m;
+            let mut prev_hi = m;
+            for l in &lv {
+                prop_assert(l.lower <= prev_lo + 1e-9, "lower not nested")?;
+                prop_assert(l.upper >= prev_hi - 1e-9, "upper not nested")?;
+                prev_lo = l.lower;
+                prev_hi = l.upper;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_point() {
+        let (m, lv) = letter_values(&[7.0]);
+        assert_eq!(m, 7.0);
+        assert!(lv.is_empty());
+    }
+}

@@ -1,0 +1,14 @@
+//! Statistics for the paper's tables and figures: percentiles (Tables
+//! 1/5/6/7), histograms (Figures 5/7/11/13), letter-value plots (Figure
+//! 9), Q-Q analysis vs a normal distribution (Figure 3), and loss-curve
+//! bookkeeping (Figures 4/6/8).
+
+pub mod histogram;
+pub mod letter_values;
+pub mod percentile;
+pub mod qq;
+
+pub use histogram::Histogram;
+pub use letter_values::letter_values;
+pub use percentile::{percentile, percentiles, Summary};
+pub use qq::{normal_quantile, qq_points, QqFit};

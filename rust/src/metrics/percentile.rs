@@ -1,0 +1,137 @@
+//! Percentiles and distribution summaries (the 10th/25th/50th/75th/90th
+//! columns of Tables 1, 6, 7 and the quantile rows of Table 5).
+
+/// Linear-interpolated percentile of unsorted data, `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Same, for pre-sorted data (no copy).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty data");
+    assert!((0.0..=100.0).contains(&p));
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Several percentiles in one sort.
+pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ps.iter().map(|&p| percentile_sorted(&v, p)).collect()
+}
+
+/// The paper's standard per-distribution summary row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub total: f64,
+    pub mean: f64,
+    pub p10: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub p90: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "summary of empty data");
+        let mut v: Vec<f64> = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let total: f64 = v.iter().sum();
+        Summary {
+            count: v.len(),
+            total,
+            mean: total / v.len() as f64,
+            p10: percentile_sorted(&v, 10.0),
+            p25: percentile_sorted(&v, 25.0),
+            median: percentile_sorted(&v, 50.0),
+            p75: percentile_sorted(&v, 75.0),
+            p90: percentile_sorted(&v, 90.0),
+            min: v[0],
+            max: v[v.len() - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{check, gen_vec, prop_assert};
+
+    #[test]
+    fn single_element() {
+        assert_eq!(percentile(&[5.0], 0.0), 5.0);
+        assert_eq!(percentile(&[5.0], 100.0), 5.0);
+        assert_eq!(percentile(&[5.0], 50.0), 5.0);
+    }
+
+    #[test]
+    fn interpolation() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        assert!((percentile(&xs, 25.0) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unsorted_input_ok() {
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 50.0), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_panics() {
+        percentile(&[], 50.0);
+    }
+
+    #[test]
+    fn summary_consistency() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.count, 5);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.total, 15.0);
+    }
+
+    #[test]
+    fn percentile_monotone_property() {
+        check(100, |rng| {
+            let xs = gen_vec(rng, 1..=50, |r| r.next_f64() * 1000.0);
+            let p1 = rng.next_f64() * 100.0;
+            let p2 = rng.next_f64() * 100.0;
+            let (lo, hi) = if p1 < p2 { (p1, p2) } else { (p2, p1) };
+            prop_assert(
+                percentile(&xs, lo) <= percentile(&xs, hi) + 1e-9,
+                "percentile not monotone in p",
+            )
+        });
+    }
+
+    #[test]
+    fn percentile_within_range_property() {
+        check(100, |rng| {
+            let xs = gen_vec(rng, 1..=50, |r| r.next_f64() * 10.0 - 5.0);
+            let p = rng.next_f64() * 100.0;
+            let v = percentile(&xs, p);
+            let mn = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+            let mx = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            prop_assert(v >= mn - 1e-9 && v <= mx + 1e-9, "percentile outside data range")
+        });
+    }
+}

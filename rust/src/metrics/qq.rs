@@ -1,0 +1,146 @@
+//! Q-Q analysis against the standard normal — Figure 3's "per-group sizes
+//! are log-normal" evidence. We compute (Phi^-1(p_i), log-quantile_i)
+//! pairs and the least-squares line fit; near-unity R^2 is the paper's
+//! "nearly straight line in the Q-Q plot".
+
+/// Inverse standard-normal CDF (Acklam's rational approximation,
+/// |relative error| < 1.15e-9 — far below plotting precision).
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "normal_quantile domain");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -((((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0))
+    }
+}
+
+/// Q-Q points of `xs` vs the standard normal: (theoretical, observed)
+/// using the Blom plotting positions (i - 0.375) / (n + 0.25).
+pub fn qq_points(xs: &[f64]) -> Vec<(f64, f64)> {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    v.iter()
+        .enumerate()
+        .map(|(i, &x)| {
+            let p = (i as f64 + 1.0 - 0.375) / (n as f64 + 0.25);
+            (normal_quantile(p), x)
+        })
+        .collect()
+}
+
+/// Least-squares line fit through Q-Q points with R^2 — the "how straight
+/// is the line" statistic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QqFit {
+    pub slope: f64,
+    pub intercept: f64,
+    pub r2: f64,
+}
+
+pub fn fit_line(points: &[(f64, f64)]) -> QqFit {
+    let n = points.len() as f64;
+    assert!(n >= 2.0);
+    let mx = points.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = points.iter().map(|p| p.1).sum::<f64>() / n;
+    let sxy: f64 = points.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+    let sxx: f64 = points.iter().map(|p| (p.0 - mx) * (p.0 - mx)).sum();
+    let syy: f64 = points.iter().map(|p| (p.1 - my) * (p.1 - my)).sum();
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    QqFit { slope, intercept, r2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quantile_symmetry_and_known_values() {
+        assert!((normal_quantile(0.5)).abs() < 1e-9);
+        assert!((normal_quantile(0.975) - 1.959964).abs() < 1e-5);
+        assert!((normal_quantile(0.9) - 1.281552).abs() < 1e-5);
+        for p in [0.001, 0.01, 0.1, 0.3, 0.7, 0.99, 0.999] {
+            assert!((normal_quantile(p) + normal_quantile(1.0 - p)).abs() < 1e-8, "{p}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "domain")]
+    fn quantile_rejects_zero() {
+        normal_quantile(0.0);
+    }
+
+    #[test]
+    fn gaussian_sample_fits_line() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.normal_with(2.0, 3.0)).collect();
+        let pts = qq_points(&xs);
+        let fit = fit_line(&pts);
+        assert!(fit.r2 > 0.995, "r2 {}", fit.r2);
+        assert!((fit.slope - 3.0).abs() < 0.15, "slope {}", fit.slope);
+        assert!((fit.intercept - 2.0).abs() < 0.15, "intercept {}", fit.intercept);
+    }
+
+    #[test]
+    fn lognormal_log_quantiles_fit_but_raw_do_not() {
+        // The paper's Figure 3 claim, in test form.
+        let mut rng = Rng::new(5);
+        let raw: Vec<f64> = (0..3000).map(|_| rng.log_normal(5.0, 1.5)).collect();
+        let logged: Vec<f64> = raw.iter().map(|x| x.ln()).collect();
+        let fit_log = fit_line(&qq_points(&logged));
+        let fit_raw = fit_line(&qq_points(&raw));
+        assert!(fit_log.r2 > 0.995, "log r2 {}", fit_log.r2);
+        assert!(fit_raw.r2 < 0.9, "raw r2 {} unexpectedly linear", fit_raw.r2);
+    }
+
+    #[test]
+    fn qq_points_sorted_and_sized() {
+        let pts = qq_points(&[3.0, 1.0, 2.0]);
+        assert_eq!(pts.len(), 3);
+        assert!(pts[0].0 < pts[1].0 && pts[1].0 < pts[2].0);
+        assert_eq!(pts[0].1, 1.0);
+        assert_eq!(pts[2].1, 3.0);
+    }
+}

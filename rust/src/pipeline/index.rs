@@ -1,0 +1,168 @@
+//! The group index: `group_key -> (shard, byte offset, example count,
+//! framed byte length, word count)`.
+//!
+//! This sidecar is what distinguishes the three formats' access patterns:
+//! the *hierarchical* format loads the index into memory and seeks per
+//! group; the *streaming* format walks each shard's entries in offset
+//! order; the statistics module aggregates over entries without touching
+//! the data shards at all.
+//!
+//! On-disk encoding: a magic header, then one length-prefixed entry per
+//! group (LE fixed-width fields). Entries are sorted by (shard, offset) —
+//! i.e. physical layout order — which both access patterns want.
+
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"GRPIDX01";
+
+/// One group's placement.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GroupIndexEntry {
+    pub key: Vec<u8>,
+    pub shard: u32,
+    pub offset: u64,
+    pub num_examples: u64,
+    /// Total framed bytes of the group's records (offset..offset+bytes is
+    /// the group's contiguous extent in the shard).
+    pub bytes: u64,
+    /// Whitespace words summed over the group's `text` features (0 for
+    /// non-text datasets) — powers Table 1/6/7 without re-reading data.
+    pub words: u64,
+}
+
+/// The full index of a materialized partitioned dataset.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GroupIndex {
+    pub entries: Vec<GroupIndexEntry>,
+}
+
+impl GroupIndex {
+    pub fn num_groups(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn total_examples(&self) -> u64 {
+        self.entries.iter().map(|e| e.num_examples).sum()
+    }
+
+    pub fn total_words(&self) -> u64 {
+        self.entries.iter().map(|e| e.words).sum()
+    }
+
+    /// Sort into physical layout order (shard, then offset).
+    pub fn sort_physical(&mut self) {
+        self.entries.sort_by(|a, b| (a.shard, a.offset).cmp(&(b.shard, b.offset)));
+    }
+
+    pub fn write<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.entries.len() as u64).to_le_bytes())?;
+        for e in &self.entries {
+            w.write_all(&(e.key.len() as u32).to_le_bytes())?;
+            w.write_all(&e.key)?;
+            w.write_all(&e.shard.to_le_bytes())?;
+            w.write_all(&e.offset.to_le_bytes())?;
+            w.write_all(&e.num_examples.to_le_bytes())?;
+            w.write_all(&e.bytes.to_le_bytes())?;
+            w.write_all(&e.words.to_le_bytes())?;
+        }
+        w.flush()
+    }
+
+    pub fn read<P: AsRef<Path>>(path: P) -> io::Result<GroupIndex> {
+        let mut r = BufReader::new(std::fs::File::open(&path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("bad index magic in {}", path.as_ref().display()),
+            ));
+        }
+        let mut n8 = [0u8; 8];
+        r.read_exact(&mut n8)?;
+        let n = u64::from_le_bytes(n8) as usize;
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut l4 = [0u8; 4];
+            r.read_exact(&mut l4)?;
+            let klen = u32::from_le_bytes(l4) as usize;
+            let mut key = vec![0u8; klen];
+            r.read_exact(&mut key)?;
+            let mut f4 = [0u8; 4];
+            let mut f8 = [0u8; 8];
+            r.read_exact(&mut f4)?;
+            let shard = u32::from_le_bytes(f4);
+            r.read_exact(&mut f8)?;
+            let offset = u64::from_le_bytes(f8);
+            r.read_exact(&mut f8)?;
+            let num_examples = u64::from_le_bytes(f8);
+            r.read_exact(&mut f8)?;
+            let bytes = u64::from_le_bytes(f8);
+            r.read_exact(&mut f8)?;
+            let words = u64::from_le_bytes(f8);
+            entries.push(GroupIndexEntry { key, shard, offset, num_examples, bytes, words });
+        }
+        Ok(GroupIndex { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{check, gen_bytes, gen_vec, prop_assert_eq};
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("grouper_index_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        check(50, |rng| {
+            let entries = gen_vec(rng, 0..=30, |r| GroupIndexEntry {
+                key: gen_bytes(r, 0..=40),
+                shard: r.next_u32() % 64,
+                offset: r.next_u64() % (1 << 40),
+                num_examples: r.next_u64() % 1000,
+                bytes: r.next_u64() % (1 << 40),
+                words: r.next_u64() % (1 << 30),
+            });
+            let idx = GroupIndex { entries };
+            let p = tmpfile(&format!("i{}.gindex", rng.next_u32()));
+            idx.write(&p).unwrap();
+            let back = GroupIndex::read(&p).unwrap();
+            std::fs::remove_file(&p).ok();
+            prop_assert_eq(back, idx, "index roundtrip")
+        });
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmpfile("bad.gindex");
+        std::fs::write(&p, b"NOTMAGIC\0\0\0\0\0\0\0\0").unwrap();
+        assert!(GroupIndex::read(&p).is_err());
+    }
+
+    #[test]
+    fn aggregates() {
+        let idx = GroupIndex {
+            entries: vec![
+                GroupIndexEntry { key: b"a".to_vec(), shard: 1, offset: 100, num_examples: 2, bytes: 50, words: 10 },
+                GroupIndexEntry { key: b"b".to_vec(), shard: 0, offset: 0, num_examples: 3, bytes: 70, words: 20 },
+            ],
+        };
+        assert_eq!(idx.num_groups(), 2);
+        assert_eq!(idx.total_examples(), 5);
+        assert_eq!(idx.total_words(), 30);
+        let mut sorted = idx.clone();
+        sorted.sort_physical();
+        assert_eq!(sorted.entries[0].key, b"b");
+    }
+}

@@ -1,0 +1,35 @@
+//! The Dataset Grouper partitioning pipeline ("beam-lite").
+//!
+//! This is the paper's §3.2 contribution: create a group-structured
+//! materialization of a base dataset from a user-specified,
+//! **embarrassingly parallel** partition function `example -> group_key`
+//! (sequential partition rules are rejected by construction — the
+//! [`partition::Partitioner`] trait only sees one example at a time,
+//! exactly the `get_key_fn` contract of the paper's Listing 1).
+//!
+//! Dataflow (mirrors a Beam shuffle):
+//!
+//! ```text
+//!  BaseDataset ──split──> W map workers:  key = get_key_fn(example)
+//!          (key, seq, example) ──hash(key) % S──> per-(worker,bucket) spill runs
+//!  per bucket (parallel):  external sort by (key, split, seq)   [disk-backed]
+//!          ──merge──> contiguous groups appended to shard b  + index entries
+//!  merged index: group -> (shard, offset, count, bytes)
+//! ```
+//!
+//! The external sort is what lets a *single group* exceed memory: grouping
+//! never holds more than `spill_chunk_bytes` of examples in RAM
+//! (`runner::PartitionOptions`), no matter how large a group gets.
+//!
+//! Output layout (consumed by [`crate::formats`]):
+//! * `<prefix>-SSSSS-of-TTTTT.tfrecord` — encoded [`crate::records::Example`]s,
+//!   group-contiguous within a shard;
+//! * `<prefix>.gindex` — the group index ([`index`]).
+
+pub mod index;
+pub mod partition;
+pub mod runner;
+
+pub use index::{GroupIndex, GroupIndexEntry};
+pub use partition::{DirichletPartitioner, FeatureKey, Partitioner, RandomPartitioner};
+pub use runner::{run_partition, PartitionOptions, PartitionReport};

@@ -1,0 +1,247 @@
+//! User-defined partitioners: the `get_key_fn(example) -> group_id`
+//! contract of the paper (Appendix A.1), plus the three canonical
+//! implementations the paper ships as example scripts:
+//!
+//! * [`FeatureKey`] — partition by a feature's value (FedC4/FedCCnews use
+//!   the URL's domain; Listing 1 uses the MNIST label);
+//! * [`RandomPartitioner`] — uniform random assignment (the IID control);
+//! * [`DirichletPartitioner`] — heterogeneous assignment via a truncated
+//!   stick-breaking Dirichlet process, the embarrassingly-parallel
+//!   version of the LDA-style partitioner popular in FL literature [71].
+//!
+//! All partitioners are stateless per example — the formal trade-off the
+//! paper makes for scalability (§3.2): assignment of example `x` may not
+//! depend on the assignment of example `y`.
+
+use crate::records::Example;
+use crate::util::rng::{fnv1a, Rng};
+
+/// An embarrassingly parallel partition function.
+pub trait Partitioner: Send + Sync {
+    /// The group key for one example. Must be a pure function of the
+    /// example (and the partitioner's own immutable config).
+    fn key(&self, example: &Example) -> Vec<u8>;
+
+    /// Diagnostic name for reports.
+    fn name(&self) -> String;
+}
+
+/// Partition by a feature's (first) value: domains, article ids, labels.
+pub struct FeatureKey {
+    pub feature: String,
+}
+
+impl FeatureKey {
+    pub fn new(feature: &str) -> Self {
+        FeatureKey { feature: feature.to_string() }
+    }
+}
+
+impl Partitioner for FeatureKey {
+    fn key(&self, example: &Example) -> Vec<u8> {
+        match example.features.get(&self.feature) {
+            Some(crate::records::Feature::Bytes(v)) if !v.is_empty() => v[0].clone(),
+            Some(crate::records::Feature::Ints(v)) if !v.is_empty() => {
+                format!("{}", v[0]).into_bytes()
+            }
+            Some(crate::records::Feature::Floats(v)) if !v.is_empty() => {
+                format!("{}", v[0]).into_bytes()
+            }
+            _ => b"<missing>".to_vec(),
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("feature:{}", self.feature)
+    }
+}
+
+/// Uniform random assignment to `num_groups` groups, keyed off a stable
+/// hash of the example content (so re-running the pipeline reproduces the
+/// identical partition, and parallel workers agree without coordination).
+pub struct RandomPartitioner {
+    pub num_groups: usize,
+    pub seed: u64,
+}
+
+impl RandomPartitioner {
+    pub fn new(num_groups: usize, seed: u64) -> Self {
+        assert!(num_groups > 0);
+        RandomPartitioner { num_groups, seed }
+    }
+}
+
+impl Partitioner for RandomPartitioner {
+    fn key(&self, example: &Example) -> Vec<u8> {
+        let h = fnv1a(&example.encode()) ^ self.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // SplitMix finalizer decorrelates the xor.
+        let mut r = Rng::new(h);
+        let g = r.gen_range(self.num_groups as u64);
+        format!("rand-{g:06}").into_bytes()
+    }
+
+    fn name(&self) -> String {
+        format!("random:{}", self.num_groups)
+    }
+}
+
+/// Truncated stick-breaking Dirichlet process: group probabilities
+/// `p_k = beta_k * prod_{j<k} (1 - beta_j)`, `beta ~ Beta(1, alpha)`,
+/// truncated at `max_groups`. Each example samples its group from the
+/// *fixed* categorical using its own content hash — stateless, parallel,
+/// heavy-tailed like the sequential CRP.
+pub struct DirichletPartitioner {
+    cdf: Vec<f64>,
+    pub alpha: f64,
+    pub seed: u64,
+}
+
+impl DirichletPartitioner {
+    pub fn new(alpha: f64, max_groups: usize, seed: u64) -> Self {
+        assert!(alpha > 0.0 && max_groups > 0);
+        let mut rng = Rng::new(seed ^ 0xD112_1C43);
+        let mut remaining = 1.0f64;
+        let mut cdf = Vec::with_capacity(max_groups);
+        let mut acc = 0.0;
+        for k in 0..max_groups {
+            // Beta(1, alpha) sample: 1 - U^(1/alpha).
+            let beta = if k + 1 == max_groups {
+                1.0 // close the stick
+            } else {
+                1.0 - rng.next_f64().powf(1.0 / alpha)
+            };
+            let p = beta * remaining;
+            remaining -= p;
+            acc += p;
+            cdf.push(acc);
+        }
+        DirichletPartitioner { cdf, alpha, seed }
+    }
+
+    pub fn max_groups(&self) -> usize {
+        self.cdf.len()
+    }
+}
+
+impl Partitioner for DirichletPartitioner {
+    fn key(&self, example: &Example) -> Vec<u8> {
+        let h = fnv1a(&example.encode()) ^ self.seed.rotate_left(17);
+        let u = Rng::new(h).next_f64();
+        let g = match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        };
+        format!("dp-{g:06}").into_bytes()
+    }
+
+    fn name(&self) -> String {
+        format!("dirichlet:alpha={}", self.alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::records::Feature;
+    use crate::util::proptest_lite::{check, gen_word, prop_assert, prop_assert_eq};
+
+    fn ex(text: &str, domain: &str) -> Example {
+        Example::text(text).with("domain", Feature::bytes_one(domain.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn feature_key_extracts_domain() {
+        let p = FeatureKey::new("domain");
+        assert_eq!(p.key(&ex("hi", "nytimes.com")), b"nytimes.com");
+        assert_eq!(p.key(&Example::text("orphan")), b"<missing>");
+    }
+
+    #[test]
+    fn feature_key_int_and_float() {
+        let p = FeatureKey::new("label");
+        let e = Example::new().with("label", Feature::ints(vec![9]));
+        assert_eq!(p.key(&e), b"9");
+        let p2 = FeatureKey::new("score");
+        let e2 = Example::new().with("score", Feature::Floats(vec![1.5]));
+        assert_eq!(p2.key(&e2), b"1.5");
+    }
+
+    #[test]
+    fn partitioners_are_pure_functions() {
+        let rand = RandomPartitioner::new(50, 3);
+        let dir = DirichletPartitioner::new(2.0, 100, 3);
+        check(100, |rng| {
+            let e = ex(&gen_word(rng, 1..=30), &gen_word(rng, 3..=10));
+            prop_assert_eq(rand.key(&e), rand.key(&e), "random purity")?;
+            prop_assert_eq(dir.key(&e), dir.key(&e), "dirichlet purity")
+        });
+    }
+
+    #[test]
+    fn random_partition_covers_groups_roughly_uniformly() {
+        let p = RandomPartitioner::new(10, 7);
+        let mut counts = std::collections::HashMap::new();
+        for i in 0..5000 {
+            let e = ex(&format!("example {i}"), "d");
+            *counts.entry(p.key(&e)).or_insert(0u64) += 1;
+        }
+        assert_eq!(counts.len(), 10);
+        for (_, c) in counts {
+            assert!((300..=700).contains(&c), "non-uniform: {c}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_give_different_partitions() {
+        let p1 = RandomPartitioner::new(100, 1);
+        let p2 = RandomPartitioner::new(100, 2);
+        let diffs = (0..200)
+            .filter(|i| {
+                let e = ex(&format!("x{i}"), "d");
+                p1.key(&e) != p2.key(&e)
+            })
+            .count();
+        assert!(diffs > 150, "seeds too correlated: {diffs}");
+    }
+
+    #[test]
+    fn dirichlet_is_heavy_tailed() {
+        let p = DirichletPartitioner::new(5.0, 1000, 11);
+        let mut counts = std::collections::HashMap::new();
+        for i in 0..10_000 {
+            let e = ex(&format!("doc {i}"), "d");
+            *counts.entry(p.key(&e)).or_insert(0u64) += 1;
+        }
+        let n_groups = counts.len();
+        assert!(n_groups > 5, "{n_groups}");
+        let max = *counts.values().max().unwrap();
+        let mean = 10_000 / n_groups as u64;
+        assert!(max > mean * 3, "max {max} mean {mean}: not heavy tailed");
+    }
+
+    #[test]
+    fn dirichlet_alpha_controls_group_count() {
+        let count_groups = |alpha: f64| {
+            let p = DirichletPartitioner::new(alpha, 2000, 5);
+            let mut set = std::collections::HashSet::new();
+            for i in 0..5000 {
+                set.insert(p.key(&ex(&format!("e{i}"), "d")));
+            }
+            set.len()
+        };
+        let low = count_groups(1.0);
+        let high = count_groups(100.0);
+        assert!(high > low * 2, "alpha effect missing: {low} vs {high}");
+    }
+
+    #[test]
+    fn dirichlet_cdf_is_proper() {
+        let p = DirichletPartitioner::new(3.0, 64, 9);
+        check(200, |rng| {
+            let e = ex(&gen_word(rng, 1..=20), "d");
+            let k = p.key(&e);
+            prop_assert(k.starts_with(b"dp-"), "key prefix")
+        });
+        assert!((p.cdf.last().unwrap() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,143 @@
+//! CRC32C (Castagnoli) with TFRecord masking.
+//!
+//! TFRecord frames are checksummed with CRC32C, not the IEEE CRC32 that
+//! `crc32fast` implements, so we implement Castagnoli here with a
+//! slicing-by-8 table method (the Table-3 reproduction streams gigabytes
+//! through this on the hot path — see `benches/microbench.rs`).
+//!
+//! The mask/unmask transform is TFRecord's: it decorrelates checksums of
+//! data that itself embeds checksums.
+
+const POLY: u32 = 0x82F6_3B78; // reflected Castagnoli polynomial
+
+/// 8 slicing tables, built at first use.
+fn tables() -> &'static [[u32; 256]; 8] {
+    use std::sync::OnceLock;
+    static TABLES: OnceLock<[[u32; 256]; 8]> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let mut t = [[0u32; 256]; 8];
+        for i in 0..256u32 {
+            let mut crc = i;
+            for _ in 0..8 {
+                crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+            }
+            t[0][i as usize] = crc;
+        }
+        for i in 0..256usize {
+            let mut crc = t[0][i];
+            for k in 1..8 {
+                crc = t[0][(crc & 0xFF) as usize] ^ (crc >> 8);
+                t[k][i] = crc;
+            }
+        }
+        t
+    })
+}
+
+/// CRC32C of `data` (unmasked).
+pub fn crc32c(data: &[u8]) -> u32 {
+    let t = tables();
+    let mut crc: u32 = !0;
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        let lo = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) ^ crc;
+        let hi = u32::from_le_bytes([c[4], c[5], c[6], c[7]]);
+        crc = t[7][(lo & 0xFF) as usize]
+            ^ t[6][((lo >> 8) & 0xFF) as usize]
+            ^ t[5][((lo >> 16) & 0xFF) as usize]
+            ^ t[4][(lo >> 24) as usize]
+            ^ t[3][(hi & 0xFF) as usize]
+            ^ t[2][((hi >> 8) & 0xFF) as usize]
+            ^ t[1][((hi >> 16) & 0xFF) as usize]
+            ^ t[0][(hi >> 24) as usize];
+    }
+    for &b in chunks.remainder() {
+        crc = t[0][((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+const MASK_DELTA: u32 = 0xA282_EAD8;
+
+/// TFRecord's checksum masking.
+pub fn mask(crc: u32) -> u32 {
+    (crc.rotate_right(15)).wrapping_add(MASK_DELTA)
+}
+
+/// Inverse of [`mask`].
+pub fn unmask(masked: u32) -> u32 {
+    masked.wrapping_sub(MASK_DELTA).rotate_left(15)
+}
+
+/// Masked CRC32C — what TFRecord actually stores.
+pub fn masked_crc32c(data: &[u8]) -> u32 {
+    mask(crc32c(data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{check, gen_bytes, prop_assert, prop_assert_eq};
+
+    /// Bit-by-bit reference implementation for differential testing.
+    fn crc32c_ref(data: &[u8]) -> u32 {
+        let mut crc: u32 = !0;
+        for &b in data {
+            crc ^= b as u32;
+            for _ in 0..8 {
+                crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+            }
+        }
+        !crc
+    }
+
+    #[test]
+    fn known_vectors() {
+        // RFC 3720 / iSCSI test vectors.
+        assert_eq!(crc32c(&[0u8; 32]), 0x8A91_36AA);
+        assert_eq!(crc32c(&[0xFFu8; 32]), 0x62A8_AB43);
+        let inc: Vec<u8> = (0u8..32).collect();
+        assert_eq!(crc32c(&inc), 0x46DD_794E);
+        assert_eq!(crc32c(b"123456789"), 0xE306_9283);
+        assert_eq!(crc32c(b""), 0);
+    }
+
+    #[test]
+    fn matches_reference_on_random_inputs() {
+        check(200, |rng| {
+            let data = gen_bytes(rng, 0..=257);
+            prop_assert_eq(crc32c(&data), crc32c_ref(&data), "slicing-by-8 vs bitwise")
+        });
+    }
+
+    #[test]
+    fn mask_roundtrip() {
+        check(200, |rng| {
+            let x = rng.next_u32();
+            prop_assert_eq(unmask(mask(x)), x, "mask/unmask roundtrip")
+        });
+    }
+
+    #[test]
+    fn mask_decorrelates() {
+        assert_ne!(mask(0), 0);
+        assert_ne!(mask(crc32c(b"abc")), crc32c(b"abc"));
+        check(100, |rng| {
+            let x = rng.next_u32();
+            let y = rng.next_u32();
+            if x != y {
+                prop_assert(mask(x) != mask(y), "mask must be injective")
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn sensitivity_single_bit() {
+        let mut data = vec![0u8; 64];
+        let base = crc32c(&data);
+        data[33] ^= 0x10;
+        assert_ne!(crc32c(&data), base);
+    }
+}

@@ -1,0 +1,304 @@
+//! A minimal `tf.Example`-style feature map with a binary codec.
+//!
+//! The paper stores `tf.Example` protos inside TFRecords. A full protobuf
+//! implementation is out of scope for an offline build, so this module
+//! defines the same *shape* of data — a map from feature name to a list of
+//! bytes / i64 / f32 values — with a compact deterministic tag-length-value
+//! encoding:
+//!
+//! ```text
+//! u16 LE  feature count
+//! per feature (sorted by name, so encoding is canonical):
+//!   u16 LE name_len | name bytes
+//!   u8 kind (0=bytes, 1=i64, 2=f32)
+//!   u32 LE value count
+//!   values:  bytes -> u32 LE len + payload each; i64/f32 -> fixed LE
+//! ```
+//!
+//! Canonical ordering means `encode` is injective on the logical content —
+//! pipeline determinism tests rely on that.
+
+use std::collections::BTreeMap;
+use std::io;
+
+/// One feature: a homogeneous list of values.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Feature {
+    Bytes(Vec<Vec<u8>>),
+    Ints(Vec<i64>),
+    Floats(Vec<f32>),
+}
+
+impl Feature {
+    pub fn bytes_one<T: Into<Vec<u8>>>(v: T) -> Feature {
+        Feature::Bytes(vec![v.into()])
+    }
+
+    pub fn ints(v: Vec<i64>) -> Feature {
+        Feature::Ints(v)
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Feature::Bytes(v) => v.len(),
+            Feature::Ints(v) => v.len(),
+            Feature::Floats(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A schema'd example: name → feature. BTreeMap keeps encoding canonical.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Example {
+    pub features: BTreeMap<String, Feature>,
+}
+
+impl Example {
+    pub fn new() -> Self {
+        Example::default()
+    }
+
+    pub fn with(mut self, name: &str, f: Feature) -> Self {
+        self.features.insert(name.to_string(), f);
+        self
+    }
+
+    pub fn text(content: &str) -> Self {
+        Example::new().with("text", Feature::bytes_one(content.as_bytes().to_vec()))
+    }
+
+    /// Convenience accessors used throughout the corpus/fed pipelines.
+    pub fn get_bytes(&self, name: &str) -> Option<&[u8]> {
+        match self.features.get(name) {
+            Some(Feature::Bytes(v)) if !v.is_empty() => Some(&v[0]),
+            _ => None,
+        }
+    }
+
+    pub fn get_str(&self, name: &str) -> Option<&str> {
+        self.get_bytes(name).and_then(|b| std::str::from_utf8(b).ok())
+    }
+
+    pub fn get_ints(&self, name: &str) -> Option<&[i64]> {
+        match self.features.get(name) {
+            Some(Feature::Ints(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn get_floats(&self, name: &str) -> Option<&[f32]> {
+        match self.features.get(name) {
+            Some(Feature::Floats(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Approximate in-memory footprint (Table 12's in-memory accounting).
+    pub fn approx_bytes(&self) -> usize {
+        let mut total = 0;
+        for (k, f) in &self.features {
+            total += k.len();
+            total += match f {
+                Feature::Bytes(v) => v.iter().map(|b| b.len()).sum::<usize>(),
+                Feature::Ints(v) => v.len() * 8,
+                Feature::Floats(v) => v.len() * 4,
+            };
+        }
+        total
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        out.extend_from_slice(&(self.features.len() as u16).to_le_bytes());
+        for (name, feature) in &self.features {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            match feature {
+                Feature::Bytes(vals) => {
+                    out.push(0);
+                    out.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+                    for v in vals {
+                        out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                        out.extend_from_slice(v);
+                    }
+                }
+                Feature::Ints(vals) => {
+                    out.push(1);
+                    out.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+                    for v in vals {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                Feature::Floats(vals) => {
+                    out.push(2);
+                    out.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+                    for v in vals {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> io::Result<Example> {
+        let mut c = Cursor { b: bytes, p: 0 };
+        let n = c.u16()? as usize;
+        let mut features = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = c.u16()? as usize;
+            let name = String::from_utf8(c.take(name_len)?.to_vec())
+                .map_err(|e| bad(&format!("non-utf8 feature name: {e}")))?;
+            let kind = c.u8()?;
+            let count = c.u32()? as usize;
+            let feature = match kind {
+                0 => {
+                    let mut vals = Vec::with_capacity(count);
+                    for _ in 0..count {
+                        let len = c.u32()? as usize;
+                        vals.push(c.take(len)?.to_vec());
+                    }
+                    Feature::Bytes(vals)
+                }
+                1 => {
+                    let mut vals = Vec::with_capacity(count);
+                    for _ in 0..count {
+                        vals.push(i64::from_le_bytes(c.take(8)?.try_into().unwrap()));
+                    }
+                    Feature::Ints(vals)
+                }
+                2 => {
+                    let mut vals = Vec::with_capacity(count);
+                    for _ in 0..count {
+                        vals.push(f32::from_le_bytes(c.take(4)?.try_into().unwrap()));
+                    }
+                    Feature::Floats(vals)
+                }
+                k => return Err(bad(&format!("unknown feature kind {k}"))),
+            };
+            features.insert(name, feature);
+        }
+        if c.p != bytes.len() {
+            return Err(bad("trailing bytes after example"));
+        }
+        Ok(Example { features })
+    }
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("example codec: {msg}"))
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.p + n > self.b.len() {
+            return Err(bad("truncated"));
+        }
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> io::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{check, gen_bytes, gen_vec, gen_word, prop_assert_eq};
+    use crate::util::rng::Rng;
+
+    fn gen_example(rng: &mut Rng) -> Example {
+        let mut ex = Example::new();
+        let n = rng.gen_range_usize(5);
+        for i in 0..n {
+            let name = format!("{}{}", gen_word(rng, 1..=8), i);
+            let f = match rng.gen_range(3) {
+                0 => Feature::Bytes(gen_vec(rng, 0..=3, |r| gen_bytes(r, 0..=50))),
+                1 => Feature::Ints(gen_vec(rng, 0..=10, |r| r.next_u64() as i64)),
+                _ => Feature::Floats(gen_vec(rng, 0..=10, |r| r.next_f32())),
+            };
+            ex.features.insert(name, f);
+        }
+        ex
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        check(300, |rng| {
+            let ex = gen_example(rng);
+            let decoded = Example::decode(&ex.encode()).unwrap();
+            prop_assert_eq(decoded, ex, "example roundtrip")
+        });
+    }
+
+    #[test]
+    fn empty_example() {
+        let ex = Example::new();
+        assert_eq!(Example::decode(&ex.encode()).unwrap(), ex);
+    }
+
+    #[test]
+    fn canonical_encoding_order_independent() {
+        let a = Example::new()
+            .with("z", Feature::ints(vec![1]))
+            .with("a", Feature::bytes_one(b"x".to_vec()));
+        let b = Example::new()
+            .with("a", Feature::bytes_one(b"x".to_vec()))
+            .with("z", Feature::ints(vec![1]));
+        assert_eq!(a.encode(), b.encode());
+    }
+
+    #[test]
+    fn accessors() {
+        let ex = Example::text("hello world")
+            .with("label", Feature::ints(vec![7]))
+            .with("weights", Feature::Floats(vec![0.5, 1.5]));
+        assert_eq!(ex.get_str("text"), Some("hello world"));
+        assert_eq!(ex.get_ints("label"), Some(&[7][..]));
+        assert_eq!(ex.get_floats("weights"), Some(&[0.5, 1.5][..]));
+        assert_eq!(ex.get_str("missing"), None);
+        assert_eq!(ex.get_ints("text"), None);
+        assert!(ex.approx_bytes() >= 11 + 8 + 8);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Example::decode(&[0xFF, 0xFF, 0x00]).is_err());
+        assert!(Example::decode(&[1, 0]).is_err()); // promises 1 feature, truncates
+        // trailing bytes
+        let mut enc = Example::new().encode();
+        enc.push(0);
+        assert!(Example::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_unknown_kind() {
+        // one feature named "a" with kind 9
+        let mut b = vec![1, 0];
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.push(b'a');
+        b.push(9);
+        b.extend_from_slice(&0u32.to_le_bytes());
+        assert!(Example::decode(&b).is_err());
+    }
+}

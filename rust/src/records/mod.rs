@@ -1,0 +1,26 @@
+//! Record-level I/O: the byte substrate under every dataset format.
+//!
+//! The paper materializes partitioned datasets as TFRecord files (footnote
+//! 2) containing `tf.Example` protos. This module reimplements that layer
+//! from scratch:
+//!
+//! * [`crc32c`] — the Castagnoli CRC with TFRecord's masking, as used by
+//!   the TFRecord framing (the vendored `crc32fast` is IEEE-polynomial
+//!   only, so CRC32C is implemented here and differentially tested
+//!   against known vectors).
+//! * [`tfrecord`] — byte-compatible TFRecord framing: per record,
+//!   `len(u64 LE) | masked_crc(len) | data | masked_crc(data)`.
+//! * [`example`] — a minimal schema'd key→feature map standing in for
+//!   `tf.Example` (tag-length-value binary codec; bytes / i64 / f32 list
+//!   features).
+//! * [`sharded`] — `name-00007-of-00064`-style shard sets and round-robin
+//!   sharded writers.
+
+pub mod crc32c;
+pub mod example;
+pub mod sharded;
+pub mod tfrecord;
+
+pub use example::{Example, Feature};
+pub use sharded::{shard_name, ShardedWriter};
+pub use tfrecord::{RecordReader, RecordWriter};

@@ -1,0 +1,179 @@
+//! Sharded record files: `prefix-00007-of-00064.tfrecord` naming, a
+//! round-robin sharded writer (the partition pipeline's sink), and shard-set
+//! discovery (the formats' source).
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use super::tfrecord::RecordWriter;
+
+/// `prefix-%05d-of-%05d.tfrecord`.
+pub fn shard_name(prefix: &str, index: usize, total: usize) -> String {
+    format!("{prefix}-{index:05}-of-{total:05}.tfrecord")
+}
+
+/// All shard paths for a prefix, in index order.
+pub fn shard_paths(dir: &Path, prefix: &str, total: usize) -> Vec<PathBuf> {
+    (0..total).map(|i| dir.join(shard_name(prefix, i, total))).collect()
+}
+
+/// Discover `prefix-*-of-*.tfrecord` shards in `dir`, sorted by index.
+/// Errors if the set is incomplete (a missing shard means a corrupt
+/// materialization).
+pub fn discover_shards(dir: &Path, prefix: &str) -> io::Result<Vec<PathBuf>> {
+    let mut found: Vec<(usize, usize, PathBuf)> = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if let Some((idx, total)) = parse_shard_name(&name, prefix) {
+            found.push((idx, total, entry.path()));
+        }
+    }
+    if found.is_empty() {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("no shards matching {prefix}-*-of-*.tfrecord in {}", dir.display()),
+        ));
+    }
+    let total = found[0].1;
+    if found.iter().any(|(_, t, _)| *t != total) || found.len() != total {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!(
+                "incomplete shard set for {prefix}: found {} of {total}",
+                found.len()
+            ),
+        ));
+    }
+    found.sort_by_key(|(i, _, _)| *i);
+    Ok(found.into_iter().map(|(_, _, p)| p).collect())
+}
+
+fn parse_shard_name(name: &str, prefix: &str) -> Option<(usize, usize)> {
+    let rest = name.strip_prefix(prefix)?.strip_prefix('-')?;
+    let rest = rest.strip_suffix(".tfrecord")?;
+    let (idx, total) = rest.split_once("-of-")?;
+    if idx.len() != 5 || total.len() != 5 {
+        return None;
+    }
+    Some((idx.parse().ok()?, total.parse().ok()?))
+}
+
+/// Writes records round-robin (or by explicit shard id) across N shards.
+pub struct ShardedWriter {
+    writers: Vec<RecordWriter<io::BufWriter<std::fs::File>>>,
+    next: usize,
+}
+
+impl ShardedWriter {
+    pub fn create(dir: &Path, prefix: &str, shards: usize) -> io::Result<Self> {
+        assert!(shards > 0);
+        std::fs::create_dir_all(dir)?;
+        let writers = (0..shards)
+            .map(|i| RecordWriter::create(dir.join(shard_name(prefix, i, shards))))
+            .collect::<io::Result<Vec<_>>>()?;
+        Ok(ShardedWriter { writers, next: 0 })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.writers.len()
+    }
+
+    /// Round-robin write.
+    pub fn write(&mut self, data: &[u8]) -> io::Result<()> {
+        let i = self.next;
+        self.next = (self.next + 1) % self.writers.len();
+        self.writers[i].write_record(data)
+    }
+
+    /// Targeted write (the group-by-key sink routes whole groups to one
+    /// shard so group bytes stay contiguous).
+    pub fn write_to(&mut self, shard: usize, data: &[u8]) -> io::Result<()> {
+        self.writers[shard].write_record(data)
+    }
+
+    /// Byte offset at which the next record written to `shard` will start.
+    pub fn shard_offset(&self, shard: usize) -> u64 {
+        self.writers[shard].bytes_written()
+    }
+
+    pub fn total_records(&self) -> u64 {
+        self.writers.iter().map(|w| w.records_written()).sum()
+    }
+
+    pub fn finish(mut self) -> io::Result<()> {
+        for w in &mut self.writers {
+            w.flush()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::records::tfrecord::RecordReader;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("grouper_sharded_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn shard_name_format() {
+        assert_eq!(shard_name("data", 7, 64), "data-00007-of-00064.tfrecord");
+        assert_eq!(parse_shard_name("data-00007-of-00064.tfrecord", "data"), Some((7, 64)));
+        assert_eq!(parse_shard_name("data-7-of-64.tfrecord", "data"), None);
+        assert_eq!(parse_shard_name("other-00007-of-00064.tfrecord", "data"), None);
+    }
+
+    #[test]
+    fn round_robin_distributes() {
+        let dir = tmp("rr");
+        let mut w = ShardedWriter::create(&dir, "x", 3).unwrap();
+        for i in 0..9u8 {
+            w.write(&[i]).unwrap();
+        }
+        assert_eq!(w.total_records(), 9);
+        w.finish().unwrap();
+        let shards = discover_shards(&dir, "x").unwrap();
+        assert_eq!(shards.len(), 3);
+        for p in &shards {
+            let n = RecordReader::open(p).unwrap().iter().count();
+            assert_eq!(n, 3);
+        }
+    }
+
+    #[test]
+    fn targeted_writes_and_offsets() {
+        let dir = tmp("targeted");
+        let mut w = ShardedWriter::create(&dir, "y", 2).unwrap();
+        assert_eq!(w.shard_offset(0), 0);
+        w.write_to(0, b"aaa").unwrap();
+        let off = w.shard_offset(0);
+        assert_eq!(off, 16 + 3);
+        w.write_to(0, b"bbbb").unwrap();
+        w.finish().unwrap();
+        let mut r = RecordReader::open(dir.join(shard_name("y", 0, 2))).unwrap();
+        r.seek_to(off).unwrap();
+        assert_eq!(r.next_record().unwrap().unwrap(), b"bbbb");
+    }
+
+    #[test]
+    fn discover_rejects_incomplete() {
+        let dir = tmp("incomplete");
+        let mut w = ShardedWriter::create(&dir, "z", 3).unwrap();
+        w.write(b"r").unwrap();
+        w.finish().unwrap();
+        std::fs::remove_file(dir.join(shard_name("z", 1, 3))).unwrap();
+        assert!(discover_shards(&dir, "z").is_err());
+    }
+
+    #[test]
+    fn discover_missing_prefix() {
+        let dir = tmp("nothing");
+        assert!(discover_shards(&dir, "nope").is_err());
+    }
+}

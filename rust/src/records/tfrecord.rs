@@ -1,0 +1,312 @@
+//! TFRecord framing — byte-compatible with TensorFlow's format.
+//!
+//! Per record:
+//! ```text
+//! u64 LE  length
+//! u32 LE  masked crc32c of the length bytes
+//! [u8]    data (length bytes)
+//! u32 LE  masked crc32c of the data
+//! ```
+//!
+//! The reader verifies both checksums (corruption surfaces as an error,
+//! not silent truncation) and exposes both an owned-`Vec` API and a
+//! zero-copy `read_into` API for the streaming hot path (no per-record
+//! allocation — see EXPERIMENTS.md §Perf).
+
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use super::crc32c::{masked_crc32c, unmask};
+use crate::records::crc32c::crc32c;
+
+/// Writes TFRecord-framed records to a buffered file.
+pub struct RecordWriter<W: Write> {
+    w: W,
+    records: u64,
+    bytes: u64,
+}
+
+impl RecordWriter<BufWriter<File>> {
+    pub fn create<P: AsRef<Path>>(path: P) -> io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(RecordWriter::new(BufWriter::new(File::create(path)?)))
+    }
+}
+
+impl<W: Write> RecordWriter<W> {
+    pub fn new(w: W) -> Self {
+        RecordWriter { w, records: 0, bytes: 0 }
+    }
+
+    pub fn write_record(&mut self, data: &[u8]) -> io::Result<()> {
+        let len = (data.len() as u64).to_le_bytes();
+        self.w.write_all(&len)?;
+        self.w.write_all(&masked_crc32c(&len).to_le_bytes())?;
+        self.w.write_all(data)?;
+        self.w.write_all(&masked_crc32c(data).to_le_bytes())?;
+        self.records += 1;
+        self.bytes += 16 + data.len() as u64;
+        Ok(())
+    }
+
+    pub fn records_written(&self) -> u64 {
+        self.records
+    }
+
+    /// Framed bytes written (including headers/footers).
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn flush(&mut self) -> io::Result<()> {
+        self.w.flush()
+    }
+
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+}
+
+/// Reads TFRecord-framed records, verifying checksums.
+pub struct RecordReader<R: Read> {
+    r: R,
+    /// Byte offset of the *next* record (valid when constructed at 0 or via
+    /// `seek_to`).
+    offset: u64,
+}
+
+impl RecordReader<BufReader<File>> {
+    pub fn open<P: AsRef<Path>>(path: P) -> io::Result<Self> {
+        Ok(RecordReader::new(BufReader::new(File::open(path)?)))
+    }
+}
+
+impl<R: Read> RecordReader<R> {
+    pub fn new(r: R) -> Self {
+        RecordReader { r, offset: 0 }
+    }
+
+    /// Read the next record into `buf` (cleared/reused). Returns `Ok(false)`
+    /// on clean EOF, an error on truncation or checksum mismatch.
+    pub fn read_into(&mut self, buf: &mut Vec<u8>) -> io::Result<bool> {
+        let mut header = [0u8; 12];
+        match read_exact_or_eof(&mut self.r, &mut header)? {
+            ReadOutcome::Eof => return Ok(false),
+            ReadOutcome::Full => {}
+        }
+        let len_bytes: [u8; 8] = header[..8].try_into().unwrap();
+        let len = u64::from_le_bytes(len_bytes);
+        let len_crc = u32::from_le_bytes(header[8..12].try_into().unwrap());
+        if unmask(len_crc) != crc32c(&len_bytes) {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("tfrecord: length checksum mismatch at offset {}", self.offset),
+            ));
+        }
+        if len > (1 << 40) {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("tfrecord: implausible record length {len}"),
+            ));
+        }
+        buf.clear();
+        buf.resize(len as usize, 0);
+        self.r.read_exact(buf)?;
+        let mut footer = [0u8; 4];
+        self.r.read_exact(&mut footer)?;
+        let data_crc = u32::from_le_bytes(footer);
+        if unmask(data_crc) != crc32c(buf) {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("tfrecord: data checksum mismatch at offset {}", self.offset),
+            ));
+        }
+        self.offset += 16 + len;
+        Ok(true)
+    }
+
+    /// Owned-allocation convenience wrapper.
+    pub fn next_record(&mut self) -> io::Result<Option<Vec<u8>>> {
+        let mut buf = Vec::new();
+        Ok(if self.read_into(&mut buf)? { Some(buf) } else { None })
+    }
+
+    /// Iterate remaining records (owned).
+    pub fn iter(self) -> RecordIter<R> {
+        RecordIter { reader: self }
+    }
+}
+
+impl RecordReader<BufReader<File>> {
+    /// Random access: position the reader at an absolute byte offset — the
+    /// hierarchical format's per-group seek path.
+    pub fn seek_to(&mut self, offset: u64) -> io::Result<()> {
+        self.r.seek(SeekFrom::Start(offset))?;
+        self.offset = offset;
+        Ok(())
+    }
+}
+
+pub struct RecordIter<R: Read> {
+    reader: RecordReader<R>,
+}
+
+impl<R: Read> Iterator for RecordIter<R> {
+    type Item = io::Result<Vec<u8>>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.reader.next_record().transpose()
+    }
+}
+
+enum ReadOutcome {
+    Full,
+    Eof,
+}
+
+fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> io::Result<ReadOutcome> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..])? {
+            0 => {
+                if filled == 0 {
+                    return Ok(ReadOutcome::Eof);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "tfrecord: truncated header",
+                ));
+            }
+            n => filled += n,
+        }
+    }
+    Ok(ReadOutcome::Full)
+}
+
+/// Framed size of a record with `len` payload bytes.
+pub fn framed_len(len: usize) -> u64 {
+    16 + len as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{check, gen_bytes, gen_vec, prop_assert_eq};
+
+    fn roundtrip(records: &[Vec<u8>]) -> Vec<Vec<u8>> {
+        let mut w = RecordWriter::new(Vec::new());
+        for r in records {
+            w.write_record(r).unwrap();
+        }
+        let bytes = w.into_inner();
+        RecordReader::new(&bytes[..]).iter().map(|r| r.unwrap()).collect()
+    }
+
+    #[test]
+    fn empty_stream() {
+        assert!(roundtrip(&[]).is_empty());
+    }
+
+    #[test]
+    fn single_and_empty_records() {
+        assert_eq!(roundtrip(&[vec![]]), vec![Vec::<u8>::new()]);
+        assert_eq!(roundtrip(&[b"hello".to_vec()]), vec![b"hello".to_vec()]);
+    }
+
+    #[test]
+    fn property_roundtrip() {
+        check(100, |rng| {
+            let recs = gen_vec(rng, 0..=20, |r| gen_bytes(r, 0..=300));
+            prop_assert_eq(roundtrip(&recs), recs, "tfrecord roundtrip")
+        });
+    }
+
+    #[test]
+    fn framing_layout_exact() {
+        let mut w = RecordWriter::new(Vec::new());
+        w.write_record(b"abc").unwrap();
+        let bytes = w.into_inner();
+        assert_eq!(bytes.len(), 16 + 3);
+        assert_eq!(u64::from_le_bytes(bytes[..8].try_into().unwrap()), 3);
+        assert_eq!(&bytes[12..15], b"abc");
+        assert_eq!(framed_len(3), 19);
+    }
+
+    #[test]
+    fn corruption_detected_in_data() {
+        let mut w = RecordWriter::new(Vec::new());
+        w.write_record(b"sensitive-payload").unwrap();
+        let mut bytes = w.into_inner();
+        bytes[14] ^= 0x01; // flip a data bit
+        let err = RecordReader::new(&bytes[..]).next_record().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("data checksum"));
+    }
+
+    #[test]
+    fn corruption_detected_in_length() {
+        let mut w = RecordWriter::new(Vec::new());
+        w.write_record(b"xyz").unwrap();
+        let mut bytes = w.into_inner();
+        bytes[0] ^= 0x01; // flip a length bit
+        let err = RecordReader::new(&bytes[..]).next_record().unwrap_err();
+        assert!(err.to_string().contains("length checksum"));
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_eof() {
+        let mut w = RecordWriter::new(Vec::new());
+        w.write_record(b"0123456789").unwrap();
+        let bytes = w.into_inner();
+        let cut = &bytes[..bytes.len() - 3];
+        assert!(RecordReader::new(cut).next_record().is_err());
+        // Truncation inside the *header* is also an error.
+        let cut = &bytes[..6];
+        assert!(RecordReader::new(cut).next_record().is_err());
+    }
+
+    #[test]
+    fn read_into_reuses_buffer() {
+        let mut w = RecordWriter::new(Vec::new());
+        w.write_record(&vec![7u8; 100]).unwrap();
+        w.write_record(&vec![9u8; 10]).unwrap();
+        let bytes = w.into_inner();
+        let mut r = RecordReader::new(&bytes[..]);
+        let mut buf = Vec::new();
+        assert!(r.read_into(&mut buf).unwrap());
+        assert_eq!(buf.len(), 100);
+        assert!(r.read_into(&mut buf).unwrap());
+        assert_eq!(buf, vec![9u8; 10]);
+        assert!(!r.read_into(&mut buf).unwrap());
+    }
+
+    #[test]
+    fn file_roundtrip_with_seek() {
+        let dir = std::env::temp_dir().join("grouper_tfrecord_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("x.tfrecord");
+        let mut w = RecordWriter::create(&path).unwrap();
+        w.write_record(b"first").unwrap();
+        let second_offset = w.bytes_written();
+        w.write_record(b"second").unwrap();
+        w.flush().unwrap();
+        drop(w);
+
+        let mut r = RecordReader::open(&path).unwrap();
+        r.seek_to(second_offset).unwrap();
+        assert_eq!(r.next_record().unwrap().unwrap(), b"second");
+        assert!(r.next_record().unwrap().is_none());
+    }
+
+    #[test]
+    fn writer_counters() {
+        let mut w = RecordWriter::new(Vec::new());
+        w.write_record(b"aa").unwrap();
+        w.write_record(b"bbb").unwrap();
+        assert_eq!(w.records_written(), 2);
+        assert_eq!(w.bytes_written(), 16 + 2 + 16 + 3);
+    }
+}

@@ -1,0 +1,61 @@
+//! PJRT engine: the `xla`-crate wrapper that loads HLO-text artifacts and
+//! compiles them on the CPU PJRT client (the pattern of
+//! /opt/xla-example/load_hlo).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client + compile cache entry point.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+}
+
+impl PjrtEngine {
+    /// CPU client (the only backend in this environment).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(anyhow::Error::msg)?;
+        Ok(PjrtEngine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO **text** file and compile it to an executable.
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let e = PjrtEngine::cpu().unwrap();
+        assert!(e.device_count() >= 1);
+        assert!(!e.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let e = PjrtEngine::cpu().unwrap();
+        match e.compile_hlo_text(Path::new("/nonexistent/x.hlo.txt")) {
+            Ok(_) => panic!("expected an error"),
+            Err(err) => assert!(err.to_string().contains("x.hlo.txt")),
+        }
+    }
+}

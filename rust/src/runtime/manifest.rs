@@ -1,0 +1,224 @@
+//! Parser for the artifact manifest `aot.py` writes.
+//!
+//! Grammar (line-oriented, whitespace-separated):
+//! ```text
+//! meta <key> <value>
+//! param <name> <dtype> <rank> <dims...>
+//! artifact <fn> <file> [tau]
+//! ```
+//! Param lines define the canonical flat-parameter order shared by the
+//! Python model (`model.param_spec`) and every HLO entry point.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One parameter tensor's name/shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported HLO artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub func: String,
+    pub file: String,
+    pub tau: Option<usize>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub meta: BTreeMap<String, String>,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path, config: &str) -> Result<Manifest> {
+        let path = artifacts_dir.join(format!("{config}.manifest"));
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(artifacts_dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let mut meta = BTreeMap::new();
+        let mut params = Vec::new();
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.is_empty() {
+                continue;
+            }
+            match parts[0] {
+                "meta" => {
+                    if parts.len() != 3 {
+                        bail!("manifest line {}: meta needs key+value", lineno + 1);
+                    }
+                    meta.insert(parts[1].to_string(), parts[2].to_string());
+                }
+                "param" => {
+                    if parts.len() < 4 {
+                        bail!("manifest line {}: short param", lineno + 1);
+                    }
+                    let rank: usize = parts[3].parse()?;
+                    if parts.len() != 4 + rank {
+                        bail!("manifest line {}: rank/dims mismatch", lineno + 1);
+                    }
+                    let shape = parts[4..4 + rank]
+                        .iter()
+                        .map(|d| d.parse::<usize>())
+                        .collect::<Result<Vec<_>, _>>()?;
+                    params.push(ParamSpec {
+                        name: parts[1].to_string(),
+                        dtype: parts[2].to_string(),
+                        shape,
+                    });
+                }
+                "artifact" => {
+                    if parts.len() < 3 || parts.len() > 4 {
+                        bail!("manifest line {}: bad artifact", lineno + 1);
+                    }
+                    let tau = if parts.len() == 4 { Some(parts[3].parse()?) } else { None };
+                    artifacts.push(ArtifactSpec {
+                        func: parts[1].to_string(),
+                        file: parts[2].to_string(),
+                        tau,
+                    });
+                }
+                other => bail!("manifest line {}: unknown directive {other:?}", lineno + 1),
+            }
+        }
+        if params.is_empty() {
+            bail!("manifest has no params");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), meta, params, artifacts })
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .with_context(|| format!("manifest missing meta {key}"))?
+            .parse()
+            .with_context(|| format!("meta {key} not an integer"))
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(|p| p.num_elements()).sum()
+    }
+
+    pub fn artifact(&self, func: &str, tau: Option<usize>) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.func == func && a.tau == tau)
+    }
+
+    pub fn artifact_path(&self, a: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+
+    /// Available fused local_train tau values.
+    pub fn tau_variants(&self) -> Vec<usize> {
+        self.artifacts.iter().filter_map(|a| a.tau).collect()
+    }
+
+    /// Load the initial-parameter blob (raw LE f32, manifest order).
+    pub fn load_init_params(&self) -> Result<super::Params> {
+        let file = self
+            .meta
+            .get("init_params")
+            .context("manifest missing meta init_params")?;
+        let blob = std::fs::read(self.dir.join(file))?;
+        let expect = 4 * self.num_params();
+        if blob.len() != expect {
+            bail!("init params blob is {} bytes, want {expect}", blob.len());
+        }
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0usize;
+        for p in &self.params {
+            let n = p.num_elements();
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &blob[off + 4 * i..off + 4 * i + 4];
+                v.push(f32::from_le_bytes(b.try_into().unwrap()));
+            }
+            off += 4 * n;
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+meta config tiny
+meta vocab_size 256
+meta batch_size 4
+meta seq_len 32
+meta num_params 10
+meta init_params tiny_init_params.bin
+param embed f32 2 5 2
+param bias f32 0
+artifact eval_loss tiny_eval_loss.hlo.txt
+artifact local_train tiny_local_train_tau4.hlo.txt 4
+";
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.meta["config"], "tiny");
+        assert_eq!(m.meta_usize("vocab_size").unwrap(), 256);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].shape, vec![5, 2]);
+        assert_eq!(m.params[1].shape, Vec::<usize>::new());
+        assert_eq!(m.num_params(), 11);
+        assert!(m.artifact("eval_loss", None).is_some());
+        assert!(m.artifact("local_train", Some(4)).is_some());
+        assert!(m.artifact("local_train", Some(8)).is_none());
+        assert_eq!(m.tau_variants(), vec![4]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let d = Path::new("/tmp");
+        assert!(Manifest::parse(d, "meta only_one\nparam x f32 0\n").is_err());
+        assert!(Manifest::parse(d, "param x f32 2 5\n").is_err());
+        assert!(Manifest::parse(d, "bogus line here\nparam x f32 0\n").is_err());
+        assert!(Manifest::parse(d, "meta a b\n").is_err()); // no params
+    }
+
+    #[test]
+    fn init_blob_roundtrip() {
+        let dir = std::env::temp_dir().join("grouper_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = Manifest::parse(&dir, SAMPLE).unwrap();
+        let vals: Vec<f32> = (0..11).map(|i| i as f32 * 0.5).collect();
+        let blob: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("tiny_init_params.bin"), &blob).unwrap();
+        let params = m.load_init_params().unwrap();
+        assert_eq!(params.len(), 2);
+        assert_eq!(params[0].len(), 10);
+        assert_eq!(params[1].len(), 1);
+        assert_eq!(params[1][0], 5.0);
+        // wrong size rejected
+        std::fs::write(dir.join("tiny_init_params.bin"), &blob[..8]).unwrap();
+        assert!(m.load_init_params().is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! The PJRT runtime: loads the AOT artifacts `make artifacts` produced and
+//! executes them from the Rust hot path. Python never runs at request
+//! time — the interchange is HLO *text* (see DESIGN.md §3 for why text,
+//! not serialized protos).
+//!
+//! * [`manifest`] — parses `artifacts/<cfg>.manifest` (param order/shapes,
+//!   model meta, artifact file list).
+//! * [`engine`] — thin wrapper over `xla::PjRtClient` (CPU):
+//!   `HloModuleProto::from_text_file -> XlaComputation -> compile`.
+//! * [`model`] — [`ModelRuntime`]: typed entry points (eval_loss / grad /
+//!   sgd_step / fused local_train) over flattened host parameters.
+//! * [`mock`] — [`mock::MockRuntime`]: a pure-Rust quadratic model with the
+//!   same [`ModelBackend`] trait, so the federated layer is fully testable
+//!   without artifacts or PJRT.
+
+pub mod engine;
+pub mod manifest;
+pub mod mock;
+pub mod model;
+
+pub use engine::PjrtEngine;
+pub use manifest::Manifest;
+pub use mock::MockRuntime;
+pub use model::ModelRuntime;
+
+use anyhow::Result;
+
+/// Host-side flattened parameters: one `Vec<f32>` per tensor, in manifest
+/// order. The federated layer treats these as opaque vectors (its server
+/// optimizers are elementwise).
+pub type Params = Vec<Vec<f32>>;
+
+/// Persist parameters (checkpointing for benches/experiments): per tensor,
+/// `u64 LE length` then raw LE f32s.
+pub fn save_params(params: &Params, path: &std::path::Path) -> Result<()> {
+    use std::io::Write;
+    if let Some(d) = path.parent() {
+        std::fs::create_dir_all(d)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(&(params.len() as u64).to_le_bytes())?;
+    for t in params {
+        f.write_all(&(t.len() as u64).to_le_bytes())?;
+        for v in t {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Inverse of [`save_params`].
+pub fn load_params(path: &std::path::Path) -> Result<Params> {
+    use std::io::Read;
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut b8 = [0u8; 8];
+    f.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        f.read_exact(&mut b8)?;
+        let len = u64::from_le_bytes(b8) as usize;
+        let mut t = Vec::with_capacity(len);
+        let mut b4 = [0u8; 4];
+        for _ in 0..len {
+            f.read_exact(&mut b4)?;
+            t.push(f32::from_le_bytes(b4));
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod param_io_tests {
+    #[test]
+    fn save_load_roundtrip() {
+        let p: super::Params = vec![vec![1.5, -2.5], vec![], vec![0.0; 7]];
+        let path = std::env::temp_dir().join("grouper_params_io").join("p.bin");
+        super::save_params(&p, &path).unwrap();
+        assert_eq!(super::load_params(&path).unwrap(), p);
+    }
+}
+
+/// What the federated layer needs from a model, independent of backend
+/// (PJRT artifacts or the pure-Rust mock).
+///
+/// Deliberately not `Send`/`Sync`: the PJRT executables hold `Rc` client
+/// handles, and the round loop is sequential by design (clients within a
+/// round share one CPU device; parallelism lives in the data pipeline).
+pub trait ModelBackend {
+    /// Fresh initial parameters (deterministic).
+    fn init_params(&self) -> Params;
+
+    /// (batch_size, tokens_per_example): clients feed token buffers of
+    /// exactly `batch * tokens_per_example` i32s per batch.
+    fn batch_shape(&self) -> (usize, usize);
+
+    /// Vocabulary size (token ids must be < this).
+    fn vocab_size(&self) -> usize;
+
+    /// Padding token id (masked out of the loss).
+    fn pad_id(&self) -> i32;
+
+    /// Mean masked CE loss of one batch.
+    fn eval_loss(&self, params: &Params, tokens: &[i32]) -> Result<f32>;
+
+    /// (gradients, loss) of one batch — the FedSGD client step.
+    fn grad(&self, params: &Params, tokens: &[i32]) -> Result<(Params, f32)>;
+
+    /// Fused FedSGD client: mean gradient (and loss) over `tau` stacked
+    /// batches, all at the broadcast parameters. Backends without a fused
+    /// executable fall back to looping [`ModelBackend::grad`].
+    fn grad_multi(&self, params: &Params, tokens: &[i32], tau: usize) -> Result<(Params, f32)> {
+        let (b, t) = self.batch_shape();
+        let per = b * t;
+        assert_eq!(tokens.len(), tau * per, "grad_multi token buffer size");
+        let mut acc: Option<Params> = None;
+        let mut loss_sum = 0.0f32;
+        for i in 0..tau {
+            let (g, l) = self.grad(params, &tokens[i * per..(i + 1) * per])?;
+            loss_sum += l;
+            match &mut acc {
+                None => acc = Some(g),
+                Some(a) => {
+                    for (at, gt) in a.iter_mut().zip(&g) {
+                        for (av, gv) in at.iter_mut().zip(gt) {
+                            *av += gv;
+                        }
+                    }
+                }
+            }
+        }
+        let mut mean = acc.unwrap();
+        for t in mean.iter_mut() {
+            for v in t.iter_mut() {
+                *v /= tau as f32;
+            }
+        }
+        Ok((mean, loss_sum / tau as f32))
+    }
+
+    /// One client SGD step; returns (new params, loss).
+    fn sgd_step(&self, params: &Params, tokens: &[i32], lr: f32) -> Result<(Params, f32)>;
+
+    /// Fused tau-step local training over `tau` stacked batches
+    /// (tokens.len() == tau * batch * tokens_per_example). Returns
+    /// (new params, mean loss). Backends without a fused executable for
+    /// this tau fall back to looping [`ModelBackend::sgd_step`].
+    fn local_train(
+        &self,
+        params: &Params,
+        tokens: &[i32],
+        tau: usize,
+        lr: f32,
+    ) -> Result<(Params, f32)> {
+        let (b, t) = self.batch_shape();
+        let per = b * t;
+        assert_eq!(tokens.len(), tau * per, "local_train token buffer size");
+        let mut p = params.clone();
+        let mut loss_sum = 0.0f32;
+        for i in 0..tau {
+            let (np, l) = self.sgd_step(&p, &tokens[i * per..(i + 1) * per], lr)?;
+            p = np;
+            loss_sum += l;
+        }
+        Ok((p, loss_sum / tau as f32))
+    }
+
+    /// Whether `local_train` for this tau executes as one fused PJRT call
+    /// (perf introspection for Table 4 / EXPERIMENTS.md §Perf).
+    fn has_fused_tau(&self, tau: usize) -> bool {
+        let _ = tau;
+        false
+    }
+}

@@ -1,0 +1,329 @@
+//! [`ModelRuntime`]: the typed facade over the compiled AOT artifacts.
+//!
+//! Executes `eval_loss` / `grad` / `sgd_step` / fused `local_train` with
+//! flattened host parameters ([`super::Params`]), converting to/from
+//! `xla::Literal`s at the PJRT boundary. On the CPU client these
+//! conversions are memcpys; the fused `local_train` artifact exists
+//! precisely to amortize them (one execute per client per round instead of
+//! tau — see EXPERIMENTS.md §Perf).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::PjrtEngine;
+use super::manifest::Manifest;
+use super::{ModelBackend, Params};
+
+/// An artifact compiled on first use. Eager compilation of every entry
+/// point made `ModelRuntime::load` take ~60s for the `small` config
+/// (7 executables); training typically touches 2-3 of them — lazy
+/// compilation cut e2e startup ~4x (EXPERIMENTS.md §Perf L3-1).
+struct LazyExe {
+    path: std::path::PathBuf,
+    cell: std::cell::OnceCell<xla::PjRtLoadedExecutable>,
+}
+
+impl LazyExe {
+    fn new(path: std::path::PathBuf) -> Self {
+        LazyExe { path, cell: std::cell::OnceCell::new() }
+    }
+
+    fn get(&self, engine: &PjrtEngine) -> Result<&xla::PjRtLoadedExecutable> {
+        if self.cell.get().is_none() {
+            let exe = engine.compile_hlo_text(&self.path)?;
+            let _ = self.cell.set(exe);
+        }
+        Ok(self.cell.get().unwrap())
+    }
+}
+
+/// A loaded model config: manifest + lazily-compiled executables.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    engine: PjrtEngine,
+    exe_eval: LazyExe,
+    exe_grad: LazyExe,
+    exe_step: LazyExe,
+    exe_local: HashMap<usize, LazyExe>,
+    exe_grad_multi: HashMap<usize, LazyExe>,
+    batch_size: usize,
+    tokens_per_example: usize,
+    vocab_size: usize,
+    pad_id: i32,
+}
+
+impl ModelRuntime {
+    /// Load config `name` from `artifacts_dir`. Executables are compiled
+    /// lazily, on first use.
+    pub fn load(artifacts_dir: &Path, name: &str) -> Result<Self> {
+        let engine = PjrtEngine::cpu()?;
+        Self::load_with_engine(engine, artifacts_dir, name)
+    }
+
+    pub fn load_with_engine(
+        engine: PjrtEngine,
+        artifacts_dir: &Path,
+        name: &str,
+    ) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir, name)?;
+        let need = |f: &str| -> Result<LazyExe> {
+            let a = manifest
+                .artifact(f, None)
+                .with_context(|| format!("manifest lacks artifact {f}"))?;
+            let path = manifest.artifact_path(a);
+            if !path.exists() {
+                anyhow::bail!("artifact file missing: {}", path.display());
+            }
+            Ok(LazyExe::new(path))
+        };
+        let exe_eval = need("eval_loss")?;
+        let exe_grad = need("grad")?;
+        let exe_step = need("sgd_step")?;
+        let mut exe_local = HashMap::new();
+        let mut exe_grad_multi = HashMap::new();
+        for a in &manifest.artifacts {
+            if let Some(tau) = a.tau {
+                let lazy = LazyExe::new(manifest.artifact_path(a));
+                match a.func.as_str() {
+                    "local_train" => {
+                        exe_local.insert(tau, lazy);
+                    }
+                    "grad_multi" => {
+                        exe_grad_multi.insert(tau, lazy);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let batch_size = manifest.meta_usize("batch_size")?;
+        let seq_len = manifest.meta_usize("seq_len")?;
+        let vocab_size = manifest.meta_usize("vocab_size")?;
+        let pad_id = manifest.meta_usize("pad_id")? as i32;
+        Ok(ModelRuntime {
+            manifest,
+            engine,
+            exe_eval,
+            exe_grad,
+            exe_step,
+            exe_local,
+            exe_grad_multi,
+            batch_size,
+            tokens_per_example: seq_len + 1,
+            vocab_size,
+            pad_id,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.engine.platform()
+    }
+
+    pub fn num_param_tensors(&self) -> usize {
+        self.manifest.params.len()
+    }
+
+    // -- literal conversion helpers --------------------------------------
+
+    fn params_to_literals(&self, params: &Params) -> Result<Vec<xla::Literal>> {
+        if params.len() != self.manifest.params.len() {
+            bail!(
+                "params arity {} != manifest {}",
+                params.len(),
+                self.manifest.params.len()
+            );
+        }
+        let mut out = Vec::with_capacity(params.len());
+        for (spec, vals) in self.manifest.params.iter().zip(params) {
+            if vals.len() != spec.num_elements() {
+                bail!("param {} has {} elements, want {}", spec.name, vals.len(), spec.num_elements());
+            }
+            let lit = xla::Literal::vec1(vals);
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            out.push(lit.reshape(&dims).map_err(anyhow::Error::msg)?);
+        }
+        Ok(out)
+    }
+
+    fn tokens_literal(&self, tokens: &[i32], tau: Option<usize>) -> Result<xla::Literal> {
+        let per = self.batch_size * self.tokens_per_example;
+        let want = per * tau.unwrap_or(1);
+        if tokens.len() != want {
+            bail!("token buffer has {} ints, want {want}", tokens.len());
+        }
+        let lit = xla::Literal::vec1(tokens);
+        let dims: Vec<i64> = match tau {
+            None => vec![self.batch_size as i64, self.tokens_per_example as i64],
+            Some(t) => vec![t as i64, self.batch_size as i64, self.tokens_per_example as i64],
+        };
+        lit.reshape(&dims).map_err(anyhow::Error::msg)
+    }
+
+    /// Execute and untuple into (leading params-like tensors, trailing scalar).
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+        expect_params_out: bool,
+    ) -> Result<(Params, f32)> {
+        let result = exe.execute::<xla::Literal>(args).map_err(anyhow::Error::msg)?;
+        let out = result[0][0].to_literal_sync().map_err(anyhow::Error::msg)?;
+        let mut elems = out.to_tuple().map_err(anyhow::Error::msg)?;
+        if elems.is_empty() {
+            bail!("executable returned empty tuple");
+        }
+        let loss_lit = elems.pop().unwrap();
+        let loss = loss_lit
+            .to_vec::<f32>()
+            .map_err(anyhow::Error::msg)?
+            .first()
+            .copied()
+            .context("empty loss literal")?;
+        let params = if expect_params_out {
+            if elems.len() != self.manifest.params.len() {
+                bail!(
+                    "executable returned {} tensors, want {}",
+                    elems.len(),
+                    self.manifest.params.len()
+                );
+            }
+            elems
+                .into_iter()
+                .map(|l| l.to_vec::<f32>().map_err(anyhow::Error::msg))
+                .collect::<Result<Params>>()?
+        } else {
+            Params::new()
+        };
+        Ok((params, loss))
+    }
+}
+
+impl ModelBackend for ModelRuntime {
+    fn init_params(&self) -> Params {
+        self.manifest
+            .load_init_params()
+            .expect("init params blob missing/corrupt — rerun `make artifacts`")
+    }
+
+    fn batch_shape(&self) -> (usize, usize) {
+        (self.batch_size, self.tokens_per_example)
+    }
+
+    fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    fn pad_id(&self) -> i32 {
+        self.pad_id
+    }
+
+    fn eval_loss(&self, params: &Params, tokens: &[i32]) -> Result<f32> {
+        let mut args = self.params_to_literals(params)?;
+        args.push(self.tokens_literal(tokens, None)?);
+        let (_, loss) = self.run(self.exe_eval.get(&self.engine)?, &args, false)?;
+        Ok(loss)
+    }
+
+    fn grad(&self, params: &Params, tokens: &[i32]) -> Result<(Params, f32)> {
+        let mut args = self.params_to_literals(params)?;
+        args.push(self.tokens_literal(tokens, None)?);
+        self.run(self.exe_grad.get(&self.engine)?, &args, true)
+    }
+
+    fn sgd_step(&self, params: &Params, tokens: &[i32], lr: f32) -> Result<(Params, f32)> {
+        let mut args = self.params_to_literals(params)?;
+        args.push(self.tokens_literal(tokens, None)?);
+        args.push(xla::Literal::scalar(lr));
+        self.run(self.exe_step.get(&self.engine)?, &args, true)
+    }
+
+    fn local_train(
+        &self,
+        params: &Params,
+        tokens: &[i32],
+        tau: usize,
+        lr: f32,
+    ) -> Result<(Params, f32)> {
+        match self.exe_local.get(&tau) {
+            Some(exe) => {
+                let mut args = self.params_to_literals(params)?;
+                args.push(self.tokens_literal(tokens, Some(tau))?);
+                args.push(xla::Literal::scalar(lr));
+                self.run(exe.get(&self.engine)?, &args, true)
+            }
+            None => {
+                // No fused executable for this tau: loop the single-step one.
+                let (b, t) = self.batch_shape();
+                let per = b * t;
+                if tokens.len() != tau * per {
+                    bail!("token buffer has {} ints, want {}", tokens.len(), tau * per);
+                }
+                let mut p = params.clone();
+                let mut loss_sum = 0.0f32;
+                for i in 0..tau {
+                    let (np, l) = self.sgd_step(&p, &tokens[i * per..(i + 1) * per], lr)?;
+                    p = np;
+                    loss_sum += l;
+                }
+                Ok((p, loss_sum / tau as f32))
+            }
+        }
+    }
+
+    fn grad_multi(&self, params: &Params, tokens: &[i32], tau: usize) -> Result<(Params, f32)> {
+        match self.exe_grad_multi.get(&tau) {
+            Some(exe) => {
+                let mut args = self.params_to_literals(params)?;
+                args.push(self.tokens_literal(tokens, Some(tau))?);
+                self.run(exe.get(&self.engine)?, &args, true)
+            }
+            None => {
+                // Fall back to the default loop over single-batch grads.
+                let (b, t) = self.batch_shape();
+                let per = b * t;
+                if tokens.len() != tau * per {
+                    bail!("token buffer has {} ints, want {}", tokens.len(), tau * per);
+                }
+                let mut acc: Option<Params> = None;
+                let mut loss_sum = 0.0f32;
+                for i in 0..tau {
+                    let (g, l) = self.grad(params, &tokens[i * per..(i + 1) * per])?;
+                    loss_sum += l;
+                    match &mut acc {
+                        None => acc = Some(g),
+                        Some(a) => {
+                            for (at, gt) in a.iter_mut().zip(&g) {
+                                for (av, gv) in at.iter_mut().zip(gt) {
+                                    *av += gv;
+                                }
+                            }
+                        }
+                    }
+                }
+                let mut mean = acc.unwrap();
+                for te in mean.iter_mut() {
+                    for v in te.iter_mut() {
+                        *v /= tau as f32;
+                    }
+                }
+                Ok((mean, loss_sum / tau as f32))
+            }
+        }
+    }
+
+    fn has_fused_tau(&self, tau: usize) -> bool {
+        self.exe_local.contains_key(&tau)
+    }
+}
+
+// Integration coverage for ModelRuntime lives in rust/tests/runtime_artifacts.rs
+// (requires `make artifacts`); unit tests here cover argument validation only.
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn params_type_is_plain_vectors() {
+        let p: super::Params = vec![vec![1.0, 2.0], vec![3.0]];
+        assert_eq!(p.iter().map(|v| v.len()).sum::<usize>(), 3);
+    }
+}

@@ -1,0 +1,10 @@
+//! WordPiece tokenization (§5.1 uses a WordPiece tokenizer [79] with a
+//! BERT vocabulary; no pretrained vocab ships offline, so [`VocabBuilder`]
+//! trains one from the corpus with the same greedy longest-match-first
+//! decoding and `##` continuation convention).
+
+pub mod vocab_builder;
+pub mod wordpiece;
+
+pub use vocab_builder::VocabBuilder;
+pub use wordpiece::{WordPiece, BOS_ID, PAD_ID, UNK_ID};

@@ -1,0 +1,214 @@
+//! Frequency-based WordPiece vocabulary training.
+//!
+//! Simplified from the BPE-style likelihood training of [79] to a
+//! frequency scheme that preserves the properties the experiments need:
+//! full coverage (every ASCII-lowercase word is encodable: all single
+//! chars and their `##` forms are always included), high-frequency words
+//! as single tokens (Zipf head), and sub-word sharing for the tail
+//! (frequent prefixes/suffix pieces).
+
+use std::collections::HashMap;
+
+use super::wordpiece::{WordPiece, SPECIALS};
+
+/// Accumulates word counts from text, then emits a [`WordPiece`] vocab.
+#[derive(Debug, Default)]
+pub struct VocabBuilder {
+    word_counts: HashMap<String, u64>,
+    total_words: u64,
+}
+
+impl VocabBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn feed(&mut self, text: &str) {
+        for w in text.split_whitespace() {
+            *self.word_counts.entry(w.to_string()).or_insert(0) += 1;
+            self.total_words += 1;
+        }
+    }
+
+    pub fn distinct_words(&self) -> usize {
+        self.word_counts.len()
+    }
+
+    pub fn total_words(&self) -> u64 {
+        self.total_words
+    }
+
+    /// Build a vocabulary of exactly `vocab_size` tokens (>= specials +
+    /// observed alphabet; panics otherwise).
+    pub fn build(&self, vocab_size: usize) -> WordPiece {
+        // 1. Specials.
+        let mut tokens: Vec<String> = SPECIALS.iter().map(|s| s.to_string()).collect();
+        let mut have: std::collections::HashSet<String> =
+            tokens.iter().cloned().collect();
+
+        // 2. Alphabet (chars + ## forms) for total coverage.
+        let mut chars: Vec<char> = self
+            .word_counts
+            .keys()
+            .flat_map(|w| w.chars())
+            .collect::<std::collections::HashSet<char>>()
+            .into_iter()
+            .collect();
+        chars.sort();
+        for c in &chars {
+            for t in [c.to_string(), format!("##{c}")] {
+                if have.insert(t.clone()) {
+                    tokens.push(t);
+                }
+            }
+        }
+        assert!(
+            tokens.len() <= vocab_size,
+            "vocab_size {vocab_size} smaller than specials+alphabet ({})",
+            tokens.len()
+        );
+
+        // 3. Candidate scoring: whole words by count; word prefixes (len>=2)
+        //    and suffix pieces (##s, len>=2) by the count mass they touch.
+        let mut scores: HashMap<String, u64> = HashMap::new();
+        for (w, &c) in &self.word_counts {
+            let n = w.len();
+            *scores.entry(w.clone()).or_insert(0) += c * 4; // whole words favored
+            let max_aff = n.min(8);
+            for l in 2..max_aff {
+                if w.is_char_boundary(l) {
+                    *scores.entry(w[..l].to_string()).or_insert(0) += c;
+                }
+                if w.is_char_boundary(n - l) {
+                    *scores.entry(format!("##{}", &w[n - l..])).or_insert(0) += c;
+                }
+            }
+        }
+        let mut candidates: Vec<(String, u64)> = scores.into_iter().collect();
+        // Deterministic order: score desc, then lexicographic.
+        candidates.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+
+        for (tok, _) in candidates {
+            if tokens.len() == vocab_size {
+                break;
+            }
+            if have.insert(tok.clone()) {
+                tokens.push(tok);
+            }
+        }
+        // 4. Pad with reserved tokens if the corpus was too small to fill
+        //    the budget (keeps the model's vocab_size contract).
+        let mut i = 0;
+        while tokens.len() < vocab_size {
+            let t = format!("[RES{i}]");
+            if have.insert(t.clone()) {
+                tokens.push(t);
+            }
+            i += 1;
+        }
+        WordPiece::new(tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::text::TextModel;
+    use crate::tokenizer::wordpiece::UNK_ID;
+    use crate::util::rng::Rng;
+
+    fn corpus_builder(words: usize) -> (VocabBuilder, String) {
+        let model = TextModel::new(2000, 1.2);
+        let mut rng = Rng::new(17);
+        let text = model.generate(&mut rng, words, 0, 0.2);
+        let mut b = VocabBuilder::new();
+        b.feed(&text);
+        (b, text)
+    }
+
+    #[test]
+    fn exact_vocab_size() {
+        let (b, _) = corpus_builder(20_000);
+        for &v in &[256usize, 1024] {
+            let wp = b.build(v);
+            assert_eq!(wp.vocab_size(), v);
+        }
+    }
+
+    #[test]
+    fn full_coverage_no_unk_on_training_corpus() {
+        let (b, text) = corpus_builder(10_000);
+        let wp = b.build(512);
+        let ids = wp.encode_to_vec(&text);
+        assert!(!ids.is_empty());
+        assert!(
+            !ids.contains(&UNK_ID),
+            "alphabet coverage must prevent UNK on in-domain text"
+        );
+    }
+
+    #[test]
+    fn frequent_words_become_single_tokens() {
+        let (b, _) = corpus_builder(30_000);
+        let wp = b.build(1024);
+        // The Zipf head word appears thousands of times -> one token.
+        let head = TextModel::new(2000, 1.2).word(0).to_string();
+        assert_eq!(wp.encode_to_vec(&head).len(), 1, "head word split: {head}");
+    }
+
+    #[test]
+    fn rare_words_split_into_multiple_pieces() {
+        let (b, _) = corpus_builder(30_000);
+        let wp = b.build(320);
+        let model = TextModel::new(2000, 1.2);
+        // Deep-tail words should need >= 2 pieces at a small vocab size.
+        let mut split = 0;
+        for r in 1900..1950 {
+            if wp.encode_to_vec(model.word(r)).len() >= 2 {
+                split += 1;
+            }
+        }
+        assert!(split > 25, "tail words unexpectedly whole: {split}/50");
+    }
+
+    #[test]
+    fn compression_better_than_chars() {
+        let (b, text) = corpus_builder(5_000);
+        let wp = b.build(1024);
+        let ids = wp.encode_to_vec(&text);
+        let chars: usize = text.split_whitespace().map(|w| w.len()).sum();
+        assert!(
+            ids.len() * 2 < chars,
+            "tokenization barely compresses: {} ids vs {} chars",
+            ids.len(),
+            chars
+        );
+    }
+
+    #[test]
+    fn small_corpus_pads_with_reserved() {
+        let mut b = VocabBuilder::new();
+        b.feed("aa bb aa");
+        let wp = b.build(64);
+        assert_eq!(wp.vocab_size(), 64);
+        assert!(wp.id("[RES0]").is_some());
+        assert!(!wp.encode_to_vec("aa bb").contains(&UNK_ID));
+    }
+
+    #[test]
+    #[should_panic(expected = "smaller than")]
+    fn rejects_impossible_budget() {
+        let (b, _) = corpus_builder(1000);
+        b.build(10);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (b, _) = corpus_builder(5000);
+        let a = b.build(256);
+        let c = b.build(256);
+        for i in 0..256 {
+            assert_eq!(a.token(i), c.token(i));
+        }
+    }
+}

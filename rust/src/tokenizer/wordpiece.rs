@@ -1,0 +1,223 @@
+//! Greedy longest-match-first WordPiece encoding (Wu et al. [79]),
+//! matching the BERT convention: the first piece of a word is a vocabulary
+//! entry, subsequent pieces carry a `##` prefix; words with no possible
+//! decomposition become `[UNK]`.
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+pub const PAD_ID: u32 = 0;
+pub const UNK_ID: u32 = 1;
+pub const BOS_ID: u32 = 2;
+pub const SPECIALS: [&str; 3] = ["[PAD]", "[UNK]", "[BOS]"];
+
+/// An immutable WordPiece vocabulary + encoder.
+#[derive(Debug, Clone)]
+pub struct WordPiece {
+    tokens: Vec<String>,
+    ids: HashMap<String, u32>,
+    max_piece_len: usize,
+}
+
+impl WordPiece {
+    /// Build from a token list; the first three entries must be the
+    /// specials (the vocab builder guarantees this).
+    pub fn new(tokens: Vec<String>) -> Self {
+        assert!(tokens.len() >= SPECIALS.len(), "vocab too small");
+        for (i, s) in SPECIALS.iter().enumerate() {
+            assert_eq!(tokens[i], *s, "special token order");
+        }
+        let ids: HashMap<String, u32> =
+            tokens.iter().enumerate().map(|(i, t)| (t.clone(), i as u32)).collect();
+        assert_eq!(ids.len(), tokens.len(), "duplicate vocab tokens");
+        let max_piece_len = tokens.iter().map(|t| t.trim_start_matches("##").len()).max().unwrap();
+        WordPiece { tokens, ids, max_piece_len }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn token(&self, id: u32) -> &str {
+        &self.tokens[id as usize]
+    }
+
+    pub fn id(&self, token: &str) -> Option<u32> {
+        self.ids.get(token).copied()
+    }
+
+    /// Encode one word into piece ids (greedy longest-match-first).
+    pub fn encode_word(&self, word: &str, out: &mut Vec<u32>) {
+        if word.is_empty() {
+            return;
+        }
+        let start_len = out.len();
+        let bytes = word.as_bytes();
+        let mut pos = 0;
+        let mut first = true;
+        while pos < bytes.len() {
+            let max_end = (pos + self.max_piece_len + 2).min(bytes.len());
+            let mut matched = None;
+            let mut end = max_end;
+            while end > pos {
+                // Our corpora are ASCII; guard for UTF-8 anyway.
+                if !word.is_char_boundary(end) {
+                    end -= 1;
+                    continue;
+                }
+                let piece = &word[pos..end];
+                let lookup = if first {
+                    self.ids.get(piece)
+                } else {
+                    // avoid allocation for the common single-char case via
+                    // a small stack buffer
+                    let mut s = String::with_capacity(piece.len() + 2);
+                    s.push_str("##");
+                    s.push_str(piece);
+                    self.ids.get(&s)
+                };
+                if let Some(&id) = lookup {
+                    matched = Some((id, end));
+                    break;
+                }
+                end -= 1;
+            }
+            match matched {
+                Some((id, next)) => {
+                    out.push(id);
+                    pos = next;
+                    first = false;
+                }
+                None => {
+                    // No decomposition: the whole word becomes [UNK].
+                    out.truncate(start_len);
+                    out.push(UNK_ID);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Encode whitespace-separated text.
+    pub fn encode(&self, text: &str, out: &mut Vec<u32>) {
+        for word in text.split_whitespace() {
+            self.encode_word(word, out);
+        }
+    }
+
+    pub fn encode_to_vec(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.encode(text, &mut out);
+        out
+    }
+
+    /// Decode ids back to text (## pieces merge into the previous word).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            let t = &self.tokens[id as usize];
+            if let Some(cont) = t.strip_prefix("##") {
+                out.push_str(cont);
+            } else {
+                if !out.is_empty() {
+                    out.push(' ');
+                }
+                out.push_str(t);
+            }
+        }
+        out
+    }
+
+    /// Persist as one token per line.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(d) = path.parent() {
+            std::fs::create_dir_all(d)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for t in &self.tokens {
+            writeln!(f, "{t}")?;
+        }
+        f.flush()
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Self> {
+        let f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let tokens: Vec<String> = f.lines().collect::<Result<_, _>>()?;
+        Ok(WordPiece::new(tokens))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_vocab() -> WordPiece {
+        let mut tokens: Vec<String> = SPECIALS.iter().map(|s| s.to_string()).collect();
+        for t in ["a", "b", "c", "ab", "abc", "##a", "##b", "##c", "##bc", "hello"] {
+            tokens.push(t.to_string());
+        }
+        WordPiece::new(tokens)
+    }
+
+    #[test]
+    fn greedy_longest_match() {
+        let wp = toy_vocab();
+        // "abc" matches the whole-word piece, not a+##bc.
+        assert_eq!(wp.decode(&wp.encode_to_vec("abc")), "abc");
+        assert_eq!(wp.encode_to_vec("abc").len(), 1);
+        // "abca" -> abc + ##a
+        let ids = wp.encode_to_vec("abca");
+        assert_eq!(ids.len(), 2);
+        assert_eq!(wp.decode(&ids), "abca");
+        // "ab" whole piece
+        assert_eq!(wp.encode_to_vec("ab").len(), 1);
+    }
+
+    #[test]
+    fn unk_for_unknown_chars() {
+        let wp = toy_vocab();
+        assert_eq!(wp.encode_to_vec("xyz"), vec![UNK_ID]);
+        // A word that starts decomposable but hits an unknown char is UNK
+        // as a whole (BERT behavior).
+        assert_eq!(wp.encode_to_vec("abx"), vec![UNK_ID]);
+    }
+
+    #[test]
+    fn multi_word_encoding() {
+        let wp = toy_vocab();
+        let ids = wp.encode_to_vec("hello abc  hello");
+        assert_eq!(wp.decode(&ids), "hello abc hello");
+    }
+
+    #[test]
+    fn empty_and_whitespace() {
+        let wp = toy_vocab();
+        assert!(wp.encode_to_vec("").is_empty());
+        assert!(wp.encode_to_vec("   \t\n").is_empty());
+    }
+
+    #[test]
+    fn specials_have_fixed_ids() {
+        let wp = toy_vocab();
+        assert_eq!(wp.id("[PAD]"), Some(PAD_ID));
+        assert_eq!(wp.id("[UNK]"), Some(UNK_ID));
+        assert_eq!(wp.id("[BOS]"), Some(BOS_ID));
+    }
+
+    #[test]
+    #[should_panic(expected = "special token order")]
+    fn rejects_wrong_special_order() {
+        WordPiece::new(vec!["[UNK]".into(), "[PAD]".into(), "[BOS]".into(), "a".into()]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let wp = toy_vocab();
+        let p = std::env::temp_dir().join("grouper_wp_test").join("vocab.txt");
+        wp.save(&p).unwrap();
+        let wp2 = WordPiece::load(&p).unwrap();
+        assert_eq!(wp2.vocab_size(), wp.vocab_size());
+        assert_eq!(wp2.encode_to_vec("abca"), wp.encode_to_vec("abca"));
+    }
+}

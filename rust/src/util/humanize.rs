@@ -1,0 +1,90 @@
+//! Human-friendly formatting of counts, byte sizes, and durations, matching
+//! the paper's table conventions ("132B", "15.6M", "11K", "> 7200").
+
+/// Format a count the way the paper's Table 1 does: 132B / 15.6M / 11K.
+pub fn count(x: f64) -> String {
+    let ax = x.abs();
+    if ax >= 1e9 {
+        trim(x / 1e9, "B")
+    } else if ax >= 1e6 {
+        trim(x / 1e6, "M")
+    } else if ax >= 1e3 {
+        trim(x / 1e3, "K")
+    } else if x == x.trunc() {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+fn trim(v: f64, suffix: &str) -> String {
+    if v >= 100.0 {
+        format!("{v:.0}{suffix}")
+    } else if v >= 10.0 {
+        let s = format!("{v:.1}");
+        format!("{}{suffix}", s.strip_suffix(".0").unwrap_or(&s))
+    } else {
+        let s = format!("{v:.2}");
+        let s = s.trim_end_matches('0').trim_end_matches('.');
+        format!("{s}{suffix}")
+    }
+}
+
+/// Bytes -> "1.2 GiB" style.
+pub fn bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Seconds -> compact duration.
+pub fn secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2} s")
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_paper_style() {
+        assert_eq!(count(132e9), "132B");
+        assert_eq!(count(15.6e6), "15.6M");
+        assert_eq!(count(11_000.0), "11K");
+        assert_eq!(count(815.0), "815");
+        assert_eq!(count(0.36e9), "360M");
+        assert_eq!(count(42.0), "42");
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.00 KiB");
+        assert_eq!(bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+
+    #[test]
+    fn secs_ranges() {
+        assert_eq!(secs(0.0000005), "0.5 µs");
+        assert_eq!(secs(0.25), "250.00 ms");
+        assert_eq!(secs(3.5), "3.50 s");
+        assert_eq!(secs(180.0), "3.0 min");
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared utilities: deterministic RNG + distribution samplers, timers,
+//! markdown tables, a byte-counting global allocator (Table 12's peak-memory
+//! instrumentation), a scoped thread pool, and a small property-testing
+//! helper (the offline registry has no `rand`/`proptest`/`criterion`, so
+//! these are in-repo — see DESIGN.md §2).
+
+pub mod alloc;
+pub mod humanize;
+pub mod proptest_lite;
+pub mod rng;
+pub mod table;
+pub mod threadpool;
+pub mod timer;

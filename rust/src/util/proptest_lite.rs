@@ -1,0 +1,135 @@
+//! proptest-lite: a minimal property-based testing helper.
+//!
+//! The offline registry lacks `proptest`, so this provides the core of what
+//! the test suite needs: run a property over many seeded-random cases and,
+//! on failure, report the case number and seed so the exact input can be
+//! replayed deterministically. Generators are plain closures over
+//! [`crate::util::rng::Rng`] — no macro DSL, no shrinking, but fully
+//! reproducible.
+//!
+//! ```ignore
+//! check(100, |rng| {
+//!     let xs = gen_vec(rng, 0..=50, |r| r.gen_range(1000) as i64);
+//!     let mut sorted = xs.clone();
+//!     sorted.sort();
+//!     prop_assert(sorted.len() == xs.len(), "sort changed length")
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Result type for properties: `Err(msg)` fails the case with context.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for property bodies.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert equality with debug formatting.
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, msg: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a:?} != {b:?}"))
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (failing the enclosing
+/// `#[test]`) with the case index and seed on the first failure.
+pub fn check<F: FnMut(&mut Rng) -> PropResult>(cases: usize, mut prop: F) {
+    check_seeded(0xDA7A_5E7_u64, cases, &mut prop);
+}
+
+/// Same, with an explicit base seed (use to replay a reported failure).
+pub fn check_seeded<F: FnMut(&mut Rng) -> PropResult>(base_seed: u64, cases: usize, prop: &mut F) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed at case {case}/{cases} (replay: check_seeded({base_seed:#x}) case {case}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a Vec whose length is uniform in `len_range`.
+pub fn gen_vec<T>(
+    rng: &mut Rng,
+    len_range: std::ops::RangeInclusive<usize>,
+    mut gen: impl FnMut(&mut Rng) -> T,
+) -> Vec<T> {
+    let (lo, hi) = (*len_range.start(), *len_range.end());
+    let len = lo + rng.gen_range_usize(hi - lo + 1);
+    (0..len).map(|_| gen(rng)).collect()
+}
+
+/// Generate ASCII-ish byte strings (useful for record payload fuzzing).
+pub fn gen_bytes(rng: &mut Rng, len_range: std::ops::RangeInclusive<usize>) -> Vec<u8> {
+    gen_vec(rng, len_range, |r| r.gen_range(256) as u8)
+}
+
+/// Generate lowercase words.
+pub fn gen_word(rng: &mut Rng, len_range: std::ops::RangeInclusive<usize>) -> String {
+    gen_vec(rng, len_range, |r| (b'a' + r.gen_range(26) as u8) as char)
+        .into_iter()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(50, |rng| {
+            let x = rng.gen_range(100);
+            prop_assert(x < 100, "range bound")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        check(50, |rng| {
+            let x = rng.gen_range(100);
+            prop_assert(x < 50, "upper half must appear within 50 cases")
+        });
+    }
+
+    #[test]
+    fn gen_vec_len_in_range() {
+        check(100, |rng| {
+            let v = gen_vec(rng, 2..=5, |r| r.next_u32());
+            prop_assert((2..=5).contains(&v.len()), "len out of range")
+        });
+    }
+
+    #[test]
+    fn gen_word_is_lowercase() {
+        check(100, |rng| {
+            let w = gen_word(rng, 1..=10);
+            prop_assert(w.chars().all(|c| c.is_ascii_lowercase()), "non-lowercase")
+        });
+    }
+
+    #[test]
+    fn cases_are_reproducible() {
+        let mut first: Vec<u64> = Vec::new();
+        check(10, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check(10, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

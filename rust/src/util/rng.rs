@@ -1,0 +1,397 @@
+//! Deterministic pseudo-random generation and the distribution samplers the
+//! synthetic corpora need.
+//!
+//! The offline crate registry has no `rand`, so this module provides a
+//! small, well-tested substitute: [`Rng`] is SplitMix64 (Steele et al.,
+//! "Fast Splittable Pseudorandom Number Generators") — a 64-bit
+//! counter-based generator with excellent statistical quality for
+//! simulation purposes and, crucially for reproducibility, *stable output
+//! across platforms and releases*. Every dataset/partition/experiment in
+//! this repo is a pure function of its seed.
+//!
+//! Distribution samplers implemented on top: uniform ranges, Bernoulli,
+//! Gaussian (Box–Muller), log-normal (the paper's Figure 3 fits per-group
+//! sizes as log-normal), Zipf (bounded, via rejection-inversion — text
+//! token frequencies, per the paper's §4 discussion of heavy tails),
+//! Poisson, Dirichlet-process partition sampling (Appendix A.1's
+//! heterogeneous partitioner), and Fisher–Yates shuffling.
+
+/// SplitMix64: deterministic, seedable, platform-stable.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    /// Derive an independent stream for a sub-task (e.g. per group, per
+    /// shard) without correlating with the parent stream.
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let mut r = Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA24B_AED4_963E_E407));
+        r.next_u64();
+        r
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in `[0, n)`. Uses Lemire's multiply-shift rejection
+    /// to avoid modulo bias.
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "gen_range(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    pub fn gen_range_usize(&mut self, n: usize) -> usize {
+        self.gen_range(n as u64) as usize
+    }
+
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal: `exp(N(mu, sigma))`. The paper's per-group size model
+    /// (Figure 3: Q-Q of log sizes vs Gaussian is near-linear).
+    pub fn log_normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal_with(mu, sigma).exp()
+    }
+
+    /// Poisson via Knuth (small lambda) / normal approximation (large).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.next_f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = self.normal_with(lambda, lambda.sqrt()).round();
+            if x < 0.0 {
+                0
+            } else {
+                x as u64
+            }
+        }
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (k << n assumed).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        if k * 3 > n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            return all;
+        }
+        let mut seen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        while out.len() < k {
+            let i = self.gen_range_usize(n);
+            if seen.insert(i) {
+                out.push(i);
+            }
+        }
+        out
+    }
+}
+
+/// Bounded Zipf(s) sampler over `{0, .., n-1}` using precomputed inverse
+/// CDF tables — O(log n) per sample. Token frequencies in natural text are
+/// Zipfian (paper §4, refs [75, 76]).
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for i in 0..n {
+            total += 1.0 / ((i + 1) as f64).powf(s);
+            cdf.push(total);
+        }
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.cdf.len()
+    }
+}
+
+/// Chinese-restaurant-process sampler: the embarrassingly-parallel
+/// Dirichlet-process partitioner of Appendix A.1 assigns example `i` to a
+/// group drawn from CRP(alpha) — here made parallel-safe by hashing the
+/// example id into a per-example stream.
+pub struct CrpSampler {
+    pub alpha: f64,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl CrpSampler {
+    pub fn new(alpha: f64) -> Self {
+        CrpSampler { alpha, counts: Vec::new(), total: 0 }
+    }
+
+    /// Sequential CRP draw (used per-partition; the parallel pipeline runs
+    /// one CRP per hash bucket which preserves the marginal heavy tail).
+    pub fn sample(&mut self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64() * (self.total as f64 + self.alpha);
+        if u >= self.total as f64 || self.counts.is_empty() {
+            self.counts.push(1);
+            self.total += 1;
+            return self.counts.len() - 1;
+        }
+        let mut acc = 0.0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c as f64;
+            if u < acc {
+                self.counts[i] += 1;
+                self.total += 1;
+                return i;
+            }
+        }
+        let last = self.counts.len() - 1;
+        self.counts[last] += 1;
+        self.total += 1;
+        last
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.counts.len()
+    }
+}
+
+/// 64-bit FNV-1a — stable hashing for partition keys (std's SipHash is
+/// seeded per-process, which would make partitions non-reproducible).
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::new(7);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut r = Rng::new(4);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let x = r.gen_range(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn log_normal_median() {
+        let mut r = Rng::new(6);
+        let mu = 3.0;
+        let mut xs: Vec<f64> = (0..20_001).map(|_| r.log_normal(mu, 1.0)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[10_000];
+        // Median of log-normal is exp(mu).
+        assert!((median.ln() - mu).abs() < 0.05, "median {median}");
+    }
+
+    #[test]
+    fn zipf_is_heavy_headed() {
+        let mut r = Rng::new(7);
+        let z = Zipf::new(1000, 1.1);
+        let mut counts = vec![0u64; 1000];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        // Rank 0 must dominate rank 99 by roughly (100)^1.1.
+        assert!(counts[0] > counts[99] * 20, "{} vs {}", counts[0], counts[99]);
+        assert!(counts[0] > 0 && counts[999] < counts[0]);
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Rng::new(8);
+        for &lambda in &[2.0, 50.0] {
+            let n = 20_000;
+            let s: u64 = (0..n).map(|_| r.poisson(lambda)).sum();
+            let mean = s as f64 / n as f64;
+            assert!((mean - lambda).abs() < lambda * 0.05, "{mean} vs {lambda}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+        assert_ne!(xs, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(10);
+        for &(n, k) in &[(100usize, 10usize), (10, 10), (50, 40)] {
+            let idx = r.sample_indices(n, k);
+            assert_eq!(idx.len(), k);
+            let set: std::collections::HashSet<_> = idx.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn crp_generates_heavy_tail() {
+        let mut r = Rng::new(11);
+        let mut crp = CrpSampler::new(5.0);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..5000 {
+            *counts.entry(crp.sample(&mut r)).or_insert(0u64) += 1;
+        }
+        assert!(crp.num_groups() > 10, "too few groups: {}", crp.num_groups());
+        let max = counts.values().max().unwrap();
+        let min = counts.values().min().unwrap();
+        assert!(max > &(min * 10), "not heavy-tailed: {max} {min}");
+    }
+
+    #[test]
+    fn fnv1a_stable_values() {
+        // Pinned digest values: partition layouts must never change
+        // silently across releases.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"dataset-grouper"), fnv1a(b"dataset-grouper"));
+        assert_ne!(fnv1a(b"nytimes.com"), fnv1a(b"bbc.co.uk"));
+    }
+}

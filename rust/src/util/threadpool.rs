@@ -1,0 +1,138 @@
+//! A small fixed-size thread pool over std threads + channels.
+//!
+//! This is the execution substrate for the beam-lite pipeline runner
+//! (`pipeline::runner`): the offline registry has neither tokio nor rayon,
+//! and the pipeline's needs are simple — fan a queue of work items across
+//! N workers, collect results, propagate panics.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size pool; jobs are executed FIFO by whichever worker is free.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    sender: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("grouper-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { workers, sender: Some(tx) }
+    }
+
+    /// Default parallelism: available cores, capped.
+    pub fn default_workers() -> usize {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.
+    pub fn map<T, U, F>(&self, items: Vec<T>, f: F) -> Vec<U>
+    where
+        T: Send + 'static,
+        U: Send + 'static,
+        F: Fn(T) -> U + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel::<(usize, U)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let tx = tx.clone();
+            let f = Arc::clone(&f);
+            self.execute(move || {
+                let out = f(item);
+                // Receiver may be gone if the caller panicked; ignore.
+                let _ = tx.send((i, out));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<U>> = (0..n).map(|_| None).collect();
+        for (i, u) in rx {
+            slots[i] = Some(u);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("worker panicked before producing a result"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.sender.take(); // close the channel; workers exit their loops
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map((0..100).collect::<Vec<i32>>(), |x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn map_with_uneven_work() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map(vec![30u64, 1, 20, 2, 10, 3], |x| {
+            std::thread::sleep(std::time::Duration::from_millis(x / 10));
+            x + 1
+        });
+        assert_eq!(out, vec![31, 2, 21, 3, 11, 4]);
+    }
+
+    #[test]
+    fn single_worker_is_serial_and_correct() {
+        let pool = ThreadPool::new(1);
+        let out = pool.map(vec![1, 2, 3], |x| x * x);
+        assert_eq!(out, vec![1, 4, 9]);
+    }
+}

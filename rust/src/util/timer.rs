@@ -1,0 +1,111 @@
+//! Wall-clock timing helpers for the benchmark harness (the offline
+//! registry has no criterion; Tables 3/4 need mean ± std over trials).
+
+use std::time::{Duration, Instant};
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Mean and (population) standard deviation of a set of trial timings —
+/// the "avg ± std over 5 trials" the paper reports in Table 3.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MeanStd {
+    pub mean: f64,
+    pub std: f64,
+    pub n: usize,
+}
+
+impl MeanStd {
+    pub fn of(xs: &[f64]) -> MeanStd {
+        let n = xs.len();
+        if n == 0 {
+            return MeanStd { mean: f64::NAN, std: f64::NAN, n: 0 };
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        MeanStd { mean, std: var.sqrt(), n }
+    }
+}
+
+impl std::fmt::Display for MeanStd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.4} ± {:.4}", self.mean, self.std)
+    }
+}
+
+/// Run `trials` timed repetitions of `f` (with a `setup` run before each,
+/// untimed) and return the timing summary in seconds.
+pub fn time_trials<F: FnMut()>(trials: usize, mut f: F) -> MeanStd {
+    let mut times = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let t = Timer::start();
+        f();
+        times.push(t.elapsed_secs());
+    }
+    MeanStd::of(&times)
+}
+
+/// Time a single call and return (result, seconds).
+pub fn timed<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let s = MeanStd::of(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn mean_std_empty_is_nan() {
+        let s = MeanStd::of(&[]);
+        assert!(s.mean.is_nan());
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn mean_std_constant_zero_std() {
+        let s = MeanStd::of(&[5.0; 10]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (x, secs) = timed(|| 41 + 1);
+        assert_eq!(x, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn time_trials_counts() {
+        let mut calls = 0;
+        let s = time_trials(4, || calls += 1);
+        assert_eq!(calls, 4);
+        assert_eq!(s.n, 4);
+    }
+}

@@ -1,0 +1,117 @@
+//! Integration: the three dataset formats must expose identical logical
+//! content (same groups, same per-group example multisets) for the same
+//! partition — Table 2's columns differ in *cost*, never in *data*.
+
+use std::collections::HashMap;
+
+use grouper::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
+use grouper::formats::{HierarchicalReader, HierarchicalStore, InMemoryDataset};
+use grouper::formats::streaming::{StreamingConfig, StreamingDataset};
+use grouper::pipeline::{run_partition, FeatureKey, PartitionOptions};
+
+fn work_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("grouper_fmt_equiv").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+type Groups = HashMap<Vec<u8>, Vec<Vec<u8>>>;
+
+fn dataset() -> SyntheticTextDataset {
+    let mut spec = DatasetSpec::fedccnews_mini(25, 13);
+    spec.max_group_words = 1000;
+    SyntheticTextDataset::new(spec)
+}
+
+#[test]
+fn all_three_formats_agree() {
+    let ds = dataset();
+    let p = FeatureKey::new("domain");
+    let dir = work_dir("agree");
+
+    // Streaming/in-memory read the pipeline materialization.
+    run_partition(
+        &ds,
+        &p,
+        &dir,
+        "data",
+        &PartitionOptions { num_shards: 3, num_workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    // Hierarchical builds its own arrival-order layout.
+    let hdir = work_dir("agree_hier");
+    HierarchicalStore::build(&ds, &p, &hdir, "data", 3).unwrap();
+
+    // Collect per-group multisets from each format.
+    let mut from_stream: Groups = HashMap::new();
+    let sd = StreamingDataset::open(&dir, "data", StreamingConfig::sequential()).unwrap();
+    for g in sd.stream() {
+        let mut g = g.unwrap();
+        let key = g.key.clone();
+        let ex = g.examples().unwrap();
+        from_stream.insert(key, ex.into_iter().map(|e| e.encode()).collect());
+    }
+
+    let mem = InMemoryDataset::load(&dir, "data").unwrap();
+    let mut from_mem: Groups = HashMap::new();
+    for key in mem.keys() {
+        from_mem.insert(
+            key.clone(),
+            mem.group(key).unwrap().iter().map(|e| e.encode()).collect(),
+        );
+    }
+
+    let hier = HierarchicalReader::open(&hdir, "data").unwrap();
+    let mut from_hier: Groups = HashMap::new();
+    for key in hier.keys() {
+        let mut v = Vec::new();
+        hier.visit_group(key, |e| v.push(e.encode())).unwrap();
+        from_hier.insert(key.clone(), v);
+    }
+
+    assert_eq!(from_stream.len(), 25);
+    assert_eq!(from_mem.len(), 25);
+    assert_eq!(from_hier.len(), 25);
+
+    // Compare as multisets per group (sort within group).
+    let normalize = |mut g: Groups| {
+        for v in g.values_mut() {
+            v.sort();
+        }
+        g
+    };
+    let a = normalize(from_stream);
+    let b = normalize(from_mem);
+    let c = normalize(from_hier);
+    assert_eq!(a, b, "streaming vs in-memory");
+    assert_eq!(a, c, "streaming vs hierarchical");
+}
+
+#[test]
+fn formats_cover_every_generated_example() {
+    let ds = dataset();
+    let p = FeatureKey::new("domain");
+    let dir = work_dir("coverage");
+    run_partition(
+        &ds,
+        &p,
+        &dir,
+        "data",
+        &PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    let sd = StreamingDataset::open(&dir, "data", StreamingConfig::sequential()).unwrap();
+    assert_eq!(sd.total_examples() as usize, ds.len());
+
+    // Every generated example is present verbatim somewhere.
+    let mut all: std::collections::HashSet<Vec<u8>> = Default::default();
+    for g in sd.stream() {
+        for e in g.unwrap().examples().unwrap() {
+            all.insert(e.encode());
+        }
+    }
+    for ex in ds.examples() {
+        assert!(all.contains(&ex.encode()), "missing example");
+    }
+}

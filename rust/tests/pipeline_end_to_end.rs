@@ -1,0 +1,109 @@
+//! Integration: corpus -> partition pipeline -> PartitionedDataset ->
+//! statistics, end to end on temp dirs, for all four mini corpora and all
+//! three partitioners.
+
+use grouper::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
+use grouper::grouper::{dataset_statistics, partition_dataset, PartitionedDataset};
+use grouper::pipeline::{DirichletPartitioner, FeatureKey, PartitionOptions, RandomPartitioner};
+
+fn work_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("grouper_e2e").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn shrink(mut spec: DatasetSpec, groups: usize, cap: usize) -> DatasetSpec {
+    spec.num_groups = groups;
+    spec.max_group_words = cap;
+    spec
+}
+
+#[test]
+fn all_four_corpora_roundtrip_with_stats() {
+    let specs = vec![
+        shrink(DatasetSpec::fedc4_mini(30, 1), 30, 2000),
+        shrink(DatasetSpec::fedwiki_mini(30, 2), 30, 1000),
+        shrink(DatasetSpec::fedbookco_mini(8, 3), 8, 8000),
+        shrink(DatasetSpec::fedccnews_mini(20, 4), 20, 3000),
+    ];
+    for spec in specs {
+        let name = spec.name;
+        let key = spec.key_feature;
+        let dir = work_dir(name);
+        let ds = SyntheticTextDataset::new(spec.clone());
+        let report = partition_dataset(
+            &ds,
+            &FeatureKey::new(key),
+            &dir,
+            name,
+            &PartitionOptions { num_shards: 4, num_workers: 3, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(report.num_groups as usize, spec.num_groups, "{name}");
+        assert_eq!(report.num_examples as usize, ds.len(), "{name}");
+
+        let stats = dataset_statistics(&dir, name, name, key).unwrap();
+        assert_eq!(stats.num_groups, spec.num_groups);
+        let expected_words: u64 = (0..spec.num_groups).map(|g| spec.group_words(g) as u64).sum();
+        assert_eq!(stats.total_words, expected_words, "{name}");
+        assert!(stats.words_per_group.median >= 1.0);
+        let wpe = stats.words_per_example.unwrap();
+        assert!(wpe.count as u64 == stats.num_examples);
+    }
+}
+
+#[test]
+fn same_base_dataset_three_partitioners() {
+    // §3.2: "explicitly partition the same dataset in multiple ways".
+    let spec = shrink(DatasetSpec::fedc4_mini(20, 9), 20, 1500);
+    let ds = SyntheticTextDataset::new(spec);
+    let opts = PartitionOptions { num_shards: 3, num_workers: 2, ..Default::default() };
+
+    let d1 = work_dir("by_domain");
+    let r1 = partition_dataset(&ds, &FeatureKey::new("domain"), &d1, "p", &opts).unwrap();
+    assert_eq!(r1.num_groups, 20);
+
+    let d2 = work_dir("random");
+    let r2 = partition_dataset(&ds, &RandomPartitioner::new(10, 7), &d2, "p", &opts).unwrap();
+    assert!(r2.num_groups <= 10 && r2.num_groups >= 8, "{}", r2.num_groups);
+
+    let d3 = work_dir("dirichlet");
+    let r3 =
+        partition_dataset(&ds, &DirichletPartitioner::new(3.0, 200, 7), &d3, "p", &opts).unwrap();
+    assert!(r3.num_groups >= 2);
+
+    // All three cover the same examples.
+    assert_eq!(r1.num_examples, r2.num_examples);
+    assert_eq!(r1.num_examples, r3.num_examples);
+    assert_eq!(r1.total_words, r2.total_words);
+    assert_eq!(r1.total_words, r3.total_words);
+
+    // Heterogeneity ordering on words/group spread: random is the most
+    // uniform; dirichlet and by-domain are heavy-tailed.
+    let spread = |dir: &std::path::Path| {
+        let pd = PartitionedDataset::open(dir, "p").unwrap();
+        let words: Vec<f64> = pd.index().entries.iter().map(|e| e.words as f64).collect();
+        let s = grouper::metrics::percentile::Summary::of(&words);
+        s.p90 / s.p10.max(1.0)
+    };
+    let random_spread = spread(&d2);
+    let domain_spread = spread(&d1);
+    assert!(
+        domain_spread > random_spread,
+        "domain {domain_spread} !> random {random_spread}"
+    );
+}
+
+#[test]
+fn repartitioning_is_idempotent() {
+    let spec = shrink(DatasetSpec::fedwiki_mini(12, 5), 12, 400);
+    let ds = SyntheticTextDataset::new(spec);
+    let dir = work_dir("idem");
+    let opts = PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() };
+    partition_dataset(&ds, &FeatureKey::new("article"), &dir, "w", &opts).unwrap();
+    let idx1 = std::fs::read(dir.join("w.gindex")).unwrap();
+    partition_dataset(&ds, &FeatureKey::new("article"), &dir, "w", &opts).unwrap();
+    let idx2 = std::fs::read(dir.join("w.gindex")).unwrap();
+    assert_eq!(idx1, idx2, "re-running the pipeline must reproduce the index");
+}

@@ -1,0 +1,153 @@
+//! Integration: the PJRT runtime against real AOT artifacts.
+//!
+//! Requires `make artifacts` (tiny config). If `artifacts/tiny.manifest`
+//! is absent the tests skip with a notice rather than fail, so `cargo
+//! test` stays meaningful on a fresh checkout.
+
+use grouper::runtime::{ModelBackend, ModelRuntime};
+
+fn runtime() -> Option<ModelRuntime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("tiny.manifest").exists() {
+        eprintln!("SKIP: artifacts/tiny.manifest missing — run `make artifacts`");
+        return None;
+    }
+    Some(ModelRuntime::load(&dir, "tiny").expect("loading tiny artifacts"))
+}
+
+fn tokens(rt: &ModelRuntime, seed: u64) -> Vec<i32> {
+    let (b, t) = rt.batch_shape();
+    let v = rt.vocab_size() as u64;
+    let mut rng = grouper::util::rng::Rng::new(seed);
+    (0..b * t).map(|_| (1 + rng.gen_range(v - 1)) as i32).collect()
+}
+
+#[test]
+fn init_loss_is_near_log_vocab() {
+    let Some(rt) = runtime() else { return };
+    let p = rt.init_params();
+    let toks = tokens(&rt, 1);
+    let loss = rt.eval_loss(&p, &toks).unwrap();
+    let expect = (rt.vocab_size() as f32).ln();
+    assert!(
+        (loss - expect).abs() < 0.5,
+        "init loss {loss} far from ln(V) = {expect}"
+    );
+}
+
+#[test]
+fn eval_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let p = rt.init_params();
+    let toks = tokens(&rt, 2);
+    assert_eq!(rt.eval_loss(&p, &toks).unwrap(), rt.eval_loss(&p, &toks).unwrap());
+}
+
+#[test]
+fn sgd_step_equals_params_minus_lr_grad() {
+    let Some(rt) = runtime() else { return };
+    let p = rt.init_params();
+    let toks = tokens(&rt, 3);
+    let lr = 0.05f32;
+    let (g, loss_g) = rt.grad(&p, &toks).unwrap();
+    let (p2, loss_s) = rt.sgd_step(&p, &toks, lr).unwrap();
+    assert!((loss_g - loss_s).abs() < 1e-5);
+    for (ti, (pt, (gt, nt))) in p.iter().zip(g.iter().zip(&p2)).enumerate() {
+        for k in 0..pt.len() {
+            let want = pt[k] - lr * gt[k];
+            assert!(
+                (want - nt[k]).abs() < 1e-4 * (1.0 + want.abs()),
+                "tensor {ti} elem {k}: {} vs {}",
+                want,
+                nt[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn repeated_steps_reduce_loss() {
+    let Some(rt) = runtime() else { return };
+    let mut p = rt.init_params();
+    let toks = tokens(&rt, 4);
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let (np, l) = rt.sgd_step(&p, &toks, 0.2).unwrap();
+        p = np;
+        losses.push(l);
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] - 0.3),
+        "no descent: {losses:?}"
+    );
+}
+
+#[test]
+fn fused_local_train_matches_sequential_steps() {
+    let Some(rt) = runtime() else { return };
+    let taus = rt.manifest.tau_variants();
+    assert!(!taus.is_empty(), "tiny config should export fused taus");
+    let tau = *taus.iter().max().unwrap();
+    assert!(rt.has_fused_tau(tau));
+
+    let p = rt.init_params();
+    let (b, t) = rt.batch_shape();
+    let buf: Vec<i32> = (0..tau).flat_map(|i| tokens(&rt, 100 + i as u64)).collect();
+    assert_eq!(buf.len(), tau * b * t);
+
+    let (p_fused, l_fused) = rt.local_train(&p, &buf, tau, 0.1).unwrap();
+
+    let mut q = p.clone();
+    let per = b * t;
+    let mut lsum = 0.0f32;
+    for i in 0..tau {
+        let (nq, l) = rt.sgd_step(&q, &buf[i * per..(i + 1) * per], 0.1).unwrap();
+        q = nq;
+        lsum += l;
+    }
+    assert!((l_fused - lsum / tau as f32).abs() < 1e-4, "{l_fused} vs {}", lsum / tau as f32);
+    for (a, b_) in p_fused.iter().zip(&q) {
+        for k in 0..a.len() {
+            assert!(
+                (a[k] - b_[k]).abs() < 1e-4 * (1.0 + a[k].abs()),
+                "fused/sequential divergence"
+            );
+        }
+    }
+}
+
+#[test]
+fn unfused_tau_falls_back_to_loop() {
+    let Some(rt) = runtime() else { return };
+    let tau = 3; // tiny exports (1, 2, 4) — 3 must fall back
+    assert!(!rt.has_fused_tau(tau));
+    let p = rt.init_params();
+    let (b, t) = rt.batch_shape();
+    let buf: Vec<i32> = (0..tau).flat_map(|i| tokens(&rt, 200 + i as u64)).collect();
+    let (p2, _) = rt.local_train(&p, &buf, tau, 0.1).unwrap();
+    assert_eq!(p2.len(), p.len());
+}
+
+#[test]
+fn argument_validation_errors() {
+    let Some(rt) = runtime() else { return };
+    let p = rt.init_params();
+    assert!(rt.eval_loss(&p, &[1, 2, 3]).is_err()); // wrong token count
+    let mut short = p.clone();
+    short.pop();
+    let toks = tokens(&rt, 5);
+    assert!(rt.eval_loss(&short, &toks).is_err()); // wrong param arity
+    let mut bad = p;
+    bad[0].pop();
+    assert!(rt.eval_loss(&bad, &toks).is_err()); // wrong element count
+}
+
+#[test]
+fn pad_only_batch_has_zero_loss() {
+    let Some(rt) = runtime() else { return };
+    let p = rt.init_params();
+    let (b, t) = rt.batch_shape();
+    let toks = vec![rt.pad_id(); b * t];
+    let loss = rt.eval_loss(&p, &toks).unwrap();
+    assert_eq!(loss, 0.0, "masked denominator guard");
+}
