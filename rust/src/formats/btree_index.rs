@@ -6,13 +6,23 @@
 //! range query whose cost is page fetches + in-page searches + row
 //! decoding. This module reproduces that cost model faithfully:
 //!
-//! * fixed 4 KiB pages, bulk-loaded bottom-up from sorted (key, value)
-//!   rows; leaves are chained for range scans;
-//! * lookups descend from the root *reading pages from the file on
-//!   demand* — no resident index (only the root page is cached), so every
-//!   group construction pays real page I/O + binary search, exactly what
-//!   makes Table 3's hierarchical column slow at scale;
+//! * fixed 4 KiB pages ([`PAGE_SIZE`], shared with [`crate::store`]),
+//!   bulk-loaded bottom-up from sorted (key, value) rows; leaves are
+//!   chained for range scans;
+//! * lookups descend from the root reading pages **through the shared
+//!   pager** ([`crate::store::pager::Pager`]): page fetches go through a
+//!   bounded LRU cache whose size is a constructor knob
+//!   ([`BTreeFile::open_with_cache`]), defaulting to a tiny hot set
+//!   ([`DEFAULT_CACHE_PAGES`]) so every cold group construction still
+//!   pays real page I/O + binary search — exactly what makes Table 3's
+//!   hierarchical column slow at scale, now with a tunable dial instead
+//!   of hardcoded root-only caching;
 //! * range scans (`scan_prefix`) walk chained leaves.
+//!
+//! For an *appendable* B-tree (insert with page splits, copy-on-write),
+//! see [`crate::store::btree`] — this module stays bulk-load-only because
+//! the hierarchical format's prep-time cheapness is part of its cost
+//! model.
 //!
 //! Layout: page 0 = header (magic, root id, page count, levels); then
 //! pages. Leaf page: `u8 tag=1 | u16 count | u32 next_leaf |
@@ -20,11 +30,22 @@
 //! u16 count | (u16 klen | key | u32 child)*` where child covers keys
 //! `>=` its key (first child covers everything below the second key).
 
+use std::cell::RefCell;
 use std::fs::File;
-use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::io::{self, Write};
 use std::path::Path;
 
-pub const PAGE_SIZE: usize = 4096;
+use crate::store::cache::CacheStats;
+use crate::store::page::Page;
+use crate::store::pager::Pager;
+
+pub use crate::store::page::PAGE_SIZE;
+
+/// Default LRU frames for an opened index: a tiny hot set (SQLite keeps a
+/// small page cache; caching everything would defeat the cost model this
+/// substrate exists to reproduce).
+pub const DEFAULT_CACHE_PAGES: usize = 8;
+
 const MAGIC: &[u8; 8] = b"GRPBTR01";
 const LEAF: u8 = 1;
 const INTERNAL: u8 = 2;
@@ -40,12 +61,26 @@ impl BTreeBuilder {
         BTreeBuilder { rows: Vec::new() }
     }
 
-    pub fn push(&mut self, key: Vec<u8>, value: Vec<u8>) {
-        assert!(key.len() + value.len() + 6 <= PAGE_SIZE - 16, "row exceeds page");
+    /// Queue one row. Errors (rather than panicking) when the row cannot
+    /// fit a page — e.g. a pathologically long group key.
+    pub fn push(&mut self, key: Vec<u8>, value: Vec<u8>) -> io::Result<()> {
+        if key.len() + value.len() + 6 > PAGE_SIZE - 16 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "btree row of {} bytes (key {} + value {}) exceeds the {} byte page budget",
+                    key.len() + value.len(),
+                    key.len(),
+                    value.len(),
+                    PAGE_SIZE - 22
+                ),
+            ));
+        }
         if let Some((last, _)) = self.rows.last() {
             debug_assert!(*last <= key, "rows must be pushed in sorted order");
         }
         self.rows.push((key, value));
+        Ok(())
     }
 
     pub fn write<P: AsRef<Path>>(self, path: P) -> io::Result<()> {
@@ -162,40 +197,36 @@ impl Default for BTreeBuilder {
     }
 }
 
-/// Read side: descends from the root, fetching pages on demand.
+/// Read side: descends from the root, fetching pages through the shared
+/// pager's LRU cache.
 pub struct BTreeFile {
-    file: File,
+    pager: RefCell<Pager>,
     root: u32,
     levels: u32,
     num_rows: u64,
-    /// Only the root page is cached (SQLite keeps a tiny hot set; caching
-    /// everything would defeat the cost model this substrate exists for).
-    root_page: Vec<u8>,
-    /// Page fetch counter (cost introspection for benches).
-    pub pages_read: std::cell::Cell<u64>,
 }
 
 impl BTreeFile {
+    /// Open with the default (deliberately tiny) cache.
     pub fn open<P: AsRef<Path>>(path: P) -> io::Result<Self> {
-        let mut file = File::open(path)?;
-        let mut header = vec![0u8; PAGE_SIZE];
-        file.read_exact(&mut header)?;
-        if &header[..8] != MAGIC {
+        Self::open_with_cache(path, DEFAULT_CACHE_PAGES)
+    }
+
+    /// Open with an explicit LRU cache size in pages — the knob Table 3's
+    /// paged column turns. Clamped to at least 2 frames.
+    pub fn open_with_cache<P: AsRef<Path>>(path: P, cache_pages: usize) -> io::Result<Self> {
+        let mut pager = Pager::open_read(path.as_ref(), cache_pages.max(2))?;
+        let header = pager.read_copy(0)?;
+        if header.get_bytes(0, 8) != MAGIC {
             return Err(io::Error::new(io::ErrorKind::InvalidData, "bad btree magic"));
         }
-        let root = u32::from_le_bytes(header[8..12].try_into().unwrap());
-        let levels = u32::from_le_bytes(header[16..20].try_into().unwrap());
-        let num_rows = u64::from_le_bytes(header[20..28].try_into().unwrap());
-        let mut this = BTreeFile {
-            file,
-            root,
-            levels,
-            num_rows,
-            root_page: Vec::new(),
-            pages_read: std::cell::Cell::new(0),
-        };
+        let root = header.get_u32(8);
+        let levels = header.get_u32(16);
+        let num_rows = header.get_u64(20);
+        let this = BTreeFile { pager: RefCell::new(pager), root, levels, num_rows };
         if num_rows > 0 {
-            this.root_page = this.fetch_page(root)?;
+            // Warm the root (the hot set every descent shares).
+            this.page(this.root)?;
         }
         Ok(this)
     }
@@ -208,21 +239,19 @@ impl BTreeFile {
         self.levels
     }
 
-    fn fetch_page(&self, id: u32) -> io::Result<Vec<u8>> {
-        let mut buf = vec![0u8; PAGE_SIZE];
-        let mut f = &self.file;
-        f.seek(SeekFrom::Start(id as u64 * PAGE_SIZE as u64))?;
-        f.read_exact(&mut buf)?;
-        self.pages_read.set(self.pages_read.get() + 1);
-        Ok(buf)
+    /// Pages fetched from disk so far (cache misses; cost introspection
+    /// for benches).
+    pub fn pages_read(&self) -> u64 {
+        self.pager.borrow().disk_reads()
     }
 
-    fn page(&self, id: u32) -> io::Result<std::borrow::Cow<'_, [u8]>> {
-        if id == self.root {
-            Ok(std::borrow::Cow::Borrowed(&self.root_page))
-        } else {
-            Ok(std::borrow::Cow::Owned(self.fetch_page(id)?))
-        }
+    /// Cache hit/miss/eviction counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.pager.borrow().cache_stats()
+    }
+
+    fn page(&self, id: u32) -> io::Result<Page> {
+        self.pager.borrow_mut().read_copy(id)
     }
 
     /// Find the leaf that may contain `key`, descending internal pages.
@@ -230,19 +259,20 @@ impl BTreeFile {
         let mut id = self.root;
         loop {
             let page = self.page(id)?;
-            match page[0] {
+            let b = page.as_slice();
+            match b[0] {
                 LEAF => return Ok(id),
                 INTERNAL => {
-                    let count = u16::from_le_bytes(page[1..3].try_into().unwrap()) as usize;
+                    let count = u16::from_le_bytes(b[1..3].try_into().unwrap()) as usize;
                     let mut p = 3usize;
                     let mut chosen: Option<u32> = None;
                     let mut first_child: Option<u32> = None;
                     for _ in 0..count {
                         let klen =
-                            u16::from_le_bytes(page[p..p + 2].try_into().unwrap()) as usize;
-                        let k = &page[p + 2..p + 2 + klen];
+                            u16::from_le_bytes(b[p..p + 2].try_into().unwrap()) as usize;
+                        let k = &b[p + 2..p + 2 + klen];
                         let child = u32::from_le_bytes(
-                            page[p + 2 + klen..p + 6 + klen].try_into().unwrap(),
+                            b[p + 2 + klen..p + 6 + klen].try_into().unwrap(),
                         );
                         if first_child.is_none() {
                             first_child = Some(child);
@@ -282,17 +312,18 @@ impl BTreeFile {
         let mut visited = 0usize;
         loop {
             let page = self.page(leaf_id)?;
-            debug_assert_eq!(page[0], LEAF);
-            let count = u16::from_le_bytes(page[1..3].try_into().unwrap()) as usize;
-            let next = u32::from_le_bytes(page[3..7].try_into().unwrap());
+            let b = page.as_slice();
+            debug_assert_eq!(b[0], LEAF);
+            let count = u16::from_le_bytes(b[1..3].try_into().unwrap()) as usize;
+            let next = u32::from_le_bytes(b[3..7].try_into().unwrap());
             let mut p = 7usize;
             let mut past_prefix = false;
             for _ in 0..count {
-                let klen = u16::from_le_bytes(page[p..p + 2].try_into().unwrap()) as usize;
+                let klen = u16::from_le_bytes(b[p..p + 2].try_into().unwrap()) as usize;
                 let vlen =
-                    u16::from_le_bytes(page[p + 2..p + 4].try_into().unwrap()) as usize;
-                let k = &page[p + 4..p + 4 + klen];
-                let v = &page[p + 4 + klen..p + 4 + klen + vlen];
+                    u16::from_le_bytes(b[p + 2..p + 4].try_into().unwrap()) as usize;
+                let k = &b[p + 4..p + 4 + klen];
+                let v = &b[p + 4 + klen..p + 4 + klen + vlen];
                 if k.starts_with(prefix) {
                     f(k, v);
                     visited += 1;
@@ -338,7 +369,7 @@ mod tests {
         let mut sorted = rows.to_vec();
         sorted.sort();
         for (k, v) in sorted {
-            b.push(k, v);
+            b.push(k, v).unwrap();
         }
         let p = tmp(name);
         b.write(&p).unwrap();
@@ -358,6 +389,16 @@ mod tests {
         assert_eq!(t.get(b"k").unwrap(), Some(b"v".to_vec()));
         assert_eq!(t.get(b"j").unwrap(), None);
         assert_eq!(t.get(b"l").unwrap(), None);
+    }
+
+    #[test]
+    fn oversized_row_is_an_error_not_a_panic() {
+        let mut b = BTreeBuilder::new();
+        let err = b.push(vec![b'k'; 3000], vec![b'v'; 2000]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        assert!(err.to_string().contains("exceeds"));
+        // The builder is still usable afterwards.
+        b.push(b"ok".to_vec(), b"v".to_vec()).unwrap();
     }
 
     #[test]
@@ -390,7 +431,7 @@ mod tests {
         assert_eq!(n, 10);
         assert_eq!(got, (420..430).collect::<Vec<u32>>());
         // scans cost page reads (the point of the substrate)
-        assert!(t.pages_read.get() > 0);
+        assert!(t.pages_read() > 0);
     }
 
     #[test]
@@ -403,6 +444,35 @@ mod tests {
         let mut n = 0;
         t.scan_prefix(b"g/", |_, _| n += 1).unwrap();
         assert_eq!(n, 2000);
+    }
+
+    #[test]
+    fn larger_cache_means_fewer_disk_reads() {
+        let rows: Vec<(Vec<u8>, Vec<u8>)> = (0..8000u32)
+            .map(|i| (format!("k{:06}", i).into_bytes(), vec![3u8; 32]))
+            .collect();
+        let mut b = BTreeBuilder::new();
+        for (k, v) in &rows {
+            b.push(k.clone(), v.clone()).unwrap();
+        }
+        let p = tmp("cachesize.btree");
+        b.write(&p).unwrap();
+        let probe = |cache: usize| -> u64 {
+            let t = BTreeFile::open_with_cache(&p, cache).unwrap();
+            let mut rng = Rng::new(5);
+            for _ in 0..300 {
+                let i = rng.gen_range(8000);
+                let key = format!("k{:06}", i).into_bytes();
+                assert!(t.get(&key).unwrap().is_some());
+            }
+            t.pages_read()
+        };
+        let cold = probe(2);
+        let warm = probe(4096);
+        assert!(
+            warm < cold,
+            "a large cache must do fewer page fetches ({warm} vs {cold})"
+        );
     }
 
     #[test]

@@ -76,7 +76,9 @@ impl HierarchicalStore {
         rows.sort();
         let mut builder = BTreeBuilder::new();
         for (k, v) in rows {
-            builder.push(k, v);
+            builder
+                .push(k, v)
+                .context("indexing example (group key too long for a page?)")?;
         }
         builder.write(dir.join(format!("{prefix}.btree")))?;
         // Group key list (for enumeration; a DB would SELECT DISTINCT).
@@ -115,9 +117,17 @@ pub struct HierarchicalReader {
 }
 
 impl HierarchicalReader {
+    /// Open with the default (deliberately tiny) index cache.
     pub fn open(dir: &Path, prefix: &str) -> Result<Self> {
+        Self::open_with_cache(dir, prefix, super::btree_index::DEFAULT_CACHE_PAGES)
+    }
+
+    /// Open with an explicit index LRU cache size (pages): the knob that
+    /// used to be hardcoded to root-only caching. The index now reads
+    /// through the shared pager ([`crate::store::pager::Pager`]).
+    pub fn open_with_cache(dir: &Path, prefix: &str, cache_pages: usize) -> Result<Self> {
         let shards = discover_shards(dir, prefix)?;
-        let btree = BTreeFile::open(dir.join(format!("{prefix}.btree")))
+        let btree = BTreeFile::open_with_cache(dir.join(format!("{prefix}.btree")), cache_pages)
             .with_context(|| format!("opening {prefix}.btree"))?;
         let mut keys = Vec::new();
         let mut r = BufReader::new(std::fs::File::open(
@@ -150,7 +160,12 @@ impl HierarchicalReader {
 
     /// Index page fetches so far (cost introspection).
     pub fn pages_read(&self) -> u64 {
-        self.btree.pages_read.get()
+        self.btree.pages_read()
+    }
+
+    /// Index cache hit/miss/eviction counters.
+    pub fn index_cache_stats(&self) -> crate::store::cache::CacheStats {
+        self.btree.cache_stats()
     }
 
     /// Construct one group's dataset: a B-tree range query for the

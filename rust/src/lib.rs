@@ -29,5 +29,6 @@ pub mod metrics;
 pub mod pipeline;
 pub mod records;
 pub mod runtime;
+pub mod store;
 pub mod tokenizer;
 pub mod util;

@@ -4,12 +4,16 @@
 //!
 //! ```text
 //! grouper partition --dataset fedc4-mini --groups 500 --out work/fedc4 [--by feature|random:N|dirichlet:A]
-//! grouper stats     --dir work/fedc4 --prefix data
+//!                   [--format streaming|paged|hierarchical] [--cache-pages N]
+//! grouper stats     --dir work/fedc4 --prefix data [--format streaming|paged] [--cache-pages N]
 //! grouper vocab     --dataset fedc4-mini --groups 500 --size 1024 --out work/vocab.txt
 //! grouper train     --config configs/fig4_fedavg.toml
 //! grouper personalize --config configs/fig4_fedavg.toml
-//! grouper info      [--artifacts artifacts]
+//! grouper info      [--artifacts artifacts] [--dir DIR --prefix P]
 //! ```
+//!
+//! `--format paged` materializes into the appendable WAL-backed paged
+//! store (`formats::paged`); `--cache-pages` bounds its LRU page cache.
 //!
 //! Experiment regeneration lives in `cargo bench --bench <table|figure>`;
 //! the CLI is the interactive/production surface over the same library.
@@ -24,6 +28,7 @@ use grouper::config::ExperimentConfig;
 use grouper::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
 use grouper::fed::trainer::build_eval_clients;
 use grouper::fed::{personalization_eval, train, TrainerConfig};
+use grouper::formats::{HierarchicalStore, PagedReader, PagedStore};
 use grouper::grouper::{dataset_statistics, partition_dataset, PartitionedDataset};
 use grouper::pipeline::{
     DirichletPartitioner, FeatureKey, PartitionOptions, Partitioner, RandomPartitioner,
@@ -70,12 +75,20 @@ fn print_usage() {
         "grouper — scalable dataset pipelines for group-structured learning\n\n\
          commands:\n\
          \u{20}  partition    materialize a group-structured dataset\n\
+         \u{20}               --format streaming (default) | paged | hierarchical\n\
+         \u{20}               paged = appendable WAL-backed store over the paged\n\
+         \u{20}               storage engine; --cache-pages N bounds its LRU page\n\
+         \u{20}               cache (default {dcp})\n\
          \u{20}  stats        Table-1-style statistics of a materialization\n\
+         \u{20}               (--format paged reads a paged store and reports\n\
+         \u{20}               index depth + cache hit rate under --cache-pages)\n\
          \u{20}  vocab        train a WordPiece vocabulary from a corpus\n\
          \u{20}  train        federated training (FedAvg/FedSGD) per a TOML config\n\
          \u{20}  personalize  train + pre/post-personalization eval (Table 5)\n\
-         \u{20}  info         show exported artifact/model information\n\n\
-         see README.md for flags and examples"
+         \u{20}  info         show exported artifact/model information; with\n\
+         \u{20}               --dir/--prefix, also paged-store header info\n\n\
+         see README.md for flags and examples",
+        dcp = grouper::formats::paged::DEFAULT_CACHE_PAGES
     );
 }
 
@@ -149,36 +162,65 @@ fn cmd_partition(f: &Flags) -> Result<()> {
     let prefix = f.get_or("prefix", "data").to_string();
     let shards = f.usize_or("shards", 8)?;
     let workers = f.usize_or("workers", 0)?;
+    let format = f.get_or("format", "streaming");
+    let cache_pages =
+        f.usize_or("cache-pages", grouper::formats::paged::DEFAULT_CACHE_PAGES)?;
 
     let ds = make_dataset(name, groups, seed)?;
     let p = make_partitioner(f.get_or("by", "feature"), ds.spec.key_feature, seed)?;
-    let mut opts = PartitionOptions { num_shards: shards, ..Default::default() };
-    if workers > 0 {
-        opts.num_workers = workers;
-    }
     println!(
-        "partitioning {name} ({} groups, {} examples) by {} into {}",
+        "partitioning {name} ({} groups, {} examples) by {} into {} [{format}]",
         groups,
         ds.len(),
         p.name(),
         out.display()
     );
-    let report = partition_dataset(&ds, p.as_ref(), &out, &prefix, &opts)?;
-    println!(
-        "done: {} examples -> {} groups, {} words, map {:.2}s group {:.2}s ({:.2}s total)",
-        report.num_examples,
-        report.num_groups,
-        humanize::count(report.total_words as f64),
-        report.map_secs,
-        report.group_secs,
-        report.wall_secs
-    );
+    match format {
+        "streaming" => {
+            let mut opts = PartitionOptions { num_shards: shards, ..Default::default() };
+            if workers > 0 {
+                opts.num_workers = workers;
+            }
+            let report = partition_dataset(&ds, p.as_ref(), &out, &prefix, &opts)?;
+            println!(
+                "done: {} examples -> {} groups, {} words, map {:.2}s group {:.2}s ({:.2}s total)",
+                report.num_examples,
+                report.num_groups,
+                humanize::count(report.total_words as f64),
+                report.map_secs,
+                report.group_secs,
+                report.wall_secs
+            );
+        }
+        "paged" => {
+            let store = PagedStore::build(&ds, p.as_ref(), &out, &prefix, cache_pages)?;
+            println!(
+                "done: {} examples -> {} groups in {}/{prefix}.pstore (appendable; \
+                 cache {cache_pages} pages)",
+                store.num_examples(),
+                store.num_groups(),
+                out.display()
+            );
+        }
+        "hierarchical" => {
+            let n = HierarchicalStore::build(&ds, p.as_ref(), &out, &prefix, shards)?;
+            println!(
+                "done: {n} examples (arrival order, {shards} shards) + {prefix}.btree index"
+            );
+        }
+        other => bail!("--format must be streaming | paged | hierarchical, got {other:?}"),
+    }
     Ok(())
 }
 
 fn cmd_stats(f: &Flags) -> Result<()> {
     let dir = PathBuf::from(f.required("dir")?);
     let prefix = f.get_or("prefix", "data");
+    match f.get_or("format", "streaming") {
+        "paged" => return cmd_stats_paged(f, &dir, prefix),
+        "streaming" => {}
+        other => bail!("stats --format must be streaming | paged, got {other:?}"),
+    }
     let stats = dataset_statistics(&dir, prefix, prefix, "-")?;
     let mut t = Table::new(
         &format!("Statistics of {}/{}", dir.display(), prefix),
@@ -208,6 +250,35 @@ fn cmd_stats(f: &Flags) -> Result<()> {
             ),
         ]);
     }
+    t.print();
+    Ok(())
+}
+
+/// Paged-store statistics: header-level counts plus the cost of one full
+/// random-order pass under the requested cache size.
+fn cmd_stats_paged(f: &Flags, dir: &Path, prefix: &str) -> Result<()> {
+    let cache_pages =
+        f.usize_or("cache-pages", grouper::formats::paged::DEFAULT_CACHE_PAGES)?;
+    let mut r = PagedReader::open(dir, prefix, cache_pages)?;
+    let depth = r.index_depth()?;
+    let mut order = r.keys().to_vec();
+    grouper::util::rng::Rng::new(7).shuffle(&mut order);
+    let mut examples = 0u64;
+    r.visit_all(&order, |_, _| examples += 1)?;
+    let stats = r.cache_stats();
+    let mut t = Table::new(
+        &format!("Paged store {}/{prefix} (cache {cache_pages} pages)", dir.display()),
+        &["metric", "value"],
+    );
+    t.row(vec!["groups".into(), format!("{}", r.num_groups())]);
+    t.row(vec!["examples".into(), humanize::count(examples as f64)]);
+    t.row(vec!["index depth".into(), format!("{depth}")]);
+    t.row(vec!["index pages fetched".into(), format!("{}", r.pages_read())]);
+    t.row(vec![
+        "cache hits / misses / evictions".into(),
+        format!("{} / {} / {}", stats.hits, stats.misses, stats.evictions),
+    ]);
+    t.row(vec!["cache hit rate".into(), format!("{:.1}%", 100.0 * stats.hit_rate())]);
     t.print();
     Ok(())
 }
@@ -341,6 +412,30 @@ fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
 }
 
 fn cmd_info(f: &Flags) -> Result<()> {
+    // With --dir/--prefix: describe a paged-store materialization too.
+    if let Some(store_dir) = f.get("dir") {
+        let prefix = f.get_or("prefix", "data");
+        let store_dir = PathBuf::from(store_dir);
+        let pstore = store_dir.join(format!("{prefix}.pstore"));
+        if pstore.exists() {
+            let cache_pages =
+                f.usize_or("cache-pages", grouper::formats::paged::DEFAULT_CACHE_PAGES)?;
+            let mut r = PagedReader::open(&store_dir, prefix, cache_pages)?;
+            let depth = r.index_depth()?;
+            println!(
+                "paged store {}: {} groups, {} examples, index depth {depth}, {} index file, {} data file",
+                pstore.display(),
+                r.num_groups(),
+                humanize::count(r.num_examples() as f64),
+                humanize::bytes(std::fs::metadata(&pstore)?.len() as usize),
+                humanize::bytes(
+                    std::fs::metadata(store_dir.join(format!("{prefix}.pdata")))?.len() as usize
+                ),
+            );
+        } else {
+            println!("no paged store at {}", pstore.display());
+        }
+    }
     let dir = PathBuf::from(f.get_or("artifacts", "artifacts"));
     for cfg in ["tiny", "small", "base"] {
         match grouper::runtime::Manifest::load(&dir, cfg) {

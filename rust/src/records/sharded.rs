@@ -36,16 +36,27 @@ pub fn discover_shards(dir: &Path, prefix: &str) -> io::Result<Vec<PathBuf>> {
         ));
     }
     let total = found[0].1;
-    if found.iter().any(|(_, t, _)| *t != total) || found.len() != total {
+    if found.iter().any(|(_, t, _)| *t != total) {
         return Err(io::Error::new(
             io::ErrorKind::InvalidData,
-            format!(
-                "incomplete shard set for {prefix}: found {} of {total}",
-                found.len()
-            ),
+            format!("inconsistent shard totals for {prefix} in {}", dir.display()),
         ));
     }
     found.sort_by_key(|(i, _, _)| *i);
+    // Count/total agreement is not enough: a duplicated index plus a
+    // missing one (or an out-of-range index) would still "add up".
+    // Require the indices to be exactly 0..total, no gaps, no duplicates.
+    let exact = found.len() == total
+        && found.iter().enumerate().all(|(want, (idx, _, _))| *idx == want);
+    if !exact {
+        let have: Vec<usize> = found.iter().map(|(i, _, _)| *i).collect();
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!(
+                "corrupt shard set for {prefix}: indices must be exactly 0..{total}, found {have:?}"
+            ),
+        ));
+    }
     Ok(found.into_iter().map(|(_, _, p)| p).collect())
 }
 
@@ -175,5 +186,37 @@ mod tests {
     fn discover_missing_prefix() {
         let dir = tmp("nothing");
         assert!(discover_shards(&dir, "nope").is_err());
+    }
+
+    #[test]
+    fn discover_rejects_out_of_range_index_even_when_counts_agree() {
+        // Three files, all claiming -of-00003, but indices {0, 1, 5}: the
+        // old count/total check passed this; indices must be exactly 0..3.
+        let dir = tmp("outofrange");
+        let mut w = ShardedWriter::create(&dir, "z", 3).unwrap();
+        w.write(b"r").unwrap();
+        w.finish().unwrap();
+        std::fs::rename(
+            dir.join(shard_name("z", 2, 3)),
+            dir.join(shard_name("z", 5, 3)),
+        )
+        .unwrap();
+        let err = discover_shards(&dir, "z").unwrap_err();
+        assert!(err.to_string().contains("exactly 0..3"), "{err}");
+    }
+
+    #[test]
+    fn discover_rejects_inconsistent_totals() {
+        let dir = tmp("mixedtotals");
+        let mut w = ShardedWriter::create(&dir, "z", 2).unwrap();
+        w.write(b"r").unwrap();
+        w.finish().unwrap();
+        std::fs::rename(
+            dir.join(shard_name("z", 1, 2)),
+            dir.join(shard_name("z", 1, 3)),
+        )
+        .unwrap();
+        let err = discover_shards(&dir, "z").unwrap_err();
+        assert!(err.to_string().contains("inconsistent"), "{err}");
     }
 }

@@ -1,0 +1,741 @@
+//! A *mutable* B+tree over the pager — the successor of the bulk-load-only
+//! [`crate::formats::btree_index`].
+//!
+//! Properties:
+//!
+//! * insert with page splits, so the tree grows incrementally — the
+//!   appendable store's index never needs a rebuild;
+//! * **copy-on-write above a committed watermark**: pages with id below
+//!   [`BTree::watermark`] belong to the last durable checkpoint and are
+//!   never modified in place — mutating one first copies it to a freshly
+//!   allocated page (LMDB-style path copying). The previously committed
+//!   tree therefore stays byte-identical on disk until the single-page
+//!   header swap commits a new root, which is what makes WAL replay over
+//!   a crashed store sound. Pages allocated after the watermark are
+//!   mutated in place, so COW costs at most one copy per page per
+//!   checkpoint interval. Superseded committed pages are not reclaimed
+//!   (append-oriented store; a free list is future work).
+//!
+//! Page layout (all little-endian):
+//!
+//! * leaf: `u8 tag=1 | u16 count | (u16 klen | u16 vlen | key | value)*`
+//! * internal: `u8 tag=2 | u16 count | (u16 klen | key | u32 child)*`,
+//!   where an entry's child covers keys `>=` its key and the first
+//!   entry covers everything below the second (its key is the empty
+//!   string at the root, so descent never falls off the left edge).
+//!
+//! No sibling pointers: range scans keep an explicit ancestor stack
+//! (sibling links would dangle under COW, since copying a leaf would
+//! invalidate its left neighbor's pointer).
+//!
+//! Duplicate keys are tolerated structurally but lookups return an
+//! arbitrary matching row; the paged store only ever inserts unique
+//! `group \0 seq` keys.
+
+use std::io;
+
+use super::page::{Page, PageId, NO_PAGE, PAGE_SIZE};
+use super::pager::Pager;
+
+const LEAF: u8 = 1;
+const INTERNAL: u8 = 2;
+const HDR: usize = 3; // tag + u16 count
+
+/// Maximum `key.len() + value.len()` for one row. Sized so that **two**
+/// max-size entries always fit one page (`3 + 2*(6 + MAX_ROW_BYTES) <=
+/// PAGE_SIZE`): that is what guarantees an overflowing page always has a
+/// split point where both halves fit, no matter how entry sizes are
+/// distributed around the byte midpoint.
+pub const MAX_ROW_BYTES: usize = 2000;
+
+fn corrupt(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("btree: {msg}"))
+}
+
+type LeafEntries = Vec<(Vec<u8>, Vec<u8>)>;
+type InternalEntries = Vec<(Vec<u8>, PageId)>;
+
+fn decode_leaf(page: &Page) -> io::Result<LeafEntries> {
+    let b = page.as_slice();
+    let count = page.get_u16(1) as usize;
+    let mut out = Vec::with_capacity(count);
+    let mut p = HDR;
+    for _ in 0..count {
+        if p + 4 > PAGE_SIZE {
+            return Err(corrupt("leaf entry header past page end"));
+        }
+        let klen = u16::from_le_bytes(b[p..p + 2].try_into().unwrap()) as usize;
+        let vlen = u16::from_le_bytes(b[p + 2..p + 4].try_into().unwrap()) as usize;
+        p += 4;
+        if p + klen + vlen > PAGE_SIZE {
+            return Err(corrupt("leaf entry body past page end"));
+        }
+        out.push((b[p..p + klen].to_vec(), b[p + klen..p + klen + vlen].to_vec()));
+        p += klen + vlen;
+    }
+    Ok(out)
+}
+
+fn leaf_size(entries: &[(Vec<u8>, Vec<u8>)]) -> usize {
+    HDR + entries.iter().map(|(k, v)| 4 + k.len() + v.len()).sum::<usize>()
+}
+
+fn encode_leaf(entries: &[(Vec<u8>, Vec<u8>)]) -> Page {
+    debug_assert!(leaf_size(entries) <= PAGE_SIZE);
+    let mut page = Page::zeroed();
+    page.put_u8(0, LEAF);
+    page.put_u16(1, entries.len() as u16);
+    let mut p = HDR;
+    for (k, v) in entries {
+        page.put_u16(p, k.len() as u16);
+        page.put_u16(p + 2, v.len() as u16);
+        p += 4;
+        page.put_bytes(p, k);
+        p += k.len();
+        page.put_bytes(p, v);
+        p += v.len();
+    }
+    page
+}
+
+fn decode_internal(page: &Page) -> io::Result<InternalEntries> {
+    let b = page.as_slice();
+    let count = page.get_u16(1) as usize;
+    let mut out = Vec::with_capacity(count);
+    let mut p = HDR;
+    for _ in 0..count {
+        if p + 2 > PAGE_SIZE {
+            return Err(corrupt("internal entry header past page end"));
+        }
+        let klen = u16::from_le_bytes(b[p..p + 2].try_into().unwrap()) as usize;
+        p += 2;
+        if p + klen + 4 > PAGE_SIZE {
+            return Err(corrupt("internal entry body past page end"));
+        }
+        let key = b[p..p + klen].to_vec();
+        p += klen;
+        let child = u32::from_le_bytes(b[p..p + 4].try_into().unwrap());
+        p += 4;
+        out.push((key, child));
+    }
+    Ok(out)
+}
+
+fn internal_size(entries: &[(Vec<u8>, PageId)]) -> usize {
+    HDR + entries.iter().map(|(k, _)| 6 + k.len()).sum::<usize>()
+}
+
+fn encode_internal(entries: &[(Vec<u8>, PageId)]) -> Page {
+    debug_assert!(internal_size(entries) <= PAGE_SIZE);
+    let mut page = Page::zeroed();
+    page.put_u8(0, INTERNAL);
+    page.put_u16(1, entries.len() as u16);
+    let mut p = HDR;
+    for (k, child) in entries {
+        page.put_u16(p, k.len() as u16);
+        p += 2;
+        page.put_bytes(p, k);
+        p += k.len();
+        page.put_u32(p, *child);
+        p += 4;
+    }
+    page
+}
+
+/// Split index for an overflowing entry list: near the byte midpoint,
+/// adjusted so BOTH halves fit a page. Both halves are non-empty.
+/// [`MAX_ROW_BYTES`] guarantees an adjusted point exists: two halves
+/// overflowing at once would need more than two pages of entries, but an
+/// overflowing page holds at most one previously-fitting page plus one
+/// bounded entry.
+fn split_index<T>(entries: &[T], size_of: impl Fn(&T) -> usize) -> usize {
+    debug_assert!(entries.len() >= 2);
+    let sizes: Vec<usize> = entries.iter().map(&size_of).collect();
+    let total: usize = sizes.iter().sum();
+    let fits = |s: usize| HDR + s <= PAGE_SIZE;
+    // Walk to the byte midpoint.
+    let mut at = 1usize;
+    let mut left = sizes[0];
+    while at < entries.len() - 1 && left * 2 < total {
+        left += sizes[at];
+        at += 1;
+    }
+    // Shrink the left half until it fits.
+    while at > 1 && !fits(left) {
+        at -= 1;
+        left -= sizes[at];
+    }
+    // Grow the left half while the right overflows (cannot reintroduce a
+    // left overflow — see above).
+    while at < entries.len() - 1 && !fits(total - left) {
+        left += sizes[at];
+        at += 1;
+    }
+    debug_assert!(fits(left) && fits(total - left), "unsplittable page");
+    at
+}
+
+enum Ins {
+    /// Subtree absorbed the row; its (possibly COW-copied) root is the id.
+    Done(PageId),
+    /// Subtree split: (left id, first key of right, right id).
+    Split(PageId, Vec<u8>, PageId),
+}
+
+/// A page's entries, decoded. Decoding straight off the cache's borrowed
+/// page (one statement, borrow released immediately) avoids cloning the
+/// 4 KiB page on every visit.
+enum Decoded {
+    Leaf(LeafEntries),
+    Internal(InternalEntries),
+}
+
+fn decode_page(page: &Page) -> io::Result<Decoded> {
+    match page.get_u8(0) {
+        LEAF => Ok(Decoded::Leaf(decode_leaf(page)?)),
+        INTERNAL => {
+            let entries = decode_internal(page)?;
+            if entries.is_empty() {
+                return Err(corrupt("empty internal page"));
+            }
+            Ok(Decoded::Internal(entries))
+        }
+        t => Err(corrupt(&format!("bad page tag {t}"))),
+    }
+}
+
+/// The mutable B+tree. Holds no pager — every operation borrows one, so a
+/// store can own both without self-reference.
+pub struct BTree {
+    root: PageId,
+    num_rows: u64,
+    watermark: u32,
+}
+
+impl BTree {
+    /// An empty tree; pages with id below `watermark` are committed and
+    /// will be copied rather than mutated.
+    pub fn new_empty(watermark: u32) -> BTree {
+        BTree { root: NO_PAGE, num_rows: 0, watermark }
+    }
+
+    /// Re-attach to a tree persisted in a header.
+    pub fn from_header(root: PageId, num_rows: u64, watermark: u32) -> BTree {
+        BTree { root, num_rows, watermark }
+    }
+
+    pub fn root(&self) -> PageId {
+        self.root
+    }
+
+    pub fn num_rows(&self) -> u64 {
+        self.num_rows
+    }
+
+    pub fn watermark(&self) -> u32 {
+        self.watermark
+    }
+
+    /// Advance the committed watermark (after a checkpoint flushed and
+    /// published every current page).
+    pub fn set_watermark(&mut self, watermark: u32) {
+        self.watermark = watermark;
+    }
+
+    fn is_mutable(&self, id: PageId) -> bool {
+        id >= self.watermark
+    }
+
+    /// Write a page image to `id` when mutable, else copy-on-write to a
+    /// fresh page; returns the id actually holding the data.
+    fn write_page(&self, pager: &mut Pager, id: Option<PageId>, page: Page) -> io::Result<PageId> {
+        match id {
+            Some(id) if self.is_mutable(id) => {
+                pager.put(id, page)?;
+                Ok(id)
+            }
+            _ => {
+                let nid = pager.allocate()?;
+                pager.put(nid, page)?;
+                Ok(nid)
+            }
+        }
+    }
+
+    /// Insert one row. Keys need not be unique, but see the module note.
+    pub fn insert(&mut self, pager: &mut Pager, key: &[u8], value: &[u8]) -> io::Result<()> {
+        if key.len() + value.len() > MAX_ROW_BYTES {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "btree row of {} bytes (key {} + value {}) exceeds the {} byte page budget",
+                    key.len() + value.len(),
+                    key.len(),
+                    value.len(),
+                    MAX_ROW_BYTES
+                ),
+            ));
+        }
+        if self.root == NO_PAGE {
+            let entries = vec![(key.to_vec(), value.to_vec())];
+            self.root = self.write_page(pager, None, encode_leaf(&entries))?;
+            self.num_rows = 1;
+            return Ok(());
+        }
+        match self.insert_rec(pager, self.root, key, value)? {
+            Ins::Done(new_root) => self.root = new_root,
+            Ins::Split(left, sep, right) => {
+                let entries = vec![(Vec::new(), left), (sep, right)];
+                self.root = self.write_page(pager, None, encode_internal(&entries))?;
+            }
+        }
+        self.num_rows += 1;
+        Ok(())
+    }
+
+    fn insert_rec(
+        &self,
+        pager: &mut Pager,
+        id: PageId,
+        key: &[u8],
+        value: &[u8],
+    ) -> io::Result<Ins> {
+        // Bind before matching: a match-scrutinee temporary would keep
+        // the cache borrow alive through the arms, which re-borrow pager.
+        let decoded = decode_page(pager.read(id)?)?;
+        match decoded {
+            Decoded::Leaf(mut entries) => {
+                let pos = entries.partition_point(|(k, _)| k.as_slice() <= key);
+                entries.insert(pos, (key.to_vec(), value.to_vec()));
+                if leaf_size(&entries) <= PAGE_SIZE {
+                    let nid = self.write_page(pager, Some(id), encode_leaf(&entries))?;
+                    Ok(Ins::Done(nid))
+                } else {
+                    let at = split_index(&entries, |(k, v)| 4 + k.len() + v.len());
+                    let right: LeafEntries = entries.split_off(at);
+                    let sep = right[0].0.clone();
+                    let left_id = self.write_page(pager, Some(id), encode_leaf(&entries))?;
+                    let right_id = self.write_page(pager, None, encode_leaf(&right))?;
+                    Ok(Ins::Split(left_id, sep, right_id))
+                }
+            }
+            Decoded::Internal(mut entries) => {
+                let idx = match entries.partition_point(|(k, _)| k.as_slice() <= key) {
+                    0 => 0,
+                    n => n - 1,
+                };
+                let child = entries[idx].1;
+                match self.insert_rec(pager, child, key, value)? {
+                    Ins::Done(new_child) => {
+                        if new_child == child {
+                            return Ok(Ins::Done(id));
+                        }
+                        entries[idx].1 = new_child;
+                        let nid = self.write_page(pager, Some(id), encode_internal(&entries))?;
+                        Ok(Ins::Done(nid))
+                    }
+                    Ins::Split(left, sep, right) => {
+                        entries[idx].1 = left;
+                        entries.insert(idx + 1, (sep, right));
+                        if internal_size(&entries) <= PAGE_SIZE {
+                            let nid =
+                                self.write_page(pager, Some(id), encode_internal(&entries))?;
+                            Ok(Ins::Done(nid))
+                        } else {
+                            let at = split_index(&entries, |(k, _)| 6 + k.len());
+                            let right_half: InternalEntries = entries.split_off(at);
+                            let sep2 = right_half[0].0.clone();
+                            let left_id =
+                                self.write_page(pager, Some(id), encode_internal(&entries))?;
+                            let right_id =
+                                self.write_page(pager, None, encode_internal(&right_half))?;
+                            Ok(Ins::Split(left_id, sep2, right_id))
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Visit rows with key `>= start` in order while `f` returns true.
+    pub fn scan_from(
+        &self,
+        pager: &mut Pager,
+        start: &[u8],
+        mut f: impl FnMut(&[u8], &[u8]) -> bool,
+    ) -> io::Result<()> {
+        if self.root == NO_PAGE {
+            return Ok(());
+        }
+        // Ancestor stack: (decoded internal entries, child index in use).
+        let mut stack: Vec<(InternalEntries, usize)> = Vec::new();
+        let mut node = self.root;
+        let mut entries: LeafEntries;
+        loop {
+            match decode_page(pager.read(node)?)? {
+                Decoded::Leaf(l) => {
+                    entries = l;
+                    break;
+                }
+                Decoded::Internal(ents) => {
+                    let idx = match ents.partition_point(|(k, _)| k.as_slice() <= start) {
+                        0 => 0,
+                        n => n - 1,
+                    };
+                    node = ents[idx].1;
+                    stack.push((ents, idx));
+                }
+            }
+        }
+        let mut i = entries.partition_point(|(k, _)| k.as_slice() < start);
+        'leaves: loop {
+            while i < entries.len() {
+                let (k, v) = &entries[i];
+                if !f(k, v) {
+                    return Ok(());
+                }
+                i += 1;
+            }
+            // Advance to the next leaf: climb until an ancestor has a
+            // right sibling, then descend its leftmost path.
+            loop {
+                let (ents, idx) = match stack.pop() {
+                    None => return Ok(()), // past the last leaf
+                    Some(level) => level,
+                };
+                if idx + 1 < ents.len() {
+                    let mut node = ents[idx + 1].1;
+                    stack.push((ents, idx + 1));
+                    loop {
+                        match decode_page(pager.read(node)?)? {
+                            Decoded::Leaf(l) => {
+                                entries = l;
+                                i = 0;
+                                continue 'leaves;
+                            }
+                            Decoded::Internal(es) => {
+                                node = es[0].1;
+                                stack.push((es, 0));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Visit every row whose key starts with `prefix`, in key order;
+    /// returns how many were visited.
+    pub fn scan_prefix(
+        &self,
+        pager: &mut Pager,
+        prefix: &[u8],
+        mut f: impl FnMut(&[u8], &[u8]),
+    ) -> io::Result<usize> {
+        let mut n = 0usize;
+        self.scan_from(pager, prefix, |k, v| {
+            if k.starts_with(prefix) {
+                f(k, v);
+                n += 1;
+                true
+            } else {
+                false // keys are ordered: once past the prefix, stop
+            }
+        })?;
+        Ok(n)
+    }
+
+    /// Exact-match lookup (first matching row).
+    pub fn get(&self, pager: &mut Pager, key: &[u8]) -> io::Result<Option<Vec<u8>>> {
+        let mut out = None;
+        self.scan_from(pager, key, |k, v| {
+            if k == key {
+                out = Some(v.to_vec());
+            }
+            false // only the first row >= key can match exactly
+        })?;
+        Ok(out)
+    }
+
+    /// Tree depth (1 = a single leaf; 0 = empty).
+    pub fn depth(&self, pager: &mut Pager) -> io::Result<u32> {
+        if self.root == NO_PAGE {
+            return Ok(0);
+        }
+        let mut node = self.root;
+        let mut depth = 1u32;
+        loop {
+            match decode_page(pager.read(node)?)? {
+                Decoded::Leaf(_) => return Ok(depth),
+                Decoded::Internal(ents) => {
+                    node = ents[0].1;
+                    depth += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{check, gen_bytes, prop_assert, prop_assert_eq};
+    use std::collections::BTreeMap;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("grouper_store_btree_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    /// Pager with a header page already allocated (mirrors real usage
+    /// where page 0 is a file header, never a tree node).
+    fn fresh_pager(name: &str, cache: usize) -> Pager {
+        let path = tmp(name);
+        let _ = std::fs::remove_file(&path);
+        let mut pager = Pager::create(&path, cache).unwrap();
+        let hdr = pager.allocate().unwrap();
+        assert_eq!(hdr, 0);
+        pager
+    }
+
+    #[test]
+    fn empty_tree() {
+        let mut pager = fresh_pager("empty.pages", 8);
+        let tree = BTree::new_empty(1);
+        assert_eq!(tree.get(&mut pager, b"x").unwrap(), None);
+        assert_eq!(tree.num_rows(), 0);
+        assert_eq!(tree.depth(&mut pager).unwrap(), 0);
+        let mut n = 0;
+        tree.scan_from(&mut pager, b"", |_, _| {
+            n += 1;
+            true
+        })
+        .unwrap();
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn insert_and_lookup_small() {
+        let mut pager = fresh_pager("small.pages", 8);
+        let mut tree = BTree::new_empty(1);
+        tree.insert(&mut pager, b"b", b"2").unwrap();
+        tree.insert(&mut pager, b"a", b"1").unwrap();
+        tree.insert(&mut pager, b"c", b"3").unwrap();
+        assert_eq!(tree.get(&mut pager, b"a").unwrap(), Some(b"1".to_vec()));
+        assert_eq!(tree.get(&mut pager, b"b").unwrap(), Some(b"2".to_vec()));
+        assert_eq!(tree.get(&mut pager, b"c").unwrap(), Some(b"3".to_vec()));
+        assert_eq!(tree.get(&mut pager, b"d").unwrap(), None);
+        assert_eq!(tree.get(&mut pager, b"0").unwrap(), None);
+        assert_eq!(tree.num_rows(), 3);
+        assert_eq!(tree.depth(&mut pager).unwrap(), 1);
+    }
+
+    #[test]
+    fn oversized_row_is_a_clean_error() {
+        let mut pager = fresh_pager("oversize.pages", 8);
+        let mut tree = BTree::new_empty(1);
+        let err = tree
+            .insert(&mut pager, &vec![b'k'; 3000], &vec![b'v'; 2000])
+            .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        assert!(err.to_string().contains("exceeds"));
+        assert_eq!(tree.num_rows(), 0);
+    }
+
+    #[test]
+    fn many_inserts_split_pages_and_scan_in_order() {
+        let mut pager = fresh_pager("splits.pages", 16);
+        let mut tree = BTree::new_empty(1);
+        // Interleaved insertion order; values bulky enough to force many
+        // leaf splits and at least one internal level.
+        let n = 3000u32;
+        for i in 0..n {
+            let key = format!("k{:06}", (i * 7919) % n).into_bytes();
+            let val = vec![(i % 251) as u8; 40];
+            tree.insert(&mut pager, &key, &val).unwrap();
+        }
+        assert_eq!(tree.num_rows(), n as u64);
+        assert!(tree.depth(&mut pager).unwrap() >= 2, "expected splits");
+        // Full scan is sorted and complete.
+        let mut prev: Option<Vec<u8>> = None;
+        let mut count = 0u32;
+        tree.scan_from(&mut pager, b"", |k, _| {
+            if let Some(p) = &prev {
+                assert!(p.as_slice() <= k, "scan out of order");
+            }
+            prev = Some(k.to_vec());
+            count += 1;
+            true
+        })
+        .unwrap();
+        assert_eq!(count, n);
+        // Point lookup: (i * 7919) % n == 0 only for i == 0, value 0u8s.
+        assert_eq!(tree.get(&mut pager, b"k000000").unwrap(), Some(vec![0u8; 40]));
+        assert_eq!(tree.get(&mut pager, b"k999999").unwrap(), None);
+    }
+
+    #[test]
+    fn near_max_rows_split_without_overflow() {
+        // Entries at the row-size ceiling (~2004 bytes each: at most two
+        // per page) in a size-varying interleaved order — the adversarial
+        // input for the fit-aware split. Must never panic in encode_*.
+        let mut pager = fresh_pager("bigrows.pages", 32);
+        let mut tree = BTree::new_empty(1);
+        for i in 0..120u32 {
+            let klen = 500 + ((i as usize * 379) % 1400);
+            let mut key = vec![b'k'; klen];
+            key.extend_from_slice(&i.to_be_bytes());
+            let vlen = MAX_ROW_BYTES - key.len();
+            tree.insert(&mut pager, &key, &vec![7u8; vlen]).unwrap();
+        }
+        let mut n = 0u32;
+        let mut prev: Option<Vec<u8>> = None;
+        tree.scan_from(&mut pager, b"", |k, _| {
+            if let Some(p) = &prev {
+                assert!(p.as_slice() <= k, "scan out of order");
+            }
+            prev = Some(k.to_vec());
+            n += 1;
+            true
+        })
+        .unwrap();
+        assert_eq!(n, 120);
+        assert!(tree.depth(&mut pager).unwrap() >= 2);
+    }
+
+    #[test]
+    fn prefix_scan_returns_exactly_the_prefix_range() {
+        let mut pager = fresh_pager("prefix.pages", 16);
+        let mut tree = BTree::new_empty(1);
+        for g in 0..40u32 {
+            for s in 0..25u32 {
+                let key = format!("group-{g:03}/{s:04}").into_bytes();
+                tree.insert(&mut pager, &key, &s.to_le_bytes()).unwrap();
+            }
+        }
+        let mut got = Vec::new();
+        let n = tree
+            .scan_prefix(&mut pager, b"group-017/", |_k, v| {
+                got.push(u32::from_le_bytes(v.try_into().unwrap()));
+            })
+            .unwrap();
+        assert_eq!(n, 25);
+        assert_eq!(got, (0..25).collect::<Vec<u32>>());
+        assert_eq!(tree.scan_prefix(&mut pager, b"group-999/", |_, _| {}).unwrap(), 0);
+    }
+
+    #[test]
+    fn property_equivalent_to_btreemap() {
+        check(12, |rng| {
+            let mut pager = fresh_pager(&format!("prop{}.pages", rng.next_u32()), 32);
+            let mut tree = BTree::new_empty(1);
+            let mut model: BTreeMap<Vec<u8>, Vec<u8>> = BTreeMap::new();
+            let n = 1 + rng.gen_range_usize(500);
+            for i in 0..n {
+                let mut key = gen_bytes(rng, 1..=24);
+                key.extend_from_slice(&(i as u32).to_be_bytes()); // unique
+                let val = gen_bytes(rng, 0..=60);
+                tree.insert(&mut pager, &key, &val).unwrap();
+                model.insert(key, val);
+            }
+            prop_assert_eq(tree.num_rows(), model.len() as u64, "row count")?;
+            // Lookups agree (present and absent keys).
+            for (k, v) in model.iter().take(50) {
+                prop_assert_eq(tree.get(&mut pager, k).unwrap(), Some(v.clone()), "get")?;
+            }
+            for _ in 0..20 {
+                let absent = gen_bytes(rng, 25..=30);
+                prop_assert_eq(
+                    tree.get(&mut pager, &absent).unwrap(),
+                    model.get(&absent).cloned(),
+                    "absent get",
+                )?;
+            }
+            // Full scan equals the model's sorted iteration.
+            let mut scanned: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+            tree.scan_from(&mut pager, b"", |k, v| {
+                scanned.push((k.to_vec(), v.to_vec()));
+                true
+            })
+            .unwrap();
+            let want: Vec<(Vec<u8>, Vec<u8>)> =
+                model.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+            prop_assert_eq(scanned, want, "full scan")
+        });
+    }
+
+    #[test]
+    fn cow_preserves_committed_snapshot() {
+        let path = tmp("cow.pages");
+        let _ = std::fs::remove_file(&path);
+        let mut pager = Pager::create(&path, 64).unwrap();
+        pager.allocate().unwrap(); // header page 0
+        let mut tree = BTree::new_empty(1);
+        for i in 0..800u32 {
+            let key = format!("row{:05}", i).into_bytes();
+            tree.insert(&mut pager, &key, &vec![7u8; 30]).unwrap();
+        }
+        // "Checkpoint": flush and advance the watermark.
+        pager.flush().unwrap();
+        let committed_root = tree.root();
+        let committed_rows = tree.num_rows();
+        let committed_pages = pager.num_pages();
+        tree.set_watermark(committed_pages);
+        // Keep appending beyond the checkpoint.
+        for i in 800..1600u32 {
+            let key = format!("row{:05}", i).into_bytes();
+            tree.insert(&mut pager, &key, &vec![8u8; 30]).unwrap();
+        }
+        pager.flush().unwrap();
+        // The live tree sees everything…
+        let mut live = 0u64;
+        tree.scan_from(&mut pager, b"", |_, _| {
+            live += 1;
+            true
+        })
+        .unwrap();
+        assert_eq!(live, 1600);
+        // …while the committed snapshot, re-read from its old root, is
+        // still exactly the first 800 rows: no committed page was touched.
+        let snapshot = BTree::from_header(committed_root, committed_rows, committed_pages);
+        let mut snap_keys: Vec<Vec<u8>> = Vec::new();
+        snapshot
+            .scan_from(&mut pager, b"", |k, _| {
+                snap_keys.push(k.to_vec());
+                true
+            })
+            .unwrap();
+        assert_eq!(snap_keys.len(), 800, "snapshot must be isolated from later inserts");
+        for (i, k) in snap_keys.iter().enumerate() {
+            assert_eq!(k, &format!("row{:05}", i).into_bytes());
+        }
+    }
+
+    #[test]
+    fn property_scan_from_is_a_suffix() {
+        check(10, |rng| {
+            let mut pager = fresh_pager(&format!("suffix{}.pages", rng.next_u32()), 32);
+            let mut tree = BTree::new_empty(1);
+            let mut model: BTreeMap<Vec<u8>, Vec<u8>> = BTreeMap::new();
+            for i in 0..300usize {
+                let mut key = gen_bytes(rng, 1..=10);
+                key.extend_from_slice(&(i as u32).to_be_bytes());
+                let val = gen_bytes(rng, 0..=20);
+                tree.insert(&mut pager, &key, &val).unwrap();
+                model.insert(key, val);
+            }
+            let start = gen_bytes(rng, 0..=8);
+            let mut got: Vec<Vec<u8>> = Vec::new();
+            tree.scan_from(&mut pager, &start, |k, _| {
+                got.push(k.to_vec());
+                true
+            })
+            .unwrap();
+            let want: Vec<Vec<u8>> =
+                model.range(start.clone()..).map(|(k, _)| k.clone()).collect();
+            prop_assert_eq(got.len(), want.len(), "suffix length")?;
+            prop_assert(got == want, "scan_from must equal BTreeMap::range(start..)")
+        });
+    }
+}

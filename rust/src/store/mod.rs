@@ -1,0 +1,36 @@
+//! The paged storage engine: the substrate that turns the repo's dataset
+//! formats from bulk-load-only artifacts into a real, appendable,
+//! crash-safe store (the SQLite-lineage design the paper's TFF/SQL-backed
+//! hierarchical format alludes to).
+//!
+//! Five layers, bottom-up:
+//!
+//! * [`page`] — the fixed 4 KiB page, shared with the immutable
+//!   [`crate::formats::btree_index`];
+//! * [`cache`] — an LRU page cache with pin/dirty tracking and hit/miss
+//!   counters: the single knob that governs group-access cost;
+//! * [`pager`] — page allocation, read-through-cache access, ordered
+//!   flush;
+//! * [`wal`] — a CRC-framed append-only log (reusing the TFRecord
+//!   CRC32C) with replay-on-open, torn-tail-truncating recovery;
+//! * [`btree`] — a mutable B+tree over the pager with page splits and
+//!   copy-on-write above a committed watermark, so a crashed writer can
+//!   always be recovered by replaying the WAL over the last durable
+//!   tree.
+//!
+//! [`crate::formats::paged`] assembles these into the appendable group
+//! store (`PagedStore`/`PagedReader`); [`crate::formats::hierarchical`]
+//! reads its immutable B-tree through the same pager so its cache
+//! behavior is configurable rather than hardcoded root-only.
+
+pub mod btree;
+pub mod cache;
+pub mod page;
+pub mod pager;
+pub mod wal;
+
+pub use btree::BTree;
+pub use cache::{CacheStats, PageCache};
+pub use page::{Page, PageId, NO_PAGE, PAGE_SIZE};
+pub use pager::Pager;
+pub use wal::{ReplayReport, WalWriter};

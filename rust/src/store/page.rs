@@ -1,0 +1,115 @@
+//! The fixed-size page: the unit of I/O, caching and logging for the whole
+//! storage engine. Shared by the pager, the LRU page cache, the WAL
+//! checkpointer and both B-trees (the immutable bulk-loaded
+//! [`crate::formats::btree_index`] and the mutable [`super::btree`]).
+
+use std::io;
+
+/// Fixed page size. [`crate::formats::btree_index`] re-exports this so the
+/// immutable index and the mutable engine share one on-disk granularity.
+pub const PAGE_SIZE: usize = 4096;
+
+/// A page's 0-based position in its backing file.
+pub type PageId = u32;
+
+/// Sentinel meaning "no page". Page 0 is always a file header in the
+/// formats built on the pager, so it can never be a valid root/child.
+pub const NO_PAGE: PageId = 0;
+
+/// One fixed-size page of bytes with little-endian scalar accessors.
+#[derive(Clone)]
+pub struct Page {
+    buf: Box<[u8]>,
+}
+
+impl Page {
+    pub fn zeroed() -> Page {
+        Page { buf: vec![0u8; PAGE_SIZE].into_boxed_slice() }
+    }
+
+    /// Wrap an exactly-`PAGE_SIZE` buffer.
+    pub fn from_vec(v: Vec<u8>) -> io::Result<Page> {
+        if v.len() != PAGE_SIZE {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("page must be {PAGE_SIZE} bytes, got {}", v.len()),
+            ));
+        }
+        Ok(Page { buf: v.into_boxed_slice() })
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        &mut self.buf
+    }
+
+    pub fn get_u8(&self, at: usize) -> u8 {
+        self.buf[at]
+    }
+
+    pub fn put_u8(&mut self, at: usize, v: u8) {
+        self.buf[at] = v;
+    }
+
+    pub fn get_u16(&self, at: usize) -> u16 {
+        u16::from_le_bytes(self.buf[at..at + 2].try_into().unwrap())
+    }
+
+    pub fn put_u16(&mut self, at: usize, v: u16) {
+        self.buf[at..at + 2].copy_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn get_u32(&self, at: usize) -> u32 {
+        u32::from_le_bytes(self.buf[at..at + 4].try_into().unwrap())
+    }
+
+    pub fn put_u32(&mut self, at: usize, v: u32) {
+        self.buf[at..at + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn get_u64(&self, at: usize) -> u64 {
+        u64::from_le_bytes(self.buf[at..at + 8].try_into().unwrap())
+    }
+
+    pub fn put_u64(&mut self, at: usize, v: u64) {
+        self.buf[at..at + 8].copy_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn get_bytes(&self, at: usize, len: usize) -> &[u8] {
+        &self.buf[at..at + len]
+    }
+
+    pub fn put_bytes(&mut self, at: usize, v: &[u8]) {
+        self.buf[at..at + v.len()].copy_from_slice(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_accessors_roundtrip() {
+        let mut p = Page::zeroed();
+        p.put_u8(0, 0xAB);
+        p.put_u16(1, 0x1234);
+        p.put_u32(3, 0xDEAD_BEEF);
+        p.put_u64(7, 0x0102_0304_0506_0708);
+        p.put_bytes(100, b"hello");
+        assert_eq!(p.get_u8(0), 0xAB);
+        assert_eq!(p.get_u16(1), 0x1234);
+        assert_eq!(p.get_u32(3), 0xDEAD_BEEF);
+        assert_eq!(p.get_u64(7), 0x0102_0304_0506_0708);
+        assert_eq!(p.get_bytes(100, 5), b"hello");
+    }
+
+    #[test]
+    fn from_vec_enforces_size() {
+        assert!(Page::from_vec(vec![0u8; PAGE_SIZE]).is_ok());
+        assert!(Page::from_vec(vec![0u8; PAGE_SIZE - 1]).is_err());
+        assert!(Page::from_vec(vec![0u8; PAGE_SIZE + 1]).is_err());
+    }
+}

@@ -1,0 +1,329 @@
+//! CRC-framed append-only write-ahead log with replay-on-open recovery.
+//!
+//! Frame layout, reusing the TFRecord checksum machinery
+//! ([`crate::records::crc32c`]):
+//!
+//! ```text
+//! u32 LE  payload length
+//! u32 LE  masked crc32c(payload)
+//! [u8]    payload
+//! ```
+//!
+//! Recovery contract (SQLite-journal style, by valid prefix): [`replay`]
+//! visits every intact frame in order and stops at the first torn or
+//! corrupt one — a partial header, a partial payload, or a checksum
+//! mismatch all mean "the log ends here". [`WalWriter::open`] then
+//! truncates the torn tail away so new appends continue from the last
+//! valid frame. A log is bounded by one checkpoint interval, so replay
+//! reads it whole.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufWriter, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::records::crc32c::{crc32c, masked_crc32c, unmask};
+
+/// What [`replay`] found.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReplayReport {
+    /// Intact frames visited.
+    pub records: u64,
+    /// Byte length of the valid prefix.
+    pub valid_bytes: u64,
+    /// Bytes of torn/corrupt tail beyond the valid prefix.
+    pub torn_bytes: u64,
+}
+
+/// Scan the log at `path`, calling `f` for every intact frame in order.
+/// A missing file is an empty log, not an error.
+pub fn replay(
+    path: &Path,
+    mut f: impl FnMut(&[u8]) -> io::Result<()>,
+) -> io::Result<ReplayReport> {
+    let data = match std::fs::read(path) {
+        Ok(d) => d,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(ReplayReport::default()),
+        Err(e) => return Err(e),
+    };
+    let mut pos = 0usize;
+    let mut records = 0u64;
+    while pos + 8 <= data.len() {
+        let len = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(data[pos + 4..pos + 8].try_into().unwrap());
+        if pos + 8 + len > data.len() {
+            break; // torn payload
+        }
+        let payload = &data[pos + 8..pos + 8 + len];
+        if unmask(crc) != crc32c(payload) {
+            break; // corrupt frame: treat as end of log
+        }
+        f(payload)?;
+        pos += 8 + len;
+        records += 1;
+    }
+    Ok(ReplayReport {
+        records,
+        valid_bytes: pos as u64,
+        torn_bytes: (data.len() - pos) as u64,
+    })
+}
+
+/// Cheap hot-journal probe: does the log start with at least one intact
+/// frame? Reads only the first frame instead of replaying the whole log.
+pub fn has_valid_records(path: &Path) -> io::Result<bool> {
+    use std::io::Read;
+    let mut f = match File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(false),
+        Err(e) => return Err(e),
+    };
+    let mut header = [0u8; 8];
+    let mut filled = 0usize;
+    while filled < header.len() {
+        match f.read(&mut header[filled..])? {
+            0 => return Ok(false), // shorter than one frame header
+            n => filled += n,
+        }
+    }
+    let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as u64;
+    let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    // A garbage length (torn header) must not drive a huge allocation.
+    if 8 + len > f.metadata()?.len() {
+        return Ok(false);
+    }
+    let mut payload = vec![0u8; len as usize];
+    if f.read_exact(&mut payload).is_err() {
+        return Ok(false); // torn first payload
+    }
+    Ok(unmask(crc) == crc32c(&payload))
+}
+
+/// Appender over a log file. Appends are buffered; [`WalWriter::commit`]
+/// is the durability point (flush + fsync).
+pub struct WalWriter {
+    w: BufWriter<File>,
+    len: u64,
+    appended: u64,
+}
+
+impl WalWriter {
+    /// Open for appending, truncating everything past `valid_bytes` (as
+    /// reported by [`replay`]) so a torn tail never survives.
+    pub fn open(path: &Path, valid_bytes: u64) -> io::Result<WalWriter> {
+        if let Some(d) = path.parent() {
+            std::fs::create_dir_all(d)?;
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(path)?;
+        file.set_len(valid_bytes)?;
+        file.seek(SeekFrom::Start(valid_bytes))?;
+        Ok(WalWriter { w: BufWriter::new(file), len: valid_bytes, appended: 0 })
+    }
+
+    /// Append one frame (buffered).
+    pub fn append(&mut self, payload: &[u8]) -> io::Result<()> {
+        if payload.len() > u32::MAX as usize {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "wal payload exceeds u32 length",
+            ));
+        }
+        self.w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        self.w.write_all(&masked_crc32c(payload).to_le_bytes())?;
+        self.w.write_all(payload)?;
+        self.len += 8 + payload.len() as u64;
+        self.appended += 1;
+        Ok(())
+    }
+
+    /// Total valid log bytes (including frames appended this session).
+    pub fn len_bytes(&self) -> u64 {
+        self.len
+    }
+
+    /// Frames appended by this writer (not counting pre-existing ones).
+    pub fn records_appended(&self) -> u64 {
+        self.appended
+    }
+
+    /// Durability point: flush buffers and fsync.
+    pub fn commit(&mut self) -> io::Result<()> {
+        self.w.flush()?;
+        self.w.get_ref().sync_data()
+    }
+
+    /// Checkpoint: everything logged is now reflected in the main file —
+    /// drop the log.
+    pub fn reset(&mut self) -> io::Result<()> {
+        self.w.flush()?;
+        let f = self.w.get_mut();
+        f.set_len(0)?;
+        f.seek(SeekFrom::Start(0))?;
+        f.sync_data()?;
+        self.len = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{check, gen_bytes, gen_vec, prop_assert_eq};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("grouper_wal_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn collect(path: &Path) -> (Vec<Vec<u8>>, ReplayReport) {
+        let mut out = Vec::new();
+        let report = replay(path, |p| {
+            out.push(p.to_vec());
+            Ok(())
+        })
+        .unwrap();
+        (out, report)
+    }
+
+    #[test]
+    fn missing_log_is_empty() {
+        let (recs, report) = collect(&tmp("nonexistent.wal"));
+        assert!(recs.is_empty());
+        assert_eq!(report, ReplayReport::default());
+    }
+
+    #[test]
+    fn append_commit_replay_roundtrip() {
+        let path = tmp("roundtrip.wal");
+        let _ = std::fs::remove_file(&path);
+        let mut w = WalWriter::open(&path, 0).unwrap();
+        w.append(b"alpha").unwrap();
+        w.append(b"").unwrap();
+        w.append(&[9u8; 300]).unwrap();
+        w.commit().unwrap();
+        let (recs, report) = collect(&path);
+        assert_eq!(recs, vec![b"alpha".to_vec(), Vec::new(), vec![9u8; 300]]);
+        assert_eq!(report.records, 3);
+        assert_eq!(report.torn_bytes, 0);
+        assert_eq!(report.valid_bytes, w.len_bytes());
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_then_truncated() {
+        let path = tmp("torn.wal");
+        let _ = std::fs::remove_file(&path);
+        let mut w = WalWriter::open(&path, 0).unwrap();
+        w.append(b"one").unwrap();
+        w.append(b"two").unwrap();
+        w.commit().unwrap();
+        drop(w);
+        // Simulate a torn write: half a frame of garbage at the tail.
+        {
+            use std::io::Write;
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&[0x44, 0x33, 0x22]).unwrap();
+        }
+        let (recs, report) = collect(&path);
+        assert_eq!(recs, vec![b"one".to_vec(), b"two".to_vec()]);
+        assert_eq!(report.torn_bytes, 3);
+        // Reopen at the valid prefix: tail is truncated, appends continue.
+        let mut w = WalWriter::open(&path, report.valid_bytes).unwrap();
+        w.append(b"three").unwrap();
+        w.commit().unwrap();
+        let (recs, report) = collect(&path);
+        assert_eq!(recs, vec![b"one".to_vec(), b"two".to_vec(), b"three".to_vec()]);
+        assert_eq!(report.torn_bytes, 0);
+    }
+
+    #[test]
+    fn corrupt_frame_ends_the_log() {
+        let path = tmp("corrupt.wal");
+        let _ = std::fs::remove_file(&path);
+        let mut w = WalWriter::open(&path, 0).unwrap();
+        w.append(b"good").unwrap();
+        w.append(b"bad").unwrap();
+        w.commit().unwrap();
+        drop(w);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xFF; // flip a payload bit in the second frame
+        std::fs::write(&path, &bytes).unwrap();
+        let (recs, report) = collect(&path);
+        assert_eq!(recs, vec![b"good".to_vec()]);
+        assert!(report.torn_bytes > 0);
+    }
+
+    #[test]
+    fn has_valid_records_probe() {
+        let path = tmp("probe.wal");
+        let _ = std::fs::remove_file(&path);
+        assert!(!has_valid_records(&path).unwrap(), "missing log");
+        let mut w = WalWriter::open(&path, 0).unwrap();
+        assert!(!has_valid_records(&path).unwrap(), "empty log");
+        w.append(b"rec").unwrap();
+        w.commit().unwrap();
+        assert!(has_valid_records(&path).unwrap());
+        drop(w);
+        // Garbage-only log (torn header with a huge claimed length).
+        std::fs::write(&path, [0xFFu8; 6]).unwrap();
+        assert!(!has_valid_records(&path).unwrap());
+        std::fs::write(&path, [0xFFu8; 20]).unwrap();
+        assert!(!has_valid_records(&path).unwrap());
+    }
+
+    #[test]
+    fn reset_empties_the_log() {
+        let path = tmp("reset.wal");
+        let _ = std::fs::remove_file(&path);
+        let mut w = WalWriter::open(&path, 0).unwrap();
+        w.append(b"x").unwrap();
+        w.reset().unwrap();
+        assert_eq!(w.len_bytes(), 0);
+        w.append(b"y").unwrap();
+        w.commit().unwrap();
+        let (recs, _) = collect(&path);
+        assert_eq!(recs, vec![b"y".to_vec()]);
+    }
+
+    /// Property: replay of a randomly truncated log is exactly the longest
+    /// frame-prefix that fits.
+    #[test]
+    fn property_truncation_yields_prefix() {
+        check(40, |rng| {
+            let records = gen_vec(rng, 1..=12, |r| gen_bytes(r, 0..=60));
+            let path = tmp(&format!("prop{}.wal", rng.next_u32()));
+            let _ = std::fs::remove_file(&path);
+            let mut w = WalWriter::open(&path, 0).unwrap();
+            let mut boundaries = vec![0u64];
+            for rec in &records {
+                w.append(rec).unwrap();
+                boundaries.push(w.len_bytes());
+            }
+            w.commit().unwrap();
+            drop(w);
+            let full = std::fs::read(&path).unwrap();
+            let cut = rng.gen_range_usize(full.len() + 1);
+            std::fs::write(&path, &full[..cut]).unwrap();
+            // Expected: all records whose frame end <= cut.
+            let expect: Vec<Vec<u8>> = records
+                .iter()
+                .zip(boundaries.iter().skip(1))
+                .filter(|(_, end)| **end <= cut as u64)
+                .map(|(r, _)| r.clone())
+                .collect();
+            let (got, report) = collect(&path);
+            std::fs::remove_file(&path).ok();
+            prop_assert_eq(got.len(), expect.len(), "record count")?;
+            prop_assert_eq(got, expect, "prefix property")?;
+            prop_assert_eq(
+                report.valid_bytes + report.torn_bytes,
+                cut as u64,
+                "byte accounting",
+            )
+        });
+    }
+}

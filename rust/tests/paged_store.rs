@@ -1,0 +1,184 @@
+//! Integration: the paged format's acceptance round-trip — append groups
+//! through the WAL, crash-simulate (drop without checkpoint), reopen with
+//! recovery, and read every group back through the pager under a
+//! bounded-size LRU cache.
+
+use std::collections::HashMap;
+
+use grouper::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
+use grouper::formats::{PagedReader, PagedStore};
+use grouper::util::rng::Rng;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("grouper_paged_it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Oracle: group key -> encoded examples in arrival order.
+fn oracle(ds: &SyntheticTextDataset) -> HashMap<Vec<u8>, Vec<Vec<u8>>> {
+    let mut map: HashMap<Vec<u8>, Vec<Vec<u8>>> = HashMap::new();
+    for g in 0..ds.spec.num_groups {
+        let key = ds.spec.group_key(g).into_bytes();
+        map.insert(key, ds.group_examples_iter(g).map(|e| e.encode()).collect());
+    }
+    map
+}
+
+fn dataset(groups: usize, seed: u64) -> SyntheticTextDataset {
+    let mut spec = DatasetSpec::fedccnews_mini(groups, seed);
+    spec.max_group_words = 2500;
+    SyntheticTextDataset::new(spec)
+}
+
+#[test]
+fn acceptance_wal_crash_recover_bounded_cache_roundtrip() {
+    let dir = tmp("acceptance");
+    let ds = dataset(40, 11);
+    let want = oracle(&ds);
+
+    // 1. Append everything through the WAL; fsync the WAL (commit) but
+    //    deliberately do NOT checkpoint: index pages and the header stay
+    //    unflushed, simulating a crash mid-run.
+    {
+        use grouper::pipeline::Partitioner;
+        let by_domain = grouper::pipeline::FeatureKey::new("domain");
+        let mut store = PagedStore::create(&dir, "news", 32).unwrap();
+        let mut n = 0u64;
+        for ex in ds.examples() {
+            let key = by_domain.key(&ex);
+            store.append(&key, &ex).unwrap();
+            n += 1;
+            if n % 97 == 0 {
+                store.commit().unwrap(); // periodic durability points
+            }
+        }
+        store.commit().unwrap();
+        assert_eq!(n, ds.len() as u64);
+        // Crash: drop without checkpoint.
+    }
+
+    // 2. Reopen: recovery replays the WAL over the (empty) committed
+    //    state. Every append must be back.
+    {
+        let mut store = PagedStore::open(&dir, "news", 32).unwrap();
+        assert_eq!(store.num_examples(), ds.len() as u64);
+        assert_eq!(store.num_groups(), 40);
+        for (key, want_examples) in &want {
+            let mut got = Vec::new();
+            assert!(store.visit_group(key, |ex| got.push(ex.encode())).unwrap());
+            assert_eq!(&got, want_examples, "group {:?} after recovery", key);
+        }
+        // Make it durable for the reader phase.
+        store.checkpoint().unwrap();
+    }
+
+    // 3. Read back through the pager with a deliberately tiny LRU cache:
+    //    correctness must be independent of cache size, and the bounded
+    //    cache must actually evict.
+    let mut reader = PagedReader::open(&dir, "news", 4).unwrap();
+    assert_eq!(reader.num_groups(), 40);
+    let mut order: Vec<Vec<u8>> = reader.keys().to_vec();
+    Rng::new(3).shuffle(&mut order);
+    let mut seen = 0usize;
+    for key in &order {
+        let mut got = Vec::new();
+        assert!(reader.visit_group(key, |ex| got.push(ex.encode())).unwrap());
+        assert_eq!(&got, want.get(key).unwrap(), "group {:?} via bounded cache", key);
+        seen += got.len();
+    }
+    assert_eq!(seen, ds.len());
+    let stats = reader.cache_stats();
+    assert!(stats.evictions > 0, "a 4-frame cache over this store must evict");
+    assert!(stats.hits > 0, "descents should still share hot pages");
+    assert!(reader.pages_read() > 0);
+}
+
+#[test]
+fn torn_wal_tail_loses_only_the_torn_suffix() {
+    let dir = tmp("torn");
+    {
+        let mut store = PagedStore::create(&dir, "x", 16).unwrap();
+        for i in 0..30u32 {
+            let g = format!("g{}", i % 5);
+            store
+                .append(g.as_bytes(), &grouper::records::Example::text(&format!("t{i}")))
+                .unwrap();
+        }
+        store.commit().unwrap();
+        // Crash without checkpoint.
+    }
+    // Tear the WAL: append garbage that looks like a partial frame.
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join("x.pwal"))
+            .unwrap();
+        f.write_all(&[0xDE, 0xAD, 0xBE]).unwrap();
+    }
+    let mut store = PagedStore::open(&dir, "x", 16).unwrap();
+    assert_eq!(store.num_examples(), 30, "intact WAL prefix must fully recover");
+    // The store remains appendable after recovery-from-torn-tail.
+    store.append(b"g0", &grouper::records::Example::text("after")).unwrap();
+    store.commit().unwrap();
+    store.checkpoint().unwrap();
+    let mut reader = PagedReader::open(&dir, "x", 16).unwrap();
+    assert_eq!(reader.num_examples(), 31);
+    let mut texts = Vec::new();
+    assert!(reader
+        .visit_group(b"g0", |ex| texts.push(ex.get_str("text").unwrap().to_string()))
+        .unwrap());
+    assert_eq!(texts.last().unwrap(), "after");
+}
+
+#[test]
+fn reader_on_hot_store_runs_recovery_first() {
+    let dir = tmp("hotjournal");
+    {
+        let mut store = PagedStore::create(&dir, "x", 16).unwrap();
+        store.append(b"a", &grouper::records::Example::text("1")).unwrap();
+        store.append(b"b", &grouper::records::Example::text("2")).unwrap();
+        store.commit().unwrap();
+        // No checkpoint: the WAL is "hot".
+    }
+    let mut reader = PagedReader::open(&dir, "x", 16).unwrap();
+    assert_eq!(reader.num_groups(), 2);
+    assert_eq!(reader.num_examples(), 2);
+    let mut n = 0;
+    assert!(reader.visit_group(b"a", |_| n += 1).unwrap());
+    assert_eq!(n, 1);
+}
+
+#[test]
+fn paged_matches_every_other_format_on_the_same_dataset() {
+    // Format-equivalence in miniature: the paged store must agree with a
+    // straight scan of the base dataset, group by group, like the
+    // formats_equivalence suite does for the seed formats.
+    let dir = tmp("equiv");
+    let ds = dataset(15, 29);
+    let store = PagedStore::build(
+        &ds,
+        &grouper::pipeline::FeatureKey::new("domain"),
+        &dir,
+        "eq",
+        16,
+    )
+    .unwrap();
+    assert_eq!(store.num_examples(), ds.len() as u64);
+    drop(store);
+    let want = oracle(&ds);
+    let mut reader = PagedReader::open(&dir, "eq", 16).unwrap();
+    assert_eq!(reader.num_groups(), 15);
+    // visit_all covers every group exactly once, in the given order.
+    let order = reader.keys().to_vec();
+    let mut per_group: HashMap<Vec<u8>, Vec<Vec<u8>>> = HashMap::new();
+    reader
+        .visit_all(&order, |k, ex| per_group.entry(k.to_vec()).or_default().push(ex.encode()))
+        .unwrap();
+    assert_eq!(per_group.len(), 15);
+    for (k, v) in &want {
+        assert_eq!(per_group.get(k).unwrap(), v);
+    }
+}
