@@ -92,7 +92,7 @@ fn main() {
         });
 
         let (_, paged_peak) = measure_peak(|| {
-            let mut paged = PagedReader::open(&dir, "paged", PAGED_CACHE_PAGES).unwrap();
+            let paged = PagedReader::open(&dir, "paged", PAGED_CACHE_PAGES).unwrap();
             let order = paged.keys().to_vec();
             let mut n = 0usize;
             paged.visit_all(&order, |_, _| n += 1).unwrap();

@@ -93,6 +93,10 @@ fn main() {
     // sequential bandwidth.
     const SEEK_S: f64 = 100e-6;
     const BW: f64 = 200e6;
+    let mut concurrent = Table::new(
+        "Table 3c — paged store, one shared reader, N threads over the same random order",
+        &["Dataset", "1 thread", "2 threads", "4 threads", "8 threads", "speedup@8"],
+    );
     let mut modeled = Table::new(
         "Table 3b — same iteration + cold-storage model (100 µs/random read, 200 MB/s)",
         &[
@@ -154,12 +158,43 @@ fn main() {
 
         // Paged: arbitrary order through the B+tree under a bounded LRU
         // cache (the tunable fourth column).
-        let mut paged = PagedReader::open(&w.dir, "paged", PAGED_CACHE_PAGES).unwrap();
+        let paged = PagedReader::open(&w.dir, "paged", PAGED_CACHE_PAGES).unwrap();
         let paged_time = time_trials(TRIALS, || {
             let mut n = 0usize;
             paged.visit_all(&order, |_, _| n += 1).unwrap();
             assert_eq!(n, w.examples);
         });
+
+        // Paged, concurrent: the same random-order pass split across N
+        // threads sharing ONE reader (PagedReader is Send + Sync; the
+        // sharded page cache and per-call data cursors do the rest).
+        let concurrent_time = |threads: usize| {
+            time_trials(TRIALS, || {
+                let total = std::sync::atomic::AtomicUsize::new(0);
+                let chunk = order.len().div_ceil(threads);
+                std::thread::scope(|s| {
+                    for part in order.chunks(chunk) {
+                        let paged = &paged;
+                        let total = &total;
+                        s.spawn(move || {
+                            let mut n = 0usize;
+                            paged.visit_all(part, |_, _| n += 1).unwrap();
+                            total.fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+                        });
+                    }
+                });
+                assert_eq!(total.into_inner(), w.examples);
+            })
+        };
+        let conc: Vec<_> = [1usize, 2, 4, 8].iter().map(|&t| concurrent_time(t)).collect();
+        concurrent.row(vec![
+            w.name.into(),
+            format!("{}", conc[0]),
+            format!("{}", conc[1]),
+            format!("{}", conc[2]),
+            format!("{}", conc[3]),
+            format!("{:.2}x", conc[0].mean / conc[3].mean),
+        ]);
 
         table.row(vec![
             w.name.into(),
@@ -216,9 +251,11 @@ fn main() {
         );
     }
     table.print();
+    concurrent.print();
     modeled.print();
     modeled.write_csv("results/table3b_storage_model.csv").unwrap();
     table.write_csv("results/table3_format_iteration.csv").unwrap();
+    concurrent.write_csv("results/table3c_concurrent_readers.csv").unwrap();
     println!(
         "paper reference (seconds): CIFAR-100 0.078 / 25.1 / 9.9; FedCCnews 0.55 / >7200 / 248; \
          FedBookCO OOM / >7200 / 192 (no paged column — appendable stores are this repo's extension)"

@@ -10,7 +10,8 @@
 //!   bulk-loaded bottom-up from sorted (key, value) rows; leaves are
 //!   chained for range scans;
 //! * lookups descend from the root reading pages **through the shared
-//!   pager** ([`crate::store::pager::Pager`]): page fetches go through a
+//!   pager** ([`crate::store::shared::SharedPager`], so any number of
+//!   threads can query one open index): page fetches go through a
 //!   bounded LRU cache whose size is a constructor knob
 //!   ([`BTreeFile::open_with_cache`]), defaulting to a tiny hot set
 //!   ([`DEFAULT_CACHE_PAGES`]) so every cold group construction still
@@ -30,14 +31,14 @@
 //! u16 count | (u16 klen | key | u32 child)*` where child covers keys
 //! `>=` its key (first child covers everything below the second key).
 
-use std::cell::RefCell;
 use std::fs::File;
 use std::io::{self, Write};
 use std::path::Path;
 
 use crate::store::cache::CacheStats;
 use crate::store::page::Page;
-use crate::store::pager::Pager;
+use crate::store::pager::PageRead;
+use crate::store::shared::{ReadSnapshot, SharedPager};
 
 pub use crate::store::page::PAGE_SIZE;
 
@@ -197,10 +198,13 @@ impl Default for BTreeBuilder {
     }
 }
 
-/// Read side: descends from the root, fetching pages through the shared
-/// pager's LRU cache.
+/// Read side: descends from the root, fetching pages through a shared
+/// concurrent pager's sharded LRU cache. `Send + Sync`: many threads can
+/// query one `BTreeFile` (the file is immutable once bulk-loaded, so
+/// every read handle is bounded by the whole file).
 pub struct BTreeFile {
-    pager: RefCell<Pager>,
+    pager: SharedPager,
+    snapshot: ReadSnapshot,
     root: u32,
     levels: u32,
     num_rows: u64,
@@ -215,15 +219,18 @@ impl BTreeFile {
     /// Open with an explicit LRU cache size in pages — the knob Table 3's
     /// paged column turns. Clamped to at least 2 frames.
     pub fn open_with_cache<P: AsRef<Path>>(path: P, cache_pages: usize) -> io::Result<Self> {
-        let mut pager = Pager::open_read(path.as_ref(), cache_pages.max(2))?;
-        let header = pager.read_copy(0)?;
+        let pager = SharedPager::open(path.as_ref(), cache_pages.max(2))?;
+        let header = pager.read_header_fresh()?;
         if header.get_bytes(0, 8) != MAGIC {
             return Err(io::Error::new(io::ErrorKind::InvalidData, "bad btree magic"));
         }
         let root = header.get_u32(8);
+        let num_pages = header.get_u32(12);
         let levels = header.get_u32(16);
         let num_rows = header.get_u64(20);
-        let this = BTreeFile { pager: RefCell::new(pager), root, levels, num_rows };
+        // The file is immutable: the snapshot is simply "all pages".
+        let snapshot = ReadSnapshot { bound: num_pages, epoch: 0 };
+        let this = BTreeFile { pager, snapshot, root, levels, num_rows };
         if num_rows > 0 {
             // Warm the root (the hot set every descent shares).
             this.page(this.root)?;
@@ -240,18 +247,18 @@ impl BTreeFile {
     }
 
     /// Pages fetched from disk so far (cache misses; cost introspection
-    /// for benches).
+    /// for benches), summed across all querying threads.
     pub fn pages_read(&self) -> u64 {
-        self.pager.borrow().disk_reads()
+        self.pager.disk_reads()
     }
 
     /// Cache hit/miss/eviction counters.
     pub fn cache_stats(&self) -> CacheStats {
-        self.pager.borrow().cache_stats()
+        self.pager.cache_stats()
     }
 
     fn page(&self, id: u32) -> io::Result<Page> {
-        self.pager.borrow_mut().read_copy(id)
+        self.pager.reader(self.snapshot).read_page(id)
     }
 
     /// Find the leaf that may contain `key`, descending internal pages.

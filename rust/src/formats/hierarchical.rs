@@ -109,7 +109,10 @@ fn row_value(shard: u32, offset: u64) -> Vec<u8> {
     v
 }
 
-/// Reader: B-tree-indexed arbitrary group access.
+/// Reader: B-tree-indexed arbitrary group access. `Send + Sync` — the
+/// index reads through the concurrent [`crate::store::shared::SharedPager`]
+/// and every query opens its own shard cursors, so threads can construct
+/// different groups' datasets through one shared reader.
 pub struct HierarchicalReader {
     shards: Vec<PathBuf>,
     btree: BTreeFile,

@@ -32,6 +32,12 @@
 //! pager + LRU cache + WAL + mutable B+tree storage engine, so datasets
 //! *grow* after materialization (crash-safe incremental appends) and
 //! arbitrary group access cost is governed by cache size.
+//!
+//! Read handles are concurrent: [`PagedReader`] and
+//! [`HierarchicalReader`] are `Send + Sync` (their indexes go through
+//! [`crate::store::shared::SharedPager`]), so one open reader serves a
+//! whole cohort's worth of threads — see `docs/ARCHITECTURE.md` for the
+//! snapshot invariants that make this lock-free for readers.
 
 pub mod btree_index;
 pub mod hierarchical;

@@ -23,14 +23,28 @@
 //! tunable middle ground between the hierarchical format's cold index
 //! walks and the in-memory format's everything-resident map.
 //!
+//! Reads are **concurrent**: [`PagedReader`] is `Send + Sync` and every
+//! access method takes `&self`, so a FedAvg round can fetch its whole
+//! cohort's client datasets in parallel through one shared reader (the
+//! index goes through [`crate::store::shared::SharedPager`]'s sharded
+//! cache; each call opens its own data cursor). A reader is a
+//! *snapshot* at the checkpoint epoch current when it was opened: the
+//! B+tree's copy-on-write watermark guarantees a concurrent appender
+//! never mutates a page the snapshot can reach.
+//!
 //! Layout of the `.pstore` header (page 0): magic, B+tree root page,
 //! committed page count, committed row count, durable `.pdata` byte
-//! length, committed group count, checkpoint epoch.
+//! length, committed group count, checkpoint epoch, and a CRC32C over
+//! the preceding fields. The checksum lets a concurrent reader detect a
+//! torn page-0 read (it races the checkpoint's in-place header write)
+//! and retry, instead of parsing fields from two different epochs.
 //!
 //! Known trade-off: `open` walks the committed index once (O(rows)
 //! sequential leaf scan through the cache) to rebuild per-group counts /
 //! the group list. A persisted `.hgroups`-style sidecar would make open
 //! O(groups); left as follow-up since open happens once per process.
+
+#![deny(missing_docs)]
 
 use std::collections::HashMap;
 use std::fs::File;
@@ -41,12 +55,14 @@ use anyhow::{bail, Context, Result};
 
 use crate::corpus::BaseDataset;
 use crate::pipeline::Partitioner;
+use crate::records::crc32c::crc32c;
 use crate::records::tfrecord::{RecordReader, RecordWriter};
 use crate::records::Example;
 use crate::store::btree::BTree;
 use crate::store::cache::CacheStats;
 use crate::store::page::{Page, PageId};
-use crate::store::pager::Pager;
+use crate::store::pager::{PageRead, Pager};
+use crate::store::shared::{ReadSnapshot, SharedPager};
 use crate::store::wal::{self, WalWriter};
 
 const MAGIC: &[u8; 8] = b"GRPPAG01";
@@ -104,10 +120,20 @@ struct StoreHeader {
     epoch: u64,
 }
 
-fn read_header(pager: &mut Pager) -> Result<StoreHeader> {
-    let page = pager.read(0).context("reading paged store header")?;
+/// Byte span of the header fields covered by the trailing checksum.
+const HEADER_CRC_SPAN: usize = 48;
+
+fn header_checksum_ok(page: &Page) -> bool {
+    page.get_bytes(0, 8) == MAGIC
+        && page.get_u32(HEADER_CRC_SPAN) == crc32c(page.get_bytes(0, HEADER_CRC_SPAN))
+}
+
+fn parse_header(page: &Page) -> Result<StoreHeader> {
     if page.get_bytes(0, 8) != MAGIC {
         bail!("bad paged store magic");
+    }
+    if !header_checksum_ok(page) {
+        bail!("paged store header checksum mismatch (torn or corrupt header page)");
     }
     Ok(StoreHeader {
         root: page.get_u32(8),
@@ -119,6 +145,11 @@ fn read_header(pager: &mut Pager) -> Result<StoreHeader> {
     })
 }
 
+fn read_header(pager: &mut Pager) -> Result<StoreHeader> {
+    let page = pager.read(0).context("reading paged store header")?;
+    parse_header(page)
+}
+
 fn write_header(page: &mut Page, h: &StoreHeader) {
     page.put_bytes(0, MAGIC);
     page.put_u32(8, h.root);
@@ -127,6 +158,8 @@ fn write_header(page: &mut Page, h: &StoreHeader) {
     page.put_u64(24, h.data_len);
     page.put_u64(32, h.num_groups);
     page.put_u64(40, h.epoch);
+    let crc = crc32c(page.get_bytes(0, HEADER_CRC_SPAN));
+    page.put_u32(HEADER_CRC_SPAN, crc);
 }
 
 /// WAL payload: `u64 LE epoch | u32 LE group length | group | example`.
@@ -158,9 +191,9 @@ fn decode_wal(payload: &[u8]) -> io::Result<(u64, &[u8], &[u8])> {
 /// B+tree range scan for data offsets (cost governed by the LRU cache),
 /// then one data-file read per example. Returns false for an unknown
 /// group.
-fn visit_group_via(
+fn visit_group_via<R: PageRead>(
     tree: &BTree,
-    pager: &mut Pager,
+    pager: &mut R,
     data_path: &Path,
     group: &[u8],
     mut f: impl FnMut(Example),
@@ -217,6 +250,9 @@ pub struct PagedStore {
 impl PagedStore {
     /// Create a fresh (empty) store, truncating any existing one.
     /// `cache_pages` is clamped to at least 2 frames (header + one node).
+    ///
+    /// # Errors
+    /// Any failure creating the directory or the three store files.
     pub fn create(dir: &Path, prefix: &str, cache_pages: usize) -> Result<PagedStore> {
         let cache_pages = cache_pages.max(2);
         std::fs::create_dir_all(dir)?;
@@ -261,6 +297,10 @@ impl PagedStore {
     /// Open an existing store, running crash recovery: the header names
     /// the last committed tree/data state; any torn `.pdata`/`.pwal`
     /// tails are truncated, and intact WAL records are replayed on top.
+    ///
+    /// # Errors
+    /// Fails on missing/corrupt store files (e.g. a data file shorter
+    /// than the committed length) or any I/O error during replay.
     pub fn open(dir: &Path, prefix: &str, cache_pages: usize) -> Result<PagedStore> {
         let cache_pages = cache_pages.max(2);
         let mut pager = Pager::open(&pstore_path(dir, prefix), cache_pages)?;
@@ -361,6 +401,10 @@ impl PagedStore {
 
     /// Append one example to a group: logged to the WAL, then applied.
     /// Call [`PagedStore::commit`] to make a batch of appends durable.
+    ///
+    /// # Errors
+    /// Rejects (before logging) a group key that would overflow the
+    /// index row budget; otherwise any WAL/data/index write failure.
     pub fn append(&mut self, group: &[u8], example: &Example) -> Result<()> {
         // Validate BEFORE logging: a frame that cannot be applied must
         // never enter the WAL, or replay would fail on it at every
@@ -379,6 +423,9 @@ impl PagedStore {
     }
 
     /// Durability point: fsync the WAL. Cheap — no index/data flush.
+    ///
+    /// # Errors
+    /// Any WAL flush/fsync failure.
     pub fn commit(&mut self) -> Result<()> {
         self.wal.commit()?;
         Ok(())
@@ -386,7 +433,12 @@ impl PagedStore {
 
     /// Full checkpoint: data + index durable (ordered: data, tree pages,
     /// then the single-page header swap), WAL reset, COW watermark
-    /// advanced.
+    /// advanced. Each checkpoint starts a new epoch — readers opened
+    /// before it keep seeing the previous epoch's snapshot.
+    ///
+    /// # Errors
+    /// Any flush/fsync failure at any of the ordered steps; the store
+    /// stays recoverable from the previous checkpoint + WAL.
     pub fn checkpoint(&mut self) -> Result<()> {
         self.data.flush()?;
         self.data_file.sync_data()?;
@@ -408,10 +460,12 @@ impl PagedStore {
         Ok(())
     }
 
+    /// Distinct groups appended so far (committed + uncommitted).
     pub fn num_groups(&self) -> usize {
         self.group_counts.len()
     }
 
+    /// Total examples appended so far (committed + uncommitted).
     pub fn num_examples(&self) -> u64 {
         self.tree.num_rows()
     }
@@ -425,6 +479,9 @@ impl PagedStore {
 
     /// Visit one group's examples in append order. Returns false for an
     /// unknown group.
+    ///
+    /// # Errors
+    /// Any index or data-file read failure, or a corrupt index row.
     pub fn visit_group(&mut self, group: &[u8], f: impl FnMut(Example)) -> Result<bool> {
         if self.data_buffered {
             self.data.flush()?;
@@ -435,6 +492,9 @@ impl PagedStore {
     }
 
     /// Iterate groups in `order` (the Table 3 serial random-order walk).
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedStore::visit_group`].
     pub fn visit_all(
         &mut self,
         order: &[Vec<u8>],
@@ -446,6 +506,7 @@ impl PagedStore {
         Ok(())
     }
 
+    /// Index-cache hit/miss/eviction counters.
     pub fn cache_stats(&self) -> CacheStats {
         self.pager.cache_stats()
     }
@@ -459,6 +520,9 @@ impl PagedStore {
     /// the builder mirroring `HierarchicalStore::build`. Returns the
     /// still-open (and still appendable) store so callers can report
     /// counts without paying a reopen + recovery scan.
+    ///
+    /// # Errors
+    /// Any append, commit or checkpoint failure while materializing.
     pub fn build(
         dataset: &dyn BaseDataset,
         partitioner: &dyn Partitioner,
@@ -484,13 +548,31 @@ impl PagedStore {
     }
 }
 
-/// Read-only view over a checkpointed store, with a bounded LRU cache.
+/// Read-only view over a checkpointed store, with a bounded (sharded)
+/// LRU cache. **`Send + Sync`**: wrap it in an `Arc` (or borrow it from
+/// scoped threads) and any number of threads can call
+/// [`PagedReader::visit_group`] simultaneously — each call reads the
+/// index through its own snapshot-bounded handle and opens its own data
+/// cursor, so no `&mut` is needed anywhere on the read path.
+///
+/// The reader is pinned to the checkpoint epoch current at open time
+/// (see [`PagedReader::epoch`]): the storage engine's copy-on-write
+/// contract means a writer appending to the same store can never mutate
+/// a page this snapshot can reach, so reads stay consistent without any
+/// reader/writer lock. To observe newer appends, open a new reader.
 ///
 /// Opening a store whose WAL still holds records (a "hot journal") first
 /// runs full recovery — open for append, checkpoint, drop — exactly the
-/// SQLite open-time contract.
+/// SQLite open-time contract. **Because recovery rewrites the store**,
+/// this path must not race a live [`PagedStore`] writer that has
+/// committed but not yet checkpointed: like SQLite without its file
+/// locks, the engine assumes a single live writer, so either open
+/// readers after the writer checkpointed (the WAL is then cold and the
+/// open is purely read-only), or keep writer and reader opens
+/// serialized in the embedding process.
 pub struct PagedReader {
-    pager: Pager,
+    pager: SharedPager,
+    snapshot: ReadSnapshot,
     tree: BTree,
     data_path: PathBuf,
     keys: Vec<Vec<u8>>,
@@ -498,6 +580,14 @@ pub struct PagedReader {
 }
 
 impl PagedReader {
+    /// Open the store at `dir/<prefix>` for (possibly concurrent)
+    /// reading, with `cache_pages` total LRU frames (clamped to at
+    /// least 2).
+    ///
+    /// # Errors
+    /// Fails when the store files are missing or corrupt, when WAL
+    /// probing/recovery fails, or on any I/O error during the group
+    /// enumeration scan.
     pub fn open(dir: &Path, prefix: &str, cache_pages: usize) -> Result<PagedReader> {
         let cache_pages = cache_pages.max(2);
         let wal_path = pwal_path(dir, prefix);
@@ -510,13 +600,25 @@ impl PagedReader {
                 .context("recovering hot paged store")?;
             store.checkpoint()?;
         }
-        let mut pager = Pager::open_read(&pstore_path(dir, prefix), cache_pages)?;
-        let header = read_header(&mut pager)?;
+        let pager = SharedPager::open(&pstore_path(dir, prefix), cache_pages)?;
+        // The checkpointing writer rewrites page 0 in place; a read that
+        // races it can be torn. The header checksum detects that, and a
+        // brief retry rides out the in-flight write.
+        let mut page = pager.read_header_fresh()?;
+        let mut attempts = 0;
+        while !header_checksum_ok(&page) && attempts < 20 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            page = pager.read_header_fresh()?;
+            attempts += 1;
+        }
+        let header = parse_header(&page).context("reading paged store header")?;
+        let snapshot = ReadSnapshot { bound: header.committed_pages, epoch: header.epoch };
         let tree = BTree::from_header(header.root, header.num_rows, u32::MAX);
         // Enumerate distinct groups (one ordered leaf walk).
+        let mut handle = pager.reader(snapshot);
         let mut keys: Vec<Vec<u8>> = Vec::new();
         let mut scan_err: Option<io::Error> = None;
-        tree.scan_from(&mut pager, b"", |k, _| match group_of_row_key(k) {
+        tree.scan_from(&mut handle, b"", |k, _| match group_of_row_key(k) {
             Ok(g) => {
                 if keys.last().map(|l| l.as_slice()) != Some(g) {
                     keys.push(g.to_vec());
@@ -533,6 +635,7 @@ impl PagedReader {
         }
         Ok(PagedReader {
             pager,
+            snapshot,
             tree,
             data_path: pdata_path(dir, prefix),
             keys,
@@ -540,44 +643,65 @@ impl PagedReader {
         })
     }
 
+    /// Distinct groups in the snapshot.
     pub fn num_groups(&self) -> usize {
         self.keys.len()
     }
 
+    /// Total examples in the snapshot.
     pub fn num_examples(&self) -> u64 {
         self.num_examples
     }
 
+    /// Group keys in sorted order.
     pub fn keys(&self) -> &[Vec<u8>] {
         &self.keys
     }
 
-    /// Index page fetches from disk so far (cost introspection).
+    /// The checkpoint epoch this reader is pinned to: appends
+    /// checkpointed after open land in a later epoch and are invisible
+    /// here.
+    pub fn epoch(&self) -> u64 {
+        self.snapshot.epoch
+    }
+
+    /// Index page fetches from disk so far (cost introspection), summed
+    /// across all reading threads.
     pub fn pages_read(&self) -> u64 {
         self.pager.disk_reads()
     }
 
+    /// Aggregate index-cache hit/miss/eviction counters (all threads).
     pub fn cache_stats(&self) -> CacheStats {
         self.pager.cache_stats()
     }
 
     /// Index tree depth (1 = single leaf).
-    pub fn index_depth(&mut self) -> Result<u32> {
-        Ok(self.tree.depth(&mut self.pager)?)
+    ///
+    /// # Errors
+    /// Any index page-read failure.
+    pub fn index_depth(&self) -> Result<u32> {
+        Ok(self.tree.depth(&mut self.pager.reader(self.snapshot))?)
     }
 
     /// Construct one group's dataset: a B+tree range scan for locations
     /// (cost governed by the LRU cache), then one data read per example.
-    pub fn visit_group(&mut self, group: &[u8], f: impl FnMut(Example)) -> Result<bool> {
-        visit_group_via(&self.tree, &mut self.pager, &self.data_path, group, f)
+    /// Returns false for an unknown group. Takes `&self`: safe to call
+    /// from many threads at once.
+    ///
+    /// # Errors
+    /// Any index or data-file read failure, or a corrupt index row.
+    pub fn visit_group(&self, group: &[u8], f: impl FnMut(Example)) -> Result<bool> {
+        let mut handle = self.pager.reader(self.snapshot);
+        visit_group_via(&self.tree, &mut handle, &self.data_path, group, f)
     }
 
-    /// Iterate groups in `order` (Table 3's serial random-order walk).
-    pub fn visit_all(
-        &mut self,
-        order: &[Vec<u8>],
-        mut f: impl FnMut(&[u8], Example),
-    ) -> Result<()> {
+    /// Iterate groups in `order` (Table 3's serial random-order walk —
+    /// or one thread's slice of it).
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedReader::visit_group`].
+    pub fn visit_all(&self, order: &[Vec<u8>], mut f: impl FnMut(&[u8], Example)) -> Result<()> {
         for key in order {
             self.visit_group(key, |ex| f(key, ex))?;
         }
@@ -617,7 +741,7 @@ mod tests {
             PagedStore::build(&ds, &FeatureKey::new("domain"), &dir, "news", 32).unwrap();
         assert_eq!(store.num_examples(), ds.len() as u64);
         drop(store);
-        let mut r = PagedReader::open(&dir, "news", 32).unwrap();
+        let r = PagedReader::open(&dir, "news", 32).unwrap();
         assert_eq!(r.num_groups(), 12);
         assert_eq!(r.num_examples(), ds.len() as u64);
         for g in 0..12 {
@@ -648,7 +772,7 @@ mod tests {
             s.commit().unwrap();
             s.checkpoint().unwrap();
         }
-        let mut r = PagedReader::open(&dir, "x", 16).unwrap();
+        let r = PagedReader::open(&dir, "x", 16).unwrap();
         assert_eq!(r.num_groups(), 3);
         let mut texts = Vec::new();
         assert!(r
@@ -733,6 +857,26 @@ mod tests {
         drop(s);
         let s2 = PagedStore::open(&dir, "x", 16).unwrap();
         assert_eq!(s2.num_examples(), 1);
+    }
+
+    #[test]
+    fn torn_header_is_detected_not_misparsed() {
+        let dir = tmp("tornheader");
+        {
+            let mut s = PagedStore::create(&dir, "x", 16).unwrap();
+            s.append(b"g", &Example::text("t")).unwrap();
+            s.commit().unwrap();
+            s.checkpoint().unwrap();
+        }
+        // Flip a byte inside the checksummed span (the epoch field), as a
+        // torn in-place header write would.
+        let pstore = dir.join("x.pstore");
+        let mut bytes = std::fs::read(&pstore).unwrap();
+        bytes[40] ^= 0xFF;
+        std::fs::write(&pstore, &bytes).unwrap();
+        let err = PagedReader::open(&dir, "x", 16).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+        assert!(PagedStore::open(&dir, "x", 16).is_err());
     }
 
     #[test]

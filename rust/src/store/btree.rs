@@ -35,7 +35,7 @@
 use std::io;
 
 use super::page::{Page, PageId, NO_PAGE, PAGE_SIZE};
-use super::pager::Pager;
+use super::pager::{PageRead, Pager};
 
 const LEAF: u8 = 1;
 const INTERNAL: u8 = 2;
@@ -224,14 +224,17 @@ impl BTree {
         BTree { root, num_rows, watermark }
     }
 
+    /// Current root page id ([`NO_PAGE`] when empty).
     pub fn root(&self) -> PageId {
         self.root
     }
 
+    /// Rows inserted so far.
     pub fn num_rows(&self) -> u64 {
         self.num_rows
     }
 
+    /// The committed watermark: pages below it are copy-on-write.
     pub fn watermark(&self) -> u32 {
         self.watermark
     }
@@ -263,6 +266,13 @@ impl BTree {
     }
 
     /// Insert one row. Keys need not be unique, but see the module note.
+    /// Insertion requires the exclusive [`Pager`] (it allocates and
+    /// writes pages); reads are generic over [`PageRead`] instead.
+    ///
+    /// # Errors
+    /// `InvalidInput` when `key.len() + value.len()` exceeds
+    /// [`MAX_ROW_BYTES`]; otherwise any pager I/O error (the tree may
+    /// have grown pages, but the row is not counted until success).
     pub fn insert(&mut self, pager: &mut Pager, key: &[u8], value: &[u8]) -> io::Result<()> {
         if key.len() + value.len() > MAX_ROW_BYTES {
             return Err(io::Error::new(
@@ -358,9 +368,14 @@ impl BTree {
     }
 
     /// Visit rows with key `>= start` in order while `f` returns true.
-    pub fn scan_from(
+    /// Generic over [`PageRead`]: pass the exclusive [`Pager`] or a
+    /// concurrent [`super::shared::SnapshotReader`].
+    ///
+    /// # Errors
+    /// Any page-read failure, or `InvalidData` on a corrupt node.
+    pub fn scan_from<R: PageRead>(
         &self,
-        pager: &mut Pager,
+        pager: &mut R,
         start: &[u8],
         mut f: impl FnMut(&[u8], &[u8]) -> bool,
     ) -> io::Result<()> {
@@ -372,7 +387,7 @@ impl BTree {
         let mut node = self.root;
         let mut entries: LeafEntries;
         loop {
-            match decode_page(pager.read(node)?)? {
+            match decode_page(&pager.read_page(node)?)? {
                 Decoded::Leaf(l) => {
                     entries = l;
                     break;
@@ -407,7 +422,7 @@ impl BTree {
                     let mut node = ents[idx + 1].1;
                     stack.push((ents, idx + 1));
                     loop {
-                        match decode_page(pager.read(node)?)? {
+                        match decode_page(&pager.read_page(node)?)? {
                             Decoded::Leaf(l) => {
                                 entries = l;
                                 i = 0;
@@ -426,9 +441,12 @@ impl BTree {
 
     /// Visit every row whose key starts with `prefix`, in key order;
     /// returns how many were visited.
-    pub fn scan_prefix(
+    ///
+    /// # Errors
+    /// Same conditions as [`BTree::scan_from`].
+    pub fn scan_prefix<R: PageRead>(
         &self,
-        pager: &mut Pager,
+        pager: &mut R,
         prefix: &[u8],
         mut f: impl FnMut(&[u8], &[u8]),
     ) -> io::Result<usize> {
@@ -446,7 +464,10 @@ impl BTree {
     }
 
     /// Exact-match lookup (first matching row).
-    pub fn get(&self, pager: &mut Pager, key: &[u8]) -> io::Result<Option<Vec<u8>>> {
+    ///
+    /// # Errors
+    /// Same conditions as [`BTree::scan_from`].
+    pub fn get<R: PageRead>(&self, pager: &mut R, key: &[u8]) -> io::Result<Option<Vec<u8>>> {
         let mut out = None;
         self.scan_from(pager, key, |k, v| {
             if k == key {
@@ -458,14 +479,17 @@ impl BTree {
     }
 
     /// Tree depth (1 = a single leaf; 0 = empty).
-    pub fn depth(&self, pager: &mut Pager) -> io::Result<u32> {
+    ///
+    /// # Errors
+    /// Same conditions as [`BTree::scan_from`].
+    pub fn depth<R: PageRead>(&self, pager: &mut R) -> io::Result<u32> {
         if self.root == NO_PAGE {
             return Ok(0);
         }
         let mut node = self.root;
         let mut depth = 1u32;
         loop {
-            match decode_page(pager.read(node)?)? {
+            match decode_page(&pager.read_page(node)?)? {
                 Decoded::Leaf(_) => return Ok(depth),
                 Decoded::Internal(ents) => {
                     node = ents[0].1;

@@ -19,12 +19,16 @@ use super::page::{Page, PageId};
 /// Table 3 paged column).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Tracked lookups that found the page resident.
     pub hits: u64,
+    /// Tracked lookups that missed.
     pub misses: u64,
+    /// Frames evicted to make room.
     pub evictions: u64,
 }
 
 impl CacheStats {
+    /// Hits as a fraction of tracked lookups (0.0 when none happened).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -51,6 +55,10 @@ pub struct PageCache {
 }
 
 impl PageCache {
+    /// An empty cache with room for `capacity` frames.
+    ///
+    /// # Panics
+    /// Panics when `capacity` is 0.
     pub fn new(capacity: usize) -> PageCache {
         assert!(capacity >= 1, "page cache needs at least one frame");
         PageCache {
@@ -61,18 +69,22 @@ impl PageCache {
         }
     }
 
+    /// Maximum resident frames.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// Currently resident frames.
     pub fn len(&self) -> usize {
         self.frames.len()
     }
 
+    /// True when no frame is resident.
     pub fn is_empty(&self) -> bool {
         self.frames.is_empty()
     }
 
+    /// True when `id` is resident (untracked; no stats or recency bump).
     pub fn contains(&self, id: PageId) -> bool {
         self.frames.contains_key(&id)
     }
@@ -200,6 +212,7 @@ impl PageCache {
         }
     }
 
+    /// Release one pin. Returns false when the page is not resident.
     pub fn unpin(&mut self, id: PageId) -> bool {
         match self.frames.get_mut(&id) {
             Some(f) => {
@@ -232,6 +245,7 @@ impl PageCache {
         self.frames.clear();
     }
 
+    /// Hit/miss/eviction counters since construction.
     pub fn stats(&self) -> CacheStats {
         self.stats
     }

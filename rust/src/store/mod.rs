@@ -3,34 +3,45 @@
 //! crash-safe store (the SQLite-lineage design the paper's TFF/SQL-backed
 //! hierarchical format alludes to).
 //!
-//! Five layers, bottom-up:
+//! Six layers, bottom-up:
 //!
 //! * [`page`] — the fixed 4 KiB page, shared with the immutable
 //!   [`crate::formats::btree_index`];
 //! * [`cache`] — an LRU page cache with pin/dirty tracking and hit/miss
 //!   counters: the single knob that governs group-access cost;
 //! * [`pager`] — page allocation, read-through-cache access, ordered
-//!   flush;
+//!   flush (the exclusive write path), plus the [`pager::PageRead`]
+//!   trait that lets tree walkers run over either pager;
+//! * [`shared`] — the concurrent read path: a `Send + Sync`
+//!   [`shared::SharedPager`] with a sharded lock-per-bucket cache, and
+//!   snapshot-bounded [`shared::SnapshotReader`] handles that keep every
+//!   reader inside one committed checkpoint epoch;
 //! * [`wal`] — a CRC-framed append-only log (reusing the TFRecord
 //!   CRC32C) with replay-on-open, torn-tail-truncating recovery;
 //! * [`btree`] — a mutable B+tree over the pager with page splits and
 //!   copy-on-write above a committed watermark, so a crashed writer can
 //!   always be recovered by replaying the WAL over the last durable
-//!   tree.
+//!   tree — and so concurrent readers of a committed root never see a
+//!   page change under them.
 //!
 //! [`crate::formats::paged`] assembles these into the appendable group
 //! store (`PagedStore`/`PagedReader`); [`crate::formats::hierarchical`]
-//! reads its immutable B-tree through the same pager so its cache
-//! behavior is configurable rather than hardcoded root-only.
+//! reads its immutable B-tree through the same shared pager so its cache
+//! behavior is configurable rather than hardcoded root-only. The full
+//! layered narrative, including the crash-recovery and snapshot
+//! invariants, lives in `docs/ARCHITECTURE.md` at the repo root.
+#![deny(missing_docs)]
 
 pub mod btree;
 pub mod cache;
 pub mod page;
 pub mod pager;
+pub mod shared;
 pub mod wal;
 
 pub use btree::BTree;
 pub use cache::{CacheStats, PageCache};
 pub use page::{Page, PageId, NO_PAGE, PAGE_SIZE};
-pub use pager::Pager;
+pub use pager::{PageRead, Pager};
+pub use shared::{ReadSnapshot, SharedPager, SnapshotReader};
 pub use wal::{ReplayReport, WalWriter};

@@ -23,11 +23,15 @@ pub struct Page {
 }
 
 impl Page {
+    /// A fresh all-zero page.
     pub fn zeroed() -> Page {
         Page { buf: vec![0u8; PAGE_SIZE].into_boxed_slice() }
     }
 
     /// Wrap an exactly-`PAGE_SIZE` buffer.
+    ///
+    /// # Errors
+    /// `InvalidData` when `v` is not exactly [`PAGE_SIZE`] bytes.
     pub fn from_vec(v: Vec<u8>) -> io::Result<Page> {
         if v.len() != PAGE_SIZE {
             return Err(io::Error::new(
@@ -38,50 +42,67 @@ impl Page {
         Ok(Page { buf: v.into_boxed_slice() })
     }
 
+    /// The whole page as bytes.
     pub fn as_slice(&self) -> &[u8] {
         &self.buf
     }
 
+    /// The whole page as mutable bytes.
     pub fn as_mut_slice(&mut self) -> &mut [u8] {
         &mut self.buf
     }
 
+    /// Read the byte at `at`.
+    ///
+    /// # Panics
+    /// All scalar accessors panic when the access runs past
+    /// [`PAGE_SIZE`] — offsets are internal layout constants, never
+    /// external input.
     pub fn get_u8(&self, at: usize) -> u8 {
         self.buf[at]
     }
 
+    /// Write the byte at `at` (see [`Page::get_u8`] for panics).
     pub fn put_u8(&mut self, at: usize, v: u8) {
         self.buf[at] = v;
     }
 
+    /// Read a little-endian u16 at `at` (see [`Page::get_u8`] for panics).
     pub fn get_u16(&self, at: usize) -> u16 {
         u16::from_le_bytes(self.buf[at..at + 2].try_into().unwrap())
     }
 
+    /// Write a little-endian u16 at `at` (see [`Page::get_u8`] for panics).
     pub fn put_u16(&mut self, at: usize, v: u16) {
         self.buf[at..at + 2].copy_from_slice(&v.to_le_bytes());
     }
 
+    /// Read a little-endian u32 at `at` (see [`Page::get_u8`] for panics).
     pub fn get_u32(&self, at: usize) -> u32 {
         u32::from_le_bytes(self.buf[at..at + 4].try_into().unwrap())
     }
 
+    /// Write a little-endian u32 at `at` (see [`Page::get_u8`] for panics).
     pub fn put_u32(&mut self, at: usize, v: u32) {
         self.buf[at..at + 4].copy_from_slice(&v.to_le_bytes());
     }
 
+    /// Read a little-endian u64 at `at` (see [`Page::get_u8`] for panics).
     pub fn get_u64(&self, at: usize) -> u64 {
         u64::from_le_bytes(self.buf[at..at + 8].try_into().unwrap())
     }
 
+    /// Write a little-endian u64 at `at` (see [`Page::get_u8`] for panics).
     pub fn put_u64(&mut self, at: usize, v: u64) {
         self.buf[at..at + 8].copy_from_slice(&v.to_le_bytes());
     }
 
+    /// Borrow `len` bytes at `at` (see [`Page::get_u8`] for panics).
     pub fn get_bytes(&self, at: usize, len: usize) -> &[u8] {
         &self.buf[at..at + len]
     }
 
+    /// Copy `v` into the page at `at` (see [`Page::get_u8`] for panics).
     pub fn put_bytes(&mut self, at: usize, v: &[u8]) {
         self.buf[at..at + v.len()].copy_from_slice(v);
     }

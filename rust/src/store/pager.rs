@@ -19,6 +19,23 @@ use std::path::Path;
 use super::cache::{CacheStats, PageCache};
 use super::page::{Page, PageId, PAGE_SIZE};
 
+/// Uniform page-read access for tree walkers: implemented by the
+/// exclusive [`Pager`] (the write path) and by the concurrent
+/// [`super::shared::SnapshotReader`] (the shared read path), so readers
+/// like [`super::btree::BTree::scan_from`] are agnostic to which one
+/// serves them.
+pub trait PageRead {
+    /// Read one page, returning an owned copy.
+    ///
+    /// # Errors
+    /// Fails when `id` is out of bounds for the implementor's view of
+    /// the file, or on an underlying I/O error.
+    fn read_page(&mut self, id: PageId) -> io::Result<Page>;
+}
+
+/// The exclusive pager: one owner, `&mut self` access, a single LRU
+/// cache. This is the write path; for concurrent `Send + Sync` reads
+/// over a committed file, see [`super::shared::SharedPager`].
 pub struct Pager {
     file: File,
     cache: PageCache,
@@ -30,6 +47,13 @@ pub struct Pager {
 
 impl Pager {
     /// Create (or truncate) a paged file.
+    ///
+    /// # Errors
+    /// Fails when the parent directory cannot be created or the file
+    /// cannot be opened for writing.
+    ///
+    /// # Panics
+    /// Panics when `cache_pages` is 0 (the cache needs one frame).
     pub fn create(path: &Path, cache_pages: usize) -> io::Result<Pager> {
         if let Some(d) = path.parent() {
             std::fs::create_dir_all(d)?;
@@ -52,6 +76,10 @@ impl Pager {
 
     /// Open an existing paged file read/write. A torn trailing partial
     /// page (crash mid-extend) is ignored, not an error.
+    ///
+    /// # Errors
+    /// Fails when the file does not exist or cannot be opened
+    /// read/write.
     pub fn open(path: &Path, cache_pages: usize) -> io::Result<Pager> {
         let file = OpenOptions::new().read(true).write(true).open(path)?;
         let num_pages = (file.metadata()?.len() / PAGE_SIZE as u64) as u32;
@@ -66,6 +94,9 @@ impl Pager {
     }
 
     /// Open read-only (readers over immutable/committed files).
+    ///
+    /// # Errors
+    /// Fails when the file does not exist or cannot be opened.
     pub fn open_read(path: &Path, cache_pages: usize) -> io::Result<Pager> {
         let file = OpenOptions::new().read(true).open(path)?;
         let num_pages = (file.metadata()?.len() / PAGE_SIZE as u64) as u32;
@@ -79,10 +110,12 @@ impl Pager {
         })
     }
 
+    /// Pages allocated in the file (committed or not).
     pub fn num_pages(&self) -> u32 {
         self.num_pages
     }
 
+    /// False for pagers opened via [`Pager::open_read`].
     pub fn is_writable(&self) -> bool {
         self.writable
     }
@@ -123,6 +156,11 @@ impl Pager {
 
     /// Allocate a fresh zeroed page at the end of the file. The page lives
     /// in the cache (dirty) until eviction or flush writes it out.
+    ///
+    /// # Errors
+    /// `PermissionDenied` on a read-only pager; also fails when the
+    /// 32-bit page id space is exhausted or an eviction write-back
+    /// fails.
     pub fn allocate(&mut self) -> io::Result<PageId> {
         if !self.writable {
             return Err(io::Error::new(
@@ -140,6 +178,11 @@ impl Pager {
     }
 
     /// Read a page through the cache.
+    ///
+    /// # Errors
+    /// `InvalidData` when `id` is past the allocated page count;
+    /// otherwise any I/O error from the read or the eviction
+    /// write-back.
     pub fn read(&mut self, id: PageId) -> io::Result<&Page> {
         if id >= self.num_pages {
             return Err(io::Error::new(
@@ -154,13 +197,19 @@ impl Pager {
         Ok(self.cache.peek(id).expect("page resident after read-through"))
     }
 
-    /// Owned copy of a page (for callers that hold the pager behind a
-    /// `RefCell`, like the immutable B-tree reader).
+    /// Owned copy of a page.
+    ///
+    /// # Errors
+    /// Same conditions as [`Pager::read`].
     pub fn read_copy(&mut self, id: PageId) -> io::Result<Page> {
         Ok(self.read(id)?.clone())
     }
 
     /// Mutate a page in place through the cache and mark it dirty.
+    ///
+    /// # Errors
+    /// `PermissionDenied` on a read-only pager; otherwise the same
+    /// conditions as [`Pager::read`].
     pub fn update<R>(&mut self, id: PageId, f: impl FnOnce(&mut Page) -> R) -> io::Result<R> {
         if !self.writable {
             return Err(io::Error::new(
@@ -176,6 +225,10 @@ impl Pager {
     }
 
     /// Replace a whole page.
+    ///
+    /// # Errors
+    /// `PermissionDenied` on a read-only pager, `InvalidData` when `id`
+    /// is out of bounds, or any eviction write-back failure.
     pub fn put(&mut self, id: PageId, page: Page) -> io::Result<()> {
         if !self.writable {
             return Err(io::Error::new(
@@ -198,6 +251,7 @@ impl Pager {
         self.cache.pin(id)
     }
 
+    /// Release one pin on `id`. Returns false when not resident.
     pub fn unpin(&mut self, id: PageId) -> bool {
         self.cache.unpin(id)
     }
@@ -207,6 +261,10 @@ impl Pager {
     /// still resident — `take_dirty` leaves pages cached), so a retry
     /// after e.g. ENOSPC rewrites everything instead of silently
     /// committing a header over never-written pages.
+    ///
+    /// # Errors
+    /// Any write or fsync failure; the failed pages stay dirty for a
+    /// retry.
     pub fn flush(&mut self) -> io::Result<()> {
         let dirty = self.cache.take_dirty();
         for (i, (id, page)) in dirty.iter().enumerate() {
@@ -230,6 +288,10 @@ impl Pager {
     /// clamp the allocated count to `pages` — the committed watermark from
     /// a header. Stale tail pages in the file are simply overwritten by
     /// future allocations.
+    ///
+    /// # Errors
+    /// `InvalidData` when `pages` exceeds the file's allocated count (a
+    /// header claiming more pages than exist is corruption).
     pub fn reset_to(&mut self, pages: u32) -> io::Result<()> {
         if pages > self.num_pages {
             return Err(io::Error::new(
@@ -245,16 +307,25 @@ impl Pager {
         Ok(())
     }
 
+    /// Hit/miss/eviction counters of the LRU cache.
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
     }
 
+    /// Pages fetched from disk so far (cache misses).
     pub fn disk_reads(&self) -> u64 {
         self.disk_reads
     }
 
+    /// Pages written to disk so far (evictions + flushes).
     pub fn disk_writes(&self) -> u64 {
         self.disk_writes
+    }
+}
+
+impl PageRead for Pager {
+    fn read_page(&mut self, id: PageId) -> io::Result<Page> {
+        self.read_copy(id)
     }
 }
 

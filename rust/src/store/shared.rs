@@ -1,0 +1,351 @@
+//! The concurrent read path: a shareable, `Send + Sync` pager over one
+//! immutable-once-committed paged file.
+//!
+//! The exclusive [`super::pager::Pager`] is the write path: one owner,
+//! `&mut self` everywhere, a single LRU cache. That is the right shape
+//! for the appending store, but it serializes every reader — and a
+//! FedAvg round reads its whole cohort's client datasets *concurrently*.
+//! [`SharedPager`] is the read path the cohort needs:
+//!
+//! * the page cache is **sharded**: pages hash to one of a handful of
+//!   `Mutex<PageCache>` buckets by page id, so concurrent readers on
+//!   different pages rarely contend on the same lock (the shared-cache
+//!   design SQLite/libsql use);
+//! * disk reads use positional I/O (`read_exact_at` on Unix), so no
+//!   seek state is shared between threads at all;
+//! * hit/miss/eviction counters and the disk-read counter survive the
+//!   refactor: stats are summed across shards on demand.
+//!
+//! **Snapshot semantics.** A [`SharedPager`] by itself has no notion of
+//! "current": readers go through a [`SnapshotReader`], a cheap handle
+//! carrying a page-count *bound* taken from a committed store header
+//! (see [`ReadSnapshot`]). The storage engine's copy-on-write contract —
+//! pages below a committed watermark are never modified in place, and a
+//! checkpoint publishes new state via a single header-page swap — means
+//! every page below that bound is immutable for the lifetime of the
+//! file. Two consequences:
+//!
+//! 1. caching is always safe: a cached committed page can never go
+//!    stale, even while a writer appends to the same file;
+//! 2. a reader opened at checkpoint epoch `E` (bound `B`) can never
+//!    observe pages from a later epoch, because those live at ids
+//!    `>= B` and the bound check rejects them.
+//!
+//! Page 0 (the header) is deliberately **never cached** here — it is the
+//! one page a checkpoint rewrites in place. Snapshot acquisition reads
+//! it fresh from disk via [`SharedPager::read_header_fresh`].
+
+use std::fs::File;
+use std::io;
+use std::path::Path;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+
+use super::cache::{CacheStats, PageCache};
+use super::page::{Page, PageId, PAGE_SIZE};
+use super::pager::PageRead;
+
+/// Number of independently-locked cache buckets. Small: the goal is to
+/// let a handful of reader threads miss on different pages without
+/// queueing on one mutex, not to scale to hundreds of cores.
+const CACHE_SHARDS: usize = 8;
+
+/// A committed read snapshot: everything a reader handle needs to stay
+/// inside one checkpoint's state.
+///
+/// Taken from a store header at open time. `bound` is the header's
+/// committed page count — the first page id the snapshot must *not*
+/// read; `epoch` is the WAL checkpoint epoch the header carried, kept
+/// for introspection (readers over different epochs of one file report
+/// which state they see).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReadSnapshot {
+    /// Committed page count: ids `< bound` are frozen, ids `>= bound`
+    /// belong to a later (possibly uncommitted) epoch.
+    pub bound: u32,
+    /// The checkpoint epoch that published this snapshot.
+    pub epoch: u64,
+}
+
+/// A shareable, read-only pager: one open file + a sharded LRU page
+/// cache. `Send + Sync`: share it (e.g. behind `std::sync::Arc`) and
+/// read from as many threads as you like via [`SharedPager::reader`].
+pub struct SharedPager {
+    file: File,
+    /// Serializes seek+read on platforms without positional reads.
+    #[cfg(not(unix))]
+    seek_lock: Mutex<()>,
+    /// Pages the backing file held when last checked; grows on demand
+    /// (a live writer appends to the same file).
+    num_pages: AtomicU32,
+    shards: Vec<Mutex<PageCache>>,
+    disk_reads: AtomicU64,
+}
+
+fn lock_shard(shard: &Mutex<PageCache>) -> std::sync::MutexGuard<'_, PageCache> {
+    // A panic inside PageCache would poison the mutex; the cache holds
+    // only clean pages, so recovering the guard is always safe.
+    shard.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl SharedPager {
+    /// Open a paged file read-only for concurrent access. `cache_pages`
+    /// total LRU frames are split evenly across the lock shards (each
+    /// shard keeps at least one frame).
+    ///
+    /// # Errors
+    /// Fails when the file cannot be opened or its metadata read.
+    pub fn open(path: &Path, cache_pages: usize) -> io::Result<SharedPager> {
+        let file = File::open(path)?;
+        let num_pages = (file.metadata()?.len() / PAGE_SIZE as u64) as u32;
+        // At least two frames per shard: a single-frame shard thrashes on
+        // any strided pattern that alternates two pages of one bucket.
+        let nshards = CACHE_SHARDS.min((cache_pages / 2).max(1));
+        let per_shard = (cache_pages / nshards).max(1);
+        let shards = (0..nshards).map(|_| Mutex::new(PageCache::new(per_shard))).collect();
+        Ok(SharedPager {
+            file,
+            #[cfg(not(unix))]
+            seek_lock: Mutex::new(()),
+            num_pages: AtomicU32::new(num_pages),
+            shards,
+            disk_reads: AtomicU64::new(0),
+        })
+    }
+
+    /// Pages in the backing file as of the last bounds check (a live
+    /// writer may have appended more since).
+    pub fn num_pages(&self) -> u32 {
+        self.num_pages.load(Ordering::Acquire)
+    }
+
+    /// A cheap per-thread (or per-call) read handle bounded by
+    /// `snapshot`: ids `>= snapshot.bound` error instead of leaking a
+    /// later epoch's pages.
+    pub fn reader(&self, snapshot: ReadSnapshot) -> SnapshotReader<'_> {
+        SnapshotReader { pager: self, snapshot }
+    }
+
+    /// Read page 0 straight from disk, bypassing the cache — the header
+    /// is the one page a checkpoint rewrites in place, so a cached copy
+    /// could describe a superseded epoch.
+    ///
+    /// # Errors
+    /// Fails on I/O error or when the file has no complete page 0.
+    pub fn read_header_fresh(&self) -> io::Result<Page> {
+        self.read_from_disk(0)
+    }
+
+    /// Aggregate hit/miss/eviction counters, summed across shards.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for shard in &self.shards {
+            let s = lock_shard(shard).stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.evictions += s.evictions;
+        }
+        total
+    }
+
+    /// Pages fetched from disk so far (across all threads).
+    pub fn disk_reads(&self) -> u64 {
+        self.disk_reads.load(Ordering::Relaxed)
+    }
+
+    /// True when `id` lies within the backing file, re-checking the file
+    /// length once if the cached count says no (the writer may have
+    /// grown the file since open).
+    fn in_file(&self, id: PageId) -> io::Result<bool> {
+        if id < self.num_pages.load(Ordering::Acquire) {
+            return Ok(true);
+        }
+        let pages = (self.file.metadata()?.len() / PAGE_SIZE as u64) as u32;
+        self.num_pages.fetch_max(pages, Ordering::AcqRel);
+        Ok(id < pages)
+    }
+
+    fn read_from_disk(&self, id: PageId) -> io::Result<Page> {
+        let offset = id as u64 * PAGE_SIZE as u64;
+        let mut buf = vec![0u8; PAGE_SIZE];
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.read_exact_at(&mut buf, offset)?;
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let _guard = self.seek_lock.lock().unwrap_or_else(PoisonError::into_inner);
+            let mut f = &self.file;
+            f.seek(SeekFrom::Start(offset))?;
+            f.read_exact(&mut buf)?;
+        }
+        self.disk_reads.fetch_add(1, Ordering::Relaxed);
+        Page::from_vec(buf)
+    }
+
+    /// Cache-through read. Only called via a bounds-checked
+    /// [`SnapshotReader`], so every page that lands in the cache is
+    /// committed and immutable.
+    fn read_cached(&self, id: PageId) -> io::Result<Page> {
+        let shard = &self.shards[id as usize % self.shards.len()];
+        {
+            let mut cache = lock_shard(shard);
+            if let Some(page) = cache.lookup(id) {
+                return Ok(page.clone());
+            }
+        } // lock released across the disk read
+        let page = self.read_from_disk(id)?;
+        // Two threads can race the same miss; both inserts are the same
+        // immutable bytes, so last-writer-wins is harmless. The victim
+        // is never dirty (read-only cache), so there is no write-back.
+        lock_shard(shard).insert(id, page.clone(), false)?;
+        Ok(page)
+    }
+}
+
+/// A per-thread (or per-call) read handle borrowing a [`SharedPager`],
+/// bounded by a [`ReadSnapshot`]. Cheap to create and clone; implements
+/// [`PageRead`] so tree walkers are agnostic to which pager serves them.
+#[derive(Clone)]
+pub struct SnapshotReader<'p> {
+    pager: &'p SharedPager,
+    snapshot: ReadSnapshot,
+}
+
+impl SnapshotReader<'_> {
+    /// The snapshot this handle is bounded by.
+    pub fn snapshot(&self) -> ReadSnapshot {
+        self.snapshot
+    }
+}
+
+impl PageRead for SnapshotReader<'_> {
+    /// # Errors
+    /// `InvalidData` when `id` is outside the snapshot (it belongs to a
+    /// later epoch, or past the end of the file); otherwise any I/O
+    /// error from the underlying read.
+    fn read_page(&mut self, id: PageId) -> io::Result<Page> {
+        if id >= self.snapshot.bound {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "page {id} is outside this read snapshot (bound {}, epoch {})",
+                    self.snapshot.bound, self.snapshot.epoch
+                ),
+            ));
+        }
+        if !self.pager.in_file(id)? {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("page {id} past the end of the backing file"),
+            ));
+        }
+        self.pager.read_cached(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::pager::Pager;
+    use std::sync::Arc;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("grouper_shared_pager_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    /// Write `n` pages, page `i` tagged with `1000 + i`, and flush.
+    fn build(name: &str, n: u32) -> std::path::PathBuf {
+        let path = tmp(name);
+        let _ = std::fs::remove_file(&path);
+        let mut p = Pager::create(&path, 8).unwrap();
+        for i in 0..n {
+            let id = p.allocate().unwrap();
+            p.update(id, |pg| pg.put_u32(0, 1000 + i)).unwrap();
+        }
+        p.flush().unwrap();
+        path
+    }
+
+    #[test]
+    fn shared_reads_match_disk_and_count_stats() {
+        let path = build("basic.pages", 16);
+        // Cache holds the whole file: the second pass must be all hits.
+        let sp = Arc::new(SharedPager::open(&path, 32).unwrap());
+        let mut r = sp.reader(ReadSnapshot { bound: 16, epoch: 0 });
+        for i in 0..16u32 {
+            assert_eq!(r.read_page(i).unwrap().get_u32(0), 1000 + i);
+        }
+        for i in 0..16u32 {
+            assert_eq!(r.read_page(i).unwrap().get_u32(0), 1000 + i);
+        }
+        let s = sp.cache_stats();
+        assert_eq!(s.hits + s.misses, 32);
+        assert!(s.hits > 0, "second pass must hit the cache");
+        assert!(sp.disk_reads() >= 16);
+    }
+
+    #[test]
+    fn snapshot_bound_is_enforced() {
+        let path = build("bound.pages", 8);
+        let sp = Arc::new(SharedPager::open(&path, 8).unwrap());
+        let mut r = sp.reader(ReadSnapshot { bound: 4, epoch: 3 });
+        assert!(r.read_page(3).is_ok());
+        let err = r.read_page(4).unwrap_err();
+        assert!(err.to_string().contains("snapshot"), "{err}");
+        // Past the end of the file entirely.
+        let mut wide = sp.reader(ReadSnapshot { bound: 100, epoch: 3 });
+        assert!(wide.read_page(50).is_err());
+    }
+
+    #[test]
+    fn many_threads_agree_with_serial() {
+        let path = build("threads.pages", 64);
+        let sp = Arc::new(SharedPager::open(&path, 16).unwrap());
+        let snap = ReadSnapshot { bound: 64, epoch: 0 };
+        std::thread::scope(|scope| {
+            for t in 0..8u32 {
+                let sp = &sp;
+                scope.spawn(move || {
+                    let mut r = sp.reader(snap);
+                    // Overlapping strided walks from different offsets.
+                    for k in 0..256u32 {
+                        let id = (k * 7 + t) % 64;
+                        assert_eq!(r.read_page(id).unwrap().get_u32(0), 1000 + id);
+                    }
+                });
+            }
+        });
+        let s = sp.cache_stats();
+        assert_eq!(s.hits + s.misses, 8 * 256);
+    }
+
+    #[test]
+    fn sees_pages_a_writer_appended_after_open() {
+        let path = build("grow.pages", 4);
+        let sp = Arc::new(SharedPager::open(&path, 8).unwrap());
+        assert_eq!(sp.num_pages(), 4);
+        // A writer (separate handle) appends and flushes 4 more pages.
+        let mut w = Pager::open(&path, 8).unwrap();
+        for i in 4..8u32 {
+            let id = w.allocate().unwrap();
+            w.update(id, |pg| pg.put_u32(0, 1000 + i)).unwrap();
+        }
+        w.flush().unwrap();
+        // A snapshot taken after the append can read the new pages.
+        let mut r = sp.reader(ReadSnapshot { bound: 8, epoch: 1 });
+        assert_eq!(r.read_page(7).unwrap().get_u32(0), 1007);
+    }
+
+    #[test]
+    fn shared_pager_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<SharedPager>();
+        assert_send_sync::<SnapshotReader<'static>>();
+        assert_send_sync::<ReadSnapshot>();
+    }
+}

@@ -36,6 +36,10 @@ pub struct ReplayReport {
 
 /// Scan the log at `path`, calling `f` for every intact frame in order.
 /// A missing file is an empty log, not an error.
+///
+/// # Errors
+/// Fails only on a real I/O error reading the file, or when `f` itself
+/// errors; torn/corrupt tails end the scan without erroring.
 pub fn replay(
     path: &Path,
     mut f: impl FnMut(&[u8]) -> io::Result<()>,
@@ -70,6 +74,9 @@ pub fn replay(
 
 /// Cheap hot-journal probe: does the log start with at least one intact
 /// frame? Reads only the first frame instead of replaying the whole log.
+///
+/// # Errors
+/// Fails only on a real I/O error; a missing or torn log is `Ok(false)`.
 pub fn has_valid_records(path: &Path) -> io::Result<bool> {
     use std::io::Read;
     let mut f = match File::open(path) {
@@ -109,6 +116,10 @@ pub struct WalWriter {
 impl WalWriter {
     /// Open for appending, truncating everything past `valid_bytes` (as
     /// reported by [`replay`]) so a torn tail never survives.
+    ///
+    /// # Errors
+    /// Fails when the parent directory cannot be created or the file
+    /// cannot be opened/truncated.
     pub fn open(path: &Path, valid_bytes: u64) -> io::Result<WalWriter> {
         if let Some(d) = path.parent() {
             std::fs::create_dir_all(d)?;
@@ -124,6 +135,10 @@ impl WalWriter {
     }
 
     /// Append one frame (buffered).
+    ///
+    /// # Errors
+    /// `InvalidInput` when the payload exceeds the u32 length field;
+    /// otherwise any buffered-write failure.
     pub fn append(&mut self, payload: &[u8]) -> io::Result<()> {
         if payload.len() > u32::MAX as usize {
             return Err(io::Error::new(
@@ -150,6 +165,10 @@ impl WalWriter {
     }
 
     /// Durability point: flush buffers and fsync.
+    ///
+    /// # Errors
+    /// Any flush or fsync failure; nothing is durable until it returns
+    /// `Ok`.
     pub fn commit(&mut self) -> io::Result<()> {
         self.w.flush()?;
         self.w.get_ref().sync_data()
@@ -157,6 +176,9 @@ impl WalWriter {
 
     /// Checkpoint: everything logged is now reflected in the main file —
     /// drop the log.
+    ///
+    /// # Errors
+    /// Any truncation, seek or fsync failure.
     pub fn reset(&mut self) -> io::Result<()> {
         self.w.flush()?;
         let f = self.w.get_mut();

@@ -1,15 +1,52 @@
 //! A small fixed-size thread pool over std threads + channels.
 //!
 //! This is the execution substrate for the beam-lite pipeline runner
-//! (`pipeline::runner`): the offline registry has neither tokio nor rayon,
-//! and the pipeline's needs are simple — fan a queue of work items across
-//! N workers, collect results, propagate panics.
+//! (`pipeline::runner`) and the trainer's parallel cohort fetch: the
+//! offline registry has neither tokio nor rayon, and the needs are
+//! simple — fan a queue of work items across N workers, collect results,
+//! and surface job panics as values ([`ThreadPool::try_map`]) so a
+//! crashed job fails its caller loudly instead of stalling a barrier.
 
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A parallel-map job panicked (or its worker died before reporting).
+///
+/// Surfaced as a value instead of a deferred join-time panic so callers
+/// like the federated trainer can fail their round loudly — a crashed
+/// parallel client fetch must never leave the cohort barrier waiting on
+/// a result that will not come.
+#[derive(Debug)]
+pub struct JobPanic {
+    /// Index of the input item whose job failed.
+    pub index: usize,
+    /// The panic payload rendered to a string (or a note that the
+    /// worker vanished without one).
+    pub message: String,
+}
+
+impl fmt::Display for JobPanic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "parallel job {} panicked: {}", self.index, self.message)
+    }
+}
+
+impl std::error::Error for JobPanic {}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// Fixed-size pool; jobs are executed FIFO by whichever worker is free.
 pub struct ThreadPool {
@@ -54,7 +91,28 @@ impl ThreadPool {
     }
 
     /// Map `f` over `items` in parallel, preserving order.
+    ///
+    /// # Panics
+    /// Panics (in the caller) when any job panicked; use
+    /// [`ThreadPool::try_map`] to receive the failure as a value.
     pub fn map<T, U, F>(&self, items: Vec<T>, f: F) -> Vec<U>
+    where
+        T: Send + 'static,
+        U: Send + 'static,
+        F: Fn(T) -> U + Send + Sync + 'static,
+    {
+        self.try_map(items, f).unwrap_or_else(|p| panic!("{p}"))
+    }
+
+    /// Map `f` over `items` in parallel, preserving order, surfacing the
+    /// first job panic as an error instead of unwinding the caller.
+    /// Panics are caught inside the worker, so the pool's workers all
+    /// survive a crashing job and the pool stays usable.
+    ///
+    /// # Errors
+    /// [`JobPanic`] when any job panicked (the first by completion
+    /// order), or when a worker died before reporting a result.
+    pub fn try_map<T, U, F>(&self, items: Vec<T>, f: F) -> Result<Vec<U>, JobPanic>
     where
         T: Send + 'static,
         U: Send + 'static,
@@ -62,25 +120,46 @@ impl ThreadPool {
     {
         let n = items.len();
         let f = Arc::new(f);
-        let (tx, rx) = mpsc::channel::<(usize, U)>();
+        let (tx, rx) = mpsc::channel::<(usize, thread::Result<U>)>();
         for (i, item) in items.into_iter().enumerate() {
             let tx = tx.clone();
             let f = Arc::clone(&f);
             self.execute(move || {
-                let out = f(item);
-                // Receiver may be gone if the caller panicked; ignore.
+                // AssertUnwindSafe: `item` is consumed and `f` is only
+                // observed again through further whole calls, so a
+                // half-completed call leaks no broken state.
+                let out = catch_unwind(AssertUnwindSafe(|| f(item)));
+                // Receiver may be gone if the caller bailed; ignore.
                 let _ = tx.send((i, out));
             });
         }
         drop(tx);
         let mut slots: Vec<Option<U>> = (0..n).map(|_| None).collect();
-        for (i, u) in rx {
-            slots[i] = Some(u);
+        let mut failure: Option<JobPanic> = None;
+        for (i, result) in rx {
+            match result {
+                Ok(u) => slots[i] = Some(u),
+                Err(payload) => {
+                    failure.get_or_insert(JobPanic { index: i, message: panic_message(payload) });
+                }
+            }
         }
-        slots
-            .into_iter()
-            .map(|s| s.expect("worker panicked before producing a result"))
-            .collect()
+        if let Some(p) = failure {
+            return Err(p);
+        }
+        let mut out = Vec::with_capacity(n);
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(u) => out.push(u),
+                None => {
+                    return Err(JobPanic {
+                        index: i,
+                        message: "worker terminated without reporting a result".to_string(),
+                    })
+                }
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -134,5 +213,31 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map(vec![1, 2, 3], |x| x * x);
         assert_eq!(out, vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn try_map_surfaces_worker_panics_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let err = pool
+            .try_map(vec![1u32, 2, 3, 4], |x| {
+                if x == 3 {
+                    panic!("boom on {x}");
+                }
+                x * 10
+            })
+            .unwrap_err();
+        assert_eq!(err.index, 2, "failure must name the item");
+        assert!(err.message.contains("boom"), "payload lost: {}", err.message);
+        // The panic was caught inside the worker: the pool is intact and
+        // every worker still alive.
+        assert_eq!(pool.try_map(vec![5u32, 6, 7], |x| x + 1).unwrap(), vec![6, 7, 8]);
+        assert_eq!(pool.map(vec![1u32, 2], |x| x), vec![1, 2]);
+    }
+
+    #[test]
+    fn try_map_ok_on_clean_jobs() {
+        let pool = ThreadPool::new(4);
+        let out = pool.try_map((0..50).collect::<Vec<i64>>(), |x| x * 3).unwrap();
+        assert_eq!(out, (0..50).map(|x| x * 3).collect::<Vec<i64>>());
     }
 }

@@ -1,0 +1,184 @@
+//! Integration: the concurrent read path. N threads iterating disjoint
+//! and overlapping groups through ONE shared paged reader must agree
+//! byte-for-byte with the serial reader, and a reader opened before an
+//! append must never observe the new checkpoint epoch's pages.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
+use grouper::formats::{HierarchicalReader, HierarchicalStore, PagedReader, PagedStore};
+use grouper::pipeline::FeatureKey;
+use grouper::records::Example;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("grouper_concurrent_it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn dataset(groups: usize, seed: u64) -> SyntheticTextDataset {
+    let mut spec = DatasetSpec::fedccnews_mini(groups, seed);
+    spec.max_group_words = 2000;
+    SyntheticTextDataset::new(spec)
+}
+
+/// Serial oracle over the reader itself: key -> encoded examples.
+fn serial_contents(reader: &PagedReader) -> HashMap<Vec<u8>, Vec<Vec<u8>>> {
+    let mut out: HashMap<Vec<u8>, Vec<Vec<u8>>> = HashMap::new();
+    for key in reader.keys() {
+        let mut got = Vec::new();
+        assert!(reader.visit_group(key, |ex| got.push(ex.encode())).unwrap());
+        out.insert(key.clone(), got);
+    }
+    out
+}
+
+#[test]
+fn threads_on_disjoint_groups_match_serial() {
+    let dir = tmp("disjoint");
+    let ds = dataset(24, 7);
+    // Small cache: concurrency must be correct under heavy eviction too.
+    PagedStore::build(&ds, &FeatureKey::new("domain"), &dir, "d", 8).unwrap();
+    let reader = PagedReader::open(&dir, "d", 8).unwrap();
+    let want = serial_contents(&reader);
+
+    let keys = reader.keys().to_vec();
+    let collected: Mutex<HashMap<Vec<u8>, Vec<Vec<u8>>>> = Mutex::new(HashMap::new());
+    std::thread::scope(|s| {
+        // 4 threads, disjoint quarters of the key space.
+        for part in keys.chunks(keys.len().div_ceil(4)) {
+            let reader = &reader;
+            let collected = &collected;
+            s.spawn(move || {
+                for key in part {
+                    let mut got = Vec::new();
+                    assert!(reader.visit_group(key, |ex| got.push(ex.encode())).unwrap());
+                    collected.lock().unwrap().insert(key.clone(), got);
+                }
+            });
+        }
+    });
+    let got = collected.into_inner().unwrap();
+    assert_eq!(got.len(), want.len());
+    for (k, v) in &want {
+        assert_eq!(got.get(k).unwrap(), v, "group {:?} diverged under concurrency", k);
+    }
+}
+
+#[test]
+fn threads_on_overlapping_groups_each_match_serial() {
+    let dir = tmp("overlap");
+    let ds = dataset(12, 13);
+    PagedStore::build(&ds, &FeatureKey::new("domain"), &dir, "d", 16).unwrap();
+    let reader = PagedReader::open(&dir, "d", 16).unwrap();
+    let want = serial_contents(&reader);
+
+    // 8 threads ALL iterate ALL groups — maximal cache contention.
+    std::thread::scope(|s| {
+        for t in 0..8usize {
+            let reader = &reader;
+            let want = &want;
+            let mut keys = reader.keys().to_vec();
+            s.spawn(move || {
+                // Different visiting order per thread.
+                keys.rotate_left(t % keys.len().max(1));
+                for key in &keys {
+                    let mut got = Vec::new();
+                    assert!(reader.visit_group(key, |ex| got.push(ex.encode())).unwrap());
+                    assert_eq!(&got, want.get(key).unwrap(), "thread {t} group {:?}", key);
+                }
+            });
+        }
+    });
+    let stats = reader.cache_stats();
+    assert!(stats.hits + stats.misses > 0, "threads must have exercised the cache");
+}
+
+#[test]
+fn reader_opened_before_append_never_sees_the_new_epoch() {
+    let dir = tmp("epoch");
+    {
+        let mut store = PagedStore::create(&dir, "d", 16).unwrap();
+        for i in 0..30u32 {
+            let g = format!("old-{}", i % 5);
+            store.append(g.as_bytes(), &Example::text(&format!("v{i}"))).unwrap();
+        }
+        store.commit().unwrap();
+        store.checkpoint().unwrap();
+    }
+    let before = PagedReader::open(&dir, "d", 16).unwrap();
+    let want = serial_contents(&before);
+    assert_eq!(before.num_examples(), 30);
+
+    // A writer appends a new epoch while `before` stays open.
+    {
+        let mut store = PagedStore::open(&dir, "d", 16).unwrap();
+        for i in 0..20u32 {
+            store.append(b"brand-new", &Example::text(&format!("n{i}"))).unwrap();
+            let g = format!("old-{}", i % 5);
+            store.append(g.as_bytes(), &Example::text(&format!("extra{i}"))).unwrap();
+        }
+        store.commit().unwrap();
+        store.checkpoint().unwrap();
+    }
+
+    // The old snapshot is frozen: same counts, same bytes, no new group.
+    assert_eq!(before.num_examples(), 30);
+    assert_eq!(before.num_groups(), 5);
+    assert!(!before.visit_group(b"brand-new", |_| {}).unwrap());
+    for (k, v) in &want {
+        let mut got = Vec::new();
+        assert!(before.visit_group(k, |ex| got.push(ex.encode())).unwrap());
+        assert_eq!(&got, v, "group {:?} changed under an open snapshot", k);
+    }
+
+    // A fresh reader sees the new epoch in full.
+    let after = PagedReader::open(&dir, "d", 16).unwrap();
+    assert!(after.epoch() > before.epoch(), "checkpoint must advance the epoch");
+    assert_eq!(after.num_examples(), 70);
+    assert_eq!(after.num_groups(), 6);
+    let mut news = Vec::new();
+    assert!(after
+        .visit_group(b"brand-new", |ex| news.push(ex.get_str("text").unwrap().to_string()))
+        .unwrap());
+    assert_eq!(news.len(), 20);
+}
+
+#[test]
+fn hierarchical_reader_is_shared_across_threads() {
+    let dir = tmp("hier");
+    let ds = dataset(16, 23);
+    HierarchicalStore::build(&ds, &FeatureKey::new("domain"), &dir, "h", 4).unwrap();
+    let reader = HierarchicalReader::open(&dir, "h").unwrap();
+    // Serial oracle.
+    let mut want: HashMap<Vec<u8>, Vec<Vec<u8>>> = HashMap::new();
+    for key in reader.keys() {
+        let mut got = Vec::new();
+        assert!(reader.visit_group(key, |ex| got.push(ex.encode())).unwrap());
+        want.insert(key.clone(), got);
+    }
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let reader = &reader;
+            let want = &want;
+            s.spawn(move || {
+                for key in reader.keys() {
+                    let mut got = Vec::new();
+                    assert!(reader.visit_group(key, |ex| got.push(ex.encode())).unwrap());
+                    assert_eq!(&got, want.get(key).unwrap());
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn reader_handles_are_send_and_sync() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<PagedReader>();
+    assert_send_sync::<HierarchicalReader>();
+    assert_send_sync::<grouper::store::SharedPager>();
+    assert_send_sync::<grouper::store::SnapshotReader<'static>>();
+}

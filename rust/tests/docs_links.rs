@@ -1,0 +1,80 @@
+//! Doc-rot guard: every relative markdown link in the repo-level docs
+//! (README.md, docs/ARCHITECTURE.md) must point at a file or directory
+//! that actually exists, and the two documents must link each other.
+//! Runs under plain `cargo test`, so CI catches a broken link the same
+//! commit that breaks it.
+
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    // CARGO_MANIFEST_DIR is `<repo>/rust`.
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+/// Extract `](target)` link targets from markdown source.
+fn link_targets(markdown: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let bytes = markdown.as_bytes();
+    let mut i = 0;
+    while i + 1 < bytes.len() {
+        if bytes[i] == b']' && bytes[i + 1] == b'(' {
+            if let Some(end) = markdown[i + 2..].find(')') {
+                out.push(markdown[i + 2..i + 2 + end].to_string());
+                i += 2 + end;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn check_doc(doc_rel: &str) -> Vec<String> {
+    let root = repo_root();
+    let doc_path = root.join(doc_rel);
+    let text = std::fs::read_to_string(&doc_path)
+        .unwrap_or_else(|e| panic!("{doc_rel} must exist at the repo root: {e}"));
+    let base = doc_path.parent().unwrap().to_path_buf();
+    let mut broken = Vec::new();
+    for target in link_targets(&text) {
+        // External links and pure in-page anchors are out of scope.
+        if target.starts_with("http://")
+            || target.starts_with("https://")
+            || target.starts_with('#')
+            || target.starts_with("mailto:")
+        {
+            continue;
+        }
+        // Strip an in-file anchor suffix.
+        let path_part = target.split('#').next().unwrap();
+        if path_part.is_empty() {
+            continue;
+        }
+        if !base.join(path_part).exists() {
+            broken.push(format!("{doc_rel}: ({target})"));
+        }
+    }
+    broken
+}
+
+#[test]
+fn readme_and_architecture_links_resolve() {
+    let mut broken = check_doc("README.md");
+    broken.extend(check_doc("docs/ARCHITECTURE.md"));
+    assert!(broken.is_empty(), "broken relative doc links:\n{}", broken.join("\n"));
+}
+
+#[test]
+fn readme_and_architecture_link_each_other() {
+    let root = repo_root();
+    let readme = std::fs::read_to_string(root.join("README.md")).unwrap();
+    let arch = std::fs::read_to_string(root.join("docs/ARCHITECTURE.md")).unwrap();
+    assert!(
+        readme.contains("docs/ARCHITECTURE.md"),
+        "README.md must point readers at docs/ARCHITECTURE.md"
+    );
+    assert!(
+        arch.contains("../README.md") || arch.contains("README.md"),
+        "docs/ARCHITECTURE.md must link back to the README"
+    );
+}

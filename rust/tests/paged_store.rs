@@ -77,7 +77,7 @@ fn acceptance_wal_crash_recover_bounded_cache_roundtrip() {
     // 3. Read back through the pager with a deliberately tiny LRU cache:
     //    correctness must be independent of cache size, and the bounded
     //    cache must actually evict.
-    let mut reader = PagedReader::open(&dir, "news", 4).unwrap();
+    let reader = PagedReader::open(&dir, "news", 4).unwrap();
     assert_eq!(reader.num_groups(), 40);
     let mut order: Vec<Vec<u8>> = reader.keys().to_vec();
     Rng::new(3).shuffle(&mut order);
@@ -124,7 +124,7 @@ fn torn_wal_tail_loses_only_the_torn_suffix() {
     store.append(b"g0", &grouper::records::Example::text("after")).unwrap();
     store.commit().unwrap();
     store.checkpoint().unwrap();
-    let mut reader = PagedReader::open(&dir, "x", 16).unwrap();
+    let reader = PagedReader::open(&dir, "x", 16).unwrap();
     assert_eq!(reader.num_examples(), 31);
     let mut texts = Vec::new();
     assert!(reader
@@ -143,7 +143,7 @@ fn reader_on_hot_store_runs_recovery_first() {
         store.commit().unwrap();
         // No checkpoint: the WAL is "hot".
     }
-    let mut reader = PagedReader::open(&dir, "x", 16).unwrap();
+    let reader = PagedReader::open(&dir, "x", 16).unwrap();
     assert_eq!(reader.num_groups(), 2);
     assert_eq!(reader.num_examples(), 2);
     let mut n = 0;
@@ -169,7 +169,7 @@ fn paged_matches_every_other_format_on_the_same_dataset() {
     assert_eq!(store.num_examples(), ds.len() as u64);
     drop(store);
     let want = oracle(&ds);
-    let mut reader = PagedReader::open(&dir, "eq", 16).unwrap();
+    let reader = PagedReader::open(&dir, "eq", 16).unwrap();
     assert_eq!(reader.num_groups(), 15);
     // visit_all covers every group exactly once, in the given order.
     let order = reader.keys().to_vec();
