@@ -31,7 +31,6 @@
 //! u16 count | (u16 klen | key | u32 child)*` where child covers keys
 //! `>=` its key (first child covers everything below the second key).
 
-use std::fs::File;
 use std::io::{self, Write};
 use std::path::Path;
 
@@ -39,6 +38,7 @@ use crate::store::cache::CacheStats;
 use crate::store::page::Page;
 use crate::store::pager::PageRead;
 use crate::store::shared::{ReadSnapshot, SharedPager};
+use crate::store::vfs::{OpenMode, StdVfs, Vfs, VfsCursor};
 
 pub use crate::store::page::PAGE_SIZE;
 
@@ -84,9 +84,16 @@ impl BTreeBuilder {
         Ok(())
     }
 
+    /// Bulk-load the queued rows and write the tree to `path` on the
+    /// real filesystem.
     pub fn write<P: AsRef<Path>>(self, path: P) -> io::Result<()> {
-        if let Some(d) = path.as_ref().parent() {
-            std::fs::create_dir_all(d)?;
+        self.write_with(&StdVfs, path.as_ref())
+    }
+
+    /// Bulk-load the queued rows and write the tree to `path` on `vfs`.
+    pub fn write_with(self, vfs: &dyn Vfs, path: &Path) -> io::Result<()> {
+        if let Some(d) = path.parent() {
+            vfs.create_dir_all(d)?;
         }
         let mut pages: Vec<Vec<u8>> = vec![Vec::new()]; // page 0 = header
         // --- leaves
@@ -183,7 +190,8 @@ impl BTreeBuilder {
         header.extend_from_slice(&(self.rows.len() as u64).to_le_bytes());
         pages[0] = header;
 
-        let mut f = io::BufWriter::new(File::create(path)?);
+        let file = vfs.open(path, OpenMode::CreateTruncate)?;
+        let mut f = io::BufWriter::new(VfsCursor::new(file));
         for mut p in pages {
             p.resize(PAGE_SIZE, 0);
             f.write_all(&p)?;
@@ -219,7 +227,12 @@ impl BTreeFile {
     /// Open with an explicit LRU cache size in pages — the knob Table 3's
     /// paged column turns. Clamped to at least 2 frames.
     pub fn open_with_cache<P: AsRef<Path>>(path: P, cache_pages: usize) -> io::Result<Self> {
-        let pager = SharedPager::open(path.as_ref(), cache_pages.max(2))?;
+        Self::open_with(&StdVfs, path.as_ref(), cache_pages)
+    }
+
+    /// Open on an explicit [`Vfs`] with an explicit cache size.
+    pub fn open_with(vfs: &dyn Vfs, path: &Path, cache_pages: usize) -> io::Result<Self> {
+        let pager = SharedPager::open_with(vfs, path, cache_pages.max(2))?;
         let header = pager.read_header_fresh()?;
         if header.get_bytes(0, 8) != MAGIC {
             return Err(io::Error::new(io::ErrorKind::InvalidData, "bad btree magic"));

@@ -19,17 +19,19 @@
 //! example count while Table 12's memory stays tiny.
 
 use std::collections::HashMap;
-use std::io::{self, BufRead, BufReader, BufWriter, Write};
-use std::path::{Path, PathBuf};
+use std::io::{self, BufReader, BufWriter, Write};
+use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use super::btree_index::{BTreeBuilder, BTreeFile};
 use crate::corpus::BaseDataset;
 use crate::pipeline::Partitioner;
-use crate::records::sharded::{discover_shards, shard_name};
+use crate::records::sharded::{discover_shards_with, shard_name};
 use crate::records::tfrecord::{RecordReader, RecordWriter};
 use crate::records::Example;
+use crate::store::vfs::{OpenMode, StdVfs, Vfs, VfsCursor, VfsFile};
 
 /// Builder: materialize a base dataset into the hierarchical layout.
 pub struct HierarchicalStore;
@@ -37,7 +39,8 @@ pub struct HierarchicalStore;
 impl HierarchicalStore {
     /// Write `<prefix>-*.tfrecord` (arrival order, round-robin),
     /// `<prefix>.btree` (example index) and `<prefix>.hgroups` (group key
-    /// list). Single-threaded: the format's cost lives at read time.
+    /// list) on the real filesystem. Single-threaded: the format's cost
+    /// lives at read time.
     pub fn build(
         dataset: &dyn BaseDataset,
         partitioner: &dyn Partitioner,
@@ -45,10 +48,26 @@ impl HierarchicalStore {
         prefix: &str,
         num_shards: usize,
     ) -> Result<usize> {
+        Self::build_with(&StdVfs, dataset, partitioner, dir, prefix, num_shards)
+    }
+
+    /// [`HierarchicalStore::build`] on an explicit [`Vfs`].
+    pub fn build_with(
+        vfs: &dyn Vfs,
+        dataset: &dyn BaseDataset,
+        partitioner: &dyn Partitioner,
+        dir: &Path,
+        prefix: &str,
+        num_shards: usize,
+    ) -> Result<usize> {
         assert!(num_shards > 0);
-        std::fs::create_dir_all(dir)?;
-        let mut writers: Vec<RecordWriter<BufWriter<std::fs::File>>> = (0..num_shards)
-            .map(|i| RecordWriter::create(dir.join(shard_name(prefix, i, num_shards))))
+        vfs.create_dir_all(dir)?;
+        let mut writers: Vec<RecordWriter<BufWriter<VfsCursor>>> = (0..num_shards)
+            .map(|i| -> io::Result<RecordWriter<BufWriter<VfsCursor>>> {
+                let path = dir.join(shard_name(prefix, i, num_shards));
+                let file = vfs.open(&path, OpenMode::CreateTruncate)?;
+                Ok(RecordWriter::new(BufWriter::new(VfsCursor::new(file))))
+            })
             .collect::<io::Result<Vec<_>>>()?;
         let mut per_group_seq: HashMap<Vec<u8>, u64> = HashMap::new();
         let mut order: Vec<Vec<u8>> = Vec::new();
@@ -80,11 +99,10 @@ impl HierarchicalStore {
                 .push(k, v)
                 .context("indexing example (group key too long for a page?)")?;
         }
-        builder.write(dir.join(format!("{prefix}.btree")))?;
+        builder.write_with(vfs, &dir.join(format!("{prefix}.btree")))?;
         // Group key list (for enumeration; a DB would SELECT DISTINCT).
-        let mut f = BufWriter::new(std::fs::File::create(
-            dir.join(format!("{prefix}.hgroups")),
-        )?);
+        let hgroups = vfs.open(&dir.join(format!("{prefix}.hgroups")), OpenMode::CreateTruncate)?;
+        let mut f = BufWriter::new(VfsCursor::new(hgroups));
         for key in &order {
             f.write_all(&(key.len() as u32).to_le_bytes())?;
             f.write_all(key)?;
@@ -114,7 +132,9 @@ fn row_value(shard: u32, offset: u64) -> Vec<u8> {
 /// and every query opens its own shard cursors, so threads can construct
 /// different groups' datasets through one shared reader.
 pub struct HierarchicalReader {
-    shards: Vec<PathBuf>,
+    /// One shared positional handle per shard; each query layers its own
+    /// cursors on top.
+    shards: Vec<Arc<dyn VfsFile>>,
     btree: BTreeFile,
     keys: Vec<Vec<u8>>,
 }
@@ -127,28 +147,46 @@ impl HierarchicalReader {
 
     /// Open with an explicit index LRU cache size (pages): the knob that
     /// used to be hardcoded to root-only caching. The index now reads
-    /// through the shared pager ([`crate::store::pager::Pager`]).
+    /// through the shared pager ([`crate::store::shared::SharedPager`]).
     pub fn open_with_cache(dir: &Path, prefix: &str, cache_pages: usize) -> Result<Self> {
-        let shards = discover_shards(dir, prefix)?;
-        let btree = BTreeFile::open_with_cache(dir.join(format!("{prefix}.btree")), cache_pages)
+        Self::open_with(&StdVfs, dir, prefix, cache_pages)
+    }
+
+    /// [`HierarchicalReader::open_with_cache`] on an explicit [`Vfs`].
+    pub fn open_with(
+        vfs: &dyn Vfs,
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+    ) -> Result<Self> {
+        let shards = discover_shards_with(vfs, dir, prefix)?
+            .into_iter()
+            .map(|p| vfs.open(&p, OpenMode::Read))
+            .collect::<io::Result<Vec<_>>>()?;
+        let btree = BTreeFile::open_with(vfs, &dir.join(format!("{prefix}.btree")), cache_pages)
             .with_context(|| format!("opening {prefix}.btree"))?;
+        let raw = vfs.read(&dir.join(format!("{prefix}.hgroups")))?;
         let mut keys = Vec::new();
-        let mut r = BufReader::new(std::fs::File::open(
-            dir.join(format!("{prefix}.hgroups")),
-        )?);
-        loop {
-            let mut l4 = [0u8; 4];
-            use std::io::Read;
-            match r.read_exact(&mut l4) {
-                Err(e) if e.kind() == io::ErrorKind::UnexpectedEof && r.fill_buf()?.is_empty() => {
-                    break
-                }
-                other => other?,
+        let mut pos = 0usize;
+        while pos < raw.len() {
+            if pos + 4 > raw.len() {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "truncated hgroups length",
+                )
+                .into());
             }
-            let klen = u32::from_le_bytes(l4) as usize;
-            let mut key = vec![0u8; klen];
-            r.read_exact(&mut key)?;
-            keys.push(key);
+            let klen = u32::from_le_bytes(raw[pos..pos + 4].try_into().unwrap()) as usize;
+            pos += 4;
+            if pos + klen > raw.len() {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "truncated hgroups key",
+                )
+                .into());
+            }
+            keys.push(raw[pos..pos + klen].to_vec());
+            pos += klen;
         }
         Ok(HierarchicalReader { shards, btree, keys })
     }
@@ -189,13 +227,13 @@ impl HierarchicalReader {
         }
         // A fresh reader per shard per query (a DB "cursor"); re-seeked per
         // example because arrival order scatters them.
-        let mut readers: HashMap<u32, RecordReader<BufReader<std::fs::File>>> = HashMap::new();
+        let mut readers: HashMap<u32, RecordReader<BufReader<VfsCursor>>> = HashMap::new();
         for (shard, offset) in locs {
             let r = match readers.entry(shard) {
                 std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-                std::collections::hash_map::Entry::Vacant(e) => {
-                    e.insert(RecordReader::open(&self.shards[shard as usize])?)
-                }
+                std::collections::hash_map::Entry::Vacant(e) => e.insert(RecordReader::new(
+                    BufReader::new(VfsCursor::new(self.shards[shard as usize].clone())),
+                )),
             };
             r.seek_to(offset)?;
             let bytes = r.next_record()?.context("btree points past shard end")?;
@@ -218,6 +256,7 @@ mod tests {
     use super::*;
     use crate::corpus::{DatasetSpec, SyntheticTextDataset};
     use crate::pipeline::FeatureKey;
+    use std::path::PathBuf;
 
     fn build() -> (PathBuf, SyntheticTextDataset) {
         let dir = std::env::temp_dir().join("grouper_hier_test");

@@ -4,14 +4,16 @@
 //! in Table 12 is the whole dataset.
 
 use std::collections::HashMap;
+use std::io::BufReader;
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
 use crate::pipeline::GroupIndex;
-use crate::records::sharded::discover_shards;
+use crate::records::sharded::discover_shards_with;
 use crate::records::tfrecord::RecordReader;
 use crate::records::Example;
+use crate::store::vfs::{OpenMode, StdVfs, Vfs, VfsCursor};
 
 /// Entire partitioned dataset resident in RAM.
 pub struct InMemoryDataset {
@@ -22,15 +24,28 @@ pub struct InMemoryDataset {
 
 impl InMemoryDataset {
     /// Load a pipeline materialization (`<prefix>-*.tfrecord` +
-    /// `<prefix>.gindex`) fully into memory.
+    /// `<prefix>.gindex`) fully into memory from the real filesystem.
     pub fn load(dir: &Path, prefix: &str) -> Result<Self> {
-        let index = GroupIndex::read(dir.join(format!("{prefix}.gindex")))
+        Self::load_with(&StdVfs, dir, prefix)
+    }
+
+    /// [`InMemoryDataset::load`] with every file — shards and the
+    /// `.gindex` sidecar — served by an explicit [`Vfs`].
+    pub fn load_with(vfs: &dyn Vfs, dir: &Path, prefix: &str) -> Result<Self> {
+        let index = GroupIndex::read_with(vfs, &dir.join(format!("{prefix}.gindex")))
             .with_context(|| format!("loading index for {prefix}"))?;
-        let shards = discover_shards(dir, prefix)?;
+        // One shared positional handle per shard, opened once (the old
+        // code re-opened the shard file for every index entry).
+        let shards = discover_shards_with(vfs, dir, prefix)?
+            .iter()
+            .map(|p| vfs.open(p, OpenMode::Read))
+            .collect::<std::io::Result<Vec<_>>>()?;
         let mut groups = HashMap::with_capacity(index.num_groups());
         let mut keys = Vec::with_capacity(index.num_groups());
         for e in &index.entries {
-            let mut r = RecordReader::open(&shards[e.shard as usize])?;
+            let mut r = RecordReader::new(BufReader::new(VfsCursor::new(
+                shards[e.shard as usize].clone(),
+            )));
             r.seek_to(e.offset)?;
             let mut examples = Vec::with_capacity(e.num_examples as usize);
             for _ in 0..e.num_examples {

@@ -43,13 +43,20 @@
 //! sequential leaf scan through the cache) to rebuild per-group counts /
 //! the group list. A persisted `.hgroups`-style sidecar would make open
 //! O(groups); left as follow-up since open happens once per process.
+//!
+//! Every byte of store I/O (index, WAL *and* `.pdata`) goes through the
+//! [`crate::store::vfs`] layer: the `*_with` constructors take any
+//! [`Vfs`], the plain ones default to [`StdVfs`]. That is what lets the
+//! crash-matrix suite (`rust/tests/crash_matrix.rs`) run this exact
+//! code under [`crate::store::vfs::FaultVfs`] and prove — not argue —
+//! that recovery always lands on a committed prefix.
 
 #![deny(missing_docs)]
 
 use std::collections::HashMap;
-use std::fs::File;
-use std::io::{self, BufWriter, Seek, SeekFrom};
+use std::io::{self, BufReader, BufWriter};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -63,6 +70,7 @@ use crate::store::cache::CacheStats;
 use crate::store::page::{Page, PageId};
 use crate::store::pager::{PageRead, Pager};
 use crate::store::shared::{ReadSnapshot, SharedPager};
+use crate::store::vfs::{OpenMode, StdVfs, Vfs, VfsCursor, VfsFile};
 use crate::store::wal::{self, WalWriter};
 
 const MAGIC: &[u8; 8] = b"GRPPAG01";
@@ -194,7 +202,7 @@ fn decode_wal(payload: &[u8]) -> io::Result<(u64, &[u8], &[u8])> {
 fn visit_group_via<R: PageRead>(
     tree: &BTree,
     pager: &mut R,
-    data_path: &Path,
+    data: &Arc<dyn VfsFile>,
     group: &[u8],
     mut f: impl FnMut(Example),
 ) -> Result<bool> {
@@ -218,7 +226,7 @@ fn visit_group_via<R: PageRead>(
     if offsets.is_empty() {
         return Ok(false);
     }
-    let mut r = RecordReader::open(data_path)?;
+    let mut r = RecordReader::new(BufReader::new(VfsCursor::new(data.clone())));
     for off in offsets {
         r.seek_to(off)?;
         let bytes = r.next_record()?.context("paged index points past data end")?;
@@ -229,14 +237,13 @@ fn visit_group_via<R: PageRead>(
 
 /// The appendable, WAL-backed group store (writer + read access).
 pub struct PagedStore {
-    dir: PathBuf,
-    prefix: String,
     pager: Pager,
     tree: BTree,
     wal: WalWriter,
-    data: RecordWriter<BufWriter<File>>,
-    /// Handle for fsyncing `.pdata` (the writer owns a buffered clone).
-    data_file: File,
+    data: RecordWriter<BufWriter<VfsCursor>>,
+    /// The shared `.pdata` handle: fsync target for checkpoints, and the
+    /// source every read cursor positions over.
+    data_file: Arc<dyn VfsFile>,
     /// Byte offset of `.pdata` where this writer session started.
     data_base: u64,
     /// Per-group example counts (`group -> next seq`).
@@ -245,18 +252,40 @@ pub struct PagedStore {
     data_buffered: bool,
     /// Current checkpoint epoch (see [`StoreHeader::epoch`]).
     epoch: u64,
+    /// Set when an append failed mid-apply: the in-memory tree and data
+    /// writer are then suspect (a partial data frame may be buffered, a
+    /// page split may be half-done), so every further mutation — and
+    /// every tree walk through this handle — is refused. Reopen (or use
+    /// a [`PagedReader`]) to recover the last committed state.
+    poisoned: bool,
 }
 
 impl PagedStore {
-    /// Create a fresh (empty) store, truncating any existing one.
-    /// `cache_pages` is clamped to at least 2 frames (header + one node).
+    /// Create a fresh (empty) store on the real filesystem, truncating
+    /// any existing one (equivalent to [`PagedStore::create_with`] over
+    /// [`StdVfs`]). `cache_pages` is clamped to at least 2 frames
+    /// (header + one node).
     ///
     /// # Errors
     /// Any failure creating the directory or the three store files.
     pub fn create(dir: &Path, prefix: &str, cache_pages: usize) -> Result<PagedStore> {
+        PagedStore::create_with(&StdVfs, dir, prefix, cache_pages)
+    }
+
+    /// Create a fresh (empty) store on `vfs`, truncating any existing
+    /// one.
+    ///
+    /// # Errors
+    /// Any failure creating the directory or the three store files.
+    pub fn create_with(
+        vfs: &dyn Vfs,
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+    ) -> Result<PagedStore> {
         let cache_pages = cache_pages.max(2);
-        std::fs::create_dir_all(dir)?;
-        let mut pager = Pager::create(&pstore_path(dir, prefix), cache_pages)?;
+        vfs.create_dir_all(dir)?;
+        let mut pager = Pager::create_with(vfs, &pstore_path(dir, prefix), cache_pages)?;
         let hdr = pager.allocate()?;
         debug_assert_eq!(hdr, 0);
         let header = StoreHeader {
@@ -269,19 +298,10 @@ impl PagedStore {
         };
         pager.update(0, |p| write_header(p, &header))?;
         pager.flush()?;
-        let wal = WalWriter::open(&pwal_path(dir, prefix), 0)?;
-        let data_path = pdata_path(dir, prefix);
-        let file = std::fs::OpenOptions::new()
-            .read(true)
-            .write(true)
-            .create(true)
-            .truncate(true)
-            .open(&data_path)?;
-        let data_file = file.try_clone()?;
-        let data = RecordWriter::new(BufWriter::new(file));
+        let wal = WalWriter::open_with(vfs, &pwal_path(dir, prefix), 0)?;
+        let data_file = vfs.open(&pdata_path(dir, prefix), OpenMode::CreateTruncate)?;
+        let data = RecordWriter::new(BufWriter::new(VfsCursor::new(data_file.clone())));
         Ok(PagedStore {
-            dir: dir.to_path_buf(),
-            prefix: prefix.to_string(),
             pager,
             tree: BTree::new_empty(1),
             wal,
@@ -291,19 +311,35 @@ impl PagedStore {
             group_counts: HashMap::new(),
             data_buffered: false,
             epoch: 0,
+            poisoned: false,
         })
     }
 
-    /// Open an existing store, running crash recovery: the header names
-    /// the last committed tree/data state; any torn `.pdata`/`.pwal`
-    /// tails are truncated, and intact WAL records are replayed on top.
+    /// Open an existing store on the real filesystem (equivalent to
+    /// [`PagedStore::open_with`] over [`StdVfs`]), running crash
+    /// recovery: the header names the last committed tree/data state;
+    /// any torn `.pdata`/`.pwal` tails are truncated, and intact WAL
+    /// records are replayed on top.
     ///
     /// # Errors
     /// Fails on missing/corrupt store files (e.g. a data file shorter
     /// than the committed length) or any I/O error during replay.
     pub fn open(dir: &Path, prefix: &str, cache_pages: usize) -> Result<PagedStore> {
+        PagedStore::open_with(&StdVfs, dir, prefix, cache_pages)
+    }
+
+    /// Open an existing store on `vfs`, running crash recovery.
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedStore::open`].
+    pub fn open_with(
+        vfs: &dyn Vfs,
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+    ) -> Result<PagedStore> {
         let cache_pages = cache_pages.max(2);
-        let mut pager = Pager::open(&pstore_path(dir, prefix), cache_pages)?;
+        let mut pager = Pager::open_with(vfs, &pstore_path(dir, prefix), cache_pages)?;
         let header = read_header(&mut pager)?;
         // Discard uncommitted index pages beyond the committed watermark.
         pager.reset_to(header.committed_pages.max(1))?;
@@ -329,12 +365,8 @@ impl PagedStore {
         // Truncate the data file to the committed length (drops torn
         // appends; the WAL re-creates them) and position for append.
         let data_path = pdata_path(dir, prefix);
-        let file = std::fs::OpenOptions::new()
-            .read(true)
-            .write(true)
-            .create(true)
-            .open(&data_path)?;
-        let actual = file.metadata()?.len();
+        let data_file = vfs.open(&data_path, OpenMode::Create)?;
+        let actual = data_file.len()?;
         if actual < header.data_len {
             bail!(
                 "paged data file {} is shorter ({actual}) than the committed length {}",
@@ -342,23 +374,19 @@ impl PagedStore {
                 header.data_len
             );
         }
-        file.set_len(header.data_len)?;
-        let mut file = file;
-        file.seek(SeekFrom::Start(header.data_len))?;
-        let data_file = file.try_clone()?;
-        let data = RecordWriter::new(BufWriter::new(file));
+        data_file.set_len(header.data_len)?;
+        let data =
+            RecordWriter::new(BufWriter::new(VfsCursor::at(data_file.clone(), header.data_len)));
 
         // Collect intact WAL records, truncate any torn tail.
         let mut pending: Vec<Vec<u8>> = Vec::new();
-        let report = wal::replay(&pwal_path(dir, prefix), |payload| {
+        let report = wal::replay_with(vfs, &pwal_path(dir, prefix), |payload| {
             pending.push(payload.to_vec());
             Ok(())
         })?;
-        let wal = WalWriter::open(&pwal_path(dir, prefix), report.valid_bytes)?;
+        let wal = WalWriter::open_with(vfs, &pwal_path(dir, prefix), report.valid_bytes)?;
 
         let mut store = PagedStore {
-            dir: dir.to_path_buf(),
-            prefix: prefix.to_string(),
             pager,
             tree,
             wal,
@@ -368,6 +396,7 @@ impl PagedStore {
             group_counts,
             data_buffered: false,
             epoch: header.epoch,
+            poisoned: false,
         };
         // Replay: re-apply each logged append to data + tree. Idempotent
         // across repeated crashes: nothing becomes durable until the next
@@ -390,12 +419,26 @@ impl PagedStore {
         let offset = self.data_base + self.data.bytes_written();
         self.data.write_record(ex_bytes)?;
         self.data_buffered = true;
-        let seq = self.group_counts.entry(group.to_vec()).or_insert(0);
-        let key = row_key(group, *seq);
-        *seq += 1;
+        let seq = self.group_counts.get(group).copied().unwrap_or(0);
+        let key = row_key(group, seq);
         self.tree
             .insert(&mut self.pager, &key, &offset.to_le_bytes())
             .context("inserting into paged index")?;
+        // Counted only after the insert succeeded, so a failed apply
+        // never leaves a phantom group (or an off-by-one seq) behind.
+        self.group_counts.insert(group.to_vec(), seq + 1);
+        Ok(())
+    }
+
+    /// Refuse mutations on a store whose in-memory state a failed append
+    /// left suspect.
+    fn check_poisoned(&self) -> Result<()> {
+        if self.poisoned {
+            bail!(
+                "paged store is poisoned by an earlier failed append; \
+                 reopen it to recover the last committed state"
+            );
+        }
         Ok(())
     }
 
@@ -404,8 +447,14 @@ impl PagedStore {
     ///
     /// # Errors
     /// Rejects (before logging) a group key that would overflow the
-    /// index row budget; otherwise any WAL/data/index write failure.
+    /// index row budget; otherwise any WAL/data/index write failure. A
+    /// failure while *applying* poisons the store — the half-mutated
+    /// tree/data state cannot be trusted, so every later mutation is
+    /// refused and the store must be reopened (recovering the last
+    /// committed state, which can never include the failed append: its
+    /// WAL frame is withdrawn).
     pub fn append(&mut self, group: &[u8], example: &Example) -> Result<()> {
+        self.check_poisoned()?;
         // Validate BEFORE logging: a frame that cannot be applied must
         // never enter the WAL, or replay would fail on it at every
         // subsequent open (index row = group + 9-byte seq suffix key +
@@ -418,15 +467,33 @@ impl PagedStore {
             );
         }
         let ex_bytes = example.encode();
+        let mark = self.wal.mark();
         self.wal.append(&encode_wal(self.epoch, group, &ex_bytes))?;
-        self.apply(group, &ex_bytes)
+        if let Err(e) = self.apply(group, &ex_bytes) {
+            // The tree may be mid-split and the data writer may hold a
+            // partial frame: no further mutation through this handle can
+            // be trusted.
+            self.poisoned = true;
+            // Withdraw the frame: an append the caller is told failed
+            // must never become durable at a later commit, or recovery
+            // would replay an example the application believes was never
+            // stored. (If the frame was already written out and its
+            // truncation fails, the WAL's dirty-tail latch — plus the
+            // poisoned flag above — keeps it out of every durability
+            // promise.)
+            self.wal.rewind(mark);
+            return Err(e);
+        }
+        Ok(())
     }
 
     /// Durability point: fsync the WAL. Cheap — no index/data flush.
     ///
     /// # Errors
-    /// Any WAL flush/fsync failure.
+    /// Any WAL flush/fsync failure, or a store poisoned by an earlier
+    /// failed append (see [`PagedStore::append`]).
     pub fn commit(&mut self) -> Result<()> {
+        self.check_poisoned()?;
         self.wal.commit()?;
         Ok(())
     }
@@ -437,11 +504,13 @@ impl PagedStore {
     /// before it keep seeing the previous epoch's snapshot.
     ///
     /// # Errors
-    /// Any flush/fsync failure at any of the ordered steps; the store
-    /// stays recoverable from the previous checkpoint + WAL.
+    /// Any flush/fsync failure at any of the ordered steps (the store
+    /// stays recoverable from the previous checkpoint + WAL), or a store
+    /// poisoned by an earlier failed append.
     pub fn checkpoint(&mut self) -> Result<()> {
+        self.check_poisoned()?;
         self.data.flush()?;
-        self.data_file.sync_data()?;
+        self.data_file.sync()?;
         self.data_buffered = false;
         self.pager.flush()?;
         let header = StoreHeader {
@@ -481,14 +550,18 @@ impl PagedStore {
     /// unknown group.
     ///
     /// # Errors
-    /// Any index or data-file read failure, or a corrupt index row.
+    /// Any index or data-file read failure, a corrupt index row, or a
+    /// store poisoned by an earlier failed append (the half-mutated
+    /// in-memory tree cannot be walked safely; reopen — or use a
+    /// [`PagedReader`] — to read the committed state).
     pub fn visit_group(&mut self, group: &[u8], f: impl FnMut(Example)) -> Result<bool> {
+        self.check_poisoned()?;
         if self.data_buffered {
             self.data.flush()?;
             self.data_buffered = false;
         }
-        let data_path = pdata_path(&self.dir, &self.prefix);
-        visit_group_via(&self.tree, &mut self.pager, &data_path, group, f)
+        let data_file = self.data_file.clone();
+        visit_group_via(&self.tree, &mut self.pager, &data_file, group, f)
     }
 
     /// Iterate groups in `order` (the Table 3 serial random-order walk).
@@ -530,11 +603,26 @@ impl PagedStore {
         prefix: &str,
         cache_pages: usize,
     ) -> Result<PagedStore> {
+        PagedStore::build_with(&StdVfs, dataset, partitioner, dir, prefix, cache_pages)
+    }
+
+    /// [`PagedStore::build`] on an explicit [`Vfs`].
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedStore::build`].
+    pub fn build_with(
+        vfs: &dyn Vfs,
+        dataset: &dyn BaseDataset,
+        partitioner: &dyn Partitioner,
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+    ) -> Result<PagedStore> {
         // Checkpoint periodically so the WAL (and the memory a recovery
         // from a mid-build crash needs) stays bounded regardless of
         // dataset size.
         const CHECKPOINT_WAL_BYTES: u64 = 64 * 1024 * 1024;
-        let mut store = PagedStore::create(dir, prefix, cache_pages)?;
+        let mut store = PagedStore::create_with(vfs, dir, prefix, cache_pages)?;
         for ex in dataset.examples() {
             let key = partitioner.key(&ex);
             store.append(&key, &ex)?;
@@ -574,33 +662,48 @@ pub struct PagedReader {
     pager: SharedPager,
     snapshot: ReadSnapshot,
     tree: BTree,
-    data_path: PathBuf,
+    data_file: Arc<dyn VfsFile>,
     keys: Vec<Vec<u8>>,
     num_examples: u64,
 }
 
 impl PagedReader {
-    /// Open the store at `dir/<prefix>` for (possibly concurrent)
-    /// reading, with `cache_pages` total LRU frames (clamped to at
-    /// least 2).
+    /// Open the store at `dir/<prefix>` on the real filesystem
+    /// (equivalent to [`PagedReader::open_with`] over [`StdVfs`]) for
+    /// (possibly concurrent) reading, with `cache_pages` total LRU
+    /// frames (clamped to at least 2).
     ///
     /// # Errors
     /// Fails when the store files are missing or corrupt, when WAL
     /// probing/recovery fails, or on any I/O error during the group
     /// enumeration scan.
     pub fn open(dir: &Path, prefix: &str, cache_pages: usize) -> Result<PagedReader> {
+        PagedReader::open_with(&StdVfs, dir, prefix, cache_pages)
+    }
+
+    /// Open the store at `dir/<prefix>` on `vfs` for (possibly
+    /// concurrent) reading.
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedReader::open`].
+    pub fn open_with(
+        vfs: &dyn Vfs,
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+    ) -> Result<PagedReader> {
         let cache_pages = cache_pages.max(2);
         let wal_path = pwal_path(dir, prefix);
         // An I/O error probing the journal must fail the open, not be
         // mistaken for "no journal" (which would silently serve stale
         // pre-WAL data).
-        let hot = wal::has_valid_records(&wal_path).context("probing paged store WAL")?;
+        let hot = wal::has_valid_records_with(vfs, &wal_path).context("probing paged store WAL")?;
         if hot {
-            let mut store = PagedStore::open(dir, prefix, cache_pages)
+            let mut store = PagedStore::open_with(vfs, dir, prefix, cache_pages)
                 .context("recovering hot paged store")?;
             store.checkpoint()?;
         }
-        let pager = SharedPager::open(&pstore_path(dir, prefix), cache_pages)?;
+        let pager = SharedPager::open_with(vfs, &pstore_path(dir, prefix), cache_pages)?;
         // The checkpointing writer rewrites page 0 in place; a read that
         // races it can be torn. The header checksum detects that, and a
         // brief retry rides out the in-flight write.
@@ -633,11 +736,31 @@ impl PagedReader {
         if let Some(e) = scan_err {
             return Err(e).context("enumerating paged groups");
         }
+        let data_path = pdata_path(dir, prefix);
+        let data_file = match vfs.open(&data_path, OpenMode::Read) {
+            Ok(f) => f,
+            Err(e) if e.kind() == io::ErrorKind::NotFound && header.data_len == 0 => {
+                // A legal post-crash image: the data file was created but
+                // never fsynced, so its directory entry is gone. Nothing
+                // committed points into it — serve reads from a fresh
+                // empty file, exactly like the writer's recovery does.
+                vfs.open(&data_path, OpenMode::Create)?
+            }
+            Err(e) => return Err(e).context("opening paged data file"),
+        };
+        if data_file.len()? < header.data_len {
+            bail!(
+                "paged data file {} is shorter ({}) than the committed length {}",
+                data_path.display(),
+                data_file.len()?,
+                header.data_len
+            );
+        }
         Ok(PagedReader {
             pager,
             snapshot,
             tree,
-            data_path: pdata_path(dir, prefix),
+            data_file,
             keys,
             num_examples: header.num_rows,
         })
@@ -693,7 +816,7 @@ impl PagedReader {
     /// Any index or data-file read failure, or a corrupt index row.
     pub fn visit_group(&self, group: &[u8], f: impl FnMut(Example)) -> Result<bool> {
         let mut handle = self.pager.reader(self.snapshot);
-        visit_group_via(&self.tree, &mut handle, &self.data_path, group, f)
+        visit_group_via(&self.tree, &mut handle, &self.data_file, group, f)
     }
 
     /// Iterate groups in `order` (Table 3's serial random-order walk —
@@ -714,6 +837,13 @@ mod tests {
     use super::*;
     use crate::corpus::{DatasetSpec, SyntheticTextDataset};
     use crate::pipeline::FeatureKey;
+    use crate::store::vfs::MemVfs;
+
+    /// Most tests here run disk-free over [`MemVfs`]; `mem_dir` is just a
+    /// namespace inside it.
+    fn mem_dir(name: &str) -> PathBuf {
+        PathBuf::from("/mem").join(name)
+    }
 
     fn tmp(name: &str) -> PathBuf {
         let dir = std::env::temp_dir().join("grouper_paged_test").join(name);
@@ -752,27 +882,30 @@ mod tests {
             assert_eq!(got, want, "group {g}");
         }
         assert!(!r.visit_group(b"not-there", |_| {}).unwrap());
+        drop(r);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn appends_after_reopen_extend_existing_groups() {
-        let dir = tmp("reopen");
+        let vfs = MemVfs::new();
+        let dir = mem_dir("reopen");
         {
-            let mut s = PagedStore::create(&dir, "x", 16).unwrap();
+            let mut s = PagedStore::create_with(&vfs, &dir, "x", 16).unwrap();
             s.append(b"g1", &Example::text("a")).unwrap();
             s.append(b"g2", &Example::text("b")).unwrap();
             s.commit().unwrap();
             s.checkpoint().unwrap();
         }
         {
-            let mut s = PagedStore::open(&dir, "x", 16).unwrap();
+            let mut s = PagedStore::open_with(&vfs, &dir, "x", 16).unwrap();
             assert_eq!(s.num_examples(), 2);
             s.append(b"g1", &Example::text("c")).unwrap();
             s.append(b"g3", &Example::text("d")).unwrap();
             s.commit().unwrap();
             s.checkpoint().unwrap();
         }
-        let r = PagedReader::open(&dir, "x", 16).unwrap();
+        let r = PagedReader::open_with(&vfs, &dir, "x", 16).unwrap();
         assert_eq!(r.num_groups(), 3);
         let mut texts = Vec::new();
         assert!(r
@@ -783,9 +916,10 @@ mod tests {
 
     #[test]
     fn crash_without_checkpoint_recovers_from_wal() {
-        let dir = tmp("crash");
+        let vfs = MemVfs::new();
+        let dir = mem_dir("crash");
         {
-            let mut s = PagedStore::create(&dir, "x", 16).unwrap();
+            let mut s = PagedStore::create_with(&vfs, &dir, "x", 16).unwrap();
             for i in 0..50 {
                 let g = format!("group-{}", i % 7);
                 s.append(g.as_bytes(), &Example::text(&format!("ex{i}"))).unwrap();
@@ -795,7 +929,7 @@ mod tests {
             // were never flushed; only the WAL (and OS-buffered data
             // bytes) survive.
         }
-        let mut s = PagedStore::open(&dir, "x", 16).unwrap();
+        let mut s = PagedStore::open_with(&vfs, &dir, "x", 16).unwrap();
         assert_eq!(s.num_examples(), 50, "WAL replay must restore every append");
         assert_eq!(s.num_groups(), 7);
         let mut count = 0;
@@ -811,21 +945,22 @@ mod tests {
         // The nastiest checkpoint window: header (with the new state) is
         // durable, but the WAL truncation never happened. Simulated by
         // saving the WAL right before checkpoint and restoring it after.
-        let dir = tmp("epoch");
+        let vfs = MemVfs::new();
+        let dir = mem_dir("epoch");
         let wal_path = dir.join("x.pwal");
         {
-            let mut s = PagedStore::create(&dir, "x", 16).unwrap();
+            let mut s = PagedStore::create_with(&vfs, &dir, "x", 16).unwrap();
             for i in 0..20 {
                 let g = format!("g{}", i % 4);
                 s.append(g.as_bytes(), &Example::text(&format!("t{i}"))).unwrap();
             }
             s.commit().unwrap();
-            let saved_wal = std::fs::read(&wal_path).unwrap();
+            let saved_wal = vfs.file_bytes(&wal_path).unwrap();
             s.checkpoint().unwrap(); // header swap + wal reset
             drop(s);
-            std::fs::write(&wal_path, &saved_wal).unwrap(); // reset "never happened"
+            vfs.install(&wal_path, saved_wal); // reset "never happened"
         }
-        let mut s = PagedStore::open(&dir, "x", 16).unwrap();
+        let mut s = PagedStore::open_with(&vfs, &dir, "x", 16).unwrap();
         assert_eq!(
             s.num_examples(),
             20,
@@ -840,14 +975,15 @@ mod tests {
         s.append(b"g0", &Example::text("new")).unwrap();
         s.commit().unwrap();
         drop(s);
-        let s2 = PagedStore::open(&dir, "x", 16).unwrap();
+        let s2 = PagedStore::open_with(&vfs, &dir, "x", 16).unwrap();
         assert_eq!(s2.num_examples(), 21);
     }
 
     #[test]
     fn oversized_group_key_is_rejected_before_logging() {
-        let dir = tmp("bigkey");
-        let mut s = PagedStore::create(&dir, "x", 16).unwrap();
+        let vfs = MemVfs::new();
+        let dir = mem_dir("bigkey");
+        let mut s = PagedStore::create_with(&vfs, &dir, "x", 16).unwrap();
         let big = vec![b'g'; 4000];
         assert!(s.append(&big, &Example::text("t")).is_err());
         // The reject must not have poisoned the WAL: appends keep working
@@ -855,15 +991,16 @@ mod tests {
         s.append(b"ok", &Example::text("t")).unwrap();
         s.commit().unwrap();
         drop(s);
-        let s2 = PagedStore::open(&dir, "x", 16).unwrap();
+        let s2 = PagedStore::open_with(&vfs, &dir, "x", 16).unwrap();
         assert_eq!(s2.num_examples(), 1);
     }
 
     #[test]
     fn torn_header_is_detected_not_misparsed() {
-        let dir = tmp("tornheader");
+        let vfs = MemVfs::new();
+        let dir = mem_dir("tornheader");
         {
-            let mut s = PagedStore::create(&dir, "x", 16).unwrap();
+            let mut s = PagedStore::create_with(&vfs, &dir, "x", 16).unwrap();
             s.append(b"g", &Example::text("t")).unwrap();
             s.commit().unwrap();
             s.checkpoint().unwrap();
@@ -871,18 +1008,174 @@ mod tests {
         // Flip a byte inside the checksummed span (the epoch field), as a
         // torn in-place header write would.
         let pstore = dir.join("x.pstore");
-        let mut bytes = std::fs::read(&pstore).unwrap();
+        let mut bytes = vfs.file_bytes(&pstore).unwrap();
         bytes[40] ^= 0xFF;
-        std::fs::write(&pstore, &bytes).unwrap();
-        let err = PagedReader::open(&dir, "x", 16).unwrap_err();
+        vfs.install(&pstore, bytes);
+        let err = PagedReader::open_with(&vfs, &dir, "x", 16).unwrap_err();
         assert!(format!("{err:#}").contains("checksum"), "{err:#}");
-        assert!(PagedStore::open(&dir, "x", 16).is_err());
+        assert!(PagedStore::open_with(&vfs, &dir, "x", 16).is_err());
+    }
+
+    /// A VFS that serves a torn image for the first N reads of a chosen
+    /// file's page 0, then the real bytes — a deterministic stand-in for
+    /// a reader racing the checkpoint's in-place header rewrite (no
+    /// wall-clock, no flakes).
+    struct TornHeaderVfs {
+        inner: MemVfs,
+        victim: PathBuf,
+        torn: Vec<u8>,
+        remaining: std::sync::atomic::AtomicU32,
+    }
+
+    impl Vfs for TornHeaderVfs {
+        fn open(&self, path: &Path, mode: OpenMode) -> io::Result<Arc<dyn VfsFile>> {
+            let inner = self.inner.open(path, mode)?;
+            if path == self.victim {
+                // The handle must be 'static (Arc<dyn VfsFile>), so the
+                // torn state is shared into it rather than borrowed.
+                Ok(Arc::new(TornHeaderFile {
+                    inner,
+                    torn: self.torn.clone(),
+                    remaining: Arc::new(std::sync::atomic::AtomicU32::new(
+                        self.remaining.load(std::sync::atomic::Ordering::Relaxed),
+                    )),
+                }))
+            } else {
+                Ok(inner)
+            }
+        }
+        fn create_dir_all(&self, path: &Path) -> io::Result<()> {
+            self.inner.create_dir_all(path)
+        }
+        fn list_dir(&self, dir: &Path) -> io::Result<Vec<PathBuf>> {
+            self.inner.list_dir(dir)
+        }
+    }
+
+    /// The handle [`TornHeaderVfs::open`] hands out for the victim file.
+    struct TornHeaderFile {
+        inner: Arc<dyn VfsFile>,
+        torn: Vec<u8>,
+        remaining: Arc<std::sync::atomic::AtomicU32>,
+    }
+
+    impl VfsFile for TornHeaderFile {
+        fn read_at(&self, buf: &mut [u8], offset: u64) -> io::Result<usize> {
+            use std::sync::atomic::Ordering;
+            if (offset as usize) < self.torn.len() {
+                let left = self.remaining.load(Ordering::Relaxed);
+                if left > 0 {
+                    self.remaining.store(left - 1, Ordering::Relaxed);
+                    let src = &self.torn[offset as usize..];
+                    let n = buf.len().min(src.len());
+                    buf[..n].copy_from_slice(&src[..n]);
+                    return Ok(n);
+                }
+            }
+            self.inner.read_at(buf, offset)
+        }
+        fn write_all_at(&self, buf: &[u8], offset: u64) -> io::Result<()> {
+            self.inner.write_all_at(buf, offset)
+        }
+        fn set_len(&self, len: u64) -> io::Result<()> {
+            self.inner.set_len(len)
+        }
+        fn sync(&self) -> io::Result<()> {
+            self.inner.sync()
+        }
+        fn len(&self) -> io::Result<u64> {
+            self.inner.len()
+        }
+    }
+
+    #[test]
+    fn torn_header_read_is_retried_until_the_writer_finishes() {
+        // A reader racing the checkpoint's in-place header rewrite sees a
+        // torn page 0, detects it by CRC, and retries until the rewrite
+        // completes. Deterministic: the VFS serves the torn image for the
+        // first 3 header reads (well inside the ~20-retry budget), then
+        // the real bytes — no wall-clock race.
+        let mem = MemVfs::new();
+        let dir = mem_dir("tornretry");
+        {
+            let mut s = PagedStore::create_with(&mem, &dir, "x", 16).unwrap();
+            s.append(b"g", &Example::text("t")).unwrap();
+            s.commit().unwrap();
+            s.checkpoint().unwrap();
+        }
+        let pstore = dir.join("x.pstore");
+        let good = mem.file_bytes(&pstore).unwrap();
+        let mut torn = good[..crate::store::PAGE_SIZE].to_vec();
+        torn[40] ^= 0xFF; // mid-rewrite image: checksum cannot match
+        let vfs = TornHeaderVfs {
+            inner: mem,
+            victim: pstore,
+            torn,
+            remaining: std::sync::atomic::AtomicU32::new(3),
+        };
+        let r = PagedReader::open_with(&vfs, &dir, "x", 16).unwrap();
+        assert_eq!(r.num_examples(), 1, "retry must land on the completed header");
+    }
+
+    #[test]
+    fn failed_append_poisons_the_store_and_is_never_replayed() {
+        // An append whose *apply* fails (here: an injected I/O error on a
+        // cache-eviction write-back or data flush mid-append) withdraws
+        // its WAL frame and poisons the handle: the half-mutated
+        // tree/data state cannot be trusted, so further mutations are
+        // refused, and reopening recovers the last committed state — the
+        // failed example can never be resurrected.
+        use crate::store::vfs::{FaultPlan, FaultVfs};
+        use std::sync::Arc;
+        let fv = FaultVfs::new(Arc::new(MemVfs::new()));
+        let dir = mem_dir("failedappend");
+        // Tiny cache: appends constantly evict, giving the injected
+        // failure a write site inside apply().
+        let mut s = PagedStore::create_with(&fv, &dir, "x", 2).unwrap();
+        for i in 0..40 {
+            let g = format!("g{}", i % 5);
+            s.append(g.as_bytes(), &Example::text(&format!("t{i}"))).unwrap();
+        }
+        s.commit().unwrap();
+        fv.set_plan(FaultPlan {
+            fail_write: Some(fv.writes_attempted() + 1),
+            ..Default::default()
+        });
+        let mut hit = false;
+        for i in 40..400 {
+            let g = format!("g{}", i % 5);
+            if s.append(g.as_bytes(), &Example::text(&format!("t{i}"))).is_err() {
+                hit = true;
+                break;
+            }
+        }
+        assert!(hit, "the injected write failure must hit an append");
+        fv.disarm();
+        // The handle is poisoned: every further mutation is refused.
+        let err = s.append(b"g0", &Example::text("nope")).unwrap_err();
+        assert!(format!("{err:#}").contains("poisoned"), "{err:#}");
+        assert!(s.commit().is_err());
+        assert!(s.checkpoint().is_err());
+        assert!(
+            s.visit_group(b"g0", |_| {}).is_err(),
+            "tree walks through the poisoned handle are refused too"
+        );
+        drop(s);
+        // Reopen: recovery lands on the last committed state; neither the
+        // failed append nor anything after it exists.
+        let s2 = PagedStore::open_with(&fv, &dir, "x", 8).unwrap();
+        assert_eq!(
+            s2.num_examples(),
+            40,
+            "recovery must land exactly on the last committed state"
+        );
     }
 
     #[test]
     fn store_reads_its_own_uncommitted_appends() {
-        let dir = tmp("readback");
-        let mut s = PagedStore::create(&dir, "x", 16).unwrap();
+        let vfs = MemVfs::new();
+        let dir = mem_dir("readback");
+        let mut s = PagedStore::create_with(&vfs, &dir, "x", 16).unwrap();
         s.append(b"g", &Example::text("one")).unwrap();
         s.append(b"g", &Example::text("two")).unwrap();
         let mut texts = Vec::new();

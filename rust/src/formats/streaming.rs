@@ -24,14 +24,16 @@ use std::collections::VecDeque;
 use std::io::BufReader;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
 use crate::pipeline::{GroupIndex, GroupIndexEntry};
-use crate::records::sharded::discover_shards;
+use crate::records::sharded::discover_shards_with;
 use crate::records::tfrecord::RecordReader;
 use crate::records::Example;
+use crate::store::vfs::{OpenMode, StdVfs, Vfs, VfsCursor, VfsFile};
 use crate::util::rng::Rng;
 
 /// Stream construction options.
@@ -82,7 +84,7 @@ enum GroupSource {
     /// Raw framed bytes of the whole extent (prefetched).
     Buffer(Vec<u8>),
     /// Large extent: positioned reader + remaining record count.
-    File { reader: RecordReader<BufReader<std::fs::File>>, remaining: u64 },
+    File { reader: RecordReader<BufReader<VfsCursor>>, remaining: u64 },
 }
 
 impl StreamedGroup {
@@ -127,18 +129,32 @@ impl StreamedGroup {
 
 /// The open streaming dataset.
 pub struct StreamingDataset {
+    vfs: Arc<dyn Vfs>,
     shards: Vec<PathBuf>,
     index: GroupIndex,
     config: StreamingConfig,
 }
 
 impl StreamingDataset {
+    /// Open a pipeline materialization on the real filesystem.
     pub fn open(dir: &Path, prefix: &str, config: StreamingConfig) -> Result<Self> {
-        let mut index = GroupIndex::read(dir.join(format!("{prefix}.gindex")))
-            .with_context(|| format!("opening streaming dataset {prefix}"))?;
+        Self::open_with(Arc::new(StdVfs), dir, prefix, config)
+    }
+
+    /// [`StreamingDataset::open`] with every file — shards and the
+    /// `.gindex` sidecar — served by an explicit [`Vfs`].
+    pub fn open_with(
+        vfs: Arc<dyn Vfs>,
+        dir: &Path,
+        prefix: &str,
+        config: StreamingConfig,
+    ) -> Result<Self> {
+        let mut index =
+            GroupIndex::read_with(vfs.as_ref(), &dir.join(format!("{prefix}.gindex")))
+                .with_context(|| format!("opening streaming dataset {prefix}"))?;
         index.sort_physical();
-        let shards = discover_shards(dir, prefix)?;
-        Ok(StreamingDataset { shards, index, config })
+        let shards = discover_shards_with(vfs.as_ref(), dir, prefix)?;
+        Ok(StreamingDataset { vfs, shards, index, config })
     }
 
     pub fn num_groups(&self) -> usize {
@@ -202,6 +218,7 @@ impl StreamingDataset {
     /// Start the stream: spawns the prefetch thread, returns the iterator.
     pub fn stream(&self) -> GroupStream {
         let (tx, rx) = sync_channel::<Result<Prefetched>>(self.config.prefetch_groups.max(1));
+        let vfs = self.vfs.clone();
         let shards = self.shards.clone();
         let entries = self.index.entries.clone();
         let config = self.config.clone();
@@ -216,7 +233,7 @@ impl StreamingDataset {
         };
         let this_config = config.clone();
         let handle = std::thread::spawn(move || {
-            prefetch_loop(tx, shards, entries, orders, dataset_for_infinite, this_config)
+            prefetch_loop(tx, vfs, shards, entries, orders, dataset_for_infinite, this_config)
         });
         GroupStream { rx, _handle: handle }
     }
@@ -229,6 +246,7 @@ struct Prefetched {
 
 fn prefetch_loop(
     tx: SyncSender<Result<Prefetched>>,
+    vfs: Arc<dyn Vfs>,
     shards: Vec<PathBuf>,
     entries: Vec<GroupIndexEntry>,
     orders: Vec<Vec<usize>>,
@@ -236,19 +254,19 @@ fn prefetch_loop(
     config: StreamingConfig,
 ) {
     // Persistent per-shard raw file handles: extents are read with
-    // positioned reads (`read_exact_at`), so no per-group open/seek
-    // syscalls and no reader state to maintain (§Perf L3-2: the previous
-    // implementation re-opened the shard file for every group).
-    let mut files: Vec<Option<std::fs::File>> = (0..shards.len()).map(|_| None).collect();
+    // positioned reads (the VFS layer's `read_exact_at`), so no
+    // per-group open/seek syscalls and no reader state to maintain
+    // (§Perf L3-2: the previous implementation re-opened the shard file
+    // for every group).
+    let mut files: Vec<Option<Arc<dyn VfsFile>>> = (0..shards.len()).map(|_| None).collect();
 
     let mut fetch = |gi: usize| -> Result<Prefetched> {
-        use std::os::unix::fs::FileExt;
         let e = &entries[gi];
         let shard = e.shard as usize;
         let file = match &mut files[shard] {
             Some(f) => f,
             slot => {
-                *slot = Some(std::fs::File::open(&shards[shard])?);
+                *slot = Some(vfs.open(&shards[shard], OpenMode::Read)?);
                 slot.as_mut().unwrap()
             }
         };
@@ -260,7 +278,7 @@ fn prefetch_loop(
             Ok(Prefetched { entry: e.clone(), source: GroupSource::Buffer(raw) })
         } else {
             // Too large to buffer: hand the consumer its own positioned reader.
-            let mut r = RecordReader::open(&shards[shard])?;
+            let mut r = RecordReader::new(BufReader::new(VfsCursor::new(file.clone())));
             r.seek_to(e.offset)?;
             Ok(Prefetched {
                 entry: e.clone(),
@@ -284,6 +302,7 @@ fn prefetch_loop(
         Some((index, _nshards)) => {
             // Infinite repeat: regenerate each epoch's order lazily.
             let ds = StreamingDataset {
+                vfs: vfs.clone(),
                 shards: shards.clone(),
                 index,
                 config: config.clone(),

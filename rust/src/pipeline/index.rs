@@ -74,14 +74,24 @@ impl GroupIndex {
         w.flush()
     }
 
+    /// Read an index from the real filesystem.
     pub fn read<P: AsRef<Path>>(path: P) -> io::Result<GroupIndex> {
-        let mut r = BufReader::new(std::fs::File::open(&path)?);
+        Self::read_with(&crate::store::vfs::StdVfs, path.as_ref())
+    }
+
+    /// [`GroupIndex::read`] over an explicit [`crate::store::vfs::Vfs`]
+    /// (so VFS-portable formats can resolve the sidecar from the same
+    /// backend as their shards).
+    pub fn read_with(vfs: &dyn crate::store::vfs::Vfs, path: &Path) -> io::Result<GroupIndex> {
+        let mut r = BufReader::new(crate::store::vfs::VfsCursor::new(
+            vfs.open(path, crate::store::vfs::OpenMode::Read)?,
+        ));
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
         if &magic != MAGIC {
             return Err(io::Error::new(
                 io::ErrorKind::InvalidData,
-                format!("bad index magic in {}", path.as_ref().display()),
+                format!("bad index magic in {}", path.display()),
             ));
         }
         let mut n8 = [0u8; 8];

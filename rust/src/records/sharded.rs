@@ -21,12 +21,23 @@ pub fn shard_paths(dir: &Path, prefix: &str, total: usize) -> Vec<PathBuf> {
 /// Errors if the set is incomplete (a missing shard means a corrupt
 /// materialization).
 pub fn discover_shards(dir: &Path, prefix: &str) -> io::Result<Vec<PathBuf>> {
+    discover_shards_with(&crate::store::vfs::StdVfs, dir, prefix)
+}
+
+/// [`discover_shards`] over an explicit [`crate::store::vfs::Vfs`] (so
+/// in-memory materializations are discoverable too).
+pub fn discover_shards_with(
+    vfs: &dyn crate::store::vfs::Vfs,
+    dir: &Path,
+    prefix: &str,
+) -> io::Result<Vec<PathBuf>> {
     let mut found: Vec<(usize, usize, PathBuf)> = Vec::new();
-    for entry in std::fs::read_dir(dir)? {
-        let entry = entry?;
-        let name = entry.file_name().to_string_lossy().into_owned();
+    for path in vfs.list_dir(dir)? {
+        let Some(name) = path.file_name().map(|n| n.to_string_lossy().into_owned()) else {
+            continue;
+        };
         if let Some((idx, total)) = parse_shard_name(&name, prefix) {
-            found.push((idx, total, entry.path()));
+            found.push((idx, total, path));
         }
     }
     if found.is_empty() {

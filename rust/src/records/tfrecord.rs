@@ -140,9 +140,10 @@ impl<R: Read> RecordReader<R> {
     }
 }
 
-impl RecordReader<BufReader<File>> {
+impl<R: Read + Seek> RecordReader<R> {
     /// Random access: position the reader at an absolute byte offset — the
-    /// hierarchical format's per-group seek path.
+    /// hierarchical/paged formats' per-group seek path. Generic over any
+    /// seekable source (`BufReader<File>`, a VFS cursor, …).
     pub fn seek_to(&mut self, offset: u64) -> io::Result<()> {
         self.r.seek(SeekFrom::Start(offset))?;
         self.offset = offset;

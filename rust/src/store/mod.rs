@@ -3,8 +3,15 @@
 //! crash-safe store (the SQLite-lineage design the paper's TFF/SQL-backed
 //! hierarchical format alludes to).
 //!
-//! Six layers, bottom-up:
+//! Seven layers, bottom-up:
 //!
+//! * [`vfs`] — the virtual filesystem: every store/format byte goes
+//!   through the [`vfs::Vfs`]/[`vfs::VfsFile`] trait pair (SQLite's VFS
+//!   design), with [`vfs::StdVfs`] (real disk, the default),
+//!   [`vfs::MemVfs`] (in-memory files for disk-free tests/benches) and
+//!   [`vfs::FaultVfs`] (deterministic fail/tear/crash injection — the
+//!   substrate of the crash-matrix proof in
+//!   `rust/tests/crash_matrix.rs`);
 //! * [`page`] — the fixed 4 KiB page, shared with the immutable
 //!   [`crate::formats::btree_index`];
 //! * [`cache`] — an LRU page cache with pin/dirty tracking and hit/miss
@@ -37,6 +44,7 @@ pub mod cache;
 pub mod page;
 pub mod pager;
 pub mod shared;
+pub mod vfs;
 pub mod wal;
 
 pub use btree::BTree;
@@ -44,4 +52,7 @@ pub use cache::{CacheStats, PageCache};
 pub use page::{Page, PageId, NO_PAGE, PAGE_SIZE};
 pub use pager::{PageRead, Pager};
 pub use shared::{ReadSnapshot, SharedPager, SnapshotReader};
-pub use wal::{ReplayReport, WalWriter};
+pub use vfs::{
+    CrashImage, FaultPlan, FaultVfs, MemVfs, OpenMode, StdVfs, Vfs, VfsCursor, VfsFile,
+};
+pub use wal::{ReplayReport, WalMark, WalWriter};

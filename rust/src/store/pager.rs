@@ -11,13 +11,19 @@
 //! and then fsyncs. Callers building crash-safe structures pair this
 //! with the WAL ([`super::wal`]): log logically first, flush pages at
 //! checkpoint, swap the header page last.
+//!
+//! All file I/O goes through the [`super::vfs`] layer: the `*_with`
+//! constructors take any [`Vfs`], the plain ones default to
+//! [`StdVfs`] — which is how the fault-injection suite drives a pager
+//! over [`super::vfs::FaultVfs`] without the pager knowing.
 
-use std::fs::{File, OpenOptions};
-use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::io;
 use std::path::Path;
+use std::sync::Arc;
 
 use super::cache::{CacheStats, PageCache};
 use super::page::{Page, PageId, PAGE_SIZE};
+use super::vfs::{OpenMode, StdVfs, Vfs, VfsFile};
 
 /// Uniform page-read access for tree walkers: implemented by the
 /// exclusive [`Pager`] (the write path) and by the concurrent
@@ -37,7 +43,7 @@ pub trait PageRead {
 /// cache. This is the write path; for concurrent `Send + Sync` reads
 /// over a committed file, see [`super::shared::SharedPager`].
 pub struct Pager {
-    file: File,
+    file: Arc<dyn VfsFile>,
     cache: PageCache,
     num_pages: u32,
     writable: bool,
@@ -46,7 +52,8 @@ pub struct Pager {
 }
 
 impl Pager {
-    /// Create (or truncate) a paged file.
+    /// Create (or truncate) a paged file on the real filesystem
+    /// (equivalent to [`Pager::create_with`] over [`StdVfs`]).
     ///
     /// # Errors
     /// Fails when the parent directory cannot be created or the file
@@ -55,15 +62,22 @@ impl Pager {
     /// # Panics
     /// Panics when `cache_pages` is 0 (the cache needs one frame).
     pub fn create(path: &Path, cache_pages: usize) -> io::Result<Pager> {
+        Pager::create_with(&StdVfs, path, cache_pages)
+    }
+
+    /// Create (or truncate) a paged file on `vfs`.
+    ///
+    /// # Errors
+    /// Fails when the parent directory cannot be created or the file
+    /// cannot be opened for writing.
+    ///
+    /// # Panics
+    /// Panics when `cache_pages` is 0 (the cache needs one frame).
+    pub fn create_with(vfs: &dyn Vfs, path: &Path, cache_pages: usize) -> io::Result<Pager> {
         if let Some(d) = path.parent() {
-            std::fs::create_dir_all(d)?;
+            vfs.create_dir_all(d)?;
         }
-        let file = OpenOptions::new()
-            .read(true)
-            .write(true)
-            .create(true)
-            .truncate(true)
-            .open(path)?;
+        let file = vfs.open(path, OpenMode::CreateTruncate)?;
         Ok(Pager {
             file,
             cache: PageCache::new(cache_pages),
@@ -74,15 +88,26 @@ impl Pager {
         })
     }
 
-    /// Open an existing paged file read/write. A torn trailing partial
-    /// page (crash mid-extend) is ignored, not an error.
+    /// Open an existing paged file read/write on the real filesystem
+    /// (equivalent to [`Pager::open_with`] over [`StdVfs`]). A torn
+    /// trailing partial page (crash mid-extend) is ignored, not an
+    /// error.
     ///
     /// # Errors
     /// Fails when the file does not exist or cannot be opened
     /// read/write.
     pub fn open(path: &Path, cache_pages: usize) -> io::Result<Pager> {
-        let file = OpenOptions::new().read(true).write(true).open(path)?;
-        let num_pages = (file.metadata()?.len() / PAGE_SIZE as u64) as u32;
+        Pager::open_with(&StdVfs, path, cache_pages)
+    }
+
+    /// Open an existing paged file read/write on `vfs`.
+    ///
+    /// # Errors
+    /// Fails when the file does not exist or cannot be opened
+    /// read/write.
+    pub fn open_with(vfs: &dyn Vfs, path: &Path, cache_pages: usize) -> io::Result<Pager> {
+        let file = vfs.open(path, OpenMode::ReadWrite)?;
+        let num_pages = (file.len()? / PAGE_SIZE as u64) as u32;
         Ok(Pager {
             file,
             cache: PageCache::new(cache_pages),
@@ -93,13 +118,22 @@ impl Pager {
         })
     }
 
-    /// Open read-only (readers over immutable/committed files).
+    /// Open read-only (readers over immutable/committed files) on the
+    /// real filesystem.
     ///
     /// # Errors
     /// Fails when the file does not exist or cannot be opened.
     pub fn open_read(path: &Path, cache_pages: usize) -> io::Result<Pager> {
-        let file = OpenOptions::new().read(true).open(path)?;
-        let num_pages = (file.metadata()?.len() / PAGE_SIZE as u64) as u32;
+        Pager::open_read_with(&StdVfs, path, cache_pages)
+    }
+
+    /// Open read-only on `vfs`.
+    ///
+    /// # Errors
+    /// Fails when the file does not exist or cannot be opened.
+    pub fn open_read_with(vfs: &dyn Vfs, path: &Path, cache_pages: usize) -> io::Result<Pager> {
+        let file = vfs.open(path, OpenMode::Read)?;
+        let num_pages = (file.len()? / PAGE_SIZE as u64) as u32;
         Ok(Pager {
             file,
             cache: PageCache::new(cache_pages),
@@ -122,15 +156,14 @@ impl Pager {
 
     fn read_from_disk(&mut self, id: PageId) -> io::Result<Page> {
         let mut buf = vec![0u8; PAGE_SIZE];
-        self.file.seek(SeekFrom::Start(id as u64 * PAGE_SIZE as u64))?;
-        self.file.read_exact(&mut buf)?;
+        self.file.read_exact_at(&mut buf, id as u64 * PAGE_SIZE as u64)?;
         self.disk_reads += 1;
         Page::from_vec(buf)
     }
 
     fn write_to_disk(&mut self, id: PageId, page: &Page) -> io::Result<()> {
-        self.file.seek(SeekFrom::Start(id as u64 * PAGE_SIZE as u64))?;
-        self.file.write_all(page.as_slice())?;
+        self.file
+            .write_all_at(page.as_slice(), id as u64 * PAGE_SIZE as u64)?;
         self.disk_writes += 1;
         Ok(())
     }
@@ -275,7 +308,7 @@ impl Pager {
                 return Err(e);
             }
         }
-        if let Err(e) = self.file.sync_data() {
+        if let Err(e) = self.file.sync() {
             for (rid, _) in &dirty {
                 self.cache.mark_dirty(*rid);
             }
@@ -409,6 +442,89 @@ mod tests {
         assert!(r.allocate().is_err());
         assert!(r.update(0, |_| ()).is_err());
         assert!(r.put(0, Page::zeroed()).is_err());
+    }
+
+    #[test]
+    fn flush_write_failure_remarks_dirty_and_a_retry_succeeds() {
+        use crate::store::vfs::{CrashImage, FaultPlan, FaultVfs, MemVfs};
+        use std::sync::Arc;
+        let fv = FaultVfs::new(Arc::new(MemVfs::new()));
+        let path = std::path::Path::new("/fault/write.pages");
+        let mut p = Pager::create_with(&fv, path, 8).unwrap();
+        for i in 0..3u32 {
+            let id = p.allocate().unwrap();
+            p.update(id, |pg| pg.put_u32(0, 100 + i)).unwrap();
+        }
+        // Fail the middle page write of the flush: pages 1..2 (the failed
+        // write and everything after it) are re-marked dirty; page 0 was
+        // written and only awaits the retry's fsync.
+        fv.set_plan(FaultPlan { fail_write: Some(fv.writes_attempted() + 2), ..Default::default() });
+        assert!(p.flush().is_err(), "injected write failure must surface");
+        fv.disarm();
+        let writes_before_retry = p.disk_writes();
+        p.flush().unwrap();
+        assert_eq!(
+            p.disk_writes(),
+            writes_before_retry + 2,
+            "the failed write and every page after it must be rewritten on retry"
+        );
+        // The retried flush is durable: the synced-only crash image holds
+        // every page.
+        let img = fv.crash_snapshot(CrashImage::SyncedOnly);
+        let mem2 = MemVfs::from_map(img);
+        let mut q = Pager::open_read_with(&mem2, path, 8).unwrap();
+        for i in 0..3u32 {
+            assert_eq!(q.read(i).unwrap().get_u32(0), 100 + i);
+        }
+    }
+
+    #[test]
+    fn flush_sync_failure_remarks_dirty_and_a_retry_succeeds() {
+        use crate::store::vfs::{CrashImage, FaultPlan, FaultVfs, MemVfs};
+        use std::sync::Arc;
+        let fv = FaultVfs::new(Arc::new(MemVfs::new()));
+        let path = std::path::Path::new("/fault/sync.pages");
+        let mut p = Pager::create_with(&fv, path, 8).unwrap();
+        for i in 0..4u32 {
+            let id = p.allocate().unwrap();
+            p.update(id, |pg| pg.put_u32(0, i)).unwrap();
+        }
+        fv.set_plan(FaultPlan { fail_sync: Some(fv.syncs_attempted() + 1), ..Default::default() });
+        assert!(p.flush().is_err(), "injected fsync failure must surface");
+        // Nothing is durable: the never-synced file is absent from (or at
+        // most empty in) the fsynced-only crash image.
+        let img = fv.crash_snapshot(CrashImage::SyncedOnly);
+        assert!(
+            img.get(std::path::Path::new("/fault/sync.pages"))
+                .map_or(true, |b| b.is_empty()),
+            "a failed fsync must leave nothing durable"
+        );
+        fv.disarm();
+        let writes_before_retry = p.disk_writes();
+        p.flush().unwrap();
+        assert_eq!(p.disk_writes(), writes_before_retry + 4, "all pages rewritten");
+        let img = fv.crash_snapshot(CrashImage::SyncedOnly);
+        assert_eq!(img[std::path::Path::new("/fault/sync.pages")].len(), 4 * PAGE_SIZE);
+    }
+
+    #[test]
+    fn memvfs_pager_roundtrips_like_disk() {
+        use crate::store::vfs::MemVfs;
+        let mem = MemVfs::new();
+        let path = std::path::Path::new("/mem/basic.pages");
+        {
+            let mut p = Pager::create_with(&mem, path, 4).unwrap();
+            for i in 0..10u32 {
+                let id = p.allocate().unwrap();
+                p.update(id, |pg| pg.put_u32(0, 1000 + i)).unwrap();
+            }
+            p.flush().unwrap();
+        }
+        let mut p = Pager::open_with(&mem, path, 4).unwrap();
+        assert_eq!(p.num_pages(), 10);
+        for i in 0..10u32 {
+            assert_eq!(p.read(i).unwrap().get_u32(0), 1000 + i);
+        }
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //!   `Mutex<PageCache>` buckets by page id, so concurrent readers on
 //!   different pages rarely contend on the same lock (the shared-cache
 //!   design SQLite/libsql use);
-//! * disk reads use positional I/O (`read_exact_at` on Unix), so no
-//!   seek state is shared between threads at all;
+//! * disk reads use positional I/O (the [`super::vfs`] layer's
+//!   `read_exact_at`, backed by `pread` on Unix), so no seek state is
+//!   shared between threads at all;
 //! * hit/miss/eviction counters and the disk-read counter survive the
 //!   refactor: stats are summed across shards on demand.
 //!
@@ -35,15 +36,15 @@
 //! one page a checkpoint rewrites in place. Snapshot acquisition reads
 //! it fresh from disk via [`SharedPager::read_header_fresh`].
 
-use std::fs::File;
 use std::io;
 use std::path::Path;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::{Mutex, PoisonError};
+use std::sync::{Arc, Mutex, PoisonError};
 
 use super::cache::{CacheStats, PageCache};
 use super::page::{Page, PageId, PAGE_SIZE};
 use super::pager::PageRead;
+use super::vfs::{OpenMode, StdVfs, Vfs, VfsFile};
 
 /// Number of independently-locked cache buckets. Small: the goal is to
 /// let a handful of reader threads miss on different pages without
@@ -71,10 +72,7 @@ pub struct ReadSnapshot {
 /// cache. `Send + Sync`: share it (e.g. behind `std::sync::Arc`) and
 /// read from as many threads as you like via [`SharedPager::reader`].
 pub struct SharedPager {
-    file: File,
-    /// Serializes seek+read on platforms without positional reads.
-    #[cfg(not(unix))]
-    seek_lock: Mutex<()>,
+    file: Arc<dyn VfsFile>,
     /// Pages the backing file held when last checked; grows on demand
     /// (a live writer appends to the same file).
     num_pages: AtomicU32,
@@ -89,15 +87,24 @@ fn lock_shard(shard: &Mutex<PageCache>) -> std::sync::MutexGuard<'_, PageCache> 
 }
 
 impl SharedPager {
-    /// Open a paged file read-only for concurrent access. `cache_pages`
-    /// total LRU frames are split evenly across the lock shards (each
-    /// shard keeps at least one frame).
+    /// Open a paged file read-only for concurrent access on the real
+    /// filesystem (equivalent to [`SharedPager::open_with`] over
+    /// [`StdVfs`]). `cache_pages` total LRU frames are split evenly
+    /// across the lock shards (each shard keeps at least one frame).
     ///
     /// # Errors
     /// Fails when the file cannot be opened or its metadata read.
     pub fn open(path: &Path, cache_pages: usize) -> io::Result<SharedPager> {
-        let file = File::open(path)?;
-        let num_pages = (file.metadata()?.len() / PAGE_SIZE as u64) as u32;
+        SharedPager::open_with(&StdVfs, path, cache_pages)
+    }
+
+    /// Open a paged file read-only for concurrent access on `vfs`.
+    ///
+    /// # Errors
+    /// Fails when the file cannot be opened or its metadata read.
+    pub fn open_with(vfs: &dyn Vfs, path: &Path, cache_pages: usize) -> io::Result<SharedPager> {
+        let file = vfs.open(path, OpenMode::Read)?;
+        let num_pages = (file.len()? / PAGE_SIZE as u64) as u32;
         // At least two frames per shard: a single-frame shard thrashes on
         // any strided pattern that alternates two pages of one bucket.
         let nshards = CACHE_SHARDS.min((cache_pages / 2).max(1));
@@ -105,8 +112,6 @@ impl SharedPager {
         let shards = (0..nshards).map(|_| Mutex::new(PageCache::new(per_shard))).collect();
         Ok(SharedPager {
             file,
-            #[cfg(not(unix))]
-            seek_lock: Mutex::new(()),
             num_pages: AtomicU32::new(num_pages),
             shards,
             disk_reads: AtomicU64::new(0),
@@ -160,7 +165,7 @@ impl SharedPager {
         if id < self.num_pages.load(Ordering::Acquire) {
             return Ok(true);
         }
-        let pages = (self.file.metadata()?.len() / PAGE_SIZE as u64) as u32;
+        let pages = (self.file.len()? / PAGE_SIZE as u64) as u32;
         self.num_pages.fetch_max(pages, Ordering::AcqRel);
         Ok(id < pages)
     }
@@ -168,19 +173,7 @@ impl SharedPager {
     fn read_from_disk(&self, id: PageId) -> io::Result<Page> {
         let offset = id as u64 * PAGE_SIZE as u64;
         let mut buf = vec![0u8; PAGE_SIZE];
-        #[cfg(unix)]
-        {
-            use std::os::unix::fs::FileExt;
-            self.file.read_exact_at(&mut buf, offset)?;
-        }
-        #[cfg(not(unix))]
-        {
-            use std::io::{Read, Seek, SeekFrom};
-            let _guard = self.seek_lock.lock().unwrap_or_else(PoisonError::into_inner);
-            let mut f = &self.file;
-            f.seek(SeekFrom::Start(offset))?;
-            f.read_exact(&mut buf)?;
-        }
+        self.file.read_exact_at(&mut buf, offset)?;
         self.disk_reads.fetch_add(1, Ordering::Relaxed);
         Page::from_vec(buf)
     }

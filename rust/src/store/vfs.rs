@@ -1,0 +1,1120 @@
+//! The virtual filesystem layer: every byte the storage engine reads or
+//! writes goes through the [`Vfs`]/[`VfsFile`] trait pair, so the same
+//! pager/WAL/B+tree code runs over a real filesystem, over memory, or
+//! under deterministic fault injection — SQLite's VFS design (see
+//! libsql's `trait Vfs`) transplanted to this engine.
+//!
+//! Three implementations:
+//!
+//! * [`StdVfs`] — `std::fs`, the default everywhere. Positional I/O
+//!   (`read_exact_at`/`write_all_at` on Unix) lives *here* now, so the
+//!   concurrent [`super::shared::SharedPager`] keeps its seek-free fast
+//!   path and the seek-emulation fallback for non-Unix platforms is
+//!   written once instead of per call site.
+//! * [`MemVfs`] — files are in-memory byte vectors. Unit tests and
+//!   microbenches become disk-free and fast, and a whole store can be
+//!   snapshotted/restored as a `path -> bytes` map.
+//! * [`FaultVfs`] — a deterministic wrapper over any inner [`Vfs`] that
+//!   can fail the Nth write or sync, tear a write at a byte offset, stop
+//!   every later mutation after a chosen operation count ("crash here";
+//!   reads pass through unfaulted), and
+//!   reconstruct **what would be on disk after a crash**: either every
+//!   completed write ([`CrashImage::AllApplied`]), only what was fsynced
+//!   ([`CrashImage::SyncedOnly`]), or a seeded-random subset of the
+//!   unsynced writes ([`FaultVfs::crash_snapshot_subset`], driven by
+//!   [`crate::util::rng::Rng`] so every schedule is replayable).
+//!
+//! The file API is deliberately **positional and `&self`**: no seek
+//! state exists anywhere, so one `Arc<dyn VfsFile>` can serve an
+//! exclusive writer and any number of concurrent readers at once. The
+//! [`VfsCursor`] adapter layers `Read`/`Write`/`Seek` back on top for
+//! stream-shaped consumers (TFRecord framing).
+//!
+//! Fault model (what [`FaultVfs`] asserts about the engine): a write
+//! either fully applies, partially applies (torn), or does not apply; a
+//! file's durable image only advances at a successful `sync`; a crash
+//! preserves the durable image plus an arbitrary subset of later
+//! completed writes. The crash-matrix suite (`rust/tests/crash_matrix.rs`)
+//! drives the append → commit → checkpoint cycle through every such
+//! point and requires recovery to land on exactly a committed prefix.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs::{File, OpenOptions};
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use crate::util::rng::Rng;
+
+/// How a file is opened through a [`Vfs`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpenMode {
+    /// Read-only; the file must exist.
+    Read,
+    /// Read/write; the file must exist (its contents are preserved).
+    ReadWrite,
+    /// Read/write; created empty when missing, contents preserved when
+    /// present.
+    Create,
+    /// Read/write; created empty, truncating any existing contents.
+    CreateTruncate,
+}
+
+/// One open file: positional, seek-free, `&self` I/O. `Send + Sync` so a
+/// single handle can be shared (behind `Arc`) by a writer and any number
+/// of reader threads.
+pub trait VfsFile: Send + Sync {
+    /// Read up to `buf.len()` bytes at `offset`, returning how many were
+    /// read (0 at or past end-of-file).
+    ///
+    /// # Errors
+    /// Any underlying I/O failure.
+    fn read_at(&self, buf: &mut [u8], offset: u64) -> io::Result<usize>;
+
+    /// Write all of `buf` at `offset`, extending the file (zero-filling
+    /// any gap) when the write lands past the current end.
+    ///
+    /// # Errors
+    /// `PermissionDenied` on a read-only handle; otherwise any
+    /// underlying I/O failure — after which the file may hold a torn
+    /// prefix of `buf`.
+    fn write_all_at(&self, buf: &[u8], offset: u64) -> io::Result<()>;
+
+    /// Truncate (or zero-extend) the file to exactly `len` bytes.
+    ///
+    /// # Errors
+    /// `PermissionDenied` on a read-only handle; otherwise any
+    /// underlying I/O failure.
+    fn set_len(&self, len: u64) -> io::Result<()>;
+
+    /// Durability point: flush the file's data to stable storage
+    /// (`fsync`-equivalent). Nothing written is crash-durable until a
+    /// `sync` after it returns `Ok`.
+    ///
+    /// # Errors
+    /// Any underlying I/O failure; on error nothing new is durable.
+    fn sync(&self) -> io::Result<()>;
+
+    /// Current file length in bytes.
+    ///
+    /// # Errors
+    /// Any underlying metadata failure.
+    fn len(&self) -> io::Result<u64>;
+
+    /// Fill `buf` exactly from `offset`.
+    ///
+    /// # Errors
+    /// `UnexpectedEof` when the file ends first; otherwise any
+    /// underlying read failure.
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> io::Result<()> {
+        let mut filled = 0usize;
+        while filled < buf.len() {
+            match self.read_at(&mut buf[filled..], offset + filled as u64)? {
+                0 => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "vfs read past end of file",
+                    ))
+                }
+                n => filled += n,
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A filesystem: opens files and resolves directories. Implementations
+/// must be `Send + Sync`; handles they return are independently
+/// shareable.
+pub trait Vfs: Send + Sync {
+    /// Open `path` in `mode`.
+    ///
+    /// # Errors
+    /// `NotFound` when the file is missing and `mode` does not create;
+    /// otherwise any underlying open failure.
+    fn open(&self, path: &Path, mode: OpenMode) -> io::Result<Arc<dyn VfsFile>>;
+
+    /// Ensure a directory (and its ancestors) exists.
+    ///
+    /// # Errors
+    /// Any underlying failure ([`MemVfs`] never fails: it has no real
+    /// directories).
+    fn create_dir_all(&self, path: &Path) -> io::Result<()>;
+
+    /// List the files directly inside `dir` (full paths, unordered).
+    ///
+    /// # Errors
+    /// Any underlying failure; a directory holding no files is `Ok`
+    /// with an empty list for [`MemVfs`] but may be `NotFound` for a
+    /// [`StdVfs`] directory that does not exist.
+    fn list_dir(&self, dir: &Path) -> io::Result<Vec<PathBuf>>;
+
+    /// Read a whole file.
+    ///
+    /// # Errors
+    /// `NotFound` when missing; otherwise any read failure.
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        read_all(self.open(path, OpenMode::Read)?.as_ref())
+    }
+}
+
+/// Read an entire [`VfsFile`] into memory.
+///
+/// # Errors
+/// Any length or read failure.
+pub fn read_all(file: &dyn VfsFile) -> io::Result<Vec<u8>> {
+    let len = file.len()? as usize;
+    let mut buf = vec![0u8; len];
+    file.read_exact_at(&mut buf, 0)?;
+    Ok(buf)
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+// ---------------------------------------------------------------------------
+// StdVfs
+// ---------------------------------------------------------------------------
+
+/// The real filesystem (`std::fs`), the default for every store and
+/// format constructor. Zero-sized: `&StdVfs` is free to pass around.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StdVfs;
+
+struct StdFile {
+    file: File,
+    writable: bool,
+    /// Serializes seek+read/write emulation on platforms without
+    /// positional file I/O.
+    #[cfg(not(unix))]
+    seek_lock: Mutex<()>,
+}
+
+impl VfsFile for StdFile {
+    fn read_at(&self, buf: &mut [u8], offset: u64) -> io::Result<usize> {
+        #[cfg(unix)]
+        {
+            std::os::unix::fs::FileExt::read_at(&self.file, buf, offset)
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let _guard = lock(&self.seek_lock);
+            let mut f = &self.file;
+            f.seek(SeekFrom::Start(offset))?;
+            f.read(buf)
+        }
+    }
+
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> io::Result<()> {
+        #[cfg(unix)]
+        {
+            std::os::unix::fs::FileExt::read_exact_at(&self.file, buf, offset)
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let _guard = lock(&self.seek_lock);
+            let mut f = &self.file;
+            f.seek(SeekFrom::Start(offset))?;
+            f.read_exact(buf)
+        }
+    }
+
+    fn write_all_at(&self, buf: &[u8], offset: u64) -> io::Result<()> {
+        if !self.writable {
+            return Err(io::Error::new(
+                io::ErrorKind::PermissionDenied,
+                "vfs file opened read-only",
+            ));
+        }
+        #[cfg(unix)]
+        {
+            std::os::unix::fs::FileExt::write_all_at(&self.file, buf, offset)
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Seek, SeekFrom, Write};
+            let _guard = lock(&self.seek_lock);
+            let mut f = &self.file;
+            f.seek(SeekFrom::Start(offset))?;
+            f.write_all(buf)
+        }
+    }
+
+    fn set_len(&self, len: u64) -> io::Result<()> {
+        if !self.writable {
+            return Err(io::Error::new(
+                io::ErrorKind::PermissionDenied,
+                "vfs file opened read-only",
+            ));
+        }
+        self.file.set_len(len)
+    }
+
+    fn sync(&self) -> io::Result<()> {
+        self.file.sync_data()
+    }
+
+    fn len(&self) -> io::Result<u64> {
+        Ok(self.file.metadata()?.len())
+    }
+}
+
+impl Vfs for StdVfs {
+    fn open(&self, path: &Path, mode: OpenMode) -> io::Result<Arc<dyn VfsFile>> {
+        let mut opts = OpenOptions::new();
+        opts.read(true);
+        let writable = match mode {
+            OpenMode::Read => false,
+            OpenMode::ReadWrite => {
+                opts.write(true);
+                true
+            }
+            OpenMode::Create => {
+                opts.write(true).create(true);
+                true
+            }
+            OpenMode::CreateTruncate => {
+                opts.write(true).create(true).truncate(true);
+                true
+            }
+        };
+        Ok(Arc::new(StdFile {
+            file: opts.open(path)?,
+            writable,
+            #[cfg(not(unix))]
+            seek_lock: Mutex::new(()),
+        }))
+    }
+
+    fn create_dir_all(&self, path: &Path) -> io::Result<()> {
+        std::fs::create_dir_all(path)
+    }
+
+    fn list_dir(&self, dir: &Path) -> io::Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            out.push(entry?.path());
+        }
+        Ok(out)
+    }
+
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        std::fs::read(path)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MemVfs
+// ---------------------------------------------------------------------------
+
+/// An in-memory filesystem: each file is a byte vector keyed by its
+/// (verbatim) path. `create_dir_all` is a no-op and `list_dir` filters
+/// file keys by parent path, so path spellings must be consistent —
+/// which they are for every store/format (all paths come from one
+/// `dir.join(name)`).
+#[derive(Default)]
+pub struct MemVfs {
+    files: Mutex<HashMap<PathBuf, Arc<Mutex<Vec<u8>>>>>,
+}
+
+impl MemVfs {
+    /// An empty in-memory filesystem.
+    pub fn new() -> MemVfs {
+        MemVfs::default()
+    }
+
+    /// Build a filesystem from a `path -> bytes` snapshot (e.g. a
+    /// [`FaultVfs`] crash image).
+    pub fn from_map(map: BTreeMap<PathBuf, Vec<u8>>) -> MemVfs {
+        let vfs = MemVfs::new();
+        for (path, bytes) in map {
+            vfs.install(&path, bytes);
+        }
+        vfs
+    }
+
+    /// Create or replace one file's contents.
+    pub fn install(&self, path: &Path, bytes: Vec<u8>) {
+        lock(&self.files).insert(path.to_path_buf(), Arc::new(Mutex::new(bytes)));
+    }
+
+    /// Snapshot every file as a `path -> bytes` map.
+    pub fn dump(&self) -> BTreeMap<PathBuf, Vec<u8>> {
+        lock(&self.files)
+            .iter()
+            .map(|(p, b)| (p.clone(), lock(b).clone()))
+            .collect()
+    }
+
+    /// One file's current bytes, or `None` when it does not exist.
+    pub fn file_bytes(&self, path: &Path) -> Option<Vec<u8>> {
+        lock(&self.files).get(path).map(|b| lock(b).clone())
+    }
+}
+
+struct MemFile {
+    bytes: Arc<Mutex<Vec<u8>>>,
+    writable: bool,
+}
+
+impl VfsFile for MemFile {
+    fn read_at(&self, buf: &mut [u8], offset: u64) -> io::Result<usize> {
+        let bytes = lock(&self.bytes);
+        let len = bytes.len() as u64;
+        if offset >= len {
+            return Ok(0);
+        }
+        let n = buf.len().min((len - offset) as usize);
+        buf[..n].copy_from_slice(&bytes[offset as usize..offset as usize + n]);
+        Ok(n)
+    }
+
+    fn write_all_at(&self, buf: &[u8], offset: u64) -> io::Result<()> {
+        if !self.writable {
+            return Err(io::Error::new(
+                io::ErrorKind::PermissionDenied,
+                "vfs file opened read-only",
+            ));
+        }
+        let mut bytes = lock(&self.bytes);
+        let end = offset as usize + buf.len();
+        if bytes.len() < end {
+            bytes.resize(end, 0); // zero-fill any gap, like a sparse write
+        }
+        bytes[offset as usize..end].copy_from_slice(buf);
+        Ok(())
+    }
+
+    fn set_len(&self, len: u64) -> io::Result<()> {
+        if !self.writable {
+            return Err(io::Error::new(
+                io::ErrorKind::PermissionDenied,
+                "vfs file opened read-only",
+            ));
+        }
+        lock(&self.bytes).resize(len as usize, 0);
+        Ok(())
+    }
+
+    fn sync(&self) -> io::Result<()> {
+        Ok(())
+    }
+
+    fn len(&self) -> io::Result<u64> {
+        Ok(lock(&self.bytes).len() as u64)
+    }
+}
+
+impl Vfs for MemVfs {
+    fn open(&self, path: &Path, mode: OpenMode) -> io::Result<Arc<dyn VfsFile>> {
+        let mut files = lock(&self.files);
+        let existing = files.get(path).cloned();
+        let bytes = match (mode, existing) {
+            (OpenMode::Read | OpenMode::ReadWrite, None) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::NotFound,
+                    format!("no such mem file: {}", path.display()),
+                ))
+            }
+            (OpenMode::CreateTruncate, maybe) => {
+                if let Some(b) = maybe {
+                    lock(&b).clear();
+                    b
+                } else {
+                    let b = Arc::new(Mutex::new(Vec::new()));
+                    files.insert(path.to_path_buf(), b.clone());
+                    b
+                }
+            }
+            (OpenMode::Create, None) => {
+                let b = Arc::new(Mutex::new(Vec::new()));
+                files.insert(path.to_path_buf(), b.clone());
+                b
+            }
+            (_, Some(b)) => b,
+        };
+        Ok(Arc::new(MemFile { bytes, writable: mode != OpenMode::Read }))
+    }
+
+    fn create_dir_all(&self, _path: &Path) -> io::Result<()> {
+        Ok(())
+    }
+
+    fn list_dir(&self, dir: &Path) -> io::Result<Vec<PathBuf>> {
+        Ok(lock(&self.files)
+            .keys()
+            .filter(|p| p.parent() == Some(dir))
+            .cloned()
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// VfsCursor
+// ---------------------------------------------------------------------------
+
+/// `Read`/`Write`/`Seek` over a shared positional [`VfsFile`]: the
+/// adapter that lets stream-shaped consumers (TFRecord framing, buffered
+/// readers/writers) run over any VFS. Each cursor owns its position, so
+/// many cursors can share one file handle without interfering.
+pub struct VfsCursor {
+    file: Arc<dyn VfsFile>,
+    pos: u64,
+}
+
+impl VfsCursor {
+    /// A cursor at offset 0.
+    pub fn new(file: Arc<dyn VfsFile>) -> VfsCursor {
+        VfsCursor::at(file, 0)
+    }
+
+    /// A cursor at an explicit starting offset.
+    pub fn at(file: Arc<dyn VfsFile>, pos: u64) -> VfsCursor {
+        VfsCursor { file, pos }
+    }
+
+    /// Current byte offset.
+    pub fn position(&self) -> u64 {
+        self.pos
+    }
+}
+
+impl io::Read for VfsCursor {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let n = self.file.read_at(buf, self.pos)?;
+        self.pos += n as u64;
+        Ok(n)
+    }
+}
+
+impl io::Write for VfsCursor {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.file.write_all_at(buf, self.pos)?;
+        self.pos += buf.len() as u64;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+impl io::Seek for VfsCursor {
+    fn seek(&mut self, pos: io::SeekFrom) -> io::Result<u64> {
+        let next = match pos {
+            io::SeekFrom::Start(o) => Some(o),
+            io::SeekFrom::Current(d) => self.pos.checked_add_signed(d),
+            io::SeekFrom::End(d) => self.file.len()?.checked_add_signed(d),
+        };
+        match next {
+            Some(o) => {
+                self.pos = o;
+                Ok(o)
+            }
+            None => Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "vfs cursor seek to a negative offset",
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FaultVfs
+// ---------------------------------------------------------------------------
+
+/// A deterministic fault schedule. Write and sync attempts are counted
+/// globally (1-based) across all files of the [`FaultVfs`], in the order
+/// the engine issues them — single-writer stores issue a deterministic
+/// sequence, so "the 7th write" names the same call site on every run.
+/// `set_len` and a truncating open ([`OpenMode::CreateTruncate`]) count
+/// as writes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultPlan {
+    /// Stop the world after this many mutations (writes + truncates +
+    /// syncs) have *completed*: every later mutation fails with a
+    /// "simulated crash" error, freezing the disk image for inspection.
+    pub crash_after_ops: Option<u64>,
+    /// Fail the Nth write attempt cleanly (no bytes applied).
+    pub fail_write: Option<u64>,
+    /// Tear the Nth write attempt: apply only the first `.1` bytes,
+    /// then fail.
+    pub torn_write: Option<(u64, usize)>,
+    /// Fail the Nth sync attempt (the file's durable image does not
+    /// advance).
+    pub fail_sync: Option<u64>,
+}
+
+/// Which disk image [`FaultVfs::crash_snapshot`] reconstructs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashImage {
+    /// Every completed write survives the crash (the kernel flushed its
+    /// page cache just in time).
+    AllApplied,
+    /// Only fsynced state survives (the kernel dropped everything the
+    /// engine had not made durable) — the harshest legal image.
+    SyncedOnly,
+}
+
+#[derive(Clone)]
+enum PendingOp {
+    Write { offset: u64, bytes: Vec<u8> },
+    SetLen(u64),
+}
+
+fn apply_op(image: &mut Vec<u8>, op: &PendingOp) {
+    match op {
+        PendingOp::Write { offset, bytes } => {
+            let end = *offset as usize + bytes.len();
+            if image.len() < end {
+                image.resize(end, 0);
+            }
+            image[*offset as usize..end].copy_from_slice(bytes);
+        }
+        PendingOp::SetLen(len) => image.resize(*len as usize, 0),
+    }
+}
+
+#[derive(Clone, Default)]
+struct FileTrack {
+    /// The durable image as of the file's last successful sync. `None`
+    /// means the file has never been durably synced at all — it was
+    /// created this session and a crash may leave it missing entirely,
+    /// so the fsynced-only crash image omits it.
+    synced: Option<Vec<u8>>,
+    /// Completed mutations since then, in order.
+    pending: Vec<PendingOp>,
+}
+
+#[derive(Default)]
+struct FaultState {
+    plan: FaultPlan,
+    ops_done: u64,
+    writes_attempted: u64,
+    syncs_attempted: u64,
+    files: HashMap<PathBuf, FileTrack>,
+}
+
+impl FaultState {
+    fn crashed(&self) -> bool {
+        matches!(self.plan.crash_after_ops, Some(c) if self.ops_done >= c)
+    }
+
+    /// The shared gate for every write-class mutation (byte writes,
+    /// truncations, truncating opens): enforces the crash freeze, counts
+    /// the attempt, and injects a scheduled clean failure. Returns the
+    /// 1-based attempt number so byte-level faults (tearing) can match
+    /// against it.
+    fn begin_write(&mut self, what: &str) -> io::Result<u64> {
+        if self.crashed() {
+            return Err(crash_error());
+        }
+        self.writes_attempted += 1;
+        let n = self.writes_attempted;
+        if self.plan.fail_write == Some(n) {
+            return Err(io::Error::new(
+                io::ErrorKind::Other,
+                format!("injected failure of write {n} ({what})"),
+            ));
+        }
+        Ok(n)
+    }
+
+    /// The gate for sync attempts: crash freeze + scheduled failure.
+    fn begin_sync(&mut self) -> io::Result<u64> {
+        if self.crashed() {
+            return Err(crash_error());
+        }
+        self.syncs_attempted += 1;
+        let n = self.syncs_attempted;
+        if self.plan.fail_sync == Some(n) {
+            return Err(io::Error::new(
+                io::ErrorKind::Other,
+                format!("injected failure of sync {n}"),
+            ));
+        }
+        Ok(n)
+    }
+}
+
+fn crash_error() -> io::Error {
+    io::Error::new(io::ErrorKind::Other, "simulated crash: fault schedule stopped I/O")
+}
+
+/// Deterministic fault injection over any inner [`Vfs`] (typically
+/// [`MemVfs`]). Clone handles share one schedule and one crash image.
+#[derive(Clone)]
+pub struct FaultVfs {
+    inner: Arc<dyn Vfs>,
+    state: Arc<Mutex<FaultState>>,
+}
+
+impl FaultVfs {
+    /// Wrap `inner` with an empty (fault-free) schedule.
+    pub fn new(inner: Arc<dyn Vfs>) -> FaultVfs {
+        FaultVfs { inner, state: Arc::new(Mutex::new(FaultState::default())) }
+    }
+
+    /// Install a fault schedule (counters keep running; plans can be
+    /// swapped mid-workload to arm a fault "from here on").
+    pub fn set_plan(&self, plan: FaultPlan) {
+        lock(&self.state).plan = plan;
+    }
+
+    /// Disarm every fault.
+    pub fn disarm(&self) {
+        self.set_plan(FaultPlan::default());
+    }
+
+    /// Mutations (writes + truncates + syncs) completed so far.
+    pub fn ops_done(&self) -> u64 {
+        lock(&self.state).ops_done
+    }
+
+    /// Write attempts so far (including failed/torn ones).
+    pub fn writes_attempted(&self) -> u64 {
+        lock(&self.state).writes_attempted
+    }
+
+    /// Sync attempts so far (including failed ones).
+    pub fn syncs_attempted(&self) -> u64 {
+        lock(&self.state).syncs_attempted
+    }
+
+    /// Reconstruct the post-crash disk: every tracked file's bytes under
+    /// the chosen [`CrashImage`]. A file created this session but never
+    /// fsynced is absent from the [`CrashImage::SyncedOnly`] image — a
+    /// real crash may leave its directory entry unwritten.
+    pub fn crash_snapshot(&self, image: CrashImage) -> BTreeMap<PathBuf, Vec<u8>> {
+        let st = lock(&self.state);
+        st.files
+            .iter()
+            .filter_map(|(path, track)| {
+                let mut bytes = match (&track.synced, image) {
+                    (Some(b), _) => b.clone(),
+                    (None, CrashImage::AllApplied) => Vec::new(),
+                    (None, CrashImage::SyncedOnly) => return None,
+                };
+                if image == CrashImage::AllApplied {
+                    for op in &track.pending {
+                        apply_op(&mut bytes, op);
+                    }
+                }
+                Some((path.clone(), bytes))
+            })
+            .collect()
+    }
+
+    /// Reconstruct a post-crash disk where each un-synced mutation —
+    /// including the creation of a never-synced file — independently
+    /// survived with probability ½: the "kernel flushed some pages, not
+    /// others" image. Seeded: the same `rng` state always yields the
+    /// same disk.
+    pub fn crash_snapshot_subset(&self, rng: &mut Rng) -> BTreeMap<PathBuf, Vec<u8>> {
+        let st = lock(&self.state);
+        let mut paths: Vec<&PathBuf> = st.files.keys().collect();
+        paths.sort(); // HashMap order must not reach the rng stream
+        let mut out = BTreeMap::new();
+        for path in paths {
+            let track = &st.files[path];
+            let mut bytes = match &track.synced {
+                Some(b) => b.clone(),
+                // Creation itself is an un-synced mutation: the file may
+                // or may not have made it to the directory.
+                None if rng.bernoulli(0.5) => Vec::new(),
+                None => continue,
+            };
+            for op in &track.pending {
+                if rng.bernoulli(0.5) {
+                    apply_op(&mut bytes, op);
+                }
+            }
+            out.insert(path.clone(), bytes);
+        }
+        out
+    }
+}
+
+struct FaultFile {
+    path: PathBuf,
+    inner: Arc<dyn VfsFile>,
+    state: Arc<Mutex<FaultState>>,
+}
+
+impl FaultFile {
+    fn track<'s>(st: &'s mut FaultState, path: &Path) -> &'s mut FileTrack {
+        st.files.entry(path.to_path_buf()).or_default()
+    }
+}
+
+impl VfsFile for FaultFile {
+    fn read_at(&self, buf: &mut [u8], offset: u64) -> io::Result<usize> {
+        self.inner.read_at(buf, offset) // reads are never faulted
+    }
+
+    fn write_all_at(&self, buf: &[u8], offset: u64) -> io::Result<()> {
+        let mut st = lock(&self.state);
+        let n = st.begin_write("write")?;
+        if let Some((wn, cut)) = st.plan.torn_write {
+            if wn == n {
+                let torn = &buf[..cut.min(buf.len())];
+                self.inner.write_all_at(torn, offset)?;
+                Self::track(&mut st, &self.path)
+                    .pending
+                    .push(PendingOp::Write { offset, bytes: torn.to_vec() });
+                return Err(io::Error::new(
+                    io::ErrorKind::Other,
+                    format!("injected tear of write {n} after {} bytes", torn.len()),
+                ));
+            }
+        }
+        self.inner.write_all_at(buf, offset)?;
+        Self::track(&mut st, &self.path)
+            .pending
+            .push(PendingOp::Write { offset, bytes: buf.to_vec() });
+        st.ops_done += 1;
+        Ok(())
+    }
+
+    fn set_len(&self, len: u64) -> io::Result<()> {
+        let mut st = lock(&self.state);
+        st.begin_write("set_len")?;
+        self.inner.set_len(len)?;
+        Self::track(&mut st, &self.path).pending.push(PendingOp::SetLen(len));
+        st.ops_done += 1;
+        Ok(())
+    }
+
+    fn sync(&self) -> io::Result<()> {
+        let mut st = lock(&self.state);
+        st.begin_sync()?;
+        self.inner.sync()?;
+        let track = Self::track(&mut st, &self.path);
+        let mut image = track.synced.take().unwrap_or_default();
+        for op in track.pending.drain(..) {
+            apply_op(&mut image, &op);
+        }
+        track.synced = Some(image);
+        st.ops_done += 1;
+        Ok(())
+    }
+
+    fn len(&self) -> io::Result<u64> {
+        self.inner.len()
+    }
+}
+
+impl Vfs for FaultVfs {
+    fn open(&self, path: &Path, mode: OpenMode) -> io::Result<Arc<dyn VfsFile>> {
+        if mode == OpenMode::CreateTruncate {
+            // Creation-truncation is a mutation like any other: it obeys
+            // the crash freeze, counts as a write (so the crash matrix
+            // enumerates the store-creation window too), and stays
+            // *pending* until a sync — a crash right after the truncate
+            // can still resurface the old durable bytes.
+            lock(&self.state).begin_write("open-truncate")?;
+            // Capture the pre-truncation durable image for files this
+            // FaultVfs has not seen yet (the truncating open below would
+            // destroy it); a file that did not exist has no durable image
+            // to fall back to at all. Already-tracked files keep their
+            // track, so reading the prior bytes would be wasted work.
+            let tracked = lock(&self.state).files.contains_key(path);
+            let prior = if tracked {
+                None // unused: or_insert_with below will not run
+            } else {
+                match self.inner.read(path) {
+                    Ok(bytes) => Some(bytes),
+                    Err(e) if e.kind() == io::ErrorKind::NotFound => None,
+                    Err(e) => return Err(e),
+                }
+            };
+            let inner = self.inner.open(path, mode)?;
+            let mut st = lock(&self.state);
+            st.files
+                .entry(path.to_path_buf())
+                .or_insert_with(|| FileTrack { synced: prior, pending: Vec::new() })
+                .pending
+                .push(PendingOp::SetLen(0));
+            st.ops_done += 1;
+            return Ok(Arc::new(FaultFile {
+                path: path.to_path_buf(),
+                inner,
+                state: self.state.clone(),
+            }));
+        }
+        if mode == OpenMode::Create && !lock(&self.state).files.contains_key(path) {
+            // Creating a missing file is a mutation too: gate it, and
+            // track it as never-durably-synced (a crash may leave its
+            // directory entry unwritten). Opening an existing file with
+            // `Create` mutates nothing and passes straight through below.
+            let missing = match self.inner.open(path, OpenMode::Read) {
+                Ok(_) => false,
+                Err(e) if e.kind() == io::ErrorKind::NotFound => true,
+                Err(e) => return Err(e),
+            };
+            if missing {
+                lock(&self.state).begin_write("open-create")?;
+                let inner = self.inner.open(path, mode)?;
+                let mut st = lock(&self.state);
+                st.files.insert(path.to_path_buf(), FileTrack::default());
+                st.ops_done += 1;
+                return Ok(Arc::new(FaultFile {
+                    path: path.to_path_buf(),
+                    inner,
+                    state: self.state.clone(),
+                }));
+            }
+        }
+        let inner = self.inner.open(path, mode)?;
+        let mut st = lock(&self.state);
+        if !st.files.contains_key(path) {
+            let synced = Some(read_all(inner.as_ref())?);
+            st.files
+                .insert(path.to_path_buf(), FileTrack { synced, pending: Vec::new() });
+        }
+        Ok(Arc::new(FaultFile {
+            path: path.to_path_buf(),
+            inner,
+            state: self.state.clone(),
+        }))
+    }
+
+    fn create_dir_all(&self, path: &Path) -> io::Result<()> {
+        self.inner.create_dir_all(path)
+    }
+
+    fn list_dir(&self, dir: &Path) -> io::Result<Vec<PathBuf>> {
+        self.inner.list_dir(dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{check, gen_bytes, prop_assert_eq};
+    use std::io::{Read, Seek, SeekFrom, Write};
+
+    fn p(s: &str) -> PathBuf {
+        PathBuf::from(s)
+    }
+
+    #[test]
+    fn mem_modes_and_roundtrip() {
+        let vfs = MemVfs::new();
+        assert!(vfs.open(&p("/m/a"), OpenMode::Read).is_err(), "missing file");
+        assert!(vfs.open(&p("/m/a"), OpenMode::ReadWrite).is_err(), "missing file");
+        let f = vfs.open(&p("/m/a"), OpenMode::Create).unwrap();
+        f.write_all_at(b"hello", 0).unwrap();
+        assert_eq!(f.len().unwrap(), 5);
+        // Create preserves; CreateTruncate wipes.
+        let g = vfs.open(&p("/m/a"), OpenMode::Create).unwrap();
+        assert_eq!(g.len().unwrap(), 5);
+        let t = vfs.open(&p("/m/a"), OpenMode::CreateTruncate).unwrap();
+        assert_eq!(t.len().unwrap(), 0);
+        t.write_all_at(b"xy", 0).unwrap();
+        // Read mode reads but rejects mutation.
+        let r = vfs.open(&p("/m/a"), OpenMode::Read).unwrap();
+        let mut buf = [0u8; 2];
+        r.read_exact_at(&mut buf, 0).unwrap();
+        assert_eq!(&buf, b"xy");
+        assert!(r.write_all_at(b"no", 0).is_err());
+        assert!(r.set_len(0).is_err());
+    }
+
+    #[test]
+    fn mem_gap_write_zero_fills_like_std() {
+        let dir = std::env::temp_dir().join("grouper_vfs_gap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let std_path = dir.join("gap.bin");
+        let std_vfs = StdVfs;
+        let mem_vfs = MemVfs::new();
+        let sf = std_vfs.open(&std_path, OpenMode::CreateTruncate).unwrap();
+        let mf = mem_vfs.open(&p("/gap.bin"), OpenMode::CreateTruncate).unwrap();
+        for f in [&sf, &mf] {
+            f.write_all_at(b"ab", 0).unwrap();
+            f.write_all_at(b"z", 10).unwrap(); // gap: bytes 2..10 must be zero
+            f.set_len(8).unwrap(); // truncate below the far write
+            f.set_len(12).unwrap(); // zero-extend back out
+        }
+        let got_std = read_all(sf.as_ref()).unwrap();
+        let got_mem = read_all(mf.as_ref()).unwrap();
+        assert_eq!(got_std, got_mem);
+        assert_eq!(&got_mem[..2], b"ab");
+        assert!(got_mem[2..].iter().all(|b| *b == 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn property_std_and_mem_agree_on_random_op_sequences() {
+        let dir = std::env::temp_dir().join("grouper_vfs_prop_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        check(20, |rng| {
+            let std_path = dir.join(format!("f{}.bin", rng.next_u32()));
+            let sf = StdVfs.open(&std_path, OpenMode::CreateTruncate).unwrap();
+            let mem = MemVfs::new();
+            let mf = mem.open(&p("/f.bin"), OpenMode::CreateTruncate).unwrap();
+            for _ in 0..12 {
+                match rng.gen_range(3) {
+                    0 => {
+                        let bytes = gen_bytes(rng, 1..=40);
+                        let off = rng.gen_range(200);
+                        sf.write_all_at(&bytes, off).unwrap();
+                        mf.write_all_at(&bytes, off).unwrap();
+                    }
+                    1 => {
+                        let len = rng.gen_range(250);
+                        sf.set_len(len).unwrap();
+                        mf.set_len(len).unwrap();
+                    }
+                    _ => {
+                        sf.sync().unwrap();
+                        mf.sync().unwrap();
+                    }
+                }
+            }
+            let a = read_all(sf.as_ref()).unwrap();
+            let b = read_all(mf.as_ref()).unwrap();
+            std::fs::remove_file(&std_path).ok();
+            prop_assert_eq(a, b, "std vs mem file image")
+        });
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn list_dir_filters_by_parent() {
+        let vfs = MemVfs::new();
+        vfs.install(&p("/d/a.bin"), vec![1]);
+        vfs.install(&p("/d/b.bin"), vec![2]);
+        vfs.install(&p("/d/sub/c.bin"), vec![3]);
+        vfs.install(&p("/other/d.bin"), vec![4]);
+        let mut got = vfs.list_dir(&p("/d")).unwrap();
+        got.sort();
+        assert_eq!(got, vec![p("/d/a.bin"), p("/d/b.bin")]);
+    }
+
+    #[test]
+    fn cursor_read_write_seek() {
+        let vfs = MemVfs::new();
+        let f = vfs.open(&p("/c.bin"), OpenMode::Create).unwrap();
+        let mut w = VfsCursor::new(f.clone());
+        w.write_all(b"0123456789").unwrap();
+        assert_eq!(w.position(), 10);
+        let mut r = VfsCursor::new(f);
+        let mut buf = [0u8; 4];
+        r.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"0123");
+        r.seek(SeekFrom::Start(6)).unwrap();
+        r.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"6789");
+        assert_eq!(r.read(&mut buf).unwrap(), 0, "clean EOF");
+        assert_eq!(r.seek(SeekFrom::End(-2)).unwrap(), 8);
+        assert_eq!(r.seek(SeekFrom::Current(1)).unwrap(), 9);
+        assert!(r.seek(SeekFrom::Current(-100)).is_err(), "negative offset");
+    }
+
+    fn fault_over_mem() -> (FaultVfs, Arc<dyn VfsFile>) {
+        let fv = FaultVfs::new(Arc::new(MemVfs::new()));
+        let f = fv.open(&p("/f.bin"), OpenMode::Create).unwrap();
+        (fv, f)
+    }
+
+    #[test]
+    fn fault_fails_exactly_the_nth_write() {
+        let (fv, f) = fault_over_mem();
+        let writes = fv.writes_attempted(); // creating the file counted too
+        let ops = fv.ops_done();
+        fv.set_plan(FaultPlan { fail_write: Some(writes + 2), ..Default::default() });
+        f.write_all_at(b"one", 0).unwrap();
+        assert!(f.write_all_at(b"two", 3).is_err(), "2nd write must fail");
+        f.write_all_at(b"two", 3).unwrap(); // 3rd attempt passes
+        assert_eq!(read_all(f.as_ref()).unwrap(), b"onetwo");
+        assert_eq!(fv.writes_attempted(), writes + 3);
+        assert_eq!(fv.ops_done(), ops + 2, "the failed write completed nothing");
+    }
+
+    #[test]
+    fn fault_tears_a_write_at_a_byte_offset() {
+        let (fv, f) = fault_over_mem();
+        fv.set_plan(FaultPlan {
+            torn_write: Some((fv.writes_attempted() + 1, 4)),
+            ..Default::default()
+        });
+        assert!(f.write_all_at(b"0123456789", 0).is_err());
+        assert_eq!(read_all(f.as_ref()).unwrap(), b"0123", "only the torn prefix lands");
+    }
+
+    #[test]
+    fn sync_failure_keeps_the_durable_image_behind() {
+        let (fv, f) = fault_over_mem();
+        f.write_all_at(b"durable", 0).unwrap();
+        f.sync().unwrap();
+        f.write_all_at(b"volatile", 7).unwrap();
+        fv.set_plan(FaultPlan { fail_sync: Some(2), ..Default::default() });
+        assert!(f.sync().is_err(), "2nd sync must fail");
+        let synced = fv.crash_snapshot(CrashImage::SyncedOnly);
+        assert_eq!(synced[&p("/f.bin")], b"durable".to_vec());
+        let all = fv.crash_snapshot(CrashImage::AllApplied);
+        assert_eq!(all[&p("/f.bin")], b"durablevolatile".to_vec());
+        // A later successful sync advances the durable image.
+        fv.disarm();
+        f.sync().unwrap();
+        let synced = fv.crash_snapshot(CrashImage::SyncedOnly);
+        assert_eq!(synced[&p("/f.bin")], b"durablevolatile".to_vec());
+    }
+
+    #[test]
+    fn crash_after_ops_freezes_the_disk() {
+        let (fv, f) = fault_over_mem();
+        fv.set_plan(FaultPlan {
+            crash_after_ops: Some(fv.ops_done() + 2),
+            ..Default::default()
+        });
+        f.write_all_at(b"a", 0).unwrap();
+        f.write_all_at(b"b", 1).unwrap();
+        assert!(f.write_all_at(b"c", 2).is_err(), "crashed: writes stop");
+        assert!(f.sync().is_err(), "crashed: syncs stop");
+        assert!(f.set_len(0).is_err(), "crashed: truncates stop");
+        let all = fv.crash_snapshot(CrashImage::AllApplied);
+        assert_eq!(all[&p("/f.bin")], b"ab".to_vec());
+        // Never synced: a crash may have lost the file entirely, so the
+        // fsynced-only image omits it.
+        let synced = fv.crash_snapshot(CrashImage::SyncedOnly);
+        assert!(!synced.contains_key(&p("/f.bin")));
+        // The freeze extends to creating/truncating new files.
+        assert!(fv.open(&p("/new.bin"), OpenMode::Create).is_err());
+        assert!(fv.open(&p("/new2.bin"), OpenMode::CreateTruncate).is_err());
+    }
+
+    #[test]
+    fn subset_snapshot_is_seeded_and_deterministic() {
+        let build = || {
+            let (fv, f) = fault_over_mem();
+            f.write_all_at(b"base", 0).unwrap();
+            f.sync().unwrap();
+            for i in 0..6u8 {
+                f.write_all_at(&[b'0' + i], 4 + i as u64).unwrap();
+            }
+            fv
+        };
+        let a = build().crash_snapshot_subset(&mut Rng::new(9));
+        let b = build().crash_snapshot_subset(&mut Rng::new(9));
+        assert_eq!(a, b, "same seed, same crash image");
+        let c = build().crash_snapshot_subset(&mut Rng::new(10));
+        // The synced prefix always survives regardless of the subset.
+        assert!(c[&p("/f.bin")].starts_with(b"base"));
+    }
+
+    #[test]
+    fn vfs_types_are_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<StdVfs>();
+        assert_send_sync::<MemVfs>();
+        assert_send_sync::<FaultVfs>();
+        assert_send_sync::<VfsCursor>();
+        assert_send_sync::<Arc<dyn Vfs>>();
+        assert_send_sync::<Arc<dyn VfsFile>>();
+    }
+}

@@ -17,11 +17,16 @@
 //! valid frame. A log is bounded by one checkpoint interval, so replay
 //! reads it whole.
 
-use std::fs::{File, OpenOptions};
-use std::io::{self, BufWriter, Seek, SeekFrom, Write};
+use std::io;
 use std::path::Path;
+use std::sync::Arc;
 
+use super::vfs::{OpenMode, StdVfs, Vfs, VfsFile};
 use crate::records::crc32c::{crc32c, masked_crc32c, unmask};
+
+/// Appends are buffered in memory and written out in chunks of at least
+/// this size (or at [`WalWriter::commit`]/[`WalWriter::reset`]).
+const WAL_FLUSH_BYTES: usize = 64 * 1024;
 
 /// What [`replay`] found.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -42,9 +47,21 @@ pub struct ReplayReport {
 /// errors; torn/corrupt tails end the scan without erroring.
 pub fn replay(
     path: &Path,
+    f: impl FnMut(&[u8]) -> io::Result<()>,
+) -> io::Result<ReplayReport> {
+    replay_with(&StdVfs, path, f)
+}
+
+/// [`replay`] over an explicit [`Vfs`].
+///
+/// # Errors
+/// Same conditions as [`replay`].
+pub fn replay_with(
+    vfs: &dyn Vfs,
+    path: &Path,
     mut f: impl FnMut(&[u8]) -> io::Result<()>,
 ) -> io::Result<ReplayReport> {
-    let data = match std::fs::read(path) {
+    let data = match vfs.read(path) {
         Ok(d) => d,
         Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(ReplayReport::default()),
         Err(e) => return Err(e),
@@ -78,67 +95,125 @@ pub fn replay(
 /// # Errors
 /// Fails only on a real I/O error; a missing or torn log is `Ok(false)`.
 pub fn has_valid_records(path: &Path) -> io::Result<bool> {
-    use std::io::Read;
-    let mut f = match File::open(path) {
+    has_valid_records_with(&StdVfs, path)
+}
+
+/// [`has_valid_records`] over an explicit [`Vfs`].
+///
+/// # Errors
+/// Same conditions as [`has_valid_records`].
+pub fn has_valid_records_with(vfs: &dyn Vfs, path: &Path) -> io::Result<bool> {
+    let f = match vfs.open(path, OpenMode::Read) {
         Ok(f) => f,
         Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(false),
         Err(e) => return Err(e),
     };
-    let mut header = [0u8; 8];
-    let mut filled = 0usize;
-    while filled < header.len() {
-        match f.read(&mut header[filled..])? {
-            0 => return Ok(false), // shorter than one frame header
-            n => filled += n,
-        }
+    let file_len = f.len()?;
+    if file_len < 8 {
+        return Ok(false); // shorter than one frame header
     }
+    let mut header = [0u8; 8];
+    f.read_exact_at(&mut header, 0)?;
     let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as u64;
     let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
     // A garbage length (torn header) must not drive a huge allocation.
-    if 8 + len > f.metadata()?.len() {
+    if 8 + len > file_len {
         return Ok(false);
     }
     let mut payload = vec![0u8; len as usize];
-    if f.read_exact(&mut payload).is_err() {
+    if f.read_exact_at(&mut payload, 8).is_err() {
         return Ok(false); // torn first payload
     }
     Ok(unmask(crc) == crc32c(&payload))
 }
 
-/// Appender over a log file. Appends are buffered; [`WalWriter::commit`]
-/// is the durability point (flush + fsync).
-pub struct WalWriter {
-    w: BufWriter<File>,
+/// A log position captured by [`WalWriter::mark`] for
+/// [`WalWriter::rewind`].
+#[derive(Clone, Copy, Debug)]
+pub struct WalMark {
     len: u64,
     appended: u64,
 }
 
+/// Appender over a log file. Appends are buffered; [`WalWriter::commit`]
+/// is the durability point (flush + fsync).
+pub struct WalWriter {
+    file: Arc<dyn VfsFile>,
+    /// Log bytes already written to the file (valid prefix + flushed
+    /// appends); the next buffer flush lands here.
+    flushed: u64,
+    /// Frames appended but not yet written out.
+    buf: Vec<u8>,
+    appended: u64,
+    /// True when bytes at or past `flushed` may hold garbage (a torn
+    /// chunk) or withdrawn frames that an immediate truncation failed to
+    /// remove. [`WalWriter::commit`] must truncate them away before it
+    /// promises durability, so they can never be fsynced and replayed.
+    dirty_tail: bool,
+}
+
 impl WalWriter {
-    /// Open for appending, truncating everything past `valid_bytes` (as
-    /// reported by [`replay`]) so a torn tail never survives.
+    /// Open for appending on the real filesystem (equivalent to
+    /// [`WalWriter::open_with`] over [`StdVfs`]), truncating everything
+    /// past `valid_bytes` (as reported by [`replay`]) so a torn tail
+    /// never survives.
     ///
     /// # Errors
     /// Fails when the parent directory cannot be created or the file
     /// cannot be opened/truncated.
     pub fn open(path: &Path, valid_bytes: u64) -> io::Result<WalWriter> {
+        WalWriter::open_with(&StdVfs, path, valid_bytes)
+    }
+
+    /// Open for appending on `vfs`, truncating everything past
+    /// `valid_bytes`.
+    ///
+    /// # Errors
+    /// Fails when the parent directory cannot be created or the file
+    /// cannot be opened/truncated.
+    pub fn open_with(vfs: &dyn Vfs, path: &Path, valid_bytes: u64) -> io::Result<WalWriter> {
         if let Some(d) = path.parent() {
-            std::fs::create_dir_all(d)?;
+            vfs.create_dir_all(d)?;
         }
-        let mut file = OpenOptions::new()
-            .read(true)
-            .write(true)
-            .create(true)
-            .open(path)?;
+        let file = vfs.open(path, OpenMode::Create)?;
         file.set_len(valid_bytes)?;
-        file.seek(SeekFrom::Start(valid_bytes))?;
-        Ok(WalWriter { w: BufWriter::new(file), len: valid_bytes, appended: 0 })
+        Ok(WalWriter {
+            file,
+            flushed: valid_bytes,
+            buf: Vec::new(),
+            appended: 0,
+            dirty_tail: false,
+        })
+    }
+
+    /// Write the append buffer out at the current tail. On failure the
+    /// buffer is kept (and `flushed` not advanced), so a retry rewrites
+    /// the same bytes at the same offset; the possibly-torn chunk is
+    /// truncated away immediately (best effort) or at the latest by the
+    /// next [`WalWriter::commit`] — it could contain complete frames
+    /// that a later rollback means to withdraw.
+    fn flush_buf(&mut self) -> io::Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        if let Err(e) = self.file.write_all_at(&self.buf, self.flushed) {
+            if self.file.set_len(self.flushed).is_err() {
+                self.dirty_tail = true;
+            }
+            return Err(e);
+        }
+        self.flushed += self.buf.len() as u64;
+        self.buf.clear();
+        Ok(())
     }
 
     /// Append one frame (buffered).
     ///
     /// # Errors
     /// `InvalidInput` when the payload exceeds the u32 length field;
-    /// otherwise any buffered-write failure.
+    /// otherwise any buffered-write failure. On failure the frame is
+    /// rolled back out of the buffer: an append reported as failed can
+    /// never become durable at a later commit.
     pub fn append(&mut self, payload: &[u8]) -> io::Result<()> {
         if payload.len() > u32::MAX as usize {
             return Err(io::Error::new(
@@ -146,17 +221,68 @@ impl WalWriter {
                 "wal payload exceeds u32 length",
             ));
         }
-        self.w.write_all(&(payload.len() as u32).to_le_bytes())?;
-        self.w.write_all(&masked_crc32c(payload).to_le_bytes())?;
-        self.w.write_all(payload)?;
-        self.len += 8 + payload.len() as u64;
+        let rollback = self.buf.len();
+        self.buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(&masked_crc32c(payload).to_le_bytes());
+        self.buf.extend_from_slice(payload);
         self.appended += 1;
+        if self.buf.len() >= WAL_FLUSH_BYTES {
+            if let Err(e) = self.flush_buf() {
+                // Earlier frames stay queued (their appends were reported
+                // Ok); only this frame is withdrawn. Any torn bytes past
+                // `flushed` are overwritten by the next flush or dropped
+                // as a torn tail at the next open.
+                self.buf.truncate(rollback);
+                self.appended -= 1;
+                return Err(e);
+            }
+        }
         Ok(())
     }
 
     /// Total valid log bytes (including frames appended this session).
     pub fn len_bytes(&self) -> u64 {
-        self.len
+        self.flushed + self.buf.len() as u64
+    }
+
+    /// A log position to [`WalWriter::rewind`] back to. Take it *before*
+    /// appending a frame whose application might still fail.
+    pub fn mark(&self) -> WalMark {
+        WalMark { len: self.len_bytes(), appended: self.appended }
+    }
+
+    /// Rewind the log to `mark`, withdrawing every frame appended after
+    /// it — the store's escape hatch when *applying* a logged operation
+    /// fails: a withdrawn frame can never become durable at a later
+    /// commit, so recovery can never replay an append the caller was
+    /// told failed.
+    ///
+    /// Infallible: frames still in the memory buffer are dropped for
+    /// free; frames a flush already carried into the file are truncated
+    /// away immediately when possible, and otherwise marked as a dirty
+    /// tail that [`WalWriter::commit`] removes before it promises
+    /// anything. (One residual, inherent to a redo-only log: if both the
+    /// truncation here *and* every later commit fail, and the process
+    /// then crashes while the kernel flushes the sick disk's pages
+    /// anyway, recovery will replay the withdrawn frames.)
+    ///
+    /// # Panics
+    /// Debug-asserts that `mark` is not in the future of the log.
+    pub fn rewind(&mut self, mark: WalMark) {
+        debug_assert!(mark.len <= self.len_bytes(), "rewind mark is ahead of the log");
+        if mark.len >= self.flushed {
+            // Everything past the mark is still buffered.
+            self.buf.truncate((mark.len - self.flushed) as usize);
+        } else {
+            // A flush carried frames past the mark into the file: drop
+            // the buffered tail and truncate the file back.
+            self.buf.clear();
+            self.flushed = mark.len;
+            if self.file.set_len(mark.len).is_err() {
+                self.dirty_tail = true;
+            }
+        }
+        self.appended = mark.appended;
     }
 
     /// Frames appended by this writer (not counting pre-existing ones).
@@ -167,25 +293,35 @@ impl WalWriter {
     /// Durability point: flush buffers and fsync.
     ///
     /// # Errors
-    /// Any flush or fsync failure; nothing is durable until it returns
-    /// `Ok`.
+    /// Any truncation, flush or fsync failure; nothing is durable until
+    /// it returns `Ok`.
     pub fn commit(&mut self) -> io::Result<()> {
-        self.w.flush()?;
-        self.w.get_ref().sync_data()
+        if self.dirty_tail {
+            // Garbage or withdrawn frames may sit past the logical tail;
+            // they must never survive into a durability promise.
+            self.file.set_len(self.flushed)?;
+            self.dirty_tail = false;
+        }
+        self.flush_buf()?;
+        self.file.sync()
     }
 
     /// Checkpoint: everything logged is now reflected in the main file —
-    /// drop the log.
+    /// drop the log (including any appends still buffered in memory).
     ///
     /// # Errors
-    /// Any truncation, seek or fsync failure.
+    /// Any truncation or fsync failure.
     pub fn reset(&mut self) -> io::Result<()> {
-        self.w.flush()?;
-        let f = self.w.get_mut();
-        f.set_len(0)?;
-        f.seek(SeekFrom::Start(0))?;
-        f.sync_data()?;
-        self.len = 0;
+        self.buf.clear();
+        self.file.set_len(0)?;
+        // The tail moves the moment the truncation lands — before the
+        // fsync. If the sync below fails and the caller keeps appending,
+        // the next flush must write at offset 0 of the truncated file,
+        // not past a zero-filled gap at the old tail (which replay would
+        // reject as a torn frame, silently losing committed appends).
+        self.flushed = 0;
+        self.dirty_tail = false; // the truncation removed any dirty tail
+        self.file.sync()?;
         Ok(())
     }
 }
@@ -246,7 +382,7 @@ mod tests {
         // Simulate a torn write: half a frame of garbage at the tail.
         {
             use std::io::Write;
-            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
             f.write_all(&[0x44, 0x33, 0x22]).unwrap();
         }
         let (recs, report) = collect(&path);
@@ -309,6 +445,175 @@ mod tests {
         w.commit().unwrap();
         let (recs, _) = collect(&path);
         assert_eq!(recs, vec![b"y".to_vec()]);
+    }
+
+    #[test]
+    fn sync_failure_surfaces_and_nothing_is_durable() {
+        use crate::store::vfs::{CrashImage, FaultPlan, FaultVfs, MemVfs};
+        use std::sync::Arc;
+        let fv = FaultVfs::new(Arc::new(MemVfs::new()));
+        let path = Path::new("/wal/sync.pwal");
+        let mut w = WalWriter::open_with(&fv, path, 0).unwrap();
+        w.append(b"alpha").unwrap();
+        w.append(b"beta").unwrap();
+        fv.set_plan(FaultPlan { fail_sync: Some(fv.syncs_attempted() + 1), ..Default::default() });
+        assert!(w.commit().is_err(), "injected fsync failure must surface");
+        // Crash now: the synced-only image replays ZERO records — a failed
+        // commit promised nothing.
+        let mem = MemVfs::from_map(fv.crash_snapshot(CrashImage::SyncedOnly));
+        let report = replay_with(&mem, path, |_| Ok(())).unwrap();
+        assert_eq!(report.records, 0, "failed commit must not be durable");
+        // Retry succeeds and makes both frames durable.
+        fv.disarm();
+        w.commit().unwrap();
+        let mem = MemVfs::from_map(fv.crash_snapshot(CrashImage::SyncedOnly));
+        let mut got = Vec::new();
+        replay_with(&mem, path, |p| {
+            got.push(p.to_vec());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, vec![b"alpha".to_vec(), b"beta".to_vec()]);
+    }
+
+    #[test]
+    fn rewind_withdraws_frames_buffered_or_already_flushed() {
+        use crate::store::vfs::MemVfs;
+        let mem = MemVfs::new();
+        let path = Path::new("/wal/rewind.pwal");
+        let mut w = WalWriter::open_with(&mem, path, 0).unwrap();
+        w.append(b"keep").unwrap();
+        // Withdraw a frame that is still buffered.
+        let mark = w.mark();
+        w.append(b"drop-buffered").unwrap();
+        w.rewind(mark);
+        w.append(b"keep2").unwrap();
+        w.commit().unwrap();
+        // Withdraw a frame that a flush already carried into the file.
+        let mark = w.mark();
+        w.append(b"drop-flushed").unwrap();
+        w.commit().unwrap();
+        w.rewind(mark);
+        w.append(b"keep3").unwrap();
+        w.commit().unwrap();
+        assert_eq!(w.records_appended(), 3);
+        let mut recs = Vec::new();
+        let report = replay_with(&mem, path, |p| {
+            recs.push(p.to_vec());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(
+            recs,
+            vec![b"keep".to_vec(), b"keep2".to_vec(), b"keep3".to_vec()]
+        );
+        assert_eq!(report.torn_bytes, 0);
+    }
+
+    #[test]
+    fn reset_sync_failure_does_not_strand_the_tail() {
+        // Regression: reset()'s truncation lands but its fsync fails.
+        // Later appends must write at offset 0 of the truncated file,
+        // not past a zero-filled gap at the old tail (replay would stop
+        // at the gap and silently lose committed appends).
+        use crate::store::vfs::{CrashImage, FaultPlan, FaultVfs, MemVfs};
+        use std::sync::Arc;
+        let fv = FaultVfs::new(Arc::new(MemVfs::new()));
+        let path = Path::new("/wal/resetfail.pwal");
+        let mut w = WalWriter::open_with(&fv, path, 0).unwrap();
+        w.append(b"old-frame-one").unwrap();
+        w.append(b"old-frame-two").unwrap();
+        w.commit().unwrap();
+        fv.set_plan(FaultPlan { fail_sync: Some(fv.syncs_attempted() + 1), ..Default::default() });
+        assert!(w.reset().is_err(), "reset's fsync failure must surface");
+        fv.disarm();
+        w.append(b"new").unwrap();
+        w.commit().unwrap();
+        // The new frame is the whole durable log, readable from offset 0.
+        let mem = MemVfs::from_map(fv.crash_snapshot(CrashImage::SyncedOnly));
+        let mut got = Vec::new();
+        replay_with(&mem, path, |p| {
+            got.push(p.to_vec());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, vec![b"new".to_vec()]);
+    }
+
+    #[test]
+    fn torn_flush_is_truncated_immediately_and_a_retry_commits_everything() {
+        use crate::store::vfs::{CrashImage, FaultPlan, FaultVfs, MemVfs};
+        use std::sync::Arc;
+        let fv = FaultVfs::new(Arc::new(MemVfs::new()));
+        let path = Path::new("/wal/torn.pwal");
+        let mut w = WalWriter::open_with(&fv, path, 0).unwrap();
+        w.append(b"first").unwrap(); // frame: 8 + 5 = 13 bytes
+        w.append(b"second").unwrap(); // frame: 8 + 6 = 14 bytes
+        // Tear the commit's buffer write 3 bytes into the second frame.
+        fv.set_plan(FaultPlan {
+            torn_write: Some((fv.writes_attempted() + 1, 16)),
+            ..Default::default()
+        });
+        assert!(w.commit().is_err(), "torn write must surface");
+        // The torn chunk was truncated away on the spot: even if every
+        // completed write survives a crash, nothing of the failed flush
+        // is visible.
+        let mem = MemVfs::from_map(fv.crash_snapshot(CrashImage::AllApplied));
+        let report = replay_with(&mem, path, |_| Ok(())).unwrap();
+        assert_eq!((report.records, report.torn_bytes), (0, 0));
+        // The buffer was kept, so a retried commit rewrites both frames.
+        fv.disarm();
+        w.commit().unwrap();
+        let mem = MemVfs::from_map(fv.crash_snapshot(CrashImage::SyncedOnly));
+        let mut got = Vec::new();
+        replay_with(&mem, path, |p| {
+            got.push(p.to_vec());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, vec![b"first".to_vec(), b"second".to_vec()]);
+    }
+
+    #[test]
+    fn dirty_tail_is_latched_when_cleanup_fails_and_cleared_by_commit() {
+        use crate::store::vfs::{CrashImage, FaultPlan, FaultVfs, MemVfs};
+        use std::sync::Arc;
+        let fv = FaultVfs::new(Arc::new(MemVfs::new()));
+        let path = Path::new("/wal/dirty.pwal");
+        let mut w = WalWriter::open_with(&fv, path, 0).unwrap();
+        w.append(b"first").unwrap(); // frame: 13 bytes
+        w.append(b"second").unwrap(); // frame: 14 bytes
+        // Tear the flush mid-second-frame AND fail the immediate cleanup
+        // truncation, so the torn chunk stays on disk behind the latch.
+        let n = fv.writes_attempted();
+        fv.set_plan(FaultPlan {
+            torn_write: Some((n + 1, 16)),
+            fail_write: Some(n + 2),
+            ..Default::default()
+        });
+        assert!(w.commit().is_err(), "torn write must surface");
+        let mem = MemVfs::from_map(fv.crash_snapshot(CrashImage::AllApplied));
+        let mut got = Vec::new();
+        let report = replay_with(&mem, path, |p| {
+            got.push(p.to_vec());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, vec![b"first".to_vec()], "the torn chunk is an ordinary torn tail");
+        assert_eq!(report.torn_bytes, 3);
+        // A later successful commit first clears the dirty tail, then
+        // rewrites the whole buffer: the log ends clean.
+        fv.disarm();
+        w.commit().unwrap();
+        let mem = MemVfs::from_map(fv.crash_snapshot(CrashImage::SyncedOnly));
+        let mut got = Vec::new();
+        let report = replay_with(&mem, path, |p| {
+            got.push(p.to_vec());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, vec![b"first".to_vec(), b"second".to_vec()]);
+        assert_eq!(report.torn_bytes, 0);
     }
 
     /// Property: replay of a randomly truncated log is exactly the longest

@@ -1,13 +1,19 @@
 //! Integration: the three dataset formats must expose identical logical
 //! content (same groups, same per-group example multisets) for the same
 //! partition — Table 2's columns differ in *cost*, never in *data*.
+//!
+//! The hierarchical store builds and reads over [`MemVfs`] (its layout is
+//! its own; nothing here tests on-disk behavior), while streaming and
+//! in-memory read the pipeline materialization from a tempdir that is
+//! removed at the end — the old helpers leaked one per run.
 
 use std::collections::HashMap;
 
 use grouper::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
-use grouper::formats::{HierarchicalReader, HierarchicalStore, InMemoryDataset};
 use grouper::formats::streaming::{StreamingConfig, StreamingDataset};
+use grouper::formats::{HierarchicalReader, HierarchicalStore, InMemoryDataset};
 use grouper::pipeline::{run_partition, FeatureKey, PartitionOptions};
+use grouper::store::vfs::MemVfs;
 
 fn work_dir(name: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join("grouper_fmt_equiv").join(name);
@@ -39,9 +45,10 @@ fn all_three_formats_agree() {
         &PartitionOptions { num_shards: 3, num_workers: 2, ..Default::default() },
     )
     .unwrap();
-    // Hierarchical builds its own arrival-order layout.
-    let hdir = work_dir("agree_hier");
-    HierarchicalStore::build(&ds, &p, &hdir, "data", 3).unwrap();
+    // Hierarchical builds its own arrival-order layout — disk-free.
+    let hvfs = MemVfs::new();
+    let hdir = std::path::PathBuf::from("/fmt_equiv/agree_hier");
+    HierarchicalStore::build_with(&hvfs, &ds, &p, &hdir, "data", 3).unwrap();
 
     // Collect per-group multisets from each format.
     let mut from_stream: Groups = HashMap::new();
@@ -62,7 +69,13 @@ fn all_three_formats_agree() {
         );
     }
 
-    let hier = HierarchicalReader::open(&hdir, "data").unwrap();
+    let hier = HierarchicalReader::open_with(
+        &hvfs,
+        &hdir,
+        "data",
+        grouper::formats::btree_index::DEFAULT_CACHE_PAGES,
+    )
+    .unwrap();
     let mut from_hier: Groups = HashMap::new();
     for key in hier.keys() {
         let mut v = Vec::new();
@@ -86,6 +99,7 @@ fn all_three_formats_agree() {
     let c = normalize(from_hier);
     assert_eq!(a, b, "streaming vs in-memory");
     assert_eq!(a, c, "streaming vs hierarchical");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
@@ -114,4 +128,38 @@ fn formats_cover_every_generated_example() {
     for ex in ds.examples() {
         assert!(all.contains(&ex.encode()), "missing example");
     }
+    drop(sd);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hierarchical_store_is_vfs_portable() {
+    // The same hierarchical build over MemVfs and over the real
+    // filesystem must serve identical groups — the backend is a plug.
+    let ds = dataset();
+    let p = FeatureKey::new("domain");
+    let std_dir = work_dir("hier_portable");
+    HierarchicalStore::build(&ds, &p, &std_dir, "h", 4).unwrap();
+    let mvfs = MemVfs::new();
+    let mem_dir = std::path::PathBuf::from("/fmt_equiv/hier_portable");
+    HierarchicalStore::build_with(&mvfs, &ds, &p, &mem_dir, "h", 4).unwrap();
+
+    let on_disk = HierarchicalReader::open(&std_dir, "h").unwrap();
+    let in_mem = HierarchicalReader::open_with(
+        &mvfs,
+        &mem_dir,
+        "h",
+        grouper::formats::btree_index::DEFAULT_CACHE_PAGES,
+    )
+    .unwrap();
+    assert_eq!(on_disk.keys(), in_mem.keys());
+    for key in on_disk.keys() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        assert!(on_disk.visit_group(key, |e| a.push(e.encode())).unwrap());
+        assert!(in_mem.visit_group(key, |e| b.push(e.encode())).unwrap());
+        assert_eq!(a, b, "group {key:?}");
+    }
+    drop(on_disk);
+    std::fs::remove_dir_all(&std_dir).ok();
 }

@@ -2,18 +2,22 @@
 //! through the WAL, crash-simulate (drop without checkpoint), reopen with
 //! recovery, and read every group back through the pager under a
 //! bounded-size LRU cache.
+//!
+//! These tests run disk-free over [`MemVfs`] (none of them is about
+//! on-disk behavior — `rust/tests/crash_matrix.rs` proves a MemVfs store
+//! is byte-identical to a StdVfs one), which also removes the tempdir
+//! litter the old std-fs setup helpers leaked on every run.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 
 use grouper::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
 use grouper::formats::{PagedReader, PagedStore};
+use grouper::store::vfs::{MemVfs, OpenMode, Vfs, VfsFile};
 use grouper::util::rng::Rng;
 
-fn tmp(name: &str) -> std::path::PathBuf {
-    let dir = std::env::temp_dir().join("grouper_paged_it").join(name);
-    let _ = std::fs::remove_dir_all(&dir);
-    std::fs::create_dir_all(&dir).unwrap();
-    dir
+fn mem_dir(name: &str) -> PathBuf {
+    PathBuf::from("/paged_it").join(name)
 }
 
 /// Oracle: group key -> encoded examples in arrival order.
@@ -34,7 +38,8 @@ fn dataset(groups: usize, seed: u64) -> SyntheticTextDataset {
 
 #[test]
 fn acceptance_wal_crash_recover_bounded_cache_roundtrip() {
-    let dir = tmp("acceptance");
+    let vfs = MemVfs::new();
+    let dir = mem_dir("acceptance");
     let ds = dataset(40, 11);
     let want = oracle(&ds);
 
@@ -44,7 +49,7 @@ fn acceptance_wal_crash_recover_bounded_cache_roundtrip() {
     {
         use grouper::pipeline::Partitioner;
         let by_domain = grouper::pipeline::FeatureKey::new("domain");
-        let mut store = PagedStore::create(&dir, "news", 32).unwrap();
+        let mut store = PagedStore::create_with(&vfs, &dir, "news", 32).unwrap();
         let mut n = 0u64;
         for ex in ds.examples() {
             let key = by_domain.key(&ex);
@@ -62,7 +67,7 @@ fn acceptance_wal_crash_recover_bounded_cache_roundtrip() {
     // 2. Reopen: recovery replays the WAL over the (empty) committed
     //    state. Every append must be back.
     {
-        let mut store = PagedStore::open(&dir, "news", 32).unwrap();
+        let mut store = PagedStore::open_with(&vfs, &dir, "news", 32).unwrap();
         assert_eq!(store.num_examples(), ds.len() as u64);
         assert_eq!(store.num_groups(), 40);
         for (key, want_examples) in &want {
@@ -77,7 +82,7 @@ fn acceptance_wal_crash_recover_bounded_cache_roundtrip() {
     // 3. Read back through the pager with a deliberately tiny LRU cache:
     //    correctness must be independent of cache size, and the bounded
     //    cache must actually evict.
-    let reader = PagedReader::open(&dir, "news", 4).unwrap();
+    let reader = PagedReader::open_with(&vfs, &dir, "news", 4).unwrap();
     assert_eq!(reader.num_groups(), 40);
     let mut order: Vec<Vec<u8>> = reader.keys().to_vec();
     Rng::new(3).shuffle(&mut order);
@@ -97,9 +102,10 @@ fn acceptance_wal_crash_recover_bounded_cache_roundtrip() {
 
 #[test]
 fn torn_wal_tail_loses_only_the_torn_suffix() {
-    let dir = tmp("torn");
+    let vfs = MemVfs::new();
+    let dir = mem_dir("torn");
     {
-        let mut store = PagedStore::create(&dir, "x", 16).unwrap();
+        let mut store = PagedStore::create_with(&vfs, &dir, "x", 16).unwrap();
         for i in 0..30u32 {
             let g = format!("g{}", i % 5);
             store
@@ -111,20 +117,18 @@ fn torn_wal_tail_loses_only_the_torn_suffix() {
     }
     // Tear the WAL: append garbage that looks like a partial frame.
     {
-        use std::io::Write;
-        let mut f = std::fs::OpenOptions::new()
-            .append(true)
-            .open(dir.join("x.pwal"))
-            .unwrap();
-        f.write_all(&[0xDE, 0xAD, 0xBE]).unwrap();
+        let wal = vfs.open(&dir.join("x.pwal"), OpenMode::ReadWrite).unwrap();
+        let end = wal.len().unwrap();
+        wal.write_all_at(&[0xDE, 0xAD, 0xBE], end).unwrap();
     }
-    let mut store = PagedStore::open(&dir, "x", 16).unwrap();
+    let mut store = PagedStore::open_with(&vfs, &dir, "x", 16).unwrap();
     assert_eq!(store.num_examples(), 30, "intact WAL prefix must fully recover");
     // The store remains appendable after recovery-from-torn-tail.
     store.append(b"g0", &grouper::records::Example::text("after")).unwrap();
     store.commit().unwrap();
     store.checkpoint().unwrap();
-    let reader = PagedReader::open(&dir, "x", 16).unwrap();
+    drop(store);
+    let reader = PagedReader::open_with(&vfs, &dir, "x", 16).unwrap();
     assert_eq!(reader.num_examples(), 31);
     let mut texts = Vec::new();
     assert!(reader
@@ -135,15 +139,16 @@ fn torn_wal_tail_loses_only_the_torn_suffix() {
 
 #[test]
 fn reader_on_hot_store_runs_recovery_first() {
-    let dir = tmp("hotjournal");
+    let vfs = MemVfs::new();
+    let dir = mem_dir("hotjournal");
     {
-        let mut store = PagedStore::create(&dir, "x", 16).unwrap();
+        let mut store = PagedStore::create_with(&vfs, &dir, "x", 16).unwrap();
         store.append(b"a", &grouper::records::Example::text("1")).unwrap();
         store.append(b"b", &grouper::records::Example::text("2")).unwrap();
         store.commit().unwrap();
         // No checkpoint: the WAL is "hot".
     }
-    let reader = PagedReader::open(&dir, "x", 16).unwrap();
+    let reader = PagedReader::open_with(&vfs, &dir, "x", 16).unwrap();
     assert_eq!(reader.num_groups(), 2);
     assert_eq!(reader.num_examples(), 2);
     let mut n = 0;
@@ -156,9 +161,11 @@ fn paged_matches_every_other_format_on_the_same_dataset() {
     // Format-equivalence in miniature: the paged store must agree with a
     // straight scan of the base dataset, group by group, like the
     // formats_equivalence suite does for the seed formats.
-    let dir = tmp("equiv");
+    let vfs = MemVfs::new();
+    let dir = mem_dir("equiv");
     let ds = dataset(15, 29);
-    let store = PagedStore::build(
+    let store = PagedStore::build_with(
+        &vfs,
         &ds,
         &grouper::pipeline::FeatureKey::new("domain"),
         &dir,
@@ -169,7 +176,7 @@ fn paged_matches_every_other_format_on_the_same_dataset() {
     assert_eq!(store.num_examples(), ds.len() as u64);
     drop(store);
     let want = oracle(&ds);
-    let reader = PagedReader::open(&dir, "eq", 16).unwrap();
+    let reader = PagedReader::open_with(&vfs, &dir, "eq", 16).unwrap();
     assert_eq!(reader.num_groups(), 15);
     // visit_all covers every group exactly once, in the given order.
     let order = reader.keys().to_vec();
@@ -181,4 +188,33 @@ fn paged_matches_every_other_format_on_the_same_dataset() {
     for (k, v) in &want {
         assert_eq!(per_group.get(k).unwrap(), v);
     }
+}
+
+#[test]
+fn stdvfs_and_memvfs_stores_roundtrip_identically() {
+    // The same append script executed over the real filesystem and over
+    // MemVfs must land on identical logical contents (crash_matrix.rs
+    // checks byte identity; this checks the round-trip through reopen).
+    let ds = dataset(8, 5);
+    let std_dir = std::env::temp_dir().join("grouper_paged_it_parity");
+    let _ = std::fs::remove_dir_all(&std_dir);
+    let part = grouper::pipeline::FeatureKey::new("domain");
+    drop(PagedStore::build(&ds, &part, &std_dir, "p", 16).unwrap());
+    let vfs = MemVfs::new();
+    let dir = mem_dir("parity");
+    drop(PagedStore::build_with(&vfs, &ds, &part, &dir, "p", 16).unwrap());
+
+    let on_disk = PagedReader::open(&std_dir, "p", 16).unwrap();
+    let in_mem = PagedReader::open_with(&vfs, &dir, "p", 16).unwrap();
+    assert_eq!(on_disk.keys(), in_mem.keys());
+    assert_eq!(on_disk.num_examples(), in_mem.num_examples());
+    for key in on_disk.keys() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        assert!(on_disk.visit_group(key, |ex| a.push(ex.encode())).unwrap());
+        assert!(in_mem.visit_group(key, |ex| b.push(ex.encode())).unwrap());
+        assert_eq!(a, b, "group {key:?}");
+    }
+    drop(on_disk);
+    std::fs::remove_dir_all(&std_dir).ok();
 }
