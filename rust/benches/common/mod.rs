@@ -59,6 +59,34 @@ pub fn vocab_for(spec: &DatasetSpec, backend: &dyn ModelBackend) -> WordPiece {
     vb.build(backend.vocab_size())
 }
 
+/// Write a machine-readable bench summary to `results/BENCH_<name>.json`
+/// (hand-rolled JSON — the offline registry has no serde). The CI
+/// `bench-smoke` job uploads these as artifacts, so every push leaves a
+/// perf data point future PRs can diff against.
+///
+/// Schema: `{"bench": <name>, "scale": <GROUPER_BENCH_SCALE>,
+/// "metrics": {<key>: <f64>, ...}}` with keys like
+/// `"fedccnews.paged_iter_s"`.
+pub fn write_bench_json(name: &str, metrics: &[(String, f64)]) {
+    std::fs::create_dir_all("results").unwrap();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\n  \"bench\": \"{name}\",\n  \"scale\": {},\n  \"metrics\": {{\n",
+        scale()
+    ));
+    for (i, (key, value)) in metrics.iter().enumerate() {
+        let sep = if i + 1 == metrics.len() { "" } else { "," };
+        // JSON has no NaN/inf; clamp to null-ish zero rather than emit
+        // an unparsable file.
+        let value = if value.is_finite() { *value } else { 0.0 };
+        out.push_str(&format!("    \"{key}\": {value}{sep}\n"));
+    }
+    out.push_str("  }\n}\n");
+    let path = format!("results/BENCH_{name}.json");
+    std::fs::write(&path, out).unwrap();
+    println!("bench json -> {path}");
+}
+
 /// True when artifacts for `config` exist (benches that need PJRT skip
 /// politely otherwise).
 pub fn have_artifacts(config: &str) -> bool {

@@ -4,6 +4,13 @@
 //! Expected shape: in-memory's peak grows with the dataset; hierarchical
 //! and streaming stay flat (streaming slightly above hierarchical — it
 //! buffers prefetched group extents).
+//!
+//! Table 12b (ours): bytes on disk for the paged store's index under an
+//! append→checkpoint churn workload, before vs after space reclamation
+//! (`compact()`), plus the write-amplification the COW index paid. This
+//! is the free-list story in one row per dataset: without it the
+//! `.pstore` file holds every superseded page ever written; with it the
+//! file ends proportional to live data.
 
 mod common;
 
@@ -37,6 +44,8 @@ fn main() {
         "Table 12 — peak heap while iterating all groups (counting allocator)",
         &["Dataset", "In-Memory", "Hierarchical", "Streaming", "Paged"],
     );
+    // Machine-readable summary for the CI bench-smoke artifact.
+    let mut bench_metrics: Vec<(String, f64)> = Vec::new();
 
     let workloads: Vec<(&str, &dyn BaseDataset, &str)> =
         vec![("cifar100", &cifar, "label"), ("fedccnews", &news, "domain"), ("fedbookco", &book, "book")];
@@ -106,8 +115,83 @@ fn main() {
             bytes(stream_peak),
             bytes(paged_peak),
         ]);
+        bench_metrics.push((format!("{name}.inmemory_peak_bytes"), mem_peak as f64));
+        bench_metrics.push((format!("{name}.paged_peak_bytes"), paged_peak as f64));
     }
     table.print();
     table.write_csv("results/table12_peak_memory.csv").unwrap();
     println!("paper reference (MB): CIFAR-100 156 / 0.40 / 0.74; FedCCnews 1996 / 0.08 / 1.16; FedBookCO 6643 / 0.001 / 0.10 (paged column: ours, bounded by the LRU cache)");
+
+    table12b_reclamation(&mut bench_metrics);
+    common::write_bench_json("table12_memory", &bench_metrics);
+}
+
+/// Table 12b: the append→supersede→checkpoint→compact workload. The
+/// churn count scales with `GROUPER_BENCH_SCALE` like everything else.
+fn table12b_reclamation(bench_metrics: &mut Vec<(String, f64)>) {
+    let mut t = Table::new(
+        "Table 12b — paged index bytes on disk: churn vs after reclaim (compact)",
+        &[
+            "Workload",
+            "live data",
+            "index before",
+            "index after",
+            "reclaimed",
+            "write-amp before",
+            "write-amp after",
+        ],
+    );
+    let dir = common::bench_dir("table12b");
+    let rounds = common::scaled(60) as u32;
+    for (name, groups) in [("churn-small", 8usize), ("churn-wide", 40usize)] {
+        let store_dir = dir.join(name);
+        let _ = std::fs::remove_dir_all(&store_dir);
+        let mut store = PagedStore::create(&store_dir, "r", 32).unwrap();
+        // Append → checkpoint churn: every checkpoint strands the COW'd
+        // path pages; the free list re-absorbs them.
+        for round in 0..rounds {
+            for i in 0..groups as u32 {
+                let text = format!("{name}-{round}-{i}-payloadpayloadpayload");
+                store
+                    .append(format!("g{i}").as_bytes(), &grouper::records::Example::text(&text))
+                    .unwrap();
+            }
+            store.commit().unwrap();
+            store.checkpoint().unwrap();
+        }
+        let before = store.stat();
+        let pages_written_before = store.pages_written();
+        let report = store.compact().unwrap();
+        let after = store.stat();
+        let live_bytes = u64::from(after.live_pages) * grouper::store::PAGE_SIZE as u64;
+        // Write amplification: index pages physically written per live
+        // index page. Churn pays COW copies; compact pays the moves.
+        let amp_before = pages_written_before as f64 / f64::from(after.live_pages.max(1));
+        let amp_after = store.pages_written() as f64 / f64::from(after.live_pages.max(1));
+        t.row(vec![
+            name.into(),
+            bytes(live_bytes as usize),
+            bytes(before.index_bytes as usize),
+            bytes(after.index_bytes as usize),
+            format!(
+                "{} ({:.0}%)",
+                bytes(before.index_bytes.saturating_sub(after.index_bytes) as usize),
+                100.0 * (1.0 - after.index_bytes as f64 / before.index_bytes as f64)
+            ),
+            format!("{amp_before:.1}x"),
+            format!("{amp_after:.1}x"),
+        ]);
+        bench_metrics.push((format!("{name}.index_bytes_before"), before.index_bytes as f64));
+        bench_metrics.push((format!("{name}.index_bytes_after"), after.index_bytes as f64));
+        bench_metrics.push((format!("{name}.free_pages_before"), f64::from(before.free_pages)));
+        bench_metrics.push((format!("{name}.pages_reclaimed"), f64::from(report.pages_reclaimed)));
+        bench_metrics.push((format!("{name}.write_amp_before"), amp_before));
+        bench_metrics.push((format!("{name}.write_amp_after"), amp_after));
+    }
+    t.print();
+    t.write_csv("results/table12b_reclamation.csv").unwrap();
+    println!(
+        "(free-list + compact: the 'after' column is what the store costs at rest; \
+         'before' is what PR-3-era code would have kept forever)"
+    );
 }

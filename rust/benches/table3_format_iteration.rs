@@ -110,6 +110,9 @@ fn main() {
         ],
     );
 
+    // Machine-readable summary for the CI bench-smoke artifact.
+    let mut bench_metrics: Vec<(String, f64)> = Vec::new();
+
     for w in &workloads {
         // Random group visiting order, fixed across formats and trials.
         let index =
@@ -204,6 +207,12 @@ fn main() {
             format!("{stream_time}"),
             format!("{paged_time}"),
         ]);
+        bench_metrics.push((format!("{}.examples", w.name), w.examples as f64));
+        bench_metrics.push((format!("{}.inmemory_iter_s", w.name), mem_time.mean));
+        bench_metrics.push((format!("{}.hierarchical_iter_s", w.name), hier_time.mean));
+        bench_metrics.push((format!("{}.streaming_iter_s", w.name), stream_time.mean));
+        bench_metrics.push((format!("{}.paged_iter_s", w.name), paged_time.mean));
+        bench_metrics.push((format!("{}.paged_iter_8threads_s", w.name), conc[3].mean));
 
         // Storage-model column: counters from the materializations.
         let total_bytes: u64 = index.entries.iter().map(|e| e.bytes).sum();
@@ -256,6 +265,7 @@ fn main() {
     modeled.write_csv("results/table3b_storage_model.csv").unwrap();
     table.write_csv("results/table3_format_iteration.csv").unwrap();
     concurrent.write_csv("results/table3c_concurrent_readers.csv").unwrap();
+    common::write_bench_json("table3_format_iteration", &bench_metrics);
     println!(
         "paper reference (seconds): CIFAR-100 0.078 / 25.1 / 9.9; FedCCnews 0.55 / >7200 / 248; \
          FedBookCO OOM / >7200 / 192 (no paged column — appendable stores are this repo's extension)"

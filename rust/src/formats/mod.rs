@@ -47,5 +47,5 @@ pub mod streaming;
 
 pub use hierarchical::{HierarchicalReader, HierarchicalStore};
 pub use in_memory::InMemoryDataset;
-pub use paged::{PagedReader, PagedStore};
+pub use paged::{CompactReport, PagedReader, PagedStat, PagedStore};
 pub use streaming::{StreamedGroup, StreamingConfig, StreamingDataset};

@@ -34,10 +34,24 @@
 //!
 //! Layout of the `.pstore` header (page 0): magic, B+tree root page,
 //! committed page count, committed row count, durable `.pdata` byte
-//! length, committed group count, checkpoint epoch, and a CRC32C over
-//! the preceding fields. The checksum lets a concurrent reader detect a
-//! torn page-0 read (it races the checkpoint's in-place header write)
-//! and retry, instead of parsing fields from two different epochs.
+//! length, committed group count, checkpoint epoch, free-list trunk
+//! chain head + free page count (see [`crate::store::freelist`]), and a
+//! CRC32C over the preceding fields. The checksum lets a concurrent
+//! reader detect a torn page-0 read (it races the checkpoint's in-place
+//! header write) and retry, instead of parsing fields from two
+//! different epochs.
+//!
+//! **Space reclamation.** Every page the COW index supersedes is freed
+//! into the pager's free list; each checkpoint publishes the frees
+//! (durably, as a linked trunk chain) and later appends *reuse* them
+//! instead of growing the file — epoch-gated so an open [`PagedReader`]
+//! snapshot is never disturbed (the reader pins its epoch in the
+//! process-wide registry, `crate::store::shared::pin_epoch`).
+//! [`PagedStore::compact`] goes further: it migrates live index pages
+//! toward the file head and truncates the freed tail, so the `.pstore`
+//! file shrinks back to (roughly) its live size.
+//! [`PagedStore::stat`]/[`PagedReader::stat`] report live/free/total
+//! pages so callers (and `grouper stats`) can see the garbage ratio.
 //!
 //! Known trade-off: `open` walks the committed index once (O(rows)
 //! sequential leaf scan through the cache) to rebuild per-group counts /
@@ -67,13 +81,14 @@ use crate::records::tfrecord::{RecordReader, RecordWriter};
 use crate::records::Example;
 use crate::store::btree::BTree;
 use crate::store::cache::CacheStats;
-use crate::store::page::{Page, PageId};
+use crate::store::page::{Page, PageId, PAGE_SIZE};
 use crate::store::pager::{PageRead, Pager};
-use crate::store::shared::{ReadSnapshot, SharedPager};
+use crate::store::shared::{self, EpochPin, ReadSnapshot, SharedPager};
 use crate::store::vfs::{OpenMode, StdVfs, Vfs, VfsCursor, VfsFile};
 use crate::store::wal::{self, WalWriter};
 
-const MAGIC: &[u8; 8] = b"GRPPAG01";
+/// Format version 02: version 01 headers had no free-list fields.
+const MAGIC: &[u8; 8] = b"GRPPAG02";
 
 /// Default LRU cache size (pages) for stores and readers.
 pub const DEFAULT_CACHE_PAGES: usize = 64;
@@ -126,10 +141,15 @@ struct StoreHeader {
     /// still holds records, but they carry the previous epoch and are
     /// recognized as already committed instead of being applied twice.
     epoch: u64,
+    /// First trunk page of the durable free-list chain (0 = empty).
+    freelist_head: PageId,
+    /// Free pages listed in the chain (reporting; the chain is the
+    /// truth).
+    free_pages: u32,
 }
 
 /// Byte span of the header fields covered by the trailing checksum.
-const HEADER_CRC_SPAN: usize = 48;
+const HEADER_CRC_SPAN: usize = 56;
 
 fn header_checksum_ok(page: &Page) -> bool {
     page.get_bytes(0, 8) == MAGIC
@@ -150,6 +170,8 @@ fn parse_header(page: &Page) -> Result<StoreHeader> {
         data_len: page.get_u64(24),
         num_groups: page.get_u64(32),
         epoch: page.get_u64(40),
+        freelist_head: page.get_u32(48),
+        free_pages: page.get_u32(52),
     })
 }
 
@@ -166,6 +188,8 @@ fn write_header(page: &mut Page, h: &StoreHeader) {
     page.put_u64(24, h.data_len);
     page.put_u64(32, h.num_groups);
     page.put_u64(40, h.epoch);
+    page.put_u32(48, h.freelist_head);
+    page.put_u32(52, h.free_pages);
     let crc = crc32c(page.get_bytes(0, HEADER_CRC_SPAN));
     page.put_u32(HEADER_CRC_SPAN, crc);
 }
@@ -235,6 +259,68 @@ fn visit_group_via<R: PageRead>(
     Ok(true)
 }
 
+/// What one [`PagedStore::compact`] run did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompactReport {
+    /// Index pages (live + free) before compaction.
+    pub pages_before: u32,
+    /// Index pages after compaction.
+    pub pages_after: u32,
+    /// Live pages copied across all passes (compaction write cost).
+    pub pages_moved: u32,
+    /// Pages given back to the filesystem.
+    pub pages_reclaimed: u32,
+    /// Rewrite→checkpoint→truncate passes run (0 = already dense).
+    pub passes: u32,
+}
+
+impl CompactReport {
+    /// `.pstore` bytes before compaction.
+    pub fn bytes_before(&self) -> u64 {
+        u64::from(self.pages_before) * PAGE_SIZE as u64
+    }
+
+    /// `.pstore` bytes after compaction.
+    pub fn bytes_after(&self) -> u64 {
+        u64::from(self.pages_after) * PAGE_SIZE as u64
+    }
+}
+
+/// Page accounting for one store (see [`PagedStore::stat`] /
+/// [`PagedReader::stat`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PagedStat {
+    /// Index pages in the file (header + live + free).
+    pub total_pages: u32,
+    /// Free index pages (durably free, plus — on a writer — frees not
+    /// yet published by a checkpoint).
+    pub free_pages: u32,
+    /// `total_pages - free_pages`: header, tree and trunk pages.
+    pub live_pages: u32,
+    /// `.pstore` size in bytes (`total_pages * PAGE_SIZE`).
+    pub index_bytes: u64,
+    /// `.pdata` length in bytes.
+    pub data_bytes: u64,
+    /// Checkpoint epoch of this view.
+    pub epoch: u64,
+    /// Rows in the index.
+    pub num_rows: u64,
+    /// Distinct groups.
+    pub num_groups: u64,
+}
+
+impl PagedStat {
+    /// Free pages as a fraction of the whole file (0.0 when empty) —
+    /// what `--auto-compact-threshold` compares against.
+    pub fn free_fraction(&self) -> f64 {
+        if self.total_pages == 0 {
+            0.0
+        } else {
+            f64::from(self.free_pages) / f64::from(self.total_pages)
+        }
+    }
+}
+
 /// The appendable, WAL-backed group store (writer + read access).
 pub struct PagedStore {
     pager: Pager,
@@ -252,12 +338,19 @@ pub struct PagedStore {
     data_buffered: bool,
     /// Current checkpoint epoch (see [`StoreHeader::epoch`]).
     epoch: u64,
-    /// Set when an append failed mid-apply: the in-memory tree and data
+    /// Set when an append failed mid-apply (or a checkpoint failed after
+    /// it began publishing): the in-memory tree, free-list and data
     /// writer are then suspect (a partial data frame may be buffered, a
-    /// page split may be half-done), so every further mutation — and
+    /// page split may be half-done, promoted frees may describe a state
+    /// that never reached the header), so every further mutation — and
     /// every tree walk through this handle — is refused. Reopen (or use
     /// a [`PagedReader`]) to recover the last committed state.
     poisoned: bool,
+    /// The snapshot-registry key readers pin under: the VFS instance id
+    /// ([`Vfs::instance_id`]) plus the `.pstore` path in the VFS's
+    /// canonical spelling ([`Vfs::registry_key`]). Cached as the ready
+    /// tuple so the per-append gate refresh allocates nothing.
+    pin_key: (u64, PathBuf),
 }
 
 impl PagedStore {
@@ -285,7 +378,8 @@ impl PagedStore {
     ) -> Result<PagedStore> {
         let cache_pages = cache_pages.max(2);
         vfs.create_dir_all(dir)?;
-        let mut pager = Pager::create_with(vfs, &pstore_path(dir, prefix), cache_pages)?;
+        let index_path = pstore_path(dir, prefix);
+        let mut pager = Pager::create_with(vfs, &index_path, cache_pages)?;
         let hdr = pager.allocate()?;
         debug_assert_eq!(hdr, 0);
         let header = StoreHeader {
@@ -295,9 +389,12 @@ impl PagedStore {
             data_len: 0,
             num_groups: 0,
             epoch: 0,
+            freelist_head: 0,
+            free_pages: 0,
         };
         pager.update(0, |p| write_header(p, &header))?;
         pager.flush()?;
+        pager.mark_committed();
         let wal = WalWriter::open_with(vfs, &pwal_path(dir, prefix), 0)?;
         let data_file = vfs.open(&pdata_path(dir, prefix), OpenMode::CreateTruncate)?;
         let data = RecordWriter::new(BufWriter::new(VfsCursor::new(data_file.clone())));
@@ -312,6 +409,7 @@ impl PagedStore {
             data_buffered: false,
             epoch: 0,
             poisoned: false,
+            pin_key: (vfs.instance_id(), vfs.registry_key(&index_path)),
         })
     }
 
@@ -339,10 +437,18 @@ impl PagedStore {
         cache_pages: usize,
     ) -> Result<PagedStore> {
         let cache_pages = cache_pages.max(2);
-        let mut pager = Pager::open_with(vfs, &pstore_path(dir, prefix), cache_pages)?;
+        let index_path = pstore_path(dir, prefix);
+        let mut pager = Pager::open_with(vfs, &index_path, cache_pages)?;
         let header = read_header(&mut pager)?;
-        // Discard uncommitted index pages beyond the committed watermark.
+        // Discard uncommitted index pages beyond the committed watermark
+        // (this also rewinds any free-list state), then rebuild the
+        // free-list from the durable trunk chain — never from anything
+        // newer, so a post-crash store can only hand out pages the
+        // committed header accounts for.
         pager.reset_to(header.committed_pages.max(1))?;
+        pager
+            .load_freelist(header.freelist_head)
+            .context("loading the paged store free-list chain")?;
         let tree = BTree::from_header(header.root, header.num_rows, header.committed_pages);
 
         // Rebuild per-group counts from the committed tree.
@@ -397,7 +503,9 @@ impl PagedStore {
             data_buffered: false,
             epoch: header.epoch,
             poisoned: false,
+            pin_key: (vfs.instance_id(), vfs.registry_key(&index_path)),
         };
+        store.refresh_reuse_gate();
         // Replay: re-apply each logged append to data + tree. Idempotent
         // across repeated crashes: nothing becomes durable until the next
         // checkpoint's header swap, and records from *before* the last
@@ -435,11 +543,31 @@ impl PagedStore {
     fn check_poisoned(&self) -> Result<()> {
         if self.poisoned {
             bail!(
-                "paged store is poisoned by an earlier failed append; \
+                "paged store is poisoned by an earlier failed append or checkpoint; \
                  reopen it to recover the last committed state"
             );
         }
         Ok(())
+    }
+
+    /// Sync the pager's reuse gate with the snapshot registry: free
+    /// pages from epochs newer than the oldest pinned reader stay
+    /// untouchable. Called before every mutation that might allocate,
+    /// so a reader pinned since the last call is honored before any of
+    /// its reachable pages could be handed out (pages it can reach are
+    /// only *published* free by a later checkpoint, which refreshes
+    /// again).
+    fn refresh_reuse_gate(&mut self) {
+        if self.pager.reusable_page_count() == 0 {
+            // Nothing is reusable, so no decision depends on the gate:
+            // skip the process-global registry lock on the hot append
+            // path. The first checkpoint that publishes frees runs with
+            // a refreshed gate before any of them can be handed out
+            // (every reuse/reclaim site refreshes first).
+            return;
+        }
+        let gate = shared::min_pinned_epoch_for(&self.pin_key).unwrap_or(u64::MAX);
+        self.pager.set_reuse_gate(gate);
     }
 
     /// Append one example to a group: logged to the WAL, then applied.
@@ -455,6 +583,7 @@ impl PagedStore {
     /// WAL frame is withdrawn).
     pub fn append(&mut self, group: &[u8], example: &Example) -> Result<()> {
         self.check_poisoned()?;
+        self.refresh_reuse_gate();
         // Validate BEFORE logging: a frame that cannot be applied must
         // never enter the WAL, or replay would fail on it at every
         // subsequent open (index row = group + 9-byte seq suffix key +
@@ -498,20 +627,41 @@ impl PagedStore {
         Ok(())
     }
 
-    /// Full checkpoint: data + index durable (ordered: data, tree pages,
-    /// then the single-page header swap), WAL reset, COW watermark
-    /// advanced. Each checkpoint starts a new epoch — readers opened
+    /// Full checkpoint: data + index durable (ordered: data, free-list
+    /// trunk chain + tree pages, then the single-page header swap), WAL
+    /// reset, COW watermark advanced, and this epoch's frees published
+    /// as reusable. Each checkpoint starts a new epoch — readers opened
     /// before it keep seeing the previous epoch's snapshot.
     ///
     /// # Errors
-    /// Any flush/fsync failure at any of the ordered steps (the store
-    /// stays recoverable from the previous checkpoint + WAL), or a store
-    /// poisoned by an earlier failed append.
+    /// Any flush/fsync failure at any of the ordered steps. The store on
+    /// disk always stays recoverable (previous checkpoint + WAL), but a
+    /// failure after the free-list serialization began **poisons this
+    /// handle**: the in-memory list then describes a state the durable
+    /// header never saw, and allocating from it could hand out pages the
+    /// committed tree still owns. Reopen to recover. A store poisoned
+    /// earlier is refused outright.
     pub fn checkpoint(&mut self) -> Result<()> {
         self.check_poisoned()?;
+        self.refresh_reuse_gate();
         self.data.flush()?;
         self.data_file.sync()?;
         self.data_buffered = false;
+        if let Err(e) = self.checkpoint_publish() {
+            self.poisoned = true;
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// The poison-on-failure half of [`PagedStore::checkpoint`]: from
+    /// the first free-list mutation to the WAL reset.
+    fn checkpoint_publish(&mut self) -> Result<()> {
+        let next_epoch = self.epoch + 1;
+        let (freelist_head, free_pages) = self
+            .pager
+            .write_freelist(next_epoch)
+            .context("serializing the free-list trunk chain")?;
         self.pager.flush()?;
         let header = StoreHeader {
             root: self.tree.root(),
@@ -519,14 +669,124 @@ impl PagedStore {
             num_rows: self.tree.num_rows(),
             data_len: self.data_base + self.data.bytes_written(),
             num_groups: self.group_counts.len() as u64,
-            epoch: self.epoch + 1,
+            epoch: next_epoch,
+            freelist_head,
+            free_pages,
         };
         self.pager.update(0, |p| write_header(p, &header))?;
         self.pager.flush()?;
         self.tree.set_watermark(header.committed_pages);
-        self.epoch = header.epoch;
+        self.pager.mark_committed();
+        self.epoch = next_epoch;
         self.wal.reset()?;
         Ok(())
+    }
+
+    /// Online compaction: migrate live index pages toward the file head
+    /// and give the freed tail back to the filesystem, so the `.pstore`
+    /// file shrinks to (roughly) its live size. Safe against crashes at
+    /// any point — every move lands in free or fresh pages and is
+    /// published by an ordinary checkpoint before anything it supersedes
+    /// can be touched, so recovery always finds either the pre-pass or
+    /// the post-pass committed state (logically identical). Safe against
+    /// concurrent pinned readers too: pages their snapshots can reach
+    /// are neither rewritten nor truncated (the epoch gate), at the cost
+    /// of reclaiming less until the pins drop — with every free page
+    /// gate-blocked, compact is a no-op (zero passes); with only some
+    /// blocked, it skips relocation (whose copies could not land in the
+    /// blocked holes and would grow the file) and just truncates any
+    /// gate-eligible tail run.
+    ///
+    /// Unblocked, it runs up to four rewrite→checkpoint→truncate passes
+    /// (the first pass's copies can land past the garbage they displace;
+    /// later passes pull them down) and stops as soon as a pass reclaims
+    /// nothing. Each pass rewrites the live tree once — compaction costs
+    /// O(live) writes per pass, which is why it is an explicit call (or
+    /// the CLI's `--auto-compact-threshold`) rather than automatic.
+    ///
+    /// # Errors
+    /// Any I/O failure; a failure mid-pass poisons this handle (the
+    /// durable store stays recoverable — reopen). A store poisoned
+    /// earlier is refused outright.
+    pub fn compact(&mut self) -> Result<CompactReport> {
+        self.check_poisoned()?;
+        self.checkpoint().context("checkpointing before compaction")?;
+        let pages_before = self.pager.num_pages();
+        let mut report = CompactReport {
+            pages_before,
+            pages_after: pages_before,
+            pages_moved: 0,
+            pages_reclaimed: 0,
+            passes: 0,
+        };
+        loop {
+            self.refresh_reuse_gate();
+            let eligible = self.pager.reusable_under_gate();
+            if eligible == 0 {
+                // Already dense — or every free page is gate-blocked by
+                // a pinned snapshot, so nothing can be relocated into or
+                // truncated. Compact again once the readers are gone.
+                break;
+            }
+            report.passes += 1;
+            // Relocation only helps when NO free page is gate-blocked:
+            // under a partial block the rewrite's copies would spill
+            // past the blocked holes and the displaced pages (freed at
+            // the new epoch) would be blocked too — the file would grow
+            // by up to the live tree size per pass instead of shrinking.
+            // With a partial block, settle for reclaiming whatever
+            // gate-eligible run ends the file.
+            let relocate = eligible == self.pager.reusable_page_count();
+            if relocate {
+                match self.tree.rewrite(&mut self.pager) {
+                    Ok(moved) => report.pages_moved += moved,
+                    Err(e) => {
+                        self.poisoned = true;
+                        return Err(e).context("rewriting live index pages");
+                    }
+                }
+                self.checkpoint().context("publishing the compacted index")?;
+                self.refresh_reuse_gate();
+            }
+            let reclaimed = self.pager.reclaim_tail();
+            report.pages_reclaimed += reclaimed;
+            if reclaimed > 0 {
+                // Commit the smaller page count first; only then shrink
+                // the file (a crash in between leaves a stale tail the
+                // next open ignores).
+                self.checkpoint().context("committing the reclaimed length")?;
+                if let Err(e) = self.pager.sync_file_len() {
+                    self.poisoned = true;
+                    return Err(e).context("truncating the reclaimed tail");
+                }
+            }
+            // Pass 1's copies often land past the garbage they displace
+            // (nothing at the tail is free yet), so reclaiming nothing
+            // only means "converged" from the second pass on.
+            if !relocate || (report.passes >= 2 && reclaimed == 0) || report.passes >= 4 {
+                break;
+            }
+        }
+        report.pages_after = self.pager.num_pages();
+        Ok(report)
+    }
+
+    /// Page-accounting snapshot: live/free/total index pages and file
+    /// sizes (the Table-12b numbers, and `grouper stats`' garbage
+    /// ratio). Uncommitted (pending) frees count as free.
+    pub fn stat(&self) -> PagedStat {
+        let total_pages = self.pager.num_pages();
+        let free_pages = self.pager.free_page_count();
+        PagedStat {
+            total_pages,
+            free_pages,
+            live_pages: total_pages - free_pages,
+            index_bytes: u64::from(total_pages) * PAGE_SIZE as u64,
+            data_bytes: self.data_base + self.data.bytes_written(),
+            epoch: self.epoch,
+            num_rows: self.tree.num_rows(),
+            num_groups: self.group_counts.len() as u64,
+        }
     }
 
     /// Distinct groups appended so far (committed + uncommitted).
@@ -587,6 +847,12 @@ impl PagedStore {
     /// Index page fetches from disk so far.
     pub fn pages_read(&self) -> u64 {
         self.pager.disk_reads()
+    }
+
+    /// Index pages physically written so far (evictions + flushes) —
+    /// the numerator of the Table-12b write-amplification column.
+    pub fn pages_written(&self) -> u64 {
+        self.pager.disk_writes()
     }
 
     /// Materialize a whole base dataset (append + commit + checkpoint) —
@@ -665,6 +931,13 @@ pub struct PagedReader {
     data_file: Arc<dyn VfsFile>,
     keys: Vec<Vec<u8>>,
     num_examples: u64,
+    /// Registered in the process-wide snapshot registry for this
+    /// reader's lifetime: while held, the writer's free-list will
+    /// neither reuse nor truncate any page this snapshot can reach.
+    _pin: EpochPin,
+    /// Header page accounting captured at open (for [`PagedReader::stat`]).
+    free_pages: u32,
+    data_len: u64,
 }
 
 impl PagedReader {
@@ -703,18 +976,52 @@ impl PagedReader {
                 .context("recovering hot paged store")?;
             store.checkpoint()?;
         }
-        let pager = SharedPager::open_with(vfs, &pstore_path(dir, prefix), cache_pages)?;
+        let index_path = pstore_path(dir, prefix);
+        let pager = SharedPager::open_with(vfs, &index_path, cache_pages)?;
         // The checkpointing writer rewrites page 0 in place; a read that
         // races it can be torn. The header checksum detects that, and a
         // brief retry rides out the in-flight write.
-        let mut page = pager.read_header_fresh()?;
-        let mut attempts = 0;
-        while !header_checksum_ok(&page) && attempts < 20 {
-            std::thread::sleep(std::time::Duration::from_millis(1));
-            page = pager.read_header_fresh()?;
-            attempts += 1;
+        let read_header_checked = || -> Result<StoreHeader> {
+            let mut page = pager.read_header_fresh()?;
+            let mut attempts = 0;
+            while !header_checksum_ok(&page) && attempts < 20 {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                page = pager.read_header_fresh()?;
+                attempts += 1;
+            }
+            parse_header(&page).context("reading paged store header")
+        };
+        // Pin-then-confirm: the pin must be registered *before* the
+        // header it describes can be superseded, or a checkpoint racing
+        // this open could free-and-reuse pages of our snapshot in the
+        // gap. Re-reading the header after pinning closes it: if the
+        // epoch is unchanged, every later checkpoint (the only thing
+        // that publishes frees) sees our pin when it consults the gate.
+        let vfs_id = vfs.instance_id();
+        let registry_path = vfs.registry_key(&index_path);
+        let mut header = read_header_checked()?;
+        let mut pin = shared::pin_epoch(vfs_id, &registry_path, header.epoch);
+        let mut confirmed = false;
+        for _ in 0..50 {
+            let confirm = read_header_checked()?;
+            if confirm.epoch == header.epoch {
+                confirmed = true;
+                break;
+            }
+            header = confirm;
+            pin = shared::pin_epoch(vfs_id, &registry_path, header.epoch);
         }
-        let header = parse_header(&page).context("reading paged store header")?;
+        if !confirmed {
+            // Never proceed on an unconfirmed pin: one more checkpoint
+            // could have slipped between the last header read and the
+            // pin registration, and an unseen pin is exactly the gate
+            // bypass this loop exists to prevent.
+            bail!(
+                "paged reader open raced a continuously checkpointing writer \
+                 50 times without pinning a stable epoch; retry when the \
+                 writer quiesces"
+            );
+        }
         let snapshot = ReadSnapshot { bound: header.committed_pages, epoch: header.epoch };
         let tree = BTree::from_header(header.root, header.num_rows, u32::MAX);
         // Enumerate distinct groups (one ordered leaf walk).
@@ -763,7 +1070,27 @@ impl PagedReader {
             data_file,
             keys,
             num_examples: header.num_rows,
+            _pin: pin,
+            free_pages: header.free_pages,
+            data_len: header.data_len,
         })
+    }
+
+    /// Page-accounting snapshot of the pinned checkpoint (header
+    /// numbers; a concurrent writer's uncommitted work is invisible, as
+    /// everywhere else on the read path).
+    pub fn stat(&self) -> PagedStat {
+        let total_pages = self.snapshot.bound;
+        PagedStat {
+            total_pages,
+            free_pages: self.free_pages,
+            live_pages: total_pages - self.free_pages,
+            index_bytes: u64::from(total_pages) * PAGE_SIZE as u64,
+            data_bytes: self.data_len,
+            epoch: self.snapshot.epoch,
+            num_rows: self.num_examples,
+            num_groups: self.keys.len() as u64,
+        }
     }
 
     /// Distinct groups in the snapshot.
@@ -1050,6 +1377,9 @@ mod tests {
         fn list_dir(&self, dir: &Path) -> io::Result<Vec<PathBuf>> {
             self.inner.list_dir(dir)
         }
+        fn instance_id(&self) -> u64 {
+            self.inner.instance_id()
+        }
     }
 
     /// The handle [`TornHeaderVfs::open`] hands out for the victim file.
@@ -1169,6 +1499,179 @@ mod tests {
             40,
             "recovery must land exactly on the last committed state"
         );
+    }
+
+    /// Deterministic churn: `rounds` of appends with a checkpoint after
+    /// each, so every round's COW supersessions become published frees.
+    fn churn(s: &mut PagedStore, rounds: u32, per_round: u32, tag: &str) {
+        for r in 0..rounds {
+            for i in 0..per_round {
+                let g = format!("g{}", i % 5);
+                s.append(g.as_bytes(), &Example::text(&format!("{tag}-{r}-{i}"))).unwrap();
+            }
+            s.commit().unwrap();
+            s.checkpoint().unwrap();
+        }
+    }
+
+    #[test]
+    fn checkpoints_free_superseded_pages_and_appends_reuse_them() {
+        let vfs = MemVfs::new();
+        let dir = mem_dir("reclaim");
+        let mut s = PagedStore::create_with(&vfs, &dir, "x", 16).unwrap();
+        churn(&mut s, 6, 40, "a");
+        let stat = s.stat();
+        assert!(stat.free_pages > 0, "COW churn must strand free pages");
+        assert_eq!(stat.total_pages, stat.live_pages + stat.free_pages);
+        assert_eq!(stat.num_rows, 240);
+        // Identical further churn, once against the primed free list and
+        // once (in a parallel store) against a freshly created one: total
+        // growth must be slower when reuse is possible than the fresh
+        // store's total footprint for the same appends.
+        let before = s.stat().total_pages;
+        churn(&mut s, 6, 40, "b");
+        let grown = s.stat().total_pages - before;
+        let mut fresh = PagedStore::create_with(&vfs, &mem_dir("reclaim-fresh"), "x", 16).unwrap();
+        churn(&mut fresh, 6, 40, "b");
+        assert!(
+            grown < fresh.stat().total_pages,
+            "reuse growth ({grown} pages) must undercut a from-scratch store \
+             ({} pages) for the same appends",
+            fresh.stat().total_pages
+        );
+    }
+
+    #[test]
+    fn free_list_survives_reopen() {
+        let vfs = MemVfs::new();
+        let dir = mem_dir("flreopen");
+        let free_before;
+        {
+            let mut s = PagedStore::create_with(&vfs, &dir, "x", 16).unwrap();
+            churn(&mut s, 5, 30, "a");
+            free_before = s.stat().free_pages;
+            assert!(free_before > 0);
+        }
+        let s = PagedStore::open_with(&vfs, &dir, "x", 16).unwrap();
+        assert_eq!(
+            s.stat().free_pages,
+            free_before,
+            "the durable trunk chain must reload the whole free list"
+        );
+    }
+
+    #[test]
+    fn compact_shrinks_the_file_and_preserves_every_group() {
+        let vfs = MemVfs::new();
+        let dir = mem_dir("compact");
+        let mut s = PagedStore::create_with(&vfs, &dir, "x", 16).unwrap();
+        churn(&mut s, 8, 40, "a");
+        // Oracle before compaction.
+        let keys = s.keys();
+        let mut want: Vec<(Vec<u8>, Vec<Vec<u8>>)> = Vec::new();
+        for k in &keys {
+            let mut v = Vec::new();
+            assert!(s.visit_group(k, |ex| v.push(ex.encode())).unwrap());
+            want.push((k.clone(), v));
+        }
+        let stat_before = s.stat();
+        assert!(stat_before.free_pages > 0, "churn must have stranded garbage");
+        let report = s.compact().unwrap();
+        assert!(report.passes >= 1);
+        assert!(
+            report.pages_after < report.pages_before,
+            "compaction must shrink the index file ({report:?})"
+        );
+        assert!(
+            report.pages_reclaimed >= report.pages_before - report.pages_after,
+            "reclaim accounting covers at least the net shrink ({report:?})"
+        );
+        let stat_after = s.stat();
+        // File size is proportional to live data now: at least half the
+        // stranded garbage must be gone (in practice nearly all of it —
+        // only chain/bookkeeping slack survives).
+        assert!(
+            stat_after.total_pages <= stat_before.total_pages - stat_before.free_pages / 2,
+            "compacted file must shed most of the garbage ({stat_before:?} -> {stat_after:?})"
+        );
+        // Contents survive compaction, through this handle…
+        for (k, v) in &want {
+            let mut got = Vec::new();
+            assert!(s.visit_group(k, |ex| got.push(ex.encode())).unwrap());
+            assert_eq!(&got, v, "group {k:?} after compact");
+        }
+        drop(s);
+        // …through recovery…
+        let mut reopened = PagedStore::open_with(&vfs, &dir, "x", 16).unwrap();
+        for (k, v) in &want {
+            let mut got = Vec::new();
+            assert!(reopened.visit_group(k, |ex| got.push(ex.encode())).unwrap());
+            assert_eq!(&got, v, "group {k:?} after compact + reopen");
+        }
+        // …and the store stays appendable.
+        reopened.append(b"g0", &Example::text("post-compact")).unwrap();
+        reopened.commit().unwrap();
+        reopened.checkpoint().unwrap();
+        drop(reopened);
+        // …and through the concurrent reader.
+        let r = PagedReader::open_with(&vfs, &dir, "x", 16).unwrap();
+        assert_eq!(r.num_examples(), 8 * 40 + 1);
+        let rstat = r.stat();
+        assert_eq!(rstat.total_pages, rstat.live_pages + rstat.free_pages);
+    }
+
+    #[test]
+    fn compact_on_a_dense_store_is_a_cheap_no_op() {
+        let vfs = MemVfs::new();
+        let dir = mem_dir("denser");
+        let mut s = PagedStore::create_with(&vfs, &dir, "x", 16).unwrap();
+        for i in 0..30 {
+            s.append(b"g", &Example::text(&format!("t{i}"))).unwrap();
+        }
+        s.commit().unwrap();
+        s.checkpoint().unwrap();
+        let report = s.compact().unwrap();
+        assert_eq!(report.passes, 0, "a store with no free pages has nothing to move");
+        assert_eq!(report.pages_before, report.pages_after);
+    }
+
+    #[test]
+    fn append_to_a_freed_then_reused_page_crash_recovers_cleanly() {
+        // A freed page that was reused (rewritten on disk) before the
+        // crash must never leak its uncommitted bytes into recovery: the
+        // durable header's tree cannot reach it, and the durable chain
+        // still lists it as free.
+        let vfs = MemVfs::new();
+        let dir = mem_dir("reuse-crash");
+        // Tiny cache so uncommitted appends hit the disk via evictions.
+        let mut s = PagedStore::create_with(&vfs, &dir, "x", 2).unwrap();
+        churn(&mut s, 4, 30, "a");
+        let committed = {
+            let mut out = std::collections::BTreeMap::new();
+            for k in s.keys() {
+                let mut v = Vec::new();
+                assert!(s.visit_group(&k, |ex| v.push(ex.encode())).unwrap());
+                out.insert(k, v);
+            }
+            out
+        };
+        assert!(s.stat().free_pages > 0);
+        // Uncommitted epoch: plenty of appends (reusing freed pages,
+        // evicting them to disk), neither committed nor checkpointed.
+        for i in 0..60 {
+            s.append(b"g0", &Example::text(&format!("uncommitted{i}"))).unwrap();
+        }
+        // "Crash": drop the handle; the WAL tail was never fsynced, and
+        // on MemVfs the unflushed WAL buffer dies with the writer.
+        drop(s);
+        let mut recovered = PagedStore::open_with(&vfs, &dir, "x", 16).unwrap();
+        let mut got = std::collections::BTreeMap::new();
+        for k in recovered.keys() {
+            let mut v = Vec::new();
+            assert!(recovered.visit_group(&k, |ex| v.push(ex.encode())).unwrap());
+            got.insert(k, v);
+        }
+        assert_eq!(got, committed, "recovery must land exactly on the committed state");
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! ```text
 //! grouper partition --dataset fedc4-mini --groups 500 --out work/fedc4 [--by feature|random:N|dirichlet:A]
 //!                   [--format streaming|paged|hierarchical] [--cache-pages N]
+//!                   [--auto-compact-threshold F]
 //! grouper stats     --dir work/fedc4 --prefix data [--format streaming|paged] [--cache-pages N]
+//! grouper compact   --dir work/fedc4 --prefix data [--cache-pages N]
 //! grouper vocab     --dataset fedc4-mini --groups 500 --size 1024 --out work/vocab.txt
 //! grouper train     --config configs/fig4_fedavg.toml [--read-workers N]
 //! grouper personalize --config configs/fig4_fedavg.toml [--read-workers N]
@@ -14,6 +16,10 @@
 //!
 //! `--format paged` materializes into the appendable WAL-backed paged
 //! store (`formats::paged`); `--cache-pages` bounds its LRU page cache.
+//! `compact` reclaims the space superseded index pages leave behind
+//! (`stats --format paged` reports the live/free page split), and
+//! `partition --auto-compact-threshold 0.25` compacts automatically
+//! when more than a quarter of the freshly built store is garbage.
 //!
 //! Experiment regeneration lives in `cargo bench --bench <table|figure>`;
 //! the CLI is the interactive/production surface over the same library.
@@ -58,6 +64,7 @@ fn run(args: Vec<String>) -> Result<()> {
     match cmd.as_str() {
         "partition" => cmd_partition(&flags),
         "stats" => cmd_stats(&flags),
+        "compact" => cmd_compact(&flags),
         "vocab" => cmd_vocab(&flags),
         "train" => cmd_train(&flags, false),
         "personalize" => cmd_train(&flags, true),
@@ -81,7 +88,12 @@ fn print_usage() {
          \u{20}               cache (default {dcp})\n\
          \u{20}  stats        Table-1-style statistics of a materialization\n\
          \u{20}               (--format paged reads a paged store and reports\n\
-         \u{20}               index depth + cache hit rate under --cache-pages)\n\
+         \u{20}               index depth, cache hit rate under --cache-pages,\n\
+         \u{20}               and live/free/total index pages)\n\
+         \u{20}  compact      reclaim a paged store's free pages: migrate live\n\
+         \u{20}               index pages toward the file head and truncate the\n\
+         \u{20}               tail (partition --auto-compact-threshold F does\n\
+         \u{20}               this automatically when free/total exceeds F)\n\
          \u{20}  vocab        train a WordPiece vocabulary from a corpus\n\
          \u{20}  train        federated training (FedAvg/FedSGD) per a TOML config;\n\
          \u{20}               --read-workers N fetches each round's cohort of\n\
@@ -196,7 +208,7 @@ fn cmd_partition(f: &Flags) -> Result<()> {
             );
         }
         "paged" => {
-            let store = PagedStore::build(&ds, p.as_ref(), &out, &prefix, cache_pages)?;
+            let mut store = PagedStore::build(&ds, p.as_ref(), &out, &prefix, cache_pages)?;
             println!(
                 "done: {} examples -> {} groups in {}/{prefix}.pstore (appendable; \
                  cache {cache_pages} pages)",
@@ -204,6 +216,31 @@ fn cmd_partition(f: &Flags) -> Result<()> {
                 store.num_groups(),
                 out.display()
             );
+            if let Some(threshold) = f.get("auto-compact-threshold") {
+                let threshold: f64 = threshold
+                    .parse()
+                    .context("--auto-compact-threshold must be a fraction like 0.25")?;
+                let stat = store.stat();
+                if stat.free_fraction() >= threshold {
+                    let report = store.compact()?;
+                    println!(
+                        "auto-compact ({:.0}% free >= {:.0}% threshold): {} -> {} \
+                         ({} pages reclaimed, {} passes)",
+                        100.0 * stat.free_fraction(),
+                        100.0 * threshold,
+                        humanize::bytes(report.bytes_before() as usize),
+                        humanize::bytes(report.bytes_after() as usize),
+                        report.pages_reclaimed,
+                        report.passes
+                    );
+                } else {
+                    println!(
+                        "auto-compact skipped: {:.0}% free < {:.0}% threshold",
+                        100.0 * stat.free_fraction(),
+                        100.0 * threshold
+                    );
+                }
+            }
         }
         "hierarchical" => {
             let n = HierarchicalStore::build(&ds, p.as_ref(), &out, &prefix, shards)?;
@@ -282,7 +319,54 @@ fn cmd_stats_paged(f: &Flags, dir: &Path, prefix: &str) -> Result<()> {
         format!("{} / {} / {}", stats.hits, stats.misses, stats.evictions),
     ]);
     t.row(vec!["cache hit rate".into(), format!("{:.1}%", 100.0 * stats.hit_rate())]);
+    let ps = r.stat();
+    t.row(vec![
+        "index pages live / free / total".into(),
+        format!("{} / {} / {}", ps.live_pages, ps.free_pages, ps.total_pages),
+    ]);
+    t.row(vec![
+        "index / data bytes".into(),
+        format!(
+            "{} / {}",
+            humanize::bytes(ps.index_bytes as usize),
+            humanize::bytes(ps.data_bytes as usize)
+        ),
+    ]);
+    if ps.free_fraction() > 0.0 {
+        t.row(vec![
+            "reclaimable".into(),
+            format!("{:.1}% (run `grouper compact`)", 100.0 * ps.free_fraction()),
+        ]);
+    }
     t.print();
+    Ok(())
+}
+
+/// Reclaim a paged store's free pages: open for write (running recovery
+/// if the WAL is hot), compact, report before/after sizes.
+fn cmd_compact(f: &Flags) -> Result<()> {
+    let dir = PathBuf::from(f.required("dir")?);
+    let prefix = f.get_or("prefix", "data");
+    let cache_pages =
+        f.usize_or("cache-pages", grouper::formats::paged::DEFAULT_CACHE_PAGES)?;
+    let mut store = PagedStore::open(&dir, prefix, cache_pages)?;
+    let before = store.stat();
+    println!(
+        "compacting {}/{prefix}.pstore: {} live / {} free / {} total pages",
+        dir.display(),
+        before.live_pages,
+        before.free_pages,
+        before.total_pages
+    );
+    let report = store.compact()?;
+    println!(
+        "done in {} pass(es): {} -> {} ({} pages moved, {} reclaimed)",
+        report.passes,
+        humanize::bytes(report.bytes_before() as usize),
+        humanize::bytes(report.bytes_after() as usize),
+        report.pages_moved,
+        report.pages_reclaimed
+    );
     Ok(())
 }
 

@@ -11,10 +11,13 @@
 //!   allocated page (LMDB-style path copying). The previously committed
 //!   tree therefore stays byte-identical on disk until the single-page
 //!   header swap commits a new root, which is what makes WAL replay over
-//!   a crashed store sound. Pages allocated after the watermark are
-//!   mutated in place, so COW costs at most one copy per page per
-//!   checkpoint interval. Superseded committed pages are not reclaimed
-//!   (append-oriented store; a free list is future work).
+//!   a crashed store sound. Pages allocated since the last checkpoint
+//!   ([`super::pager::Pager::is_fresh`] — fresh pages can sit *below*
+//!   the watermark when the allocation reused a freed page) are mutated
+//!   in place, so COW costs at most one copy per page per checkpoint
+//!   interval. Each COW copy **frees** the superseded committed page
+//!   into the pager's free list ([`super::freelist`]); the free becomes
+//!   durable — and the page reusable — at the next checkpoint.
 //!
 //! Page layout (all little-endian):
 //!
@@ -245,19 +248,30 @@ impl BTree {
         self.watermark = watermark;
     }
 
-    fn is_mutable(&self, id: PageId) -> bool {
-        id >= self.watermark
+    /// A page is mutable in place when it belongs to no committed state:
+    /// either its id is past the committed watermark, or it was
+    /// (re)allocated since the last checkpoint — a reused free page
+    /// carries a low id but is just as uncommitted as a tail page.
+    fn is_mutable(&self, pager: &Pager, id: PageId) -> bool {
+        id >= self.watermark || pager.is_fresh(id)
     }
 
     /// Write a page image to `id` when mutable, else copy-on-write to a
-    /// fresh page; returns the id actually holding the data.
+    /// fresh page (freeing the superseded committed page into the
+    /// pager's free list); returns the id actually holding the data.
     fn write_page(&self, pager: &mut Pager, id: Option<PageId>, page: Page) -> io::Result<PageId> {
         match id {
-            Some(id) if self.is_mutable(id) => {
+            Some(id) if self.is_mutable(pager, id) => {
                 pager.put(id, page)?;
                 Ok(id)
             }
-            _ => {
+            Some(id) => {
+                let nid = pager.allocate()?;
+                pager.put(nid, page)?;
+                pager.free(id)?;
+                Ok(nid)
+            }
+            None => {
                 let nid = pager.allocate()?;
                 pager.put(nid, page)?;
                 Ok(nid)
@@ -476,6 +490,53 @@ impl BTree {
             false // only the first row >= key can match exactly
         })?;
         Ok(out)
+    }
+
+    /// The compaction pass: copy every page of the tree through a fresh
+    /// allocation — children first, so each copied internal node points
+    /// at its children's new homes — and free every superseded page into
+    /// the pager's free list. Because [`Pager::allocate`] prefers the
+    /// *lowest* reusable free page, a rewrite migrates the tree toward
+    /// the file head; repeated rewrite → checkpoint rounds (see
+    /// `formats::paged`'s `compact`) converge on a dense prefix whose
+    /// freed tail can be truncated. Returns the number of pages copied.
+    ///
+    /// Call on a just-checkpointed tree (every page committed): the old
+    /// tree stays intact on disk until the caller's next header swap, so
+    /// a crash mid-rewrite recovers the pre-rewrite state.
+    ///
+    /// # Errors
+    /// Any pager allocation/read/write failure, or `InvalidData` on a
+    /// corrupt node. On error the tree handle must be discarded (the
+    /// rewrite is half-applied in memory); the durable state is
+    /// untouched.
+    pub fn rewrite(&mut self, pager: &mut Pager) -> io::Result<u32> {
+        if self.root == NO_PAGE {
+            return Ok(0);
+        }
+        let (new_root, copied) = self.rewrite_rec(pager, self.root)?;
+        self.root = new_root;
+        Ok(copied)
+    }
+
+    fn rewrite_rec(&self, pager: &mut Pager, id: PageId) -> io::Result<(PageId, u32)> {
+        let decoded = decode_page(pager.read(id)?)?;
+        let (page, copied) = match decoded {
+            Decoded::Leaf(entries) => (encode_leaf(&entries), 1),
+            Decoded::Internal(mut entries) => {
+                let mut copied = 1;
+                for entry in &mut entries {
+                    let (nid, c) = self.rewrite_rec(pager, entry.1)?;
+                    entry.1 = nid;
+                    copied += c;
+                }
+                (encode_internal(&entries), copied)
+            }
+        };
+        let nid = pager.allocate()?;
+        pager.put(nid, page)?;
+        pager.free(id)?;
+        Ok((nid, copied))
     }
 
     /// Tree depth (1 = a single leaf; 0 = empty).
@@ -700,12 +761,13 @@ mod tests {
             let key = format!("row{:05}", i).into_bytes();
             tree.insert(&mut pager, &key, &vec![7u8; 30]).unwrap();
         }
-        // "Checkpoint": flush and advance the watermark.
+        // "Checkpoint": flush, advance the watermark, clear freshness.
         pager.flush().unwrap();
         let committed_root = tree.root();
         let committed_rows = tree.num_rows();
         let committed_pages = pager.num_pages();
         tree.set_watermark(committed_pages);
+        pager.mark_committed();
         // Keep appending beyond the checkpoint.
         for i in 800..1600u32 {
             let key = format!("row{:05}", i).into_bytes();
@@ -734,6 +796,109 @@ mod tests {
         for (i, k) in snap_keys.iter().enumerate() {
             assert_eq!(k, &format!("row{:05}", i).into_bytes());
         }
+    }
+
+    #[test]
+    fn cow_frees_superseded_pages_and_reuse_stops_file_growth() {
+        let path = tmp("cowfree.pages");
+        let _ = std::fs::remove_file(&path);
+        let mut pager = Pager::create(&path, 64).unwrap();
+        pager.allocate().unwrap(); // header page 0
+        let mut tree = BTree::new_empty(1);
+        for i in 0..600u32 {
+            tree.insert(&mut pager, format!("k{i:05}").as_bytes(), &[7u8; 30]).unwrap();
+        }
+        // Checkpoint, then mutate across the watermark: every COW copy
+        // must free its superseded page.
+        let checkpoint = |pager: &mut Pager, tree: &mut BTree, epoch: u64| {
+            pager.write_freelist(epoch).unwrap();
+            pager.flush().unwrap();
+            tree.set_watermark(pager.num_pages());
+            pager.mark_committed();
+        };
+        checkpoint(&mut pager, &mut tree, 1);
+        assert_eq!(pager.free_page_count(), 0);
+        for i in 600..700u32 {
+            tree.insert(&mut pager, format!("k{i:05}").as_bytes(), &[8u8; 30]).unwrap();
+        }
+        assert!(
+            pager.free_page_count() > 0,
+            "COW supersessions must land in the free list"
+        );
+        // Steady-state churn with periodic checkpoints, run twice with
+        // the same per-round workload: first with reuse blocked (gate 0
+        // simulates a reader pinned forever — the pre-free-list leak
+        // slope), then with reuse open. Reuse must grow the file
+        // strictly slower.
+        checkpoint(&mut pager, &mut tree, 2);
+        let churn = |pager: &mut Pager, tree: &mut BTree, tag: u64, epoch0: u64| {
+            let before = pager.num_pages();
+            for round in 0..3u64 {
+                for i in 0..120u32 {
+                    let key = format!("r{tag}-{round}-{i:05}");
+                    tree.insert(pager, key.as_bytes(), &[9u8; 30]).unwrap();
+                }
+                checkpoint(pager, tree, epoch0 + round);
+            }
+            pager.num_pages() - before
+        };
+        pager.set_reuse_gate(0);
+        let grown_gated = churn(&mut pager, &mut tree, 0, 3);
+        pager.set_reuse_gate(u64::MAX);
+        let grown_reusing = churn(&mut pager, &mut tree, 1, 6);
+        assert!(
+            grown_reusing < grown_gated,
+            "reuse ({grown_reusing} pages) must grow the file slower than the \
+             leak-everything slope ({grown_gated} pages)"
+        );
+        // The tree is still exactly right.
+        let mut count = 0u32;
+        let mut prev: Option<Vec<u8>> = None;
+        tree.scan_from(&mut pager, b"", |k, _| {
+            if let Some(p) = &prev {
+                assert!(p.as_slice() <= k);
+            }
+            prev = Some(k.to_vec());
+            count += 1;
+            true
+        })
+        .unwrap();
+        assert_eq!(count, 700 + 6 * 120);
+    }
+
+    #[test]
+    fn rewrite_copies_the_tree_and_frees_every_old_page() {
+        let path = tmp("rewrite.pages");
+        let _ = std::fs::remove_file(&path);
+        let mut pager = Pager::create(&path, 64).unwrap();
+        pager.allocate().unwrap(); // header page 0
+        let mut tree = BTree::new_empty(1);
+        for i in 0..500u32 {
+            tree.insert(&mut pager, format!("k{i:05}").as_bytes(), &[5u8; 40]).unwrap();
+        }
+        pager.flush().unwrap();
+        tree.set_watermark(pager.num_pages());
+        pager.mark_committed();
+        let old_root = tree.root();
+        let tree_pages = pager.num_pages() - 1; // all pages but the header
+        let free_before = pager.free_page_count();
+        let copied = tree.rewrite(&mut pager).unwrap();
+        assert_eq!(copied, tree_pages, "every tree page is copied exactly once");
+        assert_ne!(tree.root(), old_root);
+        assert_eq!(
+            pager.free_page_count() - free_before,
+            copied,
+            "every superseded page is freed"
+        );
+        // Contents are untouched.
+        let mut count = 0u32;
+        tree.scan_from(&mut pager, b"", |_, _| {
+            count += 1;
+            true
+        })
+        .unwrap();
+        assert_eq!(count, 500);
+        assert_eq!(tree.get(&mut pager, b"k00123").unwrap(), Some(vec![5u8; 40]));
     }
 
     #[test]

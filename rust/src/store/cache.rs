@@ -245,6 +245,13 @@ impl PageCache {
         self.frames.clear();
     }
 
+    /// Drop one frame unconditionally (tail reclamation removes pages
+    /// from the file, so any cached image — even a dirty one — is
+    /// garbage). Returns false when the page was not resident.
+    pub fn remove(&mut self, id: PageId) -> bool {
+        self.frames.remove(&id).is_some()
+    }
+
     /// Hit/miss/eviction counters since construction.
     pub fn stats(&self) -> CacheStats {
         self.stats

@@ -1,0 +1,424 @@
+//! The crash-safe page free-list: how the engine reclaims the pages the
+//! copy-on-write B+tree supersedes, instead of leaking them forever.
+//!
+//! # On-disk format: linked trunk pages (SQLite-style)
+//!
+//! The durable free-list is a singly linked chain of **trunk pages**
+//! referenced from the store header. Each trunk (all little-endian):
+//!
+//! ```text
+//! u32  next trunk page id (0 = end of chain; page 0 is the header)
+//! u32  entry count in this trunk
+//! entry*: u32 free page id | u64 free epoch
+//! ```
+//!
+//! Unlike SQLite's trunk format, every entry carries the checkpoint
+//! **epoch at which the page became free** — the key to safe reuse under
+//! concurrent snapshot readers (below). A 4 KiB page holds
+//! [`TRUNK_CAPACITY`] entries.
+//!
+//! # Lifecycle: freed → durable → reusable
+//!
+//! * [`Freelist::free`] records a page as **pending**: it is dead in the
+//!   state being built, but still part of the last durable checkpoint —
+//!   recovery may need it — so it is not allocatable yet.
+//! * At checkpoint, the pager serializes survivors + pending into a
+//!   fresh trunk chain ([`super::pager::Pager::write_freelist`]) and the
+//!   header swap publishes it atomically with the new tree root. Only
+//!   then do pending pages become **reusable**, tagged with the new
+//!   epoch. (The previous chain's trunk pages join the pending set at
+//!   that point: they are durable state until the swap.)
+//! * [`Freelist::allocate`] hands back the lowest reusable id whose free
+//!   epoch clears the caller's **reuse gate** — lowest-first, so reuse
+//!   also compacts allocation toward the file head.
+//!
+//! # The epoch-gated reuse invariant
+//!
+//! A page freed at epoch `F` is absent from every committed tree at
+//! epochs `>= F`, but a snapshot reader pinned at an epoch `S < F` can
+//! still reach it. Rewriting it under such a reader would hand the
+//! reader another epoch's bytes — the one failure the shared read path's
+//! "committed pages are immutable" contract cannot tolerate. So reuse
+//! (and tail truncation) of an entry with free epoch `F` is allowed only
+//! when `F <= min pinned epoch` (the gate; `u64::MAX` when no reader is
+//! pinned — see [`super::shared::min_pinned_epoch`]). New readers always
+//! pin the *current* header epoch, which is `>= F` for every reusable
+//! entry, so the gate check cannot race a concurrent reader open.
+//!
+//! # Why frees need no WAL record type
+//!
+//! Frees ride the WAL implicitly: every pending free is a deterministic
+//! consequence of replaying the logged appends over the committed tree
+//! (a COW supersession frees the same page on replay that it freed in
+//! the original run), and compaction's frees are published by its own
+//! checkpoints before `compact` returns. A separate free-record type
+//! would double-apply during replay; the durable trunk chain written at
+//! each checkpoint is the free-list's whole crash-safety story.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io;
+
+use super::page::{Page, PageId, PAGE_SIZE};
+
+/// Trunk page header bytes: next-trunk id + entry count.
+const TRUNK_HDR: usize = 8;
+/// Bytes per entry: `u32` page id + `u64` free epoch.
+const ENTRY_BYTES: usize = 12;
+/// Entries one trunk page holds.
+pub const TRUNK_CAPACITY: usize = (PAGE_SIZE - TRUNK_HDR) / ENTRY_BYTES;
+
+fn corrupt(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("freelist: {msg}"))
+}
+
+/// In-memory free-list state (the pager owns one; see the module docs
+/// for the on-disk trunk chain it serializes to).
+#[derive(Debug, Default)]
+pub struct Freelist {
+    /// Durably free pages available for reuse: id → free epoch. Ordered
+    /// so serialization and by-id lookups are cheap.
+    reusable: BTreeMap<PageId, u64>,
+    /// The allocation index: free ids grouped by free epoch. Lets
+    /// [`Freelist::allocate`] consider only the gate-eligible epoch
+    /// buckets — a fully gate-blocked list (the long-pinned-reader
+    /// case, where the list grows while nothing clears the gate)
+    /// answers without touching a single entry, and a partially blocked
+    /// one scans eligible buckets, not every blocked entry.
+    by_epoch: BTreeMap<u64, BTreeSet<PageId>>,
+    /// Pages freed since the last checkpoint: dead in the state being
+    /// built, still live in the durable one — not allocatable yet.
+    pending: BTreeSet<PageId>,
+    /// Trunk pages of the *current durable* chain. They hold committed
+    /// metadata until the next header swap, so they are freed (into
+    /// `pending`) only when the next chain is written.
+    trunks: Vec<PageId>,
+}
+
+impl Freelist {
+    fn index_add(&mut self, id: PageId, epoch: u64) {
+        self.by_epoch.entry(epoch).or_default().insert(id);
+    }
+
+    fn index_remove(&mut self, id: PageId, epoch: u64) {
+        if let Some(ids) = self.by_epoch.get_mut(&epoch) {
+            ids.remove(&id);
+            if ids.is_empty() {
+                self.by_epoch.remove(&epoch);
+            }
+        }
+    }
+}
+
+impl Freelist {
+    /// An empty free-list.
+    pub fn new() -> Freelist {
+        Freelist::default()
+    }
+
+    /// Record `id` as freed by the state being built (pending until the
+    /// next checkpoint publishes it).
+    ///
+    /// # Errors
+    /// `InvalidData` when `id` is already free (a double free is always
+    /// an engine bug, never recoverable state).
+    pub fn free(&mut self, id: PageId) -> io::Result<()> {
+        if self.reusable.contains_key(&id) || !self.pending.insert(id) {
+            return Err(corrupt(&format!("double free of page {id}")));
+        }
+        Ok(())
+    }
+
+    /// Pop the lowest reusable page whose free epoch is `<= gate`
+    /// (returning its id and that epoch), or `None` when every entry is
+    /// gate-blocked or the list is empty. Cost is the number of
+    /// gate-eligible epoch *buckets*, never the number of blocked
+    /// entries: each eligible bucket contributes its lowest id and the
+    /// minimum wins.
+    pub fn allocate(&mut self, gate: u64) -> Option<(PageId, u64)> {
+        let (id, epoch) = self
+            .by_epoch
+            .range(..=gate)
+            .filter_map(|(epoch, ids)| ids.first().map(|id| (*id, *epoch)))
+            .min()?; // tuples compare by id first: lowest id wins
+        self.reusable.remove(&id);
+        self.index_remove(id, epoch);
+        Some((id, epoch))
+    }
+
+    /// Put back an entry popped by [`Freelist::allocate`] (the caller's
+    /// follow-up work failed).
+    pub fn reinsert(&mut self, id: PageId, epoch: u64) {
+        self.reusable.insert(id, epoch);
+        self.index_add(id, epoch);
+    }
+
+    /// Reusable entry's free epoch, when `id` is reusable.
+    pub fn free_epoch(&self, id: PageId) -> Option<u64> {
+        self.reusable.get(&id).copied()
+    }
+
+    /// Drop a reusable entry (tail reclamation). Returns false when `id`
+    /// was not reusable.
+    pub fn remove(&mut self, id: PageId) -> bool {
+        match self.reusable.remove(&id) {
+            Some(epoch) => {
+                self.index_remove(id, epoch);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Reusable entries.
+    pub fn reusable_len(&self) -> usize {
+        self.reusable.len()
+    }
+
+    /// Reusable entries whose free epoch clears `gate` — how much the
+    /// current readers allow to be reused or reclaimed right now.
+    /// Answered from the per-epoch index (O(eligible epoch buckets),
+    /// not O(entries)).
+    pub fn reusable_under(&self, gate: u64) -> usize {
+        self.by_epoch.range(..=gate).map(|(_, ids)| ids.len()).sum()
+    }
+
+    /// Pages freed since the last checkpoint.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// All free pages: reusable + pending (the `stat` "free" number).
+    pub fn len(&self) -> usize {
+        self.reusable.len() + self.pending.len()
+    }
+
+    /// True when no page is free.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Trunk pages of the current durable chain.
+    pub fn trunks(&self) -> &[PageId] {
+        &self.trunks
+    }
+
+    /// Forget everything (recovery rewinds to a durable chain via
+    /// [`Freelist::absorb_chain`] afterwards).
+    pub fn clear(&mut self) {
+        self.reusable.clear();
+        self.by_epoch.clear();
+        self.pending.clear();
+        self.trunks.clear();
+    }
+
+    /// Begin serializing the next chain: the old chain's trunk pages
+    /// become this epoch's frees (they are superseded the moment the new
+    /// chain is published). Idempotent once per checkpoint.
+    pub fn retire_trunks(&mut self) -> io::Result<()> {
+        for id in std::mem::take(&mut self.trunks) {
+            self.free(id)?;
+        }
+        Ok(())
+    }
+
+    /// Publish: pending entries become reusable at `free_epoch`, and
+    /// `trunks` becomes the new chain.
+    pub fn publish(&mut self, free_epoch: u64, trunks: Vec<PageId>) {
+        for id in std::mem::take(&mut self.pending) {
+            self.reusable.insert(id, free_epoch);
+            self.index_add(id, free_epoch);
+        }
+        self.trunks = trunks;
+    }
+
+    /// Snapshot of every entry the next durable chain must carry:
+    /// reusable entries keep their epochs, pending ones are tagged
+    /// `free_epoch`. Sorted by id.
+    pub fn chain_entries(&self, free_epoch: u64) -> Vec<(PageId, u64)> {
+        let mut out: Vec<(PageId, u64)> =
+            self.reusable.iter().map(|(id, e)| (*id, *e)).collect();
+        out.extend(self.pending.iter().map(|id| (*id, free_epoch)));
+        out.sort_unstable_by_key(|(id, _)| *id);
+        out
+    }
+
+    /// Install the decoded entries of one trunk page (used while walking
+    /// a durable chain at open). `bound` is the pager's page count: an
+    /// entry at or past it means the chain disagrees with the file — a
+    /// corrupt image that must not hand out unbacked pages.
+    ///
+    /// # Errors
+    /// `InvalidData` on an out-of-bounds, header (0) or duplicate entry.
+    pub fn absorb_chain(
+        &mut self,
+        trunk: PageId,
+        entries: &[(PageId, u64)],
+        bound: PageId,
+    ) -> io::Result<()> {
+        for &(id, epoch) in entries {
+            if id == 0 || id >= bound {
+                return Err(corrupt(&format!(
+                    "chain entry {id} out of bounds (file has {bound} pages)"
+                )));
+            }
+            if self.reusable.insert(id, epoch).is_some() {
+                return Err(corrupt(&format!("chain lists page {id} twice")));
+            }
+            self.index_add(id, epoch);
+        }
+        self.trunks.push(trunk);
+        Ok(())
+    }
+}
+
+/// Encode one trunk page.
+///
+/// # Panics
+/// Debug-asserts `entries.len() <= TRUNK_CAPACITY`.
+pub fn encode_trunk(next: PageId, entries: &[(PageId, u64)]) -> Page {
+    debug_assert!(entries.len() <= TRUNK_CAPACITY);
+    let mut page = Page::zeroed();
+    page.put_u32(0, next);
+    page.put_u32(4, entries.len() as u32);
+    let mut at = TRUNK_HDR;
+    for (id, epoch) in entries {
+        page.put_u32(at, *id);
+        page.put_u64(at + 4, *epoch);
+        at += ENTRY_BYTES;
+    }
+    page
+}
+
+/// Decode one trunk page into `(next trunk id, entries)`.
+///
+/// # Errors
+/// `InvalidData` when the entry count exceeds [`TRUNK_CAPACITY`].
+pub fn decode_trunk(page: &Page) -> io::Result<(PageId, Vec<(PageId, u64)>)> {
+    let next = page.get_u32(0);
+    let count = page.get_u32(4) as usize;
+    if count > TRUNK_CAPACITY {
+        return Err(corrupt(&format!("trunk claims {count} entries")));
+    }
+    let mut entries = Vec::with_capacity(count);
+    let mut at = TRUNK_HDR;
+    for _ in 0..count {
+        entries.push((page.get_u32(at), page.get_u64(at + 4)));
+        at += ENTRY_BYTES;
+    }
+    Ok((next, entries))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trunk_roundtrip() {
+        let entries: Vec<(PageId, u64)> = (0..TRUNK_CAPACITY as u32)
+            .map(|i| (i + 5, u64::from(i) * 7))
+            .collect();
+        let page = encode_trunk(42, &entries);
+        let (next, got) = decode_trunk(&page).unwrap();
+        assert_eq!(next, 42);
+        assert_eq!(got, entries);
+        // Empty trunk.
+        let (next, got) = decode_trunk(&encode_trunk(0, &[])).unwrap();
+        assert_eq!((next, got.len()), (0, 0));
+    }
+
+    #[test]
+    fn decode_rejects_oversized_count() {
+        let mut page = Page::zeroed();
+        page.put_u32(4, (TRUNK_CAPACITY + 1) as u32);
+        assert!(decode_trunk(&page).is_err());
+    }
+
+    #[test]
+    fn pending_is_not_allocatable_until_published() {
+        let mut fl = Freelist::new();
+        fl.free(7).unwrap();
+        fl.free(3).unwrap();
+        assert_eq!(fl.allocate(u64::MAX), None, "pending pages are off-limits");
+        assert_eq!((fl.pending_len(), fl.len()), (2, 2));
+        fl.publish(4, Vec::new());
+        assert_eq!(fl.allocate(u64::MAX), Some((3, 4)), "lowest id first");
+        assert_eq!(fl.allocate(u64::MAX), Some((7, 4)));
+        assert_eq!(fl.allocate(u64::MAX), None);
+    }
+
+    #[test]
+    fn allocate_respects_the_epoch_gate() {
+        let mut fl = Freelist::new();
+        fl.free(2).unwrap();
+        fl.publish(1, Vec::new());
+        fl.free(5).unwrap();
+        fl.publish(3, Vec::new());
+        // A reader pinned at epoch 2: only the epoch-1 free clears it.
+        assert_eq!(fl.allocate(2), Some((2, 1)));
+        assert_eq!(fl.allocate(2), None, "epoch-3 free is gate-blocked");
+        assert_eq!(fl.allocate(3), Some((5, 3)));
+    }
+
+    #[test]
+    fn per_epoch_index_stays_consistent() {
+        let mut fl = Freelist::new();
+        fl.free(2).unwrap();
+        fl.free(3).unwrap();
+        fl.publish(1, Vec::new());
+        fl.free(9).unwrap();
+        fl.publish(4, Vec::new());
+        assert_eq!(fl.reusable_under(0), 0);
+        assert_eq!(fl.reusable_under(1), 2);
+        assert_eq!(fl.reusable_under(4), 3);
+        assert_eq!(fl.allocate(0), None, "fully blocked answers via the index");
+        let (id, epoch) = fl.allocate(1).unwrap();
+        assert_eq!((id, epoch), (2, 1));
+        assert_eq!(fl.reusable_under(1), 1, "allocation decrements the index");
+        fl.reinsert(id, epoch);
+        assert_eq!(fl.reusable_under(1), 2, "reinsert restores it");
+        assert!(fl.remove(9));
+        assert_eq!(fl.reusable_under(u64::MAX), 2, "removal decrements it");
+        fl.clear();
+        assert_eq!(fl.reusable_under(u64::MAX), 0);
+    }
+
+    #[test]
+    fn double_free_is_rejected() {
+        let mut fl = Freelist::new();
+        fl.free(9).unwrap();
+        assert!(fl.free(9).is_err(), "pending double free");
+        fl.publish(1, Vec::new());
+        assert!(fl.free(9).is_err(), "reusable double free");
+    }
+
+    #[test]
+    fn retire_trunks_frees_the_old_chain() {
+        let mut fl = Freelist::new();
+        fl.free(4).unwrap();
+        fl.publish(1, vec![10, 11]);
+        fl.retire_trunks().unwrap();
+        assert_eq!(fl.pending_len(), 2, "old trunks are pending frees");
+        assert!(fl.trunks().is_empty());
+        // They are chain entries at the next epoch…
+        let entries = fl.chain_entries(2);
+        assert_eq!(entries, vec![(4, 1), (10, 2), (11, 2)]);
+        // …and only allocatable once published.
+        assert_eq!(fl.allocate(u64::MAX), Some((4, 1)));
+        fl.publish(2, vec![12]);
+        assert_eq!(fl.allocate(u64::MAX), Some((10, 2)));
+    }
+
+    #[test]
+    fn absorb_chain_validates_bounds_and_duplicates() {
+        let mut fl = Freelist::new();
+        fl.absorb_chain(9, &[(3, 1), (4, 2)], 10).unwrap();
+        assert_eq!(fl.reusable_len(), 2);
+        assert_eq!(fl.trunks(), &[9]);
+        let mut oob = Freelist::new();
+        assert!(oob.absorb_chain(9, &[(10, 1)], 10).is_err(), "id == bound");
+        assert!(oob.absorb_chain(9, &[(0, 1)], 10).is_err(), "header id");
+        let mut dup = Freelist::new();
+        dup.absorb_chain(8, &[(3, 1)], 10).unwrap();
+        assert!(dup.absorb_chain(9, &[(3, 2)], 10).is_err(), "duplicate id");
+    }
+}

@@ -19,6 +19,11 @@
 //! * [`pager`] — page allocation, read-through-cache access, ordered
 //!   flush (the exclusive write path), plus the [`pager::PageRead`]
 //!   trait that lets tree walkers run over either pager;
+//! * [`freelist`] — crash-safe space reclamation: pages the COW B+tree
+//!   supersedes are freed into an epoch-tagged free list (durable as a
+//!   SQLite-style linked trunk chain, published by each checkpoint's
+//!   header swap), reused lowest-first by the pager, and gated so a
+//!   pinned snapshot reader never sees a reachable page rewritten;
 //! * [`shared`] — the concurrent read path: a `Send + Sync`
 //!   [`shared::SharedPager`] with a sharded lock-per-bucket cache, and
 //!   snapshot-bounded [`shared::SnapshotReader`] handles that keep every
@@ -41,6 +46,7 @@
 
 pub mod btree;
 pub mod cache;
+pub mod freelist;
 pub mod page;
 pub mod pager;
 pub mod shared;
@@ -49,9 +55,13 @@ pub mod wal;
 
 pub use btree::BTree;
 pub use cache::{CacheStats, PageCache};
+pub use freelist::Freelist;
 pub use page::{Page, PageId, NO_PAGE, PAGE_SIZE};
 pub use pager::{PageRead, Pager};
-pub use shared::{ReadSnapshot, SharedPager, SnapshotReader};
+pub use shared::{
+    min_pinned_epoch, min_pinned_epoch_for, pin_epoch, EpochPin, ReadSnapshot, SharedPager,
+    SnapshotReader,
+};
 pub use vfs::{
     CrashImage, FaultPlan, FaultVfs, MemVfs, OpenMode, StdVfs, Vfs, VfsCursor, VfsFile,
 };

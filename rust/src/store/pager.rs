@@ -12,16 +12,30 @@
 //! with the WAL ([`super::wal`]): log logically first, flush pages at
 //! checkpoint, swap the header page last.
 //!
+//! Space reclamation: the pager owns a [`super::freelist::Freelist`].
+//! [`Pager::free`] records a page as pending-free; [`Pager::allocate`]
+//! prefers reusing a durably-free page (lowest id first, subject to the
+//! epoch [`Pager::set_reuse_gate`]) over growing the file; and
+//! [`Pager::write_freelist`]/[`Pager::load_freelist`] serialize the list
+//! as the linked trunk chain the store header points at.
+//! [`Pager::reclaim_tail`] gives freed tail pages back to the
+//! filesystem. Pages allocated since the last [`Pager::mark_committed`]
+//! are *fresh* ([`Pager::is_fresh`]): the B+tree mutates them in place
+//! even when their id sits below its copy-on-write watermark, which is
+//! what keeps reused low-id pages from being pointlessly re-copied.
+//!
 //! All file I/O goes through the [`super::vfs`] layer: the `*_with`
 //! constructors take any [`Vfs`], the plain ones default to
 //! [`StdVfs`] — which is how the fault-injection suite drives a pager
 //! over [`super::vfs::FaultVfs`] without the pager knowing.
 
+use std::collections::HashSet;
 use std::io;
 use std::path::Path;
 use std::sync::Arc;
 
 use super::cache::{CacheStats, PageCache};
+use super::freelist::{decode_trunk, encode_trunk, Freelist, TRUNK_CAPACITY};
 use super::page::{Page, PageId, PAGE_SIZE};
 use super::vfs::{OpenMode, StdVfs, Vfs, VfsFile};
 
@@ -49,6 +63,29 @@ pub struct Pager {
     writable: bool,
     disk_reads: u64,
     disk_writes: u64,
+    freelist: Freelist,
+    /// Pages allocated since the last [`Pager::mark_committed`]: they
+    /// belong to no committed state, so callers (the COW B+tree) may
+    /// mutate them in place regardless of their id.
+    fresh: HashSet<PageId>,
+    /// Free entries with a free epoch above this value are not
+    /// reusable/reclaimable (a snapshot reader pinned at an older epoch
+    /// could still reach them). `u64::MAX` = no reader pinned.
+    reuse_gate: u64,
+}
+
+fn base_pager(file: Arc<dyn VfsFile>, cache_pages: usize, num_pages: u32, writable: bool) -> Pager {
+    Pager {
+        file,
+        cache: PageCache::new(cache_pages),
+        num_pages,
+        writable,
+        disk_reads: 0,
+        disk_writes: 0,
+        freelist: Freelist::new(),
+        fresh: HashSet::new(),
+        reuse_gate: u64::MAX,
+    }
 }
 
 impl Pager {
@@ -78,14 +115,7 @@ impl Pager {
             vfs.create_dir_all(d)?;
         }
         let file = vfs.open(path, OpenMode::CreateTruncate)?;
-        Ok(Pager {
-            file,
-            cache: PageCache::new(cache_pages),
-            num_pages: 0,
-            writable: true,
-            disk_reads: 0,
-            disk_writes: 0,
-        })
+        Ok(base_pager(file, cache_pages, 0, true))
     }
 
     /// Open an existing paged file read/write on the real filesystem
@@ -108,14 +138,7 @@ impl Pager {
     pub fn open_with(vfs: &dyn Vfs, path: &Path, cache_pages: usize) -> io::Result<Pager> {
         let file = vfs.open(path, OpenMode::ReadWrite)?;
         let num_pages = (file.len()? / PAGE_SIZE as u64) as u32;
-        Ok(Pager {
-            file,
-            cache: PageCache::new(cache_pages),
-            num_pages,
-            writable: true,
-            disk_reads: 0,
-            disk_writes: 0,
-        })
+        Ok(base_pager(file, cache_pages, num_pages, true))
     }
 
     /// Open read-only (readers over immutable/committed files) on the
@@ -134,14 +157,7 @@ impl Pager {
     pub fn open_read_with(vfs: &dyn Vfs, path: &Path, cache_pages: usize) -> io::Result<Pager> {
         let file = vfs.open(path, OpenMode::Read)?;
         let num_pages = (file.len()? / PAGE_SIZE as u64) as u32;
-        Ok(Pager {
-            file,
-            cache: PageCache::new(cache_pages),
-            num_pages,
-            writable: false,
-            disk_reads: 0,
-            disk_writes: 0,
-        })
+        Ok(base_pager(file, cache_pages, num_pages, false))
     }
 
     /// Pages allocated in the file (committed or not).
@@ -187,8 +203,12 @@ impl Pager {
         Ok(())
     }
 
-    /// Allocate a fresh zeroed page at the end of the file. The page lives
-    /// in the cache (dirty) until eviction or flush writes it out.
+    /// Allocate a zeroed page: the lowest reusable free page whose free
+    /// epoch clears the reuse gate, or — when the free-list has nothing
+    /// eligible — a fresh page at the end of the file. Either way the
+    /// page lives in the cache (dirty) until eviction or flush writes it
+    /// out, and counts as *fresh* (see [`Pager::is_fresh`]) until the
+    /// next [`Pager::mark_committed`].
     ///
     /// # Errors
     /// `PermissionDenied` on a read-only pager; also fails when the
@@ -201,13 +221,213 @@ impl Pager {
                 "pager is read-only",
             ));
         }
+        if let Some((id, epoch)) = self.freelist.allocate(self.reuse_gate) {
+            debug_assert!(id > 0 && id < self.num_pages, "free-list entry out of bounds");
+            if let Err(e) = self.cache_insert(id, Page::zeroed(), true) {
+                self.freelist.reinsert(id, epoch);
+                return Err(e);
+            }
+            self.fresh.insert(id);
+            return Ok(id);
+        }
         let id = self.num_pages;
         self.num_pages = self
             .num_pages
             .checked_add(1)
             .ok_or_else(|| io::Error::new(io::ErrorKind::Other, "page id space exhausted"))?;
         self.cache_insert(id, Page::zeroed(), true)?;
+        self.fresh.insert(id);
         Ok(id)
+    }
+
+    /// Record `id` as freed by the state being built. The page stays
+    /// intact (it may belong to the last durable checkpoint, which
+    /// recovery falls back to) and becomes reusable only after
+    /// [`Pager::write_freelist`] + the caller's header swap publish the
+    /// free durably.
+    ///
+    /// # Errors
+    /// `PermissionDenied` on a read-only pager; `InvalidData` for the
+    /// header page, an out-of-bounds id, or a double free.
+    pub fn free(&mut self, id: PageId) -> io::Result<()> {
+        if !self.writable {
+            return Err(io::Error::new(
+                io::ErrorKind::PermissionDenied,
+                "pager is read-only",
+            ));
+        }
+        if id == 0 || id >= self.num_pages {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("free of page {id} out of bounds (file has {})", self.num_pages),
+            ));
+        }
+        debug_assert!(
+            !self.fresh.contains(&id),
+            "freeing fresh page {id}: fresh pages are mutated in place, never superseded"
+        );
+        self.freelist.free(id)
+    }
+
+    /// Set the reuse gate: the minimum epoch pinned by any live snapshot
+    /// reader ([`super::shared::min_pinned_epoch`]), or `u64::MAX` when
+    /// none is pinned. Free entries newer than the gate are neither
+    /// reused nor truncated, so a pinned snapshot can never observe a
+    /// page it can reach being rewritten.
+    pub fn set_reuse_gate(&mut self, gate: u64) {
+        self.reuse_gate = gate;
+    }
+
+    /// Current reuse gate (see [`Pager::set_reuse_gate`]).
+    pub fn reuse_gate(&self) -> u64 {
+        self.reuse_gate
+    }
+
+    /// True when `id` was allocated since the last
+    /// [`Pager::mark_committed`] — it belongs to no committed state, so
+    /// in-place mutation is always safe.
+    pub fn is_fresh(&self, id: PageId) -> bool {
+        self.fresh.contains(&id)
+    }
+
+    /// A checkpoint's header swap just published every current page:
+    /// nothing is fresh any more.
+    pub fn mark_committed(&mut self) {
+        self.fresh.clear();
+    }
+
+    /// All free pages (reusable + pending) — the `stat` "free" count.
+    pub fn free_page_count(&self) -> u32 {
+        self.freelist.len() as u32
+    }
+
+    /// Durably free pages currently available for reuse (ignoring the
+    /// gate).
+    pub fn reusable_page_count(&self) -> u32 {
+        self.freelist.reusable_len() as u32
+    }
+
+    /// Free pages the current reuse gate actually permits touching —
+    /// zero means reuse, relocation and truncation are all blocked by a
+    /// pinned reader (or there is nothing free).
+    pub fn reusable_under_gate(&self) -> u32 {
+        self.freelist.reusable_under(self.reuse_gate) as u32
+    }
+
+    /// Load the durable free-list by walking the trunk chain starting at
+    /// `head` (0 = empty list). Replaces any in-memory free-list state.
+    ///
+    /// # Errors
+    /// `InvalidData` on an out-of-bounds trunk or entry, a duplicate
+    /// entry, or a cycle in the chain; otherwise any page-read failure.
+    pub fn load_freelist(&mut self, head: PageId) -> io::Result<()> {
+        self.freelist.clear();
+        let mut next = head;
+        let mut walked = 0u32;
+        while next != 0 {
+            if next >= self.num_pages {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("freelist trunk {next} out of bounds ({})", self.num_pages),
+                ));
+            }
+            walked += 1;
+            if walked > self.num_pages {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "freelist trunk chain does not terminate",
+                ));
+            }
+            let page = self.read_copy(next)?;
+            let (nxt, entries) = decode_trunk(&page)?;
+            self.freelist.absorb_chain(next, &entries, self.num_pages)?;
+            next = nxt;
+        }
+        Ok(())
+    }
+
+    /// Serialize the free-list as a fresh trunk chain: the previous
+    /// chain's trunks become this epoch's frees, new trunk pages are
+    /// allocated (free-list first, like any allocation), the chain is
+    /// written through the cache, and pending frees are published as
+    /// reusable at `free_epoch`. Returns `(head page id, total free
+    /// entries)` for the caller's header.
+    ///
+    /// The caller must [`Pager::flush`] before swapping the header, and
+    /// must treat a *later* failure as fatal for this handle: the
+    /// in-memory list is already the new chain's state, so continuing to
+    /// allocate against it without the header swap would hand out pages
+    /// the durable (previous) state still owns.
+    ///
+    /// # Errors
+    /// Any allocation or page-write failure.
+    pub fn write_freelist(&mut self, free_epoch: u64) -> io::Result<(PageId, u32)> {
+        self.freelist.retire_trunks()?;
+        // Allocating a trunk can consume a reusable entry (shrinking the
+        // list) or grow the file (leaving it unchanged), so loop until
+        // the trunks on hand cover the entries that remain. Accepting
+        // `trunks >= needed` (an overshoot leaves one near-empty trunk)
+        // guarantees termination.
+        let mut trunks: Vec<PageId> = Vec::new();
+        loop {
+            let entries = self.freelist.len();
+            let needed = entries.div_ceil(TRUNK_CAPACITY);
+            if trunks.len() >= needed {
+                break;
+            }
+            trunks.push(self.allocate()?);
+        }
+        let entries = self.freelist.chain_entries(free_epoch);
+        let mut chunks = entries.chunks(TRUNK_CAPACITY);
+        for (i, &trunk) in trunks.iter().enumerate() {
+            let next = trunks.get(i + 1).copied().unwrap_or(0);
+            // An overshoot trunk holds zero entries but still links
+            // cleanly.
+            let chunk = chunks.next().unwrap_or(&[]);
+            self.put(trunk, encode_trunk(next, chunk))?;
+        }
+        let head = trunks.first().copied().unwrap_or(0);
+        let count = entries.len() as u32;
+        self.freelist.publish(free_epoch, trunks);
+        Ok((head, count))
+    }
+
+    /// Drop the longest run of gate-eligible free pages at the end of
+    /// the file from the page count (and the free-list, and the cache).
+    /// Returns how many pages were reclaimed. The *file* is not
+    /// truncated here — the caller first publishes the smaller committed
+    /// page count via its header swap, then calls
+    /// [`Pager::sync_file_len`]; a crash in between leaves a stale tail
+    /// that the next open ignores.
+    pub fn reclaim_tail(&mut self) -> u32 {
+        debug_assert_eq!(self.freelist.pending_len(), 0, "reclaim before publishing frees");
+        let mut cutoff = self.num_pages;
+        while cutoff > 1 {
+            match self.freelist.free_epoch(cutoff - 1) {
+                Some(epoch) if epoch <= self.reuse_gate => cutoff -= 1,
+                _ => break,
+            }
+        }
+        let reclaimed = self.num_pages - cutoff;
+        for id in cutoff..self.num_pages {
+            self.freelist.remove(id);
+            self.cache.remove(id);
+            self.fresh.remove(&id);
+        }
+        self.num_pages = cutoff;
+        reclaimed
+    }
+
+    /// Truncate the backing file to the current page count and fsync —
+    /// the final step of tail reclamation, run only after a header
+    /// committing the smaller count is durable.
+    ///
+    /// # Errors
+    /// Any truncation or fsync failure (retryable; the logical state is
+    /// already consistent).
+    pub fn sync_file_len(&mut self) -> io::Result<()> {
+        self.file.set_len(u64::from(self.num_pages) * PAGE_SIZE as u64)?;
+        self.file.sync()
     }
 
     /// Read a page through the cache.
@@ -322,6 +542,12 @@ impl Pager {
     /// a header. Stale tail pages in the file are simply overwritten by
     /// future allocations.
     ///
+    /// The in-memory free-list (and the fresh-page set) is rewound too:
+    /// it may describe a newer, never-committed state whose entries lie
+    /// beyond the truncated length — a post-crash store must never hand
+    /// those out. The caller reloads the durable chain with
+    /// [`Pager::load_freelist`] afterwards.
+    ///
     /// # Errors
     /// `InvalidData` when `pages` exceeds the file's allocated count (a
     /// header claiming more pages than exist is corruption).
@@ -336,6 +562,8 @@ impl Pager {
             ));
         }
         self.cache.clear();
+        self.freelist.clear();
+        self.fresh.clear();
         self.num_pages = pages;
         Ok(())
     }
@@ -525,6 +753,192 @@ mod tests {
         for i in 0..10u32 {
             assert_eq!(p.read(i).unwrap().get_u32(0), 1000 + i);
         }
+    }
+
+    #[test]
+    fn free_then_publish_then_reuse_lowest_first() {
+        use crate::store::vfs::MemVfs;
+        let mem = MemVfs::new();
+        let path = std::path::Path::new("/mem/freelist.pages");
+        let mut p = Pager::create_with(&mem, path, 8).unwrap();
+        for _ in 0..6u32 {
+            p.allocate().unwrap();
+        }
+        p.mark_committed();
+        p.free(4).unwrap();
+        p.free(2).unwrap();
+        // Pending frees are not reusable: allocation still grows the file.
+        assert_eq!(p.allocate().unwrap(), 6);
+        assert_eq!(p.free_page_count(), 2);
+        // Publish (checkpoint): the chain is written, frees become
+        // reusable at epoch 1.
+        let (head, count) = p.write_freelist(1).unwrap();
+        assert_eq!(count, 2);
+        assert!(head != 0, "two frees need a trunk page");
+        p.flush().unwrap();
+        p.mark_committed();
+        // Reuse prefers the lowest free id over growing the file.
+        let pages_before = p.num_pages();
+        assert_eq!(p.allocate().unwrap(), 2);
+        assert_eq!(p.allocate().unwrap(), 4);
+        assert_eq!(p.num_pages(), pages_before, "reuse must not grow the file");
+        // List exhausted: back to growing.
+        assert_eq!(p.allocate().unwrap(), pages_before);
+    }
+
+    #[test]
+    fn reuse_gate_blocks_epochs_a_reader_still_pins() {
+        use crate::store::vfs::MemVfs;
+        let mem = MemVfs::new();
+        let path = std::path::Path::new("/mem/gate.pages");
+        let mut p = Pager::create_with(&mem, path, 8).unwrap();
+        for _ in 0..5u32 {
+            p.allocate().unwrap();
+        }
+        p.mark_committed();
+        p.free(3).unwrap();
+        p.write_freelist(2).unwrap();
+        p.mark_committed();
+        // A reader pinned at epoch 1 blocks the epoch-2 free: the file
+        // grows instead of reusing page 3.
+        p.set_reuse_gate(1);
+        assert_eq!(p.allocate().unwrap(), p.num_pages() - 1, "gate-blocked: file grows");
+        // Gate lifted (reader dropped): the free is reusable again.
+        p.set_reuse_gate(2);
+        assert_eq!(p.allocate().unwrap(), 3);
+    }
+
+    #[test]
+    fn freelist_chain_survives_reopen() {
+        use crate::store::vfs::MemVfs;
+        let mem = MemVfs::new();
+        let path = std::path::Path::new("/mem/chain.pages");
+        let head;
+        {
+            let mut p = Pager::create_with(&mem, path, 8).unwrap();
+            for _ in 0..8u32 {
+                p.allocate().unwrap();
+            }
+            p.mark_committed();
+            for id in [2u32, 5, 6] {
+                p.free(id).unwrap();
+            }
+            let (h, count) = p.write_freelist(3).unwrap();
+            assert_eq!(count, 3);
+            head = h;
+            p.flush().unwrap();
+        }
+        let mut q = Pager::open_with(&mem, path, 8).unwrap();
+        q.load_freelist(head).unwrap();
+        assert_eq!(q.free_page_count(), 3);
+        assert_eq!(q.allocate().unwrap(), 2);
+        assert_eq!(q.allocate().unwrap(), 5);
+        assert_eq!(q.allocate().unwrap(), 6);
+    }
+
+    #[test]
+    fn multi_trunk_chain_roundtrips() {
+        use crate::store::freelist::TRUNK_CAPACITY;
+        use crate::store::vfs::MemVfs;
+        let mem = MemVfs::new();
+        let path = std::path::Path::new("/mem/bigchain.pages");
+        let n = (TRUNK_CAPACITY + 40) as u32; // forces a 2-trunk chain
+        let mut p = Pager::create_with(&mem, path, 8).unwrap();
+        for _ in 0..(n + 10) {
+            p.allocate().unwrap();
+        }
+        p.mark_committed();
+        for id in 1..=n {
+            p.free(id).unwrap();
+        }
+        let (head, count) = p.write_freelist(1).unwrap();
+        assert_eq!(count, n);
+        p.flush().unwrap();
+        drop(p);
+        let mut q = Pager::open_with(&mem, path, 8).unwrap();
+        q.load_freelist(head).unwrap();
+        assert_eq!(q.free_page_count(), n);
+        assert_eq!(q.allocate().unwrap(), 1, "lowest entry survives the chain walk");
+    }
+
+    #[test]
+    fn reclaim_tail_then_sync_len_shrinks_the_file() {
+        use crate::store::vfs::MemVfs;
+        let mem = MemVfs::new();
+        let path = std::path::Path::new("/mem/reclaim.pages");
+        let mut p = Pager::create_with(&mem, path, 8).unwrap();
+        for _ in 0..10u32 {
+            p.allocate().unwrap();
+        }
+        p.flush().unwrap();
+        p.mark_committed();
+        // Free a tail run [6..10) and an interior page (3).
+        for id in [3u32, 6, 7, 8, 9] {
+            p.free(id).unwrap();
+        }
+        // First publish: the frees are pending, so the trunk is a fresh
+        // tail page (10) — it pins the tail, and that is correct: it is
+        // durable chain metadata.
+        p.write_freelist(1).unwrap();
+        p.flush().unwrap();
+        p.mark_committed();
+        assert_eq!(p.reclaim_tail(), 0, "the durable trunk pins the tail");
+        // Second publish: the trunk relocates to the lowest free slot
+        // (3), the old trunk (10) joins the list, and the whole tail run
+        // [6..11) becomes reclaimable.
+        p.write_freelist(2).unwrap();
+        p.flush().unwrap();
+        p.mark_committed();
+        assert_eq!(p.reclaim_tail(), 5);
+        assert_eq!(p.num_pages(), 6);
+        assert!(p.read(6).is_err(), "reclaimed page is out of bounds");
+        p.flush().unwrap();
+        p.sync_file_len().unwrap();
+        let q = Pager::open_with(&mem, path, 8).unwrap();
+        assert_eq!(q.num_pages(), 6, "file truncated to the reclaimed length");
+        assert_eq!(p.free_page_count(), 0, "every free was either reused or reclaimed");
+    }
+
+    #[test]
+    fn reset_to_rewinds_the_freelist_too() {
+        // Regression (post-crash recovery): a free-list describing a
+        // newer, never-committed state must not survive reset_to — it
+        // could hand out pages beyond the truncated length.
+        use crate::store::vfs::MemVfs;
+        let mem = MemVfs::new();
+        let path = std::path::Path::new("/mem/resetfl.pages");
+        let mut p = Pager::create_with(&mem, path, 8).unwrap();
+        for _ in 0..8u32 {
+            p.allocate().unwrap();
+        }
+        p.flush().unwrap();
+        p.mark_committed();
+        // Uncommitted epoch: free two pages (one beyond the rewind
+        // point) and publish them in memory only.
+        p.free(6).unwrap();
+        p.free(2).unwrap();
+        p.write_freelist(1).unwrap();
+        // Crash-recover to a 4-page committed state.
+        p.reset_to(4).unwrap();
+        assert_eq!(p.free_page_count(), 0, "free-list must be rewound");
+        let id = p.allocate().unwrap();
+        assert_eq!(id, 4, "allocation grows from the rewind point, not from stale frees");
+        // And a stale chain whose entries lie beyond the rewind point is
+        // rejected rather than trusted.
+        let mut q = Pager::create_with(&mem, std::path::Path::new("/mem/resetfl2.pages"), 8)
+            .unwrap();
+        for _ in 0..8u32 {
+            q.allocate().unwrap();
+        }
+        q.mark_committed();
+        q.free(6).unwrap();
+        let (head, _) = q.write_freelist(1).unwrap();
+        q.flush().unwrap();
+        q.reset_to(5).unwrap();
+        assert!(
+            q.load_freelist(head).is_err(),
+            "a chain reaching past the rewound length must be rejected, not trusted"
+        );
     }
 
     #[test]

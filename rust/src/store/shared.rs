@@ -35,11 +35,29 @@
 //! Page 0 (the header) is deliberately **never cached** here — it is the
 //! one page a checkpoint rewrites in place. Snapshot acquisition reads
 //! it fresh from disk via [`SharedPager::read_header_fresh`].
+//!
+//! **The snapshot registry.** With the free-list
+//! ([`super::freelist`]), "committed pages are immutable" weakens to
+//! "immutable while any snapshot can still reach them": a page freed at
+//! epoch `F` may later be *reused* (rewritten) or truncated away. The
+//! process-wide registry here tracks, per `(VFS instance, index path)`,
+//! the epochs pinned by live readers ([`pin_epoch`] — `PagedReader`
+//! holds a pin for its lifetime). The writer reads
+//! [`min_pinned_epoch`] as its reuse gate: a page freed at `F` is
+//! rewritten or truncated only when every pinned epoch is `>= F`, so a
+//! pinned snapshot can never observe a page it can reach changing under
+//! it. (Like the engine's single-live-writer contract, the registry is
+//! per-process: cross-process readers need external coordination.)
+//! One consequence for cache soundness: a `SharedPager`'s cache is only
+//! guaranteed fresh for snapshots whose epoch is pinned for the cache's
+//! whole lifetime — which is exactly how `PagedReader` uses it (one
+//! pager, one snapshot, one pin).
 
+use std::collections::{BTreeMap, HashMap};
 use std::io;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, PoisonError};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
 
 use super::cache::{CacheStats, PageCache};
 use super::page::{Page, PageId, PAGE_SIZE};
@@ -50,6 +68,82 @@ use super::vfs::{OpenMode, StdVfs, Vfs, VfsFile};
 /// let a handful of reader threads miss on different pages without
 /// queueing on one mutex, not to scale to hundreds of cores.
 const CACHE_SHARDS: usize = 8;
+
+/// Pinned-epoch multiset per `(VFS instance id, index path)`.
+type PinMap = HashMap<(u64, PathBuf), BTreeMap<u64, u32>>;
+
+fn pin_registry() -> &'static Mutex<PinMap> {
+    static PINS: OnceLock<Mutex<PinMap>> = OnceLock::new();
+    PINS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn lock_pins() -> std::sync::MutexGuard<'static, PinMap> {
+    pin_registry().lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// An RAII pin on one store's checkpoint epoch: while it lives, the
+/// writer's free-list will neither reuse nor truncate any page freed at
+/// a later epoch — every page this snapshot can reach stays byte-stable.
+/// Dropped automatically when the owning reader goes away.
+#[derive(Debug)]
+pub struct EpochPin {
+    vfs_id: u64,
+    path: PathBuf,
+    epoch: u64,
+}
+
+impl EpochPin {
+    /// The pinned epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+impl Drop for EpochPin {
+    fn drop(&mut self) {
+        let mut pins = lock_pins();
+        let key = (self.vfs_id, std::mem::take(&mut self.path));
+        if let Some(epochs) = pins.get_mut(&key) {
+            if let Some(n) = epochs.get_mut(&self.epoch) {
+                *n -= 1;
+                if *n == 0 {
+                    epochs.remove(&self.epoch);
+                }
+            }
+            if epochs.is_empty() {
+                pins.remove(&key);
+            }
+        }
+    }
+}
+
+/// Register a live snapshot at `epoch` on the store identified by
+/// `(vfs_id, path)` — use the index file's path and
+/// [`super::vfs::Vfs::instance_id`]. The pin lasts until the returned
+/// guard is dropped.
+pub fn pin_epoch(vfs_id: u64, path: &Path, epoch: u64) -> EpochPin {
+    let mut pins = lock_pins();
+    *pins
+        .entry((vfs_id, path.to_path_buf()))
+        .or_default()
+        .entry(epoch)
+        .or_insert(0) += 1;
+    EpochPin { vfs_id, path: path.to_path_buf(), epoch }
+}
+
+/// The smallest epoch currently pinned on `(vfs_id, path)`, or `None`
+/// when no reader is pinned — the writer's reuse gate (`None` means
+/// every free entry is fair game, i.e. a gate of `u64::MAX`).
+pub fn min_pinned_epoch(vfs_id: u64, path: &Path) -> Option<u64> {
+    min_pinned_epoch_for(&(vfs_id, path.to_path_buf()))
+}
+
+/// Allocation-free variant of [`min_pinned_epoch`] for callers that
+/// cache their registry key — the writer refreshes its reuse gate on
+/// the append hot path, which should not rebuild a `PathBuf` per call.
+pub fn min_pinned_epoch_for(key: &(u64, PathBuf)) -> Option<u64> {
+    lock_pins().get(key).and_then(|epochs| epochs.keys().next().copied())
+}
 
 /// A committed read snapshot: everything a reader handle needs to stay
 /// inside one checkpoint's state.
@@ -332,6 +426,30 @@ mod tests {
         // A snapshot taken after the append can read the new pages.
         let mut r = sp.reader(ReadSnapshot { bound: 8, epoch: 1 });
         assert_eq!(r.read_page(7).unwrap().get_u32(0), 1007);
+    }
+
+    #[test]
+    fn pin_registry_tracks_the_minimum_and_releases_on_drop() {
+        let path = std::path::Path::new("/registry/test.pstore");
+        // Unique vfs id so parallel tests never share an entry.
+        let vfs_id = 0xDEAD_0001;
+        assert_eq!(min_pinned_epoch(vfs_id, path), None);
+        let p5 = pin_epoch(vfs_id, path, 5);
+        let p3 = pin_epoch(vfs_id, path, 3);
+        let p3b = pin_epoch(vfs_id, path, 3);
+        assert_eq!(min_pinned_epoch(vfs_id, path), Some(3));
+        assert_eq!(p3.epoch(), 3);
+        drop(p3);
+        assert_eq!(min_pinned_epoch(vfs_id, path), Some(3), "second epoch-3 pin holds");
+        drop(p3b);
+        assert_eq!(min_pinned_epoch(vfs_id, path), Some(5));
+        drop(p5);
+        assert_eq!(min_pinned_epoch(vfs_id, path), None, "registry entry fully released");
+        // Different vfs instances (same path) are independent stores.
+        let other = pin_epoch(vfs_id + 1, path, 1);
+        assert_eq!(min_pinned_epoch(vfs_id, path), None);
+        assert_eq!(min_pinned_epoch(vfs_id + 1, path), Some(1));
+        drop(other);
     }
 
     #[test]

@@ -156,6 +156,30 @@ pub trait Vfs: Send + Sync {
     fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
         read_all(self.open(path, OpenMode::Read)?.as_ref())
     }
+
+    /// An identity for this filesystem *instance*, so process-wide state
+    /// keyed by file path (the snapshot-pin registry in
+    /// [`super::shared`]) can tell two in-memory filesystems holding the
+    /// same path apart. The default, 0, means "the one real filesystem":
+    /// correct for [`StdVfs`] (all instances see the same disk) and for
+    /// any wrapper that forwards to it. [`MemVfs`] assigns each instance
+    /// a unique id; wrappers like [`FaultVfs`] delegate to their inner
+    /// VFS.
+    fn instance_id(&self) -> u64 {
+        0
+    }
+
+    /// One canonical spelling of `path` for identity-keyed process-wide
+    /// state (the snapshot-pin registry): two spellings of the same
+    /// on-disk file (relative vs absolute, `./`-prefixed, via symlink)
+    /// must map to one key, or a writer consulting the registry under
+    /// one spelling would miss a reader pinned under another — and the
+    /// epoch gate with it. [`StdVfs`] canonicalizes; [`MemVfs`] keys
+    /// files by their verbatim path, so identity is already canonical
+    /// there (the default); wrappers delegate to their inner VFS.
+    fn registry_key(&self, path: &Path) -> PathBuf {
+        path.to_path_buf()
+    }
 }
 
 /// Read an entire [`VfsFile`] into memory.
@@ -304,6 +328,29 @@ impl Vfs for StdVfs {
     fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
         std::fs::read(path)
     }
+
+    fn registry_key(&self, path: &Path) -> PathBuf {
+        // An existing file canonicalizes whole — resolving a symlinked
+        // `.pstore` to its target, so both spellings share one key.
+        if let Ok(canon) = std::fs::canonicalize(path) {
+            return canon;
+        }
+        // The file may not exist yet (a store being created):
+        // canonicalize the parent and re-attach the file name; fall back
+        // to absolutizing against the current directory so at least
+        // relative-vs-absolute spellings converge even for
+        // not-yet-created parents.
+        let canon_parent = path
+            .parent()
+            .filter(|p| !p.as_os_str().is_empty())
+            .and_then(|p| std::fs::canonicalize(p).ok());
+        match (canon_parent, path.file_name()) {
+            (Some(dir), Some(name)) => dir.join(name),
+            _ if path.is_absolute() => path.to_path_buf(),
+            _ => std::env::current_dir()
+                .map_or_else(|_| path.to_path_buf(), |cwd| cwd.join(path)),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -315,15 +362,28 @@ impl Vfs for StdVfs {
 /// file keys by parent path, so path spellings must be consistent —
 /// which they are for every store/format (all paths come from one
 /// `dir.join(name)`).
-#[derive(Default)]
 pub struct MemVfs {
     files: Mutex<HashMap<PathBuf, Arc<Mutex<Vec<u8>>>>>,
+    /// Unique per instance (see [`Vfs::instance_id`]): two `MemVfs`
+    /// holding the same path are different stores.
+    id: u64,
+}
+
+impl Default for MemVfs {
+    fn default() -> MemVfs {
+        MemVfs::new()
+    }
 }
 
 impl MemVfs {
     /// An empty in-memory filesystem.
     pub fn new() -> MemVfs {
-        MemVfs::default()
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static NEXT_MEMVFS_ID: AtomicU64 = AtomicU64::new(1);
+        MemVfs {
+            files: Mutex::new(HashMap::new()),
+            id: NEXT_MEMVFS_ID.fetch_add(1, Ordering::Relaxed),
+        }
     }
 
     /// Build a filesystem from a `path -> bytes` snapshot (e.g. a
@@ -449,6 +509,10 @@ impl Vfs for MemVfs {
             .filter(|p| p.parent() == Some(dir))
             .cloned()
             .collect())
+    }
+
+    fn instance_id(&self) -> u64 {
+        self.id
     }
 }
 
@@ -888,6 +952,15 @@ impl Vfs for FaultVfs {
 
     fn list_dir(&self, dir: &Path) -> io::Result<Vec<PathBuf>> {
         self.inner.list_dir(dir)
+    }
+
+    fn instance_id(&self) -> u64 {
+        // Faults do not change which store the files belong to.
+        self.inner.instance_id()
+    }
+
+    fn registry_key(&self, path: &Path) -> PathBuf {
+        self.inner.registry_key(path)
     }
 }
 

@@ -147,6 +147,119 @@ fn reader_opened_before_append_never_sees_the_new_epoch() {
 }
 
 #[test]
+fn compaction_against_a_live_pinned_snapshot_never_disturbs_it() {
+    // The epoch-gated reuse invariant, end to end: while a reader's
+    // snapshot pin is live, a writer may churn, checkpoint and compact —
+    // but every page the snapshot can reach stays byte-stable (the
+    // free-list refuses to reuse or truncate gate-blocked pages), so the
+    // pinned reader keeps serving its exact epoch. Once the pin drops,
+    // compaction actually reclaims.
+    let dir = tmp("compact-pinned");
+    {
+        let mut store = PagedStore::create(&dir, "d", 8).unwrap();
+        for i in 0..60u32 {
+            let g = format!("old-{}", i % 6);
+            store.append(g.as_bytes(), &Example::text(&format!("v{i}"))).unwrap();
+        }
+        store.commit().unwrap();
+        store.checkpoint().unwrap();
+    }
+    let pinned = PagedReader::open(&dir, "d", 8).unwrap();
+    let want = serial_contents(&pinned);
+    assert_eq!(pinned.num_examples(), 60);
+
+    // Writer: heavy COW churn + compaction while the snapshot is pinned.
+    {
+        let mut store = PagedStore::open(&dir, "d", 8).unwrap();
+        for round in 0..5u32 {
+            for i in 0..40u32 {
+                let g = format!("old-{}", i % 6);
+                store.append(g.as_bytes(), &Example::text(&format!("new{round}-{i}"))).unwrap();
+            }
+            store.commit().unwrap();
+            store.checkpoint().unwrap();
+        }
+        let report = store.compact().unwrap();
+        // Every free page postdates the pinned epoch, so the gate blocks
+        // the whole compaction: no page the snapshot can reach is moved
+        // or truncated.
+        assert_eq!(report.passes, 0, "a fully gate-blocked compact is a no-op: {report:?}");
+        assert_eq!(report.pages_after, report.pages_before);
+    }
+
+    // The pinned snapshot is untouched — same groups, same bytes — even
+    // when read *after* churn + compaction rewrote the file around it.
+    assert_eq!(pinned.num_examples(), 60);
+    for (k, v) in &want {
+        let mut got = Vec::new();
+        assert!(pinned.visit_group(k, |ex| got.push(ex.encode())).unwrap());
+        assert_eq!(&got, v, "group {k:?} changed under a pinned snapshot during compaction");
+    }
+
+    // Drop the pin: a fresh compaction can now reclaim the old epoch's
+    // garbage, and the file shrinks below its pinned-era size.
+    drop(pinned);
+    let size_pinned_era = std::fs::metadata(dir.join("d.pstore")).unwrap().len();
+    {
+        let mut store = PagedStore::open(&dir, "d", 8).unwrap();
+        let report = store.compact().unwrap();
+        assert!(
+            report.pages_reclaimed > 0,
+            "with no pins, the old epoch's garbage must be reclaimable: {report:?}"
+        );
+    }
+    let size_unpinned = std::fs::metadata(dir.join("d.pstore")).unwrap().len();
+    assert!(
+        size_unpinned < size_pinned_era,
+        "file must shrink once the pin is gone ({size_pinned_era} -> {size_unpinned})"
+    );
+
+    // A fresh reader sees the full post-churn state.
+    let after = PagedReader::open(&dir, "d", 8).unwrap();
+    assert_eq!(after.num_examples(), 60 + 5 * 40);
+    assert!(after.epoch() > 0);
+}
+
+#[test]
+fn compaction_under_a_pin_never_grows_the_file() {
+    // Regression: with a pinned snapshot blocking some (or all) free
+    // pages, compaction must not relocate — the copies could not land in
+    // the blocked holes, so a rewrite would *grow* the file by up to the
+    // live tree size per pass. It may still truncate a gate-eligible
+    // tail run, but the file never gets bigger.
+    let dir = tmp("compact-nogrow");
+    {
+        let mut store = PagedStore::create(&dir, "d", 8).unwrap();
+        for round in 0..4u32 {
+            for i in 0..30u32 {
+                let g = format!("g{}", i % 5);
+                store.append(g.as_bytes(), &Example::text(&format!("a{round}-{i}"))).unwrap();
+            }
+            store.commit().unwrap();
+            store.checkpoint().unwrap();
+        }
+    }
+    // Pin the current epoch: frees published before this open are
+    // gate-eligible, frees published after it are blocked — the partial
+    // mix the relocation guard exists for.
+    let pinned = PagedReader::open(&dir, "d", 8).unwrap();
+    let mut store = PagedStore::open(&dir, "d", 8).unwrap();
+    for i in 0..20u32 {
+        let g = format!("g{}", i % 5);
+        store.append(g.as_bytes(), &Example::text(&format!("b{i}"))).unwrap();
+    }
+    store.commit().unwrap();
+    store.checkpoint().unwrap();
+    let report = store.compact().unwrap();
+    assert_eq!(report.pages_moved, 0, "no relocation while any free page is pinned");
+    assert!(
+        report.pages_after <= report.pages_before,
+        "compaction under a pin must never grow the file: {report:?}"
+    );
+    drop(pinned);
+}
+
+#[test]
 fn hierarchical_reader_is_shared_across_threads() {
     let dir = tmp("hier");
     let ds = dataset(16, 23);

@@ -50,7 +50,11 @@ struct WorkloadLog {
 /// The deterministic matrix workload: 3 checkpoint epochs, each with two
 /// commit batches plus a couple of appends that reach the checkpoint
 /// *without* an intervening commit (so the WAL-buffer-dropped-at-reset
-/// path is exercised too). Returns `Err` at the first injected crash.
+/// path is exercised too), and — after the second epoch, once COW
+/// supersessions have stranded free pages — a full `compact()`, so the
+/// matrix enumerates crashes inside every free/checkpoint/compact write
+/// site too (trunk-chain writes, the rewrite passes, the tail
+/// truncation). Returns `Err` at the first injected crash.
 fn run_workload(vfs: &FaultVfs, log: &mut WorkloadLog) -> anyhow::Result<()> {
     // A small cache so appends themselves trigger eviction write-backs —
     // one more class of write site the matrix must cover.
@@ -88,6 +92,14 @@ fn run_workload(vfs: &FaultVfs, log: &mut WorkloadLog) -> anyhow::Result<()> {
         }
         store.checkpoint()?;
         log.durable.push((vfs.ops_done(), log.appends.len()));
+        if epoch == 1 {
+            // Two epochs of COW churn are behind us: compact. A crash
+            // anywhere inside (rewrite pass, its checkpoints, the file
+            // truncation) must recover to a state with exactly the same
+            // contents — compaction moves pages, never examples.
+            store.compact()?;
+            log.durable.push((vfs.ops_done(), log.appends.len()));
+        }
     }
     Ok(())
 }
@@ -359,6 +371,106 @@ fn property_random_crash_and_reopen_recovers_a_committed_prefix() {
             "post-crash appends must extend the recovered prefix",
         )
     });
+}
+
+#[test]
+fn freed_then_reused_pages_never_leak_uncommitted_data_into_recovery() {
+    // The reclamation-specific leak: a page freed at an old epoch is
+    // reused and REWRITTEN on disk (eviction write-backs under a tiny
+    // cache) by appends that never commit; the crash image therefore
+    // holds new bytes at a page id *below* the committed bound. Recovery
+    // (and a reader open) must land on exactly the committed contents —
+    // the durable tree cannot reach the reused page and the durable
+    // chain still lists it as free.
+    let fv = FaultVfs::new(Arc::new(MemVfs::new()));
+    let dir = Path::new("/reuse/store");
+    let mut committed: BTreeMap<Vec<u8>, Vec<Vec<u8>>> = BTreeMap::new();
+    {
+        let mut store = PagedStore::create_with(&fv, dir, "s", 2).unwrap();
+        // Churn across checkpoints so the free list is primed.
+        for round in 0..4 {
+            for i in 0..25 {
+                let group = format!("g{}", i % 4).into_bytes();
+                let ex = Example::text(&format!("c{round}-{i}"));
+                store.append(&group, &ex).unwrap();
+                committed.entry(group).or_default().push(ex.encode());
+            }
+            store.commit().unwrap();
+            store.checkpoint().unwrap();
+        }
+        assert!(store.stat().free_pages > 0, "churn must strand free pages");
+        // Uncommitted epoch: enough appends to reuse freed pages and
+        // evict them to disk. No commit, no checkpoint.
+        for i in 0..80 {
+            store.append(b"g0", &Example::text(&format!("lost{i}"))).unwrap();
+        }
+        // Crash with every completed write applied — the harshest image
+        // for this leak, since it maximizes surviving uncommitted bytes.
+    }
+    let image = MemVfs::from_map(fv.crash_snapshot(CrashImage::AllApplied));
+    let mut recovered = PagedStore::open_with(&image, dir, "s", 8).unwrap();
+    // The WAL may legally resurrect a prefix of the uncommitted appends
+    // (frames the 64 KiB buffer flushed before the crash); everything
+    // recovered must still be an exact oracle prefix — never a torn mix,
+    // never bytes from a clobbered reused page.
+    let extra = recovered.num_examples() as usize - committed.values().map(Vec::len).sum::<usize>();
+    let mut want = committed.clone();
+    for i in 0..extra {
+        want.entry(b"g0".to_vec())
+            .or_default()
+            .push(Example::text(&format!("lost{i}")).encode());
+    }
+    assert_eq!(store_contents(&mut recovered), want);
+    drop(recovered);
+    let reader = PagedReader::open_with(&image, dir, "s", 8).unwrap();
+    let mut via_reader = BTreeMap::new();
+    for key in reader.keys() {
+        let mut v = Vec::new();
+        assert!(reader.visit_group(key, |ex| v.push(ex.encode())).unwrap());
+        via_reader.insert(key.clone(), v);
+    }
+    assert_eq!(via_reader, want, "reader recovery must agree");
+}
+
+#[test]
+fn reclaim_workload_ends_with_file_size_proportional_to_live_data() {
+    // The acceptance workload: append → supersede (COW churn) →
+    // checkpoint → compact must end with the index file proportional to
+    // live data, not to the churn history.
+    let vfs = MemVfs::new();
+    let dir = Path::new("/reclaim/store");
+    let mut store = PagedStore::create_with(&vfs, dir, "s", 16).unwrap();
+    for round in 0..12 {
+        for i in 0..40 {
+            store
+                .append(format!("g{}", i % 6).as_bytes(), &Example::text(&format!("r{round}-{i}")))
+                .unwrap();
+        }
+        store.commit().unwrap();
+        store.checkpoint().unwrap();
+    }
+    let before = store.stat();
+    assert!(
+        before.free_pages > 0,
+        "twelve epochs of COW churn must strand superseded pages: {before:?}"
+    );
+    let report = store.compact().unwrap();
+    let after = store.stat();
+    assert!(
+        after.total_pages < before.total_pages,
+        "compact must shrink the file: {report:?}"
+    );
+    // Proportional to live data: total is live plus at most a sliver of
+    // bookkeeping slack (free pages not at the tail after the final
+    // pass), far below the pre-compact garbage.
+    let slack = u64::from(before.free_pages) / 2;
+    assert!(
+        u64::from(after.total_pages) <= u64::from(after.live_pages) + slack,
+        "post-compact size must be proportional to live data: {before:?} -> {after:?}"
+    );
+    // And the store still serves every row.
+    let n: usize = store_contents(&mut store).values().map(Vec::len).sum();
+    assert_eq!(n, 12 * 40);
 }
 
 #[test]
