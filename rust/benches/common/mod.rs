@@ -59,29 +59,98 @@ pub fn vocab_for(spec: &DatasetSpec, backend: &dyn ModelBackend) -> WordPiece {
     vb.build(backend.vocab_size())
 }
 
+/// One bench measurement carrying an explicit shard-count dimension —
+/// the `bench-trend` CI job tracks the parallel write/read paths per
+/// shard count, so the dimension must be machine-readable rather than
+/// string-mangled into the key.
+pub struct ShardRow {
+    /// Metric name without the shard dimension (e.g.
+    /// `"fedccnews.paged_write_s"`).
+    pub metric: String,
+    /// Shard count this row was measured at.
+    pub shards: u32,
+    /// Measured value.
+    pub value: f64,
+}
+
 /// Write a machine-readable bench summary to `results/BENCH_<name>.json`
 /// (hand-rolled JSON — the offline registry has no serde). The CI
-/// `bench-smoke` job uploads these as artifacts, so every push leaves a
-/// perf data point future PRs can diff against.
+/// `bench-smoke` job uploads these as artifacts and the `bench-trend`
+/// job diffs them against `results/baseline/`, so every push leaves a
+/// perf data point future PRs are gated on.
 ///
 /// Schema: `{"bench": <name>, "scale": <GROUPER_BENCH_SCALE>,
 /// "metrics": {<key>: <f64>, ...}}` with keys like
-/// `"fedccnews.paged_iter_s"`.
+/// `"fedccnews.paged_iter_s"`. Key suffix conventions the trend checker
+/// understands: `_s` = seconds (lower is better), `_eps` = throughput in
+/// examples/sec (higher is better); anything else is informational.
 pub fn write_bench_json(name: &str, metrics: &[(String, f64)]) {
+    write_bench_json_sharded(name, metrics, &[]);
+}
+
+/// [`write_bench_json`] plus shard-dimensioned rows: emits an extra
+/// `"rows": [{"metric": .., "shards": N, "value": ..}, ...]` array, and
+/// mirrors each row into the flat metrics map as
+/// `<metric>.shards<N><suffix>` (splitting the metric's `_s`/`_eps`
+/// suffix around the dimension) so the trend checker compares shard
+/// counts independently.
+pub fn write_bench_json_sharded(name: &str, metrics: &[(String, f64)], rows: &[ShardRow]) {
+    let mut flat: Vec<(String, f64)> = metrics.to_vec();
+    for row in rows {
+        let (stem, suffix) = match row.metric.rfind('_') {
+            Some(i) => (&row.metric[..i], &row.metric[i..]),
+            None => (row.metric.as_str(), ""),
+        };
+        flat.push((format!("{stem}.shards{}{suffix}", row.shards), row.value));
+    }
+    // JSON has no NaN/inf — and clamping to 0.0 would hand the
+    // bench-trend gate a fake "excellent" measurement (or poison the
+    // baseline on the next refresh). A non-finite value means the bench
+    // is broken: drop the key loudly so the trend checker reports it as
+    // a coverage loss instead of a pass.
+    flat.retain(|(key, value)| {
+        let keep = value.is_finite();
+        if !keep {
+            println!("bench json: DROPPING non-finite metric {key} = {value}");
+        }
+        keep
+    });
+    let rows: Vec<&ShardRow> = rows
+        .iter()
+        .filter(|row| {
+            let keep = row.value.is_finite();
+            if !keep {
+                println!(
+                    "bench json: DROPPING non-finite row {} (shards {})",
+                    row.metric, row.shards
+                );
+            }
+            keep
+        })
+        .collect();
     std::fs::create_dir_all("results").unwrap();
     let mut out = String::new();
     out.push_str(&format!(
         "{{\n  \"bench\": \"{name}\",\n  \"scale\": {},\n  \"metrics\": {{\n",
         scale()
     ));
-    for (i, (key, value)) in metrics.iter().enumerate() {
-        let sep = if i + 1 == metrics.len() { "" } else { "," };
-        // JSON has no NaN/inf; clamp to null-ish zero rather than emit
-        // an unparsable file.
-        let value = if value.is_finite() { *value } else { 0.0 };
+    for (i, (key, value)) in flat.iter().enumerate() {
+        let sep = if i + 1 == flat.len() { "" } else { "," };
         out.push_str(&format!("    \"{key}\": {value}{sep}\n"));
     }
-    out.push_str("  }\n}\n");
+    out.push_str("  }");
+    if !rows.is_empty() {
+        out.push_str(",\n  \"rows\": [\n");
+        for (i, row) in rows.iter().enumerate() {
+            let sep = if i + 1 == rows.len() { "" } else { "," };
+            out.push_str(&format!(
+                "    {{\"metric\": \"{}\", \"shards\": {}, \"value\": {}}}{sep}\n",
+                row.metric, row.shards, row.value
+            ));
+        }
+        out.push_str("  ]");
+    }
+    out.push_str("\n}\n");
     let path = format!("results/BENCH_{name}.json");
     std::fs::write(&path, out).unwrap();
     println!("bench json -> {path}");

@@ -123,7 +123,54 @@ fn main() {
     println!("paper reference (MB): CIFAR-100 156 / 0.40 / 0.74; FedCCnews 1996 / 0.08 / 1.16; FedBookCO 6643 / 0.001 / 0.10 (paged column: ours, bounded by the LRU cache)");
 
     table12b_reclamation(&mut bench_metrics);
+    table12c_sharded_footprint(&mut bench_metrics);
     common::write_bench_json("table12_memory", &bench_metrics);
+}
+
+/// Table 12c: on-disk footprint and balance of a sharded paged set vs
+/// the single store — hash placement should spread groups (and bytes)
+/// roughly evenly, and the summed index/data bytes should stay within
+/// per-shard fixed overhead (header + trunk pages) of the 1-shard run.
+fn table12c_sharded_footprint(bench_metrics: &mut Vec<(String, f64)>) {
+    use grouper::formats::ShardedPagedReader;
+    use grouper::pipeline::{run_partition_paged, PagedPartitionOptions, PartitionOptions};
+
+    let mut spec = DatasetSpec::fedccnews_mini(common::scaled(200).max(32), 13);
+    spec.max_group_words = 20_000;
+    let ds = SyntheticTextDataset::new(spec);
+    let mut t = Table::new(
+        "Table 12c — sharded paged set footprint (index + data bytes, group balance)",
+        &["Shards", "index bytes", "data bytes", "groups min/max per shard"],
+    );
+    for shards in [1usize, 4] {
+        let dir = common::bench_dir("table12c").join(format!("s{shards}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        run_partition_paged(
+            &ds,
+            &FeatureKey::new("domain"),
+            &dir,
+            "data",
+            &PartitionOptions::default(),
+            &PagedPartitionOptions { shards, cache_pages: 64, hash_seed: 0 },
+        )
+        .unwrap();
+        let r = ShardedPagedReader::open(&dir, "data", 8).unwrap();
+        let stats = r.shard_stats();
+        let index: u64 = stats.iter().map(|s| s.index_bytes).sum();
+        let data: u64 = stats.iter().map(|s| s.data_bytes).sum();
+        let gmin = stats.iter().map(|s| s.num_groups).min().unwrap_or(0);
+        let gmax = stats.iter().map(|s| s.num_groups).max().unwrap_or(0);
+        t.row(vec![
+            format!("{shards}"),
+            bytes(index as usize),
+            bytes(data as usize),
+            format!("{gmin} / {gmax}"),
+        ]);
+        bench_metrics.push((format!("sharded{shards}.index_bytes"), index as f64));
+        bench_metrics.push((format!("sharded{shards}.data_bytes"), data as f64));
+    }
+    t.print();
+    t.write_csv("results/table12c_sharded_footprint.csv").unwrap();
 }
 
 /// Table 12b: the append→supersede→checkpoint→compact workload. The

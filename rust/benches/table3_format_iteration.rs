@@ -18,14 +18,22 @@
 
 mod common;
 
+use std::sync::Arc;
+
 use grouper::corpus::{BaseDataset, DatasetSpec, GroupedCifarLike, SyntheticTextDataset};
+use grouper::fed::trainer::{fetch_cohort_sharded, CohortFetchSpec};
 use grouper::formats::streaming::{StreamingConfig, StreamingDataset};
 use grouper::formats::{
     HierarchicalReader, HierarchicalStore, InMemoryDataset, PagedReader, PagedStore,
+    ShardedPagedReader,
 };
-use grouper::pipeline::{run_partition, FeatureKey, PartitionOptions};
+use grouper::pipeline::{
+    run_partition, run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
+};
+use grouper::tokenizer::VocabBuilder;
 use grouper::util::rng::Rng;
 use grouper::util::table::Table;
+use grouper::util::threadpool::ThreadPool;
 use grouper::util::timer::time_trials;
 
 const TRIALS: usize = 5;
@@ -265,9 +273,110 @@ fn main() {
     modeled.write_csv("results/table3b_storage_model.csv").unwrap();
     table.write_csv("results/table3_format_iteration.csv").unwrap();
     concurrent.write_csv("results/table3c_concurrent_readers.csv").unwrap();
-    common::write_bench_json("table3_format_iteration", &bench_metrics);
+    let shard_rows = table3d_sharded(&mut bench_metrics);
+    common::write_bench_json_sharded("table3_format_iteration", &bench_metrics, &shard_rows);
     println!(
         "paper reference (seconds): CIFAR-100 0.078 / 25.1 / 9.9; FedCCnews 0.55 / >7200 / 248; \
          FedBookCO OOM / >7200 / 192 (no paged column — appendable stores are this repo's extension)"
     );
+}
+
+/// Table 3d — sharded paged stores, shard count 1/2/4/8:
+///
+/// * **write path**: wall-clock (and examples/sec) to materialize the
+///   workload as a sharded paged set. 1 shard is the classic serial
+///   `PagedStore::build`; S > 1 runs the group-by-key buckets straight
+///   into S concurrent shard WALs (no intermediate TFRecord pass), so
+///   this column is exactly "how much does parallelizing the last
+///   serial stage buy".
+/// * **read path**: one round's cohort fetch (every group, tokenized and
+///   batched like the trainer does) through the unified reader with 8
+///   fetch workers — striped across S independent page caches.
+fn table3d_sharded(bench_metrics: &mut Vec<(String, f64)>) -> Vec<common::ShardRow> {
+    // Dedicated workload: enough groups to balance 8 shards even at
+    // smoke scale, group sizes big enough that append cost (WAL + tree)
+    // dominates the spill overhead the parallel path pays.
+    let mut spec = DatasetSpec::fedccnews_mini(common::scaled(600).max(64), 11);
+    spec.max_group_words = 30_000;
+    let ds = SyntheticTextDataset::new(spec);
+    let mut vb = VocabBuilder::new();
+    for t in ds.stream_all_text() {
+        vb.feed(&t);
+    }
+    let tokenizer = Arc::new(vb.build(512));
+    let fetch = CohortFetchSpec { tau: 8, batch_size: 8, tokens_per_example: 33, pad_id: 0 };
+    let pool = ThreadPool::new(8);
+
+    let mut table = Table::new(
+        "Table 3d — sharded paged stores: materialize (write) + cohort fetch (read) vs shards",
+        &[
+            "Shards",
+            "materialize (s)",
+            "write throughput (ex/s)",
+            "cohort fetch, 8 workers (s)",
+            "speedup vs 1 shard",
+        ],
+    );
+    let mut rows: Vec<common::ShardRow> = Vec::new();
+    let mut write_serial = 0.0f64;
+    for shards in [1usize, 2, 4, 8] {
+        // Fresh dir every time: the write path must do all its work.
+        let dir = common::bench_dir("table3d").join(format!("s{shards}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let paged = PagedPartitionOptions { shards, cache_pages: 64, hash_seed: 0 };
+        let report = run_partition_paged(
+            &ds,
+            &FeatureKey::new("domain"),
+            &dir,
+            "data",
+            &PartitionOptions::default(),
+            &paged,
+        )
+        .unwrap();
+        let write_s = report.wall_secs;
+        if shards == 1 {
+            write_serial = write_s;
+        }
+        let eps = report.num_examples as f64 / write_s.max(1e-9);
+
+        let reader = Arc::new(ShardedPagedReader::open(&dir, "data", 64).unwrap());
+        let mut cohort = reader.keys().to_vec();
+        Rng::new(5).shuffle(&mut cohort);
+        let read_time = time_trials(3, || {
+            let got =
+                fetch_cohort_sharded(&reader, &cohort, &tokenizer, fetch, Some(&pool)).unwrap();
+            assert_eq!(got.len(), cohort.len());
+        });
+
+        table.row(vec![
+            format!("{shards}"),
+            format!("{write_s:.3}"),
+            format!("{eps:.0}"),
+            format!("{read_time}"),
+            format!("{:.2}x", write_serial / write_s.max(1e-9)),
+        ]);
+        rows.push(common::ShardRow {
+            metric: "fedccnews.paged_write_s".into(),
+            shards: shards as u32,
+            value: write_s,
+        });
+        rows.push(common::ShardRow {
+            metric: "fedccnews.paged_write_eps".into(),
+            shards: shards as u32,
+            value: eps,
+        });
+        rows.push(common::ShardRow {
+            metric: "fedccnews.paged_cohort_fetch_s".into(),
+            shards: shards as u32,
+            value: read_time.mean,
+        });
+    }
+    bench_metrics.push(("table3d.examples".into(), ds.len() as f64));
+    table.print();
+    table.write_csv("results/table3d_sharded_paged.csv").unwrap();
+    println!(
+        "(write column: --shards 1 is the serial single-WAL build; S > 1 appends the \
+         group-by-key buckets into S shard WALs concurrently)"
+    );
+    rows
 }

@@ -16,6 +16,10 @@ use grouper::util::table::Table;
 use grouper::util::timer::MeanStd;
 
 fn main() {
+    // Table 4c needs no model artifacts (it times only the data phase),
+    // so it runs even where PJRT is absent.
+    table4c_sharded_cohort_fetch();
+
     let model = std::env::var("GROUPER_BENCH_MODEL").unwrap_or_else(|_| "tiny".into());
     if !common::have_artifacts(&model) {
         return;
@@ -100,4 +104,79 @@ fn main() {
     workers_table.print();
     workers_table.write_csv("results/table4b_read_workers.csv").unwrap();
     println!("the multi-threaded cohort fetch should beat serial from ~4 workers up (tokenize+batch per client is independent work)");
+}
+
+/// Table 4c: the trainer's *data phase* over a sharded paged set — one
+/// cohort (32 clients) fetched per "round" through
+/// `fetch_cohort_sharded`, sweeping read workers at a fixed shard count
+/// and shard count at fixed workers. Striping across shards gives the
+/// parallel fetch independent page caches and index trees to hit.
+fn table4c_sharded_cohort_fetch() {
+    use grouper::corpus::SyntheticTextDataset;
+    use grouper::fed::trainer::{fetch_cohort_sharded, CohortFetchSpec};
+    use grouper::formats::ShardedPagedReader;
+    use grouper::pipeline::{
+        run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
+    };
+    use grouper::tokenizer::VocabBuilder;
+    use grouper::util::rng::Rng;
+    use grouper::util::threadpool::ThreadPool;
+    use grouper::util::timer::time_trials;
+    use std::sync::Arc;
+
+    let mut spec = DatasetSpec::fedc4_mini(common::scaled(400).max(64), 42);
+    spec.max_group_words = 20_000;
+    let ds = SyntheticTextDataset::new(spec);
+    let mut vb = VocabBuilder::new();
+    for t in ds.stream_all_text() {
+        vb.feed(&t);
+    }
+    let tokenizer = Arc::new(vb.build(512));
+    let fetch = CohortFetchSpec { tau: 8, batch_size: 16, tokens_per_example: 33, pad_id: 0 };
+
+    let mut t = Table::new(
+        "Table 4c — sharded cohort fetch (32 clients/round, data phase only)",
+        &["Shards", "Read Workers", "Cohort fetch (s)", "Speedup vs 1/1"],
+    );
+    // Materializations are scale-dependent: always rebuild, or a stale
+    // set from a different GROUPER_BENCH_SCALE would be timed silently.
+    for shards in [1usize, 4, 8] {
+        let _ = std::fs::remove_dir_all(common::bench_dir("table4c").join(format!("s{shards}")));
+    }
+    let mut baseline = 0.0f64;
+    for (shards, workers) in [(1usize, 1usize), (1, 8), (4, 8), (8, 8)] {
+        let dir = common::bench_dir("table4c").join(format!("s{shards}"));
+        if !dir.join("data.pset").exists() {
+            run_partition_paged(
+                &ds,
+                &FeatureKey::new(ds.spec.key_feature),
+                &dir,
+                "data",
+                &PartitionOptions::default(),
+                &PagedPartitionOptions { shards, cache_pages: 64, hash_seed: 0 },
+            )
+            .unwrap();
+        }
+        let reader = Arc::new(ShardedPagedReader::open(&dir, "data", 64).unwrap());
+        let mut keys = reader.keys().to_vec();
+        Rng::new(3).shuffle(&mut keys);
+        keys.truncate(32);
+        let pool = (workers > 1).then(|| ThreadPool::new(workers));
+        let timing = time_trials(5, || {
+            let got =
+                fetch_cohort_sharded(&reader, &keys, &tokenizer, fetch, pool.as_ref()).unwrap();
+            assert_eq!(got.len(), keys.len());
+        });
+        if baseline == 0.0 {
+            baseline = timing.mean;
+        }
+        t.row(vec![
+            format!("{shards}"),
+            format!("{workers}"),
+            format!("{timing}"),
+            format!("{:.2}x", baseline / timing.mean.max(1e-12)),
+        ]);
+    }
+    t.print();
+    t.write_csv("results/table4c_sharded_fetch.csv").unwrap();
 }

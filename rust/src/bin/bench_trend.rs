@@ -1,0 +1,439 @@
+//! `bench-trend` — the CI perf-regression gate.
+//!
+//! Compares a fresh `bench-smoke` run's machine-readable
+//! `BENCH_*.json` files (see `benches/common::write_bench_json`)
+//! against the committed snapshot in `results/baseline/` and fails on a
+//! throughput regression:
+//!
+//! * keys ending `_s` are wall-clock seconds (lower is better): a
+//!   regression is current > baseline × (1 + threshold) **and** more
+//!   than `--floor-secs` absolute slowdown (tiny smoke timings are
+//!   noise-dominated; the absolute floor keeps millisecond jitter from
+//!   failing PRs);
+//! * keys ending `_eps` are examples/sec throughput (higher is better):
+//!   a regression is current < baseline × (1 − threshold), checked only
+//!   when the baseline itself is ≥ `--floor-eps`;
+//! * everything else (byte counts, example counts) is informational and
+//!   never gates.
+//!
+//! New metrics (current-only) are noted but not gated until the
+//! baseline is refreshed to include them. The reverse is a failure:
+//! a baselined key missing from the current run — like a whole missing
+//! file — means the bench stopped measuring something it used to
+//! (e.g. the emitter dropped a non-finite value), which is itself a
+//! trend regression; retiring a metric means refreshing the baseline
+//! in the same PR.
+//!
+//! Refresh the baseline by copying a trusted run's `results/BENCH_*.json`
+//! over `results/baseline/` (see `results/baseline/README.md`).
+//!
+//! ```text
+//! bench-trend --baseline rust/results/baseline --current rust/results \
+//!             [--threshold 0.25] [--floor-secs 0.10] [--floor-eps 1.0]
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+fn main() -> ExitCode {
+    match run(std::env::args().skip(1).collect()) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("bench-trend error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+struct Options {
+    baseline: PathBuf,
+    current: PathBuf,
+    threshold: f64,
+    floor_secs: f64,
+    floor_eps: f64,
+}
+
+fn parse_args(args: Vec<String>) -> Result<Options> {
+    let mut baseline = None;
+    let mut current = None;
+    let mut threshold = 0.25;
+    let mut floor_secs = 0.10;
+    let mut floor_eps = 1.0;
+    let mut i = 0;
+    while i < args.len() {
+        let flag = args[i].as_str();
+        let value = args.get(i + 1).with_context(|| format!("{flag} needs a value"))?;
+        match flag {
+            "--baseline" => baseline = Some(PathBuf::from(value)),
+            "--current" => current = Some(PathBuf::from(value)),
+            "--threshold" => threshold = value.parse().context("--threshold must be a number")?,
+            "--floor-secs" => {
+                floor_secs = value.parse().context("--floor-secs must be a number")?
+            }
+            "--floor-eps" => floor_eps = value.parse().context("--floor-eps must be a number")?,
+            other => bail!("unknown flag {other:?} (see --baseline/--current/--threshold)"),
+        }
+        i += 2;
+    }
+    Ok(Options {
+        baseline: baseline.context("missing --baseline DIR")?,
+        current: current.context("missing --current DIR")?,
+        threshold,
+        floor_secs,
+        floor_eps,
+    })
+}
+
+fn run(args: Vec<String>) -> Result<bool> {
+    let opts = parse_args(args)?;
+    let mut baseline_files: Vec<PathBuf> = std::fs::read_dir(&opts.baseline)
+        .with_context(|| format!("reading baseline dir {}", opts.baseline.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .map(|n| {
+                    let n = n.to_string_lossy();
+                    n.starts_with("BENCH_") && n.ends_with(".json")
+                })
+                .unwrap_or(false)
+        })
+        .collect();
+    baseline_files.sort();
+    if baseline_files.is_empty() {
+        bail!("no BENCH_*.json baselines in {}", opts.baseline.display());
+    }
+
+    let mut regressions = 0usize;
+    let mut compared = 0usize;
+    for base_path in &baseline_files {
+        let name = base_path.file_name().unwrap().to_string_lossy().into_owned();
+        let cur_path = opts.current.join(&name);
+        if !cur_path.exists() {
+            println!("REGRESSION {name}: bench stopped emitting (no current file)");
+            regressions += 1;
+            continue;
+        }
+        let (base_scale, base) = load_metrics(base_path)?;
+        let (cur_scale, cur) = load_metrics(&cur_path)?;
+        // Raw seconds/throughput only compare meaningfully at one
+        // workload size: a full-scale run against the smoke-scale
+        // baseline would flag a ~50x "regression" (or a smaller-scale
+        // run would mask a real one).
+        if let (Some(b), Some(c)) = (base_scale, cur_scale) {
+            if (b - c).abs() > 1e-9 {
+                bail!(
+                    "{name}: GROUPER_BENCH_SCALE mismatch — baseline ran at {b}, current at \
+                     {c}; re-run the bench at the baseline's scale (or refresh the baseline)"
+                );
+            }
+        }
+        for (key, base_v) in &base {
+            let Some(cur_v) = cur.get(key) else {
+                // A baselined metric that stopped being emitted is a
+                // coverage loss (e.g. the emitter dropped a non-finite
+                // value): gate it. Retiring a metric legitimately means
+                // refreshing the baseline in the same PR.
+                println!("REGRESSION {name}/{key}: baselined metric missing from current run");
+                regressions += 1;
+                continue;
+            };
+            let verdict = judge(key, *base_v, *cur_v, &opts);
+            match verdict {
+                Verdict::Skip => {}
+                Verdict::Ok => {
+                    compared += 1;
+                    println!("  ok   {name}/{key}: {base_v:.4} -> {cur_v:.4}");
+                }
+                Verdict::Regressed(why) => {
+                    compared += 1;
+                    regressions += 1;
+                    println!("REGRESSION {name}/{key}: {base_v:.4} -> {cur_v:.4} ({why})");
+                }
+            }
+        }
+        for key in cur.keys() {
+            if !base.contains_key(key) {
+                println!("  note {name}/{key}: new metric, no baseline yet (not gated)");
+            }
+        }
+    }
+    println!(
+        "bench-trend: {compared} gated comparisons, {regressions} regression(s) \
+         (threshold {:.0}%, floors {:.2}s / {:.1} ex/s)",
+        100.0 * opts.threshold,
+        opts.floor_secs,
+        opts.floor_eps
+    );
+    Ok(regressions == 0)
+}
+
+enum Verdict {
+    /// Informational key; never gates.
+    Skip,
+    Ok,
+    Regressed(String),
+}
+
+fn judge(key: &str, base: f64, cur: f64, opts: &Options) -> Verdict {
+    if key.ends_with("_s") {
+        // A non-positive wall-clock is not a fast run, it is a broken
+        // measurement (the emitter drops non-finite values, so a zero
+        // here means the bench or the baseline stopped measuring).
+        if cur <= 0.0 || base <= 0.0 {
+            return Verdict::Regressed("non-positive wall-clock measurement".to_string());
+        }
+        if cur > base * (1.0 + opts.threshold) && (cur - base) > opts.floor_secs {
+            return Verdict::Regressed(format!(
+                "{:.0}% slower, past the {:.2}s noise floor",
+                100.0 * (cur / base.max(1e-12) - 1.0),
+                opts.floor_secs
+            ));
+        }
+        Verdict::Ok
+    } else if key.ends_with("_eps") {
+        if base >= opts.floor_eps && cur < base * (1.0 - opts.threshold) {
+            return Verdict::Regressed(format!(
+                "throughput down {:.0}%",
+                100.0 * (1.0 - cur / base.max(1e-12))
+            ));
+        }
+        Verdict::Ok
+    } else {
+        Verdict::Skip
+    }
+}
+
+/// Load one emitter-produced JSON file: its `"scale"`
+/// (GROUPER_BENCH_SCALE, if present) and its `"metrics"` map.
+fn load_metrics(path: &Path) -> Result<(Option<f64>, BTreeMap<String, f64>)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let value = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+    let Json::Object(top) = value else {
+        bail!("{}: top level is not an object", path.display());
+    };
+    let mut scale = None;
+    let mut metrics = None;
+    for (k, v) in top {
+        match (k.as_str(), v) {
+            ("scale", Json::Number(n)) => scale = Some(n),
+            ("metrics", Json::Object(m)) => metrics = Some(m),
+            _ => {}
+        }
+    }
+    let Some(metrics) = metrics else {
+        bail!("{}: no \"metrics\" object", path.display());
+    };
+    let mut out = BTreeMap::new();
+    for (k, v) in metrics {
+        if let Json::Number(n) = v {
+            out.insert(k, n);
+        }
+    }
+    Ok((scale, out))
+}
+
+/// A deliberately small JSON reader — just enough for the bench
+/// emitter's output (objects, arrays, strings without exotic escapes,
+/// numbers, literals). The offline registry has no serde; the emitter
+/// and this parser are the two halves of one in-repo contract.
+enum Json {
+    Object(Vec<(String, Json)>),
+    Array(Vec<Json>),
+    String(String),
+    Number(f64),
+    Bool(bool),
+    Null,
+}
+
+impl Json {
+    fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing bytes at offset {pos}");
+        }
+        Ok(v)
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, ch: u8) -> Result<()> {
+    skip_ws(b, pos);
+    if *pos >= b.len() || b[*pos] != ch {
+        bail!("expected {:?} at offset {}", ch as char, *pos);
+    }
+    *pos += 1;
+    Ok(())
+}
+
+fn peek(b: &[u8], pos: &mut usize) -> Result<u8> {
+    skip_ws(b, pos);
+    b.get(*pos).copied().context("unexpected end of input")
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    match peek(b, pos)? {
+        b'{' => parse_object(b, pos),
+        b'[' => parse_array(b, pos),
+        b'"' => Ok(Json::String(parse_string(b, pos)?)),
+        b't' => parse_literal(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_literal(b, pos, "false", Json::Bool(false)),
+        b'n' => parse_literal(b, pos, "null", Json::Null),
+        _ => parse_number(b, pos),
+    }
+}
+
+fn parse_literal(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        bail!("bad literal at offset {}", *pos);
+    }
+}
+
+fn parse_object(b: &[u8], pos: &mut usize) -> Result<Json> {
+    expect(b, pos, b'{')?;
+    let mut out = Vec::new();
+    if peek(b, pos)? == b'}' {
+        *pos += 1;
+        return Ok(Json::Object(out));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        expect(b, pos, b':')?;
+        let value = parse_value(b, pos)?;
+        out.push((key, value));
+        match peek(b, pos)? {
+            b',' => *pos += 1,
+            b'}' => {
+                *pos += 1;
+                return Ok(Json::Object(out));
+            }
+            c => bail!("expected ',' or '}}', got {:?} at offset {}", c as char, *pos),
+        }
+    }
+}
+
+fn parse_array(b: &[u8], pos: &mut usize) -> Result<Json> {
+    expect(b, pos, b'[')?;
+    let mut out = Vec::new();
+    if peek(b, pos)? == b']' {
+        *pos += 1;
+        return Ok(Json::Array(out));
+    }
+    loop {
+        out.push(parse_value(b, pos)?);
+        match peek(b, pos)? {
+            b',' => *pos += 1,
+            b']' => {
+                *pos += 1;
+                return Ok(Json::Array(out));
+            }
+            c => bail!("expected ',' or ']', got {:?} at offset {}", c as char, *pos),
+        }
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    if b.get(*pos) != Some(&b'"') {
+        bail!("expected string at offset {}", *pos);
+    }
+    *pos += 1;
+    // Accumulate raw bytes and validate UTF-8 once at the closing
+    // quote — pushing `byte as char` would mis-decode multi-byte
+    // UTF-8 sequences (the input is a &str, so the bytes are valid).
+    let mut out: Vec<u8> = Vec::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return String::from_utf8(out).context("invalid UTF-8 in string");
+            }
+            b'\\' => {
+                *pos += 1;
+                let esc = b.get(*pos).context("dangling escape")?;
+                out.push(match esc {
+                    b'"' => b'"',
+                    b'\\' => b'\\',
+                    b'/' => b'/',
+                    b'n' => b'\n',
+                    b't' => b'\t',
+                    b'r' => b'\r',
+                    other => bail!("unsupported escape \\{}", *other as char),
+                });
+                *pos += 1;
+            }
+            c => {
+                out.push(c);
+                *pos += 1;
+            }
+        }
+    }
+    bail!("unterminated string")
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos]).unwrap();
+    let n: f64 = s.parse().with_context(|| format!("bad number {s:?} at offset {start}"))?;
+    Ok(Json::Number(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_emitter_shaped_json() {
+        let text = "{\n  \"bench\": \"t\",\n  \"scale\": 0.02,\n  \"metrics\": {\n    \
+                    \"a.x_s\": 1.5,\n    \"b.y_eps\": 100\n  },\n  \"rows\": [\n    \
+                    {\"metric\": \"m_s\", \"shards\": 4, \"value\": 0.5}\n  ]\n}\n";
+        let Json::Object(top) = Json::parse(text).unwrap() else { panic!("not an object") };
+        assert_eq!(top.len(), 4);
+    }
+
+    #[test]
+    fn judge_applies_threshold_and_floors() {
+        let opts = Options {
+            baseline: PathBuf::new(),
+            current: PathBuf::new(),
+            threshold: 0.25,
+            floor_secs: 0.10,
+            floor_eps: 1.0,
+        };
+        // Seconds: 30% slower AND past the floor -> regression.
+        assert!(matches!(judge("a_s", 1.0, 1.3, &opts), Verdict::Regressed(_)));
+        // A zeroed wall-clock is a broken measurement, not a fast run.
+        assert!(matches!(judge("a_s", 1.0, 0.0, &opts), Verdict::Regressed(_)));
+        assert!(matches!(judge("a_s", 0.0, 1.0, &opts), Verdict::Regressed(_)));
+        // 30% slower but inside the absolute noise floor -> ok.
+        assert!(matches!(judge("a_s", 0.010, 0.013, &opts), Verdict::Ok));
+        // Within threshold -> ok.
+        assert!(matches!(judge("a_s", 1.0, 1.2, &opts), Verdict::Ok));
+        // Throughput down 50% -> regression.
+        assert!(matches!(judge("a_eps", 100.0, 50.0, &opts), Verdict::Regressed(_)));
+        // Tiny baseline throughput -> not gated.
+        assert!(matches!(judge("a_eps", 0.5, 0.1, &opts), Verdict::Ok));
+        // Informational keys never gate.
+        assert!(matches!(judge("a_bytes", 1.0, 100.0, &opts), Verdict::Skip));
+    }
+}

@@ -29,4 +29,6 @@ pub use client_data::ClientBatches;
 pub use personalize::{personalization_eval, PersonalizationResult};
 pub use schedules::Schedule;
 pub use server_opt::{Adam, ServerOptimizer, Sgd};
-pub use trainer::{train, RoundMetrics, TrainOutput, TrainerConfig};
+pub use trainer::{
+    fetch_cohort_sharded, train, CohortFetchSpec, RoundMetrics, TrainOutput, TrainerConfig,
+};

@@ -26,6 +26,7 @@ use super::client_data::{build_client_batches, ClientBatches};
 use super::schedules::Schedule;
 use super::server_opt::{Adam, ServerOptimizer};
 use crate::config::{FedAlgorithm, FedConfig};
+use crate::formats::paged_sharded::ShardedPagedReader;
 use crate::formats::streaming::StreamingConfig;
 use crate::grouper::PartitionedDataset;
 use crate::runtime::{ModelBackend, Params};
@@ -82,6 +83,73 @@ impl TrainerConfig {
     pub fn with_read_workers(mut self, read_workers: usize) -> Self {
         self.read_workers = read_workers;
         self
+    }
+}
+
+/// Shape of one client's round batches, bundled so the cohort-fetch
+/// helpers stay under a sane argument count (mirrors the per-round
+/// parameters `train` derives from its backend + [`FedConfig`]).
+#[derive(Clone, Copy, Debug)]
+pub struct CohortFetchSpec {
+    /// Batches per client per round.
+    pub tau: usize,
+    /// Sequences per batch.
+    pub batch_size: usize,
+    /// Tokens per sequence (S+1).
+    pub tokens_per_example: usize,
+    /// Pad token id for the tail sequence.
+    pub pad_id: i32,
+}
+
+/// Build one round's cohort of client batches straight from a
+/// **sharded paged set**: each group key routes to its shard's pinned
+/// snapshot, so when the fetch fans out over `pool` (the trainer's
+/// `read_workers` pool) concurrent clients stripe across S independent
+/// page caches and index trees instead of queueing on one reader.
+///
+/// Order-preserving and deterministic per group, so the result is
+/// bit-identical at any worker count — the same contract as the
+/// trainer's streaming fetch path. A panic in any fetch job fails the
+/// cohort loudly instead of stalling its caller.
+///
+/// # Errors
+/// A cohort key missing from the set, any shard read failure, or a
+/// crashed fetch job.
+pub fn fetch_cohort_sharded(
+    reader: &Arc<ShardedPagedReader>,
+    keys: &[Vec<u8>],
+    tokenizer: &Arc<WordPiece>,
+    spec: CohortFetchSpec,
+    pool: Option<&ThreadPool>,
+) -> Result<Vec<ClientBatches>> {
+    fn fetch_one(
+        reader: &ShardedPagedReader,
+        tokenizer: &WordPiece,
+        spec: CohortFetchSpec,
+        key: &[u8],
+    ) -> Result<ClientBatches> {
+        let mut group = reader.streamed_group(key)?.with_context(|| {
+            format!("cohort group {:?} not in the paged set", String::from_utf8_lossy(key))
+        })?;
+        build_client_batches(
+            &mut group,
+            tokenizer,
+            spec.tau,
+            spec.batch_size,
+            spec.tokens_per_example,
+            spec.pad_id,
+        )
+    }
+    match pool {
+        None => keys.iter().map(|k| fetch_one(reader, tokenizer, spec, k)).collect(),
+        Some(pool) => {
+            let reader = Arc::clone(reader);
+            let tokenizer = Arc::clone(tokenizer);
+            let fetched = pool
+                .try_map(keys.to_vec(), move |key| fetch_one(&reader, &tokenizer, spec, &key))
+                .map_err(|p| anyhow!("parallel sharded cohort fetch crashed: {p}"))?;
+            fetched.into_iter().collect::<Result<Vec<_>>>().context("building client batches")
+        }
     }
 }
 
@@ -323,6 +391,62 @@ mod tests {
         for (s, p) in serial.rounds.iter().zip(&parallel.rounds) {
             assert_eq!(s.train_loss, p.train_loss);
         }
+    }
+
+    #[test]
+    fn sharded_cohort_fetch_is_striped_and_order_preserving() {
+        use crate::formats::ShardedPagedReader;
+        use crate::pipeline::{run_partition_paged, PagedPartitionOptions};
+
+        let dir = std::env::temp_dir().join("grouper_trainer_sharded_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = DatasetSpec::fedccnews_mini(24, 77);
+        spec.max_group_words = 800;
+        let ds = SyntheticTextDataset::new(spec);
+        let popts = PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() };
+        for shards in [1usize, 4] {
+            let out = dir.join(format!("s{shards}"));
+            run_partition_paged(
+                &ds,
+                &FeatureKey::new("domain"),
+                &out,
+                "train",
+                &popts,
+                &PagedPartitionOptions { shards, ..Default::default() },
+            )
+            .unwrap();
+        }
+        let mut vb = VocabBuilder::new();
+        for text in ds.stream_all_text() {
+            vb.feed(&text);
+        }
+        let tokenizer = Arc::new(vb.build(64));
+        let fetch = CohortFetchSpec { tau: 3, batch_size: 4, tokens_per_example: 9, pad_id: 0 };
+
+        let sharded = Arc::new(ShardedPagedReader::open(&dir.join("s4"), "train", 16).unwrap());
+        let single = Arc::new(ShardedPagedReader::open(&dir.join("s1"), "train", 16).unwrap());
+        assert_eq!(sharded.num_shards(), 4);
+        let keys: Vec<Vec<u8>> = sharded.keys().to_vec();
+        assert_eq!(keys.len(), 24);
+
+        let serial = fetch_cohort_sharded(&sharded, &keys, &tokenizer, fetch, None).unwrap();
+        let pool = ThreadPool::new(4);
+        let parallel =
+            fetch_cohort_sharded(&sharded, &keys, &tokenizer, fetch, Some(&pool)).unwrap();
+        assert_eq!(serial, parallel, "worker count must not change the cohort");
+        // And shard count must not change it either: the 4-shard set
+        // serves the same client batches as the single-store layout.
+        let unsharded = fetch_cohort_sharded(&single, &keys, &tokenizer, fetch, None).unwrap();
+        assert_eq!(serial, unsharded, "shard count must not change the cohort");
+        // A key outside the set fails loudly instead of padding silently.
+        let missing = fetch_cohort_sharded(
+            &sharded,
+            &[b"no-such-group".to_vec()],
+            &tokenizer,
+            fetch,
+            Some(&pool),
+        );
+        assert!(missing.is_err());
     }
 
     #[test]

@@ -31,7 +31,12 @@
 //! **Paged** is the column none of the surveyed systems offer: a
 //! pager + LRU cache + WAL + mutable B+tree storage engine, so datasets
 //! *grow* after materialization (crash-safe incremental appends) and
-//! arbitrary group access cost is governed by cache size.
+//! arbitrary group access cost is governed by cache size. It also
+//! scales past the engine's single-live-writer contract by
+//! **hash-sharding** groups across S independent stores
+//! ([`paged_sharded`]): the partition runner's bucket writers append
+//! concurrently, one WAL per shard, and [`ShardedPagedReader`] unifies
+//! the set behind the same group surface.
 //!
 //! Read handles are concurrent: [`PagedReader`] and
 //! [`HierarchicalReader`] are `Send + Sync` (their indexes go through
@@ -43,9 +48,11 @@ pub mod btree_index;
 pub mod hierarchical;
 pub mod in_memory;
 pub mod paged;
+pub mod paged_sharded;
 pub mod streaming;
 
 pub use hierarchical::{HierarchicalReader, HierarchicalStore};
 pub use in_memory::InMemoryDataset;
 pub use paged::{CompactReport, PagedReader, PagedStat, PagedStore};
+pub use paged_sharded::{PagedSetManifest, PagedShardSet, ShardedPagedReader};
 pub use streaming::{StreamedGroup, StreamingConfig, StreamingDataset};

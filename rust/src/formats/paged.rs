@@ -93,6 +93,12 @@ const MAGIC: &[u8; 8] = b"GRPPAG02";
 /// Default LRU cache size (pages) for stores and readers.
 pub const DEFAULT_CACHE_PAGES: usize = 64;
 
+/// WAL budget between automatic checkpoints while bulk-building
+/// ([`PagedStore::build`] and the sharded materializer's bucket
+/// writers): bounds the WAL size — and the memory/time a recovery from
+/// a mid-build crash needs — regardless of dataset size.
+pub const BUILD_CHECKPOINT_WAL_BYTES: u64 = 64 * 1024 * 1024;
+
 fn pstore_path(dir: &Path, prefix: &str) -> PathBuf {
     dir.join(format!("{prefix}.pstore"))
 }
@@ -219,16 +225,20 @@ fn decode_wal(payload: &[u8]) -> io::Result<(u64, &[u8], &[u8])> {
     Ok((epoch, &payload[12..12 + klen], &payload[12 + klen..]))
 }
 
-/// One group's dataset, shared by [`PagedStore`] and [`PagedReader`]: a
-/// B+tree range scan for data offsets (cost governed by the LRU cache),
-/// then one data-file read per example. Returns false for an unknown
-/// group.
-fn visit_group_via<R: PageRead>(
+/// One group's **raw record bytes** (each exactly one encoded
+/// [`Example`]), shared by [`PagedStore`] and [`PagedReader`]: a B+tree
+/// range scan for data offsets (cost governed by the LRU cache), then
+/// one data-file read per example; `f` returns false to stop early
+/// (remaining records are neither sought nor read). Returns false for
+/// an unknown group. The zero-decode substrate of [`visit_group_via`] —
+/// callers that only move bytes (re-framing a group for the trainer,
+/// replication) skip the decode/re-encode round-trip entirely.
+fn visit_group_raw_via<R: PageRead>(
     tree: &BTree,
     pager: &mut R,
     data: &Arc<dyn VfsFile>,
     group: &[u8],
-    mut f: impl FnMut(Example),
+    mut f: impl FnMut(&[u8]) -> bool,
 ) -> Result<bool> {
     let mut prefix = Vec::with_capacity(group.len() + 1);
     prefix.extend_from_slice(group);
@@ -251,12 +261,46 @@ fn visit_group_via<R: PageRead>(
         return Ok(false);
     }
     let mut r = RecordReader::new(BufReader::new(VfsCursor::new(data.clone())));
+    let mut buf = Vec::new();
     for off in offsets {
         r.seek_to(off)?;
-        let bytes = r.next_record()?.context("paged index points past data end")?;
-        f(Example::decode(&bytes)?);
+        if !r.read_into(&mut buf)? {
+            bail!("paged index points past data end");
+        }
+        if !f(&buf) {
+            break;
+        }
     }
     Ok(true)
+}
+
+/// [`visit_group_raw_via`] with each record decoded to an [`Example`];
+/// a decode failure aborts the scan immediately (no point paying the
+/// rest of the group's data I/O to surface it).
+fn visit_group_via<R: PageRead>(
+    tree: &BTree,
+    pager: &mut R,
+    data: &Arc<dyn VfsFile>,
+    group: &[u8],
+    mut f: impl FnMut(Example),
+) -> Result<bool> {
+    let mut decode_err: Option<io::Error> = None;
+    let found = visit_group_raw_via(tree, pager, data, group, |bytes| {
+        match Example::decode(bytes) {
+            Ok(ex) => {
+                f(ex);
+                true
+            }
+            Err(e) => {
+                decode_err = Some(e);
+                false
+            }
+        }
+    })?;
+    if let Some(e) = decode_err {
+        return Err(e).context("decoding paged example");
+    }
+    Ok(found)
 }
 
 /// What one [`PagedStore::compact`] run did.
@@ -582,6 +626,22 @@ impl PagedStore {
     /// committed state, which can never include the failed append: its
     /// WAL frame is withdrawn).
     pub fn append(&mut self, group: &[u8], example: &Example) -> Result<()> {
+        self.append_encoded(group, &example.encode())
+    }
+
+    /// [`PagedStore::append`] for an example already in its canonical
+    /// [`Example::encode`] form — the parallel materialization path
+    /// ([`crate::pipeline::run_partition_paged`]) moves encoded bytes
+    /// from spill files straight into the store, and re-decoding them
+    /// just to re-encode would double the write path's CPU cost.
+    ///
+    /// `ex_bytes` **must** be a valid `Example` encoding: the store
+    /// treats it as opaque (nothing fails here on garbage), but every
+    /// later `visit_group` would error decoding it.
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedStore::append`].
+    pub fn append_encoded(&mut self, group: &[u8], ex_bytes: &[u8]) -> Result<()> {
         self.check_poisoned()?;
         self.refresh_reuse_gate();
         // Validate BEFORE logging: a frame that cannot be applied must
@@ -595,10 +655,9 @@ impl PagedStore {
                 crate::store::btree::MAX_ROW_BYTES - 17
             );
         }
-        let ex_bytes = example.encode();
         let mark = self.wal.mark();
-        self.wal.append(&encode_wal(self.epoch, group, &ex_bytes))?;
-        if let Err(e) = self.apply(group, &ex_bytes) {
+        self.wal.append(&encode_wal(self.epoch, group, ex_bytes))?;
+        if let Err(e) = self.apply(group, ex_bytes) {
             // The tree may be mid-split and the data writer may hold a
             // partial frame: no further mutation through this handle can
             // be trusted.
@@ -794,6 +853,20 @@ impl PagedStore {
         self.group_counts.len()
     }
 
+    /// Current checkpoint epoch — the value a reader opened now would
+    /// pin (advanced by every [`PagedStore::checkpoint`]).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Bytes currently in the WAL (including buffered, not-yet-written
+    /// ones). Callers batching many appends bound their recovery cost by
+    /// checkpointing once this passes a budget — exactly what
+    /// [`PagedStore::build`] and the sharded materializer do.
+    pub fn wal_len_bytes(&self) -> u64 {
+        self.wal.len_bytes()
+    }
+
     /// Total examples appended so far (committed + uncommitted).
     pub fn num_examples(&self) -> u64 {
         self.tree.num_rows()
@@ -884,15 +957,11 @@ impl PagedStore {
         prefix: &str,
         cache_pages: usize,
     ) -> Result<PagedStore> {
-        // Checkpoint periodically so the WAL (and the memory a recovery
-        // from a mid-build crash needs) stays bounded regardless of
-        // dataset size.
-        const CHECKPOINT_WAL_BYTES: u64 = 64 * 1024 * 1024;
         let mut store = PagedStore::create_with(vfs, dir, prefix, cache_pages)?;
         for ex in dataset.examples() {
             let key = partitioner.key(&ex);
             store.append(&key, &ex)?;
-            if store.wal.len_bytes() >= CHECKPOINT_WAL_BYTES {
+            if store.wal.len_bytes() >= BUILD_CHECKPOINT_WAL_BYTES {
                 store.checkpoint()?;
             }
         }
@@ -1144,6 +1213,22 @@ impl PagedReader {
     pub fn visit_group(&self, group: &[u8], f: impl FnMut(Example)) -> Result<bool> {
         let mut handle = self.pager.reader(self.snapshot);
         visit_group_via(&self.tree, &mut handle, &self.data_file, group, f)
+    }
+
+    /// [`PagedReader::visit_group`] without decoding: `f` receives each
+    /// record's raw bytes (one canonical [`Example::encode`] each, in
+    /// append order) and returns whether to continue — false stops the
+    /// scan without reading the group's remaining records. The
+    /// byte-moving fast path: re-framing a group for the trainer's
+    /// client pipeline costs zero serialization work here. Returns
+    /// false for an unknown group; `&self`, so thread-safe like every
+    /// read method.
+    ///
+    /// # Errors
+    /// Any index or data-file read failure, or a corrupt index row.
+    pub fn visit_group_raw(&self, group: &[u8], f: impl FnMut(&[u8]) -> bool) -> Result<bool> {
+        let mut handle = self.pager.reader(self.snapshot);
+        visit_group_raw_via(&self.tree, &mut handle, &self.data_file, group, f)
     }
 
     /// Iterate groups in `order` (Table 3's serial random-order walk —

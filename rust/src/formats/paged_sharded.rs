@@ -1,0 +1,1146 @@
+//! Sharded paged stores: S independent [`PagedStore`]s behind one
+//! group-addressed surface — the write-path scaling step the single
+//! store cannot take.
+//!
+//! The paged engine is crash-safe and concurrently *readable*, but its
+//! WAL serializes writers: one live [`PagedStore`] per store, by
+//! contract. Materializing a large dataset through one WAL is therefore
+//! the last serial stage of the pipeline, even though partitioning
+//! itself is embarrassingly parallel. This module removes it by
+//! **hash-sharding group keys across S stores**:
+//!
+//! * [`shard_of_key`] places every group on exactly one shard (FNV-1a of
+//!   the group key, optionally reseeded, mod S) — the same function the
+//!   partition runner uses for its group-by-key buckets, so when the
+//!   output format is paged, each bucket's merge appends *straight into
+//!   its own shard's store*, concurrently, with no intermediate TFRecord
+//!   pass (see [`crate::pipeline::run_partition_paged`]);
+//! * each shard is a complete, independent [`PagedStore`] — own pager,
+//!   WAL, free list, and checkpoint epochs — so every crash-safety and
+//!   snapshot invariant of the engine holds *per shard*, unchanged (a
+//!   single-shard set is byte-identical to a plain store);
+//! * a `.pset` manifest ([`PagedSetManifest`], CRC-framed) records the
+//!   shard count, hash seed, per-shard prefixes and last published
+//!   epochs, so a reader can discover and pin the whole set;
+//! * [`ShardedPagedReader`] opens one snapshot per shard (each its own
+//!   `SharedPager` + epoch pin, exactly like [`PagedReader`]) and
+//!   exposes the same group surface — `visit_group`, `visit_all`,
+//!   `keys` — routing by the manifest's hash placement.
+//!
+//! **Single live writer per shard.** The engine's single-live-writer
+//! contract is unchanged; it just applies shard-locally. S bucket
+//! writers appending to S *different* shards are fine (that is the whole
+//! point); two writers on one shard are not — same rule as one store,
+//! multiplied. The manifest itself is only written by the set's owner —
+//! at checkpoint/compact, never at bare create, so an abandoned
+//! materialization is not discoverable — and crash-safely despite the
+//! VFS having no rename: a `.pset2` sidecar is written and synced
+//! before the primary is rewritten in place, reads fall back to it when
+//! the primary is torn (checksum-detected), and the shards underneath
+//! stay intact and recoverable at every crash point.
+//!
+//! Cache accounting is **per shard**: every `cache_pages` parameter here
+//! sizes each shard's LRU independently (an S-shard set holds up to
+//! `S * cache_pages` frames), keeping shard behavior identical to a
+//! standalone store at the same setting.
+
+#![deny(missing_docs)]
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::formats::paged::{CompactReport, PagedReader, PagedStat, PagedStore};
+use crate::formats::streaming::StreamedGroup;
+use crate::records::crc32c::crc32c;
+use crate::records::tfrecord::RecordWriter;
+use crate::records::Example;
+use crate::store::cache::CacheStats;
+use crate::store::vfs::{OpenMode, StdVfs, Vfs};
+use crate::util::rng::fnv1a;
+use crate::util::threadpool::parallel_for_each_mut;
+
+/// `.pset` manifest magic (version 1).
+const MAGIC: &[u8; 8] = b"GRPPSET1";
+
+/// The shard a group key lives on: FNV-1a of the key (reseeded through a
+/// SplitMix64 finalizer when `hash_seed != 0`), mod `shards`. Seed 0 is
+/// the default and matches the partition runner's historical bucket
+/// placement (`fnv1a(key) % shards`) exactly.
+pub fn shard_of_key(key: &[u8], hash_seed: u64, shards: usize) -> usize {
+    debug_assert!(shards > 0);
+    let mut h = fnv1a(key);
+    if hash_seed != 0 {
+        // SplitMix64 finalizer over the xor, so a seed reshuffles
+        // placement without correlating with the unseeded layout.
+        h ^= hash_seed;
+        h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        h ^= h >> 31;
+    }
+    (h % shards as u64) as usize
+}
+
+/// The store prefix of shard `index` in a set of `total`. A single-shard
+/// set uses the plain prefix — its files are named (and laid out)
+/// exactly like a standalone [`PagedStore`], so `--shards 1` stays
+/// byte-identical to the unsharded path.
+pub fn shard_prefix(prefix: &str, index: usize, total: usize) -> String {
+    if total == 1 {
+        prefix.to_string()
+    } else {
+        format!("{prefix}-s{index:05}-of-{total:05}")
+    }
+}
+
+/// The shard-store prefixes a **previous** materialization at
+/// `dir/<prefix>` left behind that a new layout keeping exactly `keep`
+/// would orphan: the old manifest's shard prefixes (when a readable
+/// copy exists), plus the bare `prefix` itself when a plain pre-`.pset`
+/// store (`<prefix>.pstore`) sits there. Capture this **before**
+/// overwriting the manifest, and hand it to [`truncate_shard_stores`]
+/// only **after** the new set is fully materialized and published — the
+/// VFS has no delete, and zeroing the old data any earlier would turn a
+/// crash mid-materialization into data loss instead of a mere leak.
+pub fn stale_shard_stores(vfs: &dyn Vfs, dir: &Path, prefix: &str, keep: &[String]) -> Vec<String> {
+    let mut candidates: Vec<String> = match PagedSetManifest::read_with(vfs, dir, prefix) {
+        Ok(old) => old.shard_prefixes,
+        Err(_) => Vec::new(),
+    };
+    // A plain single store from before this prefix was a set (or from a
+    // `--shards 1` run) is shadowed the moment a manifest points
+    // elsewhere — count it too.
+    if vfs.open(&dir.join(format!("{prefix}.pstore")), OpenMode::Read).is_ok() {
+        candidates.push(prefix.to_string());
+    }
+    candidates.sort();
+    candidates.dedup();
+    candidates.retain(|p| !keep.contains(p));
+    candidates
+}
+
+/// Invalidate the `.pset`/`.pset2` manifest copies at `dir/<prefix>`
+/// (truncating them to empty, which the magic check rejects) **iff** the
+/// old manifest names a store prefix the new layout is about to
+/// overwrite in place. Rationale: when old and new shard layouts share
+/// prefixes, store creation truncates the old data immediately — the
+/// old manifest then describes wreckage, and leaving it published would
+/// let readers silently serve a half-written set after a mid-
+/// materialization crash. Invalidated, every open fails loudly ("bad
+/// paged set manifest magic") until the new set publishes. When the
+/// layouts share nothing, the old manifest is deliberately left intact:
+/// its data is untouched, and a crash should leave the *old* set
+/// discoverable.
+/// Returns the old manifest when it was invalidated, so the caller can
+/// republish it ([`restore_manifest_if_intact`]) if the rebuild fails
+/// before destroying anything.
+///
+/// # Errors
+/// Any truncate/sync failure on a manifest copy — callers must abort
+/// the re-materialization then, because proceeding would destroy the
+/// stores while the old manifest stays published (the exact silent-
+/// wreckage window this function exists to close).
+pub fn invalidate_overlapping_manifest(
+    vfs: &dyn Vfs,
+    dir: &Path,
+    prefix: &str,
+    keep: &[String],
+) -> Result<Option<PagedSetManifest>> {
+    let old = match PagedSetManifest::read_with(vfs, dir, prefix) {
+        Ok(old) => old,
+        Err(_) => return Ok(None),
+    };
+    if !old.shard_prefixes.iter().any(|p| keep.contains(p)) {
+        return Ok(None);
+    }
+    for path in [PagedSetManifest::path(dir, prefix), PagedSetManifest::sidecar_path(dir, prefix)]
+    {
+        let f = vfs
+            .open(&path, OpenMode::CreateTruncate)
+            .with_context(|| format!("unpublishing superseded manifest {}", path.display()))?;
+        f.sync().with_context(|| format!("syncing unpublished manifest {}", path.display()))?;
+    }
+    Ok(Some(old))
+}
+
+/// Best-effort republish of an [`invalidate_overlapping_manifest`]'d
+/// manifest after a rebuild failed: only when every store it names
+/// still looks intact (non-empty `.pstore` — store creation's first
+/// destructive act is truncating exactly that file), so a transient
+/// failure *before* any data was destroyed leaves the old set
+/// discoverable again, while a failure after destruction began keeps
+/// it unpublished (republishing would point readers at wreckage).
+/// Returns whether the manifest was restored.
+pub fn restore_manifest_if_intact(
+    vfs: &dyn Vfs,
+    dir: &Path,
+    prefix: &str,
+    old: &PagedSetManifest,
+) -> bool {
+    let intact = old.shard_prefixes.iter().all(|p| {
+        vfs.open(&dir.join(format!("{p}.pstore")), OpenMode::Read)
+            .and_then(|f| f.len())
+            .map(|len| len > 0)
+            .unwrap_or(false)
+    });
+    intact && old.write_with(vfs, dir, prefix).is_ok()
+}
+
+/// Truncate the named shard stores to empty stubs, reclaiming their
+/// space (the closest thing to deletion the VFS offers). Call only with
+/// prefixes from [`stale_shard_stores`], after the superseding set is
+/// durable. A store whose `.pstore` still has live snapshot pins in the
+/// process-wide registry (an open reader of the *previous* layout) is
+/// left untouched — truncating it would yank pages out from under a
+/// pinned snapshot — and returned so the caller can retry once the
+/// pins drop. Best-effort otherwise: a store that cannot be opened is
+/// skipped.
+pub fn truncate_shard_stores(vfs: &dyn Vfs, dir: &Path, prefixes: &[String]) -> Vec<String> {
+    let mut still_pinned = Vec::new();
+    for stale in prefixes {
+        let pstore = dir.join(format!("{stale}.pstore"));
+        if crate::store::shared::pin_count(vfs.instance_id(), &vfs.registry_key(&pstore)) > 0 {
+            still_pinned.push(stale.clone());
+            continue;
+        }
+        for suffix in ["pstore", "pdata", "pwal"] {
+            let path = dir.join(format!("{stale}.{suffix}"));
+            if let Ok(f) = vfs.open(&path, OpenMode::CreateTruncate) {
+                f.sync().ok();
+            }
+        }
+    }
+    still_pinned
+}
+
+/// The `.pset` manifest describing one sharded paged set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PagedSetManifest {
+    /// Placement seed fed to [`shard_of_key`] (0 = plain FNV-1a).
+    pub hash_seed: u64,
+    /// Store prefix of each shard, in shard order (`shards()` long).
+    pub shard_prefixes: Vec<String>,
+    /// Last checkpoint epoch the owner published per shard. Advisory:
+    /// a reader pins each shard's *live* epoch at open; these record
+    /// what the set looked like when last written.
+    pub epochs: Vec<u64>,
+}
+
+impl PagedSetManifest {
+    /// Manifest path: `dir/<prefix>.pset`.
+    pub fn path(dir: &Path, prefix: &str) -> PathBuf {
+        dir.join(format!("{prefix}.pset"))
+    }
+
+    /// Sidecar path: `dir/<prefix>.pset2`, the second copy that makes
+    /// the in-place primary rewrite crash-safe (see
+    /// [`PagedSetManifest::write_with`]).
+    pub fn sidecar_path(dir: &Path, prefix: &str) -> PathBuf {
+        dir.join(format!("{prefix}.pset2"))
+    }
+
+    /// Shard count.
+    pub fn shards(&self) -> usize {
+        self.shard_prefixes.len()
+    }
+
+    /// Serialize: magic, shard count, hash seed, per-shard prefix +
+    /// epoch, trailing CRC32C over everything preceding it.
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.shard_prefixes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.hash_seed.to_le_bytes());
+        for (prefix, epoch) in self.shard_prefixes.iter().zip(&self.epochs) {
+            out.extend_from_slice(&(prefix.len() as u16).to_le_bytes());
+            out.extend_from_slice(prefix.as_bytes());
+            out.extend_from_slice(&epoch.to_le_bytes());
+        }
+        let crc = crc32c(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    fn decode(bytes: &[u8]) -> Result<PagedSetManifest> {
+        if bytes.len() < 8 + 4 + 8 + 4 || &bytes[..8] != MAGIC {
+            bail!("bad paged set manifest magic");
+        }
+        let body = &bytes[..bytes.len() - 4];
+        let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        if crc32c(body) != stored {
+            bail!("paged set manifest checksum mismatch (torn or corrupt .pset)");
+        }
+        let shards = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
+        if shards == 0 {
+            bail!("paged set manifest declares zero shards");
+        }
+        let hash_seed = u64::from_le_bytes(body[12..20].try_into().unwrap());
+        let mut shard_prefixes = Vec::with_capacity(shards);
+        let mut epochs = Vec::with_capacity(shards);
+        let mut p = 20;
+        for _ in 0..shards {
+            if p + 2 > body.len() {
+                bail!("paged set manifest truncated inside its shard table");
+            }
+            let len = u16::from_le_bytes(body[p..p + 2].try_into().unwrap()) as usize;
+            p += 2;
+            if len == 0 || p + len + 8 > body.len() {
+                bail!("paged set manifest holds a malformed shard entry");
+            }
+            let prefix = std::str::from_utf8(&body[p..p + len])
+                .map_err(|_| anyhow!("paged set manifest shard prefix is not UTF-8"))?;
+            shard_prefixes.push(prefix.to_string());
+            p += len;
+            epochs.push(u64::from_le_bytes(body[p..p + 8].try_into().unwrap()));
+            p += 8;
+        }
+        if p != body.len() {
+            bail!("paged set manifest has trailing bytes");
+        }
+        Ok(PagedSetManifest { hash_seed, shard_prefixes, epochs })
+    }
+
+    /// Write the manifest durably: the sidecar copy (`<prefix>.pset2`)
+    /// first, synced, then the primary (`<prefix>.pset`), synced. The
+    /// VFS has no rename, so the primary is rewritten in place — the
+    /// ordering guarantees a crash at any point leaves at least one
+    /// valid CRC-framed copy on disk. That is sufficient because a
+    /// set's identity (shard count, prefixes, hash seed) is immutable
+    /// after create and the epochs are advisory: *either* copy
+    /// discovers the set correctly, and the shards carry their own
+    /// recovery story.
+    ///
+    /// # Errors
+    /// Mismatched `shard_prefixes`/`epochs` lengths (the encoding would
+    /// silently zip-truncate into an undecodable frame — refuse before
+    /// overwriting a valid pair), or any open/write/sync failure.
+    pub fn write_with(&self, vfs: &dyn Vfs, dir: &Path, prefix: &str) -> Result<()> {
+        if self.epochs.len() != self.shard_prefixes.len() {
+            bail!(
+                "paged set manifest shape mismatch: {} shard prefixes vs {} epochs",
+                self.shard_prefixes.len(),
+                self.epochs.len()
+            );
+        }
+        let bytes = self.encode();
+        for path in [
+            PagedSetManifest::sidecar_path(dir, prefix),
+            PagedSetManifest::path(dir, prefix),
+        ] {
+            let file = vfs
+                .open(&path, OpenMode::CreateTruncate)
+                .with_context(|| format!("creating paged set manifest {}", path.display()))?;
+            file.write_all_at(&bytes, 0)?;
+            file.sync()?;
+        }
+        Ok(())
+    }
+
+    /// Read and validate the manifest from `vfs`: the primary
+    /// `dir/<prefix>.pset`, falling back to the `.pset2` sidecar when
+    /// the primary is missing or torn (a crash window of
+    /// [`PagedSetManifest::write_with`]).
+    ///
+    /// # Errors
+    /// `NotFound` (via the VFS) when no manifest exists at all;
+    /// otherwise the primary's read/validation error when the sidecar
+    /// cannot save it.
+    pub fn read_with(vfs: &dyn Vfs, dir: &Path, prefix: &str) -> Result<PagedSetManifest> {
+        let path = PagedSetManifest::path(dir, prefix);
+        let primary = vfs
+            .read(&path)
+            .with_context(|| format!("reading paged set manifest {}", path.display()))
+            .and_then(|bytes| {
+                PagedSetManifest::decode(&bytes)
+                    .with_context(|| format!("parsing paged set manifest {}", path.display()))
+            });
+        match primary {
+            Ok(m) => Ok(m),
+            Err(primary_err) => {
+                let sidecar = PagedSetManifest::sidecar_path(dir, prefix);
+                let fallback = vfs
+                    .read(&sidecar)
+                    .map_err(anyhow::Error::from)
+                    .and_then(|bytes| PagedSetManifest::decode(&bytes));
+                match fallback {
+                    Ok(m) => Ok(m),
+                    // The sidecar can't save it: report the primary's
+                    // error, which names the canonical path.
+                    Err(_) => Err(primary_err),
+                }
+            }
+        }
+    }
+
+    /// True when a manifest copy (primary or sidecar) exists on `vfs`
+    /// (readable at all — validation happens at
+    /// [`PagedSetManifest::read_with`]).
+    pub fn exists_with(vfs: &dyn Vfs, dir: &Path, prefix: &str) -> bool {
+        vfs.open(&PagedSetManifest::path(dir, prefix), OpenMode::Read).is_ok()
+            || vfs.open(&PagedSetManifest::sidecar_path(dir, prefix), OpenMode::Read).is_ok()
+    }
+
+    /// [`PagedSetManifest::exists_with`] on the real filesystem — the
+    /// CLI's "is this a sharded set?" dispatch.
+    pub fn exists(dir: &Path, prefix: &str) -> bool {
+        PagedSetManifest::exists_with(&StdVfs, dir, prefix)
+    }
+}
+
+/// The writing side of a sharded set: S open [`PagedStore`]s plus the
+/// manifest that binds them. One live `PagedShardSet` per set (the
+/// engine's single-live-writer contract, applied per shard).
+pub struct PagedShardSet {
+    vfs: Arc<dyn Vfs>,
+    dir: PathBuf,
+    prefix: String,
+    hash_seed: u64,
+    stores: Vec<PagedStore>,
+    shard_prefixes: Vec<String>,
+    /// Stores a previous layout at this `dir/prefix` left behind
+    /// (captured at create, before the manifest overwrite); truncated
+    /// by the first checkpoint — i.e. only once this set is durable.
+    stale_prefixes: Vec<String>,
+}
+
+impl PagedShardSet {
+    /// Create a fresh set of `shards` empty stores on the real
+    /// filesystem. Like [`PagedShardSet::create_with`], the manifest is
+    /// published by the first checkpoint, not here.
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedShardSet::create_with`].
+    pub fn create(
+        dir: &Path,
+        prefix: &str,
+        shards: usize,
+        cache_pages: usize,
+        hash_seed: u64,
+    ) -> Result<PagedShardSet> {
+        PagedShardSet::create_with(Arc::new(StdVfs), dir, prefix, shards, cache_pages, hash_seed)
+    }
+
+    /// Create a fresh set on `vfs`: `shards` empty stores, each with its
+    /// own `cache_pages`-frame LRU. The `.pset` manifest is **not**
+    /// written yet — the first [`PagedShardSet::checkpoint`] publishes
+    /// it, so an abandoned creation never becomes discoverable.
+    ///
+    /// # Errors
+    /// `shards == 0`, or any store-creation failure.
+    pub fn create_with(
+        vfs: Arc<dyn Vfs>,
+        dir: &Path,
+        prefix: &str,
+        shards: usize,
+        cache_pages: usize,
+        hash_seed: u64,
+    ) -> Result<PagedShardSet> {
+        if shards == 0 {
+            bail!("a paged shard set needs at least one shard");
+        }
+        let shard_prefixes: Vec<String> =
+            (0..shards).map(|i| shard_prefix(prefix, i, shards)).collect();
+        // Captured now (before the new manifest overwrites the old one),
+        // truncated only at the first checkpoint — i.e. once the new
+        // set's contents are durable. A crash in between leaks the old
+        // bytes; truncating eagerly would *lose* them instead.
+        let stale_prefixes = stale_shard_stores(vfs.as_ref(), dir, prefix, &shard_prefixes);
+        // Creating a store truncates any same-named predecessor in
+        // place: refuse while a live reader still pins one of those
+        // snapshots (best-effort — the single-live-writer contract
+        // already requires the embedding process to serialize writers
+        // against reader opens, this just fails the common mistake
+        // loudly instead of corrupting the reader).
+        for sp in &shard_prefixes {
+            let pstore = dir.join(format!("{sp}.pstore"));
+            let key = vfs.registry_key(&pstore);
+            if crate::store::shared::pin_count(vfs.instance_id(), &key) > 0 {
+                bail!(
+                    "cannot recreate shard store {sp}: a live reader still pins a snapshot \
+                     of the store being overwritten"
+                );
+            }
+        }
+        // When the new layout reuses the old one's store names, the old
+        // data is destroyed at store creation below — unpublish the old
+        // manifest first so a crash mid-materialization cannot leave it
+        // pointing at wreckage.
+        let unpublished =
+            invalidate_overlapping_manifest(vfs.as_ref(), dir, prefix, &shard_prefixes)?;
+        let mut stores = Vec::with_capacity(shards);
+        for sp in &shard_prefixes {
+            match PagedStore::create_with(vfs.as_ref(), dir, sp, cache_pages) {
+                Ok(store) => stores.push(store),
+                Err(e) => {
+                    // A failure before any old data was destroyed should
+                    // leave the old set discoverable; the restore helper
+                    // verifies that before republishing.
+                    if let Some(old) = &unpublished {
+                        restore_manifest_if_intact(vfs.as_ref(), dir, prefix, old);
+                    }
+                    return Err(e).with_context(|| format!("creating shard store {sp}"));
+                }
+            }
+        }
+        // Deliberately NO manifest write here: the `.pset` is what makes
+        // the set discoverable, and publishing it before any data is
+        // durable would let readers auto-detect (and silently serve) a
+        // failed or in-progress materialization. The first
+        // [`PagedShardSet::checkpoint`] — or the partition runner, after
+        // its integrity checks pass — publishes it.
+        Ok(PagedShardSet {
+            vfs,
+            dir: dir.to_path_buf(),
+            prefix: prefix.to_string(),
+            hash_seed,
+            stores,
+            shard_prefixes,
+            stale_prefixes,
+        })
+    }
+
+    /// Open an existing set on the real filesystem for appending,
+    /// running per-shard crash recovery.
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedShardSet::open_with`].
+    pub fn open(dir: &Path, prefix: &str, cache_pages: usize) -> Result<PagedShardSet> {
+        PagedShardSet::open_with(Arc::new(StdVfs), dir, prefix, cache_pages)
+    }
+
+    /// Open an existing set on `vfs` for appending: reads the manifest,
+    /// then opens (and crash-recovers) every shard store.
+    ///
+    /// # Errors
+    /// A missing/corrupt manifest, or any shard open/recovery failure.
+    pub fn open_with(
+        vfs: Arc<dyn Vfs>,
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+    ) -> Result<PagedShardSet> {
+        let manifest = PagedSetManifest::read_with(vfs.as_ref(), dir, prefix)?;
+        let mut stores = Vec::with_capacity(manifest.shards());
+        for sp in &manifest.shard_prefixes {
+            stores.push(
+                PagedStore::open_with(vfs.as_ref(), dir, sp, cache_pages)
+                    .with_context(|| format!("opening shard store {sp}"))?,
+            );
+        }
+        Ok(PagedShardSet {
+            vfs,
+            dir: dir.to_path_buf(),
+            prefix: prefix.to_string(),
+            hash_seed: manifest.hash_seed,
+            stores,
+            shard_prefixes: manifest.shard_prefixes,
+            stale_prefixes: Vec::new(),
+        })
+    }
+
+    /// Shard count.
+    pub fn num_shards(&self) -> usize {
+        self.stores.len()
+    }
+
+    /// The placement seed groups are routed with.
+    pub fn hash_seed(&self) -> u64 {
+        self.hash_seed
+    }
+
+    /// The shard `group` lives on.
+    pub fn shard_for(&self, group: &[u8]) -> usize {
+        shard_of_key(group, self.hash_seed, self.stores.len())
+    }
+
+    /// Append one example to its group's shard. Call
+    /// [`PagedShardSet::commit`] to make a batch durable.
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedStore::append`] on the routed shard.
+    pub fn append(&mut self, group: &[u8], example: &Example) -> Result<()> {
+        let s = self.shard_for(group);
+        self.stores[s].append(group, example)
+    }
+
+    /// Durability point: fsync every shard's WAL.
+    ///
+    /// # Errors
+    /// The first shard commit failure.
+    pub fn commit(&mut self) -> Result<()> {
+        for store in &mut self.stores {
+            store.commit()?;
+        }
+        Ok(())
+    }
+
+    /// Checkpoint every shard, then republish the manifest with the new
+    /// per-shard epochs (and, now that this set's contents are durable,
+    /// reclaim any stale stores a previous layout left behind).
+    ///
+    /// # Errors
+    /// The first shard checkpoint failure, or the manifest write.
+    pub fn checkpoint(&mut self) -> Result<()> {
+        for store in &mut self.stores {
+            store.checkpoint()?;
+        }
+        self.sync_manifest()?;
+        self.reclaim_stale();
+        Ok(())
+    }
+
+    /// Truncate the stale stores captured at create (see
+    /// [`stale_shard_stores`]). Runs automatically from the first
+    /// [`PagedShardSet::checkpoint`] — i.e. only once this set is
+    /// durable, so a crash mid-materialization leaks the old bytes
+    /// instead of losing them. A stale store still pinned by a live
+    /// reader of the previous layout is kept for a later checkpoint
+    /// (its snapshot stays byte-stable). Idempotent; a no-op when
+    /// nothing is stale.
+    pub fn reclaim_stale(&mut self) {
+        if !self.stale_prefixes.is_empty() {
+            self.stale_prefixes =
+                truncate_shard_stores(self.vfs.as_ref(), &self.dir, &self.stale_prefixes);
+        }
+    }
+
+    /// Compact every shard **in parallel** (each shard compaction is an
+    /// independent rewrite→checkpoint→truncate loop on its own store),
+    /// then republish the manifest. Reports come back in shard order.
+    /// Concurrency is bounded by the machine's parallelism — a worker
+    /// pool pops shards from a shared counter, so a 64-shard set does
+    /// not run 64 simultaneous rewrites.
+    ///
+    /// # Errors
+    /// The first shard compaction failure (other shards still finish
+    /// their compaction before this returns), or the manifest write.
+    pub fn compact(&mut self) -> Result<Vec<CompactReport>> {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let reports: Vec<Result<CompactReport>> =
+            parallel_for_each_mut(&mut self.stores, workers, |_, store| store.compact());
+        let reports = reports.into_iter().collect::<Result<Vec<_>>>()?;
+        self.sync_manifest()?;
+        self.reclaim_stale();
+        Ok(reports)
+    }
+
+    /// Rewrite the `.pset` manifest from the live per-shard epochs. The
+    /// bucket writers of the parallel materializer checkpoint their
+    /// shards directly, then the runner publishes once via this.
+    ///
+    /// # Errors
+    /// Any manifest write/sync failure.
+    pub fn sync_manifest(&self) -> Result<()> {
+        let manifest = PagedSetManifest {
+            hash_seed: self.hash_seed,
+            shard_prefixes: self.shard_prefixes.clone(),
+            epochs: self.stores.iter().map(|s| s.epoch()).collect(),
+        };
+        manifest.write_with(self.vfs.as_ref(), &self.dir, &self.prefix)
+    }
+
+    /// Distinct groups across all shards (exact: placement is disjoint).
+    pub fn num_groups(&self) -> usize {
+        self.stores.iter().map(|s| s.num_groups()).sum()
+    }
+
+    /// Total examples across all shards.
+    pub fn num_examples(&self) -> u64 {
+        self.stores.iter().map(|s| s.num_examples()).sum()
+    }
+
+    /// All group keys, sorted (shards hold disjoint key sets).
+    pub fn keys(&self) -> Vec<Vec<u8>> {
+        let mut keys: Vec<Vec<u8>> = self.stores.iter().flat_map(|s| s.keys()).collect();
+        keys.sort();
+        keys
+    }
+
+    /// Visit one group's examples in append order (routed to its shard).
+    /// Returns false for an unknown group.
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedStore::visit_group`].
+    pub fn visit_group(&mut self, group: &[u8], f: impl FnMut(Example)) -> Result<bool> {
+        let s = self.shard_for(group);
+        self.stores[s].visit_group(group, f)
+    }
+
+    /// Per-shard page accounting, in shard order.
+    pub fn shard_stats(&self) -> Vec<PagedStat> {
+        self.stores.iter().map(|s| s.stat()).collect()
+    }
+
+    /// Mutable access to the shard stores, in shard order — for the
+    /// partition runner's bucket writers, which append bucket `i`
+    /// straight into store `i` from `i`'s own thread. Routing through
+    /// [`shard_of_key`] is the caller's responsibility here.
+    pub(crate) fn shards_mut(&mut self) -> &mut [PagedStore] {
+        &mut self.stores
+    }
+}
+
+/// The reading side: one snapshot per shard (each a [`PagedReader`] with
+/// its own `SharedPager` and epoch pin), unified behind the familiar
+/// group surface. **`Send + Sync`** like the per-shard readers, so one
+/// open `ShardedPagedReader` serves a whole cohort's worth of threads —
+/// and because groups hash across shards, concurrent fetches stripe
+/// across S independent page caches and index trees instead of queueing
+/// on one.
+///
+/// Each shard is pinned independently: a live writer appending (or
+/// compacting) any shard never disturbs what this reader sees — the
+/// per-shard epoch pin and COW watermark guarantee it, exactly as for a
+/// single store. To observe newer appends, open a new reader.
+pub struct ShardedPagedReader {
+    hash_seed: u64,
+    shards: Vec<PagedReader>,
+    manifest_epochs: Vec<u64>,
+    keys: Vec<Vec<u8>>,
+    num_examples: u64,
+}
+
+impl ShardedPagedReader {
+    /// Open the set at `dir/<prefix>.pset` on the real filesystem.
+    ///
+    /// # Errors
+    /// Same conditions as [`ShardedPagedReader::open_with`].
+    pub fn open(dir: &Path, prefix: &str, cache_pages: usize) -> Result<ShardedPagedReader> {
+        ShardedPagedReader::open_with(&StdVfs, dir, prefix, cache_pages)
+    }
+
+    /// Open the set at `dir/<prefix>.pset` on `vfs`: reads the manifest,
+    /// opens one pinned snapshot per shard (`cache_pages` LRU frames
+    /// each), and merges the shard key lists. Like [`PagedReader`], a
+    /// shard whose WAL is hot is recovered first — so the same
+    /// single-live-writer caveat applies, per shard.
+    ///
+    /// # Errors
+    /// A missing/corrupt manifest, or any shard open failure.
+    pub fn open_with(
+        vfs: &dyn Vfs,
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+    ) -> Result<ShardedPagedReader> {
+        let manifest = PagedSetManifest::read_with(vfs, dir, prefix)?;
+        let mut shards = Vec::with_capacity(manifest.shards());
+        for sp in &manifest.shard_prefixes {
+            shards.push(
+                PagedReader::open_with(vfs, dir, sp, cache_pages)
+                    .with_context(|| format!("opening shard store {sp}"))?,
+            );
+        }
+        // Shards hold disjoint key sets; a plain merge-sort of the
+        // per-shard (already sorted) lists gives the global order.
+        let mut keys: Vec<Vec<u8>> = shards.iter().flat_map(|r| r.keys().to_vec()).collect();
+        keys.sort();
+        let num_examples = shards.iter().map(|r| r.num_examples()).sum();
+        Ok(ShardedPagedReader {
+            hash_seed: manifest.hash_seed,
+            shards,
+            manifest_epochs: manifest.epochs,
+            keys,
+            num_examples,
+        })
+    }
+
+    /// Shard count.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The placement seed groups are routed with.
+    pub fn hash_seed(&self) -> u64 {
+        self.hash_seed
+    }
+
+    /// The shard `group` lives on.
+    pub fn shard_for(&self, group: &[u8]) -> usize {
+        shard_of_key(group, self.hash_seed, self.shards.len())
+    }
+
+    /// Distinct groups in the pinned snapshots.
+    pub fn num_groups(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Total examples in the pinned snapshots.
+    pub fn num_examples(&self) -> u64 {
+        self.num_examples
+    }
+
+    /// All group keys across shards, sorted.
+    pub fn keys(&self) -> &[Vec<u8>] {
+        &self.keys
+    }
+
+    /// The checkpoint epoch each shard snapshot is pinned to, in shard
+    /// order (shards checkpoint independently, so these need not agree).
+    pub fn epochs(&self) -> Vec<u64> {
+        self.shards.iter().map(|r| r.epoch()).collect()
+    }
+
+    /// The per-shard epochs the manifest recorded when last published —
+    /// at most [`ShardedPagedReader::epochs`] (a writer may have
+    /// checkpointed since, which this snapshot deliberately cannot see).
+    pub fn manifest_epochs(&self) -> &[u64] {
+        &self.manifest_epochs
+    }
+
+    /// Construct one group's dataset (routed to its shard's snapshot).
+    /// Returns false for an unknown group. Takes `&self`: safe from many
+    /// threads at once.
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedReader::visit_group`].
+    pub fn visit_group(&self, group: &[u8], f: impl FnMut(Example)) -> Result<bool> {
+        self.shards[self.shard_for(group)].visit_group(group, f)
+    }
+
+    /// Iterate groups in `order` (or one thread's slice of it).
+    ///
+    /// # Errors
+    /// Same conditions as [`ShardedPagedReader::visit_group`].
+    pub fn visit_all(&self, order: &[Vec<u8>], mut f: impl FnMut(&[u8], Example)) -> Result<()> {
+        for key in order {
+            self.visit_group(key, |ex| f(key, ex))?;
+        }
+        Ok(())
+    }
+
+    /// One group as a prefetched [`StreamedGroup`] — the adapter that
+    /// lets the federated trainer's client-data pipeline consume a
+    /// sharded paged set like any streamed cohort. Pure byte movement:
+    /// the shard's raw record bytes are re-framed without ever decoding
+    /// an example (see [`PagedReader::visit_group_raw`]). `None` for an
+    /// unknown group. (The paged index does not track word counts; the
+    /// group's `words` field is 0.)
+    ///
+    /// # Errors
+    /// Same conditions as [`ShardedPagedReader::visit_group`].
+    pub fn streamed_group(&self, group: &[u8]) -> Result<Option<StreamedGroup>> {
+        let mut w = RecordWriter::new(Vec::new());
+        let mut frame_err: Option<io::Error> = None;
+        let mut n = 0u64;
+        let shard = &self.shards[self.shard_for(group)];
+        let found = shard.visit_group_raw(group, |bytes| match w.write_record(bytes) {
+            Ok(()) => {
+                n += 1;
+                true
+            }
+            Err(e) => {
+                frame_err = Some(e);
+                false
+            }
+        })?;
+        if let Some(e) = frame_err {
+            return Err(e).context("re-framing group examples");
+        }
+        if !found {
+            return Ok(None);
+        }
+        Ok(Some(StreamedGroup::from_framed_bytes(group.to_vec(), n, 0, w.into_inner())))
+    }
+
+    /// Per-shard page accounting (header numbers of each pinned
+    /// snapshot), in shard order.
+    pub fn shard_stats(&self) -> Vec<PagedStat> {
+        self.shards.iter().map(|r| r.stat()).collect()
+    }
+
+    /// Index page fetches from disk so far, summed across shards (and
+    /// across all reading threads).
+    pub fn pages_read(&self) -> u64 {
+        self.shards.iter().map(|r| r.pages_read()).sum()
+    }
+
+    /// Aggregate index-cache counters, summed across shards.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for r in &self.shards {
+            let s = r.cache_stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.evictions += s.evictions;
+        }
+        total
+    }
+
+    /// Index tree depth per shard, in shard order (1 = single leaf).
+    ///
+    /// # Errors
+    /// Any index page-read failure.
+    pub fn index_depths(&self) -> Result<Vec<u32>> {
+        self.shards.iter().map(|r| r.index_depth()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::vfs::MemVfs;
+
+    fn mem_dir(name: &str) -> PathBuf {
+        PathBuf::from("/mem").join(name)
+    }
+
+    #[test]
+    fn shard_of_key_matches_the_runner_bucket_placement() {
+        // Seed 0 is pinned to the historical bucket function: changing it
+        // would silently re-shard every existing materialization.
+        for (key, shards) in
+            [(&b"nytimes.com"[..], 8usize), (b"g0", 3), (b"", 5), (b"rand-000042", 1)]
+        {
+            assert_eq!(shard_of_key(key, 0, shards), (fnv1a(key) % shards as u64) as usize);
+        }
+        // A seed actually moves placement (statistically: over many keys,
+        // at least one must land elsewhere).
+        let moved = (0..100)
+            .filter(|i| {
+                let k = format!("group-{i}");
+                shard_of_key(k.as_bytes(), 0, 8) != shard_of_key(k.as_bytes(), 7, 8)
+            })
+            .count();
+        assert!(moved > 50, "seed barely moves placement: {moved}");
+    }
+
+    #[test]
+    fn shard_prefix_naming() {
+        assert_eq!(shard_prefix("data", 0, 1), "data");
+        assert_eq!(shard_prefix("data", 2, 8), "data-s00002-of-00008");
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_corruption_detection() {
+        let vfs = MemVfs::new();
+        let dir = mem_dir("manifest");
+        let m = PagedSetManifest {
+            hash_seed: 9,
+            shard_prefixes: vec!["p-s00000-of-00002".into(), "p-s00001-of-00002".into()],
+            epochs: vec![3, 7],
+        };
+        m.write_with(&vfs, &dir, "p").unwrap();
+        assert!(PagedSetManifest::exists_with(&vfs, &dir, "p"));
+        assert_eq!(PagedSetManifest::read_with(&vfs, &dir, "p").unwrap(), m);
+        // Flip one byte of the *primary*: the checksum rejects it and
+        // the read falls back to the intact sidecar copy — exactly the
+        // crash window of the sidecar-then-primary write ordering.
+        let path = PagedSetManifest::path(&dir, "p");
+        let good = vfs.file_bytes(&path).unwrap();
+        let mut torn = good.clone();
+        torn[10] ^= 0xFF;
+        vfs.install(&path, torn.clone());
+        assert_eq!(
+            PagedSetManifest::read_with(&vfs, &dir, "p").unwrap(),
+            m,
+            "a torn primary must fall back to the sidecar"
+        );
+        // Both copies torn: now the read must fail, naming the checksum.
+        vfs.install(&PagedSetManifest::sidecar_path(&dir, "p"), torn);
+        let err = PagedSetManifest::read_with(&vfs, &dir, "p").unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+        assert!(!PagedSetManifest::exists_with(&vfs, &dir, "missing"));
+    }
+
+    #[test]
+    fn sharded_set_round_trips_groups_across_reopen_and_reader() {
+        let vfs: Arc<dyn Vfs> = Arc::new(MemVfs::new());
+        let dir = mem_dir("roundtrip");
+        let mut set =
+            PagedShardSet::create_with(Arc::clone(&vfs), &dir, "x", 4, 16, 0).unwrap();
+        for i in 0..120 {
+            let g = format!("group-{}", i % 11);
+            set.append(g.as_bytes(), &Example::text(&format!("t{i}"))).unwrap();
+        }
+        set.commit().unwrap();
+        set.checkpoint().unwrap();
+        assert_eq!(set.num_groups(), 11);
+        assert_eq!(set.num_examples(), 120);
+        let want: Vec<(Vec<u8>, Vec<Vec<u8>>)> = {
+            let keys = set.keys();
+            keys.iter()
+                .map(|k| {
+                    let mut v = Vec::new();
+                    assert!(set.visit_group(k, |ex| v.push(ex.encode())).unwrap());
+                    (k.clone(), v)
+                })
+                .collect()
+        };
+        drop(set);
+        // Reopen for append: counts and contents survive.
+        let mut reopened =
+            PagedShardSet::open_with(Arc::clone(&vfs), &dir, "x", 16).unwrap();
+        assert_eq!(reopened.num_examples(), 120);
+        reopened.append(b"group-3", &Example::text("late")).unwrap();
+        reopened.commit().unwrap();
+        reopened.checkpoint().unwrap();
+        drop(reopened);
+        // The unified reader sees everything, routed per shard.
+        let r = ShardedPagedReader::open_with(vfs.as_ref(), &dir, "x", 16).unwrap();
+        assert_eq!(r.num_shards(), 4);
+        assert_eq!(r.num_examples(), 121);
+        assert_eq!(r.num_groups(), 11);
+        for (k, v) in &want {
+            let mut got = Vec::new();
+            assert!(r.visit_group(k, |ex| got.push(ex.encode())).unwrap());
+            if k == b"group-3" {
+                assert_eq!(got.len(), v.len() + 1, "late append lands at the tail");
+                assert_eq!(&got[..v.len()], &v[..]);
+            } else {
+                assert_eq!(&got, v);
+            }
+        }
+        assert!(!r.visit_group(b"not-there", |_| {}).unwrap());
+        assert_eq!(r.epochs().len(), 4);
+        assert_eq!(r.manifest_epochs().len(), 4);
+    }
+
+    #[test]
+    fn single_shard_set_is_a_plain_store_plus_manifest() {
+        let vfs: Arc<dyn Vfs> = Arc::new(MemVfs::new());
+        let dir = mem_dir("single");
+        let mut set = PagedShardSet::create_with(Arc::clone(&vfs), &dir, "x", 1, 16, 0).unwrap();
+        set.append(b"g", &Example::text("t")).unwrap();
+        set.commit().unwrap();
+        set.checkpoint().unwrap();
+        drop(set);
+        // The shard files carry the *plain* prefix: a standalone
+        // PagedReader opens them directly.
+        let r = PagedReader::open_with(vfs.as_ref(), &dir, "x", 16).unwrap();
+        assert_eq!(r.num_examples(), 1);
+        drop(r);
+        let sr = ShardedPagedReader::open_with(vfs.as_ref(), &dir, "x", 16).unwrap();
+        assert_eq!(sr.num_shards(), 1);
+        assert_eq!(sr.num_examples(), 1);
+    }
+
+    #[test]
+    fn recreating_with_fewer_shards_reclaims_the_stale_stores_after_checkpoint() {
+        let vfs = Arc::new(MemVfs::new());
+        let dir = mem_dir("shrink");
+        {
+            let mut set =
+                PagedShardSet::create_with(Arc::clone(&vfs) as Arc<dyn Vfs>, &dir, "x", 4, 16, 0)
+                    .unwrap();
+            for i in 0..40 {
+                set.append(format!("g{i}").as_bytes(), &Example::text("payload")).unwrap();
+            }
+            set.commit().unwrap();
+            set.checkpoint().unwrap();
+        }
+        let old_pdata = dir.join(format!("{}.pdata", shard_prefix("x", 2, 4)));
+        assert!(!vfs.file_bytes(&old_pdata).unwrap().is_empty());
+        // Recreate the same dir/prefix with 2 shards. Until the new set
+        // checkpoints, the old shards' bytes must survive (a crash here
+        // must leak, not destroy); after the first checkpoint they are
+        // reclaimed to empty stubs (the VFS cannot delete).
+        let mut set =
+            PagedShardSet::create_with(Arc::clone(&vfs) as Arc<dyn Vfs>, &dir, "x", 2, 16, 0)
+                .unwrap();
+        assert!(
+            !vfs.file_bytes(&old_pdata).unwrap().is_empty(),
+            "old data must survive until the new set is durable"
+        );
+        set.append(b"g", &Example::text("fresh")).unwrap();
+        set.commit().unwrap();
+        set.checkpoint().unwrap();
+        for i in 2..4 {
+            for suffix in ["pstore", "pdata", "pwal"] {
+                let path = dir.join(format!("{}.{suffix}", shard_prefix("x", i, 4)));
+                let bytes = vfs.file_bytes(&path).unwrap();
+                assert!(bytes.is_empty(), "stale {} must be reclaimed", path.display());
+            }
+        }
+        // Shards 0/1 of the old layout were never part of the new one
+        // either — they are reclaimed too (different prefixes).
+        assert!(vfs
+            .file_bytes(&dir.join(format!("{}.pdata", shard_prefix("x", 0, 4))))
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn recreating_the_same_layout_unpublishes_the_old_manifest_until_checkpoint() {
+        let vfs: Arc<dyn Vfs> = Arc::new(MemVfs::new());
+        let dir = mem_dir("samelayout");
+        {
+            let mut set =
+                PagedShardSet::create_with(Arc::clone(&vfs), &dir, "x", 2, 16, 0).unwrap();
+            set.append(b"g", &Example::text("old")).unwrap();
+            set.commit().unwrap();
+            set.checkpoint().unwrap();
+        }
+        // Recreate with the SAME shard count: the store names collide,
+        // so create truncates the old data in place — the old manifest
+        // must be unpublished at that moment (reads fail loudly) rather
+        // than keep describing wreckage across the rebuild window.
+        let mut set = PagedShardSet::create_with(Arc::clone(&vfs), &dir, "x", 2, 16, 0).unwrap();
+        assert!(
+            PagedSetManifest::read_with(vfs.as_ref(), &dir, "x").is_err(),
+            "an overwritten-in-place set must not stay discoverable mid-rebuild"
+        );
+        set.append(b"g", &Example::text("new")).unwrap();
+        set.commit().unwrap();
+        set.checkpoint().unwrap();
+        let m = PagedSetManifest::read_with(vfs.as_ref(), &dir, "x").unwrap();
+        assert_eq!(m.shards(), 2);
+        let r = ShardedPagedReader::open_with(vfs.as_ref(), &dir, "x", 16).unwrap();
+        assert_eq!(r.num_examples(), 1, "only the new materialization is visible");
+    }
+
+    #[test]
+    fn streamed_group_adapter_replays_the_group() {
+        let vfs: Arc<dyn Vfs> = Arc::new(MemVfs::new());
+        let dir = mem_dir("streamed");
+        let mut set = PagedShardSet::create_with(Arc::clone(&vfs), &dir, "x", 2, 16, 0).unwrap();
+        for i in 0..5 {
+            set.append(b"g", &Example::text(&format!("t{i}"))).unwrap();
+        }
+        set.commit().unwrap();
+        set.checkpoint().unwrap();
+        drop(set);
+        let r = ShardedPagedReader::open_with(vfs.as_ref(), &dir, "x", 16).unwrap();
+        let mut g = r.streamed_group(b"g").unwrap().expect("group exists");
+        let texts: Vec<String> = g
+            .examples()
+            .unwrap()
+            .iter()
+            .map(|e| e.get_str("text").unwrap().to_string())
+            .collect();
+        assert_eq!(texts, vec!["t0", "t1", "t2", "t3", "t4"]);
+        assert!(r.streamed_group(b"missing").unwrap().is_none());
+    }
+
+    #[test]
+    fn parallel_compact_reclaims_every_shard() {
+        let vfs: Arc<dyn Vfs> = Arc::new(MemVfs::new());
+        let dir = mem_dir("compact");
+        let mut set = PagedShardSet::create_with(Arc::clone(&vfs), &dir, "x", 3, 16, 0).unwrap();
+        // Churn: repeated checkpoints strand COW'd pages on every shard.
+        for round in 0..8 {
+            for i in 0..30 {
+                let g = format!("g{}", i % 9);
+                set.append(g.as_bytes(), &Example::text(&format!("r{round}i{i}"))).unwrap();
+            }
+            set.commit().unwrap();
+            set.checkpoint().unwrap();
+        }
+        let before: Vec<_> = set.shard_stats();
+        assert!(before.iter().any(|s| s.free_pages > 0), "churn must strand garbage");
+        let reports = set.compact().unwrap();
+        assert_eq!(reports.len(), 3);
+        let after = set.shard_stats();
+        let total_before: u32 = before.iter().map(|s| s.total_pages).sum();
+        let total_after: u32 = after.iter().map(|s| s.total_pages).sum();
+        assert!(total_after < total_before, "{total_before} -> {total_after}");
+        // Contents intact.
+        let mut n = 0u64;
+        for k in set.keys() {
+            assert!(set.visit_group(&k, |_| n += 1).unwrap());
+        }
+        assert_eq!(n, 8 * 30);
+    }
+}

@@ -88,6 +88,21 @@ enum GroupSource {
 }
 
 impl StreamedGroup {
+    /// Build a prefetched group from already-framed record bytes (the
+    /// standard TFRecord framing of each example's encoding, one after
+    /// another). This is how the paged formats hand a group to the
+    /// client-data pipeline: `ShardedPagedReader` re-frames a group's
+    /// examples into one buffer and the trainer consumes it exactly like
+    /// a streamed group.
+    pub fn from_framed_bytes(
+        key: Vec<u8>,
+        num_examples: u64,
+        words: u64,
+        framed: Vec<u8>,
+    ) -> StreamedGroup {
+        StreamedGroup { key, num_examples, words, source: GroupSource::Buffer(framed) }
+    }
+
     /// Visit each example in order; stop early by returning `false`.
     pub fn for_each_example(&mut self, mut f: impl FnMut(Example) -> bool) -> Result<()> {
         match &mut self.source {

@@ -5,7 +5,7 @@
 //! ```text
 //! grouper partition --dataset fedc4-mini --groups 500 --out work/fedc4 [--by feature|random:N|dirichlet:A]
 //!                   [--format streaming|paged|hierarchical] [--cache-pages N]
-//!                   [--auto-compact-threshold F]
+//!                   [--shards S] [--auto-compact-threshold F]
 //! grouper stats     --dir work/fedc4 --prefix data [--format streaming|paged] [--cache-pages N]
 //! grouper compact   --dir work/fedc4 --prefix data [--cache-pages N]
 //! grouper vocab     --dataset fedc4-mini --groups 500 --size 1024 --out work/vocab.txt
@@ -16,10 +16,16 @@
 //!
 //! `--format paged` materializes into the appendable WAL-backed paged
 //! store (`formats::paged`); `--cache-pages` bounds its LRU page cache.
-//! `compact` reclaims the space superseded index pages leave behind
-//! (`stats --format paged` reports the live/free page split), and
-//! `partition --auto-compact-threshold 0.25` compacts automatically
-//! when more than a quarter of the freshly built store is garbage.
+//! With `--shards S` (S > 1) groups hash across S independent shard
+//! stores written concurrently — one WAL per shard, no intermediate
+//! TFRecord pass — described by a `<prefix>.pset` manifest that `stats`
+//! and `compact` auto-detect (`compact` then compacts shards in
+//! parallel). `--shards 1` (the default) stays byte-identical to the
+//! classic single store. `compact` reclaims the space superseded index
+//! pages leave behind (`stats --format paged` reports the live/free
+//! page split), and `partition --auto-compact-threshold 0.25` compacts
+//! automatically when more than a quarter of the freshly built store is
+//! garbage.
 //!
 //! Experiment regeneration lives in `cargo bench --bench <table|figure>`;
 //! the CLI is the interactive/production surface over the same library.
@@ -34,10 +40,14 @@ use grouper::config::ExperimentConfig;
 use grouper::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
 use grouper::fed::trainer::build_eval_clients;
 use grouper::fed::{personalization_eval, train, TrainerConfig};
-use grouper::formats::{HierarchicalStore, PagedReader, PagedStore};
+use grouper::formats::{
+    HierarchicalStore, PagedReader, PagedSetManifest, PagedShardSet, PagedStore,
+    ShardedPagedReader,
+};
 use grouper::grouper::{dataset_statistics, partition_dataset, PartitionedDataset};
 use grouper::pipeline::{
-    DirichletPartitioner, FeatureKey, PartitionOptions, Partitioner, RandomPartitioner,
+    run_partition_paged, DirichletPartitioner, FeatureKey, PagedPartitionOptions,
+    PartitionOptions, Partitioner, RandomPartitioner,
 };
 use grouper::runtime::{ModelBackend, ModelRuntime};
 use grouper::tokenizer::{VocabBuilder, WordPiece};
@@ -85,15 +95,19 @@ fn print_usage() {
          \u{20}               --format streaming (default) | paged | hierarchical\n\
          \u{20}               paged = appendable WAL-backed store over the paged\n\
          \u{20}               storage engine; --cache-pages N bounds its LRU page\n\
-         \u{20}               cache (default {dcp})\n\
+         \u{20}               cache (default {dcp}); --shards S hash-shards groups\n\
+         \u{20}               across S stores written concurrently (default 1 =\n\
+         \u{20}               classic single store; one live writer per shard)\n\
          \u{20}  stats        Table-1-style statistics of a materialization\n\
          \u{20}               (--format paged reads a paged store and reports\n\
          \u{20}               index depth, cache hit rate under --cache-pages,\n\
-         \u{20}               and live/free/total index pages)\n\
+         \u{20}               and live/free/total index pages; a .pset manifest\n\
+         \u{20}               is auto-detected and adds per-shard rows)\n\
          \u{20}  compact      reclaim a paged store's free pages: migrate live\n\
          \u{20}               index pages toward the file head and truncate the\n\
          \u{20}               tail (partition --auto-compact-threshold F does\n\
-         \u{20}               this automatically when free/total exceeds F)\n\
+         \u{20}               this automatically when free/total exceeds F; a\n\
+         \u{20}               sharded set compacts its shards in parallel)\n\
          \u{20}  vocab        train a WordPiece vocabulary from a corpus\n\
          \u{20}  train        federated training (FedAvg/FedSGD) per a TOML config;\n\
          \u{20}               --read-workers N fetches each round's cohort of\n\
@@ -208,35 +222,63 @@ fn cmd_partition(f: &Flags) -> Result<()> {
             );
         }
         "paged" => {
-            let mut store = PagedStore::build(&ds, p.as_ref(), &out, &prefix, cache_pages)?;
+            // For paged output, --shards counts *stores*, not TFRecord
+            // files; 1 (the default) is the classic single store,
+            // byte-identical to pre-sharding builds.
+            let paged_shards = f.usize_or("shards", 1)?;
+            if paged_shards == 0 {
+                bail!("--shards must be at least 1");
+            }
+            let mut opts = PartitionOptions::default();
+            if workers > 0 {
+                opts.num_workers = workers;
+            }
+            let paged_opts =
+                PagedPartitionOptions { shards: paged_shards, cache_pages, hash_seed: 0 };
+            let report = run_partition_paged(&ds, p.as_ref(), &out, &prefix, &opts, &paged_opts)?;
             println!(
-                "done: {} examples -> {} groups in {}/{prefix}.pstore (appendable; \
-                 cache {cache_pages} pages)",
-                store.num_examples(),
-                store.num_groups(),
-                out.display()
+                "done: {} examples -> {} groups across {} paged shard store(s) \
+                 ({}/{prefix}.pset; cache {cache_pages} pages/shard), \
+                 map {:.2}s group {:.2}s ({:.2}s total)",
+                report.num_examples,
+                report.num_groups,
+                report.shards,
+                out.display(),
+                report.map_secs,
+                report.group_secs,
+                report.wall_secs
             );
             if let Some(threshold) = f.get("auto-compact-threshold") {
                 let threshold: f64 = threshold
                     .parse()
                     .context("--auto-compact-threshold must be a fraction like 0.25")?;
-                let stat = store.stat();
-                if stat.free_fraction() >= threshold {
-                    let report = store.compact()?;
+                // The report carries the final per-shard stats, so the
+                // threshold check is free; the set is reopened only when
+                // compaction actually runs.
+                let stats = &report.shard_stats;
+                let free: u64 = stats.iter().map(|s| u64::from(s.free_pages)).sum();
+                let total: u64 = stats.iter().map(|s| u64::from(s.total_pages)).sum();
+                let frac = if total == 0 { 0.0 } else { free as f64 / total as f64 };
+                if frac >= threshold {
+                    let mut set = PagedShardSet::open(&out, &prefix, cache_pages)?;
+                    let reports = set.compact()?;
+                    let reclaimed: u32 = reports.iter().map(|r| r.pages_reclaimed).sum();
+                    let before: u64 = reports.iter().map(|r| r.bytes_before()).sum();
+                    let after: u64 = reports.iter().map(|r| r.bytes_after()).sum();
                     println!(
-                        "auto-compact ({:.0}% free >= {:.0}% threshold): {} -> {} \
-                         ({} pages reclaimed, {} passes)",
-                        100.0 * stat.free_fraction(),
+                        "auto-compact ({:.0}% free >= {:.0}% threshold, {} shard(s) \
+                         in parallel): {} -> {} ({} pages reclaimed)",
+                        100.0 * frac,
                         100.0 * threshold,
-                        humanize::bytes(report.bytes_before() as usize),
-                        humanize::bytes(report.bytes_after() as usize),
-                        report.pages_reclaimed,
-                        report.passes
+                        reports.len(),
+                        humanize::bytes(before as usize),
+                        humanize::bytes(after as usize),
+                        reclaimed
                     );
                 } else {
                     println!(
                         "auto-compact skipped: {:.0}% free < {:.0}% threshold",
-                        100.0 * stat.free_fraction(),
+                        100.0 * frac,
                         100.0 * threshold
                     );
                 }
@@ -295,10 +337,14 @@ fn cmd_stats(f: &Flags) -> Result<()> {
 }
 
 /// Paged-store statistics: header-level counts plus the cost of one full
-/// random-order pass under the requested cache size.
+/// random-order pass under the requested cache size. A `.pset` manifest
+/// next to the prefix means a sharded set — dispatch accordingly.
 fn cmd_stats_paged(f: &Flags, dir: &Path, prefix: &str) -> Result<()> {
     let cache_pages =
         f.usize_or("cache-pages", grouper::formats::paged::DEFAULT_CACHE_PAGES)?;
+    if PagedSetManifest::exists(dir, prefix) {
+        return cmd_stats_paged_sharded(f, dir, prefix, cache_pages);
+    }
     let r = PagedReader::open(dir, prefix, cache_pages)?;
     let depth = r.index_depth()?;
     let mut order = r.keys().to_vec();
@@ -342,13 +388,90 @@ fn cmd_stats_paged(f: &Flags, dir: &Path, prefix: &str) -> Result<()> {
     Ok(())
 }
 
+/// Sharded-set statistics: one random-order pass through the unified
+/// reader (striped cache cost), then per-shard page accounting.
+fn cmd_stats_paged_sharded(
+    f: &Flags,
+    dir: &Path,
+    prefix: &str,
+    cache_pages: usize,
+) -> Result<()> {
+    let r = ShardedPagedReader::open(dir, prefix, cache_pages)?;
+    if let Some(expected) = f.get("shards") {
+        let expected: usize = expected.parse().context("--shards must be an integer")?;
+        if expected != r.num_shards() {
+            bail!(
+                "--shards {expected} does not match the manifest ({} shards in {}/{prefix}.pset)",
+                r.num_shards(),
+                dir.display()
+            );
+        }
+    }
+    let mut order = r.keys().to_vec();
+    grouper::util::rng::Rng::new(7).shuffle(&mut order);
+    let mut examples = 0u64;
+    r.visit_all(&order, |_, _| examples += 1)?;
+    let stats = r.cache_stats();
+    let mut t = Table::new(
+        &format!(
+            "Sharded paged set {}/{prefix} ({} shards, cache {cache_pages} pages/shard)",
+            dir.display(),
+            r.num_shards()
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["groups".into(), format!("{}", r.num_groups())]);
+    t.row(vec!["examples".into(), humanize::count(examples as f64)]);
+    t.row(vec!["index pages fetched".into(), format!("{}", r.pages_read())]);
+    t.row(vec![
+        "cache hits / misses / evictions".into(),
+        format!("{} / {} / {}", stats.hits, stats.misses, stats.evictions),
+    ]);
+    t.row(vec!["cache hit rate".into(), format!("{:.1}%", 100.0 * stats.hit_rate())]);
+    let shard_stats = r.shard_stats();
+    let free: u64 = shard_stats.iter().map(|s| u64::from(s.free_pages)).sum();
+    let total: u64 = shard_stats.iter().map(|s| u64::from(s.total_pages)).sum();
+    t.row(vec![
+        "index pages live / free / total".into(),
+        format!("{} / {free} / {total}", total - free),
+    ]);
+    if total > 0 && free > 0 {
+        t.row(vec![
+            "reclaimable".into(),
+            format!("{:.1}% (run `grouper compact`)", 100.0 * free as f64 / total as f64),
+        ]);
+    }
+    t.print();
+    let mut per = Table::new(
+        "Per shard",
+        &["shard", "groups", "examples", "live", "free", "total", "epoch"],
+    );
+    for (i, s) in shard_stats.iter().enumerate() {
+        per.row(vec![
+            format!("{i}"),
+            format!("{}", s.num_groups),
+            format!("{}", s.num_rows),
+            format!("{}", s.live_pages),
+            format!("{}", s.free_pages),
+            format!("{}", s.total_pages),
+            format!("{}", s.epoch),
+        ]);
+    }
+    per.print();
+    Ok(())
+}
+
 /// Reclaim a paged store's free pages: open for write (running recovery
-/// if the WAL is hot), compact, report before/after sizes.
+/// if the WAL is hot), compact, report before/after sizes. A sharded set
+/// (`.pset` present) compacts all its shards in parallel.
 fn cmd_compact(f: &Flags) -> Result<()> {
     let dir = PathBuf::from(f.required("dir")?);
     let prefix = f.get_or("prefix", "data");
     let cache_pages =
         f.usize_or("cache-pages", grouper::formats::paged::DEFAULT_CACHE_PAGES)?;
+    if PagedSetManifest::exists(&dir, prefix) {
+        return cmd_compact_sharded(f, &dir, prefix, cache_pages);
+    }
     let mut store = PagedStore::open(&dir, prefix, cache_pages)?;
     let before = store.stat();
     println!(
@@ -366,6 +489,45 @@ fn cmd_compact(f: &Flags) -> Result<()> {
         humanize::bytes(report.bytes_after() as usize),
         report.pages_moved,
         report.pages_reclaimed
+    );
+    Ok(())
+}
+
+/// Compact every shard of a sharded paged set in parallel.
+fn cmd_compact_sharded(f: &Flags, dir: &Path, prefix: &str, cache_pages: usize) -> Result<()> {
+    let mut set = PagedShardSet::open(dir, prefix, cache_pages)?;
+    if let Some(expected) = f.get("shards") {
+        let expected: usize = expected.parse().context("--shards must be an integer")?;
+        if expected != set.num_shards() {
+            bail!(
+                "--shards {expected} does not match the manifest ({} shards in {}/{prefix}.pset)",
+                set.num_shards(),
+                dir.display()
+            );
+        }
+    }
+    let before = set.shard_stats();
+    let live: u64 = before.iter().map(|s| u64::from(s.live_pages)).sum();
+    let free: u64 = before.iter().map(|s| u64::from(s.free_pages)).sum();
+    let total: u64 = before.iter().map(|s| u64::from(s.total_pages)).sum();
+    println!(
+        "compacting {}/{prefix}.pset ({} shards, in parallel): \
+         {live} live / {free} free / {total} total pages",
+        dir.display(),
+        set.num_shards()
+    );
+    let reports = set.compact()?;
+    let bytes_before: u64 = reports.iter().map(|r| r.bytes_before()).sum();
+    let bytes_after: u64 = reports.iter().map(|r| r.bytes_after()).sum();
+    let moved: u32 = reports.iter().map(|r| r.pages_moved).sum();
+    let reclaimed: u32 = reports.iter().map(|r| r.pages_reclaimed).sum();
+    println!(
+        "done: {} -> {} ({} pages moved, {} reclaimed across {} shards)",
+        humanize::bytes(bytes_before as usize),
+        humanize::bytes(bytes_after as usize),
+        moved,
+        reclaimed,
+        reports.len()
     );
     Ok(())
 }
@@ -505,7 +667,21 @@ fn cmd_info(f: &Flags) -> Result<()> {
         let prefix = f.get_or("prefix", "data");
         let store_dir = PathBuf::from(store_dir);
         let pstore = store_dir.join(format!("{prefix}.pstore"));
-        if pstore.exists() {
+        if PagedSetManifest::exists(&store_dir, prefix) {
+            let cache_pages =
+                f.usize_or("cache-pages", grouper::formats::paged::DEFAULT_CACHE_PAGES)?;
+            let r = ShardedPagedReader::open(&store_dir, prefix, cache_pages)?;
+            println!(
+                "sharded paged set {}/{prefix}.pset: {} shards (hash seed {}), {} groups, \
+                 {} examples, shard epochs {:?}",
+                store_dir.display(),
+                r.num_shards(),
+                r.hash_seed(),
+                r.num_groups(),
+                humanize::count(r.num_examples() as f64),
+                r.epochs(),
+            );
+        } else if pstore.exists() {
             let cache_pages =
                 f.usize_or("cache-pages", grouper::formats::paged::DEFAULT_CACHE_PAGES)?;
             let r = PagedReader::open(&store_dir, prefix, cache_pages)?;

@@ -25,6 +25,13 @@
 //! * `<prefix>-SSSSS-of-TTTTT.tfrecord` — encoded [`crate::records::Example`]s,
 //!   group-contiguous within a shard;
 //! * `<prefix>.gindex` — the group index ([`index`]).
+//!
+//! When the output format is **paged** ([`run_partition_paged`]), the
+//! group-by-key buckets skip the TFRecord sink entirely: each bucket's
+//! merged stream appends concurrently into its own shard's `PagedStore`
+//! (one WAL per shard), producing `<prefix>.pset` +
+//! `<prefix>-sSSSSS-of-TTTTT.{pstore,pdata,pwal}` — see
+//! [`crate::formats::paged_sharded`].
 
 pub mod index;
 pub mod partition;
@@ -32,4 +39,7 @@ pub mod runner;
 
 pub use index::{GroupIndex, GroupIndexEntry};
 pub use partition::{DirichletPartitioner, FeatureKey, Partitioner, RandomPartitioner};
-pub use runner::{run_partition, PartitionOptions, PartitionReport};
+pub use runner::{
+    run_partition, run_partition_paged, PagedPartitionOptions, PagedPartitionReport,
+    PartitionOptions, PartitionReport,
+};

@@ -14,7 +14,7 @@
 //! depend on the assignment of example `y`.
 
 use crate::records::Example;
-use crate::util::rng::{fnv1a, Rng};
+use crate::util::rng::Rng;
 
 /// An embarrassingly parallel partition function.
 pub trait Partitioner: Send + Sync {
@@ -73,7 +73,11 @@ impl RandomPartitioner {
 
 impl Partitioner for RandomPartitioner {
     fn key(&self, example: &Example) -> Vec<u8> {
-        let h = fnv1a(&example.encode()) ^ self.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // content_hash64() is fnv1a over the canonical encoding, computed
+        // incrementally — same digest as fnv1a(&example.encode()) (pinned
+        // by a test below, so existing partitions never move) without
+        // re-serializing the whole example just to hash it.
+        let h = example.content_hash64() ^ self.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
         // SplitMix finalizer decorrelates the xor.
         let mut r = Rng::new(h);
         let g = r.gen_range(self.num_groups as u64);
@@ -125,7 +129,9 @@ impl DirichletPartitioner {
 
 impl Partitioner for DirichletPartitioner {
     fn key(&self, example: &Example) -> Vec<u8> {
-        let h = fnv1a(&example.encode()) ^ self.seed.rotate_left(17);
+        // Incremental hash, same digest as fnv1a(&example.encode()) —
+        // see RandomPartitioner::key.
+        let h = example.content_hash64() ^ self.seed.rotate_left(17);
         let u = Rng::new(h).next_f64();
         let g = match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
             Ok(i) => i,
@@ -174,6 +180,36 @@ mod tests {
             let e = ex(&gen_word(rng, 1..=30), &gen_word(rng, 3..=10));
             prop_assert_eq(rand.key(&e), rand.key(&e), "random purity")?;
             prop_assert_eq(dir.key(&e), dir.key(&e), "dirichlet purity")
+        });
+    }
+
+    #[test]
+    fn incremental_hash_leaves_the_partition_unchanged() {
+        use crate::util::rng::fnv1a;
+        // The partitioners used to hash fnv1a(&example.encode()); they now
+        // hash incrementally. Re-derive the old formulas here verbatim and
+        // require key-for-key agreement, so the produced partition for any
+        // seed (including the CLI default, 42) can never silently move.
+        let rand = RandomPartitioner::new(37, 42);
+        let dir = DirichletPartitioner::new(2.5, 500, 42);
+        check(200, |rng| {
+            let e = ex(&gen_word(rng, 1..=40), &gen_word(rng, 3..=12));
+            let old_rand = {
+                let h = fnv1a(&e.encode()) ^ 42u64.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                let g = Rng::new(h).gen_range(37);
+                format!("rand-{g:06}").into_bytes()
+            };
+            prop_assert_eq(rand.key(&e), old_rand, "random key unchanged")?;
+            let old_dir = {
+                let h = fnv1a(&e.encode()) ^ 42u64.rotate_left(17);
+                let u = Rng::new(h).next_f64();
+                let g = match dir.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+                    Ok(i) => i,
+                    Err(i) => i.min(dir.cdf.len() - 1),
+                };
+                format!("dp-{g:06}").into_bytes()
+            };
+            prop_assert_eq(dir.key(&e), old_dir, "dirichlet key unchanged")
         });
     }
 

@@ -6,6 +6,18 @@
 //! many examples a single group accumulates — grouping is a disk-backed
 //! external sort (sorted runs + k-way merge), exactly how a Beam/MapReduce
 //! shuffle scales past memory.
+//!
+//! Two sinks share the map/spill/merge machinery:
+//!
+//! * [`run_partition`] — the classic streaming output: contiguous
+//!   TFRecord shards plus a `.gindex`;
+//! * [`run_partition_paged`] — **direct-to-paged** materialization: each
+//!   group-by-key bucket appends its merged stream straight into its own
+//!   shard's `PagedStore` (one WAL per shard, all buckets concurrently),
+//!   producing a `.pset` sharded paged set with no intermediate TFRecord
+//!   pass. Bucket placement is [`crate::formats::paged_sharded::shard_of_key`]
+//!   for both sinks, so the bucket a group sorts in *is* the shard it
+//!   lives on.
 
 use std::collections::BinaryHeap;
 use std::io;
@@ -13,15 +25,22 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::index::{GroupIndex, GroupIndexEntry};
 use super::partition::Partitioner;
 use crate::corpus::{word_count, BaseDataset};
-use crate::records::tfrecord::{framed_len, RecordReader, RecordWriter};
+use crate::formats::paged::{
+    PagedStat, PagedStore, BUILD_CHECKPOINT_WAL_BYTES, DEFAULT_CACHE_PAGES,
+};
+use crate::formats::paged_sharded::{
+    invalidate_overlapping_manifest, restore_manifest_if_intact, shard_of_key,
+    stale_shard_stores, truncate_shard_stores, PagedSetManifest, PagedShardSet,
+};
 use crate::records::sharded::shard_name;
-use crate::util::rng::fnv1a;
-use crate::util::threadpool::ThreadPool;
+use crate::records::tfrecord::{framed_len, RecordReader, RecordWriter};
+use crate::store::vfs::{StdVfs, Vfs};
+use crate::util::threadpool::{parallel_for_each_mut, ThreadPool};
 use crate::util::timer::Timer;
 
 /// Tuning knobs for a partition run.
@@ -139,6 +158,7 @@ fn map_phase(
     partitioner: &dyn Partitioner,
     spill_dir: &Path,
     opts: &PartitionOptions,
+    hash_seed: u64,
 ) -> Result<(u64, u64)> {
     std::fs::create_dir_all(spill_dir)?;
     let splits = dataset.splits(opts.num_workers);
@@ -159,7 +179,7 @@ fn map_phase(
                     let mut seq: u64 = 0;
                     for example in split {
                         let key = partitioner.key(&example);
-                        let bucket = (fnv1a(&key) % num_shards as u64) as usize;
+                        let bucket = shard_of_key(&key, hash_seed, num_shards);
                         let words = if count_words {
                             example.get_str("text").map(word_count).unwrap_or(0) as u32
                         } else {
@@ -259,14 +279,17 @@ struct BucketOutput {
     entries: Vec<GroupIndexEntry>,
 }
 
-fn group_bucket(
+/// Stream bucket `bucket`'s spill records into `emit` in
+/// `(key, split, seq)` order, holding at most `chunk_bytes` of payload
+/// in RAM — the disk-backed external group-by-key both sinks (TFRecord
+/// shards and paged shard stores) are built on. Sorted runs are written
+/// next to the spills and removed before returning.
+fn merge_bucket(
     bucket: usize,
     spill_dir: &Path,
-    out_dir: &Path,
-    prefix: &str,
-    num_shards: usize,
     chunk_bytes: usize,
-) -> Result<BucketOutput> {
+    emit: &mut dyn FnMut(SpillRec) -> Result<()>,
+) -> Result<()> {
     // 1. Collect this bucket's spill files.
     let mut spill_files: Vec<PathBuf> = Vec::new();
     for entry in std::fs::read_dir(spill_dir)? {
@@ -312,60 +335,11 @@ fn group_bucket(
         }
     }
 
-    // 3. Output shard writer (always created so the shard set is complete).
-    let shard_path = out_dir.join(shard_name(prefix, bucket, num_shards));
-    let mut out = RecordWriter::create(&shard_path)?;
-    let mut entries: Vec<GroupIndexEntry> = Vec::new();
-
-    struct GroupAcc {
-        key: Vec<u8>,
-        offset: u64,
-        count: u64,
-        bytes: u64,
-        words: u64,
-    }
-    let mut acc: Option<GroupAcc> = None;
-    let emit = |rec: SpillRec,
-                    out: &mut RecordWriter<io::BufWriter<std::fs::File>>,
-                    acc: &mut Option<GroupAcc>,
-                    entries: &mut Vec<GroupIndexEntry>|
-     -> Result<()> {
-        let start = out.bytes_written();
-        match acc {
-            Some(a) if a.key == rec.key => {
-                a.count += 1;
-                a.bytes += framed_len(rec.example.len());
-                a.words += rec.words as u64;
-            }
-            _ => {
-                if let Some(a) = acc.take() {
-                    entries.push(GroupIndexEntry {
-                        key: a.key,
-                        shard: bucket as u32,
-                        offset: a.offset,
-                        num_examples: a.count,
-                        bytes: a.bytes,
-                        words: a.words,
-                    });
-                }
-                *acc = Some(GroupAcc {
-                    key: rec.key.clone(),
-                    offset: start,
-                    count: 1,
-                    bytes: framed_len(rec.example.len()),
-                    words: rec.words as u64,
-                });
-            }
-        }
-        out.write_record(&rec.example)?;
-        Ok(())
-    };
-
     if runs.is_empty() {
         // Everything fit in one chunk: sort in memory and stream out.
         chunk.sort_by(|a, b| a.order_key().cmp(&b.order_key()));
         for rec in chunk.drain(..) {
-            emit(rec, &mut out, &mut acc, &mut entries)?;
+            emit(rec)?;
         }
     } else {
         // Flush the tail chunk, then k-way merge all runs.
@@ -384,15 +358,74 @@ fn group_bucket(
             match cur.advance()? {
                 Some(prev) => {
                     heap.push(HeapItem { rec: cur.current.clone(), run });
-                    emit(prev, &mut out, &mut acc, &mut entries)?;
+                    emit(prev)?;
                 }
                 None => {
                     let last = cursors[run].take().unwrap().current;
-                    emit(last, &mut out, &mut acc, &mut entries)?;
+                    emit(last)?;
                 }
             }
         }
     }
+
+    for p in runs {
+        std::fs::remove_file(p).ok();
+    }
+    Ok(())
+}
+
+fn group_bucket(
+    bucket: usize,
+    spill_dir: &Path,
+    out_dir: &Path,
+    prefix: &str,
+    num_shards: usize,
+    chunk_bytes: usize,
+) -> Result<BucketOutput> {
+    // Output shard writer (always created so the shard set is complete).
+    let shard_path = out_dir.join(shard_name(prefix, bucket, num_shards));
+    let mut out = RecordWriter::create(&shard_path)?;
+    let mut entries: Vec<GroupIndexEntry> = Vec::new();
+
+    struct GroupAcc {
+        key: Vec<u8>,
+        offset: u64,
+        count: u64,
+        bytes: u64,
+        words: u64,
+    }
+    let mut acc: Option<GroupAcc> = None;
+    merge_bucket(bucket, spill_dir, chunk_bytes, &mut |rec| {
+        let start = out.bytes_written();
+        match &mut acc {
+            Some(a) if a.key == rec.key => {
+                a.count += 1;
+                a.bytes += framed_len(rec.example.len());
+                a.words += rec.words as u64;
+            }
+            _ => {
+                if let Some(a) = acc.take() {
+                    entries.push(GroupIndexEntry {
+                        key: a.key,
+                        shard: bucket as u32,
+                        offset: a.offset,
+                        num_examples: a.count,
+                        bytes: a.bytes,
+                        words: a.words,
+                    });
+                }
+                acc = Some(GroupAcc {
+                    key: rec.key.clone(),
+                    offset: start,
+                    count: 1,
+                    bytes: framed_len(rec.example.len()),
+                    words: rec.words as u64,
+                });
+            }
+        }
+        out.write_record(&rec.example)?;
+        Ok(())
+    })?;
 
     if let Some(a) = acc.take() {
         entries.push(GroupIndexEntry {
@@ -405,10 +438,32 @@ fn group_bucket(
         });
     }
     out.flush()?;
-    for p in runs {
-        std::fs::remove_file(p).ok();
-    }
     Ok(BucketOutput { entries })
+}
+
+/// Bucket sink for the direct-to-paged path: append the merged stream
+/// straight into this bucket's shard store (already-encoded bytes, no
+/// decode/re-encode), checkpointing whenever the WAL passes the same
+/// budget [`PagedStore::build`] uses so recovery cost stays bounded.
+/// Ends with commit + checkpoint, leaving the shard cold (WAL empty).
+fn paged_bucket(
+    bucket: usize,
+    spill_dir: &Path,
+    store: &mut PagedStore,
+    chunk_bytes: usize,
+) -> Result<u64> {
+    let mut appended = 0u64;
+    merge_bucket(bucket, spill_dir, chunk_bytes, &mut |rec| {
+        store.append_encoded(&rec.key, &rec.example)?;
+        appended += 1;
+        if store.wal_len_bytes() >= BUILD_CHECKPOINT_WAL_BYTES {
+            store.checkpoint()?;
+        }
+        Ok(())
+    })?;
+    store.commit()?;
+    store.checkpoint()?;
+    Ok(appended)
 }
 
 // ---------------------------------------------------------------------------
@@ -434,7 +489,7 @@ pub fn run_partition(
     }
 
     let map_t = Timer::start();
-    let (num_examples, payload_bytes) = map_phase(dataset, partitioner, &spill_dir, opts)?;
+    let (num_examples, payload_bytes) = map_phase(dataset, partitioner, &spill_dir, opts, 0)?;
     let map_secs = map_t.elapsed_secs();
 
     let group_t = Timer::start();
@@ -471,6 +526,228 @@ pub fn run_partition(
         wall_secs: wall.elapsed_secs(),
         index_path,
     })
+}
+
+/// Knobs specific to `--format paged` materialization.
+#[derive(Debug, Clone)]
+pub struct PagedPartitionOptions {
+    /// Shard stores to hash groups across (1 = the classic single
+    /// store, byte-identical to [`PagedStore::build`]).
+    pub shards: usize,
+    /// LRU frames **per shard store** while building.
+    pub cache_pages: usize,
+    /// Placement seed for [`shard_of_key`] (0 = plain FNV-1a).
+    pub hash_seed: u64,
+}
+
+impl Default for PagedPartitionOptions {
+    fn default() -> Self {
+        PagedPartitionOptions { shards: 1, cache_pages: DEFAULT_CACHE_PAGES, hash_seed: 0 }
+    }
+}
+
+/// Summary of a completed [`run_partition_paged`] run.
+#[derive(Debug, Clone)]
+pub struct PagedPartitionReport {
+    pub num_examples: u64,
+    pub num_groups: u64,
+    pub shards: usize,
+    /// Map+spill seconds (0 on the single-shard path, which appends in
+    /// arrival order with no spill at all).
+    pub map_secs: f64,
+    /// Group-by-key + shard-append seconds.
+    pub group_secs: f64,
+    pub wall_secs: f64,
+    /// The `.pset` manifest describing the materialized set.
+    pub manifest_path: PathBuf,
+    /// Final page accounting per shard, in shard order — saves callers
+    /// (the CLI's `--auto-compact-threshold` check) a full set reopen
+    /// just to read numbers the build already had in hand.
+    pub shard_stats: Vec<PagedStat>,
+}
+
+/// Materialize `dataset` as a **sharded paged set**: hash-shard group
+/// keys across `paged.shards` independent `PagedStore`s, written
+/// concurrently by the group-by-key bucket writers — when the output
+/// format is paged there is no intermediate TFRecord pass, the merged
+/// bucket streams append straight into the shard WALs.
+///
+/// With `paged.shards == 1` this delegates to [`PagedStore::build`]
+/// (arrival-order appends, no spill), so the produced `<prefix>.pstore`
+/// is byte-identical to the unsharded path — plus a one-shard `.pset`
+/// manifest so the same [`crate::formats::ShardedPagedReader`] opens
+/// either layout. Per-group contents are identical at every shard count:
+/// the merge orders a group's examples by `(split, seq)`, which is
+/// arrival order (dataset splits are contiguous, in order).
+///
+/// # Errors
+/// Any map/spill/merge I/O failure, any shard store append/checkpoint
+/// failure, or a mapped-vs-stored example count mismatch (which would
+/// mean a bucket writer silently lost data).
+pub fn run_partition_paged(
+    dataset: &dyn BaseDataset,
+    partitioner: &dyn Partitioner,
+    out_dir: &Path,
+    prefix: &str,
+    opts: &PartitionOptions,
+    paged: &PagedPartitionOptions,
+) -> Result<PagedPartitionReport> {
+    assert!(paged.shards > 0 && opts.num_workers > 0);
+    let wall = Timer::start();
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let manifest_path = PagedSetManifest::path(out_dir, prefix);
+
+    if paged.shards == 1 {
+        // The compatibility path: exactly PagedStore::build, so the
+        // store bytes (and every crash-matrix invariant over them) are
+        // those of an unsharded materialization. A previous multi-shard
+        // set in the same dir/prefix still gets its stale stores
+        // reclaimed — captured before the manifest overwrite, truncated
+        // only after the new store and manifest are durable (a crash in
+        // between leaks the old bytes rather than losing them).
+        let keep = [prefix.to_string()];
+        let stale = stale_shard_stores(&StdVfs, out_dir, prefix, &keep);
+        // Building in place destroys any same-named previous store:
+        // refuse while a live reader pins its snapshot, and unpublish an
+        // old manifest naming it first — a crash mid-build must not
+        // leave a manifest pointing at wreckage.
+        let pstore = out_dir.join(format!("{prefix}.pstore"));
+        if crate::store::shared::pin_count(
+            StdVfs.instance_id(),
+            &StdVfs.registry_key(&pstore),
+        ) > 0
+        {
+            bail!(
+                "cannot rebuild paged store {prefix}: a live reader still pins a snapshot \
+                 of the store being overwritten"
+            );
+        }
+        let unpublished = invalidate_overlapping_manifest(&StdVfs, out_dir, prefix, &keep)?;
+        let group_t = Timer::start();
+        let store =
+            match PagedStore::build(dataset, partitioner, out_dir, prefix, paged.cache_pages) {
+                Ok(store) => store,
+                Err(e) => {
+                    // Failed before destroying the old store? Republish
+                    // its manifest so the old set stays discoverable.
+                    if let Some(old) = &unpublished {
+                        restore_manifest_if_intact(&StdVfs, out_dir, prefix, old);
+                    }
+                    return Err(e);
+                }
+            };
+        let manifest = PagedSetManifest {
+            hash_seed: paged.hash_seed,
+            shard_prefixes: vec![prefix.to_string()],
+            epochs: vec![store.epoch()],
+        };
+        manifest.write_with(&StdVfs, out_dir, prefix)?;
+        // Still-pinned stale stores (a live reader of the previous
+        // layout) are left for that reader's lifetime; this process
+        // exit (or a later re-run) is the retry.
+        let _still_pinned = truncate_shard_stores(&StdVfs, out_dir, &stale);
+        return Ok(PagedPartitionReport {
+            num_examples: store.num_examples(),
+            num_groups: store.num_groups() as u64,
+            shards: 1,
+            map_secs: 0.0,
+            group_secs: group_t.elapsed_secs(),
+            wall_secs: wall.elapsed_secs(),
+            manifest_path,
+            shard_stats: vec![store.stat()],
+        });
+    }
+
+    let spill_dir = out_dir.join(format!(".spill-{prefix}"));
+    if spill_dir.exists() {
+        std::fs::remove_dir_all(&spill_dir)?;
+    }
+
+    // Phase A: map + spill, bucketed by the *shard* placement hash, so a
+    // bucket's merged stream is exactly one shard's contents. The paged
+    // index keeps no word counts, so never pay the per-example text
+    // scan here (the single-shard build path doesn't either).
+    let map_opts =
+        PartitionOptions { num_shards: paged.shards, count_words: false, ..opts.clone() };
+    let map_t = Timer::start();
+    let (num_examples, _payload_bytes) =
+        match map_phase(dataset, partitioner, &spill_dir, &map_opts, paged.hash_seed) {
+            Ok(mapped) => mapped,
+            Err(e) => {
+                std::fs::remove_dir_all(&spill_dir).ok();
+                return Err(e);
+            }
+        };
+    let map_secs = map_t.elapsed_secs();
+
+    let group_t = Timer::start();
+    let phase_b = paged_group_phase(out_dir, prefix, &spill_dir, opts, paged, num_examples);
+    // The spill can hold roughly the whole dataset: clean it up on the
+    // failure paths too, not just on success.
+    std::fs::remove_dir_all(&spill_dir).ok();
+    let (num_groups, shard_stats) = phase_b?;
+    let group_secs = group_t.elapsed_secs();
+
+    Ok(PagedPartitionReport {
+        num_examples,
+        num_groups,
+        shards: paged.shards,
+        map_secs,
+        group_secs,
+        wall_secs: wall.elapsed_secs(),
+        manifest_path,
+        shard_stats,
+    })
+}
+
+/// Phase B of [`run_partition_paged`]: per-bucket external group-by-key,
+/// appending straight into that bucket's shard store — S concurrent
+/// writers, one WAL each (the single-live-writer contract holds per
+/// shard). `num_workers` long-lived threads pop buckets from a shared
+/// counter, so a skewed (heavy) bucket never barriers the rest: each
+/// store sits behind its own mutex that is locked exactly once, by
+/// whichever worker pops that bucket — `&mut`-per-shard exclusivity
+/// without waves. Returns the distinct-group count across shards plus
+/// the final per-shard page accounting.
+fn paged_group_phase(
+    out_dir: &Path,
+    prefix: &str,
+    spill_dir: &Path,
+    opts: &PartitionOptions,
+    paged: &PagedPartitionOptions,
+    num_examples: u64,
+) -> Result<(u64, Vec<PagedStat>)> {
+    let mut set =
+        PagedShardSet::create(out_dir, prefix, paged.shards, paged.cache_pages, paged.hash_seed)?;
+    let chunk_bytes = opts.spill_chunk_bytes;
+    let results: Vec<Result<u64>> =
+        parallel_for_each_mut(set.shards_mut(), opts.num_workers, |bucket, store| {
+            paged_bucket(bucket, spill_dir, store, chunk_bytes)
+        });
+    let errs: Vec<String> = results
+        .iter()
+        .enumerate()
+        .filter_map(|(bucket, r)| r.as_ref().err().map(|e| format!("shard {bucket}: {e:#}")))
+        .collect();
+    if !errs.is_empty() {
+        bail!("sharded paged materialization failed: {}", errs.join("; "));
+    }
+    // Integrity gate BEFORE publication: a set that lost examples must
+    // never become discoverable, and must never cost the previous
+    // layout its (still intact) data.
+    if set.num_examples() != num_examples {
+        bail!(
+            "sharded materialization stored {} of {num_examples} mapped examples",
+            set.num_examples()
+        );
+    }
+    // Publish the per-shard epochs in the manifest — the set's first
+    // (and only) publication on this path; only then is it durable
+    // enough to reclaim a previous layout's stores.
+    set.sync_manifest()?;
+    set.reclaim_stale();
+    Ok((set.num_groups() as u64, set.shard_stats()))
 }
 
 #[cfg(test)]
@@ -558,6 +835,27 @@ mod tests {
             // order is exactly generation order.
             assert_eq!(have, want);
         }
+    }
+
+    #[test]
+    fn paged_sharded_partition_matches_oracle() {
+        let ds = small_text();
+        let p = FeatureKey::new("domain");
+        let dir = tmp("paged_sharded");
+        let paged = PagedPartitionOptions { shards: 4, cache_pages: 32, hash_seed: 0 };
+        let report = run_partition_paged(&ds, &p, &dir, "data", &opts(4), &paged).unwrap();
+        assert_eq!(report.num_examples as usize, ds.len());
+        assert_eq!(report.shards, 4);
+        let r = crate::formats::ShardedPagedReader::open(&dir, "data", 32).unwrap();
+        assert_eq!(r.num_examples() as usize, ds.len());
+        let oracle = oracle_groups(&ds, &p);
+        assert_eq!(r.num_groups(), oracle.len());
+        for (k, want) in &oracle {
+            let mut got = Vec::new();
+            assert!(r.visit_group(k, |ex| got.push(ex.encode())).unwrap());
+            assert_eq!(&got, want, "group {k:?}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

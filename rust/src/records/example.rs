@@ -145,6 +145,47 @@ impl Example {
         out
     }
 
+    /// FNV-1a digest of the canonical encoding, computed incrementally —
+    /// guaranteed equal to `fnv1a(&self.encode())` (a test pins it) but
+    /// without materializing the encoded buffer. The stateless
+    /// partitioners hash every example of a run exactly once, so this is
+    /// their hot path: the digest streams field by field through
+    /// [`crate::util::rng::Fnv1a`] instead of paying an allocation plus
+    /// a full copy per example.
+    pub fn content_hash64(&self) -> u64 {
+        let mut h = crate::util::rng::Fnv1a::new();
+        h.update(&(self.features.len() as u16).to_le_bytes());
+        for (name, feature) in &self.features {
+            h.update(&(name.len() as u16).to_le_bytes());
+            h.update(name.as_bytes());
+            match feature {
+                Feature::Bytes(vals) => {
+                    h.update(&[0]);
+                    h.update(&(vals.len() as u32).to_le_bytes());
+                    for v in vals {
+                        h.update(&(v.len() as u32).to_le_bytes());
+                        h.update(v);
+                    }
+                }
+                Feature::Ints(vals) => {
+                    h.update(&[1]);
+                    h.update(&(vals.len() as u32).to_le_bytes());
+                    for v in vals {
+                        h.update(&v.to_le_bytes());
+                    }
+                }
+                Feature::Floats(vals) => {
+                    h.update(&[2]);
+                    h.update(&(vals.len() as u32).to_le_bytes());
+                    for v in vals {
+                        h.update(&v.to_le_bytes());
+                    }
+                }
+            }
+        }
+        h.finish()
+    }
+
     pub fn decode(bytes: &[u8]) -> io::Result<Example> {
         let mut c = Cursor { b: bytes, p: 0 };
         let n = c.u16()? as usize;
@@ -249,6 +290,18 @@ mod tests {
             let decoded = Example::decode(&ex.encode()).unwrap();
             prop_assert_eq(decoded, ex, "example roundtrip")
         });
+    }
+
+    #[test]
+    fn content_hash_matches_hash_of_encoding() {
+        use crate::util::rng::fnv1a;
+        // The incremental digest must track encode() byte for byte —
+        // partition layouts depend on the two never diverging.
+        check(300, |rng| {
+            let ex = gen_example(rng);
+            prop_assert_eq(ex.content_hash64(), fnv1a(&ex.encode()), "content hash")
+        });
+        assert_eq!(Example::new().content_hash64(), fnv1a(&Example::new().encode()));
     }
 
     #[test]

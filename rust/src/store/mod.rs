@@ -59,8 +59,8 @@ pub use freelist::Freelist;
 pub use page::{Page, PageId, NO_PAGE, PAGE_SIZE};
 pub use pager::{PageRead, Pager};
 pub use shared::{
-    min_pinned_epoch, min_pinned_epoch_for, pin_epoch, EpochPin, ReadSnapshot, SharedPager,
-    SnapshotReader,
+    min_pinned_epoch, min_pinned_epoch_for, pin_count, pin_epoch, EpochPin, ReadSnapshot,
+    SharedPager, SnapshotReader,
 };
 pub use vfs::{
     CrashImage, FaultPlan, FaultVfs, MemVfs, OpenMode, StdVfs, Vfs, VfsCursor, VfsFile,

@@ -145,6 +145,16 @@ pub fn min_pinned_epoch_for(key: &(u64, PathBuf)) -> Option<u64> {
     lock_pins().get(key).and_then(|epochs| epochs.keys().next().copied())
 }
 
+/// Live pins on `(vfs_id, path)` across all epochs — introspection for
+/// tests and diagnostics (e.g. asserting that a sharded reader holds one
+/// pin **per shard store**, so each shard's reuse gate sees it).
+pub fn pin_count(vfs_id: u64, path: &Path) -> u32 {
+    lock_pins()
+        .get(&(vfs_id, path.to_path_buf()))
+        .map(|epochs| epochs.values().sum())
+        .unwrap_or(0)
+}
+
 /// A committed read snapshot: everything a reader handle needs to stay
 /// inside one checkpoint's state.
 ///
@@ -434,10 +444,12 @@ mod tests {
         // Unique vfs id so parallel tests never share an entry.
         let vfs_id = 0xDEAD_0001;
         assert_eq!(min_pinned_epoch(vfs_id, path), None);
+        assert_eq!(pin_count(vfs_id, path), 0);
         let p5 = pin_epoch(vfs_id, path, 5);
         let p3 = pin_epoch(vfs_id, path, 3);
         let p3b = pin_epoch(vfs_id, path, 3);
         assert_eq!(min_pinned_epoch(vfs_id, path), Some(3));
+        assert_eq!(pin_count(vfs_id, path), 3);
         assert_eq!(p3.epoch(), 3);
         drop(p3);
         assert_eq!(min_pinned_epoch(vfs_id, path), Some(3), "second epoch-3 pin holds");

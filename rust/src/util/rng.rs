@@ -243,12 +243,53 @@ impl CrpSampler {
 /// seeded per-process, which would make partitions non-reproducible).
 #[inline]
 pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// Streaming FNV-1a: feed bytes in any number of chunks and get exactly
+/// the digest [`fnv1a`] would produce over their concatenation. Lets
+/// callers hash a structured value (e.g. an [`crate::records::Example`]'s
+/// canonical encoding) field by field without materializing the encoded
+/// buffer first — the partitioners hash every example once per pipeline
+/// run, so the avoided allocation is a hot-path win.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv1a {
+    state: u64,
+}
+
+impl Fnv1a {
+    /// Start a digest at the FNV-1a offset basis.
+    #[inline]
+    pub fn new() -> Fnv1a {
+        Fnv1a { state: 0xcbf2_9ce4_8422_2325 }
     }
-    h
+
+    /// Absorb one chunk. Chunk boundaries never affect the digest:
+    /// `update(a); update(b)` equals `update(a ++ b)`.
+    #[inline]
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.state;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        self.state = h;
+    }
+
+    /// The digest of everything absorbed so far (non-consuming: more
+    /// `update` calls may follow).
+    #[inline]
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Fnv1a {
+        Fnv1a::new()
+    }
 }
 
 #[cfg(test)]
@@ -393,5 +434,23 @@ mod tests {
         assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
         assert_eq!(fnv1a(b"dataset-grouper"), fnv1a(b"dataset-grouper"));
         assert_ne!(fnv1a(b"nytimes.com"), fnv1a(b"bbc.co.uk"));
+    }
+
+    #[test]
+    fn streaming_fnv1a_is_chunking_invariant() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let whole = fnv1a(data);
+        for split in 0..=data.len() {
+            let mut h = Fnv1a::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.finish(), whole, "split at {split}");
+        }
+        let mut bytewise = Fnv1a::new();
+        for b in data {
+            bytewise.update(std::slice::from_ref(b));
+        }
+        assert_eq!(bytewise.finish(), whole);
+        assert_eq!(Fnv1a::new().finish(), fnv1a(b""));
     }
 }

@@ -172,6 +172,58 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Run `f(index, &mut item)` once per item over at most `workers` scoped
+/// threads, returning the results in item order.
+///
+/// The borrow-friendly sibling of [`ThreadPool::try_map`] for callers
+/// whose items (or closures) are **not** `'static` — e.g. the sharded
+/// paged writers, where each worker needs `&mut` on one shard store
+/// owned by the caller. Workers pop indices from a shared counter, so a
+/// skewed (slow) item never barriers the rest; each item sits behind its
+/// own mutex that is locked exactly once, by whichever worker pops it —
+/// exclusive `&mut`-per-item access without waves or unsafe. A panic in
+/// `f` propagates at scope exit (std scoped-thread semantics), so
+/// callers who need panics-as-values should catch inside `f`.
+pub fn parallel_for_each_mut<T, R, F>(items: &mut [T], workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let workers = workers.max(1).min(items.len());
+    let slots: Vec<Mutex<(&mut T, Option<R>)>> =
+        items.iter_mut().map(|item| Mutex::new((item, None))).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let slots = &slots;
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= slots.len() {
+                    break;
+                }
+                let mut slot = slots[i].lock().unwrap();
+                let out = f(i, &mut *slot.0);
+                slot.1 = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            // Every index is popped exactly once and filled before its
+            // worker moves on; a panicking worker re-raised at scope
+            // exit, so reaching this drain means every slot completed.
+            slot.into_inner()
+                .unwrap_or_else(|e| e.into_inner())
+                .1
+                .expect("scope joined: every popped slot holds a result")
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,6 +234,26 @@ mod tests {
         let pool = ThreadPool::new(4);
         let out = pool.map((0..100).collect::<Vec<i32>>(), |x| x * 2);
         assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn parallel_for_each_mut_visits_every_item_once_in_order() {
+        let mut items: Vec<u64> = (0..37).collect();
+        let results = parallel_for_each_mut(&mut items, 4, |i, item| {
+            *item += 100;
+            (i as u64, *item)
+        });
+        assert_eq!(results.len(), 37);
+        for (i, (idx, val)) in results.iter().enumerate() {
+            assert_eq!(*idx, i as u64, "results must come back in item order");
+            assert_eq!(*val, i as u64 + 100);
+        }
+        assert_eq!(items, (100..137).collect::<Vec<u64>>());
+        // Degenerate shapes: empty slice, more workers than items.
+        let empty: Vec<u64> = parallel_for_each_mut(&mut [], 8, |_, item: &mut u64| *item);
+        assert!(empty.is_empty());
+        let mut one = [7u64];
+        assert_eq!(parallel_for_each_mut(&mut one, 16, |_, item| *item * 2), vec![14]);
     }
 
     #[test]

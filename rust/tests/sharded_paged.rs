@@ -1,0 +1,221 @@
+//! End-to-end properties of the sharded paged materialization path:
+//!
+//! 1. **Shard-count invariance** — `run_partition_paged` with S ∈
+//!    {1, 2, 4, 8} yields exactly the same groups→examples mapping (per
+//!    group, bit-identical example sequences), for both a feature
+//!    partitioner and the content-hash random partitioner.
+//! 2. **Single-shard byte identity** — `--shards 1` produces a
+//!    `.pstore`/`.pdata` byte-identical to `PagedStore::build`, so every
+//!    crash-matrix invariant proven on the single store carries over
+//!    shard-locally.
+//! 3. **Per-shard snapshot isolation** — a `ShardedPagedReader` holds
+//!    one epoch pin per shard store, and a live appender
+//!    (append/commit/checkpoint churn on every shard) never changes
+//!    what an open reader sees.
+//!
+//! This suite is also its own CI step on the 3-OS matrix (the sharded
+//! end-to-end partition smoke test).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use grouper::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
+use grouper::formats::paged_sharded::shard_prefix;
+use grouper::formats::{PagedShardSet, PagedStore, ShardedPagedReader};
+use grouper::pipeline::{
+    run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions, Partitioner,
+    RandomPartitioner,
+};
+use grouper::records::Example;
+use grouper::store::shared::pin_count;
+use grouper::store::vfs::{StdVfs, Vfs};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("grouper_sharded_paged_test").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn small_text(groups: usize) -> SyntheticTextDataset {
+    let mut spec = DatasetSpec::fedccnews_mini(groups, 5);
+    spec.max_group_words = 1500;
+    SyntheticTextDataset::new(spec)
+}
+
+fn opts() -> PartitionOptions {
+    PartitionOptions { num_workers: 4, ..Default::default() }
+}
+
+/// groups → encoded examples, read back through the unified reader.
+fn read_set(dir: &Path, prefix: &str) -> BTreeMap<Vec<u8>, Vec<Vec<u8>>> {
+    let r = ShardedPagedReader::open(dir, prefix, 32).unwrap();
+    let mut out = BTreeMap::new();
+    for k in r.keys() {
+        let mut v = Vec::new();
+        assert!(r.visit_group(k, |ex| v.push(ex.encode())).unwrap());
+        out.insert(k.clone(), v);
+    }
+    out
+}
+
+/// In-memory oracle: the same partitioner applied in arrival order.
+fn oracle(ds: &dyn BaseDataset, p: &dyn Partitioner) -> BTreeMap<Vec<u8>, Vec<Vec<u8>>> {
+    let mut m: BTreeMap<Vec<u8>, Vec<Vec<u8>>> = BTreeMap::new();
+    for ex in ds.examples() {
+        m.entry(p.key(&ex)).or_default().push(ex.encode());
+    }
+    m
+}
+
+#[test]
+fn shard_count_never_changes_the_mapping() {
+    let ds = small_text(30);
+    let partitioners: Vec<(&str, Box<dyn Partitioner>)> = vec![
+        ("feature", Box::new(FeatureKey::new("domain"))),
+        ("random", Box::new(RandomPartitioner::new(13, 42))),
+    ];
+    for (name, p) in &partitioners {
+        let want = oracle(&ds, p.as_ref());
+        for shards in [1usize, 2, 4, 8] {
+            let dir = tmp(&format!("equiv-{name}-{shards}"));
+            let paged = PagedPartitionOptions { shards, cache_pages: 32, hash_seed: 0 };
+            let report =
+                run_partition_paged(&ds, p.as_ref(), &dir, "data", &opts(), &paged).unwrap();
+            assert_eq!(report.num_examples as usize, ds.len(), "{name}/{shards}");
+            assert_eq!(report.num_groups as usize, want.len(), "{name}/{shards}");
+            let got = read_set(&dir, "data");
+            assert_eq!(got, want, "{name} partition must be shard-count invariant ({shards})");
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+#[test]
+fn single_shard_run_is_byte_identical_to_plain_build() {
+    let ds = small_text(12);
+    let p = FeatureKey::new("domain");
+    let plain = tmp("ident-plain");
+    let sharded = tmp("ident-set");
+    let store = PagedStore::build(&ds, &p, &plain, "data", 64).unwrap();
+    drop(store);
+    run_partition_paged(
+        &ds,
+        &p,
+        &sharded,
+        "data",
+        &opts(),
+        &PagedPartitionOptions::default(),
+    )
+    .unwrap();
+    for file in ["data.pstore", "data.pdata", "data.pwal"] {
+        let a = std::fs::read(plain.join(file)).unwrap();
+        let b = std::fs::read(sharded.join(file)).unwrap();
+        assert_eq!(a, b, "{file} must be byte-identical on the single-shard path");
+    }
+    // The only addition is the manifest.
+    assert!(sharded.join("data.pset").exists());
+    assert!(!plain.join("data.pset").exists());
+    std::fs::remove_dir_all(&plain).ok();
+    std::fs::remove_dir_all(&sharded).ok();
+}
+
+#[test]
+fn reader_pins_every_shard_and_is_isolated_from_a_live_appender() {
+    let dir = tmp("isolation");
+    let shards = 3usize;
+    let mut set = PagedShardSet::create(&dir, "x", shards, 16, 0).unwrap();
+    for i in 0..60 {
+        let g = format!("group-{}", i % 10);
+        set.append(g.as_bytes(), &Example::text(&format!("base-{i}"))).unwrap();
+    }
+    set.commit().unwrap();
+    set.checkpoint().unwrap();
+
+    let reader = ShardedPagedReader::open(&dir, "x", 16).unwrap();
+    assert_eq!(reader.num_examples(), 60);
+    let before = {
+        let mut m = BTreeMap::new();
+        for k in reader.keys() {
+            let mut v = Vec::new();
+            assert!(reader.visit_group(k, |ex| v.push(ex.encode())).unwrap());
+            m.insert(k.clone(), v);
+        }
+        m
+    };
+    // One epoch pin per shard store: each shard's reuse gate sees this
+    // reader, so no shard can rewrite or truncate a page it can reach.
+    for i in 0..shards {
+        let pstore = dir.join(format!("{}.pstore", shard_prefix("x", i, shards)));
+        let key = StdVfs.registry_key(&pstore);
+        assert!(pin_count(StdVfs.instance_id(), &key) >= 1, "shard {i} unpinned");
+    }
+
+    // The single live writer keeps churning: appends, commits,
+    // checkpoints (advancing every shard's epoch), and a compaction.
+    for round in 0..4 {
+        for i in 0..30 {
+            let g = format!("group-{}", i % 10);
+            set.append(g.as_bytes(), &Example::text(&format!("later-{round}-{i}"))).unwrap();
+        }
+        set.commit().unwrap();
+        set.checkpoint().unwrap();
+    }
+    set.compact().unwrap();
+
+    // The open reader still sees exactly its pinned snapshot…
+    assert_eq!(reader.num_examples(), 60, "snapshot must not grow under a live appender");
+    let after = {
+        let mut m = BTreeMap::new();
+        for k in reader.keys() {
+            let mut v = Vec::new();
+            assert!(reader.visit_group(k, |ex| v.push(ex.encode())).unwrap());
+            m.insert(k.clone(), v);
+        }
+        m
+    };
+    assert_eq!(after, before, "snapshot contents must be byte-stable");
+
+    // …while a reader opened now sees all the churn.
+    let fresh = ShardedPagedReader::open(&dir, "x", 16).unwrap();
+    assert_eq!(fresh.num_examples(), 60 + 4 * 30);
+    assert!(
+        fresh.epochs().iter().zip(reader.epochs()).all(|(f, r)| *f > r),
+        "every shard must have advanced past the pinned epochs"
+    );
+    drop(reader);
+    drop(fresh);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn concurrent_reads_through_the_sharded_reader_match_serial() {
+    let ds = small_text(20);
+    let p = FeatureKey::new("domain");
+    let dir = tmp("concurrent");
+    let paged = PagedPartitionOptions { shards: 4, cache_pages: 16, hash_seed: 0 };
+    run_partition_paged(&ds, &p, &dir, "data", &opts(), &paged).unwrap();
+    let r = ShardedPagedReader::open(&dir, "data", 16).unwrap();
+    let serial = {
+        let mut n = 0usize;
+        r.visit_all(r.keys(), |_, _| n += 1).unwrap();
+        n
+    };
+    let total = std::sync::atomic::AtomicUsize::new(0);
+    let order = r.keys().to_vec();
+    let chunk = order.len().div_ceil(8);
+    std::thread::scope(|scope| {
+        for part in order.chunks(chunk) {
+            let r = &r;
+            let total = &total;
+            scope.spawn(move || {
+                let mut n = 0usize;
+                r.visit_all(part, |_, _| n += 1).unwrap();
+                total.fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+            });
+        }
+    });
+    assert_eq!(total.into_inner(), serial);
+    assert_eq!(serial, ds.len());
+    std::fs::remove_dir_all(&dir).ok();
+}
