@@ -16,9 +16,10 @@ use grouper::util::table::Table;
 use grouper::util::timer::MeanStd;
 
 fn main() {
-    // Table 4c needs no model artifacts (it times only the data phase),
-    // so it runs even where PJRT is absent.
+    // Tables 4c/4d need no model artifacts (they time only the data
+    // phase), so they run even where PJRT is absent.
     table4c_sharded_cohort_fetch();
+    table4d_remote_cohort_fetch();
 
     let model = std::env::var("GROUPER_BENCH_MODEL").unwrap_or_else(|_| "tiny".into());
     if !common::have_artifacts(&model) {
@@ -179,4 +180,98 @@ fn table4c_sharded_cohort_fetch() {
     }
     t.print();
     t.write_csv("results/table4c_sharded_fetch.csv").unwrap();
+}
+
+/// Table 4d: the same cohort pulled *over the wire* — one in-process
+/// `StoreServer` over a 4-shard paged set, swept across {1, 2, 4, 8}
+/// concurrent client connections each fetching a full 32-key cohort per
+/// trial. Times the pure remote fetch (framed bytes on loopback TCP, no
+/// tokenize/batch), so the number to watch is aggregate examples/s: it
+/// should *grow* with clients while per-cohort latency stays flat,
+/// because every connection reads its own pinned snapshot on the
+/// server's worker pool.
+fn table4d_remote_cohort_fetch() {
+    use grouper::corpus::SyntheticTextDataset;
+    use grouper::fed::ClientSource;
+    use grouper::pipeline::{
+        run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
+    };
+    use grouper::serve::{RemoteClientSource, ServeOptions, StoreServer};
+    use grouper::util::rng::Rng;
+    use grouper::util::timer::time_trials;
+
+    let mut spec = DatasetSpec::fedc4_mini(common::scaled(400).max(64), 42);
+    spec.max_group_words = 20_000;
+    let ds = SyntheticTextDataset::new(spec);
+    let dir = common::bench_dir("table4d");
+    // Materializations are scale-dependent: always rebuild, or a stale
+    // set from a different GROUPER_BENCH_SCALE would be timed silently.
+    let _ = std::fs::remove_dir_all(&dir);
+    run_partition_paged(
+        &ds,
+        &FeatureKey::new(ds.spec.key_feature),
+        &dir,
+        "data",
+        &PartitionOptions::default(),
+        &PagedPartitionOptions { shards: 4, cache_pages: 64, hash_seed: 0 },
+    )
+    .unwrap();
+
+    let server = StoreServer::bind(&dir, "data", "127.0.0.1:0", ServeOptions::default()).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let _handle = server.spawn().unwrap();
+
+    // One probe connection picks the cohort and counts its examples so
+    // throughput is examples actually shipped, not a guess.
+    let probe = RemoteClientSource::connect(&addr).unwrap();
+    let mut keys = probe.group_keys();
+    Rng::new(3).shuffle(&mut keys);
+    keys.truncate(32);
+    let cohort_examples: u64 = probe
+        .fetch_groups(&keys)
+        .unwrap()
+        .into_iter()
+        .map(|g| g.expect("sampled key must exist").num_examples)
+        .sum();
+    drop(probe);
+
+    let mut t = Table::new(
+        "Table 4d — remote cohort fetch (32 clients/cohort over loopback TCP, 4 shards)",
+        &["Connections", "Wall per trial (s)", "Aggregate examples/s", "Scaling vs 1"],
+    );
+    let mut metrics: Vec<(String, f64)> =
+        vec![("fedc4.remote_cohort_fetch.cohort_examples".into(), cohort_examples as f64)];
+    let mut baseline_eps = 0.0f64;
+    for clients in [1usize, 2, 4, 8] {
+        // Connections are set up once per sweep point: the steady-state
+        // cost being measured is fetching, not handshaking.
+        let sources: Vec<RemoteClientSource> =
+            (0..clients).map(|_| RemoteClientSource::connect(&addr).unwrap()).collect();
+        let timing = time_trials(5, || {
+            std::thread::scope(|s| {
+                for src in &sources {
+                    let keys = &keys;
+                    s.spawn(move || {
+                        let got = src.fetch_groups(keys).unwrap();
+                        assert_eq!(got.len(), keys.len());
+                    });
+                }
+            });
+        });
+        let eps = (clients as u64 * cohort_examples) as f64 / timing.mean.max(1e-12);
+        if clients == 1 {
+            baseline_eps = eps;
+        }
+        t.row(vec![
+            format!("{clients}"),
+            format!("{timing}"),
+            format!("{eps:.0}"),
+            format!("{:.2}x", eps / baseline_eps.max(1e-12)),
+        ]);
+        metrics.push((format!("fedc4.remote_cohort_fetch.clients{clients}_s"), timing.mean));
+        metrics.push((format!("fedc4.remote_cohort_fetch.clients{clients}_eps"), eps));
+    }
+    t.print();
+    t.write_csv("results/table4d_remote_fetch.csv").unwrap();
+    common::write_bench_json("table4_remote_fetch", &metrics);
 }

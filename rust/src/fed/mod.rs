@@ -22,6 +22,7 @@ pub mod client_data;
 pub mod personalize;
 pub mod schedules;
 pub mod server_opt;
+pub mod source;
 pub mod trainer;
 
 pub use algorithms::{fedavg_round, fedsgd_round, RoundOutput};
@@ -29,6 +30,8 @@ pub use client_data::ClientBatches;
 pub use personalize::{personalization_eval, PersonalizationResult};
 pub use schedules::Schedule;
 pub use server_opt::{Adam, ServerOptimizer, Sgd};
+pub use source::ClientSource;
 pub use trainer::{
-    fetch_cohort_sharded, train, CohortFetchSpec, RoundMetrics, TrainOutput, TrainerConfig,
+    fetch_cohort, fetch_cohort_sharded, train, train_with_source, CohortFetchSpec, RoundMetrics,
+    TrainOutput, TrainerConfig,
 };

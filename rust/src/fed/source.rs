@@ -1,0 +1,308 @@
+//! `ClientSource` — one trainer-facing interface over every storage
+//! backend, local or remote.
+//!
+//! The round loop needs exactly three things from storage: the universe
+//! of group keys (to sample cohorts from), one group's examples as a
+//! prefetched [`StreamedGroup`] (to tokenize + batch), and bulk counts
+//! for logging. Every format in [`crate::formats`] — and the remote
+//! store server in [`crate::serve`] — can provide those, so the trait
+//! makes `fetch_cohort`, `train_with_source`, and `build_eval_clients`
+//! backend-agnostic:
+//!
+//! * **in-memory** ([`InMemoryDataset`]) — groups re-framed from the
+//!   resident map;
+//! * **streaming-gindex** ([`GindexSource`], and [`PartitionedDataset`]
+//!   which lazily opens one) — positioned extent reads over the
+//!   TFRecord shards;
+//! * **paged** ([`PagedReader`]) / **sharded-paged**
+//!   ([`ShardedPagedReader`]) — pinned-snapshot B+tree reads;
+//! * **remote** ([`crate::serve::RemoteClientSource`]) — the same
+//!   surface over a TCP connection to a `grouper serve` process.
+//!
+//! Group payloads are bit-identical across backends (the re-framed
+//! bytes are the same canonical [`Example`](crate::records::Example)
+//! encodings in the same order), so swapping the backend never changes
+//! training results — only where the bytes come from.
+
+use anyhow::Result;
+
+use crate::formats::paged::PagedReader;
+use crate::formats::paged_sharded::ShardedPagedReader;
+use crate::formats::streaming::{GindexSource, StreamedGroup};
+use crate::formats::InMemoryDataset;
+use crate::grouper::PartitionedDataset;
+use crate::records::tfrecord::RecordWriter;
+
+/// A backend the federated trainer can sample client datasets from.
+///
+/// Implementations must be `Send + Sync`: the cohort fetch fans out
+/// over the trainer's read-worker pool with the source behind an `Arc`.
+/// All methods take `&self`; concurrent fetches must be safe.
+///
+/// The canonical key order is **sorted**: `group_keys` returns the same
+/// list for the same group set no matter which backend serves it, so a
+/// seeded cohort sampler draws identical cohorts from any of them.
+pub trait ClientSource: Send + Sync {
+    /// Human-readable description of the backend (for logs).
+    fn describe(&self) -> String;
+
+    /// Every group key, in sorted (canonical) order.
+    fn group_keys(&self) -> Vec<Vec<u8>>;
+
+    /// Distinct groups.
+    fn num_groups(&self) -> usize;
+
+    /// Total examples across all groups.
+    fn num_examples(&self) -> u64;
+
+    /// One group's examples as a prefetched [`StreamedGroup`]; `None`
+    /// for a key the source does not hold.
+    ///
+    /// # Errors
+    /// Any backend read failure.
+    fn streamed_group(&self, key: &[u8]) -> Result<Option<StreamedGroup>>;
+
+    /// Whether [`ClientSource::fetch_groups`] is cheaper than per-key
+    /// [`ClientSource::streamed_group`] calls. Remote backends return
+    /// true (one batched round trip per cohort); local backends keep
+    /// the default false and let the caller parallelize per key.
+    fn batched(&self) -> bool {
+        false
+    }
+
+    /// Fetch many groups at once, order-preserving (`out[i]` answers
+    /// `keys[i]`; `None` for unknown keys). The default loops
+    /// [`ClientSource::streamed_group`]; batched backends override it.
+    ///
+    /// # Errors
+    /// Any backend read failure.
+    fn fetch_groups(&self, keys: &[Vec<u8>]) -> Result<Vec<Option<StreamedGroup>>> {
+        keys.iter().map(|k| self.streamed_group(k)).collect()
+    }
+}
+
+impl ClientSource for ShardedPagedReader {
+    fn describe(&self) -> String {
+        format!(
+            "sharded paged set ({} shards, {} groups, epochs {:?})",
+            self.num_shards(),
+            ShardedPagedReader::num_groups(self),
+            self.epochs()
+        )
+    }
+
+    fn group_keys(&self) -> Vec<Vec<u8>> {
+        self.keys().to_vec()
+    }
+
+    fn num_groups(&self) -> usize {
+        ShardedPagedReader::num_groups(self)
+    }
+
+    fn num_examples(&self) -> u64 {
+        ShardedPagedReader::num_examples(self)
+    }
+
+    fn streamed_group(&self, key: &[u8]) -> Result<Option<StreamedGroup>> {
+        ShardedPagedReader::streamed_group(self, key)
+    }
+}
+
+impl ClientSource for PagedReader {
+    fn describe(&self) -> String {
+        format!(
+            "paged store ({} groups, epoch {})",
+            PagedReader::num_groups(self),
+            self.epoch()
+        )
+    }
+
+    fn group_keys(&self) -> Vec<Vec<u8>> {
+        self.keys().to_vec()
+    }
+
+    fn num_groups(&self) -> usize {
+        PagedReader::num_groups(self)
+    }
+
+    fn num_examples(&self) -> u64 {
+        PagedReader::num_examples(self)
+    }
+
+    fn streamed_group(&self, key: &[u8]) -> Result<Option<StreamedGroup>> {
+        PagedReader::streamed_group(self, key)
+    }
+}
+
+impl ClientSource for GindexSource {
+    fn describe(&self) -> String {
+        format!("streaming-gindex source ({} groups)", GindexSource::num_groups(self))
+    }
+
+    fn group_keys(&self) -> Vec<Vec<u8>> {
+        self.keys().to_vec()
+    }
+
+    fn num_groups(&self) -> usize {
+        GindexSource::num_groups(self)
+    }
+
+    fn num_examples(&self) -> u64 {
+        GindexSource::num_examples(self)
+    }
+
+    fn streamed_group(&self, key: &[u8]) -> Result<Option<StreamedGroup>> {
+        GindexSource::streamed_group(self, key)
+    }
+}
+
+impl ClientSource for InMemoryDataset {
+    fn describe(&self) -> String {
+        format!("in-memory dataset ({} groups)", InMemoryDataset::num_groups(self))
+    }
+
+    fn group_keys(&self) -> Vec<Vec<u8>> {
+        let mut keys = self.keys().to_vec();
+        keys.sort();
+        keys
+    }
+
+    fn num_groups(&self) -> usize {
+        InMemoryDataset::num_groups(self)
+    }
+
+    fn num_examples(&self) -> u64 {
+        self.keys().iter().filter_map(|k| self.group(k)).map(|g| g.len() as u64).sum()
+    }
+
+    fn streamed_group(&self, key: &[u8]) -> Result<Option<StreamedGroup>> {
+        let Some(examples) = self.group(key) else {
+            return Ok(None);
+        };
+        // Re-frame the resident examples exactly like the paged
+        // backends do, so the payload is bit-identical across formats.
+        let mut w = RecordWriter::new(Vec::new());
+        for ex in examples {
+            w.write_record(&ex.encode())?;
+        }
+        Ok(Some(StreamedGroup::from_framed_bytes(
+            key.to_vec(),
+            examples.len() as u64,
+            0,
+            w.into_inner(),
+        )))
+    }
+}
+
+impl ClientSource for PartitionedDataset {
+    fn describe(&self) -> String {
+        format!(
+            "streaming materialization {}/{} ({} groups)",
+            self.dir().display(),
+            self.prefix(),
+            PartitionedDataset::num_groups(self)
+        )
+    }
+
+    fn group_keys(&self) -> Vec<Vec<u8>> {
+        let mut keys: Vec<Vec<u8>> =
+            self.index().entries.iter().map(|e| e.key.clone()).collect();
+        keys.sort();
+        keys
+    }
+
+    fn num_groups(&self) -> usize {
+        PartitionedDataset::num_groups(self)
+    }
+
+    fn num_examples(&self) -> u64 {
+        PartitionedDataset::num_examples(self)
+    }
+
+    fn streamed_group(&self, key: &[u8]) -> Result<Option<StreamedGroup>> {
+        self.gindex_source()?.streamed_group(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{DatasetSpec, SyntheticTextDataset};
+    use crate::pipeline::{
+        run_partition, run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
+    };
+
+    fn materialize(dir: &std::path::Path) -> SyntheticTextDataset {
+        let _ = std::fs::remove_dir_all(dir);
+        let mut spec = DatasetSpec::fedccnews_mini(12, 31);
+        spec.max_group_words = 500;
+        let ds = SyntheticTextDataset::new(spec);
+        let popts = PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() };
+        run_partition(&ds, &FeatureKey::new("domain"), dir, "t", &popts).unwrap();
+        run_partition_paged(
+            &ds,
+            &FeatureKey::new("domain"),
+            &dir.join("paged"),
+            "t",
+            &popts,
+            &PagedPartitionOptions { shards: 3, ..Default::default() },
+        )
+        .unwrap();
+        ds
+    }
+
+    /// Every local backend must expose the same canonical key list and
+    /// serve byte-identical group payloads.
+    #[test]
+    fn backends_agree_on_keys_and_payloads() {
+        let dir = std::env::temp_dir().join("grouper_client_source_test");
+        materialize(&dir);
+        let sources: Vec<Box<dyn ClientSource>> = vec![
+            Box::new(GindexSource::open(&dir, "t").unwrap()),
+            Box::new(PartitionedDataset::open(&dir, "t").unwrap()),
+            Box::new(InMemoryDataset::load(&dir, "t").unwrap()),
+            Box::new(ShardedPagedReader::open(&dir.join("paged"), "t", 16).unwrap()),
+        ];
+        let keys = sources[0].group_keys();
+        assert_eq!(keys.len(), 12);
+        assert!(keys.windows(2).all(|w| w[0] < w[1]), "keys must be sorted");
+        for s in &sources[1..] {
+            assert_eq!(s.group_keys(), keys, "{} disagrees on keys", s.describe());
+        }
+        for key in &keys {
+            let mut payloads = Vec::new();
+            for s in &sources {
+                let mut g = s.streamed_group(key).unwrap().unwrap();
+                assert_eq!(g.key, *key);
+                let ex: Vec<Vec<u8>> =
+                    g.examples().unwrap().iter().map(|e| e.encode()).collect();
+                payloads.push(ex);
+            }
+            for p in &payloads[1..] {
+                assert_eq!(p, &payloads[0], "backends disagree on group payload");
+            }
+        }
+        for s in &sources {
+            assert!(s.streamed_group(b"no-such-group").unwrap().is_none());
+            assert_eq!(s.num_groups(), 12);
+            assert_eq!(s.num_examples(), sources[0].num_examples());
+            assert!(!s.batched());
+        }
+    }
+
+    #[test]
+    fn fetch_groups_default_preserves_order_and_maps_misses() {
+        let dir = std::env::temp_dir().join("grouper_client_source_batch_test");
+        materialize(&dir);
+        let src = GindexSource::open(&dir, "t").unwrap();
+        let keys = ClientSource::group_keys(&src);
+        let ask =
+            vec![keys[3].clone(), b"missing".to_vec(), keys[0].clone(), keys[3].clone()];
+        let got = ClientSource::fetch_groups(&src, &ask).unwrap();
+        assert_eq!(got.len(), 4);
+        assert_eq!(got[0].as_ref().unwrap().key, keys[3]);
+        assert!(got[1].is_none());
+        assert_eq!(got[2].as_ref().unwrap().key, keys[0]);
+        assert_eq!(got[3].as_ref().unwrap().key, keys[3]);
+    }
+}

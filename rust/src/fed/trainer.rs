@@ -25,12 +25,14 @@ use super::algorithms::{fedavg_round, fedsgd_round};
 use super::client_data::{build_client_batches, ClientBatches};
 use super::schedules::Schedule;
 use super::server_opt::{Adam, ServerOptimizer};
+pub use super::source::ClientSource;
 use crate::config::{FedAlgorithm, FedConfig};
 use crate::formats::paged_sharded::ShardedPagedReader;
-use crate::formats::streaming::StreamingConfig;
+use crate::formats::streaming::{StreamedGroup, StreamingConfig};
 use crate::grouper::PartitionedDataset;
 use crate::runtime::{ModelBackend, Params};
 use crate::tokenizer::WordPiece;
+use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 use crate::util::timer::Timer;
 
@@ -122,51 +124,121 @@ pub fn fetch_cohort_sharded(
     spec: CohortFetchSpec,
     pool: Option<&ThreadPool>,
 ) -> Result<Vec<ClientBatches>> {
+    let source: Arc<dyn ClientSource> = Arc::clone(reader) as Arc<dyn ClientSource>;
+    fetch_cohort(&source, keys, tokenizer, spec, pool)
+}
+
+fn batches_from_group(
+    group: &mut StreamedGroup,
+    tokenizer: &WordPiece,
+    spec: CohortFetchSpec,
+) -> Result<ClientBatches> {
+    build_client_batches(
+        group,
+        tokenizer,
+        spec.tau,
+        spec.batch_size,
+        spec.tokens_per_example,
+        spec.pad_id,
+    )
+}
+
+/// Build one round's cohort of client batches from **any**
+/// [`ClientSource`] backend — the generalization of
+/// [`fetch_cohort_sharded`] the serving layer plugs into.
+///
+/// Two shapes, both order-preserving and bit-identical at any worker
+/// count:
+///
+/// * **per-key fan-out** (local backends): each key's fetch + tokenize +
+///   batch is one job on `pool`, so concurrent clients stripe across
+///   the backend's independent shards/caches;
+/// * **batched fetch** (backends with [`ClientSource::batched`], i.e.
+///   remote): one `fetch_groups` call pulls the whole cohort — a single
+///   round trip over the wire — then tokenize + batch fans out over
+///   `pool`.
+///
+/// # Errors
+/// A cohort key missing from the source, any backend read failure, or a
+/// crashed fetch job.
+pub fn fetch_cohort(
+    source: &Arc<dyn ClientSource>,
+    keys: &[Vec<u8>],
+    tokenizer: &Arc<WordPiece>,
+    spec: CohortFetchSpec,
+    pool: Option<&ThreadPool>,
+) -> Result<Vec<ClientBatches>> {
+    fn missing(key: &[u8]) -> anyhow::Error {
+        anyhow!("cohort group {:?} not served by the source", String::from_utf8_lossy(key))
+    }
     fn fetch_one(
-        reader: &ShardedPagedReader,
+        source: &dyn ClientSource,
         tokenizer: &WordPiece,
         spec: CohortFetchSpec,
         key: &[u8],
     ) -> Result<ClientBatches> {
-        let mut group = reader.streamed_group(key)?.with_context(|| {
-            format!("cohort group {:?} not in the paged set", String::from_utf8_lossy(key))
-        })?;
-        build_client_batches(
-            &mut group,
-            tokenizer,
-            spec.tau,
-            spec.batch_size,
-            spec.tokens_per_example,
-            spec.pad_id,
-        )
+        let mut group = source.streamed_group(key)?.ok_or_else(|| missing(key))?;
+        batches_from_group(&mut group, tokenizer, spec)
+    }
+    if source.batched() {
+        let groups = source.fetch_groups(keys)?.into_iter().zip(keys.iter());
+        let fetched: Vec<(Vec<u8>, StreamedGroup)> = groups
+            .map(|(g, key)| g.map(|g| (key.clone(), g)).ok_or_else(|| missing(key)))
+            .collect::<Result<_>>()?;
+        return match pool {
+            None => fetched
+                .into_iter()
+                .map(|(_, mut g)| batches_from_group(&mut g, tokenizer, spec))
+                .collect(),
+            Some(pool) => {
+                let tokenizer = Arc::clone(tokenizer);
+                pool.try_map(fetched, move |(_, mut g)| {
+                    batches_from_group(&mut g, &tokenizer, spec)
+                })
+                .map_err(|p| anyhow!("parallel cohort batching crashed: {p}"))?
+                .into_iter()
+                .collect::<Result<Vec<_>>>()
+                .context("building client batches")
+            }
+        };
     }
     match pool {
-        None => keys.iter().map(|k| fetch_one(reader, tokenizer, spec, k)).collect(),
+        None => keys.iter().map(|k| fetch_one(source.as_ref(), tokenizer, spec, k)).collect(),
         Some(pool) => {
-            let reader = Arc::clone(reader);
+            let source = Arc::clone(source);
             let tokenizer = Arc::clone(tokenizer);
             let fetched = pool
-                .try_map(keys.to_vec(), move |key| fetch_one(&reader, &tokenizer, spec, &key))
-                .map_err(|p| anyhow!("parallel sharded cohort fetch crashed: {p}"))?;
+                .try_map(keys.to_vec(), move |key| {
+                    fetch_one(source.as_ref(), &tokenizer, spec, &key)
+                })
+                .map_err(|p| anyhow!("parallel cohort fetch crashed: {p}"))?;
             fetched.into_iter().collect::<Result<Vec<_>>>().context("building client batches")
         }
     }
 }
 
 /// Build the validation clients used by personalization eval: the first
-/// `n` groups of `dataset`'s (sequential) stream, batched like training
-/// clients.
+/// `n` groups of `source`'s canonical (sorted) key order, batched like
+/// training clients. Any [`ClientSource`] backend works — a
+/// [`PartitionedDataset`] coerces directly, so eval clients can come
+/// from the same backend as training cohorts.
+///
+/// # Errors
+/// Any backend read failure while fetching or batching a group.
 pub fn build_eval_clients(
-    dataset: &PartitionedDataset,
+    source: &dyn ClientSource,
     tokenizer: &WordPiece,
     backend: &dyn ModelBackend,
     tau: usize,
     n: usize,
 ) -> Result<Vec<ClientBatches>> {
     let (b, t) = backend.batch_shape();
-    let mut out = Vec::with_capacity(n);
-    for g in dataset.build_group_stream(StreamingConfig::sequential())?.take(n) {
-        let mut g = g?;
+    let keys = source.group_keys();
+    let mut out = Vec::with_capacity(n.min(keys.len()));
+    for key in keys.iter().take(n) {
+        let mut g = source.streamed_group(key)?.with_context(|| {
+            format!("eval group {:?} vanished from the source", String::from_utf8_lossy(key))
+        })?;
         out.push(build_client_batches(&mut g, tokenizer, tau, b, t, backend.pad_id())?);
     }
     Ok(out)
@@ -243,6 +315,133 @@ pub fn train(
                     .context("building client batches")?
             }
         };
+        let data_secs = data_t.elapsed_secs();
+
+        // --- compute phase: client work + server update.
+        let train_t = Timer::start();
+        let lr = schedule.lr(round);
+        let out = match fed.algorithm {
+            FedAlgorithm::FedAvg => fedavg_round(backend, &params, &cohort, fed.client_lr)?,
+            FedAlgorithm::FedSgd => fedsgd_round(backend, &params, &cohort)?,
+        };
+        server_opt.step(&mut params, &out.pseudo_grad, lr);
+        let train_secs = train_t.elapsed_secs();
+
+        if cfg.log_every > 0 && (round % cfg.log_every == 0 || round + 1 == fed.rounds) {
+            println!(
+                "round {round:>5}  loss {:.4}  lr {lr:.2e}  data {:.3}s  train {:.3}s",
+                out.mean_client_loss, data_secs, train_secs
+            );
+        }
+        rounds.push(RoundMetrics {
+            round,
+            lr,
+            train_loss: out.mean_client_loss,
+            data_secs,
+            train_secs,
+        });
+    }
+    Ok(TrainOutput { params, rounds })
+}
+
+/// Infinite shuffled key stream consumed in cohort windows: each epoch
+/// is a full seeded permutation of the (sorted) key set, epochs are
+/// concatenated, and windows may span an epoch boundary — the
+/// `ClientSource` analogue of the streaming trainer's infinite
+/// buffered-shuffle cohort stream. Deterministic given (key set, seed),
+/// independent of which backend supplied the keys.
+struct KeyCohorts {
+    keys: Vec<Vec<u8>>,
+    seed: u64,
+    cohort: usize,
+    epoch: u64,
+    pos: usize,
+}
+
+impl KeyCohorts {
+    fn new(mut keys: Vec<Vec<u8>>, seed: u64, cohort: usize) -> KeyCohorts {
+        assert!(!keys.is_empty() && cohort > 0);
+        // Canonical order first: the stream is then a pure function of
+        // the key *set* and the seed.
+        keys.sort();
+        let mut kc = KeyCohorts { keys, seed, cohort, epoch: 0, pos: 0 };
+        kc.shuffle_epoch();
+        kc
+    }
+
+    fn shuffle_epoch(&mut self) {
+        // Same per-epoch seed derivation as the streaming shuffle.
+        let mut rng = Rng::new(self.seed ^ self.epoch.wrapping_mul(0x9E37));
+        rng.shuffle(&mut self.keys);
+        self.pos = 0;
+    }
+
+    fn next_cohort(&mut self) -> Vec<Vec<u8>> {
+        let mut out = Vec::with_capacity(self.cohort);
+        while out.len() < self.cohort {
+            if self.pos == self.keys.len() {
+                self.epoch += 1;
+                self.shuffle_epoch();
+            }
+            out.push(self.keys[self.pos].clone());
+            self.pos += 1;
+        }
+        out
+    }
+}
+
+/// Run federated training with cohorts sampled from **any**
+/// [`ClientSource`] backend — in-memory, streaming-gindex, paged,
+/// sharded-paged, or remote ([`crate::serve::RemoteClientSource`]).
+///
+/// Identical round mechanics to [`train`] (same schedules, optimizers,
+/// timing accounting); only the cohort sampler differs — an infinite
+/// shuffled stream over the source's canonical key list instead of the
+/// streaming format's interleave + buffered shuffle. Because the key
+/// order and group payloads are backend-independent, the same `(seed,
+/// key set)` trains bit-identically on every backend.
+///
+/// # Errors
+/// An empty source, a zero `fed.cohort_size`, any cohort fetch
+/// failure, or a backend round failure.
+pub fn train_with_source(
+    backend: &dyn ModelBackend,
+    source: &Arc<dyn ClientSource>,
+    tokenizer: &WordPiece,
+    cfg: &TrainerConfig,
+) -> Result<TrainOutput> {
+    let fed = &cfg.fed;
+    let (b, t) = backend.batch_shape();
+    let schedule = Schedule::new(fed.schedule, fed.server_lr, fed.rounds);
+    let mut server_opt = Adam::new();
+    let mut params = backend.init_params();
+
+    let keys = source.group_keys();
+    if keys.is_empty() {
+        return Err(anyhow!("client source {} holds no groups", source.describe()));
+    }
+    if fed.cohort_size == 0 {
+        return Err(anyhow!("fed.cohort_size must be at least 1 to sample cohorts"));
+    }
+    let mut sampler = KeyCohorts::new(keys, fed.seed, fed.cohort_size);
+    let spec = CohortFetchSpec {
+        tau: fed.tau,
+        batch_size: b,
+        tokens_per_example: t,
+        pad_id: backend.pad_id(),
+    };
+
+    let read_workers = cfg.read_workers.max(1);
+    let fetch_pool = (read_workers > 1).then(|| ThreadPool::new(read_workers));
+    let shared_tokenizer = Arc::new(tokenizer.clone());
+
+    let mut rounds = Vec::with_capacity(fed.rounds);
+    for round in 0..fed.rounds {
+        // --- data phase: sample the cohort keys and fetch client batches.
+        let data_t = Timer::start();
+        let cohort_keys = sampler.next_cohort();
+        let cohort =
+            fetch_cohort(source, &cohort_keys, &shared_tokenizer, spec, fetch_pool.as_ref())?;
         let data_secs = data_t.elapsed_secs();
 
         // --- compute phase: client work + server update.
@@ -447,6 +646,85 @@ mod tests {
             Some(&pool),
         );
         assert!(missing.is_err());
+    }
+
+    #[test]
+    fn train_with_source_is_backend_invariant_and_descends() {
+        use crate::formats::{GindexSource, InMemoryDataset, ShardedPagedReader};
+        use crate::pipeline::{run_partition_paged, PagedPartitionOptions};
+
+        let dir = std::env::temp_dir().join("grouper_trainer_source_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = DatasetSpec::fedccnews_mini(24, 77);
+        spec.max_group_words = 800;
+        let ds = SyntheticTextDataset::new(spec);
+        let popts = PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() };
+        run_partition(&ds, &FeatureKey::new("domain"), &dir, "train", &popts).unwrap();
+        run_partition_paged(
+            &ds,
+            &FeatureKey::new("domain"),
+            &dir.join("paged"),
+            "train",
+            &popts,
+            &PagedPartitionOptions { shards: 4, ..Default::default() },
+        )
+        .unwrap();
+        let mut vb = VocabBuilder::new();
+        for text in ds.stream_all_text() {
+            vb.feed(&text);
+        }
+        let wp = vb.build(64);
+        let mock = MockRuntime::standard();
+
+        let sources: Vec<Arc<dyn ClientSource>> = vec![
+            Arc::new(GindexSource::open(&dir, "train").unwrap()),
+            Arc::new(InMemoryDataset::load(&dir, "train").unwrap()),
+            Arc::new(ShardedPagedReader::open(&dir.join("paged"), "train", 16).unwrap()),
+        ];
+        let tc = TrainerConfig::new(fed(FedAlgorithm::FedAvg, 10));
+        let runs: Vec<TrainOutput> = sources
+            .iter()
+            .map(|s| train_with_source(&mock, s, &wp, &tc).unwrap())
+            .collect();
+        for out in &runs[1..] {
+            assert_eq!(out.params, runs[0].params, "backend must not change training");
+            for (a, b) in out.rounds.iter().zip(&runs[0].rounds) {
+                assert_eq!(a.train_loss, b.train_loss);
+            }
+        }
+        // Parallel fetch over any backend is bit-identical too.
+        let parallel = train_with_source(&mock, &sources[2], &wp, &tc.clone().with_read_workers(4))
+            .unwrap();
+        assert_eq!(parallel.params, runs[0].params);
+        // And training actually trains.
+        let longer = TrainerConfig::new(fed(FedAlgorithm::FedAvg, 40));
+        let out = train_with_source(&mock, &sources[0], &wp, &longer).unwrap();
+        assert!(out.final_loss() < out.rounds[0].train_loss * 0.85);
+    }
+
+    #[test]
+    fn zero_cohort_size_is_a_typed_error_not_a_panic() {
+        use crate::formats::GindexSource;
+
+        let dir = std::env::temp_dir().join("grouper_trainer_zero_cohort_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = DatasetSpec::fedccnews_mini(8, 77);
+        spec.max_group_words = 400;
+        let ds = SyntheticTextDataset::new(spec);
+        let popts = PartitionOptions { num_shards: 1, num_workers: 1, ..Default::default() };
+        run_partition(&ds, &FeatureKey::new("domain"), &dir, "train", &popts).unwrap();
+        let mut vb = VocabBuilder::new();
+        for text in ds.stream_all_text() {
+            vb.feed(&text);
+        }
+        let wp = vb.build(64);
+        let mock = MockRuntime::standard();
+        let source: Arc<dyn ClientSource> = Arc::new(GindexSource::open(&dir, "train").unwrap());
+        let mut f = fed(FedAlgorithm::FedAvg, 2);
+        f.cohort_size = 0;
+        let err = train_with_source(&mock, &source, &wp, &TrainerConfig::new(f))
+            .expect_err("a config with cohort_size = 0 must be rejected");
+        assert!(err.to_string().contains("cohort_size"), "unexpected error: {err:#}");
     }
 
     #[test]

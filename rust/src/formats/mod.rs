@@ -55,4 +55,4 @@ pub use hierarchical::{HierarchicalReader, HierarchicalStore};
 pub use in_memory::InMemoryDataset;
 pub use paged::{CompactReport, PagedReader, PagedStat, PagedStore};
 pub use paged_sharded::{PagedSetManifest, PagedShardSet, ShardedPagedReader};
-pub use streaming::{StreamedGroup, StreamingConfig, StreamingDataset};
+pub use streaming::{GindexSource, StreamedGroup, StreamingConfig, StreamingDataset};

@@ -83,6 +83,7 @@ use crate::store::btree::BTree;
 use crate::store::cache::CacheStats;
 use crate::store::page::{Page, PageId, PAGE_SIZE};
 use crate::store::pager::{PageRead, Pager};
+use crate::store::pins::{self, DiskPin};
 use crate::store::shared::{self, EpochPin, ReadSnapshot, SharedPager};
 use crate::store::vfs::{OpenMode, StdVfs, Vfs, VfsCursor, VfsFile};
 use crate::store::wal::{self, WalWriter};
@@ -395,6 +396,13 @@ pub struct PagedStore {
     /// canonical spelling ([`Vfs::registry_key`]). Cached as the ready
     /// tuple so the per-append gate refresh allocates nothing.
     pin_key: (u64, PathBuf),
+    /// Cached minimum epoch over the on-disk pin files of readers in
+    /// **other** processes ([`crate::store::pins`]); `u64::MAX` when
+    /// none. Rescanned at open and right after every checkpoint's
+    /// header swap — the pin-then-confirm protocol makes that enough
+    /// (see the pins module docs) — so the per-append gate refresh
+    /// never touches the filesystem.
+    disk_gate: u64,
 }
 
 impl PagedStore {
@@ -442,7 +450,7 @@ impl PagedStore {
         let wal = WalWriter::open_with(vfs, &pwal_path(dir, prefix), 0)?;
         let data_file = vfs.open(&pdata_path(dir, prefix), OpenMode::CreateTruncate)?;
         let data = RecordWriter::new(BufWriter::new(VfsCursor::new(data_file.clone())));
-        Ok(PagedStore {
+        let mut store = PagedStore {
             pager,
             tree: BTree::new_empty(1),
             wal,
@@ -454,7 +462,10 @@ impl PagedStore {
             epoch: 0,
             poisoned: false,
             pin_key: (vfs.instance_id(), vfs.registry_key(&index_path)),
-        })
+            disk_gate: u64::MAX,
+        };
+        store.rescan_disk_pins();
+        Ok(store)
     }
 
     /// Open an existing store on the real filesystem (equivalent to
@@ -548,7 +559,9 @@ impl PagedStore {
             epoch: header.epoch,
             poisoned: false,
             pin_key: (vfs.instance_id(), vfs.registry_key(&index_path)),
+            disk_gate: u64::MAX,
         };
+        store.rescan_disk_pins();
         store.refresh_reuse_gate();
         // Replay: re-apply each logged append to data + tree. Idempotent
         // across repeated crashes: nothing becomes durable until the next
@@ -600,7 +613,8 @@ impl PagedStore {
     /// so a reader pinned since the last call is honored before any of
     /// its reachable pages could be handed out (pages it can reach are
     /// only *published* free by a later checkpoint, which refreshes
-    /// again).
+    /// again). Readers in other processes participate through the
+    /// cached on-disk minimum ([`PagedStore::rescan_disk_pins`]).
     fn refresh_reuse_gate(&mut self) {
         if self.pager.reusable_page_count() == 0 {
             // Nothing is reusable, so no decision depends on the gate:
@@ -610,8 +624,35 @@ impl PagedStore {
             // (every reuse/reclaim site refreshes first).
             return;
         }
-        let gate = shared::min_pinned_epoch_for(&self.pin_key).unwrap_or(u64::MAX);
+        let gate = shared::min_pinned_epoch_for(&self.pin_key)
+            .unwrap_or(u64::MAX)
+            .min(self.disk_gate);
         self.pager.set_reuse_gate(gate);
+    }
+
+    /// Rescan the on-disk pin files ([`crate::store::pins`]) of readers
+    /// in other processes and cache their minimum epoch for
+    /// [`PagedStore::refresh_reuse_gate`]. Called at open and right
+    /// after each checkpoint's header swap: a cross-process reader's
+    /// pin-then-confirm only succeeds when its pin file landed before
+    /// the swap — hence before this rescan — so every pin that protects
+    /// the frees the swap just published is seen before any of them can
+    /// be reused or truncated. Pins created later are at the new epoch
+    /// or beyond and constrain only frees that later checkpoints
+    /// publish, each behind its own rescan.
+    fn rescan_disk_pins(&mut self) {
+        if self.pin_key.0 != 0 {
+            // Not the real filesystem: no other process can reach this
+            // store, and the in-process registry covers everyone else.
+            return;
+        }
+        self.disk_gate = match pins::scan_min(&self.pin_key.1) {
+            Ok(Some(epoch)) => epoch,
+            Ok(None) => u64::MAX,
+            // An unreadable pin directory must block reuse, not allow
+            // it: fail toward protecting unknown readers.
+            Err(_) => 0,
+        };
     }
 
     /// Append one example to a group: logged to the WAL, then applied.
@@ -710,6 +751,12 @@ impl PagedStore {
             self.poisoned = true;
             return Err(e);
         }
+        // The swap just made this epoch's frees reusable: pick up any
+        // cross-process pins registered before it (their pin files are
+        // on disk by now — see rescan_disk_pins) before a later
+        // mutation can hand those pages out.
+        self.rescan_disk_pins();
+        self.refresh_reuse_gate();
         Ok(())
     }
 
@@ -1004,6 +1051,12 @@ pub struct PagedReader {
     /// reader's lifetime: while held, the writer's free-list will
     /// neither reuse nor truncate any page this snapshot can reach.
     _pin: EpochPin,
+    /// The cross-process half of the same pin: an on-disk pin file
+    /// ([`crate::store::pins`]) a writer in **another** process folds
+    /// into its reuse gate. `None` off the real filesystem (no other
+    /// process can reach the store) or on read-only media (no writer
+    /// can exist there).
+    _disk_pin: Option<DiskPin>,
     /// Header page accounting captured at open (for [`PagedReader::stat`]).
     free_pages: u32,
     data_len: u64,
@@ -1034,16 +1087,63 @@ impl PagedReader {
         prefix: &str,
         cache_pages: usize,
     ) -> Result<PagedReader> {
+        PagedReader::open_inner(vfs, dir, prefix, cache_pages, true)
+    }
+
+    /// Open the last **checkpointed** snapshot at `dir/<prefix>` on the
+    /// real filesystem (see [`PagedReader::open_snapshot_with`]).
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedReader::open_snapshot_with`].
+    pub fn open_snapshot(dir: &Path, prefix: &str, cache_pages: usize) -> Result<PagedReader> {
+        PagedReader::open_snapshot_with(&StdVfs, dir, prefix, cache_pages)
+    }
+
+    /// Open the last **checkpointed** snapshot on `vfs`, never touching
+    /// the WAL: committed-but-not-yet-checkpointed appends stay
+    /// invisible instead of being replayed, and no recovery runs. This
+    /// is the only open that never writes a store byte (its sole write
+    /// is the sidecar pin file below, which no store read ever
+    /// depends on), so — unlike the recovering
+    /// [`PagedReader::open_with`] — it is safe to run concurrently with
+    /// a live [`PagedStore`] writer mid-append, even one in another
+    /// process. The serving layer ([`crate::serve`]) opens every
+    /// per-connection snapshot this way; combined with the epoch pins
+    /// it takes below — in-process registry plus on-disk pin file
+    /// ([`crate::store::pins`]) — that is the whole single-live-writer
+    /// + N-readers contract.
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedReader::open`], minus WAL probing.
+    pub fn open_snapshot_with(
+        vfs: &dyn Vfs,
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+    ) -> Result<PagedReader> {
+        PagedReader::open_inner(vfs, dir, prefix, cache_pages, false)
+    }
+
+    fn open_inner(
+        vfs: &dyn Vfs,
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+        recover_hot_wal: bool,
+    ) -> Result<PagedReader> {
         let cache_pages = cache_pages.max(2);
-        let wal_path = pwal_path(dir, prefix);
-        // An I/O error probing the journal must fail the open, not be
-        // mistaken for "no journal" (which would silently serve stale
-        // pre-WAL data).
-        let hot = wal::has_valid_records_with(vfs, &wal_path).context("probing paged store WAL")?;
-        if hot {
-            let mut store = PagedStore::open_with(vfs, dir, prefix, cache_pages)
-                .context("recovering hot paged store")?;
-            store.checkpoint()?;
+        if recover_hot_wal {
+            let wal_path = pwal_path(dir, prefix);
+            // An I/O error probing the journal must fail the open, not be
+            // mistaken for "no journal" (which would silently serve stale
+            // pre-WAL data).
+            let hot =
+                wal::has_valid_records_with(vfs, &wal_path).context("probing paged store WAL")?;
+            if hot {
+                let mut store = PagedStore::open_with(vfs, dir, prefix, cache_pages)
+                    .context("recovering hot paged store")?;
+                store.checkpoint()?;
+            }
         }
         let index_path = pstore_path(dir, prefix);
         let pager = SharedPager::open_with(vfs, &index_path, cache_pages)?;
@@ -1066,10 +1166,22 @@ impl PagedReader {
         // gap. Re-reading the header after pinning closes it: if the
         // epoch is unchanged, every later checkpoint (the only thing
         // that publishes frees) sees our pin when it consults the gate.
+        // On the real filesystem the pin is registered twice — in the
+        // process registry for a same-process writer, and as an on-disk
+        // pin file for a writer in another process, whose post-swap
+        // pin rescan plays the role the same confirm protects against
+        // (see crate::store::pins).
         let vfs_id = vfs.instance_id();
         let registry_path = vfs.registry_key(&index_path);
+        let durable = vfs_id == 0;
         let mut header = read_header_checked()?;
         let mut pin = shared::pin_epoch(vfs_id, &registry_path, header.epoch);
+        let mut disk_pin = if durable {
+            pins::create(&registry_path, header.epoch)
+                .context("registering on-disk snapshot pin")?
+        } else {
+            None
+        };
         let mut confirmed = false;
         for _ in 0..50 {
             let confirm = read_header_checked()?;
@@ -1079,6 +1191,12 @@ impl PagedReader {
             }
             header = confirm;
             pin = shared::pin_epoch(vfs_id, &registry_path, header.epoch);
+            if durable {
+                // Create the new epoch's pin before the assignment
+                // drops the old one, so some pin always covers us.
+                disk_pin = pins::create(&registry_path, header.epoch)
+                    .context("registering on-disk snapshot pin")?;
+            }
         }
         if !confirmed {
             // Never proceed on an unconfirmed pin: one more checkpoint
@@ -1140,6 +1258,7 @@ impl PagedReader {
             keys,
             num_examples: header.num_rows,
             _pin: pin,
+            _disk_pin: disk_pin,
             free_pages: header.free_pages,
             data_len: header.data_len,
         })
@@ -1241,6 +1360,48 @@ impl PagedReader {
             self.visit_group(key, |ex| f(key, ex))?;
         }
         Ok(())
+    }
+
+    /// One group as a prefetched
+    /// [`StreamedGroup`](crate::formats::streaming::StreamedGroup) — the
+    /// adapter that lets the federated trainer's client-data pipeline
+    /// consume a paged store like any streamed cohort. Pure byte
+    /// movement: the raw record bytes are re-framed without ever
+    /// decoding an example (see [`PagedReader::visit_group_raw`]).
+    /// `None` for an unknown group. (The paged index does not track word
+    /// counts; the group's `words` field is 0.)
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedReader::visit_group`].
+    pub fn streamed_group(
+        &self,
+        group: &[u8],
+    ) -> Result<Option<crate::formats::streaming::StreamedGroup>> {
+        let mut w = RecordWriter::new(Vec::new());
+        let mut frame_err: Option<io::Error> = None;
+        let mut n = 0u64;
+        let found = self.visit_group_raw(group, |bytes| match w.write_record(bytes) {
+            Ok(()) => {
+                n += 1;
+                true
+            }
+            Err(e) => {
+                frame_err = Some(e);
+                false
+            }
+        })?;
+        if let Some(e) = frame_err {
+            return Err(e).context("re-framing group examples");
+        }
+        if !found {
+            return Ok(None);
+        }
+        Ok(Some(crate::formats::streaming::StreamedGroup::from_framed_bytes(
+            group.to_vec(),
+            n,
+            0,
+            w.into_inner(),
+        )))
     }
 }
 
@@ -1718,6 +1879,41 @@ mod tests {
         let report = s.compact().unwrap();
         assert_eq!(report.passes, 0, "a store with no free pages has nothing to move");
         assert_eq!(report.pages_before, report.pages_after);
+    }
+
+    /// A reader in ANOTHER process never touches this process's pin
+    /// registry — only its on-disk pin file protects it. The writer must
+    /// fold that file into its reuse gate (at the checkpoint-time
+    /// rescan) and refuse to reclaim anything the pin covers, then
+    /// reclaim normally once the file is gone.
+    #[test]
+    fn a_foreign_process_disk_pin_blocks_compaction_until_removed() {
+        let dir = tmp("foreign-pin");
+        let mut s = PagedStore::create_with(&StdVfs, &dir, "x", 16).unwrap();
+        // Simulate the foreign reader by writing its pin file directly,
+        // bypassing the in-process registry entirely. It pins the empty
+        // store's epoch, so every page freed below postdates it. (The
+        // recorded pid is this test's own, so the liveness scan counts
+        // the pin as alive.)
+        let foreign = crate::store::pins::create(&s.pin_key.1, s.epoch())
+            .unwrap()
+            .expect("a real filesystem supports pin files");
+        churn(&mut s, 8, 40, "a");
+        assert!(s.stat().free_pages > 0, "churn must strand garbage");
+        let blocked = s.compact().unwrap();
+        assert_eq!(
+            blocked.passes, 0,
+            "every free page postdates the foreign pin; compaction must not touch any ({blocked:?})"
+        );
+        assert_eq!(blocked.pages_reclaimed, 0);
+        // Reader exited: its pin file is removed, and the next
+        // compaction's leading checkpoint rescans the pin directory.
+        drop(foreign);
+        let unblocked = s.compact().unwrap();
+        assert!(
+            unblocked.pages_reclaimed > 0,
+            "with the pin gone compaction must reclaim the garbage ({unblocked:?})"
+        );
     }
 
     #[test]

@@ -46,7 +46,6 @@
 
 #![deny(missing_docs)]
 
-use std::io;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -55,7 +54,6 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::formats::paged::{CompactReport, PagedReader, PagedStat, PagedStore};
 use crate::formats::streaming::StreamedGroup;
 use crate::records::crc32c::crc32c;
-use crate::records::tfrecord::RecordWriter;
 use crate::records::Example;
 use crate::store::cache::CacheStats;
 use crate::store::vfs::{OpenMode, StdVfs, Vfs};
@@ -191,17 +189,23 @@ pub fn restore_manifest_if_intact(
 /// Truncate the named shard stores to empty stubs, reclaiming their
 /// space (the closest thing to deletion the VFS offers). Call only with
 /// prefixes from [`stale_shard_stores`], after the superseding set is
-/// durable. A store whose `.pstore` still has live snapshot pins in the
-/// process-wide registry (an open reader of the *previous* layout) is
-/// left untouched — truncating it would yank pages out from under a
-/// pinned snapshot — and returned so the caller can retry once the
-/// pins drop. Best-effort otherwise: a store that cannot be opened is
-/// skipped.
+/// durable. A store whose `.pstore` still has live snapshot pins — in
+/// the process-wide registry or as on-disk pin files from readers in
+/// other processes ([`crate::store::pins`]) — is left untouched:
+/// truncating it would yank pages out from under a pinned snapshot. It
+/// is returned so the caller can retry once the pins drop. Best-effort
+/// otherwise: a store that cannot be opened is skipped.
 pub fn truncate_shard_stores(vfs: &dyn Vfs, dir: &Path, prefixes: &[String]) -> Vec<String> {
     let mut still_pinned = Vec::new();
     for stale in prefixes {
         let pstore = dir.join(format!("{stale}.pstore"));
-        if crate::store::shared::pin_count(vfs.instance_id(), &vfs.registry_key(&pstore)) > 0 {
+        let key = vfs.registry_key(&pstore);
+        let pinned_in_process = crate::store::shared::pin_count(vfs.instance_id(), &key) > 0;
+        // An unreadable pin directory counts as pinned: fail toward
+        // protecting readers we cannot see.
+        let pinned_on_disk = vfs.instance_id() == 0
+            && !matches!(crate::store::pins::scan_min(&key), Ok(None));
+        if pinned_in_process || pinned_on_disk {
             still_pinned.push(stale.clone());
             continue;
         }
@@ -725,13 +729,58 @@ impl ShardedPagedReader {
         prefix: &str,
         cache_pages: usize,
     ) -> Result<ShardedPagedReader> {
+        ShardedPagedReader::open_inner(vfs, dir, prefix, cache_pages, true)
+    }
+
+    /// Open the last **checkpointed** snapshot of every shard at
+    /// `dir/<prefix>.pset` on the real filesystem (see
+    /// [`ShardedPagedReader::open_snapshot_with`]).
+    ///
+    /// # Errors
+    /// Same conditions as [`ShardedPagedReader::open_snapshot_with`].
+    pub fn open_snapshot(
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+    ) -> Result<ShardedPagedReader> {
+        ShardedPagedReader::open_snapshot_with(&StdVfs, dir, prefix, cache_pages)
+    }
+
+    /// Open the set with every shard opened via
+    /// [`PagedReader::open_snapshot_with`]: no WAL is probed or
+    /// recovered, so the open performs zero writes and is safe to run
+    /// concurrently with a live [`PagedShardSet`] writer mid-append.
+    /// Committed-but-not-yet-checkpointed appends are invisible. This is
+    /// how the serving layer ([`crate::serve`]) pins a per-connection
+    /// snapshot of a set its primary is still growing.
+    ///
+    /// # Errors
+    /// A missing/corrupt manifest, or any shard open failure.
+    pub fn open_snapshot_with(
+        vfs: &dyn Vfs,
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+    ) -> Result<ShardedPagedReader> {
+        ShardedPagedReader::open_inner(vfs, dir, prefix, cache_pages, false)
+    }
+
+    fn open_inner(
+        vfs: &dyn Vfs,
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+        recover_hot_wal: bool,
+    ) -> Result<ShardedPagedReader> {
         let manifest = PagedSetManifest::read_with(vfs, dir, prefix)?;
         let mut shards = Vec::with_capacity(manifest.shards());
         for sp in &manifest.shard_prefixes {
-            shards.push(
+            let shard = if recover_hot_wal {
                 PagedReader::open_with(vfs, dir, sp, cache_pages)
-                    .with_context(|| format!("opening shard store {sp}"))?,
-            );
+            } else {
+                PagedReader::open_snapshot_with(vfs, dir, sp, cache_pages)
+            };
+            shards.push(shard.with_context(|| format!("opening shard store {sp}"))?);
         }
         // Shards hold disjoint key sets; a plain merge-sort of the
         // per-shard (already sorted) lists gives the global order.
@@ -822,27 +871,7 @@ impl ShardedPagedReader {
     /// # Errors
     /// Same conditions as [`ShardedPagedReader::visit_group`].
     pub fn streamed_group(&self, group: &[u8]) -> Result<Option<StreamedGroup>> {
-        let mut w = RecordWriter::new(Vec::new());
-        let mut frame_err: Option<io::Error> = None;
-        let mut n = 0u64;
-        let shard = &self.shards[self.shard_for(group)];
-        let found = shard.visit_group_raw(group, |bytes| match w.write_record(bytes) {
-            Ok(()) => {
-                n += 1;
-                true
-            }
-            Err(e) => {
-                frame_err = Some(e);
-                false
-            }
-        })?;
-        if let Some(e) = frame_err {
-            return Err(e).context("re-framing group examples");
-        }
-        if !found {
-            return Ok(None);
-        }
-        Ok(Some(StreamedGroup::from_framed_bytes(group.to_vec(), n, 0, w.into_inner())))
+        self.shards[self.shard_for(group)].streamed_group(group)
     }
 
     /// Per-shard page accounting (header numbers of each pinned

@@ -20,11 +20,11 @@
 //! than `prefetch_cap_bytes` bypass prefetch and stream straight from the
 //! file so a pathological group never has to fit in memory.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::io::BufReader;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
@@ -101,6 +101,18 @@ impl StreamedGroup {
         framed: Vec<u8>,
     ) -> StreamedGroup {
         StreamedGroup { key, num_examples, words, source: GroupSource::Buffer(framed) }
+    }
+
+    /// The group's raw framed bytes, when the group was prefetched into
+    /// one buffer ([`StreamedGroup::from_framed_bytes`] — every paged,
+    /// gindex and remote read). `None` for the large-extent
+    /// positioned-reader form. The store server ([`crate::serve`]) uses
+    /// this to put a group on the wire without decoding it.
+    pub fn framed_bytes(&self) -> Option<&[u8]> {
+        match &self.source {
+            GroupSource::Buffer(b) => Some(b),
+            GroupSource::File { .. } => None,
+        }
     }
 
     /// Visit each example in order; stop early by returning `false`.
@@ -334,6 +346,106 @@ fn prefetch_loop(
                 epoch += 1;
             }
         }
+    }
+}
+
+/// Random access over a streaming materialization: the `.gindex`
+/// sidecar already maps every group key to a (shard, offset, bytes)
+/// extent, so one positioned read serves any group without walking the
+/// stream. This is the trainer-facing "streaming-gindex" backend of the
+/// `ClientSource` abstraction (`crate::fed::source`): same files as
+/// [`StreamingDataset`], arbitrary-order group fetches instead of
+/// stream-order iteration.
+///
+/// Thread-safe: shard file handles are opened lazily (under a mutex)
+/// and all reads are positional, so concurrent fetches never contend on
+/// a seek cursor. Whole extents are buffered per fetch — there is no
+/// large-group file fallback here, matching the paged backends'
+/// re-framed-buffer behavior.
+pub struct GindexSource {
+    vfs: Arc<dyn Vfs>,
+    shards: Vec<PathBuf>,
+    /// Lazily opened positional handles, one slot per shard.
+    files: Mutex<Vec<Option<Arc<dyn VfsFile>>>>,
+    by_key: HashMap<Vec<u8>, GroupIndexEntry>,
+    /// Group keys in sorted (canonical) order.
+    keys: Vec<Vec<u8>>,
+    total_examples: u64,
+}
+
+impl GindexSource {
+    /// Open `dir/<prefix>.gindex` (+ its TFRecord shards) on the real
+    /// filesystem.
+    ///
+    /// # Errors
+    /// A missing/corrupt group index, or a shard-discovery failure.
+    pub fn open(dir: &Path, prefix: &str) -> Result<GindexSource> {
+        GindexSource::open_with(Arc::new(StdVfs), dir, prefix)
+    }
+
+    /// [`GindexSource::open`] with every file served by an explicit
+    /// [`Vfs`]. Shard files themselves are opened lazily on first
+    /// fetch, so open cost is one index read + one directory listing.
+    ///
+    /// # Errors
+    /// Same conditions as [`GindexSource::open`].
+    pub fn open_with(vfs: Arc<dyn Vfs>, dir: &Path, prefix: &str) -> Result<GindexSource> {
+        let index = GroupIndex::read_with(vfs.as_ref(), &dir.join(format!("{prefix}.gindex")))
+            .with_context(|| format!("opening group index for {prefix}"))?;
+        let shards = discover_shards_with(vfs.as_ref(), dir, prefix)?;
+        let total_examples = index.total_examples();
+        let mut keys: Vec<Vec<u8>> = index.entries.iter().map(|e| e.key.clone()).collect();
+        keys.sort();
+        let by_key: HashMap<Vec<u8>, GroupIndexEntry> =
+            index.entries.into_iter().map(|e| (e.key.clone(), e)).collect();
+        let files = Mutex::new(vec![None; shards.len()]);
+        Ok(GindexSource { vfs, shards, files, by_key, keys, total_examples })
+    }
+
+    /// Distinct groups in the index.
+    pub fn num_groups(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Total examples across all groups.
+    pub fn num_examples(&self) -> u64 {
+        self.total_examples
+    }
+
+    /// Group keys in sorted order.
+    pub fn keys(&self) -> &[Vec<u8>] {
+        &self.keys
+    }
+
+    /// One group as a prefetched [`StreamedGroup`]: a single positioned
+    /// read of the extent's framed bytes. `None` for an unknown group.
+    ///
+    /// # Errors
+    /// A shard open/read failure, or an index entry whose shard number
+    /// is out of range (corrupt sidecar).
+    pub fn streamed_group(&self, key: &[u8]) -> Result<Option<StreamedGroup>> {
+        let Some(e) = self.by_key.get(key) else {
+            return Ok(None);
+        };
+        let shard = e.shard as usize;
+        if shard >= self.shards.len() {
+            anyhow::bail!("group index names shard {shard} but only {} exist", self.shards.len());
+        }
+        let file = {
+            let mut files = self.files.lock().unwrap();
+            match &files[shard] {
+                Some(f) => Arc::clone(f),
+                None => {
+                    let f = self.vfs.open(&self.shards[shard], OpenMode::Read)?;
+                    files[shard] = Some(Arc::clone(&f));
+                    f
+                }
+            }
+        };
+        let mut raw = vec![0u8; e.bytes as usize];
+        file.read_exact_at(&mut raw, e.offset)
+            .map_err(|err| anyhow::anyhow!("shard truncated mid-extent: {err}"))?;
+        Ok(Some(StreamedGroup::from_framed_bytes(e.key.clone(), e.num_examples, e.words, raw)))
     }
 }
 

@@ -8,12 +8,16 @@ pub mod stats;
 pub use stats::{dataset_statistics, DatasetStatistics};
 
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::corpus::BaseDataset;
-use crate::formats::streaming::{GroupStream, StreamedGroup, StreamingConfig, StreamingDataset};
+use crate::formats::streaming::{
+    GindexSource, GroupStream, StreamedGroup, StreamingConfig, StreamingDataset,
+};
 use crate::pipeline::{run_partition, GroupIndex, PartitionOptions, PartitionReport, Partitioner};
+use crate::store::vfs::StdVfs;
 
 /// Listing-1 analogue: partition `dataset` by `get_key_fn` into
 /// `dir/<prefix>-*.tfrecord` (+ group index), returning the run report.
@@ -32,12 +36,32 @@ pub struct PartitionedDataset {
     dir: PathBuf,
     prefix: String,
     index: GroupIndex,
+    /// Lazily opened random-access view over the same files, backing
+    /// the `ClientSource` impl (`crate::fed::source`).
+    source: Mutex<Option<Arc<GindexSource>>>,
 }
 
 impl PartitionedDataset {
     pub fn open(dir: &Path, prefix: &str) -> Result<Self> {
         let index = GroupIndex::read(dir.join(format!("{prefix}.gindex")))?;
-        Ok(PartitionedDataset { dir: dir.to_path_buf(), prefix: prefix.to_string(), index })
+        Ok(PartitionedDataset {
+            dir: dir.to_path_buf(),
+            prefix: prefix.to_string(),
+            index,
+            source: Mutex::new(None),
+        })
+    }
+
+    /// The random-access [`GindexSource`] view over this
+    /// materialization, opened on first use and shared afterwards.
+    pub fn gindex_source(&self) -> Result<Arc<GindexSource>> {
+        let mut slot = self.source.lock().unwrap();
+        if let Some(s) = &*slot {
+            return Ok(Arc::clone(s));
+        }
+        let s = Arc::new(GindexSource::open_with(Arc::new(StdVfs), &self.dir, &self.prefix)?);
+        *slot = Some(Arc::clone(&s));
+        Ok(s)
     }
 
     pub fn num_groups(&self) -> usize {

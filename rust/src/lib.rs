@@ -7,7 +7,9 @@
 //! * **L3 (this crate)** — the paper's system contribution: the Dataset
 //!   Grouper partitioning pipeline ([`pipeline`]), the three
 //!   group-structured dataset formats ([`formats`]), the federated
-//!   training coordinator ([`fed`]), plus every substrate they depend on
+//!   training coordinator ([`fed`]), the store server that lets N trainer
+//!   processes share one materialization ([`serve`]), plus every
+//!   substrate they depend on
 //!   (TFRecord I/O, synthetic corpora, a WordPiece tokenizer, metrics).
 //! * **L2/L1 (python/, build-time only)** — a decoder-only transformer in
 //!   JAX whose attention and softmax-CE hot-spots are Pallas kernels,
@@ -29,6 +31,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod records;
 pub mod runtime;
+pub mod serve;
 pub mod store;
 pub mod tokenizer;
 pub mod util;

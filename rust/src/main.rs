@@ -9,8 +9,12 @@
 //! grouper stats     --dir work/fedc4 --prefix data [--format streaming|paged] [--cache-pages N]
 //! grouper compact   --dir work/fedc4 --prefix data [--cache-pages N]
 //! grouper vocab     --dataset fedc4-mini --groups 500 --size 1024 --out work/vocab.txt
+//! grouper serve     --dir work/fedc4 --prefix data [--addr 127.0.0.1:4700]
+//!                   [--cache-pages N] [--max-connections N]
 //! grouper train     --config configs/fig4_fedavg.toml [--read-workers N]
+//!                   [--source DIR|remote://host:port [--source-prefix P]]
 //! grouper personalize --config configs/fig4_fedavg.toml [--read-workers N]
+//!                   [--source ...] [--eval-source DIR|remote://host:port]
 //! grouper info      [--artifacts artifacts] [--dir DIR --prefix P]
 //! ```
 //!
@@ -27,21 +31,30 @@
 //! automatically when more than a quarter of the freshly built store is
 //! garbage.
 //!
+//! `serve` exposes a paged store (or sharded set) over TCP so N trainer
+//! processes can sample cohorts from one shared materialization: each
+//! connection gets its own pinned checkpoint snapshot (bit-stable reads
+//! while the single live writer keeps appending), and `train --source
+//! remote://host:port` consumes it like any local backend. `--source`
+//! also accepts a directory, auto-detected as a `.pset` sharded set, a
+//! `.pstore` single store, or a `.gindex` streaming materialization.
+//!
 //! Experiment regeneration lives in `cargo bench --bench <table|figure>`;
 //! the CLI is the interactive/production surface over the same library.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use grouper::config::ExperimentConfig;
 use grouper::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
 use grouper::fed::trainer::build_eval_clients;
-use grouper::fed::{personalization_eval, train, TrainerConfig};
+use grouper::fed::{personalization_eval, train, train_with_source, ClientSource, TrainerConfig};
 use grouper::formats::{
-    HierarchicalStore, PagedReader, PagedSetManifest, PagedShardSet, PagedStore,
+    GindexSource, HierarchicalStore, PagedReader, PagedSetManifest, PagedShardSet, PagedStore,
     ShardedPagedReader,
 };
 use grouper::grouper::{dataset_statistics, partition_dataset, PartitionedDataset};
@@ -50,6 +63,7 @@ use grouper::pipeline::{
     PartitionOptions, Partitioner, RandomPartitioner,
 };
 use grouper::runtime::{ModelBackend, ModelRuntime};
+use grouper::serve::{RemoteClientSource, ServeOptions, StoreServer};
 use grouper::tokenizer::{VocabBuilder, WordPiece};
 use grouper::util::humanize;
 use grouper::util::table::Table;
@@ -75,6 +89,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "partition" => cmd_partition(&flags),
         "stats" => cmd_stats(&flags),
         "compact" => cmd_compact(&flags),
+        "serve" => cmd_serve(&flags),
         "vocab" => cmd_vocab(&flags),
         "train" => cmd_train(&flags, false),
         "personalize" => cmd_train(&flags, true),
@@ -108,12 +123,25 @@ fn print_usage() {
          \u{20}               tail (partition --auto-compact-threshold F does\n\
          \u{20}               this automatically when free/total exceeds F; a\n\
          \u{20}               sharded set compacts its shards in parallel)\n\
+         \u{20}  serve        serve a paged store/set over TCP so N trainer\n\
+         \u{20}               processes share one materialization; every\n\
+         \u{20}               connection reads from its own pinned checkpoint\n\
+         \u{20}               snapshot while one live writer keeps appending\n\
+         \u{20}               (--dir/--prefix store, --addr host:port,\n\
+         \u{20}               --max-connections N rejects extra trainers with\n\
+         \u{20}               a typed error instead of queueing them)\n\
          \u{20}  vocab        train a WordPiece vocabulary from a corpus\n\
          \u{20}  train        federated training (FedAvg/FedSGD) per a TOML config;\n\
          \u{20}               --read-workers N fetches each round's cohort of\n\
          \u{20}               client datasets in parallel (default 1 = serial;\n\
-         \u{20}               results are identical, the data phase is faster)\n\
-         \u{20}  personalize  train + pre/post-personalization eval (Table 5)\n\
+         \u{20}               results are identical, the data phase is faster);\n\
+         \u{20}               --source DIR|remote://host:port trains from a\n\
+         \u{20}               shared store (.pset/.pstore/.gindex auto-detected,\n\
+         \u{20}               --source-prefix P, default train) instead of\n\
+         \u{20}               materializing a private streaming split\n\
+         \u{20}  personalize  train + pre/post-personalization eval (Table 5);\n\
+         \u{20}               --eval-source reads eval clients from a shared\n\
+         \u{20}               store too\n\
          \u{20}  info         show exported artifact/model information; with\n\
          \u{20}               --dir/--prefix, also paged-store header info\n\n\
          see README.md for flags and examples",
@@ -532,6 +560,62 @@ fn cmd_compact_sharded(f: &Flags, dir: &Path, prefix: &str, cache_pages: usize) 
     Ok(())
 }
 
+/// Serve a paged store (or sharded set) over TCP: `grouper serve --dir
+/// work/fedc4 --addr 0.0.0.0:4700`, then any number of trainers run
+/// `grouper train --source remote://host:4700`. Blocks until killed.
+fn cmd_serve(f: &Flags) -> Result<()> {
+    let dir = PathBuf::from(f.required("dir")?);
+    let prefix = f.get_or("prefix", "data");
+    let addr = f.get_or("addr", "127.0.0.1:4700");
+    let opts = ServeOptions {
+        cache_pages: f.usize_or("cache-pages", grouper::formats::paged::DEFAULT_CACHE_PAGES)?,
+        max_connections: f.usize_or("max-connections", 0)?,
+    };
+    let server = StoreServer::bind(&dir, prefix, addr, opts)?;
+    let local = server.local_addr()?;
+    println!(
+        "serving {}/{prefix} on {local} ({} cache pages per connection shard) — \
+         point trainers at `--source remote://{local}`",
+        dir.display(),
+        opts.cache_pages
+    );
+    server.run()
+}
+
+/// Resolve a `--source` spec into a trainer backend:
+/// `remote://host:port` connects to a `grouper serve` process; a
+/// directory is auto-detected as a `.pset` sharded set, a `.pstore`
+/// single store, or a `.gindex` streaming materialization (under
+/// `prefix`), in that order.
+///
+/// Paged backends open with the snapshot variants (no WAL probe, no
+/// recovery): N trainers pointed at one shared directory must all stay
+/// strictly read-only — running recovery here would make each of them a
+/// writer, violating the engine's single-live-writer rule. The trade is
+/// that appends committed but not yet checkpointed stay invisible;
+/// `grouper partition` checkpoints on completion, so a finished
+/// materialization serves in full.
+fn resolve_source(spec: &str, prefix: &str, cache_pages: usize) -> Result<Arc<dyn ClientSource>> {
+    if let Some(addr) = spec.strip_prefix("remote://") {
+        return Ok(Arc::new(RemoteClientSource::connect(addr)?));
+    }
+    let dir = PathBuf::from(spec);
+    if PagedSetManifest::exists(&dir, prefix) {
+        return Ok(Arc::new(ShardedPagedReader::open_snapshot(&dir, prefix, cache_pages)?));
+    }
+    if dir.join(format!("{prefix}.pstore")).exists() {
+        return Ok(Arc::new(PagedReader::open_snapshot(&dir, prefix, cache_pages)?));
+    }
+    if dir.join(format!("{prefix}.gindex")).exists() {
+        return Ok(Arc::new(GindexSource::open(&dir, prefix)?));
+    }
+    bail!(
+        "--source {spec}: no {prefix}.pset / {prefix}.pstore / {prefix}.gindex under {} \
+         (and not a remote://host:port address)",
+        dir.display()
+    )
+}
+
 fn cmd_vocab(f: &Flags) -> Result<()> {
     let name = f.get_or("dataset", "fedc4-mini");
     let groups = f.usize_or("groups", 200)?;
@@ -562,10 +646,12 @@ fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
     };
     println!("experiment {:?}: model={} data={}", cfg.name, cfg.model, cfg.data.dataset);
 
-    // 1. Materialize train (+ eval) splits if absent.
+    // 1. Materialize train (+ eval) splits if absent — unless a shared
+    // `--source` (or `--eval-source`) supplies that split instead.
+    let source_spec = f.get("source");
     let work = PathBuf::from(&cfg.work_dir).join(&cfg.name);
     let ds = make_dataset(&cfg.data.dataset, cfg.data.num_groups, cfg.data.seed)?;
-    if !work.join("train.gindex").exists() {
+    if source_spec.is_none() && !work.join("train.gindex").exists() {
         println!("materializing train split into {}", work.display());
         partition_dataset(
             &ds,
@@ -580,7 +666,7 @@ fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
         cfg.data.num_eval_groups,
         cfg.data.seed ^ 0x5EED_E7A1,
     )?;
-    if !work.join("eval.gindex").exists() {
+    if f.get("eval-source").is_none() && !work.join("eval.gindex").exists() {
         partition_dataset(
             &eval_ds,
             &FeatureKey::new(eval_ds.spec.key_feature),
@@ -610,12 +696,24 @@ fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
         wp
     };
 
-    // 3. Train.
-    let train_pd = PartitionedDataset::open(&work, "train")?;
+    // 3. Train — from the private streaming split, or from a shared
+    // `--source` backend (any local format, or a store server).
     let mut tc = TrainerConfig::new(cfg.fed.clone());
     tc.log_every = (cfg.fed.rounds / 20).max(1);
     tc.read_workers = f.usize_or("read-workers", 1)?;
-    let out = train(&rt, &train_pd, &wp, &tc)?;
+    let cache_pages =
+        f.usize_or("cache-pages", grouper::formats::paged::DEFAULT_CACHE_PAGES)?;
+    let out = match source_spec {
+        Some(spec) => {
+            let src = resolve_source(spec, f.get_or("source-prefix", "train"), cache_pages)?;
+            println!("training from {}", src.describe());
+            train_with_source(&rt, &src, &wp, &tc)?
+        }
+        None => {
+            let train_pd = PartitionedDataset::open(&work, "train")?;
+            train(&rt, &train_pd, &wp, &tc)?
+        }
+    };
     println!("final train loss: {:.4}", out.final_loss());
 
     // Persist the loss curve.
@@ -633,9 +731,18 @@ fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
 
     // 4. Optional personalization eval (Table 5 semantics).
     if personalize {
-        let eval_pd = PartitionedDataset::open(&work, "eval")?;
-        let clients =
-            build_eval_clients(&eval_pd, &wp, &rt, cfg.fed.tau, cfg.data.num_eval_groups)?;
+        let clients = match f.get("eval-source") {
+            Some(spec) => {
+                let src =
+                    resolve_source(spec, f.get_or("eval-source-prefix", "eval"), cache_pages)?;
+                println!("evaluating clients from {}", src.describe());
+                build_eval_clients(src.as_ref(), &wp, &rt, cfg.fed.tau, cfg.data.num_eval_groups)?
+            }
+            None => {
+                let eval_pd = PartitionedDataset::open(&work, "eval")?;
+                build_eval_clients(&eval_pd, &wp, &rt, cfg.fed.tau, cfg.data.num_eval_groups)?
+            }
+        };
         let res = personalization_eval(&rt, &out.params, &clients, cfg.fed.client_lr)?;
         let pre = res.pre_summary();
         let post = res.post_summary();

@@ -1,0 +1,267 @@
+//! `RemoteClientSource` — a [`ClientSource`] over a TCP connection to a
+//! `grouper serve` process.
+//!
+//! Connecting performs the epoch-pin handshake: the server opens a
+//! pinned snapshot for this connection and answers with the epochs it
+//! pinned, which stay constant (and the replies bit-stable) for the
+//! connection's whole life. The client then caches the sorted key list
+//! so cohort sampling never needs the network.
+//!
+//! Fetches are **batched**: [`ClientSource::batched`] is true, so the
+//! trainer sends one fetch-cohort request per round and streams the N
+//! group frames back, instead of paying a round trip per client.
+//! Connect attempts retry with exponential backoff (bounded), and a
+//! read timeout bounds how long a dead server can stall a trainer.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::proto::{
+    decode_response, encode_request, read_frame, write_frame, Request, Response, WireShardStat,
+    PROTO_VERSION,
+};
+use crate::fed::source::ClientSource;
+use crate::formats::streaming::StreamedGroup;
+
+/// Connection tuning for [`RemoteClientSource`].
+#[derive(Debug, Clone, Copy)]
+pub struct RemoteOptions {
+    /// Per-attempt TCP connect timeout.
+    pub connect_timeout: Duration,
+    /// Socket read timeout: an RPC whose reply stalls longer fails
+    /// instead of hanging the trainer.
+    pub read_timeout: Duration,
+    /// Extra connect attempts after the first (so `4` means up to 5
+    /// attempts total).
+    pub connect_retries: u32,
+    /// Backoff before retry `k` is `backoff_base * 2^k`.
+    pub backoff_base: Duration,
+}
+
+impl Default for RemoteOptions {
+    fn default() -> Self {
+        RemoteOptions {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(30),
+            connect_retries: 4,
+            backoff_base: Duration::from_millis(100),
+        }
+    }
+}
+
+/// A trainer-side connection to a store server; one pinned snapshot's
+/// worth of groups, fetched over TCP.
+pub struct RemoteClientSource {
+    addr: String,
+    stream: Mutex<TcpStream>,
+    num_shards: u32,
+    epochs: Vec<u64>,
+    num_groups: u64,
+    num_examples: u64,
+    keys: Vec<Vec<u8>>,
+}
+
+fn connect_with_backoff(addr: &str, opts: &RemoteOptions) -> Result<TcpStream> {
+    let targets: Vec<SocketAddr> = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving store server address {addr}"))?
+        .collect();
+    if targets.is_empty() {
+        bail!("store server address {addr} resolved to nothing");
+    }
+    let mut last_err = None;
+    for attempt in 0..=opts.connect_retries {
+        if attempt > 0 {
+            std::thread::sleep(opts.backoff_base * (1 << (attempt - 1).min(16)));
+        }
+        for target in &targets {
+            match TcpStream::connect_timeout(target, opts.connect_timeout) {
+                Ok(s) => return Ok(s),
+                Err(e) => last_err = Some(e),
+            }
+        }
+    }
+    Err(anyhow!(
+        "connecting to store server {addr} failed after {} attempts: {}",
+        opts.connect_retries + 1,
+        last_err.expect("at least one attempt ran")
+    ))
+}
+
+/// Send one request frame as a single write.
+fn send_request(stream: &mut TcpStream, req: &Request) -> Result<()> {
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &encode_request(req))?;
+    stream.write_all(&buf).context("writing request to store server")?;
+    Ok(())
+}
+
+/// Read one response frame; a server [`Response::Error`] becomes an
+/// `Err` here so callers only ever see well-typed successes.
+fn read_response(stream: &mut TcpStream) -> Result<Response> {
+    let payload = read_frame(stream)
+        .context("reading store server response")?
+        .ok_or_else(|| anyhow!("store server closed the connection"))?;
+    match decode_response(&payload).context("decoding store server response")? {
+        Response::Error { message } => bail!("store server error: {message}"),
+        resp => Ok(resp),
+    }
+}
+
+fn wire_to_streamed(g: super::proto::WireGroup) -> StreamedGroup {
+    // words=0 like every paged-path group; the batching pipeline never
+    // reads it, so remote payloads stay bit-identical to local ones.
+    StreamedGroup::from_framed_bytes(g.key, g.num_examples, 0, g.framed)
+}
+
+impl RemoteClientSource {
+    /// Connect with [`RemoteOptions::default`].
+    ///
+    /// # Errors
+    /// Same conditions as [`RemoteClientSource::connect_with`].
+    pub fn connect(addr: &str) -> Result<RemoteClientSource> {
+        RemoteClientSource::connect_with(addr, &RemoteOptions::default())
+    }
+
+    /// Connect to a `grouper serve` process at `addr` (`host:port`),
+    /// retrying with exponential backoff, then run the epoch-pin
+    /// handshake and cache the snapshot's sorted key list.
+    ///
+    /// # Errors
+    /// Exhausted connect attempts, a protocol-version mismatch, or any
+    /// handshake I/O or decode failure.
+    pub fn connect_with(addr: &str, opts: &RemoteOptions) -> Result<RemoteClientSource> {
+        let mut stream = connect_with_backoff(addr, opts)?;
+        stream.set_read_timeout(Some(opts.read_timeout)).context("setting read timeout")?;
+        stream.set_nodelay(true).ok(); // latency over batching; best-effort
+        send_request(&mut stream, &Request::Hello { version: PROTO_VERSION })?;
+        let (num_shards, epochs, num_groups, num_examples) =
+            match read_response(&mut stream)? {
+                Response::HelloAck { version, num_shards, epochs, num_groups, num_examples } => {
+                    if version != PROTO_VERSION {
+                        bail!("store server speaks protocol v{version}, client v{PROTO_VERSION}");
+                    }
+                    (num_shards, epochs, num_groups, num_examples)
+                }
+                other => bail!("expected HelloAck, got {other:?}"),
+            };
+        send_request(&mut stream, &Request::Keys)?;
+        let keys = match read_response(&mut stream)? {
+            Response::Keys { keys } => keys,
+            other => bail!("expected Keys, got {other:?}"),
+        };
+        Ok(RemoteClientSource {
+            addr: addr.to_string(),
+            stream: Mutex::new(stream),
+            num_shards,
+            epochs,
+            num_groups,
+            num_examples,
+            keys,
+        })
+    }
+
+    /// Shards in the served store (1 for a single paged store).
+    pub fn num_shards(&self) -> u32 {
+        self.num_shards
+    }
+
+    /// Checkpoint epoch pinned per shard for this connection — constant
+    /// for the connection's life no matter what the primary does.
+    pub fn epochs(&self) -> &[u64] {
+        &self.epochs
+    }
+
+    /// Fetch per-shard statistics of the pinned snapshot.
+    ///
+    /// # Errors
+    /// Any RPC failure.
+    pub fn stats(&self) -> Result<Vec<WireShardStat>> {
+        let mut stream = self.stream.lock().unwrap();
+        send_request(&mut stream, &Request::Stats)?;
+        match read_response(&mut stream)? {
+            Response::Stats { shards } => Ok(shards),
+            other => bail!("expected Stats, got {other:?}"),
+        }
+    }
+}
+
+impl ClientSource for RemoteClientSource {
+    fn describe(&self) -> String {
+        format!(
+            "remote store at {} ({} shards, {} groups, epochs {:?})",
+            self.addr, self.num_shards, self.num_groups, self.epochs
+        )
+    }
+
+    fn group_keys(&self) -> Vec<Vec<u8>> {
+        self.keys.clone()
+    }
+
+    fn num_groups(&self) -> usize {
+        self.num_groups as usize
+    }
+
+    fn num_examples(&self) -> u64 {
+        self.num_examples
+    }
+
+    fn streamed_group(&self, key: &[u8]) -> Result<Option<StreamedGroup>> {
+        let mut stream = self.stream.lock().unwrap();
+        send_request(&mut stream, &Request::FetchGroup { key: key.to_vec() })?;
+        match read_response(&mut stream)? {
+            Response::Group { group } => {
+                if group.key != key {
+                    bail!("group reply mismatch: asked {key:?}, got {:?}", group.key);
+                }
+                Ok(Some(wire_to_streamed(group)))
+            }
+            Response::Miss { key: echoed } => {
+                if echoed != key {
+                    bail!("miss reply mismatch: asked {key:?}, got {echoed:?}");
+                }
+                Ok(None)
+            }
+            other => bail!("expected Group or Miss, got {other:?}"),
+        }
+    }
+
+    fn batched(&self) -> bool {
+        true
+    }
+
+    /// One fetch-cohort round trip: the whole cohort goes out as one
+    /// request and comes back as `keys.len()` group-or-miss frames,
+    /// read under a single lock so concurrent fetches cannot interleave
+    /// replies. **Every** reply is order-checked against the key it
+    /// answers — misses echo their key precisely so a reply stream
+    /// reordered around absent groups fails fast instead of silently
+    /// misassigning cohorts.
+    fn fetch_groups(&self, keys: &[Vec<u8>]) -> Result<Vec<Option<StreamedGroup>>> {
+        let mut stream = self.stream.lock().unwrap();
+        send_request(&mut stream, &Request::FetchCohort { keys: keys.to_vec() })?;
+        let mut out = Vec::with_capacity(keys.len());
+        for key in keys {
+            match read_response(&mut stream)? {
+                Response::Group { group } => {
+                    if group.key != *key {
+                        bail!("cohort reply out of order: asked {key:?}, got {:?}", group.key);
+                    }
+                    out.push(Some(wire_to_streamed(group)));
+                }
+                Response::Miss { key: echoed } => {
+                    if echoed != *key {
+                        bail!("cohort reply out of order: asked {key:?}, got miss for {echoed:?}");
+                    }
+                    out.push(None);
+                }
+                other => bail!("expected Group or Miss, got {other:?}"),
+            }
+        }
+        Ok(out)
+    }
+}

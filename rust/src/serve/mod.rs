@@ -1,0 +1,49 @@
+//! The store server: one shared materialization, N trainer processes.
+//!
+//! A paged store (or sharded set) is built once — `grouper partition
+//! --format paged` — and then *served*: `grouper serve <dir> --addr
+//! host:port` runs a [`StoreServer`] over it, and any number of trainer
+//! processes point `--source remote://host:port` at it. Each trainer
+//! holds a [`RemoteClientSource`], which is just another
+//! [`ClientSource`](crate::fed::ClientSource) backend — the round loop
+//! cannot tell a socket from a local file.
+//!
+//! Three pieces:
+//!
+//! * [`proto`] — the length-prefixed, CRC32C-framed wire protocol
+//!   (hello/epoch-pin handshake, keys, stats, fetch-group,
+//!   fetch-cohort). Decoders are bounds-checked and never panic on
+//!   hostile bytes.
+//! * [`server`] — the TCP accept loop, one thread per (long-lived)
+//!   connection with an optional admission cap. Every connection opens
+//!   its own pinned snapshot
+//!   ([`PagedReader::open_snapshot_with`](crate::formats::paged::PagedReader::open_snapshot_with)),
+//!   so replies are bit-stable at the pinned checkpoint epochs while
+//!   the store's single live writer appends, checkpoints and compacts.
+//! * [`client`] — [`RemoteClientSource`]: bounded-backoff connect,
+//!   read timeouts, cached sorted keys, and batched cohort fetches
+//!   (one round trip per cohort, not per client).
+//!
+//! The concurrency contract is exactly the storage engine's
+//! single-live-writer rule extended over the network: **one** process
+//! may hold the writing [`PagedStore`](crate::formats::paged::PagedStore)
+//! / [`PagedShardSet`](crate::formats::paged_sharded::PagedShardSet),
+//! while the server hands out any number of read-only snapshots whose
+//! epoch pins keep the writer from reusing or truncating pages under
+//! them. The pins work **across processes**: each snapshot registers in
+//! the in-process registry (covering a writer embedded next to the
+//! server via [`StoreServer::spawn`]) *and* as an on-disk pin file
+//! ([`crate::store::pins`]) that a separate writer process folds into
+//! its reuse gate at open and after every checkpoint — so the
+//! advertised deployment, a `grouper serve` process beside an
+//! independent writer process on the same store directory, keeps every
+//! open connection's replies bit-stable too.
+
+#![deny(missing_docs)]
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::{RemoteClientSource, RemoteOptions};
+pub use server::{ServeOptions, ServerHandle, StoreServer};

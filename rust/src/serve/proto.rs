@@ -1,0 +1,622 @@
+//! The wire protocol: length-prefixed, CRC-framed request/response
+//! messages over any byte stream.
+//!
+//! ## Framing
+//!
+//! Every message travels in one frame:
+//!
+//! ```text
+//! frame   := len:u32le  crc:u32le  payload[len]
+//! payload := opcode:u8  body
+//! ```
+//!
+//! `crc` is the CRC32C (Castagnoli) of the payload — the same checksum
+//! the storage engine frames its WAL and manifest with. `len` is capped
+//! at [`MAX_FRAME_LEN`]; a peer announcing a longer frame is rejected
+//! **before** any allocation, with a typed [`io::ErrorKind::InvalidData`]
+//! error rather than a panic or an OOM. All integers are little-endian;
+//! byte strings are `u32` length-prefixed.
+//!
+//! ## Conversation
+//!
+//! The client speaks first. One [`Request`] frame yields exactly one
+//! [`Response`] frame — except [`Request::FetchCohort`], which yields
+//! one frame *per requested key*, in request order ([`Response::Group`]
+//! for a present group, [`Response::Miss`] echoing the key for an
+//! absent one — the echo is what lets the client order-check misses as
+//! strictly as hits), so a large cohort never has to fit in a single
+//! frame. A server-side failure substitutes a [`Response::Error`] frame
+//! wherever the normal response would have gone.
+//!
+//! The first exchange on a connection must be [`Request::Hello`] /
+//! [`Response::HelloAck`]: the server opens its per-connection pinned
+//! snapshot before answering, so the epochs in the ack are the epochs
+//! every later reply on this connection is served from (see
+//! [`crate::serve`] for the snapshot contract).
+//!
+//! Decoders never panic on malicious input: every read is
+//! bounds-checked and every error is a typed [`io::Error`] (property
+//! test below feeds random and truncated byte prefixes).
+
+use std::io::{self, Read, Write};
+
+use crate::records::crc32c::crc32c;
+
+/// Protocol version sent in [`Request::Hello`]; bumped on any framing
+/// or message change.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Upper bound on one frame's payload (64 MiB). Bounds the allocation
+/// a single `len` prefix can demand on either side; a group or key
+/// list that genuinely exceeds this is a store the protocol cannot
+/// serve (split the group, or raise the constant with the version).
+pub const MAX_FRAME_LEN: u32 = 64 << 20;
+
+const OP_HELLO: u8 = 0x01;
+const OP_KEYS: u8 = 0x02;
+const OP_STATS: u8 = 0x03;
+const OP_FETCH_GROUP: u8 = 0x04;
+const OP_FETCH_COHORT: u8 = 0x05;
+const OP_HELLO_ACK: u8 = 0x81;
+const OP_KEYS_RESP: u8 = 0x82;
+const OP_STATS_RESP: u8 = 0x83;
+const OP_GROUP: u8 = 0x84;
+const OP_MISS: u8 = 0x85;
+const OP_ERROR: u8 = 0x7F;
+
+/// A client → server message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Handshake: must be the first request on a connection.
+    Hello {
+        /// The client's [`PROTO_VERSION`].
+        version: u32,
+    },
+    /// All group keys, sorted.
+    Keys,
+    /// Per-shard store statistics.
+    Stats,
+    /// One group's framed examples.
+    FetchGroup {
+        /// The group key.
+        key: Vec<u8>,
+    },
+    /// A whole cohort: the server answers with one [`Response::Group`]
+    /// frame per key, in order.
+    FetchCohort {
+        /// The cohort's group keys.
+        keys: Vec<Vec<u8>>,
+    },
+}
+
+/// One group's payload on the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireGroup {
+    /// The group key.
+    pub key: Vec<u8>,
+    /// Examples in the group.
+    pub num_examples: u64,
+    /// The group's examples as standard TFRecord framing of each
+    /// canonical encoding — exactly the buffer
+    /// [`StreamedGroup::from_framed_bytes`](crate::formats::streaming::StreamedGroup::from_framed_bytes)
+    /// consumes, so a remote fetch is bit-identical to a local one.
+    pub framed: Vec<u8>,
+}
+
+/// Per-shard statistics on the wire (a subset of
+/// [`PagedStat`](crate::formats::paged::PagedStat)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireShardStat {
+    /// Checkpoint epoch the connection's snapshot pins for this shard.
+    pub epoch: u64,
+    /// Distinct groups in the shard.
+    pub num_groups: u64,
+    /// Example rows in the shard.
+    pub num_rows: u64,
+    /// Live index pages.
+    pub live_pages: u32,
+    /// Free (reclaimable) index pages.
+    pub free_pages: u32,
+    /// Total index pages.
+    pub total_pages: u32,
+}
+
+/// A server → client message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    /// Handshake reply: the pinned snapshot this connection will be
+    /// served from.
+    HelloAck {
+        /// The server's [`PROTO_VERSION`].
+        version: u32,
+        /// Shards in the store (1 for a single paged store).
+        num_shards: u32,
+        /// Pinned checkpoint epoch per shard, in shard order.
+        epochs: Vec<u64>,
+        /// Distinct groups in the snapshot.
+        num_groups: u64,
+        /// Total examples in the snapshot.
+        num_examples: u64,
+    },
+    /// All group keys, sorted.
+    Keys {
+        /// The sorted key list.
+        keys: Vec<Vec<u8>>,
+    },
+    /// Per-shard statistics, in shard order.
+    Stats {
+        /// One entry per shard.
+        shards: Vec<WireShardStat>,
+    },
+    /// One present group's payload.
+    Group {
+        /// The payload.
+        group: WireGroup,
+    },
+    /// The requested key is not in the snapshot. Echoes the key so a
+    /// client can order-check a miss exactly like a hit — a reply
+    /// stream that reorders around misses fails fast instead of
+    /// misassigning cohorts.
+    Miss {
+        /// The key that was asked for.
+        key: Vec<u8>,
+    },
+    /// A typed server-side failure; the connection closes after this.
+    Error {
+        /// Human-readable cause.
+        message: String,
+    },
+}
+
+/// Write one frame (length + CRC32C + payload).
+///
+/// # Errors
+/// [`io::ErrorKind::InvalidData`] when `payload` exceeds
+/// [`MAX_FRAME_LEN`], or any underlying write failure.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > MAX_FRAME_LEN as usize {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame payload of {} bytes exceeds the {MAX_FRAME_LEN} cap", payload.len()),
+        ));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&crc32c(payload).to_le_bytes())?;
+    w.write_all(payload)
+}
+
+/// Read one frame's payload. `Ok(None)` is a clean close: the peer shut
+/// the stream down before sending any byte of a next frame.
+///
+/// # Errors
+/// [`io::ErrorKind::InvalidData`] for an oversized length prefix or a
+/// checksum mismatch, [`io::ErrorKind::UnexpectedEof`] for a frame
+/// truncated mid-way, or any underlying read failure.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
+    let mut header = [0u8; 8];
+    // Distinguish "no next frame" (clean EOF at a frame boundary) from
+    // a frame torn mid-header.
+    let mut got = 0;
+    while got < header.len() {
+        let n = r.read(&mut header[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "stream closed mid-frame-header",
+            ));
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if len > MAX_FRAME_LEN {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame announces {len} bytes, above the {MAX_FRAME_LEN} cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    if crc32c(&payload) != crc {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame checksum mismatch"));
+    }
+    Ok(Some(payload))
+}
+
+/// Bounds-checked little-endian reader over a payload slice.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if n > self.remaining() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "message body shorter than its fields claim",
+            ));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self) -> io::Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn finish(self) -> io::Result<()> {
+        if self.pos != self.b.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "trailing bytes after message body",
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+/// Encode a request into a frame payload.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut out = Vec::new();
+    match req {
+        Request::Hello { version } => {
+            out.push(OP_HELLO);
+            out.extend_from_slice(&version.to_le_bytes());
+        }
+        Request::Keys => out.push(OP_KEYS),
+        Request::Stats => out.push(OP_STATS),
+        Request::FetchGroup { key } => {
+            out.push(OP_FETCH_GROUP);
+            put_bytes(&mut out, key);
+        }
+        Request::FetchCohort { keys } => {
+            out.push(OP_FETCH_COHORT);
+            out.extend_from_slice(&(keys.len() as u32).to_le_bytes());
+            for k in keys {
+                put_bytes(&mut out, k);
+            }
+        }
+    }
+    out
+}
+
+/// Decode a request payload. Never panics: any malformed input is a
+/// typed [`io::ErrorKind::InvalidData`] error.
+///
+/// # Errors
+/// An unknown opcode, truncated fields, or trailing bytes.
+pub fn decode_request(payload: &[u8]) -> io::Result<Request> {
+    let mut c = Cur::new(payload);
+    let req = match c.u8()? {
+        OP_HELLO => Request::Hello { version: c.u32()? },
+        OP_KEYS => Request::Keys,
+        OP_STATS => Request::Stats,
+        OP_FETCH_GROUP => Request::FetchGroup { key: c.bytes()? },
+        OP_FETCH_COHORT => {
+            let n = c.u32()? as usize;
+            // Each key costs at least its 4-byte length prefix, so a
+            // count the remaining bytes cannot hold is rejected before
+            // any reservation.
+            if n > c.remaining() / 4 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "cohort key count exceeds message size",
+                ));
+            }
+            let mut keys = Vec::with_capacity(n);
+            for _ in 0..n {
+                keys.push(c.bytes()?);
+            }
+            Request::FetchCohort { keys }
+        }
+        op => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unknown request opcode {op:#04x}"),
+            ))
+        }
+    };
+    c.finish()?;
+    Ok(req)
+}
+
+/// Encode a response into a frame payload.
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut out = Vec::new();
+    match resp {
+        Response::HelloAck { version, num_shards, epochs, num_groups, num_examples } => {
+            out.push(OP_HELLO_ACK);
+            out.extend_from_slice(&version.to_le_bytes());
+            out.extend_from_slice(&num_shards.to_le_bytes());
+            out.extend_from_slice(&(epochs.len() as u32).to_le_bytes());
+            for e in epochs {
+                out.extend_from_slice(&e.to_le_bytes());
+            }
+            out.extend_from_slice(&num_groups.to_le_bytes());
+            out.extend_from_slice(&num_examples.to_le_bytes());
+        }
+        Response::Keys { keys } => {
+            out.push(OP_KEYS_RESP);
+            out.extend_from_slice(&(keys.len() as u32).to_le_bytes());
+            for k in keys {
+                put_bytes(&mut out, k);
+            }
+        }
+        Response::Stats { shards } => {
+            out.push(OP_STATS_RESP);
+            out.extend_from_slice(&(shards.len() as u32).to_le_bytes());
+            for s in shards {
+                out.extend_from_slice(&s.epoch.to_le_bytes());
+                out.extend_from_slice(&s.num_groups.to_le_bytes());
+                out.extend_from_slice(&s.num_rows.to_le_bytes());
+                out.extend_from_slice(&s.live_pages.to_le_bytes());
+                out.extend_from_slice(&s.free_pages.to_le_bytes());
+                out.extend_from_slice(&s.total_pages.to_le_bytes());
+            }
+        }
+        Response::Group { group } => {
+            out.push(OP_GROUP);
+            put_bytes(&mut out, &group.key);
+            out.extend_from_slice(&group.num_examples.to_le_bytes());
+            put_bytes(&mut out, &group.framed);
+        }
+        Response::Miss { key } => {
+            out.push(OP_MISS);
+            put_bytes(&mut out, key);
+        }
+        Response::Error { message } => {
+            out.push(OP_ERROR);
+            put_bytes(&mut out, message.as_bytes());
+        }
+    }
+    out
+}
+
+/// Decode a response payload. Never panics: any malformed input is a
+/// typed [`io::ErrorKind::InvalidData`] error.
+///
+/// # Errors
+/// An unknown opcode, truncated fields, invalid UTF-8 in an error
+/// message, or trailing bytes.
+pub fn decode_response(payload: &[u8]) -> io::Result<Response> {
+    let mut c = Cur::new(payload);
+    let resp = match c.u8()? {
+        OP_HELLO_ACK => {
+            let version = c.u32()?;
+            let num_shards = c.u32()?;
+            let n = c.u32()? as usize;
+            if n > c.remaining() / 8 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "epoch count exceeds message size",
+                ));
+            }
+            let mut epochs = Vec::with_capacity(n);
+            for _ in 0..n {
+                epochs.push(c.u64()?);
+            }
+            Response::HelloAck {
+                version,
+                num_shards,
+                epochs,
+                num_groups: c.u64()?,
+                num_examples: c.u64()?,
+            }
+        }
+        OP_KEYS_RESP => {
+            let n = c.u32()? as usize;
+            if n > c.remaining() / 4 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "key count exceeds message size",
+                ));
+            }
+            let mut keys = Vec::with_capacity(n);
+            for _ in 0..n {
+                keys.push(c.bytes()?);
+            }
+            Response::Keys { keys }
+        }
+        OP_STATS_RESP => {
+            let n = c.u32()? as usize;
+            if n > c.remaining() / 36 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "shard count exceeds message size",
+                ));
+            }
+            let mut shards = Vec::with_capacity(n);
+            for _ in 0..n {
+                shards.push(WireShardStat {
+                    epoch: c.u64()?,
+                    num_groups: c.u64()?,
+                    num_rows: c.u64()?,
+                    live_pages: c.u32()?,
+                    free_pages: c.u32()?,
+                    total_pages: c.u32()?,
+                });
+            }
+            Response::Stats { shards }
+        }
+        OP_GROUP => Response::Group {
+            group: WireGroup { key: c.bytes()?, num_examples: c.u64()?, framed: c.bytes()? },
+        },
+        OP_MISS => Response::Miss { key: c.bytes()? },
+        OP_ERROR => {
+            let raw = c.bytes()?;
+            let message = String::from_utf8(raw).map_err(|_| {
+                io::Error::new(io::ErrorKind::InvalidData, "error message is not UTF-8")
+            })?;
+            Response::Error { message }
+        }
+        op => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unknown response opcode {op:#04x}"),
+            ))
+        }
+    };
+    c.finish()?;
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{check, gen_bytes, prop_assert, PropResult};
+
+    fn roundtrip_req(req: Request) {
+        let payload = encode_request(&req);
+        assert_eq!(decode_request(&payload).unwrap(), req);
+        let mut framed = Vec::new();
+        write_frame(&mut framed, &payload).unwrap();
+        let got = read_frame(&mut framed.as_slice()).unwrap().unwrap();
+        assert_eq!(decode_request(&got).unwrap(), req);
+    }
+
+    fn roundtrip_resp(resp: Response) {
+        let payload = encode_response(&resp);
+        assert_eq!(decode_response(&payload).unwrap(), resp);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_req(Request::Hello { version: PROTO_VERSION });
+        roundtrip_req(Request::Keys);
+        roundtrip_req(Request::Stats);
+        roundtrip_req(Request::FetchGroup { key: b"nytimes.com".to_vec() });
+        roundtrip_req(Request::FetchCohort { keys: vec![] });
+        roundtrip_req(Request::FetchCohort {
+            keys: vec![b"a".to_vec(), vec![], b"long-key-with-\0-byte".to_vec()],
+        });
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        roundtrip_resp(Response::HelloAck {
+            version: 1,
+            num_shards: 4,
+            epochs: vec![3, 7, 0, 9],
+            num_groups: 1000,
+            num_examples: 123_456,
+        });
+        roundtrip_resp(Response::Keys { keys: vec![b"a".to_vec(), b"b".to_vec()] });
+        roundtrip_resp(Response::Stats {
+            shards: vec![WireShardStat {
+                epoch: 5,
+                num_groups: 10,
+                num_rows: 100,
+                live_pages: 7,
+                free_pages: 1,
+                total_pages: 8,
+            }],
+        });
+        roundtrip_resp(Response::Miss { key: b"absent".to_vec() });
+        roundtrip_resp(Response::Group {
+            group: WireGroup { key: b"k".to_vec(), num_examples: 3, framed: vec![1, 2, 3, 4] },
+        });
+        roundtrip_resp(Response::Error { message: "store is on fire".to_string() });
+    }
+
+    #[test]
+    fn oversized_frames_are_rejected_without_allocation() {
+        // A length prefix far beyond the cap must error, not reserve.
+        let mut bogus = Vec::new();
+        bogus.extend_from_slice(&u32::MAX.to_le_bytes());
+        bogus.extend_from_slice(&0u32.to_le_bytes());
+        let err = read_frame(&mut bogus.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // And the writer refuses to produce one.
+        let huge = vec![0u8; MAX_FRAME_LEN as usize + 1];
+        let err = write_frame(&mut Vec::new(), &huge).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_frames_are_typed_errors() {
+        let payload = encode_request(&Request::Keys);
+        let mut framed = Vec::new();
+        write_frame(&mut framed, &payload).unwrap();
+        // Flip a payload bit: checksum mismatch.
+        let mut bad = framed.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        let err = read_frame(&mut bad.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // Every proper prefix is clean-EOF (empty) or UnexpectedEof.
+        for cut in 0..framed.len() {
+            match read_frame(&mut &framed[..cut]) {
+                Ok(None) => assert_eq!(cut, 0, "only an empty stream is a clean close"),
+                Ok(Some(_)) => panic!("truncated frame decoded at cut {cut}"),
+                Err(e) => assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof, "cut {cut}"),
+            }
+        }
+    }
+
+    /// The decoder satellite: random bytes and truncated prefixes of
+    /// valid messages must never panic — only decode or error.
+    #[test]
+    fn decoders_never_panic_on_arbitrary_input() {
+        check(400, |rng| -> PropResult {
+            // Pure fuzz.
+            let junk = gen_bytes(rng, 0..=200);
+            let _ = decode_request(&junk);
+            let _ = decode_response(&junk);
+            // Truncations and single-byte corruptions of valid encodings.
+            let req = Request::FetchCohort {
+                keys: (0..rng.gen_range_usize(5)).map(|_| gen_bytes(rng, 0..=24)).collect(),
+            };
+            let enc = encode_request(&req);
+            let cut = rng.gen_range_usize(enc.len() + 1);
+            let _ = decode_request(&enc[..cut]);
+            let mut flipped = enc.clone();
+            if !flipped.is_empty() {
+                let i = rng.gen_range_usize(flipped.len());
+                flipped[i] ^= 1 << rng.gen_range_usize(8);
+                let _ = decode_request(&flipped);
+            }
+            let resp = Response::Group {
+                group: WireGroup {
+                    key: gen_bytes(rng, 0..=16),
+                    num_examples: rng.next_u64(),
+                    framed: gen_bytes(rng, 0..=64),
+                },
+            };
+            let enc = encode_response(&resp);
+            let cut = rng.gen_range_usize(enc.len() + 1);
+            let _ = decode_response(&enc[..cut]);
+            prop_assert(true, "decoders survived")
+        });
+    }
+}

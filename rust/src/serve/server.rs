@@ -1,0 +1,440 @@
+//! The store server: accepts TCP connections and serves
+//! snapshot-consistent reads from a paged store or sharded paged set.
+//!
+//! Each accepted connection opens its **own** pinned snapshot via
+//! [`PagedReader::open_snapshot_with`] /
+//! [`ShardedPagedReader::open_snapshot_with`] — an open that never
+//! probes the WAL or touches a store byte, plus an epoch pin in the
+//! shared-pager registry *and* an on-disk pin file
+//! ([`crate::store::pins`]) a writer in another process folds into its
+//! reuse gate. That is the epoch-pin handshake: the epochs announced in
+//! the [`Response::HelloAck`] are the epochs every later reply on the
+//! connection is served from, bit-stable no matter how far a live
+//! primary — in this process or any other — appends, checkpoints or
+//! compacts underneath.
+//!
+//! Connections are long-lived (a trainer holds one for its whole run),
+//! so each gets its **own** thread rather than a slot in a fixed pool —
+//! trainer N+1 must never wait for trainer N to finish training. The
+//! optional [`ServeOptions::max_connections`] cap rejects over-limit
+//! connections *eagerly* with a typed [`Response::Error`] frame, so a
+//! turned-away trainer fails its handshake immediately instead of
+//! timing out against a silently queued connection.
+//!
+//! The server never panics on peer input: malformed, oversized or
+//! corrupt frames and handler failures all come back as typed
+//! [`Response::Error`] frames, after which the connection closes.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::proto::{
+    decode_request, encode_response, read_frame, write_frame, Request, Response, WireGroup,
+    WireShardStat, PROTO_VERSION,
+};
+use crate::formats::paged::{PagedReader, PagedStat};
+use crate::formats::paged_sharded::{PagedSetManifest, ShardedPagedReader};
+use crate::store::vfs::{StdVfs, Vfs};
+
+/// Tuning knobs for [`StoreServer`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// LRU page-cache frames per shard of each connection's snapshot.
+    pub cache_pages: usize,
+    /// Concurrent-connection cap (0 = unlimited). Each connection costs
+    /// one thread plus one pinned snapshot; a connection over the cap
+    /// is answered with a typed error frame and closed, so the turned-
+    /// away trainer fails fast instead of stalling on its handshake.
+    pub max_connections: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { cache_pages: 256, max_connections: 0 }
+    }
+}
+
+/// One connection's pinned view of the store — a sharded set or a
+/// single paged store, whichever lives at `dir/<prefix>`.
+enum Snapshot {
+    Set(ShardedPagedReader),
+    Store(PagedReader),
+}
+
+impl Snapshot {
+    fn open(vfs: &dyn Vfs, dir: &Path, prefix: &str, cache_pages: usize) -> Result<Snapshot> {
+        if PagedSetManifest::exists_with(vfs, dir, prefix) {
+            Ok(Snapshot::Set(ShardedPagedReader::open_snapshot_with(
+                vfs,
+                dir,
+                prefix,
+                cache_pages,
+            )?))
+        } else {
+            Ok(Snapshot::Store(PagedReader::open_snapshot_with(vfs, dir, prefix, cache_pages)?))
+        }
+    }
+
+    fn epochs(&self) -> Vec<u64> {
+        match self {
+            Snapshot::Set(r) => r.epochs(),
+            Snapshot::Store(r) => vec![r.epoch()],
+        }
+    }
+
+    fn num_shards(&self) -> u32 {
+        match self {
+            Snapshot::Set(r) => r.num_shards() as u32,
+            Snapshot::Store(_) => 1,
+        }
+    }
+
+    fn num_groups(&self) -> u64 {
+        match self {
+            Snapshot::Set(r) => r.num_groups() as u64,
+            Snapshot::Store(r) => r.num_groups() as u64,
+        }
+    }
+
+    fn num_examples(&self) -> u64 {
+        match self {
+            Snapshot::Set(r) => r.num_examples(),
+            Snapshot::Store(r) => r.num_examples(),
+        }
+    }
+
+    fn keys(&self) -> Vec<Vec<u8>> {
+        match self {
+            Snapshot::Set(r) => r.keys().to_vec(),
+            Snapshot::Store(r) => r.keys().to_vec(),
+        }
+    }
+
+    fn stats(&self) -> Vec<WireShardStat> {
+        let stats: Vec<PagedStat> = match self {
+            Snapshot::Set(r) => r.shard_stats(),
+            Snapshot::Store(r) => vec![r.stat()],
+        };
+        stats
+            .into_iter()
+            .map(|s| WireShardStat {
+                epoch: s.epoch,
+                num_groups: s.num_groups,
+                num_rows: s.num_rows,
+                live_pages: s.live_pages,
+                free_pages: s.free_pages,
+                total_pages: s.total_pages,
+            })
+            .collect()
+    }
+
+    fn group(&self, key: &[u8]) -> Result<Option<WireGroup>> {
+        let fetched = match self {
+            Snapshot::Set(r) => r.streamed_group(key)?,
+            Snapshot::Store(r) => r.streamed_group(key)?,
+        };
+        let Some(g) = fetched else {
+            return Ok(None);
+        };
+        let framed = g
+            .framed_bytes()
+            .context("snapshot produced a non-prefetched group")? // unreachable: paged reads buffer
+            .to_vec();
+        Ok(Some(WireGroup { key: key.to_vec(), num_examples: g.num_examples, framed }))
+    }
+}
+
+/// A bound (but not yet accepting) store server. Call
+/// [`StoreServer::run`] to serve on the current thread — the CLI's
+/// `grouper serve` — or [`StoreServer::spawn`] to serve from a
+/// background thread with a stop handle (tests, embedding).
+pub struct StoreServer {
+    vfs: Arc<dyn Vfs>,
+    dir: PathBuf,
+    prefix: String,
+    listener: TcpListener,
+    opts: ServeOptions,
+}
+
+impl StoreServer {
+    /// Bind `addr` and validate the store at `dir/<prefix>` on the real
+    /// filesystem.
+    ///
+    /// # Errors
+    /// Same conditions as [`StoreServer::bind_with`].
+    pub fn bind(
+        dir: &Path,
+        prefix: &str,
+        addr: impl ToSocketAddrs,
+        opts: ServeOptions,
+    ) -> Result<StoreServer> {
+        StoreServer::bind_with(Arc::new(StdVfs), dir, prefix, addr, opts)
+    }
+
+    /// Bind `addr` and validate the store at `dir/<prefix>` on `vfs`
+    /// (a [`MemVfs`](crate::store::vfs::MemVfs) here makes a disk-free
+    /// server, which the loopback tests use).
+    ///
+    /// The store is probed by opening — and immediately dropping — one
+    /// snapshot, so a missing or corrupt store fails here, not on the
+    /// first client.
+    ///
+    /// # Errors
+    /// Bind failure, or no servable store at `dir/<prefix>`.
+    pub fn bind_with(
+        vfs: Arc<dyn Vfs>,
+        dir: &Path,
+        prefix: &str,
+        addr: impl ToSocketAddrs,
+        opts: ServeOptions,
+    ) -> Result<StoreServer> {
+        Snapshot::open(vfs.as_ref(), dir, prefix, opts.cache_pages)
+            .with_context(|| format!("no servable store at {}/{prefix}", dir.display()))?;
+        let listener = TcpListener::bind(addr).context("binding store server address")?;
+        Ok(StoreServer {
+            vfs,
+            dir: dir.to_path_buf(),
+            prefix: prefix.to_string(),
+            listener,
+            opts,
+        })
+    }
+
+    /// The bound address (useful after binding port 0).
+    ///
+    /// # Errors
+    /// The OS refusing to report the socket's address.
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve on the current thread until the listener fails. Each
+    /// accepted connection is handled on its own thread.
+    ///
+    /// # Errors
+    /// A fatal listener failure (per-connection failures are answered
+    /// with [`Response::Error`] frames and never stop the server).
+    pub fn run(self) -> Result<()> {
+        let stop = Arc::new(AtomicBool::new(false));
+        self.serve_loop(&stop)
+    }
+
+    /// Serve from a background thread; the returned handle stops the
+    /// server (and joins the thread) on [`ServerHandle::stop`] or drop.
+    ///
+    /// # Errors
+    /// The OS refusing to report the socket's address.
+    pub fn spawn(self) -> Result<ServerHandle> {
+        let addr = self.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let loop_stop = Arc::clone(&stop);
+        let thread = std::thread::spawn(move || {
+            if let Err(e) = self.serve_loop(&loop_stop) {
+                eprintln!("store server exited: {e:#}");
+            }
+        });
+        Ok(ServerHandle { addr, stop, thread: Some(thread) })
+    }
+
+    fn serve_loop(&self, stop: &AtomicBool) -> Result<()> {
+        let active = Arc::new(AtomicUsize::new(0));
+        loop {
+            let (stream, _) = self.listener.accept().context("accepting connection")?;
+            if stop.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            // Admission control on the accept thread (the only thread
+            // that increments `active`, so load-then-add cannot race
+            // another admit; handlers only decrement, which can only
+            // under-count in our favor). An over-cap peer gets a typed
+            // error frame — a few dozen bytes, which cannot block the
+            // accept loop — instead of a silently queued handshake.
+            let cap = self.opts.max_connections;
+            if cap > 0 && active.load(Ordering::SeqCst) >= cap {
+                let mut writer = BufWriter::new(&stream);
+                send_error(
+                    &mut writer,
+                    format!("server at capacity ({cap} connections); retry later"),
+                );
+                continue;
+            }
+            active.fetch_add(1, Ordering::SeqCst);
+            let guard = ActiveGuard(Arc::clone(&active));
+            let vfs = Arc::clone(&self.vfs);
+            let dir = self.dir.clone();
+            let prefix = self.prefix.clone();
+            let cache_pages = self.opts.cache_pages;
+            // One thread per connection: a trainer holds its connection
+            // for the whole run, so pooled workers would silently cap
+            // concurrent trainers at the pool size (and park everyone
+            // else mid-handshake until a run *finished*).
+            std::thread::spawn(move || {
+                let _guard = guard;
+                handle_connection(vfs.as_ref(), &dir, &prefix, cache_pages, &stream);
+            });
+        }
+    }
+}
+
+/// Decrements the live-connection count when a handler thread exits,
+/// however it exits.
+struct ActiveGuard(Arc<AtomicUsize>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Handle to a spawned [`StoreServer`]; stops it on drop.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The address the server is accepting on.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, unblock the accept loop, and join the server
+    /// thread. Idempotent. Connections already being handled keep
+    /// running on their own (detached) threads until their peers hang
+    /// up — stopping the listener turns new trainers away without
+    /// yanking snapshots from connected ones.
+    pub fn stop(&mut self) {
+        if let Some(thread) = self.thread.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // A throwaway connection unblocks the accept() the server
+            // is parked in so it can observe the stop flag.
+            let _ = TcpStream::connect(self.addr);
+            let _ = thread.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Best-effort: send a typed error frame; the connection closes after.
+fn send_error(w: &mut impl Write, message: String) {
+    let payload = encode_response(&Response::Error { message });
+    let _ = write_frame(w, &payload);
+    let _ = w.flush();
+}
+
+fn send(w: &mut impl Write, resp: &Response) -> std::io::Result<()> {
+    write_frame(w, &encode_response(resp))?;
+    w.flush()
+}
+
+/// One connection, start to finish. Never panics; every failure path
+/// answers with a typed error frame (when the peer is still writable)
+/// and closes.
+fn handle_connection(
+    vfs: &dyn Vfs,
+    dir: &Path,
+    prefix: &str,
+    cache_pages: usize,
+    stream: &TcpStream,
+) {
+    let mut writer = BufWriter::new(stream);
+    // The pinned snapshot IS the connection's state: opened before the
+    // handshake answer, dropped (unpinning the epochs) when we return.
+    let snapshot = match Snapshot::open(vfs, dir, prefix, cache_pages) {
+        Ok(s) => s,
+        Err(e) => {
+            send_error(&mut writer, format!("opening snapshot: {e:#}"));
+            return;
+        }
+    };
+    let mut reader = BufReader::new(stream);
+    let mut greeted = false;
+    loop {
+        let payload = match read_frame(&mut reader) {
+            Ok(Some(p)) => p,
+            Ok(None) => return, // clean close at a frame boundary
+            Err(e) => {
+                send_error(&mut writer, format!("bad frame: {e}"));
+                return;
+            }
+        };
+        let request = match decode_request(&payload) {
+            Ok(r) => r,
+            Err(e) => {
+                send_error(&mut writer, format!("bad request: {e}"));
+                return;
+            }
+        };
+        if !greeted && !matches!(request, Request::Hello { .. }) {
+            send_error(&mut writer, "first request must be Hello".to_string());
+            return;
+        }
+        let sent = match request {
+            Request::Hello { version } => {
+                if version != PROTO_VERSION {
+                    send_error(
+                        &mut writer,
+                        format!("protocol version {version} unsupported (server speaks {PROTO_VERSION})"),
+                    );
+                    return;
+                }
+                greeted = true;
+                send(
+                    &mut writer,
+                    &Response::HelloAck {
+                        version: PROTO_VERSION,
+                        num_shards: snapshot.num_shards(),
+                        epochs: snapshot.epochs(),
+                        num_groups: snapshot.num_groups(),
+                        num_examples: snapshot.num_examples(),
+                    },
+                )
+            }
+            Request::Keys => send(&mut writer, &Response::Keys { keys: snapshot.keys() }),
+            Request::Stats => send(&mut writer, &Response::Stats { shards: snapshot.stats() }),
+            Request::FetchGroup { key } => match snapshot.group(&key) {
+                Ok(Some(group)) => send(&mut writer, &Response::Group { group }),
+                Ok(None) => send(&mut writer, &Response::Miss { key }),
+                Err(e) => {
+                    send_error(&mut writer, format!("fetching group: {e:#}"));
+                    return;
+                }
+            },
+            Request::FetchCohort { keys } => {
+                // One Group (or key-echoing Miss) frame per key, in
+                // request order; flush once.
+                let mut io = Ok(());
+                for key in &keys {
+                    let resp = match snapshot.group(key) {
+                        Ok(Some(group)) => Response::Group { group },
+                        Ok(None) => Response::Miss { key: key.clone() },
+                        Err(e) => {
+                            send_error(&mut writer, format!("fetching cohort group: {e:#}"));
+                            return;
+                        }
+                    };
+                    io = write_frame(&mut writer, &encode_response(&resp));
+                    if io.is_err() {
+                        break;
+                    }
+                }
+                io.and_then(|()| writer.flush())
+            }
+        };
+        if sent.is_err() {
+            return; // peer gone; nothing left to tell them
+        }
+    }
+}

@@ -28,6 +28,10 @@
 //!   [`shared::SharedPager`] with a sharded lock-per-bucket cache, and
 //!   snapshot-bounded [`shared::SnapshotReader`] handles that keep every
 //!   reader inside one committed checkpoint epoch;
+//! * [`pins`] — cross-process snapshot pins: on-disk epoch pin files
+//!   that extend the in-process snapshot registry across process
+//!   boundaries, so a separate writer's reuse gate honors readers in
+//!   other processes (the `grouper serve` deployment);
 //! * [`wal`] — a CRC-framed append-only log (reusing the TFRecord
 //!   CRC32C) with replay-on-open, torn-tail-truncating recovery;
 //! * [`btree`] — a mutable B+tree over the pager with page splits and
@@ -49,6 +53,7 @@ pub mod cache;
 pub mod freelist;
 pub mod page;
 pub mod pager;
+pub mod pins;
 pub mod shared;
 pub mod vfs;
 pub mod wal;

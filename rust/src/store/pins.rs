@@ -1,0 +1,299 @@
+//! Cross-process snapshot pins: on-disk epoch pins that extend the
+//! in-process registry ([`super::shared`]) across process boundaries.
+//!
+//! The in-process registry is enough while reader and writer share one
+//! address space, but the serving deployment ([`crate::serve`]) is
+//! exactly the opposite: `grouper serve` pins snapshots in its own
+//! process while a separate writer process appends, checkpoints and
+//! compacts. A writer that consulted only its local registry would see
+//! no pins at all and could reuse or truncate pages a remote snapshot
+//! can still reach. This module closes that gap with the simplest
+//! durable mechanism the VFS contract allows: a sidecar pin directory
+//! next to the index file.
+//!
+//! ## Mechanism
+//!
+//! A reader holding a snapshot at epoch `E` on `<path>.pstore` owns one
+//! file `<path>.pstore.pins/pin-<pid>-<seq>.pin` containing `E` (plus
+//! the owning process id, all CRC-framed). The file is written to a
+//! temp name and renamed into place, so a concurrent scan never sees a
+//! torn pin; it is removed when the pin guard drops. The writer's reuse
+//! gate takes the **minimum** epoch over every live pin file, exactly
+//! like [`super::shared::min_pinned_epoch`] — the two minima are simply
+//! combined.
+//!
+//! ## Why scanning only at checkpoints is sound
+//!
+//! The writer rescans the pin directory when it opens the store and
+//! **immediately after every checkpoint's header swap** (then caches
+//! the minimum for the append hot path). That is sufficient, not just
+//! convenient: a reader pins with the same pin-then-confirm protocol as
+//! in-process readers — write the pin file, then re-read the header and
+//! proceed only if the epoch is unchanged. If the confirm read still
+//! saw epoch `E`, the swap to `E+1` had not completed, so the pin file
+//! existed **before** the swap — and therefore before the writer's
+//! post-swap rescan, which consequently observes it before any page
+//! freed at `E+1` (the first frees a snapshot at `E` can reach) becomes
+//! eligible for reuse. Pins registered after a rescan are at the
+//! then-current epoch or later and constrain only frees that later
+//! checkpoints publish — each behind its own rescan.
+//!
+//! ## Liveness
+//!
+//! A pin file whose owner crashed would block reclamation forever, so
+//! the scan checks owner liveness: on Linux, a recorded pid with no
+//! `/proc/<pid>` entry is provably dead and the pin is deleted on the
+//! spot. Elsewhere (and for unparseable files, which carry no readable
+//! pid) the scan stays conservative — the pin blocks reclamation until
+//! its owner removes it or the directory is cleaned by hand. Both
+//! errors this can make are in the safe direction: a recycled pid or an
+//! unreadable file delays reclamation; neither can unprotect a live
+//! snapshot.
+//!
+//! Pins exist only on the real filesystem ([`super::vfs::StdVfs`],
+//! instance id 0): a [`super::vfs::MemVfs`] store is unreachable from
+//! another process by construction, so its readers need no durable
+//! pins. On read-only media pin creation degrades to a no-op — where
+//! nothing can write, there is no writer to coordinate with.
+
+use std::fs;
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::records::crc32c::crc32c;
+
+/// Pin file layout: magic, epoch, owner pid, CRC32C of the first 20
+/// bytes. 24 bytes total, written whole and renamed into place.
+const MAGIC: &[u8; 8] = b"GRPPIN1\0";
+const PIN_LEN: usize = 24;
+
+/// The sidecar pin directory for the store indexed by `index_path`:
+/// the index file's own name with `.pins` appended (so `data.pstore`
+/// gets `data.pstore.pins/`). Call with the VFS's canonical spelling
+/// ([`super::vfs::Vfs::registry_key`]) so reader and writer agree on
+/// one directory even through symlinks.
+pub fn pins_dir(index_path: &Path) -> PathBuf {
+    let mut name = index_path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".pins");
+    index_path.with_file_name(name)
+}
+
+/// An errors-where-no-writer-can-exist kind: pin creation on read-only
+/// media is pointless (the coordination target cannot run there), so it
+/// degrades to "no pin" instead of failing the open.
+fn degradable(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::PermissionDenied | io::ErrorKind::Unsupported)
+}
+
+/// RAII guard for one on-disk pin: the pin file lives exactly as long
+/// as this value. Dropping it deletes the file (and the pin directory,
+/// when this was its last pin).
+#[derive(Debug)]
+pub struct DiskPin {
+    path: PathBuf,
+}
+
+impl Drop for DiskPin {
+    fn drop(&mut self) {
+        let _ = fs::remove_file(&self.path);
+        if let Some(dir) = self.path.parent() {
+            // Only succeeds when no other pin remains; best-effort.
+            let _ = fs::remove_dir(dir);
+        }
+    }
+}
+
+/// Register an on-disk pin at `epoch` for the store indexed by
+/// `index_path` (canonical spelling). Returns `Ok(None)` on read-only
+/// media, where no writer can exist to observe the pin.
+///
+/// # Errors
+/// Any non-degradable I/O failure creating the pin directory or file.
+pub fn create(index_path: &Path, epoch: u64) -> io::Result<Option<DiskPin>> {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = pins_dir(index_path);
+    match fs::create_dir_all(&dir) {
+        Ok(()) => {}
+        Err(e) if degradable(&e) => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let pid = std::process::id();
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp_path = dir.join(format!("pin-{pid}-{seq}.tmp"));
+    let final_path = dir.join(format!("pin-{pid}-{seq}.pin"));
+    let mut body = Vec::with_capacity(PIN_LEN);
+    body.extend_from_slice(MAGIC);
+    body.extend_from_slice(&epoch.to_le_bytes());
+    body.extend_from_slice(&pid.to_le_bytes());
+    let crc = crc32c(&body);
+    body.extend_from_slice(&crc.to_le_bytes());
+    // Write-then-rename: a scan racing this create sees either no pin
+    // file or a complete one, never a torn prefix. No fsync — the pin
+    // coordinates live processes on one host (page-cache coherent), and
+    // a pin lost to a crash is moot: its owner died with it.
+    fn write_pin(tmp: &Path, dst: &Path, body: &[u8]) -> io::Result<()> {
+        let mut f = fs::File::create(tmp)?;
+        f.write_all(body)?;
+        fs::rename(tmp, dst)
+    }
+    match write_pin(&tmp_path, &final_path, &body) {
+        Ok(()) => Ok(Some(DiskPin { path: final_path })),
+        Err(e) => {
+            let _ = fs::remove_file(&tmp_path);
+            if degradable(&e) {
+                Ok(None)
+            } else {
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Parse one pin file body: `(epoch, owner pid)`, or `None` when the
+/// bytes are not a complete, checksummed pin record.
+fn parse(body: &[u8]) -> Option<(u64, u32)> {
+    if body.len() != PIN_LEN || &body[0..8] != MAGIC {
+        return None;
+    }
+    let crc = u32::from_le_bytes(body[20..24].try_into().unwrap());
+    if crc32c(&body[0..20]) != crc {
+        return None;
+    }
+    let epoch = u64::from_le_bytes(body[8..16].try_into().unwrap());
+    let pid = u32::from_le_bytes(body[16..20].try_into().unwrap());
+    Some((epoch, pid))
+}
+
+/// Whether `pid` provably no longer runs. Only Linux can prove it
+/// (procfs); elsewhere every recorded owner is presumed alive, which
+/// can only delay reclamation, never unprotect a snapshot.
+#[cfg(target_os = "linux")]
+fn owner_known_dead(pid: u32) -> bool {
+    pid != std::process::id() && !Path::new("/proc").join(pid.to_string()).exists()
+}
+
+#[cfg(not(target_os = "linux"))]
+fn owner_known_dead(_pid: u32) -> bool {
+    false
+}
+
+/// The smallest epoch pinned by any live pin file for the store indexed
+/// by `index_path`, or `None` when no live pin exists — the on-disk
+/// half of the writer's reuse gate. Provably-dead owners' pins are
+/// deleted in passing; unreadable or unparseable files count as epoch 0
+/// (maximally conservative) because nothing in them says what they
+/// protect.
+///
+/// # Errors
+/// Failure listing an existing pin directory. (A missing directory is
+/// simply "no pins".)
+pub fn scan_min(index_path: &Path) -> io::Result<Option<u64>> {
+    let dir = pins_dir(index_path);
+    let entries = match fs::read_dir(&dir) {
+        Ok(it) => it,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e),
+    };
+    let mut min: Option<u64> = None;
+    for entry in entries {
+        let Ok(entry) = entry else { continue };
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("pin") {
+            continue;
+        }
+        let mut body = Vec::new();
+        match fs::File::open(&path).and_then(|mut f| f.read_to_end(&mut body)) {
+            Ok(_) => {}
+            // The owner dropped its pin between listing and open.
+            Err(e) if e.kind() == io::ErrorKind::NotFound => continue,
+            Err(_) => {
+                min = Some(0);
+                continue;
+            }
+        }
+        match parse(&body) {
+            Some((_, pid)) if owner_known_dead(pid) => {
+                let _ = fs::remove_file(&path);
+            }
+            Some((epoch, _)) => min = Some(min.map_or(epoch, |m| m.min(epoch))),
+            None => min = Some(0),
+        }
+    }
+    Ok(min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_index_path(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("grouper_pins_test").join(name);
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir.join("data.pstore")
+    }
+
+    #[test]
+    fn pin_lifecycle_and_minimum() {
+        let index = test_index_path("lifecycle");
+        assert_eq!(scan_min(&index).unwrap(), None, "no pins yet");
+        let p7 = create(&index, 7).unwrap().expect("real fs pins");
+        let p3 = create(&index, 3).unwrap().expect("real fs pins");
+        assert_eq!(scan_min(&index).unwrap(), Some(3));
+        drop(p3);
+        assert_eq!(scan_min(&index).unwrap(), Some(7));
+        drop(p7);
+        assert_eq!(scan_min(&index).unwrap(), None, "all pins dropped");
+        assert!(!pins_dir(&index).exists(), "last pin removes the directory");
+    }
+
+    #[test]
+    fn unparseable_pin_is_maximally_conservative() {
+        let index = test_index_path("garbage");
+        let _live = create(&index, 9).unwrap().expect("real fs pins");
+        fs::write(pins_dir(&index).join("pin-0-0.pin"), b"not a pin").unwrap();
+        assert_eq!(
+            scan_min(&index).unwrap(),
+            Some(0),
+            "garbage must block reclamation, not allow it"
+        );
+    }
+
+    #[test]
+    fn non_pin_files_are_ignored() {
+        let index = test_index_path("ignored");
+        let _live = create(&index, 5).unwrap().expect("real fs pins");
+        fs::write(pins_dir(&index).join("pin-1-1.tmp"), b"half-written").unwrap();
+        assert_eq!(scan_min(&index).unwrap(), Some(5), "only *.pin files count");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn dead_owner_pins_are_cleaned() {
+        let index = test_index_path("dead_owner");
+        // Forge a pin whose recorded owner cannot exist (pids are
+        // bounded well below u32::MAX on Linux).
+        let dir = pins_dir(&index);
+        fs::create_dir_all(&dir).unwrap();
+        let mut body = Vec::new();
+        body.extend_from_slice(MAGIC);
+        body.extend_from_slice(&2u64.to_le_bytes());
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        let crc = crc32c(&body);
+        body.extend_from_slice(&crc.to_le_bytes());
+        let dead = dir.join("pin-4294967295-0.pin");
+        fs::write(&dead, &body).unwrap();
+        assert_eq!(scan_min(&index).unwrap(), None, "dead owner's pin is discounted");
+        assert!(!dead.exists(), "and deleted in passing");
+    }
+
+    #[test]
+    fn own_pins_count_as_live() {
+        let index = test_index_path("own_live");
+        let _pin = create(&index, 4).unwrap().expect("real fs pins");
+        // The scanning process's own pid is trivially alive, so its
+        // pins survive the liveness check.
+        assert_eq!(scan_min(&index).unwrap(), Some(4));
+    }
+}

@@ -46,8 +46,10 @@
 //! [`min_pinned_epoch`] as its reuse gate: a page freed at `F` is
 //! rewritten or truncated only when every pinned epoch is `>= F`, so a
 //! pinned snapshot can never observe a page it can reach changing under
-//! it. (Like the engine's single-live-writer contract, the registry is
-//! per-process: cross-process readers need external coordination.)
+//! it. The registry here is per-process; readers in **other** processes
+//! are covered by the on-disk pin layer ([`super::pins`]) — real-fs
+//! readers hold a pin file alongside this registry entry, and the
+//! writer's gate takes the minimum over both.
 //! One consequence for cache soundness: a `SharedPager`'s cache is only
 //! guaranteed fresh for snapshots whose epoch is pinned for the cache's
 //! whole lifetime — which is exactly how `PagedReader` uses it (one

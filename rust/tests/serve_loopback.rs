@@ -1,0 +1,390 @@
+//! End-to-end loopback tests of the serving layer (`grouper serve`):
+//! a [`StoreServer`] on 127.0.0.1 with real [`RemoteClientSource`]
+//! clients over TCP.
+//!
+//! Covers the subsystem's three contracts:
+//!
+//! * **bit-identity** — a cohort fetched over the wire is byte-for-byte
+//!   the cohort fetched from the local reader, for any shard count and
+//!   number of concurrent connections;
+//! * **snapshot isolation** — a connection's replies are pinned to the
+//!   checkpoint epochs it connected at, stable while the single live
+//!   writer appends, checkpoints and compacts; fresh connections see
+//!   the new checkpoints;
+//! * **hostile input** — malformed and oversized frames get typed error
+//!   replies (never a crash), and the server keeps serving the next
+//!   connection; a dead server address fails the client after bounded
+//!   backoff;
+//! * **admission control** — a connection over
+//!   [`ServeOptions::max_connections`] gets an eager typed rejection
+//!   instead of queueing, and its slot is readmitted once an admitted
+//!   trainer hangs up.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
+use grouper::fed::trainer::{fetch_cohort, fetch_cohort_sharded, CohortFetchSpec};
+use grouper::fed::ClientSource;
+use grouper::formats::{PagedStore, ShardedPagedReader};
+use grouper::pipeline::{
+    run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
+};
+use grouper::records::Example;
+use grouper::serve::proto::{
+    self, read_frame, write_frame, Request, Response, PROTO_VERSION,
+};
+use grouper::serve::{RemoteClientSource, RemoteOptions, ServeOptions, StoreServer};
+use grouper::store::vfs::{MemVfs, Vfs};
+use grouper::tokenizer::{VocabBuilder, WordPiece};
+use grouper::util::threadpool::ThreadPool;
+
+fn materialize_paged(dir: &Path, shards: usize) -> (SyntheticTextDataset, WordPiece) {
+    let _ = std::fs::remove_dir_all(dir);
+    let mut spec = DatasetSpec::fedccnews_mini(24, 77);
+    spec.max_group_words = 800;
+    let ds = SyntheticTextDataset::new(spec);
+    run_partition_paged(
+        &ds,
+        &FeatureKey::new("domain"),
+        dir,
+        "train",
+        &PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() },
+        &PagedPartitionOptions { shards, ..Default::default() },
+    )
+    .unwrap();
+    let mut vb = VocabBuilder::new();
+    for text in ds.stream_all_text() {
+        vb.feed(&text);
+    }
+    let wp = vb.build(64);
+    (ds, wp)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(name)
+}
+
+/// Satellite 3 (first half): a cohort fetched through the server is
+/// bit-identical to the local sharded fetch — S ∈ {1, 4}, serial and
+/// parallel batching, and several concurrent client connections.
+#[test]
+fn remote_cohort_fetch_is_bit_identical_to_local() {
+    for shards in [1usize, 4] {
+        let dir = tmp(&format!("grouper_serve_bitident_s{shards}"));
+        let (_, wp) = materialize_paged(&dir, shards);
+        let tokenizer = Arc::new(wp);
+        let spec =
+            CohortFetchSpec { tau: 3, batch_size: 4, tokens_per_example: 9, pad_id: 0 };
+
+        let local = Arc::new(ShardedPagedReader::open(&dir, "train", 16).unwrap());
+        let keys: Vec<Vec<u8>> = local.keys().to_vec();
+        assert_eq!(keys.len(), 24);
+        let expected = fetch_cohort_sharded(&local, &keys, &tokenizer, spec, None).unwrap();
+
+        let server =
+            StoreServer::bind(&dir, "train", "127.0.0.1:0", ServeOptions::default()).unwrap();
+        let handle = server.spawn().unwrap();
+        let addr = handle.addr().to_string();
+
+        let remote: Arc<dyn ClientSource> =
+            Arc::new(RemoteClientSource::connect(&addr).unwrap());
+        assert!(remote.batched());
+        assert_eq!(remote.group_keys(), keys, "served key order must be canonical");
+        assert_eq!(remote.num_groups(), 24);
+        assert_eq!(remote.num_examples(), local.num_examples());
+        assert!(remote.streamed_group(b"no-such-group").unwrap().is_none());
+
+        // Serial and parallel tokenize/batch over one wire fetch.
+        let serial = fetch_cohort(&remote, &keys, &tokenizer, spec, None).unwrap();
+        assert_eq!(serial, expected, "remote cohort differs from local (S={shards})");
+        let pool = ThreadPool::new(4);
+        let parallel = fetch_cohort(&remote, &keys, &tokenizer, spec, Some(&pool)).unwrap();
+        assert_eq!(parallel, expected, "read_workers must not change the cohort");
+
+        // A missing cohort key fails loudly, and the connection still
+        // answers the next fetch.
+        assert!(fetch_cohort(&remote, &[b"nope".to_vec()], &tokenizer, spec, None).is_err());
+        let again = fetch_cohort(&remote, &keys[..6].to_vec(), &tokenizer, spec, None).unwrap();
+        assert_eq!(again, expected[..6], "connection must survive a missing-key fetch");
+
+        // N trainer processes, one materialization: concurrent
+        // connections each fetch the full cohort and agree bitwise.
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..3)
+                .map(|_| {
+                    let addr = addr.clone();
+                    let keys = keys.clone();
+                    let tokenizer = Arc::clone(&tokenizer);
+                    s.spawn(move || {
+                        let src: Arc<dyn ClientSource> =
+                            Arc::new(RemoteClientSource::connect(&addr).unwrap());
+                        fetch_cohort(&src, &keys, &tokenizer, spec, None).unwrap()
+                    })
+                })
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), expected);
+            }
+        });
+        drop(handle); // stops the server; next loop iteration binds afresh
+    }
+}
+
+fn ex(text: &str) -> Example {
+    Example::text(text)
+}
+
+/// Fetch every key's raw framed payload over `conn`.
+fn framed_payloads(conn: &RemoteClientSource, keys: &[Vec<u8>]) -> Vec<Vec<u8>> {
+    keys.iter()
+        .map(|k| {
+            let g = conn.streamed_group(k).unwrap().unwrap();
+            g.framed_bytes().unwrap().to_vec()
+        })
+        .collect()
+}
+
+/// Satellite 3 (second half): epoch-pinned snapshot isolation. A
+/// connection opened at epoch E keeps serving E's bytes while the live
+/// writer appends, commits, checkpoints and compacts; fresh connections
+/// pick up each new checkpoint.
+#[test]
+fn connections_are_snapshot_isolated_from_live_writer() {
+    let dir = tmp("grouper_serve_isolation");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut store = PagedStore::create(&dir, "data", 32).unwrap();
+    for i in 0..8 {
+        let key = format!("group-{i:02}");
+        for j in 0..5 {
+            store.append(key.as_bytes(), &ex(&format!("doc {j} of {key}"))).unwrap();
+        }
+    }
+    store.checkpoint().unwrap();
+
+    // The writer stays live for the whole test — the server only ever
+    // opens zero-write snapshots next to it.
+    let server =
+        StoreServer::bind(&dir, "data", "127.0.0.1:0", ServeOptions::default()).unwrap();
+    let handle = server.spawn().unwrap();
+    let addr = handle.addr().to_string();
+
+    let pinned = RemoteClientSource::connect(&addr).unwrap();
+    let pinned_epochs = pinned.epochs().to_vec();
+    assert_eq!(pinned_epochs.len(), 1);
+    let keys = ClientSource::group_keys(&pinned);
+    assert_eq!(keys.len(), 8);
+    let baseline = framed_payloads(&pinned, &keys);
+
+    // Committed-but-uncheckpointed appends are invisible to everyone.
+    for i in 0..8 {
+        store.append(format!("group-{i:02}").as_bytes(), &ex("late arrival")).unwrap();
+    }
+    store.append(b"group-new", &ex("a brand new group")).unwrap();
+    store.commit().unwrap();
+    let mid = RemoteClientSource::connect(&addr).unwrap();
+    assert_eq!(ClientSource::num_groups(&mid), 8, "uncheckpointed data must be invisible");
+    assert_eq!(framed_payloads(&mid, &keys), baseline);
+
+    // Checkpoint: a FRESH connection sees the new group and the grown
+    // payloads; the pinned connection still serves its epoch's bytes.
+    store.checkpoint().unwrap();
+    let fresh = RemoteClientSource::connect(&addr).unwrap();
+    assert_eq!(ClientSource::num_groups(&fresh), 9);
+    assert!(fresh.epochs()[0] > pinned_epochs[0]);
+    assert_ne!(framed_payloads(&fresh, &keys), baseline, "new epoch must show appends");
+    assert_eq!(framed_payloads(&pinned, &keys), baseline, "pinned epoch drifted");
+    assert_eq!(pinned.epochs(), &pinned_epochs[..]);
+    assert!(
+        ClientSource::streamed_group(&pinned, b"group-new").unwrap().is_none(),
+        "pinned snapshot must not see groups from later epochs"
+    );
+
+    // Compaction migrates and reclaims index pages; the pin must keep
+    // every page the old snapshot needs readable.
+    store.compact().unwrap();
+    assert_eq!(
+        framed_payloads(&pinned, &keys),
+        baseline,
+        "compaction invalidated a pinned remote snapshot"
+    );
+    let post = RemoteClientSource::connect(&addr).unwrap();
+    assert_eq!(ClientSource::num_groups(&post), 9);
+    let stats = post.stats().unwrap();
+    assert_eq!(stats.len(), 1);
+    assert_eq!(stats[0].num_groups, 9);
+}
+
+fn roundtrip(stream: &mut TcpStream, req: &Request) -> Response {
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &proto::encode_request(req)).unwrap();
+    stream.write_all(&buf).unwrap();
+    let payload = read_frame(stream).unwrap().expect("server closed early");
+    proto::decode_response(&payload).unwrap()
+}
+
+/// Satellite 1: oversized and malformed frames get typed error replies,
+/// and the server survives to serve the next (well-formed) connection.
+/// Runs disk-free over a `MemVfs` store via `bind_with`.
+#[test]
+fn hostile_frames_get_typed_errors_and_server_survives() {
+    let vfs: Arc<dyn Vfs> = Arc::new(MemVfs::new());
+    let dir = PathBuf::from("/mem");
+    let mut store = PagedStore::create_with(vfs.as_ref(), &dir, "data", 16).unwrap();
+    store.append(b"g", &ex("hello")).unwrap();
+    store.checkpoint().unwrap();
+    drop(store);
+
+    let server = StoreServer::bind_with(
+        Arc::clone(&vfs),
+        &dir,
+        "data",
+        "127.0.0.1:0",
+        ServeOptions::default(),
+    )
+    .unwrap();
+    let handle = server.spawn().unwrap();
+    let addr = handle.addr();
+
+    // Oversized frame: an absurd length prefix is rejected before any
+    // allocation, with a typed error frame.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    s.write_all(&0u32.to_le_bytes()).unwrap();
+    let payload = read_frame(&mut s).unwrap().expect("expected an error frame");
+    let Response::Error { message } = proto::decode_response(&payload).unwrap() else {
+        panic!("expected a typed error for an oversized frame");
+    };
+    assert!(message.contains("bad frame"), "{message}");
+
+    // Corrupt frame (checksum mismatch).
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &proto::encode_request(&Request::Hello { version: PROTO_VERSION }))
+        .unwrap();
+    let last = buf.len() - 1;
+    buf[last] ^= 0x20;
+    s.write_all(&buf).unwrap();
+    let payload = read_frame(&mut s).unwrap().expect("expected an error frame");
+    assert!(matches!(proto::decode_response(&payload).unwrap(), Response::Error { .. }));
+
+    // Well-framed garbage payload (unknown opcode).
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &[0xEE, 1, 2, 3]).unwrap();
+    s.write_all(&buf).unwrap();
+    let payload = read_frame(&mut s).unwrap().expect("expected an error frame");
+    assert!(matches!(proto::decode_response(&payload).unwrap(), Response::Error { .. }));
+
+    // Skipping the handshake is refused.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let Response::Error { message } = roundtrip(&mut s, &Request::Keys) else {
+        panic!("expected a handshake-order error");
+    };
+    assert!(message.contains("Hello"), "{message}");
+
+    // A version mismatch is refused with a typed error.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let Response::Error { message } = roundtrip(&mut s, &Request::Hello { version: 999 }) else {
+        panic!("expected a version error");
+    };
+    assert!(message.contains("version"), "{message}");
+
+    // After all that abuse, a well-behaved client still gets served.
+    let good = RemoteClientSource::connect(&addr.to_string()).unwrap();
+    assert_eq!(ClientSource::num_groups(&good), 1);
+    let g = ClientSource::streamed_group(&good, b"g").unwrap().unwrap();
+    assert_eq!(g.num_examples, 1);
+}
+
+/// Admission control: with `max_connections: 1` the second trainer gets
+/// a typed "at capacity" error frame pushed eagerly (before it sends
+/// anything) instead of queueing behind the first; once the admitted
+/// trainer hangs up, its handler frees the slot and a new connection is
+/// admitted.
+#[test]
+fn over_capacity_connections_get_typed_rejection_then_slot_frees() {
+    let vfs: Arc<dyn Vfs> = Arc::new(MemVfs::new());
+    let dir = PathBuf::from("/mem");
+    let mut store = PagedStore::create_with(vfs.as_ref(), &dir, "data", 16).unwrap();
+    store.append(b"g", &ex("hello")).unwrap();
+    store.checkpoint().unwrap();
+    drop(store);
+
+    let server = StoreServer::bind_with(
+        Arc::clone(&vfs),
+        &dir,
+        "data",
+        "127.0.0.1:0",
+        ServeOptions { max_connections: 1, ..Default::default() },
+    )
+    .unwrap();
+    let handle = server.spawn().unwrap();
+    let addr = handle.addr().to_string();
+
+    // Fill the only slot; the completed handshake proves the server
+    // accepted (and counted) this connection before the next arrives.
+    let first = RemoteClientSource::connect(&addr).unwrap();
+
+    // Over-cap peer: the rejection frame arrives without us writing a
+    // byte, so a turned-away trainer fails fast, not on a read timeout.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let payload = read_frame(&mut s).unwrap().expect("expected a capacity error frame");
+    let Response::Error { message } = proto::decode_response(&payload).unwrap() else {
+        panic!("expected a typed capacity rejection");
+    };
+    assert!(message.contains("capacity"), "{message}");
+
+    // Hang up the admitted trainer. Its handler thread notices the EOF
+    // and frees the slot asynchronously, so poll until a fresh connect
+    // is admitted (each rejected attempt errors immediately).
+    drop(first);
+    let opts = RemoteOptions {
+        connect_timeout: Duration::from_secs(5),
+        read_timeout: Duration::from_secs(10),
+        connect_retries: 0,
+        backoff_base: Duration::from_millis(1),
+    };
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let readmitted = loop {
+        match RemoteClientSource::connect_with(&addr, &opts) {
+            Ok(c) => break c,
+            Err(e) => {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "slot never freed after the first trainer hung up: {e:#}"
+                );
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    };
+    assert_eq!(ClientSource::num_groups(&readmitted), 1);
+}
+
+/// Satellite 1 (client side): connecting to a dead address fails after
+/// the configured bounded retries instead of hanging.
+#[test]
+fn connect_to_dead_port_errors_after_bounded_backoff() {
+    // Bind-then-drop yields a port with (very likely) no listener.
+    let dead = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = dead.local_addr().unwrap().to_string();
+    drop(dead);
+    let opts = RemoteOptions {
+        connect_timeout: Duration::from_millis(250),
+        read_timeout: Duration::from_secs(1),
+        connect_retries: 2,
+        backoff_base: Duration::from_millis(5),
+    };
+    let err = RemoteClientSource::connect_with(&addr, &opts).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("3 attempts"), "expected bounded-retry error, got: {msg}");
+}
