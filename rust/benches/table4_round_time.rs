@@ -16,10 +16,12 @@ use grouper::util::table::Table;
 use grouper::util::timer::MeanStd;
 
 fn main() {
-    // Tables 4c/4d need no model artifacts (they time only the data
-    // phase), so they run even where PJRT is absent.
+    // Tables 4c/4d/4e need no model artifacts (4c/4d time only the data
+    // phase; 4e trains on the mock runtime), so they run even where
+    // PJRT is absent.
     table4c_sharded_cohort_fetch();
     table4d_remote_cohort_fetch();
+    table4e_live_ingest();
 
     let model = std::env::var("GROUPER_BENCH_MODEL").unwrap_or_else(|_| "tiny".into());
     if !common::have_artifacts(&model) {
@@ -274,4 +276,118 @@ fn table4d_remote_cohort_fetch() {
     t.print();
     t.write_csv("results/table4d_remote_fetch.csv").unwrap();
     common::write_bench_json("table4_remote_fetch", &metrics);
+}
+
+/// Table 4e: round-time degradation under live ingestion — federated
+/// rounds (mock runtime, so no model artifacts needed) over a paged
+/// store that a background `IngestRunner` keeps appending into, with
+/// checkpoint + compaction churn, while the trainer re-pins the
+/// freshest committed snapshot between rounds (`RefreshingSource`).
+/// Sweeps ingest rate {0, 1x, 4x} with prefetch off/on: the claim is
+/// that round time degrades gently with ingest rate and prefetch claws
+/// the data-wait back by overlapping it with compute.
+fn table4e_live_ingest() {
+    use grouper::corpus::SyntheticTextDataset;
+    use grouper::fed::source::{ClientSource, RefreshingSource};
+    use grouper::fed::{train_with_source, IngestConfig, IngestRunner, IngestTarget};
+    use grouper::formats::{PagedReader, PagedStore};
+    use grouper::pipeline::FeatureKey;
+    use grouper::runtime::MockRuntime;
+    use grouper::tokenizer::VocabBuilder;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let mut spec = DatasetSpec::fedccnews_mini(common::scaled(200).max(24), 42);
+    spec.max_group_words = 2_000;
+    let ds = SyntheticTextDataset::new(spec);
+    let mock = MockRuntime::standard();
+    let mut vb = VocabBuilder::new();
+    for t in ds.stream_all_text() {
+        vb.feed(&t);
+    }
+    let wp = vb.build(64);
+    let rounds = common::scaled(40).max(6);
+
+    let mut t = Table::new(
+        "Table 4e — round time vs live ingest rate (mock runtime, refreshing snapshots)",
+        &["Ingest", "Prefetch", "Round (s)", "Data (s)", "Refreshes"],
+    );
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    for rate_mult in [0usize, 1, 4] {
+        for prefetch in [false, true] {
+            // Fresh store per sweep point: ingestion mutates it, and a
+            // point must never inherit the previous point's appends.
+            let label = if prefetch { "on" } else { "off" };
+            let dir = common::bench_dir("table4e").join(format!("r{rate_mult}_p{label}"));
+            let _ = std::fs::remove_dir_all(&dir);
+            let store =
+                PagedStore::build(&ds, &FeatureKey::new(ds.spec.key_feature), &dir, "live", 64)
+                    .unwrap();
+
+            // The builder's store handle *is* the single live writer;
+            // hand it straight to the ingest thread (~20 steps/s). At
+            // rate 0 the closure never runs and the store just closes.
+            let ingest = (rate_mult > 0).then(move || {
+                let cfg = IngestConfig {
+                    seed: 7,
+                    examples_per_step: 4 * rate_mult,
+                    new_group_every: 16,
+                    checkpoint_every: 2,
+                    compact_every: 2,
+                };
+                IngestRunner::new(IngestTarget::Single(store), cfg)
+                    .unwrap()
+                    .spawn(Duration::from_millis(50))
+            });
+
+            let dir2 = dir.clone();
+            let refresher = Arc::new(
+                RefreshingSource::new(Box::new(move || {
+                    Ok(Arc::new(PagedReader::open_snapshot(&dir2, "live", 64)?)
+                        as Arc<dyn ClientSource>)
+                }))
+                .unwrap(),
+            );
+            let src: Arc<dyn ClientSource> = refresher.clone();
+            let fed = FedConfig {
+                algorithm: FedAlgorithm::FedAvg,
+                rounds,
+                cohort_size: 8,
+                tau: 4,
+                client_lr: 0.1,
+                server_lr: 1e-3,
+                schedule: ScheduleKind::Constant,
+                shuffle_buffer: 16,
+                seed: 1,
+            };
+            let tc = TrainerConfig::new(fed)
+                .with_read_workers(2)
+                .with_prefetch(prefetch)
+                .with_refresh_source(true);
+            let out = train_with_source(&mock, &src, &wp, &tc).unwrap();
+            if let Some(handle) = ingest {
+                handle.stop().unwrap();
+            }
+
+            let round_secs: Vec<f64> =
+                out.rounds.iter().map(|r| r.data_secs + r.train_secs).collect();
+            let data_secs: Vec<f64> = out.rounds.iter().map(|r| r.data_secs).collect();
+            let rs = MeanStd::of(&round_secs);
+            let dsx = MeanStd::of(&data_secs);
+            t.row(vec![
+                format!("{rate_mult}x"),
+                label.to_string(),
+                format!("{rs}"),
+                format!("{dsx}"),
+                format!("{}", refresher.refreshes()),
+            ]);
+            metrics.push((
+                format!("fedccnews.live_ingest.rate{rate_mult}x_prefetch_{label}_s"),
+                rs.mean,
+            ));
+        }
+    }
+    t.print();
+    t.write_csv("results/table4e_live_ingest.csv").unwrap();
+    common::write_bench_json("table4_live_ingest", &metrics);
 }

@@ -1,0 +1,375 @@
+//! Live ingestion: a seeded writer that keeps appending client examples
+//! — for existing groups and newly arriving ones — into a live
+//! [`PagedStore`] or [`PagedShardSet`] while a trainer samples cohorts
+//! from epoch-pinned snapshots next door.
+//!
+//! This is the workload half of the live-ingestion story (the reader
+//! half is [`super::source::RefreshingSource`]): the storage engine
+//! already guarantees that snapshot readers are bit-stable while the
+//! single live writer appends, checkpoints and compacts — the
+//! [`IngestRunner`] exists to *drive* that churn, deterministically, so
+//! tests can soak it and benches can measure round-time degradation
+//! versus ingest rate (Table 4e).
+//!
+//! Two drive modes:
+//!
+//! * **stepped** — [`IngestRunner::step`] appends one batch, commits,
+//!   and runs the checkpoint/compaction schedule; fully deterministic
+//!   given [`IngestConfig::seed`], which is what the churn soak test
+//!   interleaves with training rounds;
+//! * **threaded** — [`IngestRunner::spawn`] steps on a background
+//!   thread at a fixed interval until stopped, which is what `grouper
+//!   train --ingest-rate` and the Table 4e bench use.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::formats::paged::PagedStore;
+use crate::formats::paged_sharded::PagedShardSet;
+use crate::records::Example;
+use crate::util::rng::Rng;
+
+/// The live store an [`IngestRunner`] appends into — the runner owns
+/// it, upholding the engine's single-live-writer rule.
+pub enum IngestTarget {
+    /// A single paged store (`<prefix>.pstore`).
+    Single(PagedStore),
+    /// A hash-sharded set (`<prefix>.pset`).
+    Sharded(PagedShardSet),
+}
+
+impl IngestTarget {
+    fn keys(&self) -> Vec<Vec<u8>> {
+        match self {
+            IngestTarget::Single(s) => s.keys(),
+            IngestTarget::Sharded(s) => s.keys(),
+        }
+    }
+
+    fn append(&mut self, group: &[u8], ex: &Example) -> Result<()> {
+        match self {
+            IngestTarget::Single(s) => s.append(group, ex),
+            IngestTarget::Sharded(s) => s.append(group, ex),
+        }
+    }
+
+    fn commit(&mut self) -> Result<()> {
+        match self {
+            IngestTarget::Single(s) => s.commit(),
+            IngestTarget::Sharded(s) => s.commit(),
+        }
+    }
+
+    fn checkpoint(&mut self) -> Result<()> {
+        match self {
+            IngestTarget::Single(s) => s.checkpoint(),
+            IngestTarget::Sharded(s) => s.checkpoint(),
+        }
+    }
+
+    fn compact(&mut self) -> Result<()> {
+        // Reports are dropped: live-writer compaction is churn here,
+        // not a space-accounting operation. With reader pins held it
+        // may legitimately reclaim nothing.
+        match self {
+            IngestTarget::Single(s) => s.compact().map(|_| ()),
+            IngestTarget::Sharded(s) => s.compact().map(|_| ()),
+        }
+    }
+}
+
+/// Shape of the seeded ingest stream and its checkpoint/compaction
+/// churn schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct IngestConfig {
+    /// Seed for group choice and document text — the whole stream is a
+    /// pure function of it.
+    pub seed: u64,
+    /// Examples appended (then committed) per [`IngestRunner::step`].
+    pub examples_per_step: usize,
+    /// Every Nth appended example mints a brand-new group (`ingest-K`)
+    /// instead of extending an existing one; 0 = existing groups only.
+    pub new_group_every: usize,
+    /// Checkpoint after every N steps (0 = never) — this is what makes
+    /// appends visible to fresh snapshots.
+    pub checkpoint_every: usize,
+    /// Compact after every N checkpoints (0 = never). With snapshot
+    /// pins held the engine's gate may make this a no-op; the point is
+    /// exercising the gate under churn, not reclaiming space.
+    pub compact_every: usize,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig {
+            seed: 7,
+            examples_per_step: 8,
+            new_group_every: 16,
+            checkpoint_every: 4,
+            compact_every: 4,
+        }
+    }
+}
+
+/// What an ingest run did — counters only, all monotone.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IngestStats {
+    /// Completed [`IngestRunner::step`] calls.
+    pub steps: u64,
+    /// Examples appended across all steps.
+    pub appended: u64,
+    /// Brand-new groups minted.
+    pub new_groups: u64,
+    /// Checkpoints published.
+    pub checkpoints: u64,
+    /// Compaction passes attempted.
+    pub compactions: u64,
+}
+
+/// A seeded live writer: appends synthetic documents into existing and
+/// newly minted groups with periodic checkpoint + compaction churn.
+pub struct IngestRunner {
+    target: IngestTarget,
+    cfg: IngestConfig,
+    rng: Rng,
+    groups: Vec<Vec<u8>>,
+    stats: IngestStats,
+    seq: u64,
+}
+
+impl IngestRunner {
+    /// Wrap a live writer. The target's current key set seeds the
+    /// population that appends route into.
+    ///
+    /// # Errors
+    /// An empty target with `new_group_every == 0` (nothing to append
+    /// to, and no way to mint), or a zero `examples_per_step`.
+    pub fn new(target: IngestTarget, cfg: IngestConfig) -> Result<IngestRunner> {
+        if cfg.examples_per_step == 0 {
+            bail!("ingest examples_per_step must be at least 1");
+        }
+        let groups = target.keys();
+        if groups.is_empty() && cfg.new_group_every == 0 {
+            bail!("ingest target holds no groups and new_group_every = 0 never mints one");
+        }
+        Ok(IngestRunner {
+            target,
+            rng: Rng::new(cfg.seed),
+            cfg,
+            groups,
+            stats: IngestStats::default(),
+            seq: 0,
+        })
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> IngestStats {
+        self.stats
+    }
+
+    /// Append one batch ([`IngestConfig::examples_per_step`] examples),
+    /// commit it, and run the checkpoint/compaction schedule.
+    ///
+    /// # Errors
+    /// Any append/commit/checkpoint/compact failure of the underlying
+    /// store (which poisons the writer like any paged-store failure).
+    pub fn step(&mut self) -> Result<()> {
+        for _ in 0..self.cfg.examples_per_step {
+            self.seq += 1;
+            let mint = self.groups.is_empty()
+                || (self.cfg.new_group_every > 0
+                    && self.seq % self.cfg.new_group_every as u64 == 0);
+            let key = if mint {
+                let key = format!("ingest-{:06}", self.stats.new_groups).into_bytes();
+                self.stats.new_groups += 1;
+                self.groups.push(key.clone());
+                key
+            } else {
+                self.groups[self.rng.gen_range_usize(self.groups.len())].clone()
+            };
+            let text = format!(
+                "live doc {} for {} tok{}",
+                self.seq,
+                String::from_utf8_lossy(&key),
+                self.rng.gen_range(97)
+            );
+            self.target.append(&key, &Example::text(&text)).context("ingest append")?;
+            self.stats.appended += 1;
+        }
+        self.target.commit().context("ingest commit")?;
+        self.stats.steps += 1;
+        if self.cfg.checkpoint_every > 0 && self.stats.steps % self.cfg.checkpoint_every as u64 == 0
+        {
+            self.target.checkpoint().context("ingest checkpoint")?;
+            self.stats.checkpoints += 1;
+            if self.cfg.compact_every > 0
+                && self.stats.checkpoints % self.cfg.compact_every as u64 == 0
+            {
+                self.target.compact().context("ingest compaction")?;
+                self.stats.compactions += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run `n` steps back to back.
+    ///
+    /// # Errors
+    /// Same conditions as [`IngestRunner::step`].
+    pub fn run_steps(&mut self, n: usize) -> Result<()> {
+        for _ in 0..n {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Move the runner onto a background thread that steps every
+    /// `interval` until [`IngestHandle::stop`] (or drop). A final
+    /// checkpoint on shutdown publishes whatever the last steps
+    /// appended, so a quiescing store ends fully visible.
+    pub fn spawn(mut self, interval: Duration) -> IngestHandle {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("grouper-ingest".into())
+            .spawn(move || -> Result<IngestStats> {
+                while !stop_flag.load(Ordering::Relaxed) {
+                    self.step()?;
+                    std::thread::sleep(interval);
+                }
+                if self.cfg.checkpoint_every > 0 {
+                    self.target.checkpoint().context("final ingest checkpoint")?;
+                    self.stats.checkpoints += 1;
+                }
+                Ok(self.stats)
+            })
+            .expect("spawn ingest thread");
+        IngestHandle { stop, thread: Some(thread) }
+    }
+}
+
+/// Owner handle for a spawned [`IngestRunner`] thread; stops (and
+/// joins) the writer on [`IngestHandle::stop`] or drop.
+pub struct IngestHandle {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<Result<IngestStats>>>,
+}
+
+impl IngestHandle {
+    /// Signal the writer to stop, wait for its final checkpoint, and
+    /// return the run's counters.
+    ///
+    /// # Errors
+    /// Whatever the ingest thread failed with, or its panic rendered
+    /// as an error.
+    pub fn stop(mut self) -> Result<IngestStats> {
+        self.stop.store(true, Ordering::Relaxed);
+        let thread = self.thread.take().expect("stop() runs once");
+        match thread.join() {
+            Ok(result) => result,
+            Err(p) => Err(anyhow!(
+                "ingest thread panicked: {}",
+                p.downcast_ref::<String>().cloned().unwrap_or_else(|| p
+                    .downcast_ref::<&str>()
+                    .map(|s| (*s).to_string())
+                    .unwrap_or_else(|| "non-string panic payload".into()))
+            )),
+        }
+    }
+}
+
+impl Drop for IngestHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(thread) = self.thread.take() {
+            let _ = thread.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::paged::PagedReader;
+    use crate::store::vfs::{MemVfs, Vfs};
+    use std::path::PathBuf;
+
+    fn mem_store(vfs: &dyn Vfs, groups: usize) -> PagedStore {
+        let dir = PathBuf::from("/mem");
+        let mut store = PagedStore::create_with(vfs, &dir, "live", 32).unwrap();
+        for g in 0..groups {
+            let key = format!("seed-{g:02}");
+            for d in 0..3 {
+                store.append(key.as_bytes(), &Example::text(&format!("doc {d} of {key}"))).unwrap();
+            }
+        }
+        store.commit().unwrap();
+        store.checkpoint().unwrap();
+        store
+    }
+
+    #[test]
+    fn stepped_ingest_is_deterministic_and_mints_groups() {
+        let run = |steps: usize| -> (IngestStats, Vec<Vec<u8>>, u64) {
+            let vfs: Arc<dyn Vfs> = Arc::new(MemVfs::new());
+            let store = mem_store(vfs.as_ref(), 6);
+            let cfg = IngestConfig { seed: 3, ..Default::default() };
+            let mut runner = IngestRunner::new(IngestTarget::Single(store), cfg).unwrap();
+            runner.run_steps(steps).unwrap();
+            let stats = runner.stats();
+            drop(runner);
+            let r =
+                PagedReader::open_snapshot_with(vfs.as_ref(), &PathBuf::from("/mem"), "live", 32)
+                    .unwrap();
+            (stats, r.keys().to_vec(), r.num_examples())
+        };
+        let (s1, k1, n1) = run(12);
+        let (s2, k2, n2) = run(12);
+        assert_eq!(s1.appended, s2.appended);
+        assert_eq!(k1, k2, "seeded ingest must materialize identical key sets");
+        assert_eq!(n1, n2);
+        assert_eq!(s1.steps, 12);
+        assert_eq!(s1.appended, 12 * 8);
+        assert!(s1.new_groups > 0, "new groups must arrive");
+        assert_eq!(s1.checkpoints, 3);
+        assert!(k1.iter().any(|k| k.starts_with(b"ingest-")));
+        // Only checkpointed appends are snapshot-visible: 2 full
+        // checkpoint cycles beyond the seed data are in, the last
+        // uncheckpointed steps are not.
+        assert!(n1 > 6 * 3, "ingested examples must be visible after checkpoints");
+    }
+
+    #[test]
+    fn empty_target_without_minting_is_refused() {
+        let vfs: Arc<dyn Vfs> = Arc::new(MemVfs::new());
+        let store = PagedStore::create_with(vfs.as_ref(), &PathBuf::from("/mem"), "e", 16).unwrap();
+        let cfg = IngestConfig { new_group_every: 0, ..Default::default() };
+        assert!(IngestRunner::new(IngestTarget::Single(store), cfg).is_err());
+        let vfs2: Arc<dyn Vfs> = Arc::new(MemVfs::new());
+        let store2 =
+            PagedStore::create_with(vfs2.as_ref(), &PathBuf::from("/mem"), "e", 16).unwrap();
+        let bad = IngestConfig { examples_per_step: 0, ..Default::default() };
+        assert!(IngestRunner::new(IngestTarget::Single(store2), bad).is_err());
+    }
+
+    #[test]
+    fn spawned_ingest_stops_cleanly_with_final_checkpoint() {
+        let vfs: Arc<dyn Vfs> = Arc::new(MemVfs::new());
+        let store = mem_store(vfs.as_ref(), 4);
+        let cfg = IngestConfig { seed: 9, checkpoint_every: 2, ..Default::default() };
+        let runner = IngestRunner::new(IngestTarget::Single(store), cfg).unwrap();
+        let handle = runner.spawn(Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(50));
+        let stats = handle.stop().unwrap();
+        assert!(stats.steps > 0, "the thread never stepped");
+        assert!(stats.checkpoints > 0);
+        // The final checkpoint makes every appended example visible.
+        let r = PagedReader::open_snapshot_with(vfs.as_ref(), &PathBuf::from("/mem"), "live", 32)
+            .unwrap();
+        assert_eq!(r.num_examples(), 4 * 3 + stats.appended);
+    }
+}

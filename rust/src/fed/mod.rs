@@ -15,10 +15,15 @@
 //! * [`personalize`] — pre-/post-personalization evaluation (Table 5,
 //!   Figures 5-7): fine-tune one epoch of client SGD, compare losses.
 //! * [`trainer`] — the round loop: cohort stream -> client work -> server
-//!   update, with per-round data-vs-compute timing (Table 4).
+//!   update, with per-round data-vs-compute timing (Table 4), optional
+//!   between-round snapshot refresh and depth-1 cohort prefetch.
+//! * [`ingest`] — the live-ingestion workload: a seeded writer that keeps
+//!   appending (and checkpointing/compacting) a paged store while the
+//!   trainer samples from refreshing snapshots (Table 4e).
 
 pub mod algorithms;
 pub mod client_data;
+pub mod ingest;
 pub mod personalize;
 pub mod schedules;
 pub mod server_opt;
@@ -30,7 +35,8 @@ pub use client_data::ClientBatches;
 pub use personalize::{personalization_eval, PersonalizationResult};
 pub use schedules::Schedule;
 pub use server_opt::{Adam, ServerOptimizer, Sgd};
-pub use source::ClientSource;
+pub use ingest::{IngestConfig, IngestHandle, IngestRunner, IngestStats, IngestTarget};
+pub use source::{ClientSource, RefreshingSource, SourceFactory};
 pub use trainer::{
     fetch_cohort, fetch_cohort_sharded, train, train_with_source, CohortFetchSpec, RoundMetrics,
     TrainOutput, TrainerConfig,

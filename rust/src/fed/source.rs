@@ -23,8 +23,19 @@
 //! bytes are the same canonical [`Example`](crate::records::Example)
 //! encodings in the same order), so swapping the backend never changes
 //! training results — only where the bytes come from.
+//!
+//! For **live ingestion** — training while a writer keeps appending —
+//! wrap any backend in a [`RefreshingSource`]: with
+//! `TrainerConfig::refresh_source` on, the trainer calls
+//! [`ClientSource::refresh`] at every round boundary (a no-op on plain
+//! backends), and the wrapper re-opens its snapshot so each round sees
+//! the freshest committed checkpoint while staying bit-stable *within*
+//! the round.
 
-use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{bail, Context, Result};
 
 use crate::formats::paged::PagedReader;
 use crate::formats::paged_sharded::ShardedPagedReader;
@@ -79,6 +90,30 @@ pub trait ClientSource: Send + Sync {
     fn fetch_groups(&self, keys: &[Vec<u8>]) -> Result<Vec<Option<StreamedGroup>>> {
         keys.iter().map(|k| self.streamed_group(k)).collect()
     }
+
+    /// Advance to the freshest committed state, when the backend
+    /// supports it. The trainer calls this at every round boundary when
+    /// `TrainerConfig::refresh_source` is on; the default is a no-op
+    /// returning `false` (a plain source's key universe cannot change
+    /// mid-run), so classic training paths are bit-for-bit unaffected.
+    /// [`RefreshingSource`] overrides it to
+    /// re-open its snapshot; `true` means the key universe may have
+    /// changed and the caller should re-read [`ClientSource::group_keys`].
+    ///
+    /// # Errors
+    /// A failed re-open/reconnect, or a refreshed snapshot whose
+    /// checkpoint epochs regressed.
+    fn refresh(&self) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Checkpoint epochs currently visible through this source, one per
+    /// shard — empty when the backend has no epoch notion (in-memory,
+    /// streaming). Refresh wrappers and soak tests use this to assert
+    /// freshness is monotone: epochs never decrease across refreshes.
+    fn source_epochs(&self) -> Vec<u64> {
+        Vec::new()
+    }
 }
 
 impl ClientSource for ShardedPagedReader {
@@ -106,6 +141,10 @@ impl ClientSource for ShardedPagedReader {
     fn streamed_group(&self, key: &[u8]) -> Result<Option<StreamedGroup>> {
         ShardedPagedReader::streamed_group(self, key)
     }
+
+    fn source_epochs(&self) -> Vec<u64> {
+        self.epochs()
+    }
 }
 
 impl ClientSource for PagedReader {
@@ -131,6 +170,10 @@ impl ClientSource for PagedReader {
 
     fn streamed_group(&self, key: &[u8]) -> Result<Option<StreamedGroup>> {
         PagedReader::streamed_group(self, key)
+    }
+
+    fn source_epochs(&self) -> Vec<u64> {
+        vec![self.epoch()]
     }
 }
 
@@ -224,6 +267,132 @@ impl ClientSource for PartitionedDataset {
     }
 }
 
+/// Opens (or re-opens) a [`ClientSource`] at the freshest committed
+/// state. Boxed so any backend can refresh the same way: paged and
+/// sharded backends re-open a pinned snapshot against the store
+/// directory, remote backends reconnect (the server pins a fresh
+/// snapshot per connection).
+pub type SourceFactory = Box<dyn Fn() -> Result<Arc<dyn ClientSource>> + Send + Sync>;
+
+/// A [`ClientSource`] wrapper that re-opens its backend at round
+/// boundaries — the trainer-side half of live ingestion.
+///
+/// The refresh contract:
+///
+/// * **within-round stability** — between two [`ClientSource::refresh`]
+///   calls every read goes through one held snapshot, so a round's
+///   cohort is bit-stable no matter what the live writer does;
+/// * **between-round freshness** — each `refresh` swaps in a snapshot
+///   of the newest *committed checkpoint*, so new groups and grown
+///   payloads become visible at the next round boundary;
+/// * **monotone epochs** — a refresh that would move any shard's
+///   checkpoint epoch backwards is refused with a typed error (a store
+///   only moves forward under its single live writer; regression means
+///   the factory opened the wrong store).
+///
+/// Dropping the previous snapshot on swap releases its epoch pin, so
+/// the writer's compaction gate only ever waits on the *current* round,
+/// never on history.
+pub struct RefreshingSource {
+    factory: SourceFactory,
+    inner: RwLock<Arc<dyn ClientSource>>,
+    last_epochs: Mutex<Vec<u64>>,
+    refreshes: AtomicU64,
+}
+
+impl RefreshingSource {
+    /// Open the initial snapshot through `factory` and wrap it.
+    ///
+    /// # Errors
+    /// Whatever the factory's first open fails with.
+    pub fn new(factory: SourceFactory) -> Result<RefreshingSource> {
+        let initial = factory().context("opening initial snapshot for refreshing source")?;
+        let epochs = initial.source_epochs();
+        Ok(RefreshingSource {
+            factory,
+            inner: RwLock::new(initial),
+            last_epochs: Mutex::new(epochs),
+            refreshes: AtomicU64::new(0),
+        })
+    }
+
+    /// How many refreshes have completed successfully.
+    pub fn refreshes(&self) -> u64 {
+        self.refreshes.load(Ordering::Relaxed)
+    }
+
+    /// The epochs observed at the most recent (re-)open.
+    pub fn current_epochs(&self) -> Vec<u64> {
+        self.last_epochs.lock().unwrap().clone()
+    }
+
+    fn snapshot(&self) -> Arc<dyn ClientSource> {
+        // Clone out of the lock so a slow backend read never holds it.
+        Arc::clone(&self.inner.read().unwrap())
+    }
+}
+
+impl ClientSource for RefreshingSource {
+    fn describe(&self) -> String {
+        format!("refreshing[{}]", self.snapshot().describe())
+    }
+
+    fn group_keys(&self) -> Vec<Vec<u8>> {
+        self.snapshot().group_keys()
+    }
+
+    fn num_groups(&self) -> usize {
+        self.snapshot().num_groups()
+    }
+
+    fn num_examples(&self) -> u64 {
+        self.snapshot().num_examples()
+    }
+
+    fn streamed_group(&self, key: &[u8]) -> Result<Option<StreamedGroup>> {
+        self.snapshot().streamed_group(key)
+    }
+
+    fn batched(&self) -> bool {
+        self.snapshot().batched()
+    }
+
+    fn fetch_groups(&self, keys: &[Vec<u8>]) -> Result<Vec<Option<StreamedGroup>>> {
+        self.snapshot().fetch_groups(keys)
+    }
+
+    fn refresh(&self) -> Result<bool> {
+        let fresh = (self.factory)().context("re-opening snapshot at the round boundary")?;
+        let new_epochs = fresh.source_epochs();
+        {
+            let mut last = self.last_epochs.lock().unwrap();
+            if last.len() != new_epochs.len() {
+                bail!(
+                    "refreshed snapshot changed shard count: {} -> {} shards",
+                    last.len(),
+                    new_epochs.len()
+                );
+            }
+            if let Some((i, (old, new))) =
+                last.iter().zip(&new_epochs).enumerate().find(|(_, (o, n))| n < o)
+            {
+                bail!(
+                    "refreshed snapshot regressed shard {i}'s checkpoint epoch {old} -> {new} \
+                     (stores only move forward; is the factory opening the right store?)"
+                );
+            }
+            *last = new_epochs;
+        }
+        *self.inner.write().unwrap() = fresh;
+        self.refreshes.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    fn source_epochs(&self) -> Vec<u64> {
+        self.snapshot().source_epochs()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,6 +457,90 @@ mod tests {
             assert_eq!(s.num_examples(), sources[0].num_examples());
             assert!(!s.batched());
         }
+    }
+
+    #[test]
+    fn refreshing_source_delegates_and_counts_refreshes() {
+        let dir = std::env::temp_dir().join("grouper_refreshing_source_test");
+        materialize(&dir);
+        let paged = dir.join("paged");
+        let factory_dir = paged.clone();
+        let src = RefreshingSource::new(Box::new(move || {
+            Ok(Arc::new(ShardedPagedReader::open_snapshot(&factory_dir, "t", 16)?)
+                as Arc<dyn ClientSource>)
+        }))
+        .unwrap();
+        let raw = ShardedPagedReader::open_snapshot(&paged, "t", 16).unwrap();
+        assert_eq!(src.group_keys(), ClientSource::group_keys(&raw));
+        assert_eq!(src.source_epochs(), raw.epochs());
+        assert!(!src.batched());
+        let key = src.group_keys()[0].clone();
+        let before = src.streamed_group(&key).unwrap().unwrap().framed_bytes().unwrap().to_vec();
+        // A quiescent store refreshes without changing anything.
+        assert!(src.refresh().unwrap());
+        assert_eq!(src.refreshes(), 1);
+        assert_eq!(src.current_epochs(), raw.epochs());
+        let after = src.streamed_group(&key).unwrap().unwrap().framed_bytes().unwrap().to_vec();
+        assert_eq!(before, after, "quiescent refresh must be byte-stable");
+    }
+
+    /// A factory that hands back a snapshot with regressed checkpoint
+    /// epochs (or a different shard count) is refused with a typed
+    /// error — freshness must be monotone.
+    #[test]
+    fn refreshing_source_refuses_epoch_regression() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+
+        struct FakeEpochs(Vec<u64>);
+        impl ClientSource for FakeEpochs {
+            fn describe(&self) -> String {
+                "fake".into()
+            }
+            fn group_keys(&self) -> Vec<Vec<u8>> {
+                vec![b"k".to_vec()]
+            }
+            fn num_groups(&self) -> usize {
+                1
+            }
+            fn num_examples(&self) -> u64 {
+                1
+            }
+            fn streamed_group(&self, _key: &[u8]) -> Result<Option<StreamedGroup>> {
+                Ok(None)
+            }
+            fn source_epochs(&self) -> Vec<u64> {
+                self.0.clone()
+            }
+        }
+
+        let opens = Arc::new(AtomicU64::new(0));
+        let counter = Arc::clone(&opens);
+        let src = RefreshingSource::new(Box::new(move || {
+            // Epochs go 5, 6, 3: the second refresh must be refused.
+            let epochs = match counter.fetch_add(1, Ordering::SeqCst) {
+                0 => vec![5],
+                1 => vec![6],
+                _ => vec![3],
+            };
+            Ok(Arc::new(FakeEpochs(epochs)) as Arc<dyn ClientSource>)
+        }))
+        .unwrap();
+        assert!(src.refresh().unwrap());
+        let err = src.refresh().expect_err("epoch regression must be refused");
+        assert!(err.to_string().contains("regressed"), "unexpected error: {err:#}");
+        // The failed refresh left the last good snapshot in place.
+        assert_eq!(src.current_epochs(), vec![6]);
+
+        let shrink = Arc::new(AtomicU64::new(0));
+        let counter = Arc::clone(&shrink);
+        let src = RefreshingSource::new(Box::new(move || {
+            let epochs =
+                if counter.fetch_add(1, Ordering::SeqCst) == 0 { vec![1, 1] } else { vec![2] };
+            Ok(Arc::new(FakeEpochs(epochs)) as Arc<dyn ClientSource>)
+        }))
+        .unwrap();
+        let err = src.refresh().expect_err("shard-count change must be refused");
+        assert!(err.to_string().contains("shard count"), "unexpected error: {err:#}");
     }
 
     #[test]

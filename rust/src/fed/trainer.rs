@@ -19,7 +19,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::algorithms::{fedavg_round, fedsgd_round};
 use super::client_data::{build_client_batches, ClientBatches};
@@ -74,16 +74,45 @@ pub struct TrainerConfig {
     /// batch). 1 (or 0) = serial. Results are identical at any value;
     /// only the data phase's wall-clock changes.
     pub read_workers: usize,
+    /// Overlap data and compute in [`train_with_source`]: while round
+    /// *r* trains, round *r+1*'s cohort is fetched into a bounded
+    /// (depth-1) double-buffer on the `read_workers` pool. Cohorts are
+    /// bit-identical to the synchronous path — the sampler draws the
+    /// same key sequence, each fetch sees one consistent snapshot —
+    /// only the round's data-wait shrinks. With a refreshing source the
+    /// round-boundary refresh happens when the prefetch launches, so
+    /// round *r+1* sees the freshest checkpoint as of the *start* of
+    /// round *r*'s compute phase (one round staler, never mixed).
+    pub prefetch: bool,
+    /// Call [`ClientSource::refresh`] at every round boundary in
+    /// [`train_with_source`], so a source over a store that is still
+    /// being written re-pins the freshest committed checkpoint between
+    /// rounds (and a grown key universe reseeds the cohort sampler).
+    /// Off (the default), the source is never refreshed and training is
+    /// frozen on the snapshot it opened with — the classic path.
+    pub refresh_source: bool,
 }
 
 impl TrainerConfig {
     pub fn new(fed: FedConfig) -> Self {
-        TrainerConfig { fed, log_every: 0, read_workers: 1 }
+        TrainerConfig { fed, log_every: 0, read_workers: 1, prefetch: false, refresh_source: false }
     }
 
     /// Builder-style override of [`TrainerConfig::read_workers`].
     pub fn with_read_workers(mut self, read_workers: usize) -> Self {
         self.read_workers = read_workers;
+        self
+    }
+
+    /// Builder-style override of [`TrainerConfig::prefetch`].
+    pub fn with_prefetch(mut self, prefetch: bool) -> Self {
+        self.prefetch = prefetch;
+        self
+    }
+
+    /// Builder-style override of [`TrainerConfig::refresh_source`].
+    pub fn with_refresh_source(mut self, refresh_source: bool) -> Self {
+        self.refresh_source = refresh_source;
         self
     }
 }
@@ -351,6 +380,9 @@ pub fn train(
 /// buffered-shuffle cohort stream. Deterministic given (key set, seed),
 /// independent of which backend supplied the keys.
 struct KeyCohorts {
+    /// The key set in sorted (canonical) order — the identity a
+    /// refreshed universe is compared against.
+    canonical: Vec<Vec<u8>>,
     keys: Vec<Vec<u8>>,
     seed: u64,
     cohort: usize,
@@ -364,9 +396,29 @@ impl KeyCohorts {
         // Canonical order first: the stream is then a pure function of
         // the key *set* and the seed.
         keys.sort();
-        let mut kc = KeyCohorts { keys, seed, cohort, epoch: 0, pos: 0 };
+        let canonical = keys.clone();
+        let mut kc = KeyCohorts { canonical, keys, seed, cohort, epoch: 0, pos: 0 };
         kc.shuffle_epoch();
         kc
+    }
+
+    /// Swap in a refreshed key universe. When the sorted set is
+    /// unchanged this is a no-op and the stream continues bit-for-bit —
+    /// the property the quiescent-store identity tests pin down. When
+    /// it changed (live ingestion grew the store), the sampler advances
+    /// to a fresh epoch over the new set, so newly arrived groups
+    /// become eligible immediately and the stream stays a pure function
+    /// of `(seed, the sequence of key sets observed at refresh points)`.
+    fn update_keys(&mut self, mut new_keys: Vec<Vec<u8>>) -> bool {
+        new_keys.sort();
+        if new_keys == self.canonical {
+            return false;
+        }
+        self.canonical = new_keys.clone();
+        self.keys = new_keys;
+        self.epoch += 1;
+        self.shuffle_epoch();
+        true
     }
 
     fn shuffle_epoch(&mut self) {
@@ -390,6 +442,43 @@ impl KeyCohorts {
     }
 }
 
+/// Refresh `source` at a round boundary (when
+/// [`TrainerConfig::refresh_source`] is on) and fold a changed key
+/// universe into the sampler. No-op (and no cost) for plain sources.
+fn refresh_and_resample(
+    source: &Arc<dyn ClientSource>,
+    sampler: &mut KeyCohorts,
+    enabled: bool,
+) -> Result<()> {
+    if !enabled {
+        return Ok(());
+    }
+    if source.refresh().context("refreshing client source at the round boundary")? {
+        let keys = source.group_keys();
+        if keys.is_empty() {
+            bail!("refreshed source {} holds no groups", source.describe());
+        }
+        sampler.update_keys(keys);
+    }
+    Ok(())
+}
+
+/// One in-flight prefetched cohort — the bounded (depth-1) double
+/// buffer: round *r* trains while this thread fetches round *r+1*.
+type PrefetchHandle = std::thread::JoinHandle<Result<Vec<ClientBatches>>>;
+
+/// Render a prefetch thread's panic payload for the typed round-
+/// boundary error (mirrors the thread pool's panics-as-values policy).
+fn panic_to_string(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Run federated training with cohorts sampled from **any**
 /// [`ClientSource`] backend — in-memory, streaming-gindex, paged,
 /// sharded-paged, or remote ([`crate::serve::RemoteClientSource`]).
@@ -401,9 +490,20 @@ impl KeyCohorts {
 /// order and group payloads are backend-independent, the same `(seed,
 /// key set)` trains bit-identically on every backend.
 ///
+/// **Live ingestion**: with [`TrainerConfig::refresh_source`], the
+/// source's [`ClientSource::refresh`] runs at every round boundary (a
+/// snapshot re-open for [`super::source::RefreshingSource`], a re-pin
+/// handshake for a remote source), so a store that is still being
+/// written feeds each round the freshest committed checkpoint while
+/// every round reads one consistent snapshot. With
+/// [`TrainerConfig::prefetch`], the next round's cohort is fetched on a
+/// background thread (over the same `read_workers` pool) while the
+/// current round trains; a failed or crashed prefetch surfaces as a
+/// typed error at the round boundary instead of hanging the buffer.
+///
 /// # Errors
-/// An empty source, a zero `fed.cohort_size`, any cohort fetch
-/// failure, or a backend round failure.
+/// An empty source, a zero `fed.cohort_size`, any cohort fetch,
+/// refresh, or prefetch failure, or a backend round failure.
 pub fn train_with_source(
     backend: &dyn ModelBackend,
     source: &Arc<dyn ClientSource>,
@@ -431,18 +531,54 @@ pub fn train_with_source(
         pad_id: backend.pad_id(),
     };
 
+    // Arc so the prefetch thread can share the pool: during a round's
+    // compute phase the main thread never touches it, so the background
+    // fetch gets the full worker set to itself.
     let read_workers = cfg.read_workers.max(1);
-    let fetch_pool = (read_workers > 1).then(|| ThreadPool::new(read_workers));
+    let fetch_pool = (read_workers > 1).then(|| Arc::new(ThreadPool::new(read_workers)));
     let shared_tokenizer = Arc::new(tokenizer.clone());
 
+    let mut pending: Option<PrefetchHandle> = None;
     let mut rounds = Vec::with_capacity(fed.rounds);
     for round in 0..fed.rounds {
-        // --- data phase: sample the cohort keys and fetch client batches.
+        // --- data phase: wait on the prefetched cohort, or (first
+        // round / prefetch off) refresh + sample + fetch synchronously.
         let data_t = Timer::start();
-        let cohort_keys = sampler.next_cohort();
-        let cohort =
-            fetch_cohort(source, &cohort_keys, &shared_tokenizer, spec, fetch_pool.as_ref())?;
+        let cohort = match pending.take() {
+            Some(handle) => handle
+                .join()
+                .map_err(|p| {
+                    anyhow!(
+                        "cohort prefetch thread for round {round} crashed: {}",
+                        panic_to_string(p)
+                    )
+                })?
+                .with_context(|| format!("prefetched cohort for round {round}"))?,
+            None => {
+                refresh_and_resample(source, &mut sampler, cfg.refresh_source)?;
+                let cohort_keys = sampler.next_cohort();
+                fetch_cohort(source, &cohort_keys, &shared_tokenizer, spec, fetch_pool.as_deref())?
+            }
+        };
         let data_secs = data_t.elapsed_secs();
+
+        // --- launch the next round's prefetch before compute starts.
+        // The refresh happens *here* (not when the buffer is consumed),
+        // so the prefetched round reads one consistent snapshot — the
+        // freshest checkpoint as of this round's compute start.
+        if cfg.prefetch && round + 1 < fed.rounds {
+            refresh_and_resample(source, &mut sampler, cfg.refresh_source)?;
+            let next_keys = sampler.next_cohort();
+            let src = Arc::clone(source);
+            let tok = Arc::clone(&shared_tokenizer);
+            let pool = fetch_pool.clone();
+            pending = Some(
+                std::thread::Builder::new()
+                    .name("grouper-prefetch".into())
+                    .spawn(move || fetch_cohort(&src, &next_keys, &tok, spec, pool.as_deref()))
+                    .context("spawning the cohort prefetch thread")?,
+            );
+        }
 
         // --- compute phase: client work + server update.
         let train_t = Timer::start();
@@ -700,6 +836,80 @@ mod tests {
         let longer = TrainerConfig::new(fed(FedAlgorithm::FedAvg, 40));
         let out = train_with_source(&mock, &sources[0], &wp, &longer).unwrap();
         assert!(out.final_loss() < out.rounds[0].train_loss * 0.85);
+    }
+
+    #[test]
+    fn prefetched_training_is_bit_identical_to_synchronous() {
+        use crate::formats::GindexSource;
+
+        let dir = std::env::temp_dir().join("grouper_trainer_prefetch_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = DatasetSpec::fedccnews_mini(24, 77);
+        spec.max_group_words = 800;
+        let ds = SyntheticTextDataset::new(spec);
+        let popts = PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() };
+        run_partition(&ds, &FeatureKey::new("domain"), &dir, "train", &popts).unwrap();
+        let mut vb = VocabBuilder::new();
+        for text in ds.stream_all_text() {
+            vb.feed(&text);
+        }
+        let wp = vb.build(64);
+        let mock = MockRuntime::standard();
+        let source: Arc<dyn ClientSource> = Arc::new(GindexSource::open(&dir, "train").unwrap());
+        let tc = TrainerConfig::new(fed(FedAlgorithm::FedAvg, 8));
+        let sync = train_with_source(&mock, &source, &wp, &tc).unwrap();
+        for (workers, prefetch) in [(1usize, true), (4, true), (4, false)] {
+            let tc = tc.clone().with_read_workers(workers).with_prefetch(prefetch);
+            let got = train_with_source(&mock, &source, &wp, &tc).unwrap();
+            assert_eq!(
+                got.params, sync.params,
+                "prefetch={prefetch} workers={workers} changed training"
+            );
+            for (a, b) in got.rounds.iter().zip(&sync.rounds) {
+                assert_eq!(a.train_loss, b.train_loss);
+            }
+        }
+    }
+
+    #[test]
+    fn key_cohorts_update_is_noop_on_same_set_and_reseeds_on_change() {
+        let keys: Vec<Vec<u8>> = (0..9).map(|i| format!("k{i}").into_bytes()).collect();
+        let mut a = KeyCohorts::new(keys.clone(), 11, 2);
+        let mut b = KeyCohorts::new(keys.clone(), 11, 2);
+        assert_eq!(a.next_cohort(), b.next_cohort());
+        // Same set (any order) must not perturb the stream.
+        let mut shuffled = keys.clone();
+        shuffled.reverse();
+        assert!(!a.update_keys(shuffled));
+        for _ in 0..10 {
+            assert_eq!(a.next_cohort(), b.next_cohort());
+        }
+        // A grown set advances to a fresh epoch over the new universe,
+        // and the newcomer is reachable within one pass.
+        let mut grown = keys.clone();
+        grown.push(b"newcomer".to_vec());
+        assert!(a.update_keys(grown));
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..5 {
+            for k in a.next_cohort() {
+                seen.insert(k);
+            }
+        }
+        assert!(seen.contains(&b"newcomer".to_vec()), "new group never sampled");
+        // Determinism: the same history replays identically.
+        let mut c = KeyCohorts::new(keys.clone(), 11, 2);
+        c.next_cohort();
+        let mut grown = keys;
+        grown.push(b"newcomer".to_vec());
+        assert!(c.update_keys(grown));
+        let mut b2 = KeyCohorts::new((0..9).map(|i| format!("k{i}").into_bytes()).collect(), 11, 2);
+        b2.next_cohort();
+        let mut grown2: Vec<Vec<u8>> = (0..9).map(|i| format!("k{i}").into_bytes()).collect();
+        grown2.push(b"newcomer".to_vec());
+        assert!(b2.update_keys(grown2));
+        for _ in 0..10 {
+            assert_eq!(c.next_cohort(), b2.next_cohort());
+        }
     }
 
     #[test]

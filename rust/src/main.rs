@@ -13,6 +13,7 @@
 //!                   [--cache-pages N] [--max-connections N]
 //! grouper train     --config configs/fig4_fedavg.toml [--read-workers N]
 //!                   [--source DIR|remote://host:port [--source-prefix P]]
+//!                   [--refresh-source true] [--prefetch true] [--ingest-rate N]
 //! grouper personalize --config configs/fig4_fedavg.toml [--read-workers N]
 //!                   [--source ...] [--eval-source DIR|remote://host:port]
 //! grouper info      [--artifacts artifacts] [--dir DIR --prefix P]
@@ -39,6 +40,15 @@
 //! also accepts a directory, auto-detected as a `.pset` sharded set, a
 //! `.pstore` single store, or a `.gindex` streaming materialization.
 //!
+//! Live ingestion: `train --refresh-source true` re-pins the freshest
+//! committed checkpoint at every round boundary (bit-stable within a
+//! round, freshest between rounds), `--prefetch true` fetches the next
+//! round's cohort while the current round trains, and `--ingest-rate N`
+//! spawns an in-process seeded writer appending ~N examples/s (with
+//! checkpoint + compaction churn) into the `--source` store — a
+//! one-command demo of training over a store that is still being
+//! written.
+//!
 //! Experiment regeneration lives in `cargo bench --bench <table|figure>`;
 //! the CLI is the interactive/production surface over the same library.
 
@@ -46,13 +56,17 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use grouper::config::ExperimentConfig;
 use grouper::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
 use grouper::fed::trainer::build_eval_clients;
-use grouper::fed::{personalization_eval, train, train_with_source, ClientSource, TrainerConfig};
+use grouper::fed::{
+    personalization_eval, train, train_with_source, ClientSource, IngestConfig, IngestHandle,
+    IngestRunner, IngestTarget, RefreshingSource, TrainerConfig,
+};
 use grouper::formats::{
     GindexSource, HierarchicalStore, PagedReader, PagedSetManifest, PagedShardSet, PagedStore,
     ShardedPagedReader,
@@ -138,7 +152,15 @@ fn print_usage() {
          \u{20}               --source DIR|remote://host:port trains from a\n\
          \u{20}               shared store (.pset/.pstore/.gindex auto-detected,\n\
          \u{20}               --source-prefix P, default train) instead of\n\
-         \u{20}               materializing a private streaming split\n\
+         \u{20}               materializing a private streaming split;\n\
+         \u{20}               --refresh-source true re-pins the freshest committed\n\
+         \u{20}               checkpoint at every round boundary (bit-stable\n\
+         \u{20}               within a round, freshest between rounds);\n\
+         \u{20}               --prefetch true overlaps the next round's cohort\n\
+         \u{20}               fetch with the current round's compute (results\n\
+         \u{20}               bit-identical either way); --ingest-rate N spawns\n\
+         \u{20}               an in-process seeded writer appending ~N examples/s\n\
+         \u{20}               with checkpoint+compaction churn into --source\n\
          \u{20}  personalize  train + pre/post-personalization eval (Table 5);\n\
          \u{20}               --eval-source reads eval clients from a shared\n\
          \u{20}               store too\n\
@@ -184,6 +206,17 @@ impl Flags {
 
     fn required(&self, k: &str) -> Result<&str> {
         self.get(k).with_context(|| format!("missing required flag --{k}"))
+    }
+
+    /// Boolean flags still take a value (the parser is strictly
+    /// `--key value`): `--prefetch true`.
+    fn bool_or(&self, k: &str, default: bool) -> Result<bool> {
+        match self.get(k) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("on") => Ok(true),
+            Some("false") | Some("0") | Some("off") => Ok(false),
+            Some(v) => bail!("--{k} must be true or false, got {v:?}"),
+        }
     }
 }
 
@@ -616,6 +649,40 @@ fn resolve_source(spec: &str, prefix: &str, cache_pages: usize) -> Result<Arc<dy
     )
 }
 
+/// `--ingest-rate`: open the single live writer on the `--source`
+/// store and spawn the seeded background appender (~10 steps/s, so each
+/// step appends `rate / 10` examples and commits, with checkpoint +
+/// compaction churn on the default schedule). The writer must open
+/// *before* any trainer snapshot so readers stay strictly zero-write
+/// while this process owns recovery.
+fn start_ingest(spec: &str, prefix: &str, cache_pages: usize, rate: usize) -> Result<IngestHandle> {
+    if spec.starts_with("remote://") {
+        bail!(
+            "--ingest-rate needs a local paged --source (the live writer runs in-process); \
+             run it in the process that owns the store directory"
+        );
+    }
+    let dir = PathBuf::from(spec);
+    let target = if PagedSetManifest::exists(&dir, prefix) {
+        IngestTarget::Sharded(PagedShardSet::open(&dir, prefix, cache_pages)?)
+    } else if dir.join(format!("{prefix}.pstore")).exists() {
+        IngestTarget::Single(PagedStore::open(&dir, prefix, cache_pages)?)
+    } else {
+        bail!(
+            "--ingest-rate: no appendable {prefix}.pset / {prefix}.pstore under {}",
+            dir.display()
+        );
+    };
+    let cfg = IngestConfig { examples_per_step: (rate / 10).max(1), ..Default::default() };
+    let runner = IngestRunner::new(target, cfg)?;
+    println!(
+        "live ingest: ~{rate} examples/s into {spec}/{prefix} \
+         (checkpoint every {} steps, compact every {} checkpoints)",
+        cfg.checkpoint_every, cfg.compact_every
+    );
+    Ok(runner.spawn(Duration::from_millis(100)))
+}
+
 fn cmd_vocab(f: &Flags) -> Result<()> {
     let name = f.get_or("dataset", "fedc4-mini");
     let groups = f.usize_or("groups", 200)?;
@@ -701,13 +768,50 @@ fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
     let mut tc = TrainerConfig::new(cfg.fed.clone());
     tc.log_every = (cfg.fed.rounds / 20).max(1);
     tc.read_workers = f.usize_or("read-workers", 1)?;
+    tc.prefetch = f.bool_or("prefetch", false)?;
+    tc.refresh_source = f.bool_or("refresh-source", false)?;
     let cache_pages =
         f.usize_or("cache-pages", grouper::formats::paged::DEFAULT_CACHE_PAGES)?;
+    let ingest_rate = f.usize_or("ingest-rate", 0)?;
+    if ingest_rate > 0 && source_spec.is_none() {
+        bail!("--ingest-rate requires a shared --source store to append into");
+    }
     let out = match source_spec {
         Some(spec) => {
-            let src = resolve_source(spec, f.get_or("source-prefix", "train"), cache_pages)?;
+            let prefix = f.get_or("source-prefix", "train").to_string();
+            let ingest = if ingest_rate > 0 {
+                Some(start_ingest(spec, &prefix, cache_pages, ingest_rate)?)
+            } else {
+                None
+            };
+            // `--refresh-source true`: local backends get wrapped so each
+            // round boundary reopens the freshest committed snapshot;
+            // remote sources refresh natively (a re-pin handshake).
+            let src: Arc<dyn ClientSource> =
+                if tc.refresh_source && !spec.starts_with("remote://") {
+                    let spec = spec.to_string();
+                    let prefix = prefix.clone();
+                    Arc::new(RefreshingSource::new(Box::new(move || {
+                        resolve_source(&spec, &prefix, cache_pages)
+                    }))?)
+                } else {
+                    resolve_source(spec, &prefix, cache_pages)?
+                };
             println!("training from {}", src.describe());
-            train_with_source(&rt, &src, &wp, &tc)?
+            let out = train_with_source(&rt, &src, &wp, &tc)?;
+            if let Some(handle) = ingest {
+                let stats = handle.stop().context("stopping the live ingest writer")?;
+                println!(
+                    "live ingest: {} examples appended ({} new groups) over {} steps, \
+                     {} checkpoints, {} compactions",
+                    stats.appended,
+                    stats.new_groups,
+                    stats.steps,
+                    stats.checkpoints,
+                    stats.compactions
+                );
+            }
+            out
         }
         None => {
             let train_pd = PartitionedDataset::open(&work, "train")?;

@@ -12,9 +12,29 @@
 //! group frames back, instead of paying a round trip per client.
 //! Connect attempts retry with exponential backoff (bounded), and a
 //! read timeout bounds how long a dead server can stall a trainer.
+//!
+//! # Reconnect after a server restart
+//!
+//! A failed RPC marks the wire dead and the *next* use makes exactly one
+//! reconnect attempt — against the cached last-good address first, then
+//! one fresh DNS resolution — and retries the request once on the new
+//! connection. Each consecutive failure raises the backoff level (one
+//! `backoff_base * 2^level` sleep before the next attempt); **any**
+//! successful fetch resets the clock to zero. This keeps a flapping
+//! server from burning the full initial-connect budget on every cohort
+//! call while still backing off a persistently dead one.
+//!
+//! Reconnecting re-runs the handshake, so the session silently moves to
+//! the server's *current* checkpoint pins — liveness over stability: a
+//! round that straddles a restart may mix epochs, which the handshake
+//! bounds by refusing shard-count changes and epoch regressions.
+//! [`ClientSource::refresh`] uses the same machinery deliberately, at
+//! round boundaries, so remote training picks up new checkpoints the
+//! same way local refreshing sources do.
 
 use std::io::Write;
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -36,7 +56,8 @@ pub struct RemoteOptions {
     /// instead of hanging the trainer.
     pub read_timeout: Duration,
     /// Extra connect attempts after the first (so `4` means up to 5
-    /// attempts total).
+    /// attempts total). Applies to the initial connect only; reconnects
+    /// make one attempt per call with a level-based backoff instead.
     pub connect_retries: u32,
     /// Backoff before retry `k` is `backoff_base * 2^k`.
     pub backoff_base: Duration,
@@ -53,16 +74,32 @@ impl Default for RemoteOptions {
     }
 }
 
-/// A trainer-side connection to a store server; one pinned snapshot's
-/// worth of groups, fetched over TCP.
-pub struct RemoteClientSource {
-    addr: String,
-    stream: Mutex<TcpStream>,
+/// One handshaken connection plus the snapshot metadata it pinned. The
+/// metadata travels with the wire so a reconnect (new pins, possibly
+/// newer epochs) can never serve groups against stale counts or keys.
+struct Session {
+    wire: Option<TcpStream>,
     num_shards: u32,
     epochs: Vec<u64>,
     num_groups: u64,
     num_examples: u64,
     keys: Vec<Vec<u8>>,
+}
+
+/// A trainer-side connection to a store server; one pinned snapshot's
+/// worth of groups, fetched over TCP, transparently re-established
+/// after a server restart.
+pub struct RemoteClientSource {
+    addr: String,
+    opts: RemoteOptions,
+    session: Mutex<Session>,
+    /// Address the last successful TCP connect landed on; reconnects
+    /// try it before paying another DNS resolution.
+    last_good: Mutex<Option<SocketAddr>>,
+    /// Consecutive failed reconnect attempts; scales the pre-attempt
+    /// backoff sleep and resets to zero on any successful RPC.
+    backoff_level: AtomicU32,
+    reconnects: AtomicU64,
 }
 
 fn connect_with_backoff(addr: &str, opts: &RemoteOptions) -> Result<TcpStream> {
@@ -112,6 +149,29 @@ fn read_response(stream: &mut TcpStream) -> Result<Response> {
     }
 }
 
+/// Run the epoch-pin handshake on a fresh wire and cache the pinned
+/// snapshot's metadata and sorted key list into a [`Session`].
+fn handshake(mut stream: TcpStream, opts: &RemoteOptions) -> Result<Session> {
+    stream.set_read_timeout(Some(opts.read_timeout)).context("setting read timeout")?;
+    stream.set_nodelay(true).ok(); // latency over batching; best-effort
+    send_request(&mut stream, &Request::Hello { version: PROTO_VERSION })?;
+    let (num_shards, epochs, num_groups, num_examples) = match read_response(&mut stream)? {
+        Response::HelloAck { version, num_shards, epochs, num_groups, num_examples } => {
+            if version != PROTO_VERSION {
+                bail!("store server speaks protocol v{version}, client v{PROTO_VERSION}");
+            }
+            (num_shards, epochs, num_groups, num_examples)
+        }
+        other => bail!("expected HelloAck, got {other:?}"),
+    };
+    send_request(&mut stream, &Request::Keys)?;
+    let keys = match read_response(&mut stream)? {
+        Response::Keys { keys } => keys,
+        other => bail!("expected Keys, got {other:?}"),
+    };
+    Ok(Session { wire: Some(stream), num_shards, epochs, num_groups, num_examples, keys })
+}
+
 fn wire_to_streamed(g: super::proto::WireGroup) -> StreamedGroup {
     // words=0 like every paged-path group; the batching pipeline never
     // reads it, so remote payloads stay bit-identical to local ones.
@@ -135,99 +195,237 @@ impl RemoteClientSource {
     /// Exhausted connect attempts, a protocol-version mismatch, or any
     /// handshake I/O or decode failure.
     pub fn connect_with(addr: &str, opts: &RemoteOptions) -> Result<RemoteClientSource> {
-        let mut stream = connect_with_backoff(addr, opts)?;
-        stream.set_read_timeout(Some(opts.read_timeout)).context("setting read timeout")?;
-        stream.set_nodelay(true).ok(); // latency over batching; best-effort
-        send_request(&mut stream, &Request::Hello { version: PROTO_VERSION })?;
-        let (num_shards, epochs, num_groups, num_examples) =
-            match read_response(&mut stream)? {
-                Response::HelloAck { version, num_shards, epochs, num_groups, num_examples } => {
-                    if version != PROTO_VERSION {
-                        bail!("store server speaks protocol v{version}, client v{PROTO_VERSION}");
-                    }
-                    (num_shards, epochs, num_groups, num_examples)
-                }
-                other => bail!("expected HelloAck, got {other:?}"),
-            };
-        send_request(&mut stream, &Request::Keys)?;
-        let keys = match read_response(&mut stream)? {
-            Response::Keys { keys } => keys,
-            other => bail!("expected Keys, got {other:?}"),
-        };
+        let stream = connect_with_backoff(addr, opts)?;
+        let peer = stream.peer_addr().ok();
+        let session = handshake(stream, opts)?;
         Ok(RemoteClientSource {
             addr: addr.to_string(),
-            stream: Mutex::new(stream),
-            num_shards,
-            epochs,
-            num_groups,
-            num_examples,
-            keys,
+            opts: *opts,
+            session: Mutex::new(session),
+            last_good: Mutex::new(peer),
+            backoff_level: AtomicU32::new(0),
+            reconnects: AtomicU64::new(0),
         })
+    }
+
+    /// One TCP connect attempt: the cached last-good address first,
+    /// then one fresh resolution of `self.addr`.
+    fn connect_once(&self) -> Result<TcpStream> {
+        if let Some(addr) = *self.last_good.lock().unwrap() {
+            if let Ok(s) = TcpStream::connect_timeout(&addr, self.opts.connect_timeout) {
+                return Ok(s);
+            }
+        }
+        let targets: Vec<SocketAddr> = self
+            .addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving store server address {}", self.addr))?
+            .collect();
+        if targets.is_empty() {
+            bail!("store server address {} resolved to nothing", self.addr);
+        }
+        let mut last_err = None;
+        for target in &targets {
+            match TcpStream::connect_timeout(target, self.opts.connect_timeout) {
+                Ok(s) => {
+                    *self.last_good.lock().unwrap() = Some(*target);
+                    return Ok(s);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(anyhow!(
+            "reconnecting to store server {} failed: {}",
+            self.addr,
+            last_err.expect("at least one target tried")
+        ))
+    }
+
+    /// One bounded reconnect attempt: sleep the current backoff level
+    /// (nothing at level 0), connect, handshake. Success resets the
+    /// level and refreshes the last-good address; failure raises it so
+    /// the next attempt waits longer.
+    fn establish_session(&self) -> Result<Session> {
+        let level = self.backoff_level.load(Ordering::Relaxed);
+        if level > 0 {
+            std::thread::sleep(self.opts.backoff_base * (1 << (level - 1).min(16)));
+        }
+        let attempt = self.connect_once().and_then(|stream| {
+            let peer = stream.peer_addr().ok();
+            let session = handshake(stream, &self.opts)?;
+            if let Some(p) = peer {
+                *self.last_good.lock().unwrap() = Some(p);
+            }
+            Ok(session)
+        });
+        match attempt {
+            Ok(session) => {
+                self.backoff_level.store(0, Ordering::Relaxed);
+                Ok(session)
+            }
+            Err(e) => {
+                let next = level.saturating_add(1);
+                self.backoff_level.store(next, Ordering::Relaxed);
+                Err(e.context(format!(
+                    "reconnect attempt to store server {} failed (backoff level now {next})",
+                    self.addr
+                )))
+            }
+        }
+    }
+
+    /// A reconnected session must be the same store moving forward:
+    /// same shard count, per-shard checkpoint epochs never regressing.
+    fn validate_successor(&self, old: &Session, new: &Session) -> Result<()> {
+        if new.num_shards != old.num_shards {
+            bail!(
+                "store server {} changed shard count across reconnect: {} -> {}",
+                self.addr,
+                old.num_shards,
+                new.num_shards
+            );
+        }
+        for (i, (o, n)) in old.epochs.iter().zip(new.epochs.iter()).enumerate() {
+            if n < o {
+                bail!(
+                    "store server {} regressed shard {i}'s checkpoint epoch across \
+                     reconnect: {o} -> {n} (is a different store being served?)",
+                    self.addr
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Run `op` on the live wire; on failure, mark the wire dead, make
+    /// one bounded reconnect attempt, and retry `op` exactly once.
+    fn rpc<T>(&self, op: impl Fn(&mut TcpStream) -> Result<T>) -> Result<T> {
+        let mut session = self.session.lock().unwrap();
+        if let Some(wire) = session.wire.as_mut() {
+            match op(wire) {
+                Ok(v) => {
+                    self.backoff_level.store(0, Ordering::Relaxed);
+                    return Ok(v);
+                }
+                // The reply stream is unsynchronized now; the wire is
+                // dead either way. Fall through to reconnect + retry.
+                Err(_) => session.wire = None,
+            }
+        }
+        let fresh = self.establish_session()?;
+        self.validate_successor(&session, &fresh)?;
+        *session = fresh;
+        self.reconnects.fetch_add(1, Ordering::Relaxed);
+        let wire = session.wire.as_mut().expect("fresh session carries a live wire");
+        match op(wire) {
+            Ok(v) => {
+                self.backoff_level.store(0, Ordering::Relaxed);
+                Ok(v)
+            }
+            Err(e) => {
+                session.wire = None;
+                Err(e.context("request failed again on a freshly reconnected session"))
+            }
+        }
+    }
+
+    /// Re-handshake for a fresh snapshot pin (new connection first, old
+    /// pin released only after the new one is held), returning whether
+    /// the pinned epochs changed. This is what [`ClientSource::refresh`]
+    /// calls at round boundaries.
+    ///
+    /// # Errors
+    /// Connect/handshake failure (the old session stays live), a
+    /// shard-count change, or an epoch regression.
+    pub fn refresh_snapshot(&self) -> Result<bool> {
+        let mut session = self.session.lock().unwrap();
+        let fresh = self
+            .establish_session()
+            .with_context(|| format!("refreshing remote snapshot from {}", self.addr))?;
+        self.validate_successor(&session, &fresh)?;
+        let changed = fresh.epochs != session.epochs || fresh.keys != session.keys;
+        *session = fresh;
+        Ok(changed)
     }
 
     /// Shards in the served store (1 for a single paged store).
     pub fn num_shards(&self) -> u32 {
-        self.num_shards
+        self.session.lock().unwrap().num_shards
     }
 
-    /// Checkpoint epoch pinned per shard for this connection — constant
-    /// for the connection's life no matter what the primary does.
-    pub fn epochs(&self) -> &[u64] {
-        &self.epochs
+    /// Checkpoint epoch pinned per shard for the current connection —
+    /// constant between reconnects/refreshes, monotonically
+    /// non-decreasing across them.
+    pub fn epochs(&self) -> Vec<u64> {
+        self.session.lock().unwrap().epochs.clone()
+    }
+
+    /// Successful transparent reconnects (server restarts survived).
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// Current consecutive-failure backoff level; 0 after any
+    /// successful fetch.
+    pub fn backoff_level(&self) -> u32 {
+        self.backoff_level.load(Ordering::Relaxed)
     }
 
     /// Fetch per-shard statistics of the pinned snapshot.
     ///
     /// # Errors
-    /// Any RPC failure.
+    /// Any RPC failure that one reconnect-and-retry cannot absorb.
     pub fn stats(&self) -> Result<Vec<WireShardStat>> {
-        let mut stream = self.stream.lock().unwrap();
-        send_request(&mut stream, &Request::Stats)?;
-        match read_response(&mut stream)? {
-            Response::Stats { shards } => Ok(shards),
-            other => bail!("expected Stats, got {other:?}"),
-        }
+        self.rpc(|stream| {
+            send_request(stream, &Request::Stats)?;
+            match read_response(stream)? {
+                Response::Stats { shards } => Ok(shards),
+                other => bail!("expected Stats, got {other:?}"),
+            }
+        })
     }
 }
 
 impl ClientSource for RemoteClientSource {
     fn describe(&self) -> String {
+        let s = self.session.lock().unwrap();
         format!(
             "remote store at {} ({} shards, {} groups, epochs {:?})",
-            self.addr, self.num_shards, self.num_groups, self.epochs
+            self.addr, s.num_shards, s.num_groups, s.epochs
         )
     }
 
     fn group_keys(&self) -> Vec<Vec<u8>> {
-        self.keys.clone()
+        self.session.lock().unwrap().keys.clone()
     }
 
     fn num_groups(&self) -> usize {
-        self.num_groups as usize
+        self.session.lock().unwrap().num_groups as usize
     }
 
     fn num_examples(&self) -> u64 {
-        self.num_examples
+        self.session.lock().unwrap().num_examples
     }
 
     fn streamed_group(&self, key: &[u8]) -> Result<Option<StreamedGroup>> {
-        let mut stream = self.stream.lock().unwrap();
-        send_request(&mut stream, &Request::FetchGroup { key: key.to_vec() })?;
-        match read_response(&mut stream)? {
-            Response::Group { group } => {
-                if group.key != key {
-                    bail!("group reply mismatch: asked {key:?}, got {:?}", group.key);
+        self.rpc(|stream| {
+            send_request(stream, &Request::FetchGroup { key: key.to_vec() })?;
+            match read_response(stream)? {
+                Response::Group { group } => {
+                    if group.key != key {
+                        bail!("group reply mismatch: asked {key:?}, got {:?}", group.key);
+                    }
+                    Ok(Some(wire_to_streamed(group)))
                 }
-                Ok(Some(wire_to_streamed(group)))
-            }
-            Response::Miss { key: echoed } => {
-                if echoed != key {
-                    bail!("miss reply mismatch: asked {key:?}, got {echoed:?}");
+                Response::Miss { key: echoed } => {
+                    if echoed != key {
+                        bail!("miss reply mismatch: asked {key:?}, got {echoed:?}");
+                    }
+                    Ok(None)
                 }
-                Ok(None)
+                other => bail!("expected Group or Miss, got {other:?}"),
             }
-            other => bail!("expected Group or Miss, got {other:?}"),
-        }
+        })
     }
 
     fn batched(&self) -> bool {
@@ -242,26 +440,40 @@ impl ClientSource for RemoteClientSource {
     /// reordered around absent groups fails fast instead of silently
     /// misassigning cohorts.
     fn fetch_groups(&self, keys: &[Vec<u8>]) -> Result<Vec<Option<StreamedGroup>>> {
-        let mut stream = self.stream.lock().unwrap();
-        send_request(&mut stream, &Request::FetchCohort { keys: keys.to_vec() })?;
-        let mut out = Vec::with_capacity(keys.len());
-        for key in keys {
-            match read_response(&mut stream)? {
-                Response::Group { group } => {
-                    if group.key != *key {
-                        bail!("cohort reply out of order: asked {key:?}, got {:?}", group.key);
+        self.rpc(|stream| {
+            send_request(stream, &Request::FetchCohort { keys: keys.to_vec() })?;
+            let mut out = Vec::with_capacity(keys.len());
+            for key in keys {
+                match read_response(stream)? {
+                    Response::Group { group } => {
+                        if group.key != *key {
+                            bail!(
+                                "cohort reply out of order: asked {key:?}, got {:?}",
+                                group.key
+                            );
+                        }
+                        out.push(Some(wire_to_streamed(group)));
                     }
-                    out.push(Some(wire_to_streamed(group)));
-                }
-                Response::Miss { key: echoed } => {
-                    if echoed != *key {
-                        bail!("cohort reply out of order: asked {key:?}, got miss for {echoed:?}");
+                    Response::Miss { key: echoed } => {
+                        if echoed != *key {
+                            bail!(
+                                "cohort reply out of order: asked {key:?}, got miss for {echoed:?}"
+                            );
+                        }
+                        out.push(None);
                     }
-                    out.push(None);
+                    other => bail!("expected Group or Miss, got {other:?}"),
                 }
-                other => bail!("expected Group or Miss, got {other:?}"),
             }
-        }
-        Ok(out)
+            Ok(out)
+        })
+    }
+
+    fn refresh(&self) -> Result<bool> {
+        self.refresh_snapshot()
+    }
+
+    fn source_epochs(&self) -> Vec<u64> {
+        self.epochs()
     }
 }

@@ -22,7 +22,11 @@
 //!   the store's single live writer appends, checkpoints and compacts.
 //! * [`client`] — [`RemoteClientSource`]: bounded-backoff connect,
 //!   read timeouts, cached sorted keys, and batched cohort fetches
-//!   (one round trip per cohort, not per client).
+//!   (one round trip per cohort, not per client). A server restart is
+//!   survived by a transparent reconnect to the cached last-good
+//!   address (one bounded attempt per failing call, backoff reset on
+//!   any success), and `refresh()` re-pins the freshest checkpoint at
+//!   round boundaries for live-ingestion training.
 //!
 //! The concurrency contract is exactly the storage engine's
 //! single-live-writer rule extended over the network: **one** process

@@ -1,0 +1,287 @@
+//! Live-ingestion integration suite: federated rounds over a store that
+//! is still being written.
+//!
+//! Three contracts (ISSUE 7 satellites):
+//!
+//! * **quiescent bit-identity** — over a store nobody is writing,
+//!   `refresh_source` (and prefetch) training matches the classic
+//!   frozen-snapshot path bit-for-bit, for paged, sharded, and remote
+//!   backends;
+//! * **churn soak** — seeded ingest + checkpoint + compaction churn for
+//!   N rounds: every round's cohort decodes cleanly, within-round
+//!   fetches are byte-stable, observed epochs are monotonically
+//!   non-decreasing across refreshes, and newly minted groups become
+//!   visible;
+//! * **prefetch failure** — a poisoned (panicking) or failing prefetch
+//!   surfaces a typed error at the round boundary instead of hanging
+//!   the double-buffer.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+use grouper::config::{FedAlgorithm, FedConfig, ScheduleKind};
+use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
+use grouper::fed::{
+    train_with_source, ClientSource, IngestConfig, IngestRunner, IngestTarget, RefreshingSource,
+    TrainerConfig,
+};
+use grouper::formats::streaming::StreamedGroup;
+use grouper::formats::{PagedReader, PagedStore, ShardedPagedReader};
+use grouper::pipeline::{
+    run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
+};
+use grouper::records::Example;
+use grouper::runtime::MockRuntime;
+use grouper::serve::{RemoteClientSource, ServeOptions, StoreServer};
+use grouper::tokenizer::{VocabBuilder, WordPiece};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn materialize_sharded(dir: &Path, shards: usize) -> (SyntheticTextDataset, WordPiece) {
+    let mut spec = DatasetSpec::fedccnews_mini(24, 77);
+    spec.max_group_words = 800;
+    let ds = SyntheticTextDataset::new(spec);
+    run_partition_paged(
+        &ds,
+        &FeatureKey::new("domain"),
+        dir,
+        "train",
+        &PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() },
+        &PagedPartitionOptions { shards, ..Default::default() },
+    )
+    .unwrap();
+    let mut vb = VocabBuilder::new();
+    for text in ds.stream_all_text() {
+        vb.feed(&text);
+    }
+    (ds, vb.build(64))
+}
+
+fn fed(rounds: usize) -> FedConfig {
+    FedConfig {
+        algorithm: FedAlgorithm::FedAvg,
+        rounds,
+        cohort_size: 4,
+        tau: 3,
+        client_lr: 0.1,
+        server_lr: 1e-3,
+        schedule: ScheduleKind::Constant,
+        shuffle_buffer: 8,
+        seed: 5,
+    }
+}
+
+fn refreshing_paged(dir: &Path, prefix: &'static str) -> Arc<dyn ClientSource> {
+    let dir = dir.to_path_buf();
+    Arc::new(
+        RefreshingSource::new(Box::new(move || {
+            Ok(Arc::new(PagedReader::open_snapshot(&dir, prefix, 32)?) as Arc<dyn ClientSource>)
+        }))
+        .unwrap(),
+    )
+}
+
+/// Satellite 1: over a quiescent store, refresh-source training (with
+/// and without prefetch) is bit-identical to the classic frozen-
+/// snapshot path — metrics and parameters — for a single paged store,
+/// a sharded set, and a remote connection.
+#[test]
+fn quiescent_refresh_matches_classic_path_for_all_backends() {
+    let dir = tmp("grouper_live_ingest_bitident");
+    let (ds, wp) = materialize_sharded(&dir, 4);
+    let single_dir = dir.join("single");
+    drop(PagedStore::build(&ds, &FeatureKey::new("domain"), &single_dir, "train", 32).unwrap());
+
+    let mock = MockRuntime::standard();
+    let tc_classic = TrainerConfig::new(fed(5)).with_read_workers(2);
+
+    let sharded: Arc<dyn ClientSource> =
+        Arc::new(ShardedPagedReader::open_snapshot(&dir, "train", 16).unwrap());
+    let reference = train_with_source(&mock, &sharded, &wp, &tc_classic).unwrap();
+
+    let server =
+        StoreServer::bind(&dir, "train", "127.0.0.1:0", ServeOptions::default()).unwrap();
+    let handle = server.spawn().unwrap();
+    let addr = handle.addr().to_string();
+
+    for prefetch in [false, true] {
+        let tc = tc_classic.clone().with_refresh_source(true).with_prefetch(prefetch);
+        let cases: Vec<(&str, Arc<dyn ClientSource>)> = vec![
+            ("paged", refreshing_paged(&single_dir, "train")),
+            ("sharded", {
+                let d = dir.clone();
+                Arc::new(
+                    RefreshingSource::new(Box::new(move || {
+                        Ok(Arc::new(ShardedPagedReader::open_snapshot(&d, "train", 16)?)
+                            as Arc<dyn ClientSource>)
+                    }))
+                    .unwrap(),
+                )
+            }),
+            ("remote", Arc::new(RemoteClientSource::connect(&addr).unwrap())),
+        ];
+        for (name, src) in cases {
+            assert_eq!(
+                src.group_keys(),
+                sharded.group_keys(),
+                "{name} backend disagrees on the key universe"
+            );
+            let out = train_with_source(&mock, &src, &wp, &tc).unwrap();
+            assert_eq!(
+                out.params, reference.params,
+                "{name} refresh training (prefetch={prefetch}) diverged from classic params"
+            );
+            assert_eq!(
+                out.loss_curve(),
+                reference.loss_curve(),
+                "{name} refresh training (prefetch={prefetch}) diverged from classic metrics"
+            );
+        }
+    }
+}
+
+/// Satellite 2: seeded ingest + checkpoint + compaction churn. Each
+/// "round": step the writer, refresh the reader, assert epoch
+/// monotonicity, fetch a cohort twice (byte-stable within the round)
+/// and decode every group cleanly.
+#[test]
+fn churn_soak_decodes_cleanly_with_monotone_epochs() {
+    let dir = tmp("grouper_live_ingest_soak");
+    let mut store = PagedStore::create(&dir, "live", 32).unwrap();
+    for g in 0..12 {
+        let key = format!("seed-{g:02}");
+        for d in 0..6 {
+            store.append(key.as_bytes(), &Example::text(&format!("doc {d} of {key}"))).unwrap();
+        }
+    }
+    store.commit().unwrap();
+    store.checkpoint().unwrap();
+
+    // Aggressive churn: checkpoint every step, compact every third
+    // checkpoint, mint a new group every 7th append.
+    let cfg = IngestConfig {
+        seed: 11,
+        examples_per_step: 9,
+        new_group_every: 7,
+        checkpoint_every: 1,
+        compact_every: 3,
+    };
+    let mut runner = IngestRunner::new(IngestTarget::Single(store), cfg).unwrap();
+
+    let src = refreshing_paged(&dir, "live");
+    let mut last_epoch = src.source_epochs()[0];
+    let first_epoch = last_epoch;
+    let mut seen_minted_group = false;
+    for round in 0..10 {
+        runner.run_steps(2).unwrap();
+        assert!(src.refresh().unwrap(), "round {round}: refresh must report a swap");
+        let epoch = src.source_epochs()[0];
+        assert!(
+            epoch >= last_epoch,
+            "round {round}: epoch regressed {last_epoch} -> {epoch}"
+        );
+        last_epoch = epoch;
+
+        let keys = src.group_keys();
+        assert!(!keys.is_empty());
+        seen_minted_group |= keys.iter().any(|k| k.starts_with(b"ingest-"));
+        let step = (keys.len() / 4).max(1);
+        let cohort: Vec<Vec<u8>> = keys.iter().step_by(step).cloned().collect();
+
+        let first = src.fetch_groups(&cohort).unwrap();
+        let second = src.fetch_groups(&cohort).unwrap();
+        for (ga, gb) in first.into_iter().zip(second) {
+            let mut ga: StreamedGroup = ga.expect("sampled key must resolve");
+            let gb: StreamedGroup = gb.expect("sampled key must resolve");
+            assert_eq!(
+                ga.framed_bytes(),
+                gb.framed_bytes(),
+                "round {round}: within-round fetches are not byte-stable"
+            );
+            let examples = ga.examples().expect("cohort group must decode cleanly");
+            assert_eq!(examples.len() as u64, ga.num_examples);
+            assert!(!examples.is_empty());
+        }
+    }
+    assert!(last_epoch > first_epoch, "checkpoint churn never advanced the visible epoch");
+    assert!(seen_minted_group, "newly arriving groups never became visible to refreshes");
+    let stats = runner.stats();
+    assert_eq!(stats.steps, 20);
+    assert_eq!(stats.checkpoints, 20);
+    assert!(stats.compactions >= 6);
+    assert!(stats.new_groups > 0);
+}
+
+/// A wrapper that serves the first `fail_after` group reads from a real
+/// backend, then poisons every later read — panicking or failing,
+/// depending on `panic_mode`.
+struct FailingSource {
+    inner: Arc<dyn ClientSource>,
+    calls: AtomicU64,
+    fail_after: u64,
+    panic_mode: bool,
+}
+
+impl ClientSource for FailingSource {
+    fn describe(&self) -> String {
+        format!("failing[{}]", self.inner.describe())
+    }
+    fn group_keys(&self) -> Vec<Vec<u8>> {
+        self.inner.group_keys()
+    }
+    fn num_groups(&self) -> usize {
+        self.inner.num_groups()
+    }
+    fn num_examples(&self) -> u64 {
+        self.inner.num_examples()
+    }
+    fn streamed_group(&self, key: &[u8]) -> Result<Option<StreamedGroup>> {
+        if self.calls.fetch_add(1, Ordering::SeqCst) >= self.fail_after {
+            if self.panic_mode {
+                panic!("injected prefetch poison");
+            }
+            anyhow::bail!("injected backend failure");
+        }
+        self.inner.streamed_group(key)
+    }
+}
+
+/// Satellite 3: a poisoned (panicking) or failing prefetch surfaces as
+/// a typed error at the round boundary — the test completing at all
+/// proves the double-buffer never hangs.
+#[test]
+fn poisoned_prefetch_surfaces_typed_error_without_hanging() {
+    let dir = tmp("grouper_live_ingest_poison");
+    let (_, wp) = materialize_sharded(&dir, 1);
+    let mock = MockRuntime::standard();
+
+    // cohort_size 2 ⇒ round 0's synchronous fetch uses calls 0-1, the
+    // round-1 prefetch hits the poison at call 2.
+    for (panic_mode, workers) in [(true, 1usize), (false, 4)] {
+        let inner: Arc<dyn ClientSource> =
+            Arc::new(ShardedPagedReader::open_snapshot(&dir, "train", 16).unwrap());
+        let src: Arc<dyn ClientSource> = Arc::new(FailingSource {
+            inner,
+            calls: AtomicU64::new(0),
+            fail_after: 2,
+            panic_mode,
+        });
+        let mut cfg = fed(4);
+        cfg.cohort_size = 2;
+        let tc = TrainerConfig::new(cfg).with_read_workers(workers).with_prefetch(true);
+        let err = train_with_source(&mock, &src, &wp, &tc)
+            .expect_err("a poisoned prefetch must fail the run");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("prefetch"),
+            "poisoned prefetch (panic={panic_mode}, workers={workers}) \
+             must surface a typed round-boundary error, got: {msg}"
+        );
+    }
+}

@@ -173,7 +173,7 @@ fn connections_are_snapshot_isolated_from_live_writer() {
     let addr = handle.addr().to_string();
 
     let pinned = RemoteClientSource::connect(&addr).unwrap();
-    let pinned_epochs = pinned.epochs().to_vec();
+    let pinned_epochs = pinned.epochs();
     assert_eq!(pinned_epochs.len(), 1);
     let keys = ClientSource::group_keys(&pinned);
     assert_eq!(keys.len(), 8);
@@ -197,7 +197,7 @@ fn connections_are_snapshot_isolated_from_live_writer() {
     assert!(fresh.epochs()[0] > pinned_epochs[0]);
     assert_ne!(framed_payloads(&fresh, &keys), baseline, "new epoch must show appends");
     assert_eq!(framed_payloads(&pinned, &keys), baseline, "pinned epoch drifted");
-    assert_eq!(pinned.epochs(), &pinned_epochs[..]);
+    assert_eq!(pinned.epochs(), pinned_epochs);
     assert!(
         ClientSource::streamed_group(&pinned, b"group-new").unwrap().is_none(),
         "pinned snapshot must not see groups from later epochs"
@@ -387,4 +387,99 @@ fn connect_to_dead_port_errors_after_bounded_backoff() {
     let err = RemoteClientSource::connect_with(&addr, &opts).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("3 attempts"), "expected bounded-retry error, got: {msg}");
+}
+
+/// Regression (PR 7 satellite): a server restart is survived by a
+/// transparent reconnect to the cached last-good address — one bounded
+/// attempt per failing call instead of the full initial-connect backoff
+/// budget — and any successful fetch resets the backoff clock to zero.
+#[test]
+fn reconnect_after_server_restart_is_fast_and_resets_backoff() {
+    let vfs: Arc<dyn Vfs> = Arc::new(MemVfs::new());
+    let dir = PathBuf::from("/mem");
+    let mut store = PagedStore::create_with(vfs.as_ref(), &dir, "data", 16).unwrap();
+    for i in 0..4 {
+        store.append(format!("g{i}").as_bytes(), &ex(&format!("doc {i}"))).unwrap();
+    }
+    store.commit().unwrap();
+    store.checkpoint().unwrap();
+
+    let server = StoreServer::bind_with(
+        Arc::clone(&vfs),
+        &dir,
+        "data",
+        "127.0.0.1:0",
+        ServeOptions::default(),
+    )
+    .unwrap();
+    let handle = server.spawn().unwrap();
+    let addr = handle.addr().to_string();
+
+    // Backoff tuned so the old behaviour (full budget per call:
+    // 200+400+800+1600ms of sleeps) is unmistakably slower than the
+    // fixed behaviour (level-0 attempt: no sleep at all).
+    let opts = RemoteOptions {
+        connect_timeout: Duration::from_millis(500),
+        read_timeout: Duration::from_secs(10),
+        connect_retries: 4,
+        backoff_base: Duration::from_millis(200),
+    };
+    let conn = RemoteClientSource::connect_with(&addr, &opts).unwrap();
+    let epochs_before = conn.epochs();
+    let before = framed_payloads(&conn, &[b"g0".to_vec()]);
+    assert_eq!(conn.reconnects(), 0);
+    assert_eq!(conn.backoff_level(), 0);
+
+    // Restart: kill the server, advance the store one checkpoint, and
+    // rebind the SAME address (brief retry absorbs rebind races).
+    drop(handle);
+    store.append(b"g0", &ex("post-restart arrival")).unwrap();
+    store.commit().unwrap();
+    store.checkpoint().unwrap();
+    let handle2 = {
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            match StoreServer::bind_with(
+                Arc::clone(&vfs),
+                &dir,
+                "data",
+                addr.as_str(),
+                ServeOptions::default(),
+            ) {
+                Ok(s) => break s.spawn().unwrap(),
+                Err(e) => {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "could not rebind {addr}: {e:#}"
+                    );
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    };
+
+    // The next fetch rides one transparent reconnect onto the server's
+    // freshest checkpoint, and the success resets the backoff clock.
+    let after = framed_payloads(&conn, &[b"g0".to_vec()]);
+    assert_eq!(conn.reconnects(), 1, "expected exactly one transparent reconnect");
+    assert_eq!(conn.backoff_level(), 0, "a successful fetch must reset the backoff clock");
+    assert_ne!(after, before, "the reconnected session must pin the new checkpoint");
+    let epochs_after = conn.epochs();
+    assert!(epochs_after[0] > epochs_before[0], "restart straddled a checkpoint");
+
+    // Kill the server for good: each failing call makes ONE bounded
+    // attempt — far under the 3s of sleeps the full budget would burn —
+    // and the backoff level climbs call over call.
+    drop(handle2);
+    let t = std::time::Instant::now();
+    let err = ClientSource::streamed_group(&conn, b"g0").unwrap_err();
+    assert!(
+        t.elapsed() < Duration::from_millis(1500),
+        "a failing call burned the full backoff budget: {:?}",
+        t.elapsed()
+    );
+    assert!(format!("{err:#}").contains("reconnect"), "untyped reconnect error: {err:#}");
+    assert_eq!(conn.backoff_level(), 1);
+    let _ = ClientSource::streamed_group(&conn, b"g0").unwrap_err();
+    assert_eq!(conn.backoff_level(), 2, "consecutive failures must raise the backoff level");
 }
