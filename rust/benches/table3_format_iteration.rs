@@ -30,6 +30,9 @@ use grouper::formats::{
 use grouper::pipeline::{
     run_partition, run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
 };
+use grouper::store::cache::CachePolicy;
+use grouper::store::shared::ReadOpts;
+use grouper::store::vfs::StdVfs;
 use grouper::tokenizer::VocabBuilder;
 use grouper::util::rng::Rng;
 use grouper::util::table::Table;
@@ -104,6 +107,10 @@ fn main() {
     let mut concurrent = Table::new(
         "Table 3c — paged store, one shared reader, N threads over the same random order",
         &["Dataset", "1 thread", "2 threads", "4 threads", "8 threads", "speedup@8"],
+    );
+    let mut hot = Table::new(
+        "Table 3e — paged iteration through the opt-in hot read path (fresh reader per cell)",
+        &["Dataset", "LRU/pread", "+mmap", "+vectored(8)", "2Q cache", "all on", "all-on speedup"],
     );
     let mut modeled = Table::new(
         "Table 3b — same iteration + cold-storage model (100 µs/random read, 200 MB/s)",
@@ -207,6 +214,35 @@ fn main() {
             format!("{:.2}x", conc[0].mean / conc[3].mean),
         ]);
 
+        // Table 3e: the same random-order pass through the opt-in hot
+        // read path. Every variant opens a fresh reader (cold cache) so
+        // the combinations compare fairly; "all on" is the intended
+        // production setting for read-only serving.
+        let hot_variant = |opts: ReadOpts| {
+            let reader =
+                PagedReader::open_with_opts(&StdVfs, &w.dir, "paged", PAGED_CACHE_PAGES, opts)
+                    .unwrap();
+            time_trials(TRIALS, || {
+                let mut n = 0usize;
+                reader.visit_all(&order, |_, _| n += 1).unwrap();
+                assert_eq!(n, w.examples);
+            })
+        };
+        let mmap_time = hot_variant(ReadOpts { mmap: true, ..Default::default() });
+        let vect_time = hot_variant(ReadOpts { vectored_batch: 8, ..Default::default() });
+        let twoq_time = hot_variant(ReadOpts { policy: CachePolicy::TwoQ, ..Default::default() });
+        let all_time =
+            hot_variant(ReadOpts { mmap: true, vectored_batch: 8, policy: CachePolicy::TwoQ });
+        hot.row(vec![
+            w.name.into(),
+            format!("{paged_time}"),
+            format!("{mmap_time}"),
+            format!("{vect_time}"),
+            format!("{twoq_time}"),
+            format!("{all_time}"),
+            format!("{:.2}x", paged_time.mean / all_time.mean.max(1e-12)),
+        ]);
+
         table.row(vec![
             w.name.into(),
             format!("{}", w.examples),
@@ -221,6 +257,10 @@ fn main() {
         bench_metrics.push((format!("{}.streaming_iter_s", w.name), stream_time.mean));
         bench_metrics.push((format!("{}.paged_iter_s", w.name), paged_time.mean));
         bench_metrics.push((format!("{}.paged_iter_8threads_s", w.name), conc[3].mean));
+        bench_metrics.push((format!("{}.paged_iter_mmap_s", w.name), mmap_time.mean));
+        bench_metrics.push((format!("{}.paged_iter_vectored_s", w.name), vect_time.mean));
+        bench_metrics.push((format!("{}.paged_iter_2q_s", w.name), twoq_time.mean));
+        bench_metrics.push((format!("{}.paged_iter_hot_s", w.name), all_time.mean));
 
         // Storage-model column: counters from the materializations.
         let total_bytes: u64 = index.entries.iter().map(|e| e.bytes).sum();
@@ -269,10 +309,12 @@ fn main() {
     }
     table.print();
     concurrent.print();
+    hot.print();
     modeled.print();
     modeled.write_csv("results/table3b_storage_model.csv").unwrap();
     table.write_csv("results/table3_format_iteration.csv").unwrap();
     concurrent.write_csv("results/table3c_concurrent_readers.csv").unwrap();
+    hot.write_csv("results/table3e_hot_read_path.csv").unwrap();
     let shard_rows = table3d_sharded(&mut bench_metrics);
     common::write_bench_json_sharded("table3_format_iteration", &bench_metrics, &shard_rows);
     println!(

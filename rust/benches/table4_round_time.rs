@@ -22,6 +22,7 @@ fn main() {
     table4c_sharded_cohort_fetch();
     table4d_remote_cohort_fetch();
     table4e_live_ingest();
+    table4f_group_commit_ingest();
 
     let model = std::env::var("GROUPER_BENCH_MODEL").unwrap_or_else(|_| "tiny".into());
     if !common::have_artifacts(&model) {
@@ -276,6 +277,73 @@ fn table4d_remote_cohort_fetch() {
     t.print();
     t.write_csv("results/table4d_remote_fetch.csv").unwrap();
     common::write_bench_json("table4_remote_fetch", &metrics);
+}
+
+/// Table 4f: commit-heavy ingest into a sharded paged set, WAL group
+/// commit off vs on. Each trial appends a fixed example stream in
+/// small committed batches — the ingest shape where fsync cost
+/// dominates — so the "off" column pays `shards` serial fsyncs per
+/// batch while "on" flushes every shard's WAL first and then pays the
+/// fsyncs in parallel. The speedup should grow with shard count and
+/// vanish at 1 shard (group commit degenerates to the serial path).
+fn table4f_group_commit_ingest() {
+    use grouper::formats::PagedShardSet;
+    use grouper::records::Example;
+    use grouper::util::timer::time_trials;
+
+    let groups = common::scaled(200).max(32);
+    let batches = common::scaled(60).max(8);
+    let per_batch = 8usize;
+
+    let mut t = Table::new(
+        "Table 4f — sharded ingest, commit per batch: serial fsyncs vs WAL group commit",
+        &["Shards", "Group commit", "Ingest (s)", "Speedup vs serial"],
+    );
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    for shards in [1usize, 4, 8] {
+        let mut serial = 0.0f64;
+        for group_commit in [false, true] {
+            let label = if group_commit { "on" } else { "off" };
+            let dir = common::bench_dir("table4f").join(format!("s{shards}_{label}"));
+            let timing = time_trials(3, || {
+                // Fresh store per trial: commit cost must include every
+                // batch's WAL work, never a warm tree from the last run.
+                let _ = std::fs::remove_dir_all(&dir);
+                let mut set = PagedShardSet::create(&dir, "gc", shards, 64, 0).unwrap();
+                set.set_group_commit(group_commit);
+                let mut i = 0usize;
+                for _ in 0..batches {
+                    for _ in 0..per_batch {
+                        let key = format!("g{:04}", i % groups);
+                        set.append(key.as_bytes(), &Example::text(&format!("ex{i}")))
+                            .unwrap();
+                        i += 1;
+                    }
+                    set.commit().unwrap();
+                }
+            });
+            if !group_commit {
+                serial = timing.mean;
+            }
+            t.row(vec![
+                format!("{shards}"),
+                label.to_string(),
+                format!("{timing}"),
+                format!("{:.2}x", serial / timing.mean.max(1e-12)),
+            ]);
+            metrics.push((
+                format!("fedsynth.group_commit.shards{shards}_{label}_s"),
+                timing.mean,
+            ));
+        }
+    }
+    t.print();
+    t.write_csv("results/table4f_group_commit.csv").unwrap();
+    common::write_bench_json("table4_group_commit", &metrics);
+    println!(
+        "(the \"on\" rows flush every shard's WAL before any fsync, then sync shards in \
+         parallel — one commit barrier instead of `shards` serial fsyncs)"
+    );
 }
 
 /// Table 4e: round-time degradation under live ingestion — federated

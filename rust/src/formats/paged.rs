@@ -84,8 +84,8 @@ use crate::store::cache::CacheStats;
 use crate::store::page::{Page, PageId, PAGE_SIZE};
 use crate::store::pager::{PageRead, Pager};
 use crate::store::pins::{self, DiskPin};
-use crate::store::shared::{self, EpochPin, ReadSnapshot, SharedPager};
-use crate::store::vfs::{OpenMode, StdVfs, Vfs, VfsCursor, VfsFile};
+use crate::store::shared::{self, EpochPin, ReadOpts, ReadSnapshot, SharedPager};
+use crate::store::vfs::{map_read_only, OpenMode, StdVfs, Vfs, VfsCursor, VfsFile};
 use crate::store::wal::{self, WalWriter};
 
 /// Format version 02: version 01 headers had no free-list fields.
@@ -727,6 +727,32 @@ impl PagedStore {
         Ok(())
     }
 
+    /// The write half of [`PagedStore::commit`]: flush the WAL's append
+    /// buffer (and truncate any dirty tail) without fsyncing. Nothing is
+    /// durable until a later [`PagedStore::commit_sync`] succeeds. Used
+    /// by the sharded store's group commit to flush every shard first
+    /// and amortize the fsyncs afterwards.
+    ///
+    /// # Errors
+    /// Any WAL truncation/flush failure, or a poisoned store.
+    pub fn commit_flush(&mut self) -> Result<()> {
+        self.check_poisoned()?;
+        self.wal.commit_no_sync()?;
+        Ok(())
+    }
+
+    /// The durability half of [`PagedStore::commit`]: fsync the WAL.
+    /// Only a durability promise for appends already flushed by
+    /// [`PagedStore::commit_flush`] (with nothing appended in between).
+    ///
+    /// # Errors
+    /// Any fsync failure, or a poisoned store.
+    pub fn commit_sync(&mut self) -> Result<()> {
+        self.check_poisoned()?;
+        self.wal.sync()?;
+        Ok(())
+    }
+
     /// Full checkpoint: data + index durable (ordered: data, free-list
     /// trunk chain + tree pages, then the single-page header swap), WAL
     /// reset, COW watermark advanced, and this epoch's frees published
@@ -1087,7 +1113,24 @@ impl PagedReader {
         prefix: &str,
         cache_pages: usize,
     ) -> Result<PagedReader> {
-        PagedReader::open_inner(vfs, dir, prefix, cache_pages, true)
+        PagedReader::open_inner(vfs, dir, prefix, cache_pages, true, ReadOpts::default())
+    }
+
+    /// [`PagedReader::open_with`] with explicit hot-read-path options
+    /// ([`ReadOpts`]): mmap-backed reads, vectored group-scan prefetch,
+    /// and the cache replacement policy. All opt-in; the defaults
+    /// reproduce [`PagedReader::open_with`] exactly.
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedReader::open`].
+    pub fn open_with_opts(
+        vfs: &dyn Vfs,
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+        opts: ReadOpts,
+    ) -> Result<PagedReader> {
+        PagedReader::open_inner(vfs, dir, prefix, cache_pages, true, opts)
     }
 
     /// Open the last **checkpointed** snapshot at `dir/<prefix>` on the
@@ -1121,7 +1164,24 @@ impl PagedReader {
         prefix: &str,
         cache_pages: usize,
     ) -> Result<PagedReader> {
-        PagedReader::open_inner(vfs, dir, prefix, cache_pages, false)
+        PagedReader::open_inner(vfs, dir, prefix, cache_pages, false, ReadOpts::default())
+    }
+
+    /// [`PagedReader::open_snapshot_with`] with explicit hot-read-path
+    /// options ([`ReadOpts`]). Like the plain snapshot open it never
+    /// touches the WAL and never writes a store byte, so it stays safe
+    /// to run concurrently with a live writer.
+    ///
+    /// # Errors
+    /// Same conditions as [`PagedReader::open_snapshot_with`].
+    pub fn open_snapshot_with_opts(
+        vfs: &dyn Vfs,
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+        opts: ReadOpts,
+    ) -> Result<PagedReader> {
+        PagedReader::open_inner(vfs, dir, prefix, cache_pages, false, opts)
     }
 
     fn open_inner(
@@ -1130,6 +1190,7 @@ impl PagedReader {
         prefix: &str,
         cache_pages: usize,
         recover_hot_wal: bool,
+        opts: ReadOpts,
     ) -> Result<PagedReader> {
         let cache_pages = cache_pages.max(2);
         if recover_hot_wal {
@@ -1146,7 +1207,7 @@ impl PagedReader {
             }
         }
         let index_path = pstore_path(dir, prefix);
-        let pager = SharedPager::open_with(vfs, &index_path, cache_pages)?;
+        let pager = SharedPager::open_with_opts(vfs, &index_path, cache_pages, opts)?;
         // The checkpointing writer rewrites page 0 in place; a read that
         // races it can be torn. The header checksum detects that, and a
         // brief retry rides out the in-flight write.
@@ -1242,6 +1303,14 @@ impl PagedReader {
             }
             Err(e) => return Err(e).context("opening paged data file"),
         };
+        let data_file = if opts.mmap {
+            // Same best-effort mapping the index handle got inside the
+            // pager: bit-identical reads, plain pread fallback whenever
+            // the file has no OS descriptor or the map is refused.
+            map_read_only(&data_file).unwrap_or(data_file)
+        } else {
+            data_file
+        };
         if data_file.len()? < header.data_len {
             bail!(
                 "paged data file {} is shorter ({}) than the committed length {}",
@@ -1312,6 +1381,13 @@ impl PagedReader {
     /// Aggregate index-cache hit/miss/eviction counters (all threads).
     pub fn cache_stats(&self) -> CacheStats {
         self.pager.cache_stats()
+    }
+
+    /// Uncached header (page 0) reads so far. Together with
+    /// [`PagedReader::cache_stats`] this closes the accounting identity
+    /// `pages_read == misses + header_reads` (absent I/O errors).
+    pub fn header_reads(&self) -> u64 {
+        self.pager.header_reads()
     }
 
     /// Index tree depth (1 = single leaf).

@@ -56,6 +56,7 @@ use crate::formats::streaming::StreamedGroup;
 use crate::records::crc32c::crc32c;
 use crate::records::Example;
 use crate::store::cache::CacheStats;
+use crate::store::shared::ReadOpts;
 use crate::store::vfs::{OpenMode, StdVfs, Vfs};
 use crate::util::rng::fnv1a;
 use crate::util::threadpool::parallel_for_each_mut;
@@ -407,6 +408,10 @@ pub struct PagedShardSet {
     /// (captured at create, before the manifest overwrite); truncated
     /// by the first checkpoint — i.e. only once this set is durable.
     stale_prefixes: Vec<String>,
+    /// When set, [`PagedShardSet::commit`] flushes every shard's WAL
+    /// first and then runs the per-shard fsyncs in parallel (group
+    /// commit) instead of strictly serializing flush+fsync per shard.
+    group_commit: bool,
 }
 
 impl PagedShardSet {
@@ -502,6 +507,7 @@ impl PagedShardSet {
             stores,
             shard_prefixes,
             stale_prefixes,
+            group_commit: false,
         })
     }
 
@@ -541,6 +547,7 @@ impl PagedShardSet {
             stores,
             shard_prefixes: manifest.shard_prefixes,
             stale_prefixes: Vec::new(),
+            group_commit: false,
         })
     }
 
@@ -569,14 +576,52 @@ impl PagedShardSet {
         self.stores[s].append(group, example)
     }
 
+    /// Opt in to (or out of) group commit: when enabled,
+    /// [`PagedShardSet::commit`] flushes every shard's WAL buffer first,
+    /// then runs the per-shard fsyncs **in parallel**, so a commit
+    /// spanning S shards pays ~1 fsync latency instead of S. The
+    /// durability promise is unchanged — commit still returns `Ok` only
+    /// after *every* shard's WAL is fsynced.
+    pub fn set_group_commit(&mut self, on: bool) {
+        self.group_commit = on;
+    }
+
+    /// Whether group commit is enabled (see
+    /// [`PagedShardSet::set_group_commit`]).
+    pub fn group_commit(&self) -> bool {
+        self.group_commit
+    }
+
     /// Durability point: fsync every shard's WAL.
     ///
+    /// With group commit enabled the fsyncs run in parallel behind a
+    /// barrier: every shard's buffer is flushed first, then all shards
+    /// sync, and commit returns `Ok` only when every sync did. A crash
+    /// part-way through the sync phase is exactly as safe as one
+    /// part-way through the serial loop: each shard's WAL recovery is
+    /// independent, so every shard comes back at either its pre- or
+    /// post-commit prefix (the crash matrix exercises both orders).
+    ///
     /// # Errors
-    /// The first shard commit failure.
+    /// The first shard commit failure (in shard order; with group
+    /// commit, the remaining fsyncs still run before this returns).
     pub fn commit(&mut self) -> Result<()> {
-        for store in &mut self.stores {
-            store.commit()?;
+        if !self.group_commit || self.stores.len() == 1 {
+            for store in &mut self.stores {
+                store.commit()?;
+            }
+            return Ok(());
         }
+        // Flush phase: cheap buffered writes, strictly ordered so a
+        // flush failure surfaces before any fsync is paid.
+        for store in &mut self.stores {
+            store.commit_flush()?;
+        }
+        // Sync phase: the expensive fsyncs, amortized across shards.
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let results: Vec<Result<()>> =
+            parallel_for_each_mut(&mut self.stores, workers, |_, store| store.commit_sync());
+        results.into_iter().collect::<Result<Vec<_>>>()?;
         Ok(())
     }
 
@@ -729,7 +774,22 @@ impl ShardedPagedReader {
         prefix: &str,
         cache_pages: usize,
     ) -> Result<ShardedPagedReader> {
-        ShardedPagedReader::open_inner(vfs, dir, prefix, cache_pages, true)
+        ShardedPagedReader::open_inner(vfs, dir, prefix, cache_pages, true, ReadOpts::default())
+    }
+
+    /// [`ShardedPagedReader::open_with`] with explicit hot-read-path
+    /// options ([`ReadOpts`]), applied to every shard reader.
+    ///
+    /// # Errors
+    /// Same conditions as [`ShardedPagedReader::open_with`].
+    pub fn open_with_opts(
+        vfs: &dyn Vfs,
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+        opts: ReadOpts,
+    ) -> Result<ShardedPagedReader> {
+        ShardedPagedReader::open_inner(vfs, dir, prefix, cache_pages, true, opts)
     }
 
     /// Open the last **checkpointed** snapshot of every shard at
@@ -762,7 +822,23 @@ impl ShardedPagedReader {
         prefix: &str,
         cache_pages: usize,
     ) -> Result<ShardedPagedReader> {
-        ShardedPagedReader::open_inner(vfs, dir, prefix, cache_pages, false)
+        ShardedPagedReader::open_inner(vfs, dir, prefix, cache_pages, false, ReadOpts::default())
+    }
+
+    /// [`ShardedPagedReader::open_snapshot_with`] with explicit
+    /// hot-read-path options ([`ReadOpts`]), applied to every shard
+    /// reader. Still performs zero writes.
+    ///
+    /// # Errors
+    /// Same conditions as [`ShardedPagedReader::open_snapshot_with`].
+    pub fn open_snapshot_with_opts(
+        vfs: &dyn Vfs,
+        dir: &Path,
+        prefix: &str,
+        cache_pages: usize,
+        opts: ReadOpts,
+    ) -> Result<ShardedPagedReader> {
+        ShardedPagedReader::open_inner(vfs, dir, prefix, cache_pages, false, opts)
     }
 
     fn open_inner(
@@ -771,14 +847,15 @@ impl ShardedPagedReader {
         prefix: &str,
         cache_pages: usize,
         recover_hot_wal: bool,
+        opts: ReadOpts,
     ) -> Result<ShardedPagedReader> {
         let manifest = PagedSetManifest::read_with(vfs, dir, prefix)?;
         let mut shards = Vec::with_capacity(manifest.shards());
         for sp in &manifest.shard_prefixes {
             let shard = if recover_hot_wal {
-                PagedReader::open_with(vfs, dir, sp, cache_pages)
+                PagedReader::open_with_opts(vfs, dir, sp, cache_pages, opts)
             } else {
-                PagedReader::open_snapshot_with(vfs, dir, sp, cache_pages)
+                PagedReader::open_snapshot_with_opts(vfs, dir, sp, cache_pages, opts)
             };
             shards.push(shard.with_context(|| format!("opening shard store {sp}"))?);
         }
@@ -849,6 +926,16 @@ impl ShardedPagedReader {
         self.shards[self.shard_for(group)].visit_group(group, f)
     }
 
+    /// [`ShardedPagedReader::visit_group`] without decoding: `f`
+    /// receives each record's raw bytes in append order and returns
+    /// whether to continue (see [`PagedReader::visit_group_raw`]).
+    ///
+    /// # Errors
+    /// Same conditions as [`ShardedPagedReader::visit_group`].
+    pub fn visit_group_raw(&self, group: &[u8], f: impl FnMut(&[u8]) -> bool) -> Result<bool> {
+        self.shards[self.shard_for(group)].visit_group_raw(group, f)
+    }
+
     /// Iterate groups in `order` (or one thread's slice of it).
     ///
     /// # Errors
@@ -884,6 +971,12 @@ impl ShardedPagedReader {
     /// across all reading threads).
     pub fn pages_read(&self) -> u64 {
         self.shards.iter().map(|r| r.pages_read()).sum()
+    }
+
+    /// Uncached header (page 0) reads, summed across shards (see
+    /// [`PagedReader::header_reads`]).
+    pub fn header_reads(&self) -> u64 {
+        self.shards.iter().map(|r| r.header_reads()).sum()
     }
 
     /// Aggregate index-cache counters, summed across shards.

@@ -7,6 +7,7 @@
 //!                   [--format streaming|paged|hierarchical] [--cache-pages N]
 //!                   [--shards S] [--auto-compact-threshold F]
 //! grouper stats     --dir work/fedc4 --prefix data [--format streaming|paged] [--cache-pages N]
+//!                   [--mmap true] [--vectored N] [--cache-policy lru|2q]
 //! grouper compact   --dir work/fedc4 --prefix data [--cache-pages N]
 //! grouper vocab     --dataset fedc4-mini --groups 500 --size 1024 --out work/vocab.txt
 //! grouper serve     --dir work/fedc4 --prefix data [--addr 127.0.0.1:4700]
@@ -14,6 +15,7 @@
 //! grouper train     --config configs/fig4_fedavg.toml [--read-workers N]
 //!                   [--source DIR|remote://host:port [--source-prefix P]]
 //!                   [--refresh-source true] [--prefetch true] [--ingest-rate N]
+//!                   [--mmap true] [--vectored N] [--cache-policy lru|2q] [--group-commit true]
 //! grouper personalize --config configs/fig4_fedavg.toml [--read-workers N]
 //!                   [--source ...] [--eval-source DIR|remote://host:port]
 //! grouper info      [--artifacts artifacts] [--dir DIR --prefix P]
@@ -39,6 +41,17 @@
 //! remote://host:port` consumes it like any local backend. `--source`
 //! also accepts a directory, auto-detected as a `.pset` sharded set, a
 //! `.pstore` single store, or a `.gindex` streaming materialization.
+//!
+//! Hot read path (opt-in, defaults reproduce the classic behavior):
+//! `--mmap true` serves read-only store files from a shared memory
+//! mapping where the platform allows it, `--vectored N` batches up to N
+//! adjacent index pages per prefetch read during group scans, and
+//! `--cache-policy 2q` switches the reader's page cache to a
+//! scan-resistant two-queue policy with one cross-shard frame budget.
+//! All three change only speed, never results. `--group-commit true`
+//! makes a sharded live-ingest writer fsync its shard WALs in parallel
+//! behind a barrier (same durability promise, ~1 fsync latency per
+//! commit instead of S).
 //!
 //! Live ingestion: `train --refresh-source true` re-pins the freshest
 //! committed checkpoint at every round boundary (bit-stable within a
@@ -78,6 +91,9 @@ use grouper::pipeline::{
 };
 use grouper::runtime::{ModelBackend, ModelRuntime};
 use grouper::serve::{RemoteClientSource, ServeOptions, StoreServer};
+use grouper::store::cache::CachePolicy;
+use grouper::store::shared::ReadOpts;
+use grouper::store::vfs::StdVfs;
 use grouper::tokenizer::{VocabBuilder, WordPiece};
 use grouper::util::humanize;
 use grouper::util::table::Table;
@@ -131,7 +147,9 @@ fn print_usage() {
          \u{20}               (--format paged reads a paged store and reports\n\
          \u{20}               index depth, cache hit rate under --cache-pages,\n\
          \u{20}               and live/free/total index pages; a .pset manifest\n\
-         \u{20}               is auto-detected and adds per-shard rows)\n\
+         \u{20}               is auto-detected and adds per-shard rows;\n\
+         \u{20}               --mmap/--vectored/--cache-policy tune the hot\n\
+         \u{20}               read path, see train)\n\
          \u{20}  compact      reclaim a paged store's free pages: migrate live\n\
          \u{20}               index pages toward the file head and truncate the\n\
          \u{20}               tail (partition --auto-compact-threshold F does\n\
@@ -160,7 +178,13 @@ fn print_usage() {
          \u{20}               fetch with the current round's compute (results\n\
          \u{20}               bit-identical either way); --ingest-rate N spawns\n\
          \u{20}               an in-process seeded writer appending ~N examples/s\n\
-         \u{20}               with checkpoint+compaction churn into --source\n\
+         \u{20}               with checkpoint+compaction churn into --source;\n\
+         \u{20}               hot read path (opt-in, results identical):\n\
+         \u{20}               --mmap true maps read-only store files,\n\
+         \u{20}               --vectored N batches group-scan index reads,\n\
+         \u{20}               --cache-policy 2q is scan-resistant caching;\n\
+         \u{20}               --group-commit true fsyncs shard WALs in parallel\n\
+         \u{20}               when ingesting into a sharded set\n\
          \u{20}  personalize  train + pre/post-personalization eval (Table 5);\n\
          \u{20}               --eval-source reads eval clients from a shared\n\
          \u{20}               store too\n\
@@ -218,6 +242,24 @@ impl Flags {
             Some(v) => bail!("--{k} must be true or false, got {v:?}"),
         }
     }
+}
+
+/// Parse the opt-in hot-read-path flags shared by every command that
+/// opens a paged reader: `--mmap true` (mmap-backed read-only files),
+/// `--vectored N` (batched group-scan prefetch, 0 = off) and
+/// `--cache-policy lru|2q` (2q = scan-resistant cache with one shared
+/// frame budget). Defaults reproduce the classic read path exactly.
+fn read_opts(f: &Flags) -> Result<ReadOpts> {
+    let policy = match f.get("cache-policy") {
+        None => CachePolicy::Lru,
+        Some(v) => CachePolicy::parse(v)
+            .with_context(|| format!("--cache-policy must be lru or 2q, got {v:?}"))?,
+    };
+    Ok(ReadOpts {
+        mmap: f.bool_or("mmap", false)?,
+        vectored_batch: f.usize_or("vectored", 0)?,
+        policy,
+    })
 }
 
 fn make_dataset(name: &str, groups: usize, seed: u64) -> Result<SyntheticTextDataset> {
@@ -403,10 +445,11 @@ fn cmd_stats(f: &Flags) -> Result<()> {
 fn cmd_stats_paged(f: &Flags, dir: &Path, prefix: &str) -> Result<()> {
     let cache_pages =
         f.usize_or("cache-pages", grouper::formats::paged::DEFAULT_CACHE_PAGES)?;
+    let opts = read_opts(f)?;
     if PagedSetManifest::exists(dir, prefix) {
-        return cmd_stats_paged_sharded(f, dir, prefix, cache_pages);
+        return cmd_stats_paged_sharded(f, dir, prefix, cache_pages, opts);
     }
-    let r = PagedReader::open(dir, prefix, cache_pages)?;
+    let r = PagedReader::open_with_opts(&StdVfs, dir, prefix, cache_pages, opts)?;
     let depth = r.index_depth()?;
     let mut order = r.keys().to_vec();
     grouper::util::rng::Rng::new(7).shuffle(&mut order);
@@ -414,13 +457,18 @@ fn cmd_stats_paged(f: &Flags, dir: &Path, prefix: &str) -> Result<()> {
     r.visit_all(&order, |_, _| examples += 1)?;
     let stats = r.cache_stats();
     let mut t = Table::new(
-        &format!("Paged store {}/{prefix} (cache {cache_pages} pages)", dir.display()),
+        &format!(
+            "Paged store {}/{prefix} (cache {cache_pages} pages, {} policy)",
+            dir.display(),
+            opts.policy
+        ),
         &["metric", "value"],
     );
     t.row(vec!["groups".into(), format!("{}", r.num_groups())]);
     t.row(vec!["examples".into(), humanize::count(examples as f64)]);
     t.row(vec!["index depth".into(), format!("{depth}")]);
     t.row(vec!["index pages fetched".into(), format!("{}", r.pages_read())]);
+    t.row(vec!["header page reads".into(), format!("{}", r.header_reads())]);
     t.row(vec![
         "cache hits / misses / evictions".into(),
         format!("{} / {} / {}", stats.hits, stats.misses, stats.evictions),
@@ -456,8 +504,9 @@ fn cmd_stats_paged_sharded(
     dir: &Path,
     prefix: &str,
     cache_pages: usize,
+    opts: ReadOpts,
 ) -> Result<()> {
-    let r = ShardedPagedReader::open(dir, prefix, cache_pages)?;
+    let r = ShardedPagedReader::open_with_opts(&StdVfs, dir, prefix, cache_pages, opts)?;
     if let Some(expected) = f.get("shards") {
         let expected: usize = expected.parse().context("--shards must be an integer")?;
         if expected != r.num_shards() {
@@ -475,15 +524,18 @@ fn cmd_stats_paged_sharded(
     let stats = r.cache_stats();
     let mut t = Table::new(
         &format!(
-            "Sharded paged set {}/{prefix} ({} shards, cache {cache_pages} pages/shard)",
+            "Sharded paged set {}/{prefix} ({} shards, cache {cache_pages} pages/shard, \
+             {} policy)",
             dir.display(),
-            r.num_shards()
+            r.num_shards(),
+            opts.policy
         ),
         &["metric", "value"],
     );
     t.row(vec!["groups".into(), format!("{}", r.num_groups())]);
     t.row(vec!["examples".into(), humanize::count(examples as f64)]);
     t.row(vec!["index pages fetched".into(), format!("{}", r.pages_read())]);
+    t.row(vec!["header page reads".into(), format!("{}", r.header_reads())]);
     t.row(vec![
         "cache hits / misses / evictions".into(),
         format!("{} / {} / {}", stats.hits, stats.misses, stats.evictions),
@@ -628,16 +680,33 @@ fn cmd_serve(f: &Flags) -> Result<()> {
 /// that appends committed but not yet checkpointed stay invisible;
 /// `grouper partition` checkpoints on completion, so a finished
 /// materialization serves in full.
-fn resolve_source(spec: &str, prefix: &str, cache_pages: usize) -> Result<Arc<dyn ClientSource>> {
+fn resolve_source(
+    spec: &str,
+    prefix: &str,
+    cache_pages: usize,
+    opts: ReadOpts,
+) -> Result<Arc<dyn ClientSource>> {
     if let Some(addr) = spec.strip_prefix("remote://") {
         return Ok(Arc::new(RemoteClientSource::connect(addr)?));
     }
     let dir = PathBuf::from(spec);
     if PagedSetManifest::exists(&dir, prefix) {
-        return Ok(Arc::new(ShardedPagedReader::open_snapshot(&dir, prefix, cache_pages)?));
+        return Ok(Arc::new(ShardedPagedReader::open_snapshot_with_opts(
+            &StdVfs,
+            &dir,
+            prefix,
+            cache_pages,
+            opts,
+        )?));
     }
     if dir.join(format!("{prefix}.pstore")).exists() {
-        return Ok(Arc::new(PagedReader::open_snapshot(&dir, prefix, cache_pages)?));
+        return Ok(Arc::new(PagedReader::open_snapshot_with_opts(
+            &StdVfs,
+            &dir,
+            prefix,
+            cache_pages,
+            opts,
+        )?));
     }
     if dir.join(format!("{prefix}.gindex")).exists() {
         return Ok(Arc::new(GindexSource::open(&dir, prefix)?));
@@ -655,7 +724,13 @@ fn resolve_source(spec: &str, prefix: &str, cache_pages: usize) -> Result<Arc<dy
 /// compaction churn on the default schedule). The writer must open
 /// *before* any trainer snapshot so readers stay strictly zero-write
 /// while this process owns recovery.
-fn start_ingest(spec: &str, prefix: &str, cache_pages: usize, rate: usize) -> Result<IngestHandle> {
+fn start_ingest(
+    spec: &str,
+    prefix: &str,
+    cache_pages: usize,
+    rate: usize,
+    group_commit: bool,
+) -> Result<IngestHandle> {
     if spec.starts_with("remote://") {
         bail!(
             "--ingest-rate needs a local paged --source (the live writer runs in-process); \
@@ -664,7 +739,9 @@ fn start_ingest(spec: &str, prefix: &str, cache_pages: usize, rate: usize) -> Re
     }
     let dir = PathBuf::from(spec);
     let target = if PagedSetManifest::exists(&dir, prefix) {
-        IngestTarget::Sharded(PagedShardSet::open(&dir, prefix, cache_pages)?)
+        let mut set = PagedShardSet::open(&dir, prefix, cache_pages)?;
+        set.set_group_commit(group_commit);
+        IngestTarget::Sharded(set)
     } else if dir.join(format!("{prefix}.pstore")).exists() {
         IngestTarget::Single(PagedStore::open(&dir, prefix, cache_pages)?)
     } else {
@@ -772,6 +849,8 @@ fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
     tc.refresh_source = f.bool_or("refresh-source", false)?;
     let cache_pages =
         f.usize_or("cache-pages", grouper::formats::paged::DEFAULT_CACHE_PAGES)?;
+    let ropts = read_opts(f)?;
+    let group_commit = f.bool_or("group-commit", false)?;
     let ingest_rate = f.usize_or("ingest-rate", 0)?;
     if ingest_rate > 0 && source_spec.is_none() {
         bail!("--ingest-rate requires a shared --source store to append into");
@@ -780,7 +859,7 @@ fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
         Some(spec) => {
             let prefix = f.get_or("source-prefix", "train").to_string();
             let ingest = if ingest_rate > 0 {
-                Some(start_ingest(spec, &prefix, cache_pages, ingest_rate)?)
+                Some(start_ingest(spec, &prefix, cache_pages, ingest_rate, group_commit)?)
             } else {
                 None
             };
@@ -792,10 +871,10 @@ fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
                     let spec = spec.to_string();
                     let prefix = prefix.clone();
                     Arc::new(RefreshingSource::new(Box::new(move || {
-                        resolve_source(&spec, &prefix, cache_pages)
+                        resolve_source(&spec, &prefix, cache_pages, ropts)
                     }))?)
                 } else {
-                    resolve_source(spec, &prefix, cache_pages)?
+                    resolve_source(spec, &prefix, cache_pages, ropts)?
                 };
             println!("training from {}", src.describe());
             let out = train_with_source(&rt, &src, &wp, &tc)?;
@@ -837,8 +916,12 @@ fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
     if personalize {
         let clients = match f.get("eval-source") {
             Some(spec) => {
-                let src =
-                    resolve_source(spec, f.get_or("eval-source-prefix", "eval"), cache_pages)?;
+                let src = resolve_source(
+                    spec,
+                    f.get_or("eval-source-prefix", "eval"),
+                    cache_pages,
+                    ropts,
+                )?;
                 println!("evaluating clients from {}", src.describe());
                 build_eval_clients(src.as_ref(), &wp, &rt, cfg.fed.tau, cfg.data.num_eval_groups)?
             }

@@ -411,6 +411,11 @@ impl BTree {
                         0 => 0,
                         n => n - 1,
                     };
+                    // The scan will walk this node's children left to
+                    // right from `idx`: batch-read the run ahead of the
+                    // chain (no-op on pagers without a vectored path).
+                    let ahead: Vec<PageId> = ents[idx..].iter().map(|(_, c)| *c).collect();
+                    pager.prefetch(&ahead);
                     node = ents[idx].1;
                     stack.push((ents, idx));
                 }
@@ -433,6 +438,11 @@ impl BTree {
                     Some(level) => level,
                 };
                 if idx + 1 < ents.len() {
+                    // Read ahead over the siblings the chain will visit
+                    // next (already-resident pages cost one untracked
+                    // probe each).
+                    let ahead: Vec<PageId> = ents[idx + 1..].iter().map(|(_, c)| *c).collect();
+                    pager.prefetch(&ahead);
                     let mut node = ents[idx + 1].1;
                     stack.push((ents, idx + 1));
                     loop {
@@ -443,6 +453,8 @@ impl BTree {
                                 continue 'leaves;
                             }
                             Decoded::Internal(es) => {
+                                let ahead: Vec<PageId> = es.iter().map(|(_, c)| *c).collect();
+                                pager.prefetch(&ahead);
                                 node = es[0].1;
                                 stack.push((es, 0));
                             }

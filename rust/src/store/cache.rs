@@ -1,9 +1,28 @@
-//! LRU page cache with pin/dirty tracking and hit/miss counters.
+//! Page cache with pin/dirty tracking, hit/miss counters, and two
+//! replacement policies.
 //!
-//! Recency is a monotonically increasing tick stamped on every tracked
-//! access; eviction picks the unpinned frame with the smallest stamp —
-//! exact LRU, O(capacity) per eviction, which is trivial at the cache
-//! sizes a group store uses (tens to a few thousand 4 KiB frames).
+//! [`CachePolicy::Lru`] (the default) is exact LRU: recency is a
+//! monotonically increasing tick stamped on every tracked access;
+//! eviction picks the unpinned frame with the smallest stamp —
+//! O(capacity) per eviction, which is trivial at the cache sizes a group
+//! store uses (tens to a few thousand 4 KiB frames).
+//!
+//! [`CachePolicy::TwoQ`] is a scan-resistant two-queue policy (2Q-lite,
+//! after the classic 2Q family): a frame enters **cold** (probationary)
+//! and is promoted to **hot** (protected) only on a second tracked
+//! access. Eviction drains unpinned cold frames first, so a sequential
+//! scan longer than the cache — whose pages are touched exactly once —
+//! churns through the cold queue and never displaces the hot set (B+tree
+//! root and internal pages, hot groups). The hot set is capped at 3/4 of
+//! capacity; a promotion past the cap demotes the least-recently-used
+//! hot frame back to cold so the hot set can still turn over.
+//!
+//! A [`FrameBudget`] lets several caches (the
+//! [`super::shared::SharedPager`] shards) share one global frame
+//! allowance instead of fixed per-shard capacities: each cache prepays
+//! `reserved` frames and must win a budget token to grow past them, so a
+//! hot shard can borrow frames idle shards never claimed while the
+//! cross-shard total stays bounded.
 //!
 //! The cache never does I/O. [`PageCache::insert`] hands a dirty victim
 //! back to the caller (the pager) for write-back; [`PageCache::take_dirty`]
@@ -12,6 +31,8 @@
 
 use std::collections::HashMap;
 use std::io;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use super::page::{Page, PageId};
 
@@ -39,44 +60,181 @@ impl CacheStats {
     }
 }
 
+/// Replacement policy for a [`PageCache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Exact least-recently-used: matches a recency-ordered reference
+    /// list exactly. The default, and the policy the exclusive write-path
+    /// pager always uses.
+    #[default]
+    Lru,
+    /// Scan-resistant two-queue: pages enter cold, are promoted to hot
+    /// on re-access, and cold frames are evicted first.
+    TwoQ,
+}
+
+impl CachePolicy {
+    /// Parse a CLI spelling (`lru` or `2q`).
+    pub fn parse(s: &str) -> Option<CachePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "lru" => Some(CachePolicy::Lru),
+            "2q" | "twoq" | "two-q" => Some(CachePolicy::TwoQ),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for CachePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CachePolicy::Lru => write!(f, "lru"),
+            CachePolicy::TwoQ => write!(f, "2q"),
+        }
+    }
+}
+
+/// A shared allowance of cache frames, split dynamically between the
+/// caches that hold an `Arc` to it. Tokens are claimed on growth and
+/// returned when frames are dropped, so the cross-cache resident total
+/// never exceeds `sum(reserved) + total`.
+#[derive(Debug)]
+pub struct FrameBudget {
+    avail: AtomicUsize,
+    total: usize,
+}
+
+impl FrameBudget {
+    /// A pool of `total` loanable frames.
+    pub fn new(total: usize) -> FrameBudget {
+        FrameBudget { avail: AtomicUsize::new(total), total }
+    }
+
+    /// Pool size at construction.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Tokens currently unclaimed.
+    pub fn available(&self) -> usize {
+        self.avail.load(Ordering::Relaxed)
+    }
+
+    /// Claim one frame; false when the pool is empty.
+    fn try_acquire(&self) -> bool {
+        self.avail
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
+            .is_ok()
+    }
+
+    /// Return `n` frames to the pool.
+    fn release(&self, n: usize) {
+        if n > 0 {
+            self.avail.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+}
+
 struct Frame {
     page: Page,
     dirty: bool,
     pins: u32,
+    /// TwoQ protected bit; always false under [`CachePolicy::Lru`].
+    hot: bool,
+    /// Inserted by a batched prefetch: the next tracked hit is the
+    /// page's *first* real access, so it consumes this flag instead of
+    /// promoting the frame (a prefetched-then-scanned page must look
+    /// exactly like a demand-missed one to the TwoQ policy).
+    arrived: bool,
     last_used: u64,
 }
 
 /// A bounded pool of pages keyed by [`PageId`].
 pub struct PageCache {
     capacity: usize,
+    policy: CachePolicy,
+    /// Frames this cache may hold without consulting the shared budget
+    /// (equals `capacity` when there is no budget).
+    reserved: usize,
+    budget: Option<Arc<FrameBudget>>,
     frames: HashMap<PageId, Frame>,
+    /// Resident frames with the hot bit set.
+    hot: usize,
     tick: u64,
     stats: CacheStats,
 }
 
 impl PageCache {
-    /// An empty cache with room for `capacity` frames.
+    /// An empty LRU cache with room for `capacity` frames.
     ///
     /// # Panics
-    /// Panics when `capacity` is 0.
+    /// Panics when `capacity` is 0 (use [`PageCache::with_policy`] for a
+    /// stats-only zero-capacity cache).
     pub fn new(capacity: usize) -> PageCache {
         assert!(capacity >= 1, "page cache needs at least one frame");
+        PageCache::with_policy(capacity, CachePolicy::Lru)
+    }
+
+    /// An empty cache under `policy`. Unlike [`PageCache::new`],
+    /// `capacity` 0 is allowed: the cache then stores nothing but still
+    /// counts tracked lookups, so the miss/disk-read identity holds even
+    /// for an uncached store.
+    pub fn with_policy(capacity: usize, policy: CachePolicy) -> PageCache {
         PageCache {
             capacity,
+            policy,
+            reserved: capacity,
+            budget: None,
             frames: HashMap::with_capacity(capacity.min(1024)),
+            hot: 0,
             tick: 0,
             stats: CacheStats::default(),
         }
     }
 
-    /// Maximum resident frames.
+    /// A cache that owns `reserved` frames outright and draws any growth
+    /// beyond them (up to `capacity`) from a shared [`FrameBudget`].
+    ///
+    /// # Panics
+    /// Panics when `reserved > capacity`.
+    pub fn with_budget(
+        capacity: usize,
+        policy: CachePolicy,
+        reserved: usize,
+        budget: Arc<FrameBudget>,
+    ) -> PageCache {
+        assert!(reserved <= capacity, "reserved frames exceed capacity");
+        PageCache {
+            capacity,
+            policy,
+            reserved,
+            budget: Some(budget),
+            frames: HashMap::with_capacity(reserved.clamp(16, 1024)),
+            hot: 0,
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Maximum resident frames (local cap; a shared budget may stop
+    /// growth earlier).
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// The replacement policy.
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
     }
 
     /// Currently resident frames.
     pub fn len(&self) -> usize {
         self.frames.len()
+    }
+
+    /// Resident frames currently in the protected (hot) set. Always 0
+    /// under [`CachePolicy::Lru`].
+    pub fn hot_len(&self) -> usize {
+        self.hot
     }
 
     /// True when no frame is resident.
@@ -89,20 +247,63 @@ impl PageCache {
         self.frames.contains_key(&id)
     }
 
-    /// Tracked lookup: bumps recency and counts a hit or a miss.
+    fn hot_cap(&self) -> usize {
+        (self.capacity * 3 / 4).max(1)
+    }
+
+    /// Promote `id` into the hot set, demoting the LRU hot frame when
+    /// the cap is exceeded (never the frame just promoted: it carries
+    /// the newest tick, and when it is the only hot frame the cap — at
+    /// least 1 — is not exceeded).
+    fn promote(&mut self, id: PageId) {
+        if let Some(f) = self.frames.get_mut(&id) {
+            if !f.hot {
+                f.hot = true;
+                self.hot += 1;
+            }
+        }
+        if self.hot > self.hot_cap() {
+            let demote = self
+                .frames
+                .iter()
+                .filter(|(_, f)| f.hot)
+                .min_by_key(|(_, f)| f.last_used)
+                .map(|(vid, _)| *vid);
+            if let Some(vid) = demote {
+                if let Some(f) = self.frames.get_mut(&vid) {
+                    f.hot = false;
+                    self.hot -= 1;
+                }
+            }
+        }
+    }
+
+    /// Tracked lookup: bumps recency and counts a hit or a miss. Under
+    /// [`CachePolicy::TwoQ`] a hit on a cold frame promotes it.
     pub fn lookup(&mut self, id: PageId) -> Option<&mut Page> {
         self.tick += 1;
-        match self.frames.get_mut(&id) {
+        let promote = match self.frames.get_mut(&id) {
             Some(f) => {
                 f.last_used = self.tick;
                 self.stats.hits += 1;
-                Some(&mut f.page)
+                if f.arrived {
+                    // First access to a prefetched frame: it stays cold,
+                    // exactly as a demand miss would have left it.
+                    f.arrived = false;
+                    false
+                } else {
+                    self.policy == CachePolicy::TwoQ && !f.hot
+                }
             }
             None => {
                 self.stats.misses += 1;
-                None
+                return None;
             }
+        };
+        if promote {
+            self.promote(id);
         }
+        self.frames.get_mut(&id).map(|f| &mut f.page)
     }
 
     /// Untracked read: no stats, no recency bump.
@@ -116,9 +317,59 @@ impl PageCache {
         self.frames.get_mut(&id).map(|f| &mut f.page)
     }
 
-    /// Insert (or overwrite) a page. When full, the least-recently-used
-    /// unpinned frame is evicted first; if it was dirty it is returned for
-    /// write-back. Errors only when every frame is pinned.
+    /// Whether a new frame may be added without evicting: room under the
+    /// local capacity and (past the reserved prepay) a token won from
+    /// the shared budget. Consumes a token on success past the prepay.
+    fn try_grow(&mut self) -> bool {
+        if self.frames.len() >= self.capacity {
+            return false;
+        }
+        if self.frames.len() < self.reserved {
+            return true;
+        }
+        match &self.budget {
+            None => true,
+            Some(b) => b.try_acquire(),
+        }
+    }
+
+    /// Non-consuming twin of `try_grow`: may be optimistic under
+    /// cross-cache budget races, but only the write-path pager — which
+    /// never has a budget — relies on its answer for correctness.
+    fn would_grow(&self) -> bool {
+        if self.frames.len() >= self.capacity {
+            return false;
+        }
+        if self.frames.len() < self.reserved {
+            return true;
+        }
+        self.budget.as_ref().map_or(true, |b| b.available() > 0)
+    }
+
+    /// The frame an eviction would remove right now: under LRU the
+    /// unpinned frame with the smallest tick; under TwoQ the coldest
+    /// unpinned cold frame, falling back to the coldest unpinned hot
+    /// frame when no cold frame is evictable.
+    fn victim(&self) -> Option<PageId> {
+        let pick = |want_hot: Option<bool>| {
+            self.frames
+                .iter()
+                .filter(|(_, f)| f.pins == 0 && want_hot.map_or(true, |h| f.hot == h))
+                .min_by_key(|(_, f)| f.last_used)
+                .map(|(vid, _)| *vid)
+        };
+        match self.policy {
+            CachePolicy::Lru => pick(None),
+            CachePolicy::TwoQ => pick(Some(false)).or_else(|| pick(Some(true))),
+        }
+    }
+
+    /// Insert (or overwrite) a page. New frames enter cold; when the
+    /// cache cannot grow (capacity reached, or the shared budget is
+    /// exhausted) a victim is evicted first — if it was dirty it is
+    /// returned for write-back. A zero-capacity cache stores nothing and
+    /// returns `Ok(None)`. Errors only when an eviction is needed and
+    /// every frame is pinned.
     pub fn insert(
         &mut self,
         id: PageId,
@@ -129,17 +380,16 @@ impl PageCache {
         if let Some(f) = self.frames.get_mut(&id) {
             f.page = page;
             f.dirty = f.dirty || dirty;
+            f.arrived = false; // a demand insert is a real access
             f.last_used = self.tick;
             return Ok(None);
         }
+        if self.capacity == 0 {
+            return Ok(None);
+        }
         let mut writeback = None;
-        if self.frames.len() >= self.capacity {
-            let victim = self
-                .frames
-                .iter()
-                .filter(|(_, f)| f.pins == 0)
-                .min_by_key(|(_, f)| f.last_used)
-                .map(|(vid, _)| *vid);
+        if !self.try_grow() {
+            let victim = self.victim();
             match victim {
                 None => {
                     return Err(io::Error::new(
@@ -149,6 +399,9 @@ impl PageCache {
                 }
                 Some(vid) => {
                     let f = self.frames.remove(&vid).unwrap();
+                    if f.hot {
+                        self.hot -= 1;
+                    }
                     self.stats.evictions += 1;
                     if f.dirty {
                         writeback = Some((vid, f.page));
@@ -156,9 +409,60 @@ impl PageCache {
                 }
             }
         }
-        self.frames
-            .insert(id, Frame { page, dirty, pins: 0, last_used: self.tick });
+        self.frames.insert(
+            id,
+            Frame { page, dirty, pins: 0, hot: false, arrived: false, last_used: self.tick },
+        );
         Ok(writeback)
+    }
+
+    /// Insert a clean page fetched by a batched prefetch. Identical to
+    /// [`PageCache::insert`] except that the frame is marked as having
+    /// *arrived ahead of its first access*: the next tracked hit leaves
+    /// it cold instead of promoting it, so a vectored sequential scan is
+    /// still scan-resistant under [`CachePolicy::TwoQ`]. A page that is
+    /// already resident is left untouched (the bytes are identical —
+    /// committed pages are immutable).
+    ///
+    /// # Errors
+    /// Same as [`PageCache::insert`].
+    pub fn insert_prefetched(&mut self, id: PageId, page: Page) -> io::Result<()> {
+        if self.frames.contains_key(&id) || self.capacity == 0 {
+            return Ok(());
+        }
+        self.tick += 1;
+        if !self.try_grow() {
+            match self.victim() {
+                None => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::Other,
+                        "page cache full and every frame pinned",
+                    ))
+                }
+                Some(vid) => {
+                    let f = self.frames.remove(&vid).unwrap();
+                    if f.hot {
+                        self.hot -= 1;
+                    }
+                    self.stats.evictions += 1;
+                    debug_assert!(!f.dirty, "prefetch only runs on read-only caches");
+                }
+            }
+        }
+        self.frames.insert(
+            id,
+            Frame { page, dirty: false, pins: 0, hot: false, arrived: true, last_used: self.tick },
+        );
+        Ok(())
+    }
+
+    /// Count `n` tracked misses without a lookup. The shared pager's
+    /// batched prefetch probes residency under the shard lock and then
+    /// fetches every absent page itself, so it records the misses here —
+    /// keeping the stats identity (misses == non-header disk reads)
+    /// intact on the vectored path.
+    pub fn count_prefetch_misses(&mut self, n: u64) {
+        self.stats.misses += n;
     }
 
     /// The dirty frame that [`PageCache::insert`] of `incoming` would
@@ -168,15 +472,16 @@ impl PageCache {
     /// newest image on the floor. Ticks are unique, so the victim choice
     /// here and in `insert` is identical.
     pub fn pending_writeback(&self, incoming: PageId) -> Option<(PageId, &Page)> {
-        if self.frames.contains_key(&incoming) || self.frames.len() < self.capacity {
+        if self.capacity == 0 || self.frames.contains_key(&incoming) || self.would_grow() {
             return None;
         }
-        self.frames
-            .iter()
-            .filter(|(_, f)| f.pins == 0)
-            .min_by_key(|(_, f)| f.last_used)
-            .filter(|(_, f)| f.dirty)
-            .map(|(vid, f)| (*vid, &f.page))
+        let vid = self.victim()?;
+        let f = &self.frames[&vid];
+        if f.dirty {
+            Some((vid, &f.page))
+        } else {
+            None
+        }
     }
 
     /// Clear a resident frame's dirty bit (after a successful write-back).
@@ -240,16 +545,36 @@ impl PageCache {
     }
 
     /// Drop every frame (recovery discards uncommitted cached state).
-    /// Dirty pages are deliberately lost — that is the point.
+    /// Dirty pages are deliberately lost — that is the point. Budget
+    /// tokens held beyond the reserved prepay return to the pool.
     pub fn clear(&mut self) {
+        if let Some(b) = &self.budget {
+            b.release(self.frames.len().saturating_sub(self.reserved));
+        }
         self.frames.clear();
+        self.hot = 0;
     }
 
     /// Drop one frame unconditionally (tail reclamation removes pages
     /// from the file, so any cached image — even a dirty one — is
     /// garbage). Returns false when the page was not resident.
     pub fn remove(&mut self, id: PageId) -> bool {
-        self.frames.remove(&id).is_some()
+        match self.frames.remove(&id) {
+            Some(f) => {
+                if f.hot {
+                    self.hot -= 1;
+                }
+                // The frame count just dropped from len+1 to len; the
+                // removed frame was budget-funded iff len+1 > reserved.
+                if self.frames.len() >= self.reserved {
+                    if let Some(b) = &self.budget {
+                        b.release(1);
+                    }
+                }
+                true
+            }
+            None => false,
+        }
     }
 
     /// Hit/miss/eviction counters since construction.
@@ -372,5 +697,189 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn cache_policy_parses_cli_spellings() {
+        assert_eq!(CachePolicy::parse("lru"), Some(CachePolicy::Lru));
+        assert_eq!(CachePolicy::parse("LRU"), Some(CachePolicy::Lru));
+        assert_eq!(CachePolicy::parse("2q"), Some(CachePolicy::TwoQ));
+        assert_eq!(CachePolicy::parse("TwoQ"), Some(CachePolicy::TwoQ));
+        assert_eq!(CachePolicy::parse("arc"), None);
+        assert_eq!(CachePolicy::TwoQ.to_string(), "2q");
+    }
+
+    #[test]
+    fn zero_capacity_cache_counts_but_stores_nothing() {
+        let mut c = PageCache::with_policy(0, CachePolicy::Lru);
+        assert!(c.lookup(1).is_none());
+        assert!(c.insert(1, page_tagged(1), false).unwrap().is_none());
+        assert!(c.lookup(1).is_none(), "nothing may become resident");
+        assert_eq!(c.len(), 0);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (0, 2, 0));
+        assert!(c.pending_writeback(2).is_none());
+    }
+
+    /// Scan resistance: a one-touch scan longer than capacity must not
+    /// displace the re-accessed (hot) working set.
+    #[test]
+    fn two_q_scan_leaves_hot_set_resident() {
+        let mut c = PageCache::with_policy(8, CachePolicy::TwoQ);
+        for id in 1..=4 {
+            c.insert(id, page_tagged(id as u8), false).unwrap();
+        }
+        for id in 1..=4 {
+            assert!(c.lookup(id).is_some(), "promote {id} to hot");
+        }
+        assert_eq!(c.hot_len(), 4);
+        // A scan of 3x capacity, every page touched exactly once.
+        for id in 100..124 {
+            c.insert(id, Page::zeroed(), false).unwrap();
+        }
+        for id in 1..=4 {
+            assert!(c.contains(id), "hot page {id} evicted by a cold scan");
+        }
+        assert_eq!(c.len(), 8, "cache stayed full");
+        // Under strict LRU the same trace evicts the whole hot set.
+        let mut lru = PageCache::new(8);
+        for id in 1..=4 {
+            lru.insert(id, page_tagged(id as u8), false).unwrap();
+            lru.lookup(id);
+        }
+        for id in 100..124 {
+            lru.insert(id, Page::zeroed(), false).unwrap();
+        }
+        for id in 1..=4 {
+            assert!(!lru.contains(id), "LRU keeps no hot page through the scan");
+        }
+    }
+
+    #[test]
+    fn two_q_hot_cap_demotes_lru_hot_frame() {
+        // capacity 4 -> hot cap 3: promoting a 4th page demotes the
+        // least-recently-used hot frame back to cold.
+        let mut c = PageCache::with_policy(4, CachePolicy::TwoQ);
+        for id in 1..=4 {
+            c.insert(id, page_tagged(id as u8), false).unwrap();
+        }
+        for id in 1..=4 {
+            c.lookup(id);
+        }
+        assert_eq!(c.hot_len(), 3, "hot cap must bound the protected set");
+        // Page 1 was the LRU hot frame when 4 was promoted, so it is the
+        // cold one — the next one-touch insert evicts it.
+        c.insert(9, Page::zeroed(), false).unwrap();
+        assert!(!c.contains(1));
+        assert!(c.contains(2) && c.contains(3) && c.contains(4));
+    }
+
+    /// Property: TwoQ matches a reference model — one global recency
+    /// order plus a hot set; victims are the coldest unpinned cold
+    /// frame, else the coldest hot frame; promotion past the hot cap
+    /// demotes the coldest hot frame.
+    #[test]
+    fn property_matches_reference_two_q() {
+        check(30, |rng| {
+            let cap = 2 + rng.gen_range_usize(6);
+            let hot_cap = (cap * 3 / 4).max(1);
+            let mut cache = PageCache::with_policy(cap, CachePolicy::TwoQ);
+            let mut recency: Vec<PageId> = Vec::new(); // MRU last
+            let mut hot: Vec<PageId> = Vec::new();
+            for _ in 0..200 {
+                let id = 1 + rng.gen_range(12) as PageId;
+                if rng.bernoulli(0.5) {
+                    let hit = cache.lookup(id).is_some();
+                    let ref_hit = recency.contains(&id);
+                    prop_assert_eq(hit, ref_hit, "hit status diverged")?;
+                    if ref_hit {
+                        recency.retain(|x| *x != id);
+                        recency.push(id);
+                        if !hot.contains(&id) {
+                            hot.push(id);
+                            if hot.len() > hot_cap {
+                                // Demote the coldest hot frame.
+                                let demote = *recency
+                                    .iter()
+                                    .find(|x| hot.contains(x))
+                                    .expect("hot set is non-empty");
+                                hot.retain(|x| *x != demote);
+                            }
+                        }
+                    }
+                } else {
+                    cache.insert(id, Page::zeroed(), false).unwrap();
+                    if recency.contains(&id) {
+                        recency.retain(|x| *x != id);
+                    } else if recency.len() >= cap {
+                        // Evict coldest cold, else coldest overall.
+                        let victim = recency
+                            .iter()
+                            .find(|x| !hot.contains(x))
+                            .copied()
+                            .unwrap_or(recency[0]);
+                        recency.retain(|x| *x != victim);
+                        hot.retain(|x| *x != victim);
+                    }
+                    recency.push(id); // new frames enter cold
+                }
+                prop_assert_eq(cache.len(), recency.len(), "size diverged")?;
+                prop_assert_eq(cache.hot_len(), hot.len(), "hot count diverged")?;
+                for id in &recency {
+                    prop_assert(cache.contains(*id), "reference page missing from cache")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prefetched_frames_need_two_real_accesses_to_go_hot() {
+        let mut c = PageCache::with_policy(4, CachePolicy::TwoQ);
+        c.insert_prefetched(1, page_tagged(1)).unwrap();
+        assert!(c.lookup(1).is_some());
+        assert_eq!(c.hot_len(), 0, "first access after prefetch stays cold");
+        assert!(c.lookup(1).is_some());
+        assert_eq!(c.hot_len(), 1, "second access promotes");
+        // Prefetch of a resident page is a no-op (same immutable bytes).
+        c.insert_prefetched(1, Page::zeroed()).unwrap();
+        assert!(c.lookup(1).is_some());
+        assert_eq!(c.hot_len(), 1);
+        assert_eq!(c.stats().misses, 0, "prefetch probes count no lookup");
+    }
+
+    #[test]
+    fn frame_budget_is_shared_and_conserved() {
+        let budget = Arc::new(FrameBudget::new(4));
+        let mut a = PageCache::with_budget(64, CachePolicy::TwoQ, 1, budget.clone());
+        let mut b = PageCache::with_budget(64, CachePolicy::TwoQ, 1, budget.clone());
+        // A grows through its prepaid frame plus the whole pool.
+        for id in 0..8 {
+            a.insert(id, Page::zeroed(), false).unwrap();
+        }
+        assert_eq!(a.len(), 5, "1 reserved + 4 pooled frames");
+        assert_eq!(budget.available(), 0);
+        assert_eq!(a.stats().evictions, 3, "later inserts evict instead of growing");
+        // B is squeezed down to its prepaid frame.
+        for id in 100..104 {
+            b.insert(id, Page::zeroed(), false).unwrap();
+        }
+        assert_eq!(b.len(), 1);
+        assert!(a.len() + b.len() <= 2 + budget.total(), "cross-cache total bounded");
+        // Dropping A's frames returns tokens B can then claim.
+        a.clear();
+        assert_eq!(budget.available(), 4);
+        for id in 200..208 {
+            b.insert(id, Page::zeroed(), false).unwrap();
+        }
+        assert_eq!(b.len(), 5);
+        assert_eq!(budget.available(), 0);
+        // remove() releases one token per budget-funded frame.
+        let resident: Vec<PageId> = (200..208).filter(|id| b.contains(*id)).collect();
+        for id in &resident[1..] {
+            b.remove(*id);
+        }
+        assert_eq!(b.len(), 1);
+        assert_eq!(budget.available(), 4, "all pooled tokens returned");
     }
 }

@@ -51,6 +51,14 @@ pub trait PageRead {
     /// Fails when `id` is out of bounds for the implementor's view of
     /// the file, or on an underlying I/O error.
     fn read_page(&mut self, id: PageId) -> io::Result<Page>;
+
+    /// Advisory, best-effort hint that the caller is about to read
+    /// `ids`: implementors with a batched read path (the shared pager's
+    /// vectored group scans) coalesce runs of adjacent ids into one
+    /// positional read. The default does nothing, so single-page
+    /// implementors (the exclusive [`Pager`], test doubles) are
+    /// unaffected. Must never change what `read_page` returns.
+    fn prefetch(&mut self, _ids: &[PageId]) {}
 }
 
 /// The exclusive pager: one owner, `&mut self` access, a single LRU

@@ -61,7 +61,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, PoisonError};
 
-use super::cache::{CacheStats, PageCache};
+use super::cache::{CachePolicy, CacheStats, FrameBudget, PageCache};
 use super::page::{Page, PageId, PAGE_SIZE};
 use super::pager::PageRead;
 use super::vfs::{OpenMode, StdVfs, Vfs, VfsFile};
@@ -70,6 +70,28 @@ use super::vfs::{OpenMode, StdVfs, Vfs, VfsFile};
 /// let a handful of reader threads miss on different pages without
 /// queueing on one mutex, not to scale to hundreds of cores.
 const CACHE_SHARDS: usize = 8;
+
+/// Opt-in tuning for the hot read path, threaded from the CLI through
+/// the `PagedReader`/`ShardedPagedReader` open paths down to the
+/// [`SharedPager`]. The default is the classic behavior: no mmap, no
+/// vectored prefetch, strict per-shard LRU.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReadOpts {
+    /// Map read-only files so cache misses on warm files are a memcpy.
+    /// The pager maps its own index handle; callers that open further
+    /// read-only files (the paged data file, whole-VFS wrapping via
+    /// [`super::vfs::MmapVfs`]) apply the same mapping themselves.
+    /// Always best-effort: files without an OS descriptor (MemVfs,
+    /// FaultVfs) are served through the plain handle unchanged.
+    pub mmap: bool,
+    /// Maximum pages fetched per batched prefetch read; 0 disables
+    /// vectored group scans.
+    pub vectored_batch: usize,
+    /// Replacement policy for the shared cache.
+    /// [`CachePolicy::TwoQ`] also switches the shards from fixed
+    /// per-shard capacities to one cross-shard [`FrameBudget`].
+    pub policy: CachePolicy,
+}
 
 /// Pinned-epoch multiset per `(VFS instance id, index path)`.
 type PinMap = HashMap<(u64, PathBuf), BTreeMap<u64, u32>>;
@@ -183,7 +205,17 @@ pub struct SharedPager {
     /// (a live writer appends to the same file).
     num_pages: AtomicU32,
     shards: Vec<Mutex<PageCache>>,
+    /// Pages fetched from disk, header and cache misses alike.
     disk_reads: AtomicU64,
+    /// Uncached header (page 0) fetches — the slice of `disk_reads`
+    /// that no cache miss accounts for, kept separate so the identity
+    /// `disk_reads == misses + header_reads` is checkable.
+    header_reads: AtomicU64,
+    /// Max pages per batched prefetch; 0 = vectored reads disabled.
+    vectored_batch: usize,
+    /// The `cache_pages` this pager was opened with (introspection: the
+    /// hard bound on resident frames across all shards).
+    frame_budget: usize,
 }
 
 fn lock_shard(shard: &Mutex<PageCache>) -> std::sync::MutexGuard<'_, PageCache> {
@@ -195,8 +227,9 @@ fn lock_shard(shard: &Mutex<PageCache>) -> std::sync::MutexGuard<'_, PageCache> 
 impl SharedPager {
     /// Open a paged file read-only for concurrent access on the real
     /// filesystem (equivalent to [`SharedPager::open_with`] over
-    /// [`StdVfs`]). `cache_pages` total LRU frames are split evenly
-    /// across the lock shards (each shard keeps at least one frame).
+    /// [`StdVfs`]). Exactly `cache_pages` cache frames are allocated in
+    /// total, split across the lock shards (`cache_pages == 0` disables
+    /// caching: every read goes to disk and counts a miss).
     ///
     /// # Errors
     /// Fails when the file cannot be opened or its metadata read.
@@ -204,23 +237,96 @@ impl SharedPager {
         SharedPager::open_with(&StdVfs, path, cache_pages)
     }
 
-    /// Open a paged file read-only for concurrent access on `vfs`.
+    /// Open a paged file read-only for concurrent access on `vfs`, with
+    /// the default [`ReadOpts`] (strict per-shard LRU, no prefetch).
     ///
     /// # Errors
     /// Fails when the file cannot be opened or its metadata read.
     pub fn open_with(vfs: &dyn Vfs, path: &Path, cache_pages: usize) -> io::Result<SharedPager> {
+        SharedPager::open_with_opts(vfs, path, cache_pages, ReadOpts::default())
+    }
+
+    /// Open a paged file read-only for concurrent access on `vfs` with
+    /// explicit hot-read-path options.
+    ///
+    /// The frame budget is exact: across all shards, at most
+    /// `cache_pages` frames are ever resident, and under the default
+    /// LRU policy every one of them is allocated up front (the
+    /// remainder of `cache_pages / nshards` goes one-per-shard to the
+    /// first shards). Under [`CachePolicy::TwoQ`] each shard prepays
+    /// one frame and draws the rest from one shared [`FrameBudget`],
+    /// so a hot shard can use frames an idle shard never claims.
+    ///
+    /// # Errors
+    /// Fails when the file cannot be opened or its metadata read.
+    pub fn open_with_opts(
+        vfs: &dyn Vfs,
+        path: &Path,
+        cache_pages: usize,
+        opts: ReadOpts,
+    ) -> io::Result<SharedPager> {
         let file = vfs.open(path, OpenMode::Read)?;
+        let file = if opts.mmap {
+            // Best-effort: falls back to the plain handle when the file
+            // exposes no OS descriptor (MemVfs/FaultVfs) or the kernel
+            // refuses the map. Reads are bit-identical either way.
+            super::vfs::map_read_only(&file).unwrap_or(file)
+        } else {
+            file
+        };
         let num_pages = (file.len()? / PAGE_SIZE as u64) as u32;
-        // At least two frames per shard: a single-frame shard thrashes on
-        // any strided pattern that alternates two pages of one bucket.
-        let nshards = CACHE_SHARDS.min((cache_pages / 2).max(1));
-        let per_shard = (cache_pages / nshards).max(1);
-        let shards = (0..nshards).map(|_| Mutex::new(PageCache::new(per_shard))).collect();
+        // At least two frames per shard: a single-frame shard thrashes
+        // on any strided pattern that alternates two pages of one
+        // bucket. With no frames at all, one stats-only shard remains
+        // so misses keep being counted.
+        let nshards = if cache_pages == 0 {
+            1
+        } else {
+            CACHE_SHARDS.min((cache_pages / 2).max(1))
+        };
+        let shards: Vec<Mutex<PageCache>> = match opts.policy {
+            CachePolicy::Lru => {
+                // Fixed split summing exactly to cache_pages: base
+                // frames everywhere, remainder one-per-shard from the
+                // front.
+                let base = cache_pages / nshards;
+                let rem = cache_pages % nshards;
+                (0..nshards)
+                    .map(|i| {
+                        let cap = base + usize::from(i < rem);
+                        Mutex::new(PageCache::with_policy(cap, CachePolicy::Lru))
+                    })
+                    .collect()
+            }
+            CachePolicy::TwoQ => {
+                if cache_pages == 0 {
+                    vec![Mutex::new(PageCache::with_policy(0, CachePolicy::TwoQ))]
+                } else {
+                    // One prepaid frame per shard (nshards <= cache_pages
+                    // by construction), the rest in a shared pool any
+                    // shard may claim.
+                    let pool = Arc::new(FrameBudget::new(cache_pages - nshards));
+                    (0..nshards)
+                        .map(|_| {
+                            Mutex::new(PageCache::with_budget(
+                                cache_pages,
+                                CachePolicy::TwoQ,
+                                1,
+                                pool.clone(),
+                            ))
+                        })
+                        .collect()
+                }
+            }
+        };
         Ok(SharedPager {
             file,
             num_pages: AtomicU32::new(num_pages),
             shards,
             disk_reads: AtomicU64::new(0),
+            header_reads: AtomicU64::new(0),
+            vectored_batch: opts.vectored_batch,
+            frame_budget: cache_pages,
         })
     }
 
@@ -239,15 +345,24 @@ impl SharedPager {
 
     /// Read page 0 straight from disk, bypassing the cache — the header
     /// is the one page a checkpoint rewrites in place, so a cached copy
-    /// could describe a superseded epoch.
+    /// could describe a superseded epoch. Counted in
+    /// [`SharedPager::header_reads`], not as a cache miss.
     ///
     /// # Errors
     /// Fails on I/O error or when the file has no complete page 0.
     pub fn read_header_fresh(&self) -> io::Result<Page> {
-        self.read_from_disk(0)
+        let page = self.read_from_disk(0)?;
+        self.header_reads.fetch_add(1, Ordering::Relaxed);
+        Ok(page)
     }
 
     /// Aggregate hit/miss/eviction counters, summed across shards.
+    ///
+    /// Absent I/O errors the counters satisfy the identity
+    /// `disk_reads == misses + header_reads` — every non-header disk
+    /// fetch is accounted to exactly one tracked miss, including racing
+    /// double-fills (each racer counts its own miss *and* its own disk
+    /// read) and batched prefetch fetches.
     pub fn cache_stats(&self) -> CacheStats {
         let mut total = CacheStats::default();
         for shard in &self.shards {
@@ -259,9 +374,34 @@ impl SharedPager {
         total
     }
 
-    /// Pages fetched from disk so far (across all threads).
+    /// Pages fetched from disk so far (across all threads), including
+    /// uncached header reads.
     pub fn disk_reads(&self) -> u64 {
         self.disk_reads.load(Ordering::Relaxed)
+    }
+
+    /// Uncached header (page 0) fetches so far — subtract from
+    /// [`SharedPager::disk_reads`] to get the miss-driven fetch count.
+    pub fn header_reads(&self) -> u64 {
+        self.header_reads.load(Ordering::Relaxed)
+    }
+
+    /// The exact frame budget this pager was opened with: resident
+    /// frames across all shards never exceed it.
+    pub fn frame_budget(&self) -> usize {
+        self.frame_budget
+    }
+
+    /// Frames currently resident across all shards.
+    pub fn resident_frames(&self) -> usize {
+        self.shards.iter().map(|s| lock_shard(s).len()).sum()
+    }
+
+    /// Sum of the shards' local frame capacities (under LRU this equals
+    /// the full budget; under TwoQ each shard may locally grow to the
+    /// whole budget, bounded globally by the shared pool).
+    pub fn shard_capacity_total(&self) -> usize {
+        self.shards.iter().map(|s| lock_shard(s).capacity()).sum()
     }
 
     /// True when `id` lies within the backing file, re-checking the file
@@ -301,6 +441,49 @@ impl SharedPager {
         // is never dirty (read-only cache), so there is no write-back.
         lock_shard(shard).insert(id, page.clone(), false)?;
         Ok(page)
+    }
+
+    /// Batched prefetch: fetch every absent page among `ids` (sorted,
+    /// deduped, bound-checked by the caller) from disk, coalescing runs
+    /// of adjacent ids into one positional read each. Each fetched page
+    /// counts one miss and one disk read — the same accounting a demand
+    /// miss produces — and is admitted cold (see
+    /// [`PageCache::insert_prefetched`]).
+    ///
+    /// # Errors
+    /// Any underlying read failure (callers treat prefetch as
+    /// best-effort and fall back to demand reads).
+    fn prefetch_pages(&self, ids: &[PageId]) -> io::Result<()> {
+        let mut missing: Vec<PageId> = Vec::with_capacity(ids.len());
+        for &id in ids {
+            if !self.in_file(id)? {
+                break; // sorted: every later id is even farther out
+            }
+            let shard = &self.shards[id as usize % self.shards.len()];
+            let mut cache = lock_shard(shard);
+            if !cache.contains(id) {
+                cache.count_prefetch_misses(1);
+                missing.push(id);
+            }
+        }
+        let mut i = 0;
+        while i < missing.len() {
+            let mut j = i + 1;
+            while j < missing.len() && missing[j] == missing[j - 1] + 1 {
+                j += 1;
+            }
+            let run = &missing[i..j];
+            let mut buf = vec![0u8; run.len() * PAGE_SIZE];
+            self.file.read_exact_at(&mut buf, run[0] as u64 * PAGE_SIZE as u64)?;
+            self.disk_reads.fetch_add(run.len() as u64, Ordering::Relaxed);
+            for (k, &id) in run.iter().enumerate() {
+                let page = Page::from_vec(buf[k * PAGE_SIZE..(k + 1) * PAGE_SIZE].to_vec())?;
+                let shard = &self.shards[id as usize % self.shards.len()];
+                lock_shard(shard).insert_prefetched(id, page)?;
+            }
+            i = j;
+        }
+        Ok(())
     }
 }
 
@@ -342,6 +525,22 @@ impl PageRead for SnapshotReader<'_> {
             ));
         }
         self.pager.read_cached(id)
+    }
+
+    /// Vectored batched read of upcoming pages (no-op unless the pager
+    /// was opened with a non-zero `vectored_batch`). Best-effort: I/O
+    /// errors are swallowed here and resurface on the demand read.
+    fn prefetch(&mut self, ids: &[PageId]) {
+        let batch = self.pager.vectored_batch;
+        if batch == 0 || ids.is_empty() {
+            return;
+        }
+        let mut want: Vec<PageId> =
+            ids.iter().copied().filter(|&id| id < self.snapshot.bound).collect();
+        want.sort_unstable();
+        want.dedup();
+        want.truncate(batch);
+        let _ = self.pager.prefetch_pages(&want);
     }
 }
 
@@ -464,6 +663,104 @@ mod tests {
         assert_eq!(min_pinned_epoch(vfs_id, path), None);
         assert_eq!(min_pinned_epoch(vfs_id + 1, path), Some(1));
         drop(other);
+    }
+
+    /// Satellite regression: the cache budget is exact. The old split
+    /// truncated `cache_pages / nshards` (15 frames over 7 shards
+    /// allocated 14) and `.max(1)` exceeded a zero budget.
+    #[test]
+    fn frame_budget_is_exact_for_adversarial_combos() {
+        let path = build("budget.pages", 8);
+        for cache_pages in [0usize, 1, 2, 3, 5, 7, 8, 13, 15, 16, 17, 31, 33, 64, 101] {
+            let sp = SharedPager::open(&path, cache_pages).unwrap();
+            assert_eq!(
+                sp.shard_capacity_total(),
+                cache_pages,
+                "LRU shard split must sum exactly to the budget (cache_pages={cache_pages})"
+            );
+            assert_eq!(sp.frame_budget(), cache_pages);
+        }
+    }
+
+    #[test]
+    fn zero_budget_disables_caching_but_reads_still_work() {
+        let path = build("zero.pages", 8);
+        let sp = SharedPager::open(&path, 0).unwrap();
+        let mut r = sp.reader(ReadSnapshot { bound: 8, epoch: 0 });
+        for pass in 0..2 {
+            for i in 0..8u32 {
+                assert_eq!(r.read_page(i).unwrap().get_u32(0), 1000 + i, "pass {pass}");
+            }
+        }
+        assert_eq!(sp.resident_frames(), 0, "nothing may be cached");
+        let s = sp.cache_stats();
+        assert_eq!((s.hits, s.misses), (0, 16), "every read is a tracked miss");
+        assert_eq!(sp.disk_reads(), 16);
+    }
+
+    #[test]
+    fn two_q_shared_budget_bounds_and_fills_resident_frames() {
+        let path = build("twoq.pages", 64);
+        for cache_pages in [1usize, 7, 15, 16, 33] {
+            let opts = ReadOpts { policy: CachePolicy::TwoQ, ..Default::default() };
+            let sp = SharedPager::open_with_opts(&StdVfs, &path, cache_pages, opts).unwrap();
+            let mut r = sp.reader(ReadSnapshot { bound: 64, epoch: 0 });
+            for pass in 0..2 {
+                for i in 0..64u32 {
+                    assert_eq!(r.read_page(i).unwrap().get_u32(0), 1000 + i, "pass {pass}");
+                }
+            }
+            assert_eq!(
+                sp.resident_frames(),
+                cache_pages,
+                "a saturating workload must use exactly the budget (cache_pages={cache_pages})"
+            );
+        }
+    }
+
+    /// Satellite regression: hits + misses, disk reads and header reads
+    /// stay mutually consistent — `disk_reads == misses + header_reads`
+    /// on the classic path, the vectored path, and under TwoQ.
+    #[test]
+    fn stats_identity_holds_across_policies_and_prefetch() {
+        let path = build("identity.pages", 16);
+        let variants = [
+            ReadOpts::default(),
+            ReadOpts { vectored_batch: 8, ..Default::default() },
+            ReadOpts { policy: CachePolicy::TwoQ, ..Default::default() },
+            ReadOpts { vectored_batch: 8, policy: CachePolicy::TwoQ, ..Default::default() },
+        ];
+        for opts in variants {
+            let sp = SharedPager::open_with_opts(&StdVfs, &path, 8, opts).unwrap();
+            sp.read_header_fresh().unwrap();
+            let mut r = sp.reader(ReadSnapshot { bound: 16, epoch: 0 });
+            r.prefetch(&(0..16u32).collect::<Vec<PageId>>());
+            for i in 0..16u32 {
+                assert_eq!(r.read_page(i).unwrap().get_u32(0), 1000 + i, "{opts:?}");
+            }
+            sp.read_header_fresh().unwrap();
+            for i in (0..16u32).rev() {
+                assert_eq!(r.read_page(i).unwrap().get_u32(0), 1000 + i, "{opts:?}");
+            }
+            let s = sp.cache_stats();
+            assert_eq!(sp.header_reads(), 2, "{opts:?}");
+            assert_eq!(
+                sp.disk_reads(),
+                s.misses + sp.header_reads(),
+                "disk reads must equal misses + header reads ({opts:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn prefetch_is_a_noop_when_vectored_reads_are_off() {
+        let path = build("noprefetch.pages", 8);
+        let sp = SharedPager::open(&path, 8).unwrap();
+        let mut r = sp.reader(ReadSnapshot { bound: 8, epoch: 0 });
+        r.prefetch(&[0, 1, 2, 3]);
+        assert_eq!(sp.disk_reads(), 0, "no batch size, no I/O");
+        assert_eq!(sp.cache_stats().misses, 0);
+        assert_eq!(sp.resident_frames(), 0);
     }
 
     #[test]

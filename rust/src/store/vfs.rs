@@ -121,6 +121,15 @@ pub trait VfsFile: Send + Sync {
         }
         Ok(())
     }
+
+    /// The raw OS file descriptor behind this handle, when one exists.
+    /// Only real-filesystem files ([`StdVfs`]) return `Some`; in-memory
+    /// and fault-injected files return `None` — which is what keeps
+    /// [`MmapVfs`] from ever mapping around a [`FaultVfs`]'s accounting
+    /// or a [`MemVfs`]'s byte store.
+    fn os_fd(&self) -> Option<i32> {
+        None
+    }
 }
 
 /// A filesystem: opens files and resolves directories. Implementations
@@ -283,6 +292,18 @@ impl VfsFile for StdFile {
 
     fn len(&self) -> io::Result<u64> {
         Ok(self.file.metadata()?.len())
+    }
+
+    fn os_fd(&self) -> Option<i32> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            Some(self.file.as_raw_fd())
+        }
+        #[cfg(not(unix))]
+        {
+            None
+        }
     }
 }
 
@@ -583,6 +604,221 @@ impl io::Seek for VfsCursor {
                 "vfs cursor seek to a negative offset",
             )),
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MmapVfs
+// ---------------------------------------------------------------------------
+
+/// Raw bindings to the two mapping syscalls the read path needs,
+/// declared by hand (the crate is dependency-free). The constant values
+/// for the flags used here are identical on Linux, macOS and the BSDs.
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod mmap_sys {
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_SHARED: i32 = 1;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            length: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, length: usize) -> i32;
+    }
+}
+
+/// A read-only file served from a shared memory mapping: in-bounds
+/// `read_at`/`read_exact_at` become a memcpy out of the OS page cache
+/// instead of a `pread` syscall (SQLite's `SQLITE_MMAP_SIZE` idea).
+/// Reads at or past the mapped prefix fall back to the inner handle, so
+/// a file a live writer has grown since the map was taken still reads
+/// correctly end to end.
+///
+/// Safety against truncation: touching mapped bytes beyond the file's
+/// *current* length raises SIGBUS. Two facts keep that unreachable
+/// here: every mapped access is bound-checked against the mapped length
+/// (taken at open, `<=` the file length at that instant), and the
+/// storage engine only ever truncates a `.pstore` below that point
+/// during tail reclamation — which the snapshot-pin registry gates on
+/// no live reader being able to reach the reclaimed pages. Readers are
+/// the only holders of mapped handles, and they hold a pin for their
+/// whole lifetime.
+#[cfg(all(unix, target_pointer_width = "64"))]
+struct MmapFile {
+    inner: Arc<dyn VfsFile>,
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ over committed bytes the engine
+// treats as immutable; concurrent memcpys from it race with nothing.
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Send for MmapFile {}
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Sync for MmapFile {}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl MmapFile {
+    /// Map `inner` read-only, or `None` when it has no OS descriptor,
+    /// is empty (zero-length mappings are invalid), or the kernel
+    /// refuses the mapping — all of which mean "serve via `pread`".
+    fn try_map(inner: Arc<dyn VfsFile>) -> Option<MmapFile> {
+        let fd = inner.os_fd()?;
+        let len = inner.len().ok()? as usize;
+        if len == 0 {
+            return None;
+        }
+        let ptr = unsafe {
+            mmap_sys::mmap(std::ptr::null_mut(), len, mmap_sys::PROT_READ, mmap_sys::MAP_SHARED, fd, 0)
+        };
+        if ptr as isize == -1 {
+            return None; // MAP_FAILED
+        }
+        Some(MmapFile { inner, ptr, len })
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl Drop for MmapFile {
+    fn drop(&mut self) {
+        // SAFETY: ptr/len are exactly what mmap returned; the fd (and
+        // inner handle) outlive the mapping, and nothing reads from the
+        // mapping after drop.
+        unsafe {
+            mmap_sys::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl VfsFile for MmapFile {
+    fn read_at(&self, buf: &mut [u8], offset: u64) -> io::Result<usize> {
+        if offset >= self.len as u64 {
+            // Past the mapped prefix: the file may have grown since the
+            // map was taken — the inner handle sees the live length.
+            return self.inner.read_at(buf, offset);
+        }
+        let n = buf.len().min(self.len - offset as usize);
+        // SAFETY: offset + n <= self.len, and the mapping stays valid
+        // for the life of self (see type docs for why the bytes cannot
+        // be truncated out from under a pinned reader).
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.ptr.add(offset as usize), buf.as_mut_ptr(), n);
+        }
+        Ok(n)
+    }
+
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> io::Result<()> {
+        if (offset as usize) < self.len && buf.len() <= self.len - offset as usize {
+            // SAFETY: wholly in-bounds of the mapping (see read_at).
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    self.ptr.add(offset as usize),
+                    buf.as_mut_ptr(),
+                    buf.len(),
+                );
+            }
+            Ok(())
+        } else {
+            // Straddles or lies past the mapped prefix: one positional
+            // read against the live file.
+            self.inner.read_exact_at(buf, offset)
+        }
+    }
+
+    fn write_all_at(&self, buf: &[u8], offset: u64) -> io::Result<()> {
+        self.inner.write_all_at(buf, offset) // read-only handle: rejects
+    }
+
+    fn set_len(&self, len: u64) -> io::Result<()> {
+        self.inner.set_len(len) // read-only handle: rejects
+    }
+
+    fn sync(&self) -> io::Result<()> {
+        self.inner.sync()
+    }
+
+    fn len(&self) -> io::Result<u64> {
+        self.inner.len() // live length, not the mapped prefix
+    }
+
+    fn os_fd(&self) -> Option<i32> {
+        self.inner.os_fd()
+    }
+}
+
+/// Try to serve `inner` through a read-only shared memory mapping.
+/// `None` — caller keeps the plain handle — when the file exposes no OS
+/// descriptor ([`MemVfs`], [`FaultVfs`]), is empty, the platform has no
+/// mapping path, or the kernel refuses the map. When `Some`, reads are
+/// bit-identical to the plain handle (reads past the mapped prefix fall
+/// back to it), only cheaper.
+#[cfg(all(unix, target_pointer_width = "64"))]
+pub fn map_read_only(inner: &Arc<dyn VfsFile>) -> Option<Arc<dyn VfsFile>> {
+    MmapFile::try_map(inner.clone()).map(|f| Arc::new(f) as Arc<dyn VfsFile>)
+}
+
+/// No mapping path on this platform: always `None`.
+#[cfg(not(all(unix, target_pointer_width = "64")))]
+pub fn map_read_only(_inner: &Arc<dyn VfsFile>) -> Option<Arc<dyn VfsFile>> {
+    None
+}
+
+/// A wrapper [`Vfs`] that serves **read-only** opens from a shared
+/// memory mapping whenever the inner file exposes a real OS descriptor
+/// (only [`StdVfs`] files do). Everything else — writable opens, files
+/// over [`MemVfs`] or [`FaultVfs`], platforms without the mapping path,
+/// kernels that refuse the map — passes through to the inner VFS
+/// untouched, so enabling mmap can never change behavior, only the
+/// syscall count. In particular a [`FaultVfs`] underneath keeps exact
+/// fault accounting: its files expose no descriptor, so they are never
+/// mapped around.
+pub struct MmapVfs {
+    inner: Arc<dyn Vfs>,
+}
+
+impl MmapVfs {
+    /// Wrap `inner`, mapping read-only opens where possible.
+    pub fn new(inner: Arc<dyn Vfs>) -> MmapVfs {
+        MmapVfs { inner }
+    }
+}
+
+impl Vfs for MmapVfs {
+    fn open(&self, path: &Path, mode: OpenMode) -> io::Result<Arc<dyn VfsFile>> {
+        let file = self.inner.open(path, mode)?;
+        if mode == OpenMode::Read {
+            if let Some(mapped) = map_read_only(&file) {
+                return Ok(mapped);
+            }
+        }
+        Ok(file)
+    }
+
+    fn create_dir_all(&self, path: &Path) -> io::Result<()> {
+        self.inner.create_dir_all(path)
+    }
+
+    fn list_dir(&self, dir: &Path) -> io::Result<Vec<PathBuf>> {
+        self.inner.list_dir(dir)
+    }
+
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        self.inner.read(path)
+    }
+
+    fn instance_id(&self) -> u64 {
+        // Mapping does not change which store the files belong to.
+        self.inner.instance_id()
+    }
+
+    fn registry_key(&self, path: &Path) -> PathBuf {
+        self.inner.registry_key(path)
     }
 }
 
@@ -1181,11 +1417,81 @@ mod tests {
     }
 
     #[test]
+    fn mmap_reads_match_pread_and_track_growth() {
+        let dir = std::env::temp_dir().join("grouper_vfs_mmap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mapped.bin");
+        let payload: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        let w = StdVfs.open(&path, OpenMode::CreateTruncate).unwrap();
+        w.write_all_at(&payload, 0).unwrap();
+
+        let mvfs = MmapVfs::new(Arc::new(StdVfs));
+        let r = mvfs.open(&path, OpenMode::Read).unwrap();
+        assert_eq!(read_all(r.as_ref()).unwrap(), payload);
+        let mut mid = [0u8; 64];
+        r.read_exact_at(&mut mid, 4321).unwrap();
+        assert_eq!(&mid[..], &payload[4321..4321 + 64]);
+        assert!(r.write_all_at(b"no", 0).is_err(), "read-only handle");
+        assert!(r.set_len(0).is_err(), "read-only handle");
+
+        // A writer grows the file after the map was taken: reads past
+        // (and straddling) the mapped prefix must fall back to pread.
+        w.write_all_at(b"grown-tail", payload.len() as u64).unwrap();
+        assert_eq!(r.len().unwrap(), payload.len() as u64 + 10, "live length");
+        let mut tail = [0u8; 10];
+        r.read_exact_at(&mut tail, payload.len() as u64).unwrap();
+        assert_eq!(&tail, b"grown-tail");
+        let mut straddle = [0u8; 14];
+        r.read_exact_at(&mut straddle, payload.len() as u64 - 4).unwrap();
+        assert_eq!(&straddle[..4], &payload[payload.len() - 4..]);
+        assert_eq!(&straddle[4..], b"grown-tail");
+        // Whole-file read through the cursor path agrees too.
+        let mut all = read_all(r.as_ref()).unwrap();
+        assert_eq!(all.split_off(payload.len()), b"grown-tail".to_vec());
+        assert_eq!(all, payload);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mmap_over_mem_and_fault_is_an_exact_passthrough() {
+        // MemVfs files expose no OS descriptor: MmapVfs must serve them
+        // through the inner handle, bit-identically.
+        let mem = Arc::new(MemVfs::new());
+        mem.install(&p("/m/a.bin"), b"hello mapped world".to_vec());
+        let mvfs = MmapVfs::new(mem.clone());
+        assert_eq!(mvfs.instance_id(), mem.instance_id(), "same store identity");
+        let f = mvfs.open(&p("/m/a.bin"), OpenMode::Read).unwrap();
+        assert!(f.os_fd().is_none(), "mem files must never look mappable");
+        assert_eq!(read_all(f.as_ref()).unwrap(), b"hello mapped world");
+
+        // FaultVfs under MmapVfs keeps exact fault accounting: a write
+        // through a wrapped writable handle still counts, and the Nth
+        // write still fails on schedule.
+        let fv = FaultVfs::new(Arc::new(MemVfs::new()));
+        let wrapped = MmapVfs::new(Arc::new(fv.clone()));
+        let f = wrapped.open(&p("/f.bin"), OpenMode::Create).unwrap();
+        let writes = fv.writes_attempted();
+        fv.set_plan(FaultPlan { fail_write: Some(writes + 2), ..Default::default() });
+        f.write_all_at(b"one", 0).unwrap();
+        assert!(f.write_all_at(b"two", 3).is_err(), "fault schedule intact through mmap");
+        assert_eq!(fv.writes_attempted(), writes + 2);
+        // A multi-page-sized vectored read is one read_exact_at to the
+        // fault layer — reads are never faulted, never counted.
+        let ops = fv.ops_done();
+        let mut buf = vec![0u8; 3];
+        let r = wrapped.open(&p("/f.bin"), OpenMode::Read).unwrap();
+        r.read_exact_at(&mut buf, 0).unwrap();
+        assert_eq!(&buf, b"one");
+        assert_eq!(fv.ops_done(), ops, "reads must not advance the op counter");
+    }
+
+    #[test]
     fn vfs_types_are_send_and_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<StdVfs>();
         assert_send_sync::<MemVfs>();
         assert_send_sync::<FaultVfs>();
+        assert_send_sync::<MmapVfs>();
         assert_send_sync::<VfsCursor>();
         assert_send_sync::<Arc<dyn Vfs>>();
         assert_send_sync::<Arc<dyn VfsFile>>();

@@ -290,19 +290,45 @@ impl WalWriter {
         self.appended
     }
 
-    /// Durability point: flush buffers and fsync.
+    /// Durability point: flush buffers and fsync. Equivalent to
+    /// [`WalWriter::commit_no_sync`] followed by [`WalWriter::sync`] —
+    /// the split a group-commit coordinator uses to flush many logs
+    /// first and amortize the fsyncs afterwards.
     ///
     /// # Errors
     /// Any truncation, flush or fsync failure; nothing is durable until
     /// it returns `Ok`.
     pub fn commit(&mut self) -> io::Result<()> {
+        self.commit_no_sync()?;
+        self.sync()
+    }
+
+    /// The write half of a commit: truncate any dirty tail and flush the
+    /// append buffer, but do **not** fsync — nothing becomes durable
+    /// until a later [`WalWriter::sync`] (or full [`WalWriter::commit`])
+    /// succeeds. Crash-wise this is indistinguishable from buffered
+    /// appends: recovery sees either a valid prefix or a torn tail it
+    /// discards.
+    ///
+    /// # Errors
+    /// Any truncation or flush failure.
+    pub fn commit_no_sync(&mut self) -> io::Result<()> {
         if self.dirty_tail {
             // Garbage or withdrawn frames may sit past the logical tail;
             // they must never survive into a durability promise.
             self.file.set_len(self.flushed)?;
             self.dirty_tail = false;
         }
-        self.flush_buf()?;
+        self.flush_buf()
+    }
+
+    /// The durability half of a commit: fsync the log file. Only a
+    /// meaningful promise after [`WalWriter::commit_no_sync`] returned
+    /// `Ok` with no appends in between.
+    ///
+    /// # Errors
+    /// Any fsync failure; on error nothing new is durable.
+    pub fn sync(&mut self) -> io::Result<()> {
         self.file.sync()
     }
 

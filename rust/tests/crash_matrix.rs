@@ -27,7 +27,8 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
-use grouper::formats::{PagedReader, PagedStore};
+use grouper::formats::paged_sharded::{shard_of_key, shard_prefix};
+use grouper::formats::{PagedReader, PagedShardSet, PagedStore, ShardedPagedReader};
 use grouper::pipeline::FeatureKey;
 use grouper::records::Example;
 use grouper::store::vfs::{CrashImage, FaultPlan, FaultVfs, MemVfs};
@@ -471,6 +472,133 @@ fn reclaim_workload_ends_with_file_size_proportional_to_live_data() {
     // And the store still serves every row.
     let n: usize = store_contents(&mut store).values().map(Vec::len).sum();
     assert_eq!(n, 12 * 40);
+}
+
+#[test]
+fn group_commit_crash_recovers_each_shard_to_its_own_committed_prefix() {
+    // The group-commit barrier: `PagedShardSet::commit` flushes every
+    // shard's WAL, then runs the per-shard fsyncs in parallel. A crash
+    // anywhere inside that window — after some shard fsyncs and before
+    // others — must leave EVERY shard recoverable to its own committed
+    // prefix: either its pre-batch state or its post-batch state, never
+    // a torn mix. The sync phase runs on threads, so the op index a
+    // given shard's fsync lands on varies run to run; the assertions
+    // below are therefore strictly per-shard (each shard judged against
+    // its own append sequence), not against a global durability order.
+    const SHARDS: usize = 3;
+    let dir = Path::new("/gc/store");
+    let route = |g: &[u8]| shard_of_key(g, 0, SHARDS);
+
+    // The workload: batch A (committed AND checkpointed, so the set
+    // manifest is published and every shard has a durable floor), then
+    // batch B sealed by exactly one group commit — the barrier under
+    // test. Returns per-shard oracles and the op count at the phase
+    // boundary.
+    struct GcLog {
+        per_shard: Vec<Vec<(Vec<u8>, Vec<u8>)>>,
+        phase_a: Vec<usize>,
+        ops_a: u64,
+    }
+    let run = |fv: &Arc<FaultVfs>| -> (GcLog, anyhow::Result<()>) {
+        let mut log = GcLog {
+            per_shard: vec![Vec::new(); SHARDS],
+            phase_a: vec![0; SHARDS],
+            ops_a: 0,
+        };
+        let mut go = |log: &mut GcLog| -> anyhow::Result<()> {
+            let vfs: Arc<FaultVfs> = Arc::clone(fv);
+            let mut set = PagedShardSet::create_with(vfs, dir, "s", SHARDS, 4, 0)?;
+            set.set_group_commit(true);
+            for i in 0..12 {
+                let group = format!("g{}", i % 6).into_bytes();
+                let ex = Example::text(&format!("a{i}"));
+                set.append(&group, &ex)?;
+                log.per_shard[route(&group)].push((group, ex.encode()));
+            }
+            set.commit()?;
+            set.checkpoint()?;
+            log.phase_a = log.per_shard.iter().map(Vec::len).collect();
+            log.ops_a = fv.ops_done();
+            for i in 0..9 {
+                let group = format!("g{}", i % 6).into_bytes();
+                let ex = Example::text(&format!("b{i}"));
+                set.append(&group, &ex)?;
+                log.per_shard[route(&group)].push((group, ex.encode()));
+            }
+            set.commit()?; // the group-commit barrier under test
+            Ok(())
+        };
+        let res = go(&mut log);
+        (log, res)
+    };
+
+    // Fault-free pass: per-shard oracles + op counts. Batch B must
+    // actually span multiple shards or the barrier test is vacuous.
+    let fv = Arc::new(FaultVfs::new(Arc::new(MemVfs::new())));
+    let (full, res) = run(&fv);
+    res.expect("fault-free workload");
+    let total_ops = fv.ops_done();
+    assert!(full.ops_a > 0 && total_ops > full.ops_a);
+    let shards_grown: usize = (0..SHARDS)
+        .filter(|&i| full.per_shard[i].len() > full.phase_a[i])
+        .count();
+    assert!(shards_grown >= 2, "batch B must hit at least two shards");
+
+    // Crash after every op inside the batch-B window (flush writes,
+    // eviction write-backs, and the parallel fsyncs), under both images.
+    for k in (full.ops_a + 1)..=total_ops {
+        for image in [CrashImage::AllApplied, CrashImage::SyncedOnly] {
+            let fv = Arc::new(FaultVfs::new(Arc::new(MemVfs::new())));
+            fv.set_plan(FaultPlan { crash_after_ops: Some(k), ..Default::default() });
+            let (_, res) = run(&fv);
+            if k < total_ops {
+                assert!(res.is_err(), "crash after op {k} must abort the group commit");
+            }
+            let recovered_vfs = MemVfs::from_map(fv.crash_snapshot(image));
+            let mut recovered_total = 0usize;
+            for i in 0..SHARDS {
+                let sp = shard_prefix("s", i, SHARDS);
+                let mut store = PagedStore::open_with(&recovered_vfs, dir, &sp, 8)
+                    .unwrap_or_else(|e| {
+                        panic!("crash at op {k} ({image:?}): shard {i} failed to open: {e:#}")
+                    });
+                let n = store.num_examples() as usize;
+                recovered_total += n;
+                let (n_a, n_all) = (full.phase_a[i], full.per_shard[i].len());
+                assert!(
+                    n >= n_a && n <= n_all,
+                    "crash at op {k} ({image:?}): shard {i} recovered {n}, \
+                     committed floor {n_a}, ceiling {n_all}"
+                );
+                if image == CrashImage::SyncedOnly {
+                    // Batch B is one WAL flush + one fsync per shard:
+                    // with unsynced bytes gone, a shard is atomically
+                    // pre- or post-batch, nothing in between.
+                    assert!(
+                        n == n_a || n == n_all,
+                        "crash at op {k} (SyncedOnly): shard {i} recovered {n}, \
+                         not a committed state ({n_a} or {n_all})"
+                    );
+                }
+                // Exact contents: the shard's own oracle prefix.
+                assert_eq!(
+                    store_contents(&mut store),
+                    grouped_prefix(&full.per_shard[i], n),
+                    "crash at op {k} ({image:?}): shard {i} recovered a torn mix"
+                );
+            }
+            // The set-level reader (manifest + per-shard recovery) must
+            // agree with the per-shard opens just performed (recovery is
+            // idempotent, so the second pass sees the same state).
+            let reader = ShardedPagedReader::open_with(&recovered_vfs, dir, "s", 8)
+                .expect("set open after per-shard recovery");
+            assert_eq!(
+                reader.num_examples() as usize,
+                recovered_total,
+                "crash at op {k} ({image:?}): set reader disagrees with shard recovery"
+            );
+        }
+    }
 }
 
 #[test]

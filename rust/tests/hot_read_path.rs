@@ -1,0 +1,225 @@
+//! Integration: the opt-in hot read path (mmap-backed files, vectored
+//! group-scan prefetch, scan-resistant 2Q caching) must change ONLY
+//! speed, never bytes. Every combination of `ReadOpts` — over both the
+//! real filesystem (where mmap actually maps) and `MemVfs` (where mmap
+//! must fall back to plain reads) — fetches bit-identical cohorts,
+//! serial and with 4 reader threads, and the cache accounting identity
+//! `disk_reads == misses + header_reads` holds throughout.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
+use grouper::formats::{PagedReader, PagedStore, ShardedPagedReader};
+use grouper::pipeline::{
+    run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
+};
+use grouper::store::cache::CachePolicy;
+use grouper::store::shared::ReadOpts;
+use grouper::store::vfs::{MemVfs, StdVfs};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("grouper_hot_read_it").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn dataset(groups: usize, seed: u64) -> SyntheticTextDataset {
+    let mut spec = DatasetSpec::fedccnews_mini(groups, seed);
+    spec.max_group_words = 1500;
+    SyntheticTextDataset::new(spec)
+}
+
+/// The full matrix of hot-read-path options under test: mmap on/off ×
+/// vectored on/off × cache policy, plus one kitchen-sink combo.
+fn opt_matrix() -> Vec<ReadOpts> {
+    vec![
+        ReadOpts::default(),
+        ReadOpts { mmap: true, ..Default::default() },
+        ReadOpts { vectored_batch: 8, ..Default::default() },
+        ReadOpts { mmap: true, vectored_batch: 8, ..Default::default() },
+        ReadOpts { policy: CachePolicy::TwoQ, ..Default::default() },
+        ReadOpts { mmap: true, vectored_batch: 16, policy: CachePolicy::TwoQ },
+    ]
+}
+
+/// Fetch a cohort (every group, raw bytes) through `reader` with
+/// `workers` threads over disjoint slices of the key space.
+fn fetch_cohort(reader: &PagedReader, workers: usize) -> HashMap<Vec<u8>, Vec<Vec<u8>>> {
+    let keys = reader.keys().to_vec();
+    let collected: Mutex<HashMap<Vec<u8>, Vec<Vec<u8>>>> = Mutex::new(HashMap::new());
+    std::thread::scope(|s| {
+        for part in keys.chunks(keys.len().div_ceil(workers)) {
+            let reader = &reader;
+            let collected = &collected;
+            s.spawn(move || {
+                for key in part {
+                    let mut got = Vec::new();
+                    assert!(reader
+                        .visit_group_raw(key, |bytes| {
+                            got.push(bytes.to_vec());
+                            true
+                        })
+                        .unwrap());
+                    collected.lock().unwrap().insert(key.clone(), got);
+                }
+            });
+        }
+    });
+    collected.into_inner().unwrap()
+}
+
+fn fetch_cohort_sharded(
+    reader: &ShardedPagedReader,
+    workers: usize,
+) -> HashMap<Vec<u8>, Vec<Vec<u8>>> {
+    let keys = reader.keys().to_vec();
+    let collected: Mutex<HashMap<Vec<u8>, Vec<Vec<u8>>>> = Mutex::new(HashMap::new());
+    std::thread::scope(|s| {
+        for part in keys.chunks(keys.len().div_ceil(workers)) {
+            let reader = &reader;
+            let collected = &collected;
+            s.spawn(move || {
+                for key in part {
+                    let mut got = Vec::new();
+                    assert!(reader
+                        .visit_group_raw(key, |bytes| {
+                            got.push(bytes.to_vec());
+                            true
+                        })
+                        .unwrap());
+                    collected.lock().unwrap().insert(key.clone(), got);
+                }
+            });
+        }
+    });
+    collected.into_inner().unwrap()
+}
+
+#[test]
+fn cohort_fetch_is_bit_identical_across_all_read_opts_on_disk() {
+    let dir = tmp("single");
+    let ds = dataset(20, 11);
+    // Small cache so vectored prefetch + 2Q actually evict.
+    PagedStore::build(&ds, &FeatureKey::new("domain"), &dir, "d", 8).unwrap();
+
+    // Baseline: default opts, serial.
+    let base_reader = PagedReader::open(&dir, "d", 8).unwrap();
+    let want = fetch_cohort(&base_reader, 1);
+    assert!(!want.is_empty());
+    drop(base_reader);
+
+    for opts in opt_matrix() {
+        for workers in [1usize, 4] {
+            let reader =
+                PagedReader::open_with_opts(&StdVfs, &dir, "d", 8, opts).unwrap();
+            let got = fetch_cohort(&reader, workers);
+            assert_eq!(
+                got, want,
+                "cohort diverged under {opts:?} with {workers} read workers"
+            );
+            // The accounting identity must hold for every combination:
+            // every disk read is either a counted miss or a header read.
+            let stats = reader.cache_stats();
+            assert_eq!(
+                reader.pages_read(),
+                stats.misses + reader.header_reads(),
+                "stats identity broken under {opts:?} with {workers} workers"
+            );
+        }
+    }
+}
+
+#[test]
+fn cohort_fetch_is_bit_identical_across_all_read_opts_over_memvfs() {
+    // Same matrix over MemVfs: no OS descriptors exist, so `mmap: true`
+    // must silently serve through plain handles with identical bytes.
+    let vfs = MemVfs::new();
+    let dir = Path::new("/hot/mem");
+    let ds = dataset(14, 23);
+    PagedStore::build_with(&vfs, &ds, &FeatureKey::new("domain"), dir, "d", 8).unwrap();
+
+    let base = PagedReader::open_with(&vfs, dir, "d", 8).unwrap();
+    let want = fetch_cohort(&base, 1);
+    drop(base);
+
+    for opts in opt_matrix() {
+        for workers in [1usize, 4] {
+            let reader = PagedReader::open_with_opts(&vfs, dir, "d", 8, opts).unwrap();
+            let got = fetch_cohort(&reader, workers);
+            assert_eq!(
+                got, want,
+                "MemVfs cohort diverged under {opts:?} with {workers} read workers"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_cohort_fetch_is_bit_identical_across_all_read_opts() {
+    let dir = tmp("sharded");
+    let ds = dataset(24, 31);
+    let paged = PagedPartitionOptions { shards: 4, cache_pages: 16, hash_seed: 0 };
+    run_partition_paged(
+        &ds,
+        &FeatureKey::new("domain"),
+        &dir,
+        "d",
+        &PartitionOptions::default(),
+        &paged,
+    )
+    .unwrap();
+
+    let base = ShardedPagedReader::open(&dir, "d", 8).unwrap();
+    let want = fetch_cohort_sharded(&base, 1);
+    assert!(!want.is_empty());
+    drop(base);
+
+    for opts in opt_matrix() {
+        for workers in [1usize, 4] {
+            let reader =
+                ShardedPagedReader::open_with_opts(&StdVfs, &dir, "d", 8, opts).unwrap();
+            let got = fetch_cohort_sharded(&reader, workers);
+            assert_eq!(
+                got, want,
+                "sharded cohort diverged under {opts:?} with {workers} read workers"
+            );
+        }
+    }
+}
+
+#[test]
+fn snapshot_opens_honor_read_opts_against_a_live_writer() {
+    // The serving-layer path: snapshot opens (zero writes) with the full
+    // hot read path enabled, racing a live writer's appends. The pinned
+    // snapshot must stay bit-stable under every option combination.
+    let dir = tmp("live");
+    let ds = dataset(10, 41);
+    PagedStore::build(&ds, &FeatureKey::new("domain"), &dir, "d", 16).unwrap();
+
+    let base = PagedReader::open_snapshot(&dir, "d", 16).unwrap();
+    let want = fetch_cohort(&base, 1);
+    drop(base);
+
+    // Reopen the writer and keep it live (uncommitted appends pending)
+    // while snapshot readers come and go.
+    let mut writer = PagedStore::open(&dir, "d", 16).unwrap();
+    for i in 0..25 {
+        writer
+            .append(b"fresh-group", &grouper::records::Example::text(&format!("n{i}")))
+            .unwrap();
+    }
+
+    for opts in opt_matrix() {
+        let reader =
+            PagedReader::open_snapshot_with_opts(&StdVfs, &dir, "d", 16, opts).unwrap();
+        let got = fetch_cohort(&reader, 4);
+        assert_eq!(
+            got, want,
+            "pinned snapshot diverged under {opts:?} with a live writer"
+        );
+    }
+    writer.commit().unwrap();
+}
