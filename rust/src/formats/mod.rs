@@ -53,6 +53,8 @@ pub mod streaming;
 
 pub use hierarchical::{HierarchicalReader, HierarchicalStore};
 pub use in_memory::InMemoryDataset;
-pub use paged::{CompactReport, PagedReader, PagedStat, PagedStore};
+pub use paged::{
+    committed_state_with, CommittedState, CompactReport, PagedReader, PagedStat, PagedStore,
+};
 pub use paged_sharded::{PagedSetManifest, PagedShardSet, ShardedPagedReader};
 pub use streaming::{GindexSource, StreamedGroup, StreamingConfig, StreamingDataset};

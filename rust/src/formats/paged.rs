@@ -100,15 +100,15 @@ pub const DEFAULT_CACHE_PAGES: usize = 64;
 /// a mid-build crash needs — regardless of dataset size.
 pub const BUILD_CHECKPOINT_WAL_BYTES: u64 = 64 * 1024 * 1024;
 
-fn pstore_path(dir: &Path, prefix: &str) -> PathBuf {
+pub(crate) fn pstore_path(dir: &Path, prefix: &str) -> PathBuf {
     dir.join(format!("{prefix}.pstore"))
 }
 
-fn pdata_path(dir: &Path, prefix: &str) -> PathBuf {
+pub(crate) fn pdata_path(dir: &Path, prefix: &str) -> PathBuf {
     dir.join(format!("{prefix}.pdata"))
 }
 
-fn pwal_path(dir: &Path, prefix: &str) -> PathBuf {
+pub(crate) fn pwal_path(dir: &Path, prefix: &str) -> PathBuf {
     dir.join(format!("{prefix}.pwal"))
 }
 
@@ -211,7 +211,7 @@ fn encode_wal(epoch: u64, group: &[u8], example_bytes: &[u8]) -> Vec<u8> {
     out
 }
 
-fn decode_wal(payload: &[u8]) -> io::Result<(u64, &[u8], &[u8])> {
+pub(crate) fn decode_wal(payload: &[u8]) -> io::Result<(u64, &[u8], &[u8])> {
     if payload.len() < 12 {
         return Err(io::Error::new(io::ErrorKind::InvalidData, "short wal payload"));
     }
@@ -224,6 +224,92 @@ fn decode_wal(payload: &[u8]) -> io::Result<(u64, &[u8], &[u8])> {
         ));
     }
     Ok((epoch, &payload[12..12 + klen], &payload[12 + klen..]))
+}
+
+/// The durable replication position of a paged store: what the last
+/// checkpoint committed, plus the valid WAL prefix appended since. Two
+/// stores with equal `CommittedState` *and* equal bytes over the three
+/// committed prefixes (`committed_pages` index pages, `data_len` data
+/// bytes, `wal_len` log bytes) are the same store — this is the unit
+/// the serving layer's replication handshake compares
+/// ([`crate::serve::replica`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CommittedState {
+    /// Checkpoint epoch from the committed header.
+    pub epoch: u64,
+    /// Committed `.pstore` prefix, in pages (header page included).
+    pub committed_pages: u32,
+    /// Durable `.pdata` byte length at the last checkpoint.
+    pub data_len: u64,
+    /// Valid `.pwal` frame-prefix length in bytes.
+    pub wal_len: u64,
+}
+
+impl CommittedState {
+    /// The committed `.pstore` prefix in bytes.
+    pub fn index_len(&self) -> u64 {
+        u64::from(self.committed_pages.max(1)) * PAGE_SIZE as u64
+    }
+}
+
+/// Read the durable position of the store at `dir`/`prefix` without
+/// opening it: header page 0 (with a bounded torn-header retry, since a
+/// live checkpointer swaps it in place) plus the WAL's valid frame
+/// prefix. `Ok(None)` when no `.pstore` exists — a replication follower
+/// that has not cold-started yet.
+///
+/// # Errors
+/// A corrupt (never-valid) header, or any I/O failure reading the
+/// header page or scanning the WAL.
+pub fn committed_state_with(
+    vfs: &dyn Vfs,
+    dir: &Path,
+    prefix: &str,
+) -> Result<Option<CommittedState>> {
+    let index_path = pstore_path(dir, prefix);
+    let file = match vfs.open(&index_path, OpenMode::Read) {
+        Ok(f) => f,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).context("opening paged store header"),
+    };
+    let mut header = None;
+    for _ in 0..32 {
+        let mut buf = vec![0u8; PAGE_SIZE];
+        file.read_exact_at(&mut buf, 0)
+            .with_context(|| format!("reading header page of {}", index_path.display()))?;
+        let page = Page::from_vec(buf)?;
+        if header_checksum_ok(&page) {
+            header = Some(parse_header(&page)?);
+            break;
+        }
+        // Torn read against an in-place header swap: retry briefly.
+        std::thread::yield_now();
+    }
+    let Some(h) = header else {
+        bail!(
+            "paged store header at {} never parsed cleanly (corrupt store?)",
+            index_path.display()
+        );
+    };
+    let report = wal::replay_with(vfs, &pwal_path(dir, prefix), |_| Ok(()))?;
+    Ok(Some(CommittedState {
+        epoch: h.epoch,
+        committed_pages: h.committed_pages,
+        data_len: h.data_len,
+        wal_len: report.valid_bytes,
+    }))
+}
+
+/// Validate one WAL record payload for replication and return the epoch
+/// it was appended under. A follower runs every shipped frame through
+/// this *before* appending it to its own log, so a malformed record can
+/// never enter a replica's durable state.
+///
+/// # Errors
+/// [`io::ErrorKind::InvalidData`] when the payload is not a well-formed
+/// paged-store WAL record.
+pub fn wal_record_epoch(payload: &[u8]) -> io::Result<u64> {
+    decode_wal(payload).map(|(epoch, _, _)| epoch)
 }
 
 /// One group's **raw record bytes** (each exactly one encoded

@@ -12,8 +12,11 @@
 //! grouper vocab     --dataset fedc4-mini --groups 500 --size 1024 --out work/vocab.txt
 //! grouper serve     --dir work/fedc4 --prefix data [--addr 127.0.0.1:4700]
 //!                   [--cache-pages N] [--max-connections N]
+//! grouper replicate --from host:port --dir work/follower [--prefix data]
+//!                   [--interval-ms N] [--once true]
 //! grouper train     --config configs/fig4_fedavg.toml [--read-workers N]
-//!                   [--source DIR|remote://host:port [--source-prefix P]]
+//!                   [--source DIR|remote://host:port|replica://host:port
+//!                    [--source-prefix P] [--replica-dir DIR]]
 //!                   [--refresh-source true] [--prefetch true] [--ingest-rate N]
 //!                   [--mmap true] [--vectored N] [--cache-policy lru|2q] [--group-commit true]
 //! grouper personalize --config configs/fig4_fedavg.toml [--read-workers N]
@@ -41,6 +44,13 @@
 //! remote://host:port` consumes it like any local backend. `--source`
 //! also accepts a directory, auto-detected as a `.pset` sharded set, a
 //! `.pstore` single store, or a `.gindex` streaming materialization.
+//!
+//! `replicate` runs a read replica: a follower process keeps a
+//! byte-faithful local copy of a served store via WAL-frame shipping
+//! (only deltas cross the wire after the first sync; see
+//! `docs/REPLICATION.md` for the contract), and `train --source
+//! replica://host:port --replica-dir DIR` samples cohorts from that
+//! local copy — remote freshness at local-disk fetch latency.
 //!
 //! Hot read path (opt-in, defaults reproduce the classic behavior):
 //! `--mmap true` serves read-only store files from a shared memory
@@ -90,7 +100,9 @@ use grouper::pipeline::{
     PartitionOptions, Partitioner, RandomPartitioner,
 };
 use grouper::runtime::{ModelBackend, ModelRuntime};
-use grouper::serve::{RemoteClientSource, ServeOptions, StoreServer};
+use grouper::serve::{
+    RemoteClientSource, Replica, ReplicaClientSource, ReplicaOptions, ServeOptions, StoreServer,
+};
 use grouper::store::cache::CachePolicy;
 use grouper::store::shared::ReadOpts;
 use grouper::store::vfs::StdVfs;
@@ -120,6 +132,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "stats" => cmd_stats(&flags),
         "compact" => cmd_compact(&flags),
         "serve" => cmd_serve(&flags),
+        "replicate" => cmd_replicate(&flags),
         "vocab" => cmd_vocab(&flags),
         "train" => cmd_train(&flags, false),
         "personalize" => cmd_train(&flags, true),
@@ -162,15 +175,24 @@ fn print_usage() {
          \u{20}               (--dir/--prefix store, --addr host:port,\n\
          \u{20}               --max-connections N rejects extra trainers with\n\
          \u{20}               a typed error instead of queueing them)\n\
+         \u{20}  replicate    follow a served store as a read replica: keep a\n\
+         \u{20}               byte-faithful local copy current via WAL-frame\n\
+         \u{20}               shipping (--from host:port, --dir local dir,\n\
+         \u{20}               --prefix P, --interval-ms N poll period,\n\
+         \u{20}               --once true syncs once and exits; contract in\n\
+         \u{20}               docs/REPLICATION.md)\n\
          \u{20}  vocab        train a WordPiece vocabulary from a corpus\n\
          \u{20}  train        federated training (FedAvg/FedSGD) per a TOML config;\n\
          \u{20}               --read-workers N fetches each round's cohort of\n\
          \u{20}               client datasets in parallel (default 1 = serial;\n\
          \u{20}               results are identical, the data phase is faster);\n\
-         \u{20}               --source DIR|remote://host:port trains from a\n\
-         \u{20}               shared store (.pset/.pstore/.gindex auto-detected,\n\
-         \u{20}               --source-prefix P, default train) instead of\n\
-         \u{20}               materializing a private streaming split;\n\
+         \u{20}               --source DIR|remote://host:port|replica://host:port\n\
+         \u{20}               trains from a shared store (.pset/.pstore/.gindex\n\
+         \u{20}               auto-detected, --source-prefix P, default train)\n\
+         \u{20}               instead of materializing a private streaming\n\
+         \u{20}               split; replica:// keeps a local WAL-shipped copy\n\
+         \u{20}               under --replica-dir (default WORK/replica) and\n\
+         \u{20}               fetches cohorts from local disk;\n\
          \u{20}               --refresh-source true re-pins the freshest committed\n\
          \u{20}               checkpoint at every round boundary (bit-stable\n\
          \u{20}               within a round, freshest between rounds);\n\
@@ -667,8 +689,68 @@ fn cmd_serve(f: &Flags) -> Result<()> {
     server.run()
 }
 
+/// Follow a served store as a read replica: `grouper replicate --from
+/// host:4700 --dir work/follower`, then local readers (or `train
+/// --source replica://host:4700`) consume the copy. Polls `sync()`
+/// every `--interval-ms` (default 500) until killed; `--once true`
+/// syncs once and exits. Transient sync errors (the primary
+/// checkpointing mid-poll, a server restart) are retried on the next
+/// tick; divergence is fatal — a diverged follower must be pointed at
+/// a fresh `--dir`.
+fn cmd_replicate(f: &Flags) -> Result<()> {
+    let from = f.required("from")?;
+    let dir = PathBuf::from(f.required("dir")?);
+    let prefix = f.get_or("prefix", "data");
+    let interval = Duration::from_millis(f.usize_or("interval-ms", 500)? as u64);
+    let once = f.bool_or("once", false)?;
+    let mut replica = Replica::connect(from, &dir, prefix)?;
+    println!(
+        "replicating {} -> {}/{prefix} ({}), polling every {}ms",
+        replica.addr(),
+        dir.display(),
+        if replica.sharded() { "sharded set" } else { "single store" },
+        interval.as_millis()
+    );
+    loop {
+        match replica.sync() {
+            Ok(report) => {
+                // Quiet when caught up; one line per sync that moved bytes.
+                let moved = report.frames > 0
+                    || report.shipped_bytes > 0
+                    || report.snapshot_transfers > 0;
+                if moved {
+                    println!(
+                        "synced to epochs {:?}: {} WAL frame(s), {} byte(s) shipped, \
+                         {} snapshot transfer(s)",
+                        report.epochs,
+                        report.frames,
+                        report.shipped_bytes,
+                        report.snapshot_transfers
+                    );
+                }
+                if once {
+                    println!("synced once to epochs {:?}; exiting", report.epochs);
+                    return Ok(());
+                }
+            }
+            Err(e) if format!("{e:#}").contains("diverged") => {
+                return Err(e.context("follower has diverged; re-seed it into a fresh --dir"));
+            }
+            Err(e) => {
+                if once {
+                    return Err(e);
+                }
+                eprintln!("sync failed (will retry): {e:#}");
+            }
+        }
+        std::thread::sleep(interval);
+    }
+}
+
 /// Resolve a `--source` spec into a trainer backend:
-/// `remote://host:port` connects to a `grouper serve` process; a
+/// `remote://host:port` connects to a `grouper serve` process;
+/// `replica://host:port` replicates the served store into
+/// `replica_dir` and reads cohorts from that local copy; a
 /// directory is auto-detected as a `.pset` sharded set, a `.pstore`
 /// single store, or a `.gindex` streaming materialization (under
 /// `prefix`), in that order.
@@ -685,9 +767,19 @@ fn resolve_source(
     prefix: &str,
     cache_pages: usize,
     opts: ReadOpts,
+    replica_dir: &Path,
 ) -> Result<Arc<dyn ClientSource>> {
     if let Some(addr) = spec.strip_prefix("remote://") {
         return Ok(Arc::new(RemoteClientSource::connect(addr)?));
+    }
+    if let Some(addr) = spec.strip_prefix("replica://") {
+        return Ok(Arc::new(ReplicaClientSource::connect_with(
+            Arc::new(StdVfs),
+            addr,
+            replica_dir,
+            prefix,
+            ReplicaOptions { cache_pages, ..Default::default() },
+        )?));
     }
     let dir = PathBuf::from(spec);
     if PagedSetManifest::exists(&dir, prefix) {
@@ -731,10 +823,11 @@ fn start_ingest(
     rate: usize,
     group_commit: bool,
 ) -> Result<IngestHandle> {
-    if spec.starts_with("remote://") {
+    if spec.starts_with("remote://") || spec.starts_with("replica://") {
         bail!(
-            "--ingest-rate needs a local paged --source (the live writer runs in-process); \
-             run it in the process that owns the store directory"
+            "--ingest-rate needs a local paged --source (the live writer runs in-process, and \
+             a replica follower never writes); run it in the process that owns the store \
+             directory"
         );
     }
     let dir = PathBuf::from(spec);
@@ -855,6 +948,8 @@ fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
     if ingest_rate > 0 && source_spec.is_none() {
         bail!("--ingest-rate requires a shared --source store to append into");
     }
+    let replica_dir =
+        f.get("replica-dir").map(PathBuf::from).unwrap_or_else(|| work.join("replica"));
     let out = match source_spec {
         Some(spec) => {
             let prefix = f.get_or("source-prefix", "train").to_string();
@@ -865,17 +960,22 @@ fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
             };
             // `--refresh-source true`: local backends get wrapped so each
             // round boundary reopens the freshest committed snapshot;
-            // remote sources refresh natively (a re-pin handshake).
-            let src: Arc<dyn ClientSource> =
-                if tc.refresh_source && !spec.starts_with("remote://") {
-                    let spec = spec.to_string();
-                    let prefix = prefix.clone();
-                    Arc::new(RefreshingSource::new(Box::new(move || {
-                        resolve_source(&spec, &prefix, cache_pages, ropts)
-                    }))?)
-                } else {
-                    resolve_source(spec, &prefix, cache_pages, ropts)?
-                };
+            // remote sources refresh natively (a re-pin handshake), and
+            // replica sources refresh natively too (apply pending WAL
+            // frames, then re-open the local snapshot).
+            let src: Arc<dyn ClientSource> = if tc.refresh_source
+                && !spec.starts_with("remote://")
+                && !spec.starts_with("replica://")
+            {
+                let spec = spec.to_string();
+                let prefix = prefix.clone();
+                let replica_dir = replica_dir.clone();
+                Arc::new(RefreshingSource::new(Box::new(move || {
+                    resolve_source(&spec, &prefix, cache_pages, ropts, &replica_dir)
+                }))?)
+            } else {
+                resolve_source(spec, &prefix, cache_pages, ropts, &replica_dir)?
+            };
             println!("training from {}", src.describe());
             let out = train_with_source(&rt, &src, &wp, &tc)?;
             if let Some(handle) = ingest {
@@ -921,6 +1021,7 @@ fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
                     f.get_or("eval-source-prefix", "eval"),
                     cache_pages,
                     ropts,
+                    &replica_dir,
                 )?;
                 println!("evaluating clients from {}", src.describe());
                 build_eval_clients(src.as_ref(), &wp, &rt, cfg.fed.tau, cfg.data.num_eval_groups)?

@@ -102,7 +102,10 @@ pub struct RemoteClientSource {
     reconnects: AtomicU64,
 }
 
-fn connect_with_backoff(addr: &str, opts: &RemoteOptions) -> Result<TcpStream> {
+/// Connect to `addr` with bounded exponential-backoff retries. Shared
+/// with the replication follower ([`super::replica`]), which dials the
+/// same servers with the same patience.
+pub(crate) fn connect_with_backoff(addr: &str, opts: &RemoteOptions) -> Result<TcpStream> {
     let targets: Vec<SocketAddr> = addr
         .to_socket_addrs()
         .with_context(|| format!("resolving store server address {addr}"))?
@@ -130,7 +133,7 @@ fn connect_with_backoff(addr: &str, opts: &RemoteOptions) -> Result<TcpStream> {
 }
 
 /// Send one request frame as a single write.
-fn send_request(stream: &mut TcpStream, req: &Request) -> Result<()> {
+pub(crate) fn send_request(stream: &mut TcpStream, req: &Request) -> Result<()> {
     let mut buf = Vec::new();
     write_frame(&mut buf, &encode_request(req))?;
     stream.write_all(&buf).context("writing request to store server")?;
@@ -139,7 +142,7 @@ fn send_request(stream: &mut TcpStream, req: &Request) -> Result<()> {
 
 /// Read one response frame; a server [`Response::Error`] becomes an
 /// `Err` here so callers only ever see well-typed successes.
-fn read_response(stream: &mut TcpStream) -> Result<Response> {
+pub(crate) fn read_response(stream: &mut TcpStream) -> Result<Response> {
     let payload = read_frame(stream)
         .context("reading store server response")?
         .ok_or_else(|| anyhow!("store server closed the connection"))?;

@@ -27,6 +27,15 @@
 //!   address (one bounded attempt per failing call, backoff reset on
 //!   any success), and `refresh()` re-pins the freshest checkpoint at
 //!   round boundaries for live-ingestion training.
+//! * [`replica`] — read replicas via WAL-frame shipping: a [`Replica`]
+//!   follower keeps a byte-faithful local copy of the store (WAL
+//!   deltas at the same epoch, checkpoint transfers across epoch
+//!   boundaries, full snapshot transfer past the compaction horizon),
+//!   and [`ReplicaClientSource`] serves cohorts from that local disk —
+//!   only deltas cross the wire after the first sync. Replication
+//!   connections pin **no** snapshot on the primary, so followers
+//!   never gate its page reuse or compaction. Contract:
+//!   `docs/REPLICATION.md`.
 //!
 //! The concurrency contract is exactly the storage engine's
 //! single-live-writer rule extended over the network: **one** process
@@ -47,7 +56,9 @@
 
 pub mod client;
 pub mod proto;
+pub mod replica;
 pub mod server;
 
 pub use client::{RemoteClientSource, RemoteOptions};
+pub use replica::{Replica, ReplicaClientSource, ReplicaOptions, SyncReport};
 pub use server::{ServeOptions, ServerHandle, StoreServer};

@@ -34,6 +34,33 @@
 //! every later reply on this connection is served from (see
 //! [`crate::serve`] for the snapshot contract).
 //!
+//! ## Replication (protocol v2)
+//!
+//! A connection may instead open with [`Request::ReplHello`] — the
+//! extended hello of a **replication follower** — after which only
+//! [`Request::ReplPoll`] and [`Request::ReplFetch`] are meaningful.
+//! Replication connections carry raw store bytes, never decoded
+//! groups, and the server opens **no pinned snapshot** for them (a
+//! follower must not gate the primary's page reuse or compaction):
+//!
+//! * `ReplPoll` announces the follower's durable position (shard,
+//!   checkpoint epoch, valid WAL length, and a CRC32C of that WAL
+//!   prefix). Same epoch + matching prefix → [`Response::ReplFrames`]
+//!   with the WAL delta (verbatim frame bytes, possibly empty = in
+//!   sync). Primary ahead by one or more checkpoints →
+//!   [`Response::ReplBehind`]. Anything inconsistent → a typed
+//!   [`Response::Error`] whose message starts with `diverged:`.
+//! * `ReplFetch` asks for a checkpoint transfer: the committed index
+//!   prefix, the `.pdata` delta past the follower's verified length,
+//!   and the current WAL prefix, announced by [`Response::ReplStore`],
+//!   carried by [`Response::ReplChunk`] frames, and terminated by
+//!   [`Response::ReplDone`]. With `data_len = 0` this degrades to a
+//!   full-store snapshot transfer (cold start, or recovery from the
+//!   compaction horizon).
+//!
+//! The full contract — invariants, fallback and refusal rules — lives
+//! in `docs/REPLICATION.md`.
+//!
 //! Decoders never panic on malicious input: every read is
 //! bounds-checked and every error is a typed [`io::Error`] (property
 //! test below feeds random and truncated byte prefixes).
@@ -43,8 +70,9 @@ use std::io::{self, Read, Write};
 use crate::records::crc32c::crc32c;
 
 /// Protocol version sent in [`Request::Hello`]; bumped on any framing
-/// or message change.
-pub const PROTO_VERSION: u32 = 1;
+/// or message change. Version 2 added the replication message family
+/// (`Repl*`); the v1 data-plane messages are unchanged.
+pub const PROTO_VERSION: u32 = 2;
 
 /// Upper bound on one frame's payload (64 MiB). Bounds the allocation
 /// a single `len` prefix can demand on either side; a group or key
@@ -57,12 +85,28 @@ const OP_KEYS: u8 = 0x02;
 const OP_STATS: u8 = 0x03;
 const OP_FETCH_GROUP: u8 = 0x04;
 const OP_FETCH_COHORT: u8 = 0x05;
+const OP_REPL_HELLO: u8 = 0x06;
+const OP_REPL_POLL: u8 = 0x08;
+const OP_REPL_FETCH: u8 = 0x09;
 const OP_HELLO_ACK: u8 = 0x81;
 const OP_KEYS_RESP: u8 = 0x82;
 const OP_STATS_RESP: u8 = 0x83;
 const OP_GROUP: u8 = 0x84;
 const OP_MISS: u8 = 0x85;
+const OP_REPL_HELLO_ACK: u8 = 0x86;
+const OP_REPL_FRAMES: u8 = 0x87;
+const OP_REPL_BEHIND: u8 = 0x88;
+const OP_REPL_STORE: u8 = 0x89;
+const OP_REPL_CHUNK: u8 = 0x8A;
+const OP_REPL_DONE: u8 = 0x8B;
 const OP_ERROR: u8 = 0x7F;
+
+/// [`Response::ReplChunk`] file selector: the `.pstore` index file.
+pub const REPL_FILE_INDEX: u8 = 0;
+/// [`Response::ReplChunk`] file selector: the `.pdata` payload file.
+pub const REPL_FILE_DATA: u8 = 1;
+/// [`Response::ReplChunk`] file selector: the `.pwal` write-ahead log.
+pub const REPL_FILE_WAL: u8 = 2;
 
 /// A client → server message.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -86,6 +130,41 @@ pub enum Request {
     FetchCohort {
         /// The cohort's group keys.
         keys: Vec<Vec<u8>>,
+    },
+    /// Replication handshake: must be the first request on a follower's
+    /// connection. The server answers with [`Response::ReplHelloAck`]
+    /// describing the store's topology, and opens **no** pinned
+    /// snapshot for the connection.
+    ReplHello {
+        /// The follower's [`PROTO_VERSION`].
+        version: u32,
+    },
+    /// A follower's durable position for one shard: "here is the prefix
+    /// I hold — ship me what comes next."
+    ReplPoll {
+        /// Shard index (0 for a single store).
+        shard: u32,
+        /// The follower's committed checkpoint epoch (its `.pstore`
+        /// header epoch).
+        epoch: u64,
+        /// Length of the follower's valid WAL prefix, in bytes.
+        wal_len: u64,
+        /// CRC32C of that WAL prefix (`wal_len = 0` → the CRC of the
+        /// empty slice), letting the primary refuse a diverged history
+        /// instead of shipping frames that would corrupt it.
+        wal_crc: u32,
+    },
+    /// Ask for a checkpoint transfer of one shard: the committed index
+    /// prefix, the `.pdata` bytes past `data_len`, and the current WAL
+    /// prefix. `data_len = 0` requests a full-store transfer.
+    ReplFetch {
+        /// Shard index (0 for a single store).
+        shard: u32,
+        /// Length of the `.pdata` prefix the follower already holds and
+        /// has verified; the server streams only bytes past this point.
+        data_len: u64,
+        /// CRC32C of that `.pdata` prefix (ignored when `data_len = 0`).
+        data_crc: u32,
     },
 }
 
@@ -161,6 +240,69 @@ pub enum Response {
         /// The key that was asked for.
         key: Vec<u8>,
     },
+    /// Replication handshake reply: the store topology a follower needs
+    /// to mirror the primary's on-disk layout.
+    ReplHelloAck {
+        /// The server's [`PROTO_VERSION`].
+        version: u32,
+        /// `true` when the primary serves a sharded `.pset`; `false`
+        /// for a single paged store.
+        sharded: bool,
+        /// The set's group-routing hash seed (0 for a single store).
+        hash_seed: u64,
+        /// Per-shard file prefixes in shard order, as raw bytes (one
+        /// entry, the store prefix, for a single store). The follower
+        /// uses these to name its local files identically.
+        shard_prefixes: Vec<Vec<u8>>,
+    },
+    /// WAL delta for a same-epoch poll: verbatim frame bytes from the
+    /// primary's WAL, starting at the follower's announced offset. An
+    /// empty `bytes` means the follower is fully caught up. Always ends
+    /// at a frame boundary, so the follower can verify and append it
+    /// whole.
+    ReplFrames {
+        /// The checkpoint epoch these frames extend.
+        epoch: u64,
+        /// Byte offset in the WAL where `bytes` begins — echoes the
+        /// poll's `wal_len` so the follower can order-check.
+        start: u64,
+        /// Verbatim WAL frame bytes (length/CRC framing included).
+        bytes: Vec<u8>,
+    },
+    /// The primary's committed epoch is ahead of the follower's — the
+    /// WAL the follower is extending no longer exists. The follower
+    /// must issue a [`Request::ReplFetch`] to cross the checkpoint (or
+    /// compaction) boundary.
+    ReplBehind {
+        /// The primary's current committed epoch.
+        epoch: u64,
+    },
+    /// Header of a checkpoint transfer: announces the consistent byte
+    /// lengths the subsequent [`Response::ReplChunk`] frames add up to.
+    ReplStore {
+        /// Committed epoch of the transferred state.
+        epoch: u64,
+        /// Committed `.pstore` index length being transferred, in bytes.
+        index_len: u64,
+        /// Total `.pdata` length at this epoch (the chunks carry only
+        /// the delta past the follower's verified prefix).
+        data_len: u64,
+        /// Valid `.pwal` prefix length at this epoch.
+        wal_len: u64,
+    },
+    /// One span of raw file bytes within a checkpoint transfer.
+    ReplChunk {
+        /// Which file the span belongs to: [`REPL_FILE_INDEX`],
+        /// [`REPL_FILE_DATA`], or [`REPL_FILE_WAL`].
+        file: u8,
+        /// Absolute byte offset of the span in that file.
+        offset: u64,
+        /// The raw bytes.
+        bytes: Vec<u8>,
+    },
+    /// Terminates a checkpoint transfer: every chunk announced by the
+    /// preceding [`Response::ReplStore`] has been sent.
+    ReplDone,
     /// A typed server-side failure; the connection closes after this.
     Error {
         /// Human-readable cause.
@@ -307,6 +449,23 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
                 put_bytes(&mut out, k);
             }
         }
+        Request::ReplHello { version } => {
+            out.push(OP_REPL_HELLO);
+            out.extend_from_slice(&version.to_le_bytes());
+        }
+        Request::ReplPoll { shard, epoch, wal_len, wal_crc } => {
+            out.push(OP_REPL_POLL);
+            out.extend_from_slice(&shard.to_le_bytes());
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&wal_len.to_le_bytes());
+            out.extend_from_slice(&wal_crc.to_le_bytes());
+        }
+        Request::ReplFetch { shard, data_len, data_crc } => {
+            out.push(OP_REPL_FETCH);
+            out.extend_from_slice(&shard.to_le_bytes());
+            out.extend_from_slice(&data_len.to_le_bytes());
+            out.extend_from_slice(&data_crc.to_le_bytes());
+        }
     }
     out
 }
@@ -339,6 +498,16 @@ pub fn decode_request(payload: &[u8]) -> io::Result<Request> {
                 keys.push(c.bytes()?);
             }
             Request::FetchCohort { keys }
+        }
+        OP_REPL_HELLO => Request::ReplHello { version: c.u32()? },
+        OP_REPL_POLL => Request::ReplPoll {
+            shard: c.u32()?,
+            epoch: c.u64()?,
+            wal_len: c.u64()?,
+            wal_crc: c.u32()?,
+        },
+        OP_REPL_FETCH => {
+            Request::ReplFetch { shard: c.u32()?, data_len: c.u64()?, data_crc: c.u32()? }
         }
         op => {
             return Err(io::Error::new(
@@ -395,6 +564,40 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
             out.push(OP_MISS);
             put_bytes(&mut out, key);
         }
+        Response::ReplHelloAck { version, sharded, hash_seed, shard_prefixes } => {
+            out.push(OP_REPL_HELLO_ACK);
+            out.extend_from_slice(&version.to_le_bytes());
+            out.push(u8::from(*sharded));
+            out.extend_from_slice(&hash_seed.to_le_bytes());
+            out.extend_from_slice(&(shard_prefixes.len() as u32).to_le_bytes());
+            for p in shard_prefixes {
+                put_bytes(&mut out, p);
+            }
+        }
+        Response::ReplFrames { epoch, start, bytes } => {
+            out.push(OP_REPL_FRAMES);
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&start.to_le_bytes());
+            put_bytes(&mut out, bytes);
+        }
+        Response::ReplBehind { epoch } => {
+            out.push(OP_REPL_BEHIND);
+            out.extend_from_slice(&epoch.to_le_bytes());
+        }
+        Response::ReplStore { epoch, index_len, data_len, wal_len } => {
+            out.push(OP_REPL_STORE);
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&index_len.to_le_bytes());
+            out.extend_from_slice(&data_len.to_le_bytes());
+            out.extend_from_slice(&wal_len.to_le_bytes());
+        }
+        Response::ReplChunk { file, offset, bytes } => {
+            out.push(OP_REPL_CHUNK);
+            out.push(*file);
+            out.extend_from_slice(&offset.to_le_bytes());
+            put_bytes(&mut out, bytes);
+        }
+        Response::ReplDone => out.push(OP_REPL_DONE),
         Response::Error { message } => {
             out.push(OP_ERROR);
             put_bytes(&mut out, message.as_bytes());
@@ -473,6 +676,46 @@ pub fn decode_response(payload: &[u8]) -> io::Result<Response> {
             group: WireGroup { key: c.bytes()?, num_examples: c.u64()?, framed: c.bytes()? },
         },
         OP_MISS => Response::Miss { key: c.bytes()? },
+        OP_REPL_HELLO_ACK => {
+            let version = c.u32()?;
+            let sharded = match c.u8()? {
+                0 => false,
+                1 => true,
+                b => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("sharded flag must be 0 or 1, got {b}"),
+                    ))
+                }
+            };
+            let hash_seed = c.u64()?;
+            let n = c.u32()? as usize;
+            if n > c.remaining() / 4 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "shard prefix count exceeds message size",
+                ));
+            }
+            let mut shard_prefixes = Vec::with_capacity(n);
+            for _ in 0..n {
+                shard_prefixes.push(c.bytes()?);
+            }
+            Response::ReplHelloAck { version, sharded, hash_seed, shard_prefixes }
+        }
+        OP_REPL_FRAMES => {
+            Response::ReplFrames { epoch: c.u64()?, start: c.u64()?, bytes: c.bytes()? }
+        }
+        OP_REPL_BEHIND => Response::ReplBehind { epoch: c.u64()? },
+        OP_REPL_STORE => Response::ReplStore {
+            epoch: c.u64()?,
+            index_len: c.u64()?,
+            data_len: c.u64()?,
+            wal_len: c.u64()?,
+        },
+        OP_REPL_CHUNK => {
+            Response::ReplChunk { file: c.u8()?, offset: c.u64()?, bytes: c.bytes()? }
+        }
+        OP_REPL_DONE => Response::ReplDone,
         OP_ERROR => {
             let raw = c.bytes()?;
             let message = String::from_utf8(raw).map_err(|_| {
@@ -520,6 +763,10 @@ mod tests {
         roundtrip_req(Request::FetchCohort {
             keys: vec![b"a".to_vec(), vec![], b"long-key-with-\0-byte".to_vec()],
         });
+        roundtrip_req(Request::ReplHello { version: PROTO_VERSION });
+        roundtrip_req(Request::ReplPoll { shard: 3, epoch: 9, wal_len: 4096, wal_crc: 0xDEAD });
+        roundtrip_req(Request::ReplFetch { shard: 0, data_len: 0, data_crc: 0 });
+        roundtrip_req(Request::ReplFetch { shard: 2, data_len: 1 << 20, data_crc: 0xBEEF });
     }
 
     #[test]
@@ -547,6 +794,46 @@ mod tests {
             group: WireGroup { key: b"k".to_vec(), num_examples: 3, framed: vec![1, 2, 3, 4] },
         });
         roundtrip_resp(Response::Error { message: "store is on fire".to_string() });
+        roundtrip_resp(Response::ReplHelloAck {
+            version: PROTO_VERSION,
+            sharded: true,
+            hash_seed: 0x1234_5678_9ABC_DEF0,
+            shard_prefixes: vec![b"data-00000-of-00004".to_vec(), b"data-00001-of-00004".to_vec()],
+        });
+        roundtrip_resp(Response::ReplHelloAck {
+            version: PROTO_VERSION,
+            sharded: false,
+            hash_seed: 0,
+            shard_prefixes: vec![b"data".to_vec()],
+        });
+        roundtrip_resp(Response::ReplFrames { epoch: 4, start: 128, bytes: vec![0xAB; 17] });
+        roundtrip_resp(Response::ReplFrames { epoch: 0, start: 0, bytes: vec![] });
+        roundtrip_resp(Response::ReplBehind { epoch: 11 });
+        roundtrip_resp(Response::ReplStore {
+            epoch: 6,
+            index_len: 12 * 4096,
+            data_len: 99_000,
+            wal_len: 512,
+        });
+        roundtrip_resp(Response::ReplChunk {
+            file: REPL_FILE_DATA,
+            offset: 4096,
+            bytes: vec![7; 33],
+        });
+        roundtrip_resp(Response::ReplDone);
+    }
+
+    #[test]
+    fn repl_hello_ack_rejects_bad_sharded_flag() {
+        let mut enc = encode_response(&Response::ReplHelloAck {
+            version: PROTO_VERSION,
+            sharded: false,
+            hash_seed: 0,
+            shard_prefixes: vec![],
+        });
+        enc[5] = 2; // the sharded flag byte follows opcode + version
+        let err = decode_response(&enc).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
     }
 
     #[test]
@@ -616,6 +903,19 @@ mod tests {
             let enc = encode_response(&resp);
             let cut = rng.gen_range_usize(enc.len() + 1);
             let _ = decode_response(&enc[..cut]);
+            // Same treatment for a replication message.
+            let repl = Response::ReplFrames {
+                epoch: rng.next_u64(),
+                start: rng.next_u64(),
+                bytes: gen_bytes(rng, 0..=64),
+            };
+            let enc = encode_response(&repl);
+            let cut = rng.gen_range_usize(enc.len() + 1);
+            let _ = decode_response(&enc[..cut]);
+            let mut flipped = enc.clone();
+            let i = rng.gen_range_usize(flipped.len());
+            flipped[i] ^= 1 << rng.gen_range_usize(8);
+            let _ = decode_response(&flipped);
             prop_assert(true, "decoders survived")
         });
     }

@@ -1,0 +1,778 @@
+//! Read replicas: a follower keeps a byte-faithful local copy of a
+//! served store and trains from its own disk.
+//!
+//! [`Replica`] is the sync engine. It dials a `grouper serve` primary
+//! with the replication hello ([`Request::ReplHello`] — the server
+//! opens **no** pinned snapshot for it), learns the store topology
+//! (single store or sharded set, shard prefixes, hash seed), and then
+//! pulls each shard forward from the follower's own durable state:
+//!
+//! * **Same epoch** — the follower announces its committed epoch plus
+//!   the length and CRC32C of its valid WAL prefix; the primary ships
+//!   the WAL *delta* as verbatim frame bytes. The follower proves the
+//!   chunk is whole frames ([`wal::scan_slice`]) whose record epochs
+//!   belong to this checkpoint, then appends the **payloads** through
+//!   the engine's own [`WalWriter`] — whose framing is deterministic,
+//!   so the re-appended bytes are identical to the primary's.
+//! * **Epoch crossing** — after a primary checkpoint (or compaction),
+//!   the poll answers `ReplBehind` and the follower requests a
+//!   checkpoint transfer: the committed index prefix, the `.pdata`
+//!   delta past the follower's verified length (the data file is
+//!   append-only, so a matching prefix never travels again), and the
+//!   current WAL prefix. The index header page is written **last**, so
+//!   a crash mid-transfer leaves a header that honestly describes a
+//!   stale epoch rather than a half-written one.
+//! * **Cold start / compaction horizon** — with no usable local state
+//!   the same transfer runs with `data_len = 0`: a full-store snapshot
+//!   transfer. A follower whose bytes contradict the primary's history
+//!   (same epoch, different WAL prefix; or a data prefix that fails
+//!   its CRC) is refused with a typed `diverged:` error and is never
+//!   silently "repaired".
+//!
+//! [`ReplicaClientSource`] wires the replica into the trainer:
+//! a [`ClientSource`] whose reads come from a local snapshot open
+//! ([`PagedReader::open_snapshot_with`]) over the replicated files —
+//! the same open the primary's own serving layer uses, so cohorts are
+//! bit-identical to primary-local fetches at the same epoch — and
+//! whose `refresh()` applies pending frames and re-pins, closing the
+//! replica/ingest convergence loop. The full contract lives in
+//! `docs/REPLICATION.md`.
+
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use super::client::{connect_with_backoff, read_response, send_request};
+use super::proto::{
+    Request, Response, PROTO_VERSION, REPL_FILE_DATA, REPL_FILE_INDEX, REPL_FILE_WAL,
+};
+use crate::fed::source::ClientSource;
+use crate::formats::paged::{
+    committed_state_with, pdata_path, pstore_path, pwal_path, wal_record_epoch, PagedReader,
+};
+use crate::formats::paged_sharded::{PagedSetManifest, ShardedPagedReader};
+use crate::formats::streaming::StreamedGroup;
+use crate::records::crc32c::crc32c;
+use crate::serve::RemoteOptions;
+use crate::store::page::PAGE_SIZE;
+use crate::store::vfs::{OpenMode, StdVfs, Vfs, VfsFile};
+use crate::store::wal::{self, WalWriter};
+
+/// Tuning knobs for [`Replica`] / [`ReplicaClientSource`].
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaOptions {
+    /// Connection behavior against the primary (timeouts, backoff).
+    pub remote: RemoteOptions,
+    /// LRU page-cache frames for the local reader snapshot that
+    /// [`ReplicaClientSource`] serves cohorts from.
+    pub cache_pages: usize,
+}
+
+impl Default for ReplicaOptions {
+    fn default() -> Self {
+        ReplicaOptions { remote: RemoteOptions::default(), cache_pages: 256 }
+    }
+}
+
+/// What one [`Replica::sync`] call did.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SyncReport {
+    /// The follower's committed checkpoint epoch per shard after the
+    /// sync, in shard order.
+    pub epochs: Vec<u64>,
+    /// WAL records applied through [`WalWriter`] this sync.
+    pub frames: u64,
+    /// Total payload bytes received (frames and transfer chunks).
+    pub shipped_bytes: u64,
+    /// Checkpoint/snapshot transfers performed this sync (epoch
+    /// crossings and cold starts).
+    pub snapshot_transfers: u64,
+}
+
+/// Per-shard poll/apply rounds one [`Replica::sync`] will run before
+/// returning with whatever progress it made (a live primary under
+/// heavy churn can otherwise feed a poll loop forever; the follower's
+/// position is durable, so the next sync simply continues).
+const SYNC_ROUND_CAP: usize = 256;
+
+/// A replication follower: maintains `dir` as a byte-faithful copy of
+/// the primary's committed state, pulled over one TCP connection.
+///
+/// The replica is the **only** writer of its directory (the engine's
+/// single-live-writer rule, inherited wholesale) — but it never runs
+/// the storage engine's mutation path. It only appends verified WAL
+/// payloads through [`WalWriter`] and lays down verified transfer
+/// bytes, so every durable byte is one the primary committed first.
+pub struct Replica {
+    vfs: Arc<dyn Vfs>,
+    dir: PathBuf,
+    prefix: String,
+    addr: String,
+    opts: ReplicaOptions,
+    wire: Option<TcpStream>,
+    sharded: bool,
+    hash_seed: u64,
+    shard_prefixes: Vec<String>,
+    frames_applied: u64,
+    bytes_shipped: u64,
+    snapshot_transfers: u64,
+}
+
+impl Replica {
+    /// Connect to the primary at `addr` (`host:port`) and prepare to
+    /// replicate into `dir` with store prefix `prefix`, on the real
+    /// filesystem with default options.
+    ///
+    /// # Errors
+    /// Same conditions as [`Replica::connect_with`].
+    pub fn connect(addr: &str, dir: &Path, prefix: &str) -> Result<Replica> {
+        Replica::connect_with(Arc::new(StdVfs), addr, dir, prefix, ReplicaOptions::default())
+    }
+
+    /// Connect to the primary at `addr` and prepare to replicate into
+    /// `dir/<prefix>` on `vfs`. Runs the replication handshake and
+    /// caches the primary's topology; no store bytes move until
+    /// [`Replica::sync`].
+    ///
+    /// # Errors
+    /// Exhausted connect attempts, a protocol-version mismatch, a
+    /// handshake failure, or an unreadable replica directory.
+    pub fn connect_with(
+        vfs: Arc<dyn Vfs>,
+        addr: &str,
+        dir: &Path,
+        prefix: &str,
+        opts: ReplicaOptions,
+    ) -> Result<Replica> {
+        vfs.create_dir_all(dir).context("creating replica directory")?;
+        let mut replica = Replica {
+            vfs,
+            dir: dir.to_path_buf(),
+            prefix: prefix.to_string(),
+            addr: addr.to_string(),
+            opts,
+            wire: None,
+            sharded: false,
+            hash_seed: 0,
+            shard_prefixes: Vec::new(),
+            frames_applied: 0,
+            bytes_shipped: 0,
+            snapshot_transfers: 0,
+        };
+        replica.ensure_wire()?;
+        Ok(replica)
+    }
+
+    /// The primary's address this replica pulls from.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// True when the primary serves a sharded set.
+    pub fn sharded(&self) -> bool {
+        self.sharded
+    }
+
+    /// WAL records applied through [`WalWriter`] over this replica's
+    /// lifetime.
+    pub fn frames_applied(&self) -> u64 {
+        self.frames_applied
+    }
+
+    /// Total payload bytes received over this replica's lifetime.
+    pub fn bytes_shipped(&self) -> u64 {
+        self.bytes_shipped
+    }
+
+    /// Checkpoint/snapshot transfers performed over this replica's
+    /// lifetime.
+    pub fn snapshot_transfers(&self) -> u64 {
+        self.snapshot_transfers
+    }
+
+    /// The follower's committed checkpoint epoch per shard, read from
+    /// its own durable headers (shards it has not cold-started yet
+    /// report 0).
+    ///
+    /// # Errors
+    /// A local header that never parses cleanly (corrupt replica).
+    pub fn epochs(&self) -> Result<Vec<u64>> {
+        self.shard_prefixes
+            .iter()
+            .map(|pfx| {
+                Ok(committed_state_with(self.vfs.as_ref(), &self.dir, pfx)?
+                    .map_or(0, |st| st.epoch))
+            })
+            .collect()
+    }
+
+    /// Dial (or re-dial) the primary and run the replication
+    /// handshake. A reconnect against a primary whose topology changed
+    /// is refused — the replica's files would not match it.
+    fn ensure_wire(&mut self) -> Result<()> {
+        if self.wire.is_some() {
+            return Ok(());
+        }
+        let mut stream = connect_with_backoff(&self.addr, &self.opts.remote)?;
+        stream
+            .set_read_timeout(Some(self.opts.remote.read_timeout))
+            .context("setting replica read timeout")?;
+        stream.set_nodelay(true).ok(); // latency over batching; best-effort
+        send_request(&mut stream, &Request::ReplHello { version: PROTO_VERSION })?;
+        let (sharded, hash_seed, prefixes) = match read_response(&mut stream)? {
+            Response::ReplHelloAck { version, sharded, hash_seed, shard_prefixes } => {
+                if version != PROTO_VERSION {
+                    bail!("primary speaks protocol v{version}, replica v{PROTO_VERSION}");
+                }
+                let prefixes = shard_prefixes
+                    .into_iter()
+                    .map(|p| {
+                        String::from_utf8(p)
+                            .map_err(|_| anyhow::anyhow!("primary sent a non-UTF-8 shard prefix"))
+                    })
+                    .collect::<Result<Vec<String>>>()?;
+                if prefixes.is_empty() {
+                    bail!("primary announced zero shards");
+                }
+                (sharded, hash_seed, prefixes)
+            }
+            other => bail!("expected ReplHelloAck, got {other:?}"),
+        };
+        if !self.shard_prefixes.is_empty()
+            && (sharded, hash_seed, &prefixes)
+                != (self.sharded, self.hash_seed, &self.shard_prefixes)
+        {
+            bail!(
+                "primary at {} changed topology across reconnect (was {} shards, now {}) — \
+                 is a different store being served?",
+                self.addr,
+                self.shard_prefixes.len(),
+                prefixes.len()
+            );
+        }
+        self.sharded = sharded;
+        self.hash_seed = hash_seed;
+        self.shard_prefixes = prefixes;
+        self.wire = Some(stream);
+        Ok(())
+    }
+
+    /// One request/response exchange; any failure marks the wire dead
+    /// so the next call re-dials and re-handshakes.
+    fn rpc(&mut self, req: &Request) -> Result<Response> {
+        self.ensure_wire()?;
+        let wire = self.wire.as_mut().expect("ensure_wire leaves a live wire");
+        let result = send_request(wire, req).and_then(|()| read_response(wire));
+        if result.is_err() {
+            self.wire = None;
+        }
+        result
+    }
+
+    /// Pull every shard forward to the primary's current committed
+    /// state (bounded per shard by [`SYNC_ROUND_CAP`] rounds under
+    /// churn; progress is durable, repeated calls converge). For a
+    /// sharded set, also (re)writes the follower's local `.pset`
+    /// manifest so local readers can open the set.
+    ///
+    /// # Errors
+    /// Connection loss mid-sync, a primary `diverged:` refusal, a
+    /// shipped chunk that fails verification, or any local I/O
+    /// failure. The follower's durable state stays valid at its last
+    /// applied position on every error path.
+    pub fn sync(&mut self) -> Result<SyncReport> {
+        let frames0 = self.frames_applied;
+        let bytes0 = self.bytes_shipped;
+        let transfers0 = self.snapshot_transfers;
+        let mut epochs = Vec::with_capacity(self.shard_prefixes.len());
+        for shard in 0..self.shard_prefixes.len() as u32 {
+            epochs.push(self.sync_shard(shard)?);
+        }
+        if self.sharded {
+            let manifest = PagedSetManifest {
+                hash_seed: self.hash_seed,
+                shard_prefixes: self.shard_prefixes.clone(),
+                epochs: epochs.clone(),
+            };
+            manifest
+                .write_with(self.vfs.as_ref(), &self.dir, &self.prefix)
+                .context("writing replica set manifest")?;
+        }
+        Ok(SyncReport {
+            epochs,
+            frames: self.frames_applied - frames0,
+            shipped_bytes: self.bytes_shipped - bytes0,
+            snapshot_transfers: self.snapshot_transfers - transfers0,
+        })
+    }
+
+    /// Sync one shard: poll → apply frames, or transfer across an
+    /// epoch boundary, until the primary reports the follower caught
+    /// up (an empty frame delta) or the round cap is hit. Returns the
+    /// shard's committed epoch afterwards.
+    fn sync_shard(&mut self, shard: u32) -> Result<u64> {
+        let pfx = self.shard_prefixes[shard as usize].clone();
+        for _ in 0..SYNC_ROUND_CAP {
+            let Some((epoch, wal_len, wal_crc)) = self.local_position(&pfx)? else {
+                // No usable local state: cold-start with a full
+                // transfer, then fall through to the poll loop.
+                self.fetch_shard(shard, &pfx)?;
+                continue;
+            };
+            let resp = self.rpc(&Request::ReplPoll { shard, epoch, wal_len, wal_crc })?;
+            match resp {
+                Response::ReplFrames { epoch: e, start, bytes } => {
+                    if e != epoch || start != wal_len {
+                        bail!(
+                            "replication stream out of order: asked (epoch {epoch}, offset \
+                             {wal_len}), got (epoch {e}, offset {start})"
+                        );
+                    }
+                    if bytes.is_empty() {
+                        return Ok(epoch); // caught up at this epoch
+                    }
+                    self.apply_frames(&pfx, epoch, wal_len, &bytes)?;
+                }
+                Response::ReplBehind { .. } => self.fetch_shard(shard, &pfx)?,
+                other => bail!("expected ReplFrames or ReplBehind, got {other:?}"),
+            }
+        }
+        let (epoch, ..) = self
+            .local_position(&pfx)?
+            .context("replica lost its local state mid-sync (directory tampered with?)")?;
+        Ok(epoch)
+    }
+
+    /// The follower's durable position for one shard: committed epoch
+    /// plus the length and CRC32C of its valid WAL prefix. `None`
+    /// means no usable local store (cold start).
+    fn local_position(&self, pfx: &str) -> Result<Option<(u64, u64, u32)>> {
+        let Some(st) = committed_state_with(self.vfs.as_ref(), &self.dir, pfx)? else {
+            return Ok(None);
+        };
+        let wal_bytes = match self.vfs.read(&pwal_path(&self.dir, pfx)) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e).context("reading replica WAL"),
+        };
+        let valid = wal::scan_slice(&wal_bytes, |_| Ok(()))?.valid_bytes as usize;
+        Ok(Some((st.epoch, valid as u64, crc32c(&wal_bytes[..valid]))))
+    }
+
+    /// Verify and apply one shipped WAL delta: prove the bytes are
+    /// whole frames whose record epochs belong to this checkpoint,
+    /// then append each payload through [`WalWriter`] — the engine's
+    /// own framing, which is deterministic, so the follower's WAL
+    /// bytes land identical to the primary's.
+    fn apply_frames(&mut self, pfx: &str, epoch: u64, start: u64, bytes: &[u8]) -> Result<()> {
+        let mut payloads: Vec<Vec<u8>> = Vec::new();
+        let report = wal::scan_slice(bytes, |payload| {
+            let rec_epoch = wal_record_epoch(payload)?;
+            // Records of *older* epochs are legal (the primary's
+            // stale-WAL crash window leaves them on disk and we mirror
+            // its bytes); records from the future are not.
+            if rec_epoch > epoch {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("frame carries epoch {rec_epoch}, ahead of checkpoint {epoch}"),
+                ));
+            }
+            payloads.push(payload.to_vec());
+            Ok(())
+        })?;
+        if report.valid_bytes != bytes.len() as u64 || report.torn_bytes != 0 {
+            bail!(
+                "primary shipped a torn frame chunk: {} of {} bytes verify",
+                report.valid_bytes,
+                bytes.len()
+            );
+        }
+        let wal_path = pwal_path(&self.dir, pfx);
+        let mut writer = WalWriter::open_with(self.vfs.as_ref(), &wal_path, start)
+            .context("opening replica WAL for frame application")?;
+        for payload in &payloads {
+            writer.append(payload).context("appending replicated WAL frame")?;
+        }
+        writer.commit().context("committing replicated WAL frames")?;
+        if writer.len_bytes() != start + bytes.len() as u64 {
+            bail!(
+                "replica WAL landed at {} bytes, expected {} (framing drift?)",
+                writer.len_bytes(),
+                start + bytes.len() as u64
+            );
+        }
+        self.frames_applied += payloads.len() as u64;
+        self.bytes_shipped += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Run one checkpoint transfer for a shard: request everything
+    /// past our verified `.pdata` prefix, stream the chunks into the
+    /// local files, and publish the new epoch by writing the index
+    /// header page **last** (a crash mid-transfer leaves a header
+    /// honestly describing a stale epoch; the next sync re-transfers).
+    fn fetch_shard(&mut self, shard: u32, pfx: &str) -> Result<()> {
+        // Our whole data file is verified committed prefix (transfers
+        // truncate it to the committed length; frames never touch it).
+        let (data_len, data_crc) = {
+            let local = committed_state_with(self.vfs.as_ref(), &self.dir, pfx)?;
+            match local {
+                Some(st) if st.data_len > 0 => {
+                    let bytes = self.vfs.read(&pdata_path(&self.dir, pfx)).with_context(|| {
+                        format!("reading replica data prefix for shard {shard}")
+                    })?;
+                    if (bytes.len() as u64) < st.data_len {
+                        bail!(
+                            "replica data file holds {} bytes but its header claims {}",
+                            bytes.len(),
+                            st.data_len
+                        );
+                    }
+                    (st.data_len, crc32c(&bytes[..st.data_len as usize]))
+                }
+                _ => (0, 0),
+            }
+        };
+        let resp = self.rpc(&Request::ReplFetch { shard, data_len, data_crc })?;
+        let (epoch, index_len, total_data_len, wal_len) = match resp {
+            Response::ReplStore { epoch, index_len, data_len, wal_len } => {
+                (epoch, index_len, data_len, wal_len)
+            }
+            other => bail!("expected ReplStore, got {other:?}"),
+        };
+        if index_len < PAGE_SIZE as u64 || index_len % PAGE_SIZE as u64 != 0 {
+            bail!("primary announced a non-page-aligned index of {index_len} bytes");
+        }
+        if total_data_len < data_len {
+            bail!(
+                "primary announced {total_data_len} data bytes, below our verified {data_len}"
+            );
+        }
+        let index_file = self.transfer_file(&pstore_path(&self.dir, pfx))?;
+        let data_file = self.transfer_file(&pdata_path(&self.dir, pfx))?;
+        let wal_file = self.transfer_file(&pwal_path(&self.dir, pfx))?;
+        let mut header_page = vec![0u8; PAGE_SIZE];
+        let mut got = [0u64; 3]; // received byte count per file
+        loop {
+            let wire = self.wire.as_mut().expect("transfer runs on a live wire");
+            let resp = match read_response(wire) {
+                Ok(r) => r,
+                Err(e) => {
+                    self.wire = None;
+                    return Err(e).context("reading checkpoint transfer");
+                }
+            };
+            match resp {
+                Response::ReplDone => break,
+                Response::ReplChunk { file, offset, bytes } => {
+                    let end = offset + bytes.len() as u64;
+                    match file {
+                        REPL_FILE_INDEX => {
+                            if end > index_len {
+                                bail!("index chunk overruns the announced {index_len} bytes");
+                            }
+                            // Hold the header page back; it publishes
+                            // the transfer only after everything else
+                            // is durable.
+                            let page_end = PAGE_SIZE as u64;
+                            if offset < page_end {
+                                let head = (bytes.len() as u64).min(page_end - offset) as usize;
+                                header_page[offset as usize..offset as usize + head]
+                                    .copy_from_slice(&bytes[..head]);
+                                if end > page_end {
+                                    index_file.write_all_at(&bytes[head..], page_end)?;
+                                }
+                            } else {
+                                index_file.write_all_at(&bytes, offset)?;
+                            }
+                        }
+                        REPL_FILE_DATA => {
+                            if offset < data_len || end > total_data_len {
+                                bail!(
+                                    "data chunk [{offset}, {end}) outside the expected \
+                                     [{data_len}, {total_data_len}) delta"
+                                );
+                            }
+                            data_file.write_all_at(&bytes, offset)?;
+                        }
+                        REPL_FILE_WAL => {
+                            if end > wal_len {
+                                bail!("WAL chunk overruns the announced {wal_len} bytes");
+                            }
+                            wal_file.write_all_at(&bytes, offset)?;
+                        }
+                        f => bail!("unknown transfer file selector {f}"),
+                    }
+                    got[file.min(2) as usize] += bytes.len() as u64;
+                    self.bytes_shipped += bytes.len() as u64;
+                }
+                other => bail!("expected ReplChunk or ReplDone, got {other:?}"),
+            }
+        }
+        let expect = [index_len, total_data_len - data_len, wal_len];
+        if got != expect {
+            bail!(
+                "checkpoint transfer incomplete: received {got:?} bytes per file, \
+                 expected {expect:?}"
+            );
+        }
+        // Make every non-header byte durable, then publish: exact
+        // lengths first (a shrunk index after compaction must lose its
+        // tail), then the header page, then one final sync.
+        data_file.set_len(total_data_len)?;
+        data_file.sync()?;
+        wal_file.set_len(wal_len)?;
+        wal_file.sync()?;
+        index_file.set_len(index_len)?;
+        index_file.sync()?;
+        index_file.write_all_at(&header_page, 0)?;
+        index_file.sync()?;
+        let landed = committed_state_with(self.vfs.as_ref(), &self.dir, pfx)?
+            .context("replica header unreadable right after a transfer")?;
+        if landed.epoch != epoch {
+            bail!(
+                "transfer landed at epoch {}, primary announced {epoch} (torn header?)",
+                landed.epoch
+            );
+        }
+        self.snapshot_transfers += 1;
+        Ok(())
+    }
+
+    /// Open one local file for transfer writes (created when missing).
+    fn transfer_file(&self, path: &Path) -> Result<Arc<dyn VfsFile>> {
+        self.vfs
+            .open(path, OpenMode::Create)
+            .with_context(|| format!("opening {} for checkpoint transfer", path.display()))
+    }
+}
+
+/// The local reader half of a replica: a snapshot open over the
+/// replicated files, exactly the open the primary's serving layer
+/// uses — so a cohort fetched here is bit-identical to one fetched
+/// primary-locally at the same epoch.
+enum LocalReader {
+    /// A replicated sharded set.
+    Set(ShardedPagedReader),
+    /// A replicated single paged store.
+    Store(PagedReader),
+}
+
+impl LocalReader {
+    fn open(vfs: &dyn Vfs, dir: &Path, prefix: &str, cache_pages: usize) -> Result<LocalReader> {
+        if PagedSetManifest::exists_with(vfs, dir, prefix) {
+            Ok(LocalReader::Set(ShardedPagedReader::open_snapshot_with(
+                vfs,
+                dir,
+                prefix,
+                cache_pages,
+            )?))
+        } else {
+            Ok(LocalReader::Store(PagedReader::open_snapshot_with(vfs, dir, prefix, cache_pages)?))
+        }
+    }
+
+    fn keys(&self) -> Vec<Vec<u8>> {
+        match self {
+            LocalReader::Set(r) => r.keys().to_vec(),
+            LocalReader::Store(r) => r.keys().to_vec(),
+        }
+    }
+
+    fn num_groups(&self) -> usize {
+        match self {
+            LocalReader::Set(r) => r.num_groups(),
+            LocalReader::Store(r) => r.num_groups(),
+        }
+    }
+
+    fn num_examples(&self) -> u64 {
+        match self {
+            LocalReader::Set(r) => r.num_examples(),
+            LocalReader::Store(r) => r.num_examples(),
+        }
+    }
+
+    fn epochs(&self) -> Vec<u64> {
+        match self {
+            LocalReader::Set(r) => r.epochs(),
+            LocalReader::Store(r) => vec![r.epoch()],
+        }
+    }
+
+    fn streamed_group(&self, key: &[u8]) -> Result<Option<StreamedGroup>> {
+        match self {
+            LocalReader::Set(r) => r.streamed_group(key),
+            LocalReader::Store(r) => r.streamed_group(key),
+        }
+    }
+}
+
+/// The replica's connection-to-trainer state, guarded by one lock:
+/// `refresh()` takes it for writing (drop the old snapshot and its
+/// pins **before** any file byte changes, sync, reopen), every read
+/// holds it shared for the duration of the fetch — a transfer can
+/// therefore never stomp bytes a local reader is mid-way through.
+struct ReplicaShared {
+    replica: Replica,
+    /// `None` only transiently inside a failed refresh: reads then
+    /// fail typed until a refresh succeeds, rather than serving a
+    /// half-transferred store.
+    reader: Option<LocalReader>,
+}
+
+/// A [`ClientSource`] that serves cohorts from replica-local disk.
+///
+/// Construction connects to the primary, runs one full sync, and
+/// opens the local snapshot; [`ClientSource::refresh`] (called by the
+/// trainer at round boundaries) applies pending WAL frames and
+/// transfers, then re-pins a fresh snapshot — the replica-side
+/// equivalent of [`RefreshingSource`](crate::fed::RefreshingSource),
+/// with the same monotone-epoch and stable-shard-count guards.
+pub struct ReplicaClientSource {
+    shared: RwLock<ReplicaShared>,
+}
+
+impl ReplicaClientSource {
+    /// Connect to the primary at `addr`, sync the replica at `dir`
+    /// with store prefix `prefix`, and open the first local snapshot,
+    /// on the real filesystem with default options.
+    ///
+    /// # Errors
+    /// Same conditions as [`ReplicaClientSource::connect_with`].
+    pub fn connect(addr: &str, dir: &Path, prefix: &str) -> Result<ReplicaClientSource> {
+        ReplicaClientSource::connect_with(
+            Arc::new(StdVfs),
+            addr,
+            dir,
+            prefix,
+            ReplicaOptions::default(),
+        )
+    }
+
+    /// Connect, run one full [`Replica::sync`], and open the local
+    /// snapshot the source will serve from.
+    ///
+    /// # Errors
+    /// Connect/handshake failure, a `diverged:` refusal, or a local
+    /// open failure after sync.
+    pub fn connect_with(
+        vfs: Arc<dyn Vfs>,
+        addr: &str,
+        dir: &Path,
+        prefix: &str,
+        opts: ReplicaOptions,
+    ) -> Result<ReplicaClientSource> {
+        let mut replica = Replica::connect_with(Arc::clone(&vfs), addr, dir, prefix, opts)?;
+        replica.sync().context("initial replica sync")?;
+        let reader = LocalReader::open(vfs.as_ref(), dir, prefix, opts.cache_pages)
+            .context("opening replica snapshot after initial sync")?;
+        Ok(ReplicaClientSource {
+            shared: RwLock::new(ReplicaShared { replica, reader: Some(reader) }),
+        })
+    }
+
+    /// Checkpoint/snapshot transfers performed since connect (tests
+    /// use this to assert the compaction-horizon fallback fired).
+    pub fn snapshot_transfers(&self) -> u64 {
+        self.shared.read().unwrap().replica.snapshot_transfers()
+    }
+
+    /// WAL records applied through the engine's [`WalWriter`] since
+    /// connect.
+    pub fn frames_applied(&self) -> u64 {
+        self.shared.read().unwrap().replica.frames_applied()
+    }
+
+    /// Run `f` against the current local snapshot.
+    ///
+    /// # Errors
+    /// A typed error when no snapshot is open (a previous refresh
+    /// failed mid-way and must succeed before reads resume).
+    fn with_reader<T>(&self, f: impl FnOnce(&LocalReader) -> Result<T>) -> Result<T> {
+        let shared = self.shared.read().unwrap();
+        let Some(reader) = shared.reader.as_ref() else {
+            bail!("replica snapshot unavailable: a refresh failed mid-way; refresh again");
+        };
+        f(reader)
+    }
+}
+
+impl ClientSource for ReplicaClientSource {
+    fn describe(&self) -> String {
+        let shared = self.shared.read().unwrap();
+        let epochs = shared.reader.as_ref().map(LocalReader::epochs).unwrap_or_default();
+        format!(
+            "replica of {} at {} (epochs {:?})",
+            shared.replica.addr(),
+            shared.replica.dir.display(),
+            epochs
+        )
+    }
+
+    fn group_keys(&self) -> Vec<Vec<u8>> {
+        self.with_reader(|r| Ok(r.keys())).unwrap_or_default()
+    }
+
+    fn num_groups(&self) -> usize {
+        self.with_reader(|r| Ok(r.num_groups())).unwrap_or_default()
+    }
+
+    fn num_examples(&self) -> u64 {
+        self.with_reader(|r| Ok(r.num_examples())).unwrap_or_default()
+    }
+
+    fn streamed_group(&self, key: &[u8]) -> Result<Option<StreamedGroup>> {
+        self.with_reader(|r| r.streamed_group(key))
+    }
+
+    /// Apply pending frames/transfers and re-pin: drop the old
+    /// snapshot (releasing its pins) while holding the write lock, so
+    /// no read can be mid-flight when transfer bytes land; sync; open
+    /// fresh. Epochs must never regress and the shard count must not
+    /// change — same guards as every other refreshing source.
+    ///
+    /// # Errors
+    /// A sync or re-open failure (reads stay refused until a later
+    /// refresh succeeds), an epoch regression, or a shard-count
+    /// change.
+    fn refresh(&self) -> Result<bool> {
+        let mut shared = self.shared.write().unwrap();
+        let before = shared.reader.as_ref().map(LocalReader::epochs);
+        // Drop the old snapshot FIRST: its pager must not be reading
+        // (or holding cached pages of) files a transfer is about to
+        // overwrite.
+        shared.reader = None;
+        shared.replica.sync().context("replica sync at the round boundary")?;
+        let (vfs, dir, prefix, cache_pages) = {
+            let r = &shared.replica;
+            (Arc::clone(&r.vfs), r.dir.clone(), r.prefix.clone(), r.opts.cache_pages)
+        };
+        let fresh = LocalReader::open(vfs.as_ref(), &dir, &prefix, cache_pages)
+            .context("re-opening replica snapshot after sync")?;
+        let after = fresh.epochs();
+        if let Some(before) = before {
+            if before.len() != after.len() {
+                bail!(
+                    "refreshed replica changed shard count: {} -> {} shards",
+                    before.len(),
+                    after.len()
+                );
+            }
+            if let Some((i, (o, n))) =
+                before.iter().zip(&after).enumerate().find(|(_, (o, n))| n < o)
+            {
+                bail!("refreshed replica regressed shard {i}'s checkpoint epoch {o} -> {n}");
+            }
+        }
+        let changed = before.as_deref() != Some(&after[..]);
+        shared.reader = Some(fresh);
+        Ok(changed)
+    }
+
+    fn source_epochs(&self) -> Vec<u64> {
+        self.with_reader(|r| Ok(r.epochs())).unwrap_or_default()
+    }
+}

@@ -24,6 +24,20 @@
 //! The server never panics on peer input: malformed, oversized or
 //! corrupt frames and handler failures all come back as typed
 //! [`Response::Error`] frames, after which the connection closes.
+//!
+//! ## Replication connections
+//!
+//! A connection that opens with [`Request::ReplHello`] instead of
+//! [`Request::Hello`] is a **replication follower** and gets no pinned
+//! snapshot at all — the per-connection snapshot is opened lazily, at
+//! `Hello`, precisely so a follower polling for WAL deltas never gates
+//! the primary's page reuse or compaction. Replication reads go
+//! straight to the store files under a bounded stability loop (re-read
+//! the committed header around each file read; retry if a checkpoint
+//! moved the epoch underneath), and anything inconsistent with the
+//! follower's announced prefix is refused with a typed error whose
+//! message starts with `diverged:` — see `docs/REPLICATION.md` for the
+//! full contract.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -32,15 +46,20 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::proto::{
     decode_request, encode_response, read_frame, write_frame, Request, Response, WireGroup,
-    WireShardStat, PROTO_VERSION,
+    WireShardStat, PROTO_VERSION, REPL_FILE_DATA, REPL_FILE_INDEX, REPL_FILE_WAL,
 };
-use crate::formats::paged::{PagedReader, PagedStat};
+use crate::formats::paged::{
+    committed_state_with, pdata_path, pstore_path, pwal_path, CommittedState, PagedReader,
+    PagedStat,
+};
 use crate::formats::paged_sharded::{PagedSetManifest, ShardedPagedReader};
-use crate::store::vfs::{StdVfs, Vfs};
+use crate::records::crc32c::crc32c;
+use crate::store::vfs::{OpenMode, StdVfs, Vfs};
+use crate::store::wal;
 
 /// Tuning knobs for [`StoreServer`].
 #[derive(Debug, Clone, Copy)]
@@ -339,6 +358,27 @@ fn send(w: &mut impl Write, resp: &Response) -> std::io::Result<()> {
     w.flush()
 }
 
+/// Largest WAL delta one [`Response::ReplFrames`] ships (always cut at
+/// a frame boundary); a further-behind follower simply polls again.
+const REPL_FRAMES_CAP: usize = 8 << 20;
+
+/// Span length of one [`Response::ReplChunk`] within a transfer.
+const REPL_CHUNK_LEN: usize = 4 << 20;
+
+/// Attempts to read a consistent committed state + file bytes while a
+/// live primary checkpoints underneath. Each retry re-reads the header;
+/// exhausting them is a (retryable) typed error, never a wrong answer.
+const REPL_STABLE_ATTEMPTS: usize = 16;
+
+/// What a connection has said about itself: nothing yet, a data-plane
+/// client with its pinned snapshot, or a replication follower (which
+/// pins nothing — see the module doc).
+enum ConnState {
+    New,
+    Data(Snapshot),
+    Repl(Vec<String>),
+}
+
 /// One connection, start to finish. Never panics; every failure path
 /// answers with a typed error frame (when the peer is still writable)
 /// and closes.
@@ -350,17 +390,14 @@ fn handle_connection(
     stream: &TcpStream,
 ) {
     let mut writer = BufWriter::new(stream);
-    // The pinned snapshot IS the connection's state: opened before the
-    // handshake answer, dropped (unpinning the epochs) when we return.
-    let snapshot = match Snapshot::open(vfs, dir, prefix, cache_pages) {
-        Ok(s) => s,
-        Err(e) => {
-            send_error(&mut writer, format!("opening snapshot: {e:#}"));
-            return;
-        }
-    };
     let mut reader = BufReader::new(stream);
-    let mut greeted = false;
+    // Opened lazily at Hello: a replication follower must get NO pinned
+    // snapshot (pins would gate the primary's reuse and compaction),
+    // and which plane this connection is on is only known at its first
+    // request. For data-plane clients the snapshot still IS the
+    // connection's state: opened before the handshake answer, dropped
+    // (unpinning the epochs) when we return.
+    let mut state = ConnState::New;
     loop {
         let payload = match read_frame(&mut reader) {
             Ok(Some(p)) => p,
@@ -377,8 +414,10 @@ fn handle_connection(
                 return;
             }
         };
-        if !greeted && !matches!(request, Request::Hello { .. }) {
-            send_error(&mut writer, "first request must be Hello".to_string());
+        if matches!(state, ConnState::New)
+            && !matches!(request, Request::Hello { .. } | Request::ReplHello { .. })
+        {
+            send_error(&mut writer, "first request must be Hello or ReplHello".to_string());
             return;
         }
         let sent = match request {
@@ -390,29 +429,135 @@ fn handle_connection(
                     );
                     return;
                 }
-                greeted = true;
-                send(
-                    &mut writer,
-                    &Response::HelloAck {
-                        version: PROTO_VERSION,
-                        num_shards: snapshot.num_shards(),
-                        epochs: snapshot.epochs(),
-                        num_groups: snapshot.num_groups(),
-                        num_examples: snapshot.num_examples(),
-                    },
-                )
-            }
-            Request::Keys => send(&mut writer, &Response::Keys { keys: snapshot.keys() }),
-            Request::Stats => send(&mut writer, &Response::Stats { shards: snapshot.stats() }),
-            Request::FetchGroup { key } => match snapshot.group(&key) {
-                Ok(Some(group)) => send(&mut writer, &Response::Group { group }),
-                Ok(None) => send(&mut writer, &Response::Miss { key }),
-                Err(e) => {
-                    send_error(&mut writer, format!("fetching group: {e:#}"));
+                if !matches!(state, ConnState::New) {
+                    send_error(&mut writer, "connection already greeted".to_string());
                     return;
                 }
-            },
+                let snapshot = match Snapshot::open(vfs, dir, prefix, cache_pages) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        send_error(&mut writer, format!("opening snapshot: {e:#}"));
+                        return;
+                    }
+                };
+                let ack = Response::HelloAck {
+                    version: PROTO_VERSION,
+                    num_shards: snapshot.num_shards(),
+                    epochs: snapshot.epochs(),
+                    num_groups: snapshot.num_groups(),
+                    num_examples: snapshot.num_examples(),
+                };
+                state = ConnState::Data(snapshot);
+                send(&mut writer, &ack)
+            }
+            Request::ReplHello { version } => {
+                if version != PROTO_VERSION {
+                    send_error(
+                        &mut writer,
+                        format!("protocol version {version} unsupported (server speaks {PROTO_VERSION})"),
+                    );
+                    return;
+                }
+                if !matches!(state, ConnState::New) {
+                    send_error(&mut writer, "connection already greeted".to_string());
+                    return;
+                }
+                let ack = if PagedSetManifest::exists_with(vfs, dir, prefix) {
+                    let manifest = match PagedSetManifest::read_with(vfs, dir, prefix) {
+                        Ok(m) => m,
+                        Err(e) => {
+                            send_error(&mut writer, format!("reading set manifest: {e:#}"));
+                            return;
+                        }
+                    };
+                    let prefixes = manifest.shard_prefixes.clone();
+                    let resp = Response::ReplHelloAck {
+                        version: PROTO_VERSION,
+                        sharded: true,
+                        hash_seed: manifest.hash_seed,
+                        shard_prefixes: prefixes.iter().map(|p| p.clone().into_bytes()).collect(),
+                    };
+                    state = ConnState::Repl(prefixes);
+                    resp
+                } else {
+                    let resp = Response::ReplHelloAck {
+                        version: PROTO_VERSION,
+                        sharded: false,
+                        hash_seed: 0,
+                        shard_prefixes: vec![prefix.as_bytes().to_vec()],
+                    };
+                    state = ConnState::Repl(vec![prefix.to_string()]);
+                    resp
+                };
+                send(&mut writer, &ack)
+            }
+            Request::ReplPoll { shard, epoch, wal_len, wal_crc } => {
+                let ConnState::Repl(prefixes) = &state else {
+                    send_error(&mut writer, "ReplPoll on a non-replication connection".into());
+                    return;
+                };
+                let Some(pfx) = prefixes.get(shard as usize) else {
+                    send_error(&mut writer, format!("shard {shard} out of range"));
+                    return;
+                };
+                match repl_poll(vfs, dir, pfx, epoch, wal_len, wal_crc) {
+                    Ok(resp) => send(&mut writer, &resp),
+                    Err(e) => {
+                        send_error(&mut writer, format!("{e:#}"));
+                        return;
+                    }
+                }
+            }
+            Request::ReplFetch { shard, data_len, data_crc } => {
+                let ConnState::Repl(prefixes) = &state else {
+                    send_error(&mut writer, "ReplFetch on a non-replication connection".into());
+                    return;
+                };
+                let Some(pfx) = prefixes.get(shard as usize) else {
+                    send_error(&mut writer, format!("shard {shard} out of range"));
+                    return;
+                };
+                match repl_fetch(vfs, dir, pfx, data_len, data_crc, &mut writer) {
+                    Ok(()) => Ok(()),
+                    Err(e) => {
+                        send_error(&mut writer, format!("{e:#}"));
+                        return;
+                    }
+                }
+            }
+            Request::Keys => {
+                let ConnState::Data(snapshot) = &state else {
+                    send_error(&mut writer, "Keys on a non-data connection".into());
+                    return;
+                };
+                send(&mut writer, &Response::Keys { keys: snapshot.keys() })
+            }
+            Request::Stats => {
+                let ConnState::Data(snapshot) = &state else {
+                    send_error(&mut writer, "Stats on a non-data connection".into());
+                    return;
+                };
+                send(&mut writer, &Response::Stats { shards: snapshot.stats() })
+            }
+            Request::FetchGroup { key } => {
+                let ConnState::Data(snapshot) = &state else {
+                    send_error(&mut writer, "FetchGroup on a non-data connection".into());
+                    return;
+                };
+                match snapshot.group(&key) {
+                    Ok(Some(group)) => send(&mut writer, &Response::Group { group }),
+                    Ok(None) => send(&mut writer, &Response::Miss { key }),
+                    Err(e) => {
+                        send_error(&mut writer, format!("fetching group: {e:#}"));
+                        return;
+                    }
+                }
+            }
             Request::FetchCohort { keys } => {
+                let ConnState::Data(snapshot) = &state else {
+                    send_error(&mut writer, "FetchCohort on a non-data connection".into());
+                    return;
+                };
                 // One Group (or key-echoing Miss) frame per key, in
                 // request order; flush once.
                 let mut io = Ok(());
@@ -437,4 +582,174 @@ fn handle_connection(
             return; // peer gone; nothing left to tell them
         }
     }
+}
+
+/// Read one shard's committed state plus its valid WAL prefix,
+/// retrying while a live checkpoint moves the epoch underneath (the
+/// WAL read between two identical-epoch header reads is the WAL of
+/// that epoch — a checkpoint is the only thing that resets it).
+fn stable_committed_wal(
+    vfs: &dyn Vfs,
+    dir: &Path,
+    pfx: &str,
+) -> Result<(CommittedState, Vec<u8>)> {
+    for _ in 0..REPL_STABLE_ATTEMPTS {
+        let Some(before) = committed_state_with(vfs, dir, pfx)? else {
+            bail!("no paged store at {}/{pfx}", dir.display());
+        };
+        let mut wal_bytes = match vfs.read(&pwal_path(dir, pfx)) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e).context("reading WAL for replication"),
+        };
+        let valid = wal::scan_slice(&wal_bytes, |_| Ok(()))?.valid_bytes as usize;
+        let Some(after) = committed_state_with(vfs, dir, pfx)? else {
+            continue;
+        };
+        if after.epoch == before.epoch {
+            wal_bytes.truncate(valid);
+            return Ok((after, wal_bytes));
+        }
+    }
+    bail!(
+        "store at {}/{pfx} kept checkpointing during the poll; follower should retry",
+        dir.display()
+    )
+}
+
+/// Answer one [`Request::ReplPoll`]: frames, behind, or a `diverged:`
+/// refusal. Pure with respect to the connection — touches only files.
+fn repl_poll(
+    vfs: &dyn Vfs,
+    dir: &Path,
+    pfx: &str,
+    follower_epoch: u64,
+    follower_wal_len: u64,
+    follower_wal_crc: u32,
+) -> Result<Response> {
+    let (st, wal_bytes) = stable_committed_wal(vfs, dir, pfx)?;
+    if follower_epoch > st.epoch {
+        bail!(
+            "diverged: follower epoch {follower_epoch} is ahead of the primary's {} — \
+             these stores do not share a history",
+            st.epoch
+        );
+    }
+    if follower_epoch < st.epoch {
+        return Ok(Response::ReplBehind { epoch: st.epoch });
+    }
+    let have = wal_bytes.len() as u64;
+    if follower_wal_len > have {
+        bail!(
+            "diverged: follower claims {follower_wal_len} WAL bytes at epoch {} but the \
+             primary holds only {have}",
+            st.epoch
+        );
+    }
+    let prefix = &wal_bytes[..follower_wal_len as usize];
+    if crc32c(prefix) != follower_wal_crc {
+        bail!(
+            "diverged: follower's {follower_wal_len}-byte WAL prefix does not match the \
+             primary's at epoch {}",
+            st.epoch
+        );
+    }
+    let mut delta = &wal_bytes[follower_wal_len as usize..];
+    if delta.len() > REPL_FRAMES_CAP {
+        // Cut the capped delta back to a frame boundary so the follower
+        // can verify and append it whole; it polls again for the rest.
+        let fit = wal::scan_slice(&delta[..REPL_FRAMES_CAP], |_| Ok(()))?.valid_bytes as usize;
+        delta = &delta[..fit];
+    }
+    Ok(Response::ReplFrames { epoch: st.epoch, start: follower_wal_len, bytes: delta.to_vec() })
+}
+
+/// Read `len` bytes from the head of `path`. A zero-length read never
+/// opens the file (it may legitimately not exist yet).
+fn read_prefix(vfs: &dyn Vfs, path: &Path, len: usize) -> Result<Vec<u8>> {
+    if len == 0 {
+        return Ok(Vec::new());
+    }
+    let file = vfs
+        .open(path, OpenMode::Read)
+        .with_context(|| format!("opening {} for replication", path.display()))?;
+    let mut buf = vec![0u8; len];
+    file.read_exact_at(&mut buf, 0)
+        .with_context(|| format!("reading {len} committed bytes of {}", path.display()))?;
+    Ok(buf)
+}
+
+/// Answer one [`Request::ReplFetch`]: stream a consistent checkpoint
+/// transfer (ReplStore, chunks, ReplDone) for one shard. The `.pdata`
+/// chunks carry only bytes past the follower's verified prefix — the
+/// data file is append-only (even compaction never rewrites it), so a
+/// matching prefix never needs to travel again.
+fn repl_fetch(
+    vfs: &dyn Vfs,
+    dir: &Path,
+    pfx: &str,
+    follower_data_len: u64,
+    follower_data_crc: u32,
+    writer: &mut impl Write,
+) -> Result<()> {
+    // Capture index + data + WAL between two identical-epoch header
+    // reads; every field shipped below changes only at a checkpoint,
+    // so equal epochs bracket a consistent byte set.
+    let mut captured = None;
+    for _ in 0..REPL_STABLE_ATTEMPTS {
+        let Some(before) = committed_state_with(vfs, dir, pfx)? else {
+            bail!("no paged store at {}/{pfx}", dir.display());
+        };
+        let index = read_prefix(vfs, &pstore_path(dir, pfx), before.index_len() as usize)?;
+        let data = read_prefix(vfs, &pdata_path(dir, pfx), before.data_len as usize)?;
+        let (after, wal_bytes) = stable_committed_wal(vfs, dir, pfx)?;
+        if after.epoch == before.epoch {
+            captured = Some((after, index, data, wal_bytes));
+            break;
+        }
+    }
+    let Some((st, index, data, wal_bytes)) = captured else {
+        bail!(
+            "store at {}/{pfx} kept checkpointing during the transfer; follower should retry",
+            dir.display()
+        );
+    };
+    if follower_data_len > st.data_len {
+        bail!(
+            "diverged: follower claims {follower_data_len} data bytes but the primary's \
+             committed length is {}",
+            st.data_len
+        );
+    }
+    if follower_data_len > 0 && crc32c(&data[..follower_data_len as usize]) != follower_data_crc {
+        bail!(
+            "diverged: follower's {follower_data_len}-byte data prefix does not match the \
+             primary's at epoch {}",
+            st.epoch
+        );
+    }
+    let header = Response::ReplStore {
+        epoch: st.epoch,
+        index_len: index.len() as u64,
+        data_len: st.data_len,
+        wal_len: wal_bytes.len() as u64,
+    };
+    write_frame(writer, &encode_response(&header))?;
+    let mut ship = |file: u8, base: u64, bytes: &[u8]| -> std::io::Result<()> {
+        for (i, chunk) in bytes.chunks(REPL_CHUNK_LEN).enumerate() {
+            let resp = Response::ReplChunk {
+                file,
+                offset: base + (i * REPL_CHUNK_LEN) as u64,
+                bytes: chunk.to_vec(),
+            };
+            write_frame(writer, &encode_response(&resp))?;
+        }
+        Ok(())
+    };
+    ship(REPL_FILE_INDEX, 0, &index)?;
+    ship(REPL_FILE_DATA, follower_data_len, &data[follower_data_len as usize..])?;
+    ship(REPL_FILE_WAL, 0, &wal_bytes)?;
+    write_frame(writer, &encode_response(&Response::ReplDone))?;
+    writer.flush()?;
+    Ok(())
 }

@@ -43,11 +43,16 @@
 //! A pin file whose owner crashed would block reclamation forever, so
 //! the scan checks owner liveness: on Linux, a recorded pid with no
 //! `/proc/<pid>` entry is provably dead and the pin is deleted on the
-//! spot. Elsewhere (and for unparseable files, which carry no readable
-//! pid) the scan stays conservative — the pin blocks reclamation until
-//! its owner removes it or the directory is cleaned by hand. Both
-//! errors this can make are in the safe direction: a recycled pid or an
-//! unreadable file delays reclamation; neither can unprotect a live
+//! spot; on other Unixes (macOS) a `kill(pid, 0)` probe that answers
+//! `ESRCH` proves the same thing. Every other answer — the probe
+//! succeeding, `EPERM` (someone lives there, just not ours to signal),
+//! a pid too large for the platform's `pid_t`, or any platform without
+//! a probe at all (Windows) — is **live-ambiguous**, and a
+//! live-ambiguous pin is never swept: it blocks reclamation until its
+//! owner removes it or the directory is cleaned by hand. The same goes
+//! for unparseable files, which carry no readable pid. Both errors
+//! this policy can make are in the safe direction: a recycled pid or
+//! an unreadable file delays reclamation; neither can unprotect a live
 //! snapshot.
 //!
 //! Pins exist only on the real filesystem ([`super::vfs::StdVfs`],
@@ -165,15 +170,35 @@ fn parse(body: &[u8]) -> Option<(u64, u32)> {
     Some((epoch, pid))
 }
 
-/// Whether `pid` provably no longer runs. Only Linux can prove it
-/// (procfs); elsewhere every recorded owner is presumed alive, which
-/// can only delay reclamation, never unprotect a snapshot.
+/// Whether `pid` provably no longer runs. Linux proves it via procfs;
+/// other Unixes via a `kill(pid, 0)` probe answering `ESRCH`. Anything
+/// short of proof — the probe succeeding, `EPERM` (someone lives at
+/// that pid, just not ours to signal), a pid that does not fit the
+/// platform's `pid_t`, or a platform with no probe at all (Windows) —
+/// presumes the owner alive, which can only delay reclamation, never
+/// unprotect a snapshot.
 #[cfg(target_os = "linux")]
 fn owner_known_dead(pid: u32) -> bool {
     pid != std::process::id() && !Path::new("/proc").join(pid.to_string()).exists()
 }
 
-#[cfg(not(target_os = "linux"))]
+#[cfg(all(unix, not(target_os = "linux")))]
+fn owner_known_dead(pid: u32) -> bool {
+    // Signal 0 performs existence/permission checking only; nothing is
+    // delivered. ESRCH is the one answer that proves the pid is vacant.
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    const ESRCH: i32 = 3;
+    if pid == 0 || pid == std::process::id() || pid > i32::MAX as u32 {
+        return false;
+    }
+    // SAFETY: kill with signal 0 cannot affect the target process.
+    let rc = unsafe { kill(pid as i32, 0) };
+    rc != 0 && std::io::Error::last_os_error().raw_os_error() == Some(ESRCH)
+}
+
+#[cfg(not(unix))]
 fn owner_known_dead(_pid: u32) -> bool {
     false
 }
@@ -295,5 +320,44 @@ mod tests {
         // The scanning process's own pid is trivially alive, so its
         // pins survive the liveness check.
         assert_eq!(scan_min(&index).unwrap(), Some(4));
+    }
+
+    /// The liveness probe itself, on every platform: our own pid and a
+    /// live-ambiguous pid (pid 1 — init/launchd, alive but not ours to
+    /// signal) must never be declared dead. This is the conservative
+    /// fallback a replication follower's pin files depend on across the
+    /// 3-OS matrix: a pin is swept only on *proof* of death.
+    #[test]
+    fn ambiguous_owners_are_presumed_alive() {
+        assert!(!owner_known_dead(std::process::id()), "own pid is alive by definition");
+        assert!(!owner_known_dead(1), "pid 1 exists but is not ours to signal");
+        assert!(!owner_known_dead(0), "pid 0 is never a recorded owner; keep its pins");
+    }
+
+    /// On any Unix, a spawned-and-reaped child is *provable* death —
+    /// procfs on Linux, the `kill(pid, 0)` ESRCH probe elsewhere.
+    #[cfg(unix)]
+    #[test]
+    fn reaped_child_is_provably_dead_on_unix() {
+        let mut child = std::process::Command::new("sh")
+            .args(["-c", "exit 0"])
+            .spawn()
+            .expect("spawning a short-lived child");
+        let pid = child.id();
+        child.wait().expect("reaping the child");
+        // The pid is reaped (not a zombie), so the probe must prove it
+        // vacant. (A recycled pid in the microseconds since the wait
+        // could theoretically flip this; pids recycle slowly enough
+        // that the race is not observable in practice.)
+        assert!(owner_known_dead(pid), "reaped child pid {pid} should probe as dead");
+    }
+
+    /// Platforms with no probe at all must answer "alive" for every
+    /// pid — never sweeping is the documented fallback.
+    #[cfg(not(unix))]
+    #[test]
+    fn liveness_is_never_presumed_without_a_probe() {
+        assert!(!owner_known_dead(12345));
+        assert!(!owner_known_dead(u32::MAX));
     }
 }

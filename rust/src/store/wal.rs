@@ -59,13 +59,30 @@ pub fn replay(
 pub fn replay_with(
     vfs: &dyn Vfs,
     path: &Path,
-    mut f: impl FnMut(&[u8]) -> io::Result<()>,
+    f: impl FnMut(&[u8]) -> io::Result<()>,
 ) -> io::Result<ReplayReport> {
     let data = match vfs.read(path) {
         Ok(d) => d,
         Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(ReplayReport::default()),
         Err(e) => return Err(e),
     };
+    scan_slice(&data, f)
+}
+
+/// [`replay`] over an in-memory byte slice instead of a file: visit
+/// every intact frame in order and report the valid prefix. This is the
+/// replay seam replication ships bytes through — a primary uses it to
+/// find the frame boundary it may stream up to, and a follower uses it
+/// to prove a received chunk is whole frames (all bytes consumed, zero
+/// torn tail) *before* appending any of them to its own log.
+///
+/// # Errors
+/// Fails only when `f` itself errors; torn/corrupt tails end the scan
+/// without erroring.
+pub fn scan_slice(
+    data: &[u8],
+    mut f: impl FnMut(&[u8]) -> io::Result<()>,
+) -> io::Result<ReplayReport> {
     let mut pos = 0usize;
     let mut records = 0u64;
     while pos + 8 <= data.len() {
@@ -421,6 +438,29 @@ mod tests {
         let (recs, report) = collect(&path);
         assert_eq!(recs, vec![b"one".to_vec(), b"two".to_vec(), b"three".to_vec()]);
         assert_eq!(report.torn_bytes, 0);
+    }
+
+    #[test]
+    fn scan_slice_matches_file_replay() {
+        let path = tmp("slice.wal");
+        let _ = std::fs::remove_file(&path);
+        let mut w = WalWriter::open(&path, 0).unwrap();
+        w.append(b"one").unwrap();
+        w.append(&[7u8; 90]).unwrap();
+        w.commit().unwrap();
+        drop(w);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let (file_recs, file_report) = collect(&path);
+        bytes.extend_from_slice(&[0xAA, 0xBB]); // torn tail
+        let mut got = Vec::new();
+        let report = scan_slice(&bytes, |p| {
+            got.push(p.to_vec());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, file_recs);
+        assert_eq!(report.valid_bytes, file_report.valid_bytes);
+        assert_eq!(report.torn_bytes, 2);
     }
 
     #[test]

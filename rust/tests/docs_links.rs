@@ -1,8 +1,8 @@
 //! Doc-rot guard: every relative markdown link in the repo-level docs
-//! (README.md, docs/ARCHITECTURE.md) must point at a file or directory
-//! that actually exists, and the two documents must link each other.
-//! Runs under plain `cargo test`, so CI catches a broken link the same
-//! commit that breaks it.
+//! (README.md, docs/ARCHITECTURE.md, docs/REPLICATION.md) must point
+//! at a file or directory that actually exists, and the documents must
+//! cross-link each other. Runs under plain `cargo test`, so CI catches
+//! a broken link the same commit that breaks it.
 
 use std::path::{Path, PathBuf};
 
@@ -61,7 +61,32 @@ fn check_doc(doc_rel: &str) -> Vec<String> {
 fn readme_and_architecture_links_resolve() {
     let mut broken = check_doc("README.md");
     broken.extend(check_doc("docs/ARCHITECTURE.md"));
+    broken.extend(check_doc("docs/REPLICATION.md"));
     assert!(broken.is_empty(), "broken relative doc links:\n{}", broken.join("\n"));
+}
+
+/// The replication contract is discoverable from both entry points:
+/// the architecture doc's Replication section links the contract, the
+/// contract links back, and the README mentions the replica workflow.
+#[test]
+fn replication_contract_is_cross_linked() {
+    let root = repo_root();
+    let readme = std::fs::read_to_string(root.join("README.md")).unwrap();
+    let arch = std::fs::read_to_string(root.join("docs/ARCHITECTURE.md")).unwrap();
+    let repl = std::fs::read_to_string(root.join("docs/REPLICATION.md")).unwrap();
+    assert!(
+        arch.contains("REPLICATION.md"),
+        "docs/ARCHITECTURE.md must link the replication contract"
+    );
+    assert!(
+        repl.contains("ARCHITECTURE.md"),
+        "docs/REPLICATION.md must link back to the architecture doc"
+    );
+    assert!(
+        readme.contains("docs/REPLICATION.md"),
+        "README.md must point readers at the replication contract"
+    );
+    assert!(readme.contains("replicate"), "README.md must mention `grouper replicate`");
 }
 
 #[test]

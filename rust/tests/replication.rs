@@ -1,0 +1,435 @@
+//! End-to-end tests of read replicas (`grouper replicate`): a
+//! [`StoreServer`] primary on 127.0.0.1 with real [`Replica`] /
+//! [`ReplicaClientSource`] followers over TCP.
+//!
+//! Covers the replication contract (`docs/REPLICATION.md`):
+//!
+//! * **byte identity** — after a sync the follower's WAL and data
+//!   files equal the primary's committed prefix bit-for-bit, and at a
+//!   checkpoint boundary (quiescent primary) the committed index
+//!   prefix does too;
+//! * **cohort identity** — cohorts fetched from the replica's local
+//!   disk are bit-identical to primary-local fetches at the same
+//!   epoch, for single stores and sharded sets;
+//! * **durability** — a follower restarted mid-stream catches up from
+//!   its own durable state without re-transferring what it has;
+//! * **epoch crossings** — checkpoints and compactions on the primary
+//!   trigger checkpoint transfers, never frame-patching across a WAL
+//!   reset;
+//! * **divergence** — a follower whose bytes contradict the primary's
+//!   history gets a typed `diverged` refusal, never a silent repair;
+//! * **churn** — a threaded live writer (checkpoint + compaction
+//!   schedule) never drives the follower into divergence; transient
+//!   sync failures are retryable.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
+use grouper::fed::trainer::{fetch_cohort, fetch_cohort_sharded, CohortFetchSpec};
+use grouper::fed::{ClientSource, IngestConfig, IngestRunner, IngestTarget};
+use grouper::formats::{
+    committed_state_with, PagedReader, PagedSetManifest, PagedStore, ShardedPagedReader,
+};
+use grouper::pipeline::{
+    run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
+};
+use grouper::records::Example;
+use grouper::serve::{Replica, ReplicaClientSource, ServeOptions, StoreServer};
+use grouper::store::vfs::StdVfs;
+use grouper::tokenizer::VocabBuilder;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn ex(text: &str) -> Example {
+    Example::text(text)
+}
+
+fn read_or_empty(dir: &Path, name: String) -> Vec<u8> {
+    std::fs::read(dir.join(name)).unwrap_or_default()
+}
+
+/// Assert the follower's durable files equal the primary's committed
+/// prefix: the WAL valid prefix and the checkpointed `.pdata` prefix
+/// always; the committed `.pstore` index prefix only when the caller
+/// knows the primary is at a quiescent checkpoint boundary (between
+/// checkpoints the live pager may rewrite interior free slots, so
+/// index bytes are compared only where the contract promises them).
+fn assert_committed_prefix_equal(pdir: &Path, fdir: &Path, pfx: &str, check_index: bool) {
+    let p = committed_state_with(&StdVfs, pdir, pfx)
+        .unwrap()
+        .expect("primary has no committed state");
+    let f = committed_state_with(&StdVfs, fdir, pfx)
+        .unwrap()
+        .expect("follower has no committed state");
+    assert_eq!(p.epoch, f.epoch, "epoch mismatch for {pfx}");
+    assert_eq!(p.data_len, f.data_len, "data_len mismatch for {pfx}");
+    assert_eq!(p.wal_len, f.wal_len, "wal_len mismatch for {pfx}");
+    if check_index {
+        let n = p.index_len() as usize;
+        let pi = read_or_empty(pdir, format!("{pfx}.pstore"));
+        let fi = read_or_empty(fdir, format!("{pfx}.pstore"));
+        assert!(pi.len() >= n && fi.len() >= n, "index shorter than committed prefix");
+        assert!(pi[..n] == fi[..n], "committed index prefix diverged for {pfx}");
+    }
+    let pd = read_or_empty(pdir, format!("{pfx}.pdata"));
+    let fd = read_or_empty(fdir, format!("{pfx}.pdata"));
+    assert!(
+        pd[..p.data_len as usize] == fd[..f.data_len as usize],
+        "committed data prefix diverged for {pfx}"
+    );
+    let pw = read_or_empty(pdir, format!("{pfx}.pwal"));
+    let fw = read_or_empty(fdir, format!("{pfx}.pwal"));
+    assert!(pw[..p.wal_len as usize] == fw[..f.wal_len as usize], "WAL prefix diverged for {pfx}");
+}
+
+/// Byte identity under stepped churn: cold start, same-epoch WAL
+/// deltas, and a checkpoint crossing, each followed by a sync and a
+/// committed-prefix comparison against the primary's files.
+#[test]
+fn follower_tracks_live_writer_byte_identically() {
+    let pdir = tmp("grouper_repl_track_p");
+    let fdir = tmp("grouper_repl_track_f");
+    let mut store = PagedStore::create(&pdir, "data", 32).unwrap();
+    for i in 0..6 {
+        let key = format!("group-{i:02}");
+        for j in 0..4 {
+            store.append(key.as_bytes(), &ex(&format!("doc {j} of {key}"))).unwrap();
+        }
+    }
+    store.checkpoint().unwrap();
+
+    let server = StoreServer::bind(&pdir, "data", "127.0.0.1:0", ServeOptions::default()).unwrap();
+    let handle = server.spawn().unwrap();
+    let mut replica = Replica::connect(&handle.addr().to_string(), &fdir, "data").unwrap();
+    assert!(!replica.sharded());
+
+    // Cold start: a full snapshot transfer lands the whole committed
+    // state; the primary is quiescent at a checkpoint, so the index
+    // prefix must match too.
+    let r = replica.sync().unwrap();
+    assert_eq!(r.snapshot_transfers, 1, "cold start must be one snapshot transfer");
+    assert!(r.shipped_bytes > 0);
+    assert_committed_prefix_equal(&pdir, &fdir, "data", true);
+
+    // Same-epoch appends: only WAL frames cross the wire.
+    for i in 0..6 {
+        store.append(format!("group-{i:02}").as_bytes(), &ex("late arrival")).unwrap();
+    }
+    store.commit().unwrap();
+    let r = replica.sync().unwrap();
+    assert!(r.frames > 0, "same-epoch delta must ship WAL frames");
+    assert_eq!(r.snapshot_transfers, 0, "same-epoch delta must not re-transfer");
+    assert_committed_prefix_equal(&pdir, &fdir, "data", false);
+
+    // Caught up: the next sync moves nothing.
+    let r = replica.sync().unwrap();
+    assert_eq!((r.frames, r.shipped_bytes, r.snapshot_transfers), (0, 0, 0));
+
+    // Checkpoint crossing: the WAL resets on the primary, so the
+    // follower takes a checkpoint transfer, after which the quiescent
+    // boundary again promises full index-prefix identity.
+    store.append(b"group-new", &ex("a brand new group")).unwrap();
+    store.checkpoint().unwrap();
+    let epoch_before = replica.epochs().unwrap()[0];
+    let r = replica.sync().unwrap();
+    assert_eq!(r.snapshot_transfers, 1, "a checkpoint crossing is a checkpoint transfer");
+    assert!(r.epochs[0] > epoch_before);
+    assert_committed_prefix_equal(&pdir, &fdir, "data", true);
+}
+
+/// A follower dropped mid-stream reconnects and continues from its own
+/// durable state: the matching prefix never crosses the wire again.
+#[test]
+fn restarted_follower_catches_up_from_durable_state() {
+    let pdir = tmp("grouper_repl_restart_p");
+    let fdir = tmp("grouper_repl_restart_f");
+    let mut store = PagedStore::create(&pdir, "data", 32).unwrap();
+    for i in 0..4 {
+        store.append(format!("g{i}").as_bytes(), &ex(&format!("doc {i}"))).unwrap();
+    }
+    store.checkpoint().unwrap();
+
+    let server = StoreServer::bind(&pdir, "data", "127.0.0.1:0", ServeOptions::default()).unwrap();
+    let handle = server.spawn().unwrap();
+    let addr = handle.addr().to_string();
+
+    let mut replica = Replica::connect(&addr, &fdir, "data").unwrap();
+    replica.sync().unwrap();
+    store.append(b"g0", &ex("first delta")).unwrap();
+    store.commit().unwrap();
+    let r = replica.sync().unwrap();
+    assert!(r.frames > 0);
+    drop(replica); // follower process "crashes"
+
+    // The primary moves on while the follower is down.
+    store.append(b"g1", &ex("second delta")).unwrap();
+    store.commit().unwrap();
+
+    // A fresh follower over the SAME directory resumes from its durable
+    // position: frames only, no snapshot transfer.
+    let mut replica = Replica::connect(&addr, &fdir, "data").unwrap();
+    let r = replica.sync().unwrap();
+    assert!(r.frames > 0, "restart must resume the frame stream");
+    assert_eq!(r.snapshot_transfers, 0, "restart must not re-transfer replicated state");
+    assert_committed_prefix_equal(&pdir, &fdir, "data", false);
+}
+
+/// Checkpoints and compactions on the primary (which reset the WAL and
+/// rewrite/truncate the index) force checkpoint transfers; afterwards
+/// the follower's committed prefix — index included — matches again.
+#[test]
+fn compaction_on_the_primary_forces_a_snapshot_transfer() {
+    let pdir = tmp("grouper_repl_compact_p");
+    let fdir = tmp("grouper_repl_compact_f");
+    let mut store = PagedStore::create(&pdir, "data", 32).unwrap();
+    for i in 0..12 {
+        let key = format!("group-{i:02}");
+        for j in 0..6 {
+            store.append(key.as_bytes(), &ex(&format!("doc {j} of {key}"))).unwrap();
+        }
+    }
+    store.checkpoint().unwrap();
+
+    let server = StoreServer::bind(&pdir, "data", "127.0.0.1:0", ServeOptions::default()).unwrap();
+    let handle = server.spawn().unwrap();
+    let mut replica = Replica::connect(&handle.addr().to_string(), &fdir, "data").unwrap();
+    replica.sync().unwrap();
+    let epoch_before = replica.epochs().unwrap()[0];
+
+    // Several checkpoints and a compaction pass while the follower
+    // sits idle: its epoch falls behind the primary's horizon.
+    for round in 0..3 {
+        for i in 0..12 {
+            store
+                .append(format!("group-{i:02}").as_bytes(), &ex(&format!("round {round}")))
+                .unwrap();
+        }
+        store.checkpoint().unwrap();
+    }
+    store.compact().unwrap();
+
+    let r = replica.sync().unwrap();
+    assert!(r.snapshot_transfers >= 1, "an epoch crossing must run a checkpoint transfer");
+    assert!(r.epochs[0] > epoch_before);
+    assert_committed_prefix_equal(&pdir, &fdir, "data", true);
+
+    // The follower keeps tracking after the crossing.
+    store.append(b"group-00", &ex("post-compaction delta")).unwrap();
+    store.commit().unwrap();
+    let r = replica.sync().unwrap();
+    assert!(r.frames > 0);
+    assert_committed_prefix_equal(&pdir, &fdir, "data", false);
+}
+
+/// A follower whose local bytes contradict the primary's history is
+/// refused with a typed `diverged` error — for an epoch the primary
+/// never reached, and for same-epoch WAL bytes the primary never
+/// wrote. It is never silently "repaired".
+#[test]
+fn diverged_followers_get_typed_refusals() {
+    let pdir = tmp("grouper_repl_diverge_p");
+    let mut store = PagedStore::create(&pdir, "data", 16).unwrap();
+    store.append(b"g", &ex("primary history")).unwrap();
+    store.append(b"g", &ex("primary history 2")).unwrap();
+    store.commit().unwrap();
+    let server = StoreServer::bind(&pdir, "data", "127.0.0.1:0", ServeOptions::default()).unwrap();
+    let handle = server.spawn().unwrap();
+    let addr = handle.addr().to_string();
+
+    // Epoch ahead: this "follower" checkpointed a history of its own.
+    let fdir = tmp("grouper_repl_diverge_ahead");
+    let mut rogue = PagedStore::create(&fdir, "data", 16).unwrap();
+    rogue.append(b"g", &ex("rogue history")).unwrap();
+    rogue.checkpoint().unwrap();
+    rogue.checkpoint().unwrap();
+    drop(rogue);
+    let mut replica = Replica::connect(&addr, &fdir, "data").unwrap();
+    let err = format!("{:#}", replica.sync().unwrap_err());
+    assert!(err.contains("diverged"), "expected a typed divergence refusal, got: {err}");
+
+    // Same epoch, different WAL bytes: the prefix CRC handshake
+    // catches it before any frame is shipped.
+    let fdir = tmp("grouper_repl_diverge_wal");
+    let mut rogue = PagedStore::create(&fdir, "data", 16).unwrap();
+    rogue.append(b"g", &ex("zzz")).unwrap();
+    rogue.commit().unwrap();
+    drop(rogue);
+    let mut replica = Replica::connect(&addr, &fdir, "data").unwrap();
+    let err = format!("{:#}", replica.sync().unwrap_err());
+    assert!(err.contains("diverged"), "expected a WAL-prefix divergence refusal, got: {err}");
+
+    // The primary still serves honest followers after refusing rogues.
+    let fdir = tmp("grouper_repl_diverge_honest");
+    let mut replica = Replica::connect(&addr, &fdir, "data").unwrap();
+    let r = replica.sync().unwrap();
+    assert_eq!(r.snapshot_transfers, 1);
+    assert_committed_prefix_equal(&pdir, &fdir, "data", false);
+}
+
+/// `ReplicaClientSource`: cohorts from the replica's local disk are
+/// bit-identical to primary-local reads at the same epoch, and
+/// `refresh()` applies pending frames + re-pins (Ok(true) exactly when
+/// the view moved) — the replica/ingest convergence loop.
+#[test]
+fn replica_source_serves_bit_identical_cohorts_and_refreshes() {
+    let pdir = tmp("grouper_repl_source_p");
+    let fdir = tmp("grouper_repl_source_f");
+    let mut store = PagedStore::create(&pdir, "data", 32).unwrap();
+    for i in 0..8 {
+        let key = format!("group-{i:02}");
+        for j in 0..5 {
+            store.append(key.as_bytes(), &ex(&format!("doc {j} of {key}"))).unwrap();
+        }
+    }
+    store.checkpoint().unwrap();
+    let server = StoreServer::bind(&pdir, "data", "127.0.0.1:0", ServeOptions::default()).unwrap();
+    let handle = server.spawn().unwrap();
+
+    let src = ReplicaClientSource::connect(&handle.addr().to_string(), &fdir, "data").unwrap();
+    assert_eq!(src.snapshot_transfers(), 1, "connect runs the initial cold-start sync");
+    let local = PagedReader::open_snapshot(&pdir, "data", 32).unwrap();
+    let keys = ClientSource::group_keys(&local);
+    assert_eq!(src.group_keys(), keys, "replica key order must be canonical");
+    assert_eq!(src.num_groups(), ClientSource::num_groups(&local));
+    assert_eq!(src.num_examples(), ClientSource::num_examples(&local));
+    assert_eq!(src.source_epochs(), local.source_epochs());
+    for k in &keys {
+        let ours = src.streamed_group(k).unwrap().unwrap().framed_bytes().unwrap().to_vec();
+        let theirs = ClientSource::streamed_group(&local, k).unwrap().unwrap();
+        let theirs = theirs.framed_bytes().unwrap().to_vec();
+        assert_eq!(ours, theirs, "replica-local group bytes differ from primary-local");
+    }
+    assert!(src.streamed_group(b"no-such-group").unwrap().is_none());
+
+    // Nothing changed on the primary: refresh is a cheap no-op.
+    assert!(!src.refresh().unwrap(), "refresh with no new state must report unchanged");
+
+    // The primary checkpoints a new group; one refresh catches the
+    // follower up and re-pins the new local snapshot.
+    store.append(b"group-new", &ex("a brand new group")).unwrap();
+    store.checkpoint().unwrap();
+    assert!(src.refresh().unwrap(), "refresh across a checkpoint must report changed");
+    assert_eq!(src.num_groups(), 9);
+    let fresh = PagedReader::open_snapshot(&pdir, "data", 32).unwrap();
+    let got = src.streamed_group(b"group-new").unwrap().unwrap().framed_bytes().unwrap().to_vec();
+    let want = ClientSource::streamed_group(&fresh, b"group-new")
+        .unwrap()
+        .unwrap()
+        .framed_bytes()
+        .unwrap()
+        .to_vec();
+    assert_eq!(got, want);
+}
+
+/// A 4-shard set replicates shard by shard: the follower materializes
+/// its own manifest, every shard's committed prefix matches, and a
+/// whole tokenized cohort fetched replica-local is bit-identical to
+/// the primary-local fetch.
+#[test]
+fn sharded_set_replicates_and_cohorts_match() {
+    let pdir = tmp("grouper_repl_shards_p");
+    let fdir = tmp("grouper_repl_shards_f");
+    let mut spec = DatasetSpec::fedccnews_mini(24, 77);
+    spec.max_group_words = 800;
+    let ds = SyntheticTextDataset::new(spec);
+    run_partition_paged(
+        &ds,
+        &FeatureKey::new("domain"),
+        &pdir,
+        "train",
+        &PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() },
+        &PagedPartitionOptions { shards: 4, ..Default::default() },
+    )
+    .unwrap();
+    let mut vb = VocabBuilder::new();
+    for text in ds.stream_all_text() {
+        vb.feed(&text);
+    }
+    let tokenizer = Arc::new(vb.build(64));
+
+    let server = StoreServer::bind(&pdir, "train", "127.0.0.1:0", ServeOptions::default()).unwrap();
+    let handle = server.spawn().unwrap();
+    let src = ReplicaClientSource::connect(&handle.addr().to_string(), &fdir, "train").unwrap();
+
+    assert!(PagedSetManifest::exists(&fdir, "train"), "follower must write its own manifest");
+    let pm = PagedSetManifest::read_with(&StdVfs, &pdir, "train").unwrap();
+    let fm = PagedSetManifest::read_with(&StdVfs, &fdir, "train").unwrap();
+    assert_eq!(pm.hash_seed, fm.hash_seed);
+    assert_eq!(pm.shard_prefixes, fm.shard_prefixes);
+    for pfx in &pm.shard_prefixes {
+        assert_committed_prefix_equal(&pdir, &fdir, pfx, true);
+    }
+
+    let local = Arc::new(ShardedPagedReader::open_snapshot(&pdir, "train", 16).unwrap());
+    let keys = local.keys().to_vec();
+    assert_eq!(src.group_keys(), keys);
+    let cohort_spec = CohortFetchSpec { tau: 3, batch_size: 4, tokens_per_example: 9, pad_id: 0 };
+    let expected = fetch_cohort_sharded(&local, &keys, &tokenizer, cohort_spec, None).unwrap();
+    let source: Arc<dyn ClientSource> = Arc::new(src);
+    let got = fetch_cohort(&source, &keys, &tokenizer, cohort_spec, None).unwrap();
+    assert_eq!(got, expected, "replica-local cohort differs from primary-local");
+}
+
+/// Soak: a threaded live writer churns (append/commit/checkpoint/
+/// compact on the ingest schedule) while a follower polls `sync()` in
+/// a tight loop. Transient failures (the primary checkpointing
+/// mid-poll) are retried; divergence is impossible by construction and
+/// fails the test. After the writer stops, one last sync converges the
+/// follower and the committed prefix matches bit-for-bit.
+#[test]
+fn follower_converges_under_threaded_ingest_churn() {
+    let pdir = tmp("grouper_repl_soak_p");
+    let fdir = tmp("grouper_repl_soak_f");
+    let mut store = PagedStore::create(&pdir, "data", 32).unwrap();
+    for i in 0..6 {
+        store.append(format!("seed-{i}").as_bytes(), &ex(&format!("seed doc {i}"))).unwrap();
+    }
+    store.checkpoint().unwrap();
+
+    let server = StoreServer::bind(&pdir, "data", "127.0.0.1:0", ServeOptions::default()).unwrap();
+    let handle = server.spawn().unwrap();
+    let addr = handle.addr().to_string();
+
+    let cfg = IngestConfig { examples_per_step: 4, ..Default::default() };
+    let runner = IngestRunner::new(IngestTarget::Single(store), cfg).unwrap();
+    let ingest = runner.spawn(Duration::from_millis(20));
+
+    let mut replica = Replica::connect(&addr, &fdir, "data").unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    let mut syncs = 0u32;
+    while syncs < 40 {
+        assert!(std::time::Instant::now() < deadline, "soak loop stalled");
+        match replica.sync() {
+            Ok(_) => syncs += 1,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(!msg.contains("diverged"), "churn must never diverge a follower: {msg}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    let stats = ingest.stop().unwrap();
+    assert!(stats.checkpoints > 0, "the soak must cross checkpoints to mean anything");
+
+    // The writer is gone; converge and compare. The last committed
+    // epoch may sit mid-WAL (appends after the final checkpoint), so
+    // the index prefix is only compared when the headers agree that the
+    // store is exactly at a checkpoint boundary (wal_len == 0).
+    let mut converged = false;
+    while !converged {
+        assert!(std::time::Instant::now() < deadline, "post-churn convergence stalled");
+        match replica.sync() {
+            Ok(r) => converged = r.frames == 0 && r.snapshot_transfers == 0,
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    let p = committed_state_with(&StdVfs, &pdir, "data").unwrap().unwrap();
+    assert_committed_prefix_equal(&pdir, &fdir, "data", p.wal_len == 0);
+    assert!(replica.frames_applied() > 0, "churn should have shipped same-epoch frames");
+}
