@@ -101,7 +101,8 @@ use grouper::pipeline::{
 };
 use grouper::runtime::{ModelBackend, ModelRuntime};
 use grouper::serve::{
-    RemoteClientSource, Replica, ReplicaClientSource, ReplicaOptions, ServeOptions, StoreServer,
+    is_diverged, RemoteClientSource, Replica, ReplicaClientSource, ReplicaOptions, ServeOptions,
+    StoreServer,
 };
 use grouper::store::cache::CachePolicy;
 use grouper::store::shared::ReadOpts;
@@ -733,7 +734,10 @@ fn cmd_replicate(f: &Flags) -> Result<()> {
                     return Ok(());
                 }
             }
-            Err(e) if format!("{e:#}").contains("diverged") => {
+            // Typed classification (an error-chain downcast), so an
+            // unrelated error mentioning the word can never be
+            // mistaken for a fatal refusal.
+            Err(e) if is_diverged(&e) => {
                 return Err(e.context("follower has diverged; re-seed it into a fresh --dir"));
             }
             Err(e) => {

@@ -34,10 +34,9 @@ fn tables() -> &'static [[u32; 256]; 8] {
     })
 }
 
-/// CRC32C of `data` (unmasked).
-pub fn crc32c(data: &[u8]) -> u32 {
+/// Advance the raw (pre-inversion) CRC state over `data`.
+fn crc32c_raw(mut crc: u32, data: &[u8]) -> u32 {
     let t = tables();
-    let mut crc: u32 = !0;
     let mut chunks = data.chunks_exact(8);
     for c in &mut chunks {
         let lo = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) ^ crc;
@@ -54,7 +53,22 @@ pub fn crc32c(data: &[u8]) -> u32 {
     for &b in chunks.remainder() {
         crc = t[0][((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
     }
-    !crc
+    crc
+}
+
+/// CRC32C of `data` (unmasked).
+pub fn crc32c(data: &[u8]) -> u32 {
+    !crc32c_raw(!0, data)
+}
+
+/// Extend a finished CRC32C over more bytes:
+/// `crc32c_extend(crc32c(a), b) == crc32c(ab)` for any split of the
+/// input, and `crc32c_extend(0, x) == crc32c(x)` (0 is the CRC of the
+/// empty slice). This is what lets a file prefix be checksummed in
+/// bounded memory, one chunk at a time, with the same result as a
+/// one-shot [`crc32c`] over the whole prefix.
+pub fn crc32c_extend(crc: u32, data: &[u8]) -> u32 {
+    !crc32c_raw(!crc, data)
 }
 
 const MASK_DELTA: u32 = 0xA282_EAD8;
@@ -107,6 +121,30 @@ mod tests {
         check(200, |rng| {
             let data = gen_bytes(rng, 0..=257);
             prop_assert_eq(crc32c(&data), crc32c_ref(&data), "slicing-by-8 vs bitwise")
+        });
+    }
+
+    #[test]
+    fn extend_composes_with_one_shot() {
+        assert_eq!(crc32c_extend(0, b""), crc32c(b""));
+        assert_eq!(crc32c_extend(0, b"123456789"), crc32c(b"123456789"));
+        check(200, |rng| {
+            let data = gen_bytes(rng, 0..=257);
+            let cut = (rng.next_u32() as usize) % (data.len() + 1);
+            let streamed = crc32c_extend(crc32c(&data[..cut]), &data[cut..]);
+            prop_assert_eq(streamed, crc32c(&data), "split/extend vs one-shot")
+        });
+    }
+
+    #[test]
+    fn extend_streams_in_many_chunks() {
+        check(100, |rng| {
+            let data = gen_bytes(rng, 0..=257);
+            let mut crc = 0u32;
+            for chunk in data.chunks(7) {
+                crc = crc32c_extend(crc, chunk);
+            }
+            prop_assert_eq(crc, crc32c(&data), "chunked stream vs one-shot")
         });
     }
 

@@ -41,8 +41,8 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::proto::{
-    decode_response, encode_request, read_frame, write_frame, Request, Response, WireShardStat,
-    PROTO_VERSION,
+    decode_response, encode_request, read_frame, write_frame, Diverged, Request, Response,
+    WireShardStat, DATA_PROTO_VERSION, PROTO_VERSION,
 };
 use crate::fed::source::ClientSource;
 use crate::formats::streaming::StreamedGroup;
@@ -147,7 +147,13 @@ pub(crate) fn read_response(stream: &mut TcpStream) -> Result<Response> {
         .context("reading store server response")?
         .ok_or_else(|| anyhow!("store server closed the connection"))?;
     match decode_response(&payload).context("decoding store server response")? {
-        Response::Error { message } => bail!("store server error: {message}"),
+        // A divergence refusal is reconstructed as the typed error the
+        // primary raised, so callers (the replication CLI, a refresh
+        // loop) classify it by downcast, never by message text.
+        Response::Error { message } => match Diverged::from_wire(&message) {
+            Some(diverged) => Err(anyhow::Error::new(diverged)),
+            None => bail!("store server error: {message}"),
+        },
         resp => Ok(resp),
     }
 }
@@ -157,11 +163,18 @@ pub(crate) fn read_response(stream: &mut TcpStream) -> Result<Response> {
 fn handshake(mut stream: TcpStream, opts: &RemoteOptions) -> Result<Session> {
     stream.set_read_timeout(Some(opts.read_timeout)).context("setting read timeout")?;
     stream.set_nodelay(true).ok(); // latency over batching; best-effort
-    send_request(&mut stream, &Request::Hello { version: PROTO_VERSION })?;
+    // Announce the data-plane dialect (unchanged since v1): a v1
+    // server still requires strict equality, and a newer server
+    // accepts anything in DATA_PROTO_VERSION..=PROTO_VERSION — so this
+    // client interoperates across a rolling upgrade in either order.
+    send_request(&mut stream, &Request::Hello { version: DATA_PROTO_VERSION })?;
     let (num_shards, epochs, num_groups, num_examples) = match read_response(&mut stream)? {
         Response::HelloAck { version, num_shards, epochs, num_groups, num_examples } => {
-            if version != PROTO_VERSION {
-                bail!("store server speaks protocol v{version}, client v{PROTO_VERSION}");
+            if !(DATA_PROTO_VERSION..=PROTO_VERSION).contains(&version) {
+                bail!(
+                    "store server speaks protocol v{version}, client speaks \
+                     v{DATA_PROTO_VERSION}..=v{PROTO_VERSION}"
+                );
             }
             (num_shards, epochs, num_groups, num_examples)
         }

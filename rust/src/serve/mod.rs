@@ -60,5 +60,6 @@ pub mod replica;
 pub mod server;
 
 pub use client::{RemoteClientSource, RemoteOptions};
+pub use proto::{is_diverged, Diverged, DIVERGED_PREFIX};
 pub use replica::{Replica, ReplicaClientSource, ReplicaOptions, SyncReport};
 pub use server::{ServeOptions, ServerHandle, StoreServer};

@@ -47,9 +47,12 @@
 //!   checkpoint epoch, valid WAL length, and a CRC32C of that WAL
 //!   prefix). Same epoch + matching prefix → [`Response::ReplFrames`]
 //!   with the WAL delta (verbatim frame bytes, possibly empty = in
-//!   sync). Primary ahead by one or more checkpoints →
-//!   [`Response::ReplBehind`]. Anything inconsistent → a typed
-//!   [`Response::Error`] whose message starts with `diverged:`.
+//!   sync); shipped frames always carry the announced epoch's records
+//!   — the primary filters out the stale head its checkpoint window
+//!   can leave at the front of the file. Primary ahead by one or more
+//!   checkpoints → [`Response::ReplBehind`]. Anything inconsistent → a
+//!   [`Response::Error`] carrying a [`Diverged`] refusal (its message
+//!   starts with [`DIVERGED_PREFIX`]).
 //! * `ReplFetch` asks for a checkpoint transfer: the committed index
 //!   prefix, the `.pdata` delta past the follower's verified length,
 //!   and the current WAL prefix, announced by [`Response::ReplStore`],
@@ -65,14 +68,27 @@
 //! bounds-checked and every error is a typed [`io::Error`] (property
 //! test below feeds random and truncated byte prefixes).
 
+use std::fmt;
 use std::io::{self, Read, Write};
 
 use crate::records::crc32c::crc32c;
 
-/// Protocol version sent in [`Request::Hello`]; bumped on any framing
-/// or message change. Version 2 added the replication message family
-/// (`Repl*`); the v1 data-plane messages are unchanged.
+/// This build's protocol version; bumped on any framing or message
+/// change. Version 2 added the replication message family (`Repl*`);
+/// the v1 data-plane messages are unchanged. Replication handshakes
+/// ([`Request::ReplHello`]) require exactly this version on both sides
+/// — followers mirror raw store bytes, so there is no meaningful
+/// cross-version replication dialect.
 pub const PROTO_VERSION: u32 = 2;
+
+/// The data-plane dialect: the version a [`Request::Hello`] client
+/// announces. The data-plane messages have not changed since v1, so
+/// this floor stays at 1 while [`PROTO_VERSION`] moves; a server
+/// accepts any hello in `DATA_PROTO_VERSION..=PROTO_VERSION` and
+/// echoes the client's version back in [`Response::HelloAck`] — N
+/// trainer processes and their shared server upgrade independently, in
+/// either order, with no lockstep restart.
+pub const DATA_PROTO_VERSION: u32 = 1;
 
 /// Upper bound on one frame's payload (64 MiB). Bounds the allocation
 /// a single `len` prefix can demand on either side; a group or key
@@ -108,12 +124,66 @@ pub const REPL_FILE_DATA: u8 = 1;
 /// [`Response::ReplChunk`] file selector: the `.pwal` write-ahead log.
 pub const REPL_FILE_WAL: u8 = 2;
 
+/// Wire prefix of a replication refusal: a [`Response::Error`] whose
+/// message starts with this marks a follower whose bytes contradict
+/// the primary's history. Fatal by contract — the follower must be
+/// re-seeded, never silently "repaired" (`docs/REPLICATION.md`).
+pub const DIVERGED_PREFIX: &str = "diverged:";
+
+/// A replication divergence refusal, as a typed error.
+///
+/// The primary constructs one at the refusal site; its `Display` form
+/// (`diverged: <detail>`) is what crosses the wire in
+/// [`Response::Error`], and the client reconstructs the type from
+/// [`DIVERGED_PREFIX`] ([`Diverged::from_wire`]) — so both sides
+/// classify divergence with [`is_diverged`] (an error-chain downcast),
+/// never by matching message text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diverged {
+    detail: String,
+}
+
+impl Diverged {
+    /// A refusal with the given human-readable detail (the text after
+    /// the wire prefix).
+    pub fn new(detail: impl Into<String>) -> Diverged {
+        Diverged { detail: detail.into() }
+    }
+
+    /// Reconstruct a refusal from a wire error message, when it
+    /// carries [`DIVERGED_PREFIX`].
+    pub fn from_wire(message: &str) -> Option<Diverged> {
+        message.strip_prefix(DIVERGED_PREFIX).map(|d| Diverged::new(d.trim_start()))
+    }
+
+    /// The human-readable detail after the wire prefix.
+    pub fn detail(&self) -> &str {
+        &self.detail
+    }
+}
+
+impl fmt::Display for Diverged {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{DIVERGED_PREFIX} {}", self.detail)
+    }
+}
+
+impl std::error::Error for Diverged {}
+
+/// True when `err`'s chain contains a [`Diverged`] refusal at any
+/// depth — `context` layers on either side of the wire do not hide it.
+pub fn is_diverged(err: &anyhow::Error) -> bool {
+    err.chain().any(|cause| cause.downcast_ref::<Diverged>().is_some())
+}
+
 /// A client → server message.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Request {
     /// Handshake: must be the first request on a connection.
     Hello {
-        /// The client's [`PROTO_VERSION`].
+        /// The data-plane dialect the client speaks (see
+        /// [`DATA_PROTO_VERSION`]); the server accepts any version in
+        /// `DATA_PROTO_VERSION..=PROTO_VERSION`.
         version: u32,
     },
     /// All group keys, sorted.
@@ -206,7 +276,8 @@ pub enum Response {
     /// Handshake reply: the pinned snapshot this connection will be
     /// served from.
     HelloAck {
-        /// The server's [`PROTO_VERSION`].
+        /// The negotiated data-plane version: the client's own,
+        /// echoed back.
         version: u32,
         /// Shards in the store (1 for a single paged store).
         num_shards: u32,

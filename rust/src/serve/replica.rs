@@ -9,11 +9,14 @@
 //!
 //! * **Same epoch** — the follower announces its committed epoch plus
 //!   the length and CRC32C of its valid WAL prefix; the primary ships
-//!   the WAL *delta* as verbatim frame bytes. The follower proves the
-//!   chunk is whole frames ([`wal::scan_slice`]) whose record epochs
-//!   belong to this checkpoint, then appends the **payloads** through
-//!   the engine's own [`WalWriter`] — whose framing is deterministic,
-//!   so the re-appended bytes are identical to the primary's.
+//!   the WAL *delta* as verbatim frame bytes (only its **live
+//!   suffix**: records carrying the committed epoch — the stale head a
+//!   primary's checkpoint window can leave on disk never travels). The
+//!   follower proves the chunk is whole frames ([`wal::scan_slice`])
+//!   whose records carry exactly the announced epoch, then appends the
+//!   **payloads** through the engine's own [`WalWriter`] — whose
+//!   framing is deterministic, so the re-appended bytes are identical
+//!   to the primary's.
 //! * **Epoch crossing** — after a primary checkpoint (or compaction),
 //!   the poll answers `ReplBehind` and the follower requests a
 //!   checkpoint transfer: the committed index prefix, the `.pdata`
@@ -26,8 +29,10 @@
 //!   the same transfer runs with `data_len = 0`: a full-store snapshot
 //!   transfer. A follower whose bytes contradict the primary's history
 //!   (same epoch, different WAL prefix; or a data prefix that fails
-//!   its CRC) is refused with a typed `diverged:` error and is never
-//!   silently "repaired".
+//!   its CRC) is refused with a typed
+//!   [`Diverged`](crate::serve::proto::Diverged) error — classified by
+//!   downcast ([`is_diverged`](crate::serve::proto::is_diverged)), not
+//!   message text — and is never silently "repaired".
 //!
 //! [`ReplicaClientSource`] wires the replica into the trainer:
 //! a [`ClientSource`] whose reads come from a local snapshot open
@@ -48,6 +53,7 @@ use super::client::{connect_with_backoff, read_response, send_request};
 use super::proto::{
     Request, Response, PROTO_VERSION, REPL_FILE_DATA, REPL_FILE_INDEX, REPL_FILE_WAL,
 };
+use super::server::crc_file_prefix;
 use crate::fed::source::ClientSource;
 use crate::formats::paged::{
     committed_state_with, pdata_path, pstore_path, pwal_path, wal_record_epoch, PagedReader,
@@ -370,13 +376,14 @@ impl Replica {
         let mut payloads: Vec<Vec<u8>> = Vec::new();
         let report = wal::scan_slice(bytes, |payload| {
             let rec_epoch = wal_record_epoch(payload)?;
-            // Records of *older* epochs are legal (the primary's
-            // stale-WAL crash window leaves them on disk and we mirror
-            // its bytes); records from the future are not.
-            if rec_epoch > epoch {
+            // Every shipped record must carry the announced epoch: the
+            // primary ships only its WAL's live suffix (the stale head
+            // its checkpoint window can leave on disk never travels),
+            // so anything else is a framing error.
+            if rec_epoch != epoch {
                 return Err(std::io::Error::new(
                     std::io::ErrorKind::InvalidData,
-                    format!("frame carries epoch {rec_epoch}, ahead of checkpoint {epoch}"),
+                    format!("frame carries epoch {rec_epoch}, not the announced {epoch}"),
                 ));
             }
             payloads.push(payload.to_vec());
@@ -420,17 +427,23 @@ impl Replica {
             let local = committed_state_with(self.vfs.as_ref(), &self.dir, pfx)?;
             match local {
                 Some(st) if st.data_len > 0 => {
-                    let bytes = self.vfs.read(&pdata_path(&self.dir, pfx)).with_context(|| {
-                        format!("reading replica data prefix for shard {shard}")
-                    })?;
-                    if (bytes.len() as u64) < st.data_len {
+                    let path = pdata_path(&self.dir, pfx);
+                    let have = self
+                        .vfs
+                        .open(&path, OpenMode::Read)
+                        .and_then(|f| f.len())
+                        .with_context(|| {
+                            format!("reading replica data prefix for shard {shard}")
+                        })?;
+                    if have < st.data_len {
                         bail!(
-                            "replica data file holds {} bytes but its header claims {}",
-                            bytes.len(),
+                            "replica data file holds {have} bytes but its header claims {}",
                             st.data_len
                         );
                     }
-                    (st.data_len, crc32c(&bytes[..st.data_len as usize]))
+                    // Chunked, not a whole-file read: the prefix can be
+                    // the full multi-GiB store.
+                    (st.data_len, crc_file_prefix(self.vfs.as_ref(), &path, st.data_len)?)
                 }
                 _ => (0, 0),
             }

@@ -34,10 +34,14 @@
 //! the primary's page reuse or compaction. Replication reads go
 //! straight to the store files under a bounded stability loop (re-read
 //! the committed header around each file read; retry if a checkpoint
-//! moved the epoch underneath), and anything inconsistent with the
-//! follower's announced prefix is refused with a typed error whose
-//! message starts with `diverged:` — see `docs/REPLICATION.md` for the
-//! full contract.
+//! moved the epoch underneath), the shippable WAL is filtered down to
+//! its **live suffix** — records carrying the committed header's epoch
+//! (see `stable_committed_wal`) — and anything inconsistent with the
+//! follower's announced prefix is refused with a typed
+//! [`Diverged`](super::proto::Diverged) error — see
+//! `docs/REPLICATION.md` for the full contract. Large transfers stream
+//! straight off the files in 4 MiB spans, so serving a multi-GiB store
+//! never materializes it in memory.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -49,15 +53,16 @@ use std::thread::JoinHandle;
 use anyhow::{bail, Context, Result};
 
 use super::proto::{
-    decode_request, encode_response, read_frame, write_frame, Request, Response, WireGroup,
-    WireShardStat, PROTO_VERSION, REPL_FILE_DATA, REPL_FILE_INDEX, REPL_FILE_WAL,
+    decode_request, encode_response, read_frame, write_frame, Diverged, Request, Response,
+    WireGroup, WireShardStat, DATA_PROTO_VERSION, PROTO_VERSION, REPL_FILE_DATA, REPL_FILE_INDEX,
+    REPL_FILE_WAL,
 };
 use crate::formats::paged::{
-    committed_state_with, pdata_path, pstore_path, pwal_path, CommittedState, PagedReader,
-    PagedStat,
+    committed_state_with, pdata_path, pstore_path, pwal_path, wal_record_epoch, CommittedState,
+    PagedReader, PagedStat,
 };
 use crate::formats::paged_sharded::{PagedSetManifest, ShardedPagedReader};
-use crate::records::crc32c::crc32c;
+use crate::records::crc32c::{crc32c, crc32c_extend};
 use crate::store::vfs::{OpenMode, StdVfs, Vfs};
 use crate::store::wal;
 
@@ -422,10 +427,20 @@ fn handle_connection(
         }
         let sent = match request {
             Request::Hello { version } => {
-                if version != PROTO_VERSION {
+                // The data-plane dialect has not changed since v1, so
+                // any supported version is accepted and the ack echoes
+                // the client's own — N trainers and their shared
+                // server upgrade independently, in either order.
+                // Replication (ReplHello below) stays strict: a
+                // follower mirrors raw store bytes and must speak
+                // exactly this build's dialect.
+                if !(DATA_PROTO_VERSION..=PROTO_VERSION).contains(&version) {
                     send_error(
                         &mut writer,
-                        format!("protocol version {version} unsupported (server speaks {PROTO_VERSION})"),
+                        format!(
+                            "protocol version {version} unsupported (server speaks \
+                             {DATA_PROTO_VERSION}..={PROTO_VERSION})"
+                        ),
                     );
                     return;
                 }
@@ -441,7 +456,7 @@ fn handle_connection(
                     }
                 };
                 let ack = Response::HelloAck {
-                    version: PROTO_VERSION,
+                    version,
                     num_shards: snapshot.num_shards(),
                     epochs: snapshot.epochs(),
                     num_groups: snapshot.num_groups(),
@@ -584,10 +599,31 @@ fn handle_connection(
     }
 }
 
-/// Read one shard's committed state plus its valid WAL prefix,
-/// retrying while a live checkpoint moves the epoch underneath (the
-/// WAL read between two identical-epoch header reads is the WAL of
-/// that epoch — a checkpoint is the only thing that resets it).
+/// Read one shard's committed state plus the shippable portion of its
+/// WAL — the **live suffix**: the valid frames whose records carry the
+/// committed header's epoch. Retries while a live checkpoint moves the
+/// epoch underneath (the WAL read between two identical-epoch header
+/// reads belongs to that epoch — a checkpoint is the only thing that
+/// resets it).
+///
+/// Filtering by record epoch is what makes the primary's checkpoint
+/// window safe to poll through: a checkpoint publishes its new header
+/// **before** truncating the WAL (the engine orders the swap first so
+/// a crash between the two recovers cleanly), so a read landing inside
+/// that window — or against a primary that crashed inside it, where
+/// the stale head is durable — sees a header whose epoch is ahead of
+/// the leading WAL records. Those records are exactly the ones WAL
+/// replay skips: dead bytes the truncation is about to (or, after a
+/// crash, never will) remove. Shipping them would attribute the old
+/// epoch's frames to the new epoch and strand the follower behind a
+/// false `diverged:` refusal once the truncation lands; filtered, the
+/// window simply yields an empty delta, and every shipped byte is one
+/// the follower can keep.
+///
+/// Record epochs in any durable WAL are monotone non-decreasing (a
+/// stale head first, then live records appended after recovery), so a
+/// record from the *future*, or a stale record after a live one, can
+/// only be a torn mid-swap read — retried like an epoch mismatch.
 fn stable_committed_wal(
     vfs: &dyn Vfs,
     dir: &Path,
@@ -602,12 +638,27 @@ fn stable_committed_wal(
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
             Err(e) => return Err(e).context("reading WAL for replication"),
         };
-        let valid = wal::scan_slice(&wal_bytes, |_| Ok(()))?.valid_bytes as usize;
+        let mut stale_len = 0usize; // bytes of the leading stale-epoch run
+        let mut live_seen = false;
+        let mut torn_read = false;
+        let report = wal::scan_slice(&wal_bytes, |payload| {
+            let rec_epoch = wal_record_epoch(payload)?;
+            if rec_epoch == before.epoch {
+                live_seen = true;
+            } else if rec_epoch > before.epoch || live_seen {
+                torn_read = true;
+            } else {
+                stale_len += 8 + payload.len(); // frame header + payload
+            }
+            Ok(())
+        })?;
+        let valid = report.valid_bytes as usize;
         let Some(after) = committed_state_with(vfs, dir, pfx)? else {
             continue;
         };
-        if after.epoch == before.epoch {
+        if !torn_read && after.epoch == before.epoch {
             wal_bytes.truncate(valid);
+            wal_bytes.drain(..stale_len);
             return Ok((after, wal_bytes));
         }
     }
@@ -617,8 +668,11 @@ fn stable_committed_wal(
     )
 }
 
-/// Answer one [`Request::ReplPoll`]: frames, behind, or a `diverged:`
-/// refusal. Pure with respect to the connection — touches only files.
+/// Answer one [`Request::ReplPoll`]: frames, behind, or a typed
+/// [`Diverged`] refusal. Pure with respect to the connection — touches
+/// only files. All lengths and offsets are in live-suffix space (the
+/// follower's WAL holds only shipped live records, so its own lengths
+/// are already in that space).
 fn repl_poll(
     vfs: &dyn Vfs,
     dir: &Path,
@@ -629,30 +683,33 @@ fn repl_poll(
 ) -> Result<Response> {
     let (st, wal_bytes) = stable_committed_wal(vfs, dir, pfx)?;
     if follower_epoch > st.epoch {
-        bail!(
-            "diverged: follower epoch {follower_epoch} is ahead of the primary's {} — \
-             these stores do not share a history",
+        return Err(Diverged::new(format!(
+            "follower epoch {follower_epoch} is ahead of the primary's {} — these stores \
+             do not share a history",
             st.epoch
-        );
+        ))
+        .into());
     }
     if follower_epoch < st.epoch {
         return Ok(Response::ReplBehind { epoch: st.epoch });
     }
     let have = wal_bytes.len() as u64;
     if follower_wal_len > have {
-        bail!(
-            "diverged: follower claims {follower_wal_len} WAL bytes at epoch {} but the \
-             primary holds only {have}",
+        return Err(Diverged::new(format!(
+            "follower claims {follower_wal_len} WAL bytes at epoch {} but the primary \
+             holds only {have}",
             st.epoch
-        );
+        ))
+        .into());
     }
     let prefix = &wal_bytes[..follower_wal_len as usize];
     if crc32c(prefix) != follower_wal_crc {
-        bail!(
-            "diverged: follower's {follower_wal_len}-byte WAL prefix does not match the \
-             primary's at epoch {}",
+        return Err(Diverged::new(format!(
+            "follower's {follower_wal_len}-byte WAL prefix does not match the primary's \
+             at epoch {}",
             st.epoch
-        );
+        ))
+        .into());
     }
     let mut delta = &wal_bytes[follower_wal_len as usize..];
     if delta.len() > REPL_FRAMES_CAP {
@@ -664,19 +721,59 @@ fn repl_poll(
     Ok(Response::ReplFrames { epoch: st.epoch, start: follower_wal_len, bytes: delta.to_vec() })
 }
 
-/// Read `len` bytes from the head of `path`. A zero-length read never
-/// opens the file (it may legitimately not exist yet).
-fn read_prefix(vfs: &dyn Vfs, path: &Path, len: usize) -> Result<Vec<u8>> {
+/// CRC32C of the first `len` bytes of `path`, streamed in
+/// [`REPL_CHUNK_LEN`] spans — O(chunk) memory however large the file.
+/// A zero-length prefix never opens the file (it may legitimately not
+/// exist yet) and checksums to 0, matching [`crc32c`] of empty input.
+pub(crate) fn crc_file_prefix(vfs: &dyn Vfs, path: &Path, len: u64) -> Result<u32> {
     if len == 0 {
-        return Ok(Vec::new());
+        return Ok(0);
     }
     let file = vfs
         .open(path, OpenMode::Read)
         .with_context(|| format!("opening {} for replication", path.display()))?;
-    let mut buf = vec![0u8; len];
-    file.read_exact_at(&mut buf, 0)
-        .with_context(|| format!("reading {len} committed bytes of {}", path.display()))?;
-    Ok(buf)
+    let mut crc = 0u32;
+    let mut buf = vec![0u8; REPL_CHUNK_LEN.min(len as usize)];
+    let mut off = 0u64;
+    while off < len {
+        let n = buf.len().min((len - off) as usize);
+        file.read_exact_at(&mut buf[..n], off)
+            .with_context(|| format!("reading committed bytes of {}", path.display()))?;
+        crc = crc32c_extend(crc, &buf[..n]);
+        off += n as u64;
+    }
+    Ok(crc)
+}
+
+/// Stream `[base, base + len)` of `path` as [`Response::ReplChunk`]
+/// frames for `file`, read straight off the file in
+/// [`REPL_CHUNK_LEN`] spans — O(chunk) memory however large the store.
+/// A zero-length span never opens the file.
+fn stream_file_span(
+    vfs: &dyn Vfs,
+    path: &Path,
+    file: u8,
+    base: u64,
+    len: u64,
+    writer: &mut impl Write,
+) -> Result<()> {
+    if len == 0 {
+        return Ok(());
+    }
+    let f = vfs
+        .open(path, OpenMode::Read)
+        .with_context(|| format!("opening {} for replication", path.display()))?;
+    let mut off = 0u64;
+    while off < len {
+        let n = REPL_CHUNK_LEN.min((len - off) as usize);
+        let mut bytes = vec![0u8; n];
+        f.read_exact_at(&mut bytes, base + off)
+            .with_context(|| format!("reading committed bytes of {}", path.display()))?;
+        let resp = Response::ReplChunk { file, offset: base + off, bytes };
+        write_frame(writer, &encode_response(&resp))?;
+        off += n as u64;
+    }
+    Ok(())
 }
 
 /// Answer one [`Request::ReplFetch`]: stream a consistent checkpoint
@@ -684,6 +781,16 @@ fn read_prefix(vfs: &dyn Vfs, path: &Path, len: usize) -> Result<Vec<u8>> {
 /// chunks carry only bytes past the follower's verified prefix — the
 /// data file is append-only (even compaction never rewrites it), so a
 /// matching prefix never needs to travel again.
+///
+/// Only the WAL (bounded by one checkpoint interval) is materialized
+/// in memory; the index and data stream straight off their files in
+/// [`REPL_CHUNK_LEN`] spans. That is safe without holding the bytes:
+/// the data prefix is append-only, and the index's committed pages are
+/// never rewritten within their epoch — so a header re-read *after*
+/// the index stream proving the epoch never moved proves the streamed
+/// pages were consistent. If it did move, the transfer aborts with a
+/// retryable (non-diverged) error; the follower publishes nothing (it
+/// holds its header page back until `ReplDone`) and simply retries.
 fn repl_fetch(
     vfs: &dyn Vfs,
     dir: &Path,
@@ -692,63 +799,61 @@ fn repl_fetch(
     follower_data_crc: u32,
     writer: &mut impl Write,
 ) -> Result<()> {
-    // Capture index + data + WAL between two identical-epoch header
-    // reads; every field shipped below changes only at a checkpoint,
-    // so equal epochs bracket a consistent byte set.
-    let mut captured = None;
-    for _ in 0..REPL_STABLE_ATTEMPTS {
-        let Some(before) = committed_state_with(vfs, dir, pfx)? else {
-            bail!("no paged store at {}/{pfx}", dir.display());
-        };
-        let index = read_prefix(vfs, &pstore_path(dir, pfx), before.index_len() as usize)?;
-        let data = read_prefix(vfs, &pdata_path(dir, pfx), before.data_len as usize)?;
-        let (after, wal_bytes) = stable_committed_wal(vfs, dir, pfx)?;
-        if after.epoch == before.epoch {
-            captured = Some((after, index, data, wal_bytes));
-            break;
-        }
-    }
-    let Some((st, index, data, wal_bytes)) = captured else {
-        bail!(
-            "store at {}/{pfx} kept checkpointing during the transfer; follower should retry",
-            dir.display()
-        );
-    };
+    let (st, wal_bytes) = stable_committed_wal(vfs, dir, pfx)?;
     if follower_data_len > st.data_len {
-        bail!(
-            "diverged: follower claims {follower_data_len} data bytes but the primary's \
-             committed length is {}",
+        return Err(Diverged::new(format!(
+            "follower claims {follower_data_len} data bytes but the primary's committed \
+             length is {}",
             st.data_len
-        );
+        ))
+        .into());
     }
-    if follower_data_len > 0 && crc32c(&data[..follower_data_len as usize]) != follower_data_crc {
-        bail!(
-            "diverged: follower's {follower_data_len}-byte data prefix does not match the \
+    // The data file is append-only, so the follower's prefix can be
+    // checksummed (and later streamed past) without any epoch bracket.
+    if follower_data_len > 0
+        && crc_file_prefix(vfs, &pdata_path(dir, pfx), follower_data_len)? != follower_data_crc
+    {
+        return Err(Diverged::new(format!(
+            "follower's {follower_data_len}-byte data prefix does not match the \
              primary's at epoch {}",
             st.epoch
-        );
+        ))
+        .into());
     }
     let header = Response::ReplStore {
         epoch: st.epoch,
-        index_len: index.len() as u64,
+        index_len: st.index_len(),
         data_len: st.data_len,
         wal_len: wal_bytes.len() as u64,
     };
     write_frame(writer, &encode_response(&header))?;
-    let mut ship = |file: u8, base: u64, bytes: &[u8]| -> std::io::Result<()> {
-        for (i, chunk) in bytes.chunks(REPL_CHUNK_LEN).enumerate() {
-            let resp = Response::ReplChunk {
-                file,
-                offset: base + (i * REPL_CHUNK_LEN) as u64,
-                bytes: chunk.to_vec(),
-            };
-            write_frame(writer, &encode_response(&resp))?;
-        }
-        Ok(())
-    };
-    ship(REPL_FILE_INDEX, 0, &index)?;
-    ship(REPL_FILE_DATA, follower_data_len, &data[follower_data_len as usize..])?;
-    ship(REPL_FILE_WAL, 0, &wal_bytes)?;
+    stream_file_span(vfs, &pstore_path(dir, pfx), REPL_FILE_INDEX, 0, st.index_len(), writer)?;
+    // The epoch re-check that makes the un-bracketed index stream
+    // sound (see the doc comment above).
+    let now = committed_state_with(vfs, dir, pfx)?
+        .with_context(|| format!("store at {}/{pfx} vanished mid-transfer", dir.display()))?;
+    if now.epoch != st.epoch {
+        bail!(
+            "store at {}/{pfx} checkpointed during the transfer; follower should retry",
+            dir.display()
+        );
+    }
+    stream_file_span(
+        vfs,
+        &pdata_path(dir, pfx),
+        REPL_FILE_DATA,
+        follower_data_len,
+        st.data_len - follower_data_len,
+        writer,
+    )?;
+    for (i, chunk) in wal_bytes.chunks(REPL_CHUNK_LEN).enumerate() {
+        let resp = Response::ReplChunk {
+            file: REPL_FILE_WAL,
+            offset: (i * REPL_CHUNK_LEN) as u64,
+            bytes: chunk.to_vec(),
+        };
+        write_frame(writer, &encode_response(&resp))?;
+    }
     write_frame(writer, &encode_response(&Response::ReplDone))?;
     writer.flush()?;
     Ok(())

@@ -17,7 +17,13 @@
 //!   trigger checkpoint transfers, never frame-patching across a WAL
 //!   reset;
 //! * **divergence** — a follower whose bytes contradict the primary's
-//!   history gets a typed `diverged` refusal, never a silent repair;
+//!   history gets a typed refusal ([`is_diverged`] classifies it),
+//!   never a silent repair;
+//! * **the checkpoint window** — a primary frozen between a
+//!   checkpoint's header swap and its WAL truncation (header epoch
+//!   ahead of every WAL record) serves followers correctly: the stale
+//!   WAL head never ships, and no false divergence refusal strands an
+//!   honest follower;
 //! * **churn** — a threaded live writer (checkpoint + compaction
 //!   schedule) never drives the follower into divergence; transient
 //!   sync failures are retryable.
@@ -36,8 +42,8 @@ use grouper::pipeline::{
     run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
 };
 use grouper::records::Example;
-use grouper::serve::{Replica, ReplicaClientSource, ServeOptions, StoreServer};
-use grouper::store::vfs::StdVfs;
+use grouper::serve::{is_diverged, Replica, ReplicaClientSource, ServeOptions, StoreServer};
+use grouper::store::vfs::{FaultPlan, FaultVfs, MemVfs, StdVfs, Vfs};
 use grouper::tokenizer::VocabBuilder;
 
 fn tmp(name: &str) -> PathBuf {
@@ -250,8 +256,10 @@ fn diverged_followers_get_typed_refusals() {
     rogue.checkpoint().unwrap();
     drop(rogue);
     let mut replica = Replica::connect(&addr, &fdir, "data").unwrap();
-    let err = format!("{:#}", replica.sync().unwrap_err());
-    assert!(err.contains("diverged"), "expected a typed divergence refusal, got: {err}");
+    let err = replica.sync().unwrap_err();
+    assert!(is_diverged(&err), "refusal must be typed, not just worded: {err:#}");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("diverged"), "expected a typed divergence refusal, got: {msg}");
 
     // Same epoch, different WAL bytes: the prefix CRC handshake
     // catches it before any frame is shipped.
@@ -261,8 +269,10 @@ fn diverged_followers_get_typed_refusals() {
     rogue.commit().unwrap();
     drop(rogue);
     let mut replica = Replica::connect(&addr, &fdir, "data").unwrap();
-    let err = format!("{:#}", replica.sync().unwrap_err());
-    assert!(err.contains("diverged"), "expected a WAL-prefix divergence refusal, got: {err}");
+    let err = replica.sync().unwrap_err();
+    assert!(is_diverged(&err), "refusal must be typed, not just worded: {err:#}");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("diverged"), "expected a WAL-prefix divergence refusal, got: {msg}");
 
     // The primary still serves honest followers after refusing rogues.
     let fdir = tmp("grouper_repl_diverge_honest");
@@ -408,8 +418,7 @@ fn follower_converges_under_threaded_ingest_churn() {
         match replica.sync() {
             Ok(_) => syncs += 1,
             Err(e) => {
-                let msg = format!("{e:#}");
-                assert!(!msg.contains("diverged"), "churn must never diverge a follower: {msg}");
+                assert!(!is_diverged(&e), "churn must never diverge a follower: {e:#}");
                 std::thread::sleep(Duration::from_millis(10));
             }
         }
@@ -432,4 +441,99 @@ fn follower_converges_under_threaded_ingest_churn() {
     let p = committed_state_with(&StdVfs, &pdir, "data").unwrap().unwrap();
     assert_committed_prefix_equal(&pdir, &fdir, "data", p.wal_len == 0);
     assert!(replica.frames_applied() > 0, "churn should have shipped same-epoch frames");
+}
+
+/// The checkpoint window: the engine publishes a checkpoint's new
+/// header *before* truncating the WAL, so there is a durable state —
+/// and, on a live primary, a window — where the header's epoch is
+/// ahead of every WAL record's. A fault-frozen primary in exactly that
+/// state must serve an honest follower the new epoch with an empty
+/// delta (the stale WAL head never ships), and after the primary
+/// recovers and appends, the follower must keep tracking the live WAL
+/// suffix — no false `diverged` refusal, no re-seed.
+#[test]
+fn checkpoint_window_stale_wal_head_never_strands_a_follower() {
+    const PDIR: &str = "/win/p";
+    // Deterministic workload whose very last write attempt is the
+    // final checkpoint's WAL truncation (the only mutation after the
+    // header swap publishes epoch 2).
+    fn workload(vfs: &FaultVfs) -> anyhow::Result<()> {
+        let mut store = PagedStore::create_with(vfs, Path::new(PDIR), "data", 16)?;
+        store.append(b"g", &ex("before the first checkpoint"))?;
+        store.commit()?;
+        store.checkpoint()?; // epoch 1
+        store.append(b"g", &ex("committed, then checkpointed into the window"))?;
+        store.commit()?;
+        store.checkpoint()?; // epoch 2: header swap, then the WAL reset
+        Ok(())
+    }
+
+    // Count run: learn which global write attempt the truncation is.
+    let count = FaultVfs::new(Arc::new(MemVfs::new()));
+    workload(&count).unwrap();
+    let truncation = count.writes_attempted();
+
+    // Fault run: identical workload, failing exactly that truncation.
+    // The surviving image is the window state — header at epoch 2 over
+    // a WAL full of epoch-1 records.
+    let fault = FaultVfs::new(Arc::new(MemVfs::new()));
+    fault.set_plan(FaultPlan { fail_write: Some(truncation), ..Default::default() });
+    workload(&fault).unwrap_err();
+    fault.disarm();
+    let p = committed_state_with(&fault, Path::new(PDIR), "data").unwrap().unwrap();
+    assert_eq!(p.epoch, 2, "the fault must land after the header swap");
+    assert!(p.wal_len > 0, "the fault must land before the WAL truncation");
+
+    // Serve the frozen image; a fresh follower must sync cleanly to
+    // epoch 2 and must not mirror the stale head.
+    let fdir = tmp("grouper_repl_window_f");
+    let server = StoreServer::bind_with(
+        Arc::new(fault.clone()),
+        Path::new(PDIR),
+        "data",
+        "127.0.0.1:0",
+        ServeOptions::default(),
+    )
+    .unwrap();
+    let handle = server.spawn().unwrap();
+    let mut replica = Replica::connect(&handle.addr().to_string(), &fdir, "data").unwrap();
+    let r = replica.sync().unwrap();
+    assert_eq!(r.epochs, vec![2]);
+    assert_eq!(r.snapshot_transfers, 1, "cold start is still one snapshot transfer");
+    let f = committed_state_with(&StdVfs, &fdir, "data").unwrap().unwrap();
+    assert_eq!(f.epoch, 2);
+    assert_eq!(f.data_len, p.data_len);
+    assert_eq!(f.wal_len, 0, "the stale WAL head must never cross the wire");
+    let pd = fault.read(Path::new("/win/p/data.pdata")).unwrap();
+    let fd = std::fs::read(fdir.join("data.pdata")).unwrap();
+    assert!(pd[..p.data_len as usize] == fd[..f.data_len as usize], "data prefix diverged");
+
+    // Caught up: polling the window state again moves nothing and —
+    // the regression this test pins — does not refuse the follower.
+    let r = replica.sync().unwrap();
+    assert_eq!((r.frames, r.shipped_bytes, r.snapshot_transfers), (0, 0, 0));
+
+    // The primary recovers (replay skips the stale head, which stays
+    // in its WAL file) and keeps appending; the follower keeps
+    // tracking. Raw `.pwal` identity is relaxed in exactly this state:
+    // the follower holds the live suffix, which is what replay of
+    // either file reconstructs.
+    let mut store = PagedStore::open_with(&fault, Path::new(PDIR), "data", 16).unwrap();
+    store.append(b"g", &ex("appended after recovery")).unwrap();
+    store.commit().unwrap();
+    replica.sync().unwrap();
+    let p = committed_state_with(&fault, Path::new(PDIR), "data").unwrap().unwrap();
+    let f = committed_state_with(&StdVfs, &fdir, "data").unwrap().unwrap();
+    assert_eq!(f.epoch, p.epoch);
+    assert_eq!(f.data_len, p.data_len);
+    let pd = fault.read(Path::new("/win/p/data.pdata")).unwrap();
+    let fd = std::fs::read(fdir.join("data.pdata")).unwrap();
+    assert!(pd[..p.data_len as usize] == fd[..f.data_len as usize], "data prefix diverged");
+    let pw = fault.read(Path::new("/win/p/data.pwal")).unwrap();
+    let fw = std::fs::read(fdir.join("data.pwal")).unwrap();
+    assert!(f.wal_len > 0, "the recovered commit must reach the follower");
+    assert!(
+        pw[..p.wal_len as usize].ends_with(&fw[..f.wal_len as usize]),
+        "follower WAL must be the primary's live suffix"
+    );
 }
