@@ -26,7 +26,7 @@ use grouper::corpus::SyntheticTextDataset;
 use grouper::fed::trainer::build_eval_clients;
 use grouper::fed::{personalization_eval, train, TrainerConfig};
 use grouper::grouper::{partition_dataset, PartitionedDataset};
-use grouper::pipeline::{FeatureKey, PartitionOptions};
+use grouper::pipeline::{PartitionOptions, Partitioner, PartitionerSpec};
 use grouper::runtime::{ModelBackend, ModelRuntime};
 use grouper::tokenizer::VocabBuilder;
 use grouper::util::table::{write_series_csv, Table};
@@ -58,9 +58,11 @@ fn main() -> Result<()> {
     let train_ds = SyntheticTextDataset::new(DatasetSpec::fedc4_mini(groups, 42));
     let eval_ds = SyntheticTextDataset::new(DatasetSpec::fedc4_mini(eval_groups, 43)); // held-out
     if !work.join("train.gindex").exists() {
+        let by_domain: Box<dyn Partitioner> =
+            PartitionerSpec::Feature { feature: "domain".to_string() }.build()?;
         let r = partition_dataset(
             &train_ds,
-            &FeatureKey::new("domain"),
+            by_domain.as_ref(),
             &work,
             "train",
             &PartitionOptions::default(),
@@ -74,7 +76,7 @@ fn main() -> Result<()> {
         );
         partition_dataset(
             &eval_ds,
-            &FeatureKey::new("domain"),
+            by_domain.as_ref(),
             &work,
             "eval",
             &PartitionOptions::default(),

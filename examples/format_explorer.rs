@@ -15,7 +15,7 @@ use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
 use grouper::formats::streaming::{StreamingConfig, StreamingDataset};
 use grouper::formats::{HierarchicalReader, HierarchicalStore, InMemoryDataset};
 use grouper::grouper::partition_dataset;
-use grouper::pipeline::{FeatureKey, PartitionOptions};
+use grouper::pipeline::{PartitionOptions, Partitioner, PartitionerSpec};
 use grouper::util::timer::{timed, Timer};
 
 fn main() -> Result<()> {
@@ -27,17 +27,13 @@ fn main() -> Result<()> {
     let ds = SyntheticTextDataset::new(spec.clone());
 
     // Streaming materialization (grouped shards) + hierarchical layout.
+    let by_domain: Box<dyn Partitioner> =
+        PartitionerSpec::Feature { feature: "domain".to_string() }.build()?;
     let t = Timer::start();
-    partition_dataset(
-        &ds,
-        &FeatureKey::new("domain"),
-        &base,
-        "news",
-        &PartitionOptions::default(),
-    )?;
+    partition_dataset(&ds, by_domain.as_ref(), &base, "news", &PartitionOptions::default())?;
     println!("[prep] grouped shards (streaming layout):   {:.2}s", t.elapsed_secs());
     let t = Timer::start();
-    HierarchicalStore::build(&ds, &FeatureKey::new("domain"), &base, "hier", 8)?;
+    HierarchicalStore::build(&ds, by_domain.as_ref(), &base, "hier", 8)?;
     println!("[prep] arrival-order shards (hierarchical): {:.2}s  <- cheap prep, costly reads", t.elapsed_secs());
 
     // --- In-memory: arbitrary access, whole dataset resident. -----------

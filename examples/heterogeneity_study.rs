@@ -17,9 +17,7 @@ use grouper::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
 use grouper::fed::{train, TrainerConfig};
 use grouper::grouper::{partition_dataset, PartitionedDataset};
 use grouper::metrics::percentile::Summary;
-use grouper::pipeline::{
-    DirichletPartitioner, FeatureKey, PartitionOptions, Partitioner, RandomPartitioner,
-};
+use grouper::pipeline::{PartitionOptions, Partitioner, PartitionerSpec};
 use grouper::runtime::MockRuntime;
 use grouper::tokenizer::VocabBuilder;
 use grouper::util::humanize;
@@ -34,10 +32,12 @@ fn main() -> Result<()> {
     let ds = SyntheticTextDataset::new(spec);
     println!("base dataset: {} examples in {} natural domains", ds.len(), 150);
 
+    // Each partition is a typed spec, parsed from the same `--by` grammar
+    // the CLI accepts (seed 7 for the stochastic ones).
     let partitioners: Vec<(&str, Box<dyn Partitioner>)> = vec![
-        ("by-domain", Box::new(FeatureKey::new("domain"))),
-        ("random", Box::new(RandomPartitioner::new(150, 7))),
-        ("dirichlet(a=20)", Box::new(DirichletPartitioner::new(20.0, 2000, 7))),
+        ("by-domain", PartitionerSpec::parse("feature:domain", "domain", 7)?.build()?),
+        ("random", PartitionerSpec::parse("random:150", "domain", 7)?.build()?),
+        ("dirichlet(a=20)", PartitionerSpec::parse("dirichlet:20:2000", "domain", 7)?.build()?),
     ];
 
     let mut stats_table = Table::new(

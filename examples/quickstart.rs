@@ -13,7 +13,7 @@ use anyhow::Result;
 use grouper::corpus::GroupedCifarLike;
 use grouper::formats::streaming::StreamingConfig;
 use grouper::grouper::{partition_dataset, PartitionedDataset};
-use grouper::pipeline::{FeatureKey, PartitionOptions};
+use grouper::pipeline::{PartitionOptions, PartitionerSpec};
 
 fn main() -> Result<()> {
     let out = std::env::temp_dir().join("grouper_quickstart");
@@ -25,8 +25,9 @@ fn main() -> Result<()> {
     let dataset = GroupedCifarLike::standard(/*seed=*/ 0);
 
     // 2. The partition function: `get_key_fn(example) -> group_id`.
-    //    Partitioning by the label feature, exactly Listing 1.
-    let get_label_fn = FeatureKey::new("label");
+    //    Partitioning by the label feature, exactly Listing 1 — built
+    //    through the typed spec API the CLI's `--by` grammar parses into.
+    let get_label_fn = PartitionerSpec::Feature { feature: "label".to_string() }.build()?;
 
     // 3. Build + run the partitioning pipeline.
     let report = partition_dataset(

@@ -8,7 +8,7 @@ use std::path::PathBuf;
 
 use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
 use grouper::grouper::{partition_dataset, PartitionedDataset};
-use grouper::pipeline::{FeatureKey, PartitionOptions};
+use grouper::pipeline::{PartitionOptions, PartitionerSpec};
 use grouper::runtime::ModelBackend;
 use grouper::tokenizer::{VocabBuilder, WordPiece};
 
@@ -37,14 +37,10 @@ pub fn scaled(n: usize) -> usize {
 pub fn materialize(spec: &DatasetSpec, dir: &std::path::Path, prefix: &str) -> PartitionedDataset {
     if !dir.join(format!("{prefix}.gindex")).exists() {
         let ds = SyntheticTextDataset::new(spec.clone());
-        partition_dataset(
-            &ds,
-            &FeatureKey::new(spec.key_feature),
-            dir,
-            prefix,
-            &PartitionOptions::default(),
-        )
-        .unwrap();
+        let by_feature =
+            PartitionerSpec::Feature { feature: spec.key_feature.to_string() }.build().unwrap();
+        partition_dataset(&ds, by_feature.as_ref(), dir, prefix, &PartitionOptions::default())
+            .unwrap();
     }
     PartitionedDataset::open(dir, prefix).unwrap()
 }

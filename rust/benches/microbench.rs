@@ -8,13 +8,20 @@ mod common;
 use grouper::corpus::text::TextModel;
 use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
 use grouper::formats::streaming::{StreamingConfig, StreamingDataset};
-use grouper::pipeline::{run_partition, FeatureKey, PartitionOptions};
+use grouper::pipeline::{run_partition, PartitionOptions};
 use grouper::records::crc32c::crc32c;
 use grouper::records::{Example, RecordReader, RecordWriter};
 use grouper::tokenizer::VocabBuilder;
 use grouper::util::humanize::{bytes, secs};
 use grouper::util::rng::Rng;
 use grouper::util::timer::Timer;
+
+/// Build the natural by-feature partitioner through the typed spec API.
+fn by_feature(feature: &str) -> Box<dyn grouper::pipeline::Partitioner> {
+    grouper::pipeline::PartitionerSpec::Feature { feature: feature.to_string() }
+        .build()
+        .unwrap()
+}
 
 fn bench<F: FnMut()>(name: &str, work_bytes: usize, iters: usize, mut f: F) {
     // warmup
@@ -102,7 +109,7 @@ fn main() {
     spec.max_group_words = 30_000;
     let ds = SyntheticTextDataset::new(spec);
     if !dir.join("s.gindex").exists() {
-        run_partition(&ds, &FeatureKey::new("domain"), &dir, "s", &PartitionOptions::default())
+        run_partition(&ds, by_feature("domain").as_ref(), &dir, "s", &PartitionOptions::default())
             .unwrap();
     }
     let payload: u64 = {
@@ -131,7 +138,7 @@ fn main() {
         let t = Timer::start();
         run_partition(
             &ds,
-            &FeatureKey::new("domain"),
+            by_feature("domain").as_ref(),
             &out,
             "p",
             &PartitionOptions { num_workers: workers, ..Default::default() },

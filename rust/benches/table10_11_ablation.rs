@@ -19,12 +19,20 @@ use grouper::config::{FedAlgorithm, FedConfig, ScheduleKind};
 use grouper::corpus::DatasetSpec;
 use grouper::fed::trainer::build_eval_clients;
 use grouper::fed::{personalization_eval, train, TrainerConfig};
+use grouper::pipeline::{
+    heterogeneity, observations_from_index, ModmFitOptions, ModmModel, Partitioner,
+    PartitionerSpec,
+};
 use grouper::runtime::ModelRuntime;
 use grouper::util::table::Table;
+use grouper::util::timer::Timer;
 
 const TAUS: [usize; 4] = [1, 4, 8, 16];
 
 fn main() {
+    // Table 10b needs no PJRT artifacts — run it before the gate so the
+    // CI smoke job gets scenario trend points on every push.
+    table10b_scenario_ablation();
     if !common::have_artifacts("tiny") {
         return;
     }
@@ -124,4 +132,80 @@ fn main() {
     println!("paper reference (tau = 1/4/16/64):");
     println!("  T10 FedAvg pre -/4.2/4.8/5.2, post -/1.9/0.009/0.008; FedSGD pre -/4.4/4.4/4.2, post -/3.4/3.4/3.3");
     println!("  T11 FedAvg pre 3.6/3.8/4.3/5.2, post 3.8/0.006/0.007/0.007; FedSGD pre 3.6/3.7/3.9/4.2, post 3.9/3.5/3.3/3.3");
+}
+
+/// Table 10b: scenario-knob ablation (no PJRT needed). Two sweeps over
+/// the same FedC4-mini base: the Dirichlet concentration (how fast skew
+/// decays with alpha) and the MoDM component count (what a 1/2/3-mixture
+/// fit to the natural by-feature population costs and reproduces).
+fn table10b_scenario_ablation() {
+    use std::collections::BTreeMap;
+
+    use grouper::corpus::{BaseDataset, SyntheticTextDataset};
+
+    let dir = common::bench_dir("table10_scenarios");
+    let spec = DatasetSpec::fedc4_mini(common::scaled(300), 42);
+    let ds = SyntheticTextDataset::new(spec.clone());
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+
+    // -- Dirichlet alpha sweep: skew vs concentration (in-memory pass).
+    let mut t = Table::new(
+        "Table 10b — Dirichlet concentration sweep (FedC4-mini base)",
+        &["alpha", "groups", "p90/p10", "Gini"],
+    );
+    for alpha in [1.0f64, 10.0, 100.0] {
+        let p = PartitionerSpec::Dirichlet { alpha, max_groups: 2000, seed: 7 }
+            .build()
+            .unwrap();
+        let mut sizes: BTreeMap<Vec<u8>, u64> = BTreeMap::new();
+        for ex in ds.examples() {
+            *sizes.entry(p.key(&ex)).or_insert(0) += 1;
+        }
+        let h = heterogeneity(&sizes.values().copied().collect::<Vec<_>>(), None);
+        t.row(vec![
+            format!("{alpha}"),
+            format!("{}", h.num_groups),
+            format!("{:.1}x", h.size_ratio),
+            format!("{:.3}", h.size_gini),
+        ]);
+        let tag = format!("dirichlet.alpha{alpha}");
+        metrics.push((format!("{tag}.groups"), h.num_groups as f64));
+        metrics.push((format!("{tag}.size_p90_over_p10"), h.size_ratio));
+        metrics.push((format!("{tag}.size_gini"), h.size_gini));
+    }
+    t.print();
+    t.write_csv("results/table10b_dirichlet_sweep.csv").unwrap();
+
+    // -- MoDM component sweep: fit the natural population, then check
+    //    what each mixture size reproduces generatively.
+    let pd = common::materialize(&spec, &dir, "nat");
+    let obs = observations_from_index(pd.index());
+    let h_nat = heterogeneity(&obs.iter().map(|o| o.size).collect::<Vec<_>>(), None);
+    let mut t = Table::new(
+        "Table 10b — MoDM component sweep (fit to the by-feature population)",
+        &["components", "fit (s)", "sampled p90/p10", "sampled Gini", "natural Gini"],
+    );
+    for components in [1usize, 2, 3] {
+        let timer = Timer::start();
+        let model =
+            ModmModel::fit(&obs, &ModmFitOptions { components, iterations: 40, seed: 0 })
+                .unwrap();
+        let fit_secs = timer.elapsed_secs();
+        let sampled = model.sample_observations(obs.len(), 9);
+        let h = heterogeneity(&sampled.iter().map(|o| o.size).collect::<Vec<_>>(), None);
+        t.row(vec![
+            format!("{components}"),
+            format!("{fit_secs:.3}"),
+            format!("{:.1}x", h.size_ratio),
+            format!("{:.3}", h.size_gini),
+            format!("{:.3}", h_nat.size_gini),
+        ]);
+        metrics.push((format!("modm.fit_c{components}_s"), fit_secs));
+        metrics.push((format!("modm.c{components}.sample_gini"), h.size_gini));
+        metrics.push((format!("modm.c{components}.sample_p90_over_p10"), h.size_ratio));
+    }
+    metrics.push(("modm.natural_gini".to_string(), h_nat.size_gini));
+    t.print();
+    t.write_csv("results/table10b_modm_sweep.csv").unwrap();
+    common::write_bench_json("table10_scenarios", &metrics);
 }

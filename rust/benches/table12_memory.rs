@@ -19,10 +19,17 @@ use grouper::formats::streaming::{StreamingConfig, StreamingDataset};
 use grouper::formats::{
     HierarchicalReader, HierarchicalStore, InMemoryDataset, PagedReader, PagedStore,
 };
-use grouper::pipeline::{run_partition, FeatureKey, PartitionOptions};
+use grouper::pipeline::{run_partition, PartitionOptions};
 use grouper::util::alloc::{measure_peak, CountingAlloc};
 use grouper::util::humanize::bytes;
 use grouper::util::table::Table;
+
+/// Build the natural by-feature partitioner through the typed spec API.
+fn by_feature(feature: &str) -> Box<dyn grouper::pipeline::Partitioner> {
+    grouper::pipeline::PartitionerSpec::Feature { feature: feature.to_string() }
+        .build()
+        .unwrap()
+}
 
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc;
@@ -55,16 +62,16 @@ fn main() {
         if !dir.join("grouped.gindex").exists() {
             run_partition(
                 ds,
-                &FeatureKey::new(key),
+                by_feature(key).as_ref(),
                 &dir,
                 "grouped",
                 &PartitionOptions { count_words: key != "label", ..Default::default() },
             )
             .unwrap();
-            HierarchicalStore::build(ds, &FeatureKey::new(key), &dir, "hier", 8).unwrap();
+            HierarchicalStore::build(ds, by_feature(key).as_ref(), &dir, "hier", 8).unwrap();
         }
         if !dir.join("paged.pstore").exists() {
-            PagedStore::build(ds, &FeatureKey::new(key), &dir, "paged", PAGED_CACHE_PAGES)
+            PagedStore::build(ds, by_feature(key).as_ref(), &dir, "paged", PAGED_CACHE_PAGES)
                 .unwrap();
         }
 
@@ -147,7 +154,7 @@ fn table12c_sharded_footprint(bench_metrics: &mut Vec<(String, f64)>) {
         let _ = std::fs::remove_dir_all(&dir);
         run_partition_paged(
             &ds,
-            &FeatureKey::new("domain"),
+            by_feature("domain").as_ref(),
             &dir,
             "data",
             &PartitionOptions::default(),

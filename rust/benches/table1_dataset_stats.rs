@@ -5,13 +5,19 @@
 //! counts ~1000x smaller; per-group distributions keep the paper's fitted
 //! log-normal parameters, so medians/percentiles land near the paper's
 //! values — see EXPERIMENTS.md §Table1 for the comparison).
+//!
+//! Table 1b re-partitions one base corpus under every registry scenario
+//! and reports the resulting heterogeneity (size skew, Gini, label
+//! divergence) — the paper's "same data, different population" knob.
 
 mod common;
 
-use grouper::corpus::DatasetSpec;
+use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
 use grouper::grouper::dataset_statistics;
+use grouper::pipeline::{builtin_scenarios, run_partition_request, PartitionRequest};
 use grouper::util::humanize::count;
 use grouper::util::table::{write_series_csv, Table};
+use grouper::util::timer::Timer;
 
 fn main() {
     let dir = common::bench_dir("table1");
@@ -80,4 +86,64 @@ fn main() {
     )
     .unwrap();
     println!("paper reference (Table 6 medians): FedC4 815, FedWiki 198, FedBookCO 52K, FedCCnews 5K");
+
+    table1b_scenario_heterogeneity(&dir);
+}
+
+/// Table 1b: one base corpus, every registry scenario — materialize each
+/// through the paged sink and measure the population it induces.
+fn table1b_scenario_heterogeneity(dir: &std::path::Path) {
+    let spec = DatasetSpec::fedccnews_mini(common::scaled(300), 42);
+    let ds = SyntheticTextDataset::new(spec);
+    let mut table = Table::new(
+        "Table 1b — scenario heterogeneity (FedCCnews-mini base)",
+        &["Scenario", "Groups", "ex/g median", "p90/p10", "Gini", "label JS (nats)", "mat (s)"],
+    );
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    for (i, s) in builtin_scenarios("domain", 42).into_iter().enumerate() {
+        let sub = dir.join("scenarios").join(&s.name);
+        let _ = std::fs::remove_dir_all(&sub);
+        let p = s.spec.build().unwrap();
+        let t = Timer::start();
+        run_partition_request(&ds, p.as_ref(), &sub, "data", &PartitionRequest::paged(2, 64))
+            .unwrap();
+        let mat_secs = t.elapsed_secs();
+        let h = grouper::pipeline::characterize_paged(&sub, "data", 64, s.spec.label_feature())
+            .unwrap();
+        table.row(vec![
+            s.name.clone(),
+            format!("{}", h.num_groups),
+            count(h.sizes.median),
+            format!("{:.1}x", h.size_ratio),
+            format!("{:.3}", h.size_gini),
+            h.label_divergence.map(|d| format!("{d:.3}")).unwrap_or_else(|| "-".into()),
+            format!("{mat_secs:.2}"),
+        ]);
+        rows.push(vec![
+            i as f64,
+            h.num_groups as f64,
+            h.size_ratio,
+            h.size_gini,
+            h.label_divergence.unwrap_or(-1.0),
+            mat_secs,
+        ]);
+        metrics.push((format!("scenario.{}.materialize_s", s.name), mat_secs));
+        metrics.push((format!("scenario.{}.groups", s.name), h.num_groups as f64));
+        metrics.push((format!("scenario.{}.size_p90_over_p10", s.name), h.size_ratio));
+        metrics.push((format!("scenario.{}.size_gini", s.name), h.size_gini));
+        if let Some(d) = h.label_divergence {
+            metrics.push((format!("scenario.{}.label_js_nats", s.name), d));
+        }
+        let _ = std::fs::remove_dir_all(&sub);
+    }
+    table.print();
+    table.write_csv("results/table1b_scenario_heterogeneity.csv").unwrap();
+    write_series_csv(
+        "results/table1b_scenario_series.csv",
+        &["scenario_idx", "groups", "p90_over_p10", "gini", "label_js_nats", "materialize_s"],
+        &rows,
+    )
+    .unwrap();
+    common::write_bench_json("table1_heterogeneity", &metrics);
 }

@@ -28,7 +28,7 @@ use grouper::formats::{
     ShardedPagedReader,
 };
 use grouper::pipeline::{
-    run_partition, run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
+    run_partition, run_partition_paged, PagedPartitionOptions, PartitionOptions,
 };
 use grouper::store::cache::CachePolicy;
 use grouper::store::shared::ReadOpts;
@@ -51,22 +51,29 @@ struct Workload {
     examples: usize,
 }
 
+/// Build the natural by-feature partitioner through the typed spec API.
+fn by_feature(feature: &str) -> Box<dyn grouper::pipeline::Partitioner> {
+    grouper::pipeline::PartitionerSpec::Feature { feature: feature.to_string() }
+        .build()
+        .unwrap()
+}
+
 fn prepare(name: &str, ds: &dyn BaseDataset, key: &str) -> Workload {
     let dir = common::bench_dir("table3").join(name);
     let count_words = key != "label";
     if !dir.join("grouped.gindex").exists() {
         run_partition(
             ds,
-            &FeatureKey::new(key),
+            by_feature(key).as_ref(),
             &dir,
             "grouped",
             &PartitionOptions { count_words, ..Default::default() },
         )
         .unwrap();
-        HierarchicalStore::build(ds, &FeatureKey::new(key), &dir, "hier", 8).unwrap();
+        HierarchicalStore::build(ds, by_feature(key).as_ref(), &dir, "hier", 8).unwrap();
     }
     if !dir.join("paged.pstore").exists() {
-        PagedStore::build(ds, &FeatureKey::new(key), &dir, "paged", PAGED_CACHE_PAGES)
+        PagedStore::build(ds, by_feature(key).as_ref(), &dir, "paged", PAGED_CACHE_PAGES)
             .unwrap();
     }
     Workload { name: name.to_string().leak(), dir, examples: ds.len() }
@@ -368,7 +375,7 @@ fn table3d_sharded(bench_metrics: &mut Vec<(String, f64)>) -> Vec<common::ShardR
         let paged = PagedPartitionOptions { shards, cache_pages: 64, hash_seed: 0 };
         let report = run_partition_paged(
             &ds,
-            &FeatureKey::new("domain"),
+            by_feature("domain").as_ref(),
             &dir,
             "data",
             &PartitionOptions::default(),

@@ -15,6 +15,13 @@ use grouper::runtime::ModelRuntime;
 use grouper::util::table::Table;
 use grouper::util::timer::MeanStd;
 
+/// Build the natural by-feature partitioner through the typed spec API.
+fn by_feature(feature: &str) -> Box<dyn grouper::pipeline::Partitioner> {
+    grouper::pipeline::PartitionerSpec::Feature { feature: feature.to_string() }
+        .build()
+        .unwrap()
+}
+
 fn main() {
     // Tables 4c/4d/4e need no model artifacts (4c/4d time only the data
     // phase; 4e trains on the mock runtime), so they run even where
@@ -120,9 +127,7 @@ fn table4c_sharded_cohort_fetch() {
     use grouper::corpus::SyntheticTextDataset;
     use grouper::fed::trainer::{fetch_cohort_sharded, CohortFetchSpec};
     use grouper::formats::ShardedPagedReader;
-    use grouper::pipeline::{
-        run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
-    };
+    use grouper::pipeline::{run_partition_paged, PagedPartitionOptions, PartitionOptions};
     use grouper::tokenizer::VocabBuilder;
     use grouper::util::rng::Rng;
     use grouper::util::threadpool::ThreadPool;
@@ -154,7 +159,7 @@ fn table4c_sharded_cohort_fetch() {
         if !dir.join("data.pset").exists() {
             run_partition_paged(
                 &ds,
-                &FeatureKey::new(ds.spec.key_feature),
+                by_feature(ds.spec.key_feature).as_ref(),
                 &dir,
                 "data",
                 &PartitionOptions::default(),
@@ -197,9 +202,7 @@ fn table4c_sharded_cohort_fetch() {
 fn table4d_remote_cohort_fetch() {
     use grouper::corpus::SyntheticTextDataset;
     use grouper::fed::ClientSource;
-    use grouper::pipeline::{
-        run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
-    };
+    use grouper::pipeline::{run_partition_paged, PagedPartitionOptions, PartitionOptions};
     use grouper::serve::{RemoteClientSource, ServeOptions, StoreServer};
     use grouper::util::rng::Rng;
     use grouper::util::timer::time_trials;
@@ -213,7 +216,7 @@ fn table4d_remote_cohort_fetch() {
     let _ = std::fs::remove_dir_all(&dir);
     run_partition_paged(
         &ds,
-        &FeatureKey::new(ds.spec.key_feature),
+        by_feature(ds.spec.key_feature).as_ref(),
         &dir,
         "data",
         &PartitionOptions::default(),
@@ -292,9 +295,7 @@ fn table4d_remote_cohort_fetch() {
 fn table4g_replica_cohort_fetch() {
     use grouper::corpus::SyntheticTextDataset;
     use grouper::fed::ClientSource;
-    use grouper::pipeline::{
-        run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
-    };
+    use grouper::pipeline::{run_partition_paged, PagedPartitionOptions, PartitionOptions};
     use grouper::serve::{RemoteClientSource, ReplicaClientSource, ServeOptions, StoreServer};
     use grouper::util::rng::Rng;
     use grouper::util::timer::time_trials;
@@ -316,7 +317,7 @@ fn table4g_replica_cohort_fetch() {
         let _ = std::fs::remove_dir_all(&dir);
         run_partition_paged(
             &ds,
-            &FeatureKey::new(ds.spec.key_feature),
+            by_feature(ds.spec.key_feature).as_ref(),
             &dir,
             "data",
             &PartitionOptions::default(),
@@ -479,7 +480,6 @@ fn table4e_live_ingest() {
     use grouper::fed::source::{ClientSource, RefreshingSource};
     use grouper::fed::{train_with_source, IngestConfig, IngestRunner, IngestTarget};
     use grouper::formats::{PagedReader, PagedStore};
-    use grouper::pipeline::FeatureKey;
     use grouper::runtime::MockRuntime;
     use grouper::tokenizer::VocabBuilder;
     use std::sync::Arc;
@@ -508,9 +508,14 @@ fn table4e_live_ingest() {
             let label = if prefetch { "on" } else { "off" };
             let dir = common::bench_dir("table4e").join(format!("r{rate_mult}_p{label}"));
             let _ = std::fs::remove_dir_all(&dir);
-            let store =
-                PagedStore::build(&ds, &FeatureKey::new(ds.spec.key_feature), &dir, "live", 64)
-                    .unwrap();
+            let store = PagedStore::build(
+                &ds,
+                by_feature(ds.spec.key_feature).as_ref(),
+                &dir,
+                "live",
+                64,
+            )
+            .unwrap();
 
             // The builder's store handle *is* the single live writer;
             // hand it straight to the ingest thread (~20 steps/s). At

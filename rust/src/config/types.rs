@@ -60,6 +60,10 @@ pub struct DataConfig {
     pub seed: u64,
     /// Held-out validation groups (disjoint seed).
     pub num_eval_groups: usize,
+    /// Partition scenario for the train split: a registry name
+    /// (`label-skew`, `pathological`, ...) or a scenario `.toml` path.
+    /// `None` keeps the dataset's natural by-feature grouping.
+    pub scenario: Option<String>,
 }
 
 impl Default for DataConfig {
@@ -70,6 +74,7 @@ impl Default for DataConfig {
             num_shards: 8,
             seed: 42,
             num_eval_groups: 100,
+            scenario: None,
         }
     }
 }
@@ -177,6 +182,9 @@ impl ExperimentConfig {
         if let Some(v) = geti("data.num_eval_groups") {
             cfg.data.num_eval_groups = v as usize;
         }
+        if let Some(v) = gets("data.scenario") {
+            cfg.data.scenario = Some(v);
+        }
         if let Some(v) = gets("fed.algorithm") {
             cfg.fed.algorithm = v.parse()?;
         }
@@ -226,6 +234,11 @@ impl ExperimentConfig {
         if !known.contains(&self.data.dataset.as_str()) {
             bail!("unknown dataset {:?}; have {:?}", self.data.dataset, known);
         }
+        if let Some(s) = &self.data.scenario {
+            if s.is_empty() {
+                bail!("data.scenario must name a scenario or a .toml path, not be empty");
+            }
+        }
         Ok(())
     }
 }
@@ -267,6 +280,14 @@ schedule = "warmup_cosine"
         assert_eq!(cfg.fed.schedule, ScheduleKind::WarmupCosine);
         assert_eq!(cfg.data.num_groups, 300);
         assert_eq!(cfg.fed.tau, 4);
+    }
+
+    #[test]
+    fn scenario_field_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml_str("[data]\nscenario = \"label-skew\"\n").unwrap();
+        assert_eq!(cfg.data.scenario.as_deref(), Some("label-skew"));
+        assert_eq!(ExperimentConfig::default().data.scenario, None);
+        assert!(ExperimentConfig::from_toml_str("[data]\nscenario = \"\"\n").is_err());
     }
 
     #[test]

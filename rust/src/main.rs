@@ -3,7 +3,9 @@
 //! Subcommands (a hand-rolled parser; the offline registry has no clap):
 //!
 //! ```text
-//! grouper partition --dataset fedc4-mini --groups 500 --out work/fedc4 [--by feature|random:N|dirichlet:A]
+//! grouper partition --dataset fedc4-mini --groups 500 --out work/fedc4
+//!                   [--by feature[:F]|random:N|dirichlet:A[:G]|pathological:G:K[:L]|temporal:P[:F]]
+//!                   [--scenario NAME|file.toml]
 //!                   [--format streaming|paged|hierarchical] [--cache-pages N]
 //!                   [--shards S] [--auto-compact-threshold F]
 //! grouper stats     --dir work/fedc4 --prefix data [--format streaming|paged] [--cache-pages N]
@@ -96,8 +98,9 @@ use grouper::formats::{
 };
 use grouper::grouper::{dataset_statistics, partition_dataset, PartitionedDataset};
 use grouper::pipeline::{
-    run_partition_paged, DirichletPartitioner, FeatureKey, PagedPartitionOptions,
-    PartitionOptions, Partitioner, RandomPartitioner,
+    characterize_paged, heterogeneity_of_index, resolve_scenario, run_partition_request,
+    GroupIndex, HeterogeneityReport, PartitionOptions, Partitioner, PartitionerSpec,
+    PartitionRequest, Scenario, SinkOptions, SinkReport,
 };
 use grouper::runtime::{ModelBackend, ModelRuntime};
 use grouper::serve::{
@@ -151,6 +154,14 @@ fn print_usage() {
         "grouper — scalable dataset pipelines for group-structured learning\n\n\
          commands:\n\
          \u{20}  partition    materialize a group-structured dataset\n\
+         \u{20}               --by feature[:F] | random:N | dirichlet:ALPHA[:G] |\n\
+         \u{20}               pathological:G:K[:L] | temporal:PERIOD[:F] picks the\n\
+         \u{20}               partitioner inline; --scenario NAME|file.toml picks a\n\
+         \u{20}               registry scenario instead (by-feature, iid, dirichlet,\n\
+         \u{20}               pathological, quantity-skew, label-skew, temporal —\n\
+         \u{20}               MoDM scenarios sample mixture-of-Dirichlet-multinomial\n\
+         \u{20}               populations) and prints heterogeneity stats after\n\
+         \u{20}               materializing\n\
          \u{20}               --format streaming (default) | paged | hierarchical\n\
          \u{20}               paged = appendable WAL-backed store over the paged\n\
          \u{20}               storage engine; --cache-pages N bounds its LRU page\n\
@@ -296,17 +307,41 @@ fn make_dataset(name: &str, groups: usize, seed: u64) -> Result<SyntheticTextDat
     Ok(SyntheticTextDataset::new(spec))
 }
 
-fn make_partitioner(spec: &str, key_feature: &str, seed: u64) -> Result<Box<dyn Partitioner>> {
-    if spec == "feature" {
-        return Ok(Box::new(FeatureKey::new(key_feature)));
+/// The `--scenario` / `--by` resolution shared by `partition` and
+/// `train`: a scenario names a full spec (and brings provenance); `--by`
+/// is the inline spec grammar. Both end in the same typed
+/// [`PartitionerSpec`] — parse → validate → build.
+fn resolve_partition_spec(
+    f: &Flags,
+    key_feature: &str,
+    seed: u64,
+) -> Result<(PartitionerSpec, Option<Scenario>)> {
+    match (f.get("scenario"), f.get("by")) {
+        (Some(_), Some(_)) => {
+            bail!("--scenario and --by are mutually exclusive; a scenario already names a spec")
+        }
+        (Some(arg), None) => {
+            let s = resolve_scenario(arg, key_feature, seed)?;
+            Ok((s.spec.clone(), Some(s)))
+        }
+        (None, by) => {
+            let spec = PartitionerSpec::parse(by.unwrap_or("feature"), key_feature, seed)?;
+            Ok((spec, None))
+        }
     }
-    if let Some(n) = spec.strip_prefix("random:") {
-        return Ok(Box::new(RandomPartitioner::new(n.parse()?, seed)));
-    }
-    if let Some(a) = spec.strip_prefix("dirichlet:") {
-        return Ok(Box::new(DirichletPartitioner::new(a.parse()?, 10_000, seed)));
-    }
-    bail!("--by must be feature | random:N | dirichlet:ALPHA")
+}
+
+fn print_heterogeneity(r: &HeterogeneityReport) {
+    let label = match r.label_divergence {
+        Some(d) => format!(", label JS divergence {d:.3} nats"),
+        None => String::new(),
+    };
+    println!(
+        "heterogeneity: {} groups / {} examples; group size p10 {:.0} median {:.0} p90 {:.0} \
+         (p90/p10 {:.1}x, gini {:.3}){label}",
+        r.num_groups, r.num_examples, r.sizes.p10, r.sizes.median, r.sizes.p90, r.size_ratio,
+        r.size_gini
+    );
 }
 
 fn cmd_partition(f: &Flags) -> Result<()> {
@@ -322,7 +357,11 @@ fn cmd_partition(f: &Flags) -> Result<()> {
         f.usize_or("cache-pages", grouper::formats::paged::DEFAULT_CACHE_PAGES)?;
 
     let ds = make_dataset(name, groups, seed)?;
-    let p = make_partitioner(f.get_or("by", "feature"), ds.spec.key_feature, seed)?;
+    let (spec, scenario) = resolve_partition_spec(f, ds.spec.key_feature, seed)?;
+    let p = spec.build()?;
+    if let Some(s) = &scenario {
+        println!("scenario {}: {}", s.name, s.description);
+    }
     println!(
         "partitioning {name} ({} groups, {} examples) by {} into {} [{format}]",
         groups,
@@ -330,22 +369,30 @@ fn cmd_partition(f: &Flags) -> Result<()> {
         p.name(),
         out.display()
     );
+    let mut req = PartitionRequest::default();
+    if workers > 0 {
+        req.num_workers = workers;
+    }
     match format {
         "streaming" => {
-            let mut opts = PartitionOptions { num_shards: shards, ..Default::default() };
-            if workers > 0 {
-                opts.num_workers = workers;
-            }
-            let report = partition_dataset(&ds, p.as_ref(), &out, &prefix, &opts)?;
+            req.sink = SinkOptions::Streaming { num_shards: shards };
+            let report = run_partition_request(&ds, p.as_ref(), &out, &prefix, &req)?;
+            let SinkReport::Streaming { index_path, total_words, .. } = &report.sink else {
+                unreachable!("streaming sink produced a non-streaming report");
+            };
             println!(
                 "done: {} examples -> {} groups, {} words, map {:.2}s group {:.2}s ({:.2}s total)",
                 report.num_examples,
                 report.num_groups,
-                humanize::count(report.total_words as f64),
+                humanize::count(*total_words as f64),
                 report.map_secs,
                 report.group_secs,
                 report.wall_secs
             );
+            if scenario.is_some() {
+                let index = GroupIndex::read(index_path)?;
+                print_heterogeneity(&heterogeneity_of_index(&index));
+            }
         }
         "paged" => {
             // For paged output, --shards counts *stores*, not TFRecord
@@ -355,25 +402,28 @@ fn cmd_partition(f: &Flags) -> Result<()> {
             if paged_shards == 0 {
                 bail!("--shards must be at least 1");
             }
-            let mut opts = PartitionOptions::default();
-            if workers > 0 {
-                opts.num_workers = workers;
-            }
-            let paged_opts =
-                PagedPartitionOptions { shards: paged_shards, cache_pages, hash_seed: 0 };
-            let report = run_partition_paged(&ds, p.as_ref(), &out, &prefix, &opts, &paged_opts)?;
+            req.sink = SinkOptions::Paged { shards: paged_shards, cache_pages, hash_seed: 0 };
+            let report = run_partition_request(&ds, p.as_ref(), &out, &prefix, &req)?;
+            let SinkReport::Paged { shards: built_shards, shard_stats, .. } = &report.sink
+            else {
+                unreachable!("paged sink produced a non-paged report");
+            };
             println!(
                 "done: {} examples -> {} groups across {} paged shard store(s) \
                  ({}/{prefix}.pset; cache {cache_pages} pages/shard), \
                  map {:.2}s group {:.2}s ({:.2}s total)",
                 report.num_examples,
                 report.num_groups,
-                report.shards,
+                built_shards,
                 out.display(),
                 report.map_secs,
                 report.group_secs,
                 report.wall_secs
             );
+            if scenario.is_some() {
+                let r = characterize_paged(&out, &prefix, cache_pages, spec.label_feature())?;
+                print_heterogeneity(&r);
+            }
             if let Some(threshold) = f.get("auto-compact-threshold") {
                 let threshold: f64 = threshold
                     .parse()
@@ -381,7 +431,7 @@ fn cmd_partition(f: &Flags) -> Result<()> {
                 // The report carries the final per-shard stats, so the
                 // threshold check is free; the set is reopened only when
                 // compaction actually runs.
-                let stats = &report.shard_stats;
+                let stats = shard_stats;
                 let free: u64 = stats.iter().map(|s| u64::from(s.free_pages)).sum();
                 let total: u64 = stats.iter().map(|s| u64::from(s.total_pages)).sum();
                 let frac = if total == 0 { 0.0 } else { free as f64 / total as f64 };
@@ -894,9 +944,20 @@ fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
     let ds = make_dataset(&cfg.data.dataset, cfg.data.num_groups, cfg.data.seed)?;
     if source_spec.is_none() && !work.join("train.gindex").exists() {
         println!("materializing train split into {}", work.display());
+        // `data.scenario` in the config picks a registry scenario (or a
+        // scenario .toml path) for the train split; the default remains
+        // the dataset's natural by-feature grouping.
+        let spec = match &cfg.data.scenario {
+            Some(name) => {
+                let s = resolve_scenario(name, ds.spec.key_feature, cfg.data.seed)?;
+                println!("train split scenario {}: {}", s.name, s.description);
+                s.spec
+            }
+            None => PartitionerSpec::Feature { feature: ds.spec.key_feature.to_string() },
+        };
         partition_dataset(
             &ds,
-            &FeatureKey::new(ds.spec.key_feature),
+            spec.build()?.as_ref(),
             &work,
             "train",
             &PartitionOptions { num_shards: cfg.data.num_shards, ..Default::default() },
@@ -908,9 +969,14 @@ fn cmd_train(f: &Flags, personalize: bool) -> Result<()> {
         cfg.data.seed ^ 0x5EED_E7A1,
     )?;
     if f.get("eval-source").is_none() && !work.join("eval.gindex").exists() {
+        // Eval clients always keep the natural grouping: personalization
+        // metrics compare against real per-group distributions, not a
+        // synthetic scenario.
+        let eval_spec =
+            PartitionerSpec::Feature { feature: eval_ds.spec.key_feature.to_string() };
         partition_dataset(
             &eval_ds,
-            &FeatureKey::new(eval_ds.spec.key_feature),
+            eval_spec.build()?.as_ref(),
             &work,
             "eval",
             &PartitionOptions { num_shards: cfg.data.num_shards, ..Default::default() },

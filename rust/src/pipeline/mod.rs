@@ -32,14 +32,30 @@
 //! (one WAL per shard), producing `<prefix>.pset` +
 //! `<prefix>-sSSSSS-of-TTTTT.{pstore,pdata,pwal}` — see
 //! [`crate::formats::paged_sharded`].
+//!
+//! Partitioners are constructed from a typed [`partition::PartitionerSpec`]
+//! (parse → validate → build), and named bundles of spec + provenance live
+//! in the [`scenario`] registry — `grouper partition --scenario label-skew`
+//! end to end.
 
 pub mod index;
 pub mod partition;
 pub mod runner;
+pub mod scenario;
 
 pub use index::{GroupIndex, GroupIndexEntry};
-pub use partition::{DirichletPartitioner, FeatureKey, Partitioner, RandomPartitioner};
+pub use partition::{
+    label_of, DirichletPartitioner, FeatureKey, GroupObservation, ModmComponent,
+    ModmFitOptions, ModmModel, ModmPartitioner, ModmSpec, Partitioner, PartitionerSpec,
+    PathologicalPartitioner, RandomPartitioner, SpecError, TemporalPartitioner,
+    DEFAULT_DIRICHLET_MAX_GROUPS,
+};
 pub use runner::{
-    run_partition, run_partition_paged, PagedPartitionOptions, PagedPartitionReport,
-    PartitionOptions, PartitionReport,
+    run_partition, run_partition_paged, run_partition_request, PagedPartitionOptions,
+    PagedPartitionReport, PartitionOptions, PartitionReport, PartitionRequest,
+    PartitionSummary, SinkOptions, SinkReport,
+};
+pub use scenario::{
+    builtin_scenarios, characterize_paged, heterogeneity, heterogeneity_of_index,
+    load_scenario, observations_from_index, resolve_scenario, HeterogeneityReport, Scenario,
 };

@@ -12,9 +12,30 @@
 //! All partitioners are stateless per example — the formal trade-off the
 //! paper makes for scalability (§3.2): assignment of example `x` may not
 //! depend on the assignment of example `y`.
+//!
+//! Beyond the three canonical implementations, this module carries the
+//! scenario-suite partitioners (see `pipeline/scenario.rs`):
+//!
+//! * [`PathologicalPartitioner`] — the classic pathological non-IID
+//!   split: each group sees only `classes_per_group` of the label space;
+//! * [`TemporalPartitioner`] — one group per window of an integer
+//!   time/sequence feature;
+//! * [`ModmPartitioner`] — Mixtures of Dirichlet-Multinomials (Scott &
+//!   Cahill, arXiv 2406.02416): [`ModmModel::fit`] fits mixture weights
+//!   to an observed group-size/label histogram with deterministic EM,
+//!   and the partitioner samples a synthetic population from the model,
+//!   keeping only O(groups) state so millions-of-groups populations fit
+//!   in memory.
+//!
+//! Construction goes through [`PartitionerSpec`]: `parse` (the CLI
+//! `--by` grammar) → `validate` (typed [`SpecError`]s, never panics) →
+//! `build() -> Box<dyn Partitioner>`.
 
-use crate::records::Example;
-use crate::util::rng::Rng;
+use std::fmt;
+
+use crate::records::{Example, Feature};
+use crate::util::rng::{fnv1a, Rng};
+use crate::util::special::ln_gamma;
 
 /// An embarrassingly parallel partition function.
 pub trait Partitioner: Send + Sync {
@@ -101,8 +122,31 @@ pub struct DirichletPartitioner {
 }
 
 impl DirichletPartitioner {
+    /// Panicking convenience over [`DirichletPartitioner::try_new`] for
+    /// call sites with statically-known-good parameters (tests, benches).
+    /// Anything handling user input goes through [`PartitionerSpec`],
+    /// which surfaces the typed error instead.
     pub fn new(alpha: f64, max_groups: usize, seed: u64) -> Self {
-        assert!(alpha > 0.0 && max_groups > 0);
+        Self::try_new(alpha, max_groups, seed).expect("invalid DirichletPartitioner parameters")
+    }
+
+    /// Validating constructor: rejects non-finite or non-positive
+    /// `alpha` (NaN used to panic through an assert; zero/negative
+    /// alpha would degenerate the stick-breaking draws) and a zero
+    /// truncation with a typed [`SpecError`].
+    pub fn try_new(alpha: f64, max_groups: usize, seed: u64) -> Result<Self, SpecError> {
+        if !alpha.is_finite() || alpha <= 0.0 {
+            return Err(SpecError::Invalid {
+                field: "dirichlet.alpha",
+                reason: format!("must be a finite positive number, got {alpha}"),
+            });
+        }
+        if max_groups == 0 {
+            return Err(SpecError::Invalid {
+                field: "dirichlet.max_groups",
+                reason: "must be at least 1".to_string(),
+            });
+        }
         let mut rng = Rng::new(seed ^ 0xD112_1C43);
         let mut remaining = 1.0f64;
         let mut cdf = Vec::with_capacity(max_groups);
@@ -119,7 +163,7 @@ impl DirichletPartitioner {
             acc += p;
             cdf.push(acc);
         }
-        DirichletPartitioner { cdf, alpha, seed }
+        Ok(DirichletPartitioner { cdf, alpha, seed })
     }
 
     pub fn max_groups(&self) -> usize {
@@ -142,6 +186,960 @@ impl Partitioner for DirichletPartitioner {
 
     fn name(&self) -> String {
         format!("dirichlet:alpha={}", self.alpha)
+    }
+}
+
+/// The CLI default truncation for `dirichlet:ALPHA` specs that don't
+/// spell out a max group count (formerly a magic number buried in
+/// `main.rs`'s string parser).
+pub const DEFAULT_DIRICHLET_MAX_GROUPS: usize = 10_000;
+
+/// The default seed [`PartitionerSpec`]'s `FromStr` uses — the same
+/// default the CLI `--seed` flag documents.
+pub const DEFAULT_SEED: u64 = 42;
+
+/// A typed error from parsing, validating, or building a partitioner
+/// spec. Malformed spec strings and out-of-domain parameters surface
+/// here instead of panicking mid-pipeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpecError {
+    /// The spec string does not match the `--by` grammar.
+    Malformed { spec: String, reason: String },
+    /// The spec parsed, but a parameter is out of its valid domain.
+    Invalid { field: &'static str, reason: String },
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::Malformed { spec, reason } => {
+                write!(f, "malformed partitioner spec {spec:?}: {reason}")
+            }
+            SpecError::Invalid { field, reason } => {
+                write!(f, "invalid partitioner spec: {field} {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// A typed, validated description of a partitioner — the one way every
+/// caller (CLI `--by`, scenario registry, benches, tests) constructs
+/// partitioners. `parse` → [`validate`](Self::validate) →
+/// [`build`](Self::build).
+///
+/// The `--by` grammar (also accepted by `FromStr`):
+///
+/// ```text
+/// feature[:NAME]                      partition by a feature's value
+/// random:N                            uniform over N groups (IID control)
+/// dirichlet:ALPHA[:MAX_GROUPS]        stick-breaking DP (default trunc 10000)
+/// pathological:GROUPS:CLASSES[:LABELS] each group sees CLASSES of LABELS
+/// temporal:PERIOD[:FEATURE]           one group per window of an int feature
+/// ```
+///
+/// MoDM specs carry a full mixture model and come from the scenario
+/// registry (TOML or [`ModmModel::fit`]), not from the inline grammar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PartitionerSpec {
+    /// [`FeatureKey`]: group by a feature's first value.
+    Feature { feature: String },
+    /// [`RandomPartitioner`]: uniform over `num_groups`.
+    Random { num_groups: usize, seed: u64 },
+    /// [`DirichletPartitioner`]: truncated stick-breaking DP.
+    Dirichlet { alpha: f64, max_groups: usize, seed: u64 },
+    /// [`PathologicalPartitioner`]: label-restricted non-IID groups.
+    Pathological {
+        num_groups: usize,
+        classes_per_group: usize,
+        num_labels: usize,
+        label_feature: String,
+        seed: u64,
+    },
+    /// [`TemporalPartitioner`]: windows of an integer time feature.
+    Temporal { feature: String, period: u64 },
+    /// [`ModmPartitioner`]: a fitted/declared Dirichlet-multinomial
+    /// mixture sampled into a synthetic population.
+    Modm(ModmSpec),
+}
+
+impl PartitionerSpec {
+    /// Parse the `--by` grammar. `default_feature` fills the bare
+    /// `feature` form (the dataset's key feature); `default_seed` seeds
+    /// the stochastic partitioners.
+    pub fn parse(
+        spec: &str,
+        default_feature: &str,
+        default_seed: u64,
+    ) -> Result<Self, SpecError> {
+        let malformed = |reason: String| SpecError::Malformed { spec: spec.to_string(), reason };
+        let parts: Vec<&str> = spec.split(':').collect();
+        match parts.as_slice() {
+            ["feature"] => {
+                if default_feature.is_empty() {
+                    return Err(malformed(
+                        "bare `feature` needs a dataset key feature; spell it feature:NAME"
+                            .to_string(),
+                    ));
+                }
+                Ok(PartitionerSpec::Feature { feature: default_feature.to_string() })
+            }
+            ["feature", name] if !name.is_empty() => {
+                Ok(PartitionerSpec::Feature { feature: name.to_string() })
+            }
+            ["random", n] => Ok(PartitionerSpec::Random {
+                num_groups: parse_field(spec, "group count", n)?,
+                seed: default_seed,
+            }),
+            ["dirichlet", a] => Ok(PartitionerSpec::Dirichlet {
+                alpha: parse_field(spec, "alpha", a)?,
+                max_groups: DEFAULT_DIRICHLET_MAX_GROUPS,
+                seed: default_seed,
+            }),
+            ["dirichlet", a, g] => Ok(PartitionerSpec::Dirichlet {
+                alpha: parse_field(spec, "alpha", a)?,
+                max_groups: parse_field(spec, "max group count", g)?,
+                seed: default_seed,
+            }),
+            ["pathological", g, k] => Ok(PartitionerSpec::Pathological {
+                num_groups: parse_field(spec, "group count", g)?,
+                classes_per_group: parse_field(spec, "classes per group", k)?,
+                num_labels: 10,
+                label_feature: "label".to_string(),
+                seed: default_seed,
+            }),
+            ["pathological", g, k, l] => Ok(PartitionerSpec::Pathological {
+                num_groups: parse_field(spec, "group count", g)?,
+                classes_per_group: parse_field(spec, "classes per group", k)?,
+                num_labels: parse_field(spec, "label count", l)?,
+                label_feature: "label".to_string(),
+                seed: default_seed,
+            }),
+            ["temporal", p] => Ok(PartitionerSpec::Temporal {
+                feature: "example_index".to_string(),
+                period: parse_field(spec, "period", p)?,
+            }),
+            ["temporal", p, feat] if !feat.is_empty() => Ok(PartitionerSpec::Temporal {
+                feature: feat.to_string(),
+                period: parse_field(spec, "period", p)?,
+            }),
+            _ => Err(malformed(format!(
+                "unknown form {:?}; expected feature[:NAME] | random:N | \
+                 dirichlet:ALPHA[:MAX_GROUPS] | pathological:GROUPS:CLASSES[:LABELS] | \
+                 temporal:PERIOD[:FEATURE]",
+                parts[0]
+            ))),
+        }
+    }
+
+    /// Check every parameter's domain. [`build`](Self::build) calls this,
+    /// so malformed requests fail with a typed error before any work.
+    pub fn validate(&self) -> Result<(), SpecError> {
+        fn invalid(field: &'static str, reason: String) -> Result<(), SpecError> {
+            Err(SpecError::Invalid { field, reason })
+        }
+        match self {
+            PartitionerSpec::Feature { feature } => {
+                if feature.is_empty() {
+                    return invalid("feature", "name must be non-empty".to_string());
+                }
+            }
+            PartitionerSpec::Random { num_groups, .. } => {
+                if *num_groups == 0 {
+                    return invalid("random.num_groups", "must be at least 1".to_string());
+                }
+            }
+            PartitionerSpec::Dirichlet { alpha, max_groups, .. } => {
+                if !alpha.is_finite() || *alpha <= 0.0 {
+                    return invalid(
+                        "dirichlet.alpha",
+                        format!("must be a finite positive number, got {alpha}"),
+                    );
+                }
+                if *max_groups == 0 {
+                    return invalid("dirichlet.max_groups", "must be at least 1".to_string());
+                }
+            }
+            PartitionerSpec::Pathological {
+                num_groups,
+                classes_per_group,
+                num_labels,
+                label_feature,
+                ..
+            } => {
+                if *num_groups == 0 {
+                    return invalid("pathological.num_groups", "must be at least 1".to_string());
+                }
+                if *num_labels == 0 {
+                    return invalid("pathological.num_labels", "must be at least 1".to_string());
+                }
+                if *classes_per_group == 0 || classes_per_group > num_labels {
+                    return invalid(
+                        "pathological.classes_per_group",
+                        format!("must be in 1..={num_labels}, got {classes_per_group}"),
+                    );
+                }
+                if label_feature.is_empty() {
+                    return invalid(
+                        "pathological.label_feature",
+                        "name must be non-empty".to_string(),
+                    );
+                }
+            }
+            PartitionerSpec::Temporal { feature, period } => {
+                if feature.is_empty() {
+                    return invalid("temporal.feature", "name must be non-empty".to_string());
+                }
+                if *period == 0 {
+                    return invalid("temporal.period", "must be at least 1".to_string());
+                }
+            }
+            PartitionerSpec::Modm(spec) => spec.validate()?,
+        }
+        Ok(())
+    }
+
+    /// Validate, then construct the partitioner.
+    pub fn build(&self) -> Result<Box<dyn Partitioner>, SpecError> {
+        self.validate()?;
+        Ok(match self {
+            PartitionerSpec::Feature { feature } => Box::new(FeatureKey::new(feature)),
+            PartitionerSpec::Random { num_groups, seed } => {
+                Box::new(RandomPartitioner::new(*num_groups, *seed))
+            }
+            PartitionerSpec::Dirichlet { alpha, max_groups, seed } => {
+                Box::new(DirichletPartitioner::try_new(*alpha, *max_groups, *seed)?)
+            }
+            PartitionerSpec::Pathological {
+                num_groups,
+                classes_per_group,
+                num_labels,
+                label_feature,
+                seed,
+            } => Box::new(PathologicalPartitioner::new(
+                *num_groups,
+                *classes_per_group,
+                *num_labels,
+                label_feature,
+                *seed,
+            )?),
+            PartitionerSpec::Temporal { feature, period } => {
+                Box::new(TemporalPartitioner::new(feature, *period))
+            }
+            PartitionerSpec::Modm(spec) => Box::new(ModmPartitioner::from_spec(spec)?),
+        })
+    }
+
+    /// The label feature + class count this spec's heterogeneity should
+    /// be characterized against, when it models labels at all.
+    pub fn label_feature(&self) -> Option<(&str, usize)> {
+        match self {
+            PartitionerSpec::Pathological { label_feature, num_labels, .. } => {
+                Some((label_feature.as_str(), *num_labels))
+            }
+            PartitionerSpec::Modm(spec) if spec.model.num_labels() > 0 => {
+                spec.label_feature.as_deref().map(|f| (f, spec.model.num_labels()))
+            }
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for PartitionerSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PartitionerSpec::Feature { feature } => write!(f, "feature:{feature}"),
+            PartitionerSpec::Random { num_groups, .. } => write!(f, "random:{num_groups}"),
+            PartitionerSpec::Dirichlet { alpha, max_groups, .. } => {
+                write!(f, "dirichlet:{alpha}:{max_groups}")
+            }
+            PartitionerSpec::Pathological {
+                num_groups, classes_per_group, num_labels, ..
+            } => write!(f, "pathological:{num_groups}:{classes_per_group}:{num_labels}"),
+            PartitionerSpec::Temporal { feature, period } => {
+                write!(f, "temporal:{period}:{feature}")
+            }
+            PartitionerSpec::Modm(spec) => {
+                write!(f, "modm:{}g/{}c", spec.num_groups, spec.model.components.len())
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for PartitionerSpec {
+    type Err = SpecError;
+
+    /// The thin CLI-facing entry: the `--by` grammar with no dataset
+    /// context (bare `feature` is malformed here) and the documented
+    /// default seed.
+    fn from_str(s: &str) -> Result<Self, SpecError> {
+        Self::parse(s, "", DEFAULT_SEED)
+    }
+}
+
+fn parse_field<T: std::str::FromStr>(
+    spec: &str,
+    what: &str,
+    value: &str,
+) -> Result<T, SpecError> {
+    value.parse().map_err(|_| SpecError::Malformed {
+        spec: spec.to_string(),
+        reason: format!("{what} {value:?} is not a number"),
+    })
+}
+
+/// An example's label class in `[0, num_labels)`: the first value of
+/// `feature`, reduced mod `num_labels` (int values directly; byte/float
+/// values through a stable hash). Examples without the feature get a
+/// deterministic pseudo-label from the content hash, so label-driven
+/// scenarios stay runnable on unlabeled corpora — documented in the
+/// scenario docs rather than silently collapsing to one class.
+pub fn label_of(example: &Example, feature: &str, num_labels: usize) -> usize {
+    assert!(num_labels > 0, "label_of with zero classes");
+    let n = num_labels as u64;
+    match example.features.get(feature) {
+        Some(Feature::Ints(v)) if !v.is_empty() => v[0].rem_euclid(num_labels as i64) as usize,
+        Some(Feature::Bytes(v)) if !v.is_empty() => (fnv1a(&v[0]) % n) as usize,
+        Some(Feature::Floats(v)) if !v.is_empty() => {
+            (fnv1a(format!("{}", v[0]).as_bytes()) % n) as usize
+        }
+        _ => (example.content_hash64() % n) as usize,
+    }
+}
+
+/// Binary-search a cumulative distribution for `u` (same convention as
+/// the Dirichlet partitioner's stick CDF).
+fn search_cdf(cdf: &[f64], u: f64) -> usize {
+    match cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        Ok(i) => i,
+        Err(i) => i.min(cdf.len() - 1),
+    }
+}
+
+const PATH_SALT: u64 = 0x7061_7468_6F67_656E; // "pathogen"
+
+/// Pathological non-IID assignment (the McMahan et al. FedAvg split,
+/// LEAF's "pathological" scenario): each of `num_groups` groups is
+/// assigned `classes_per_group` of the `num_labels` label classes at
+/// construction, and every example routes — via its content hash — to a
+/// uniformly random group among those that carry its label.
+pub struct PathologicalPartitioner {
+    num_groups: usize,
+    classes_per_group: usize,
+    num_labels: usize,
+    label_feature: String,
+    seed: u64,
+    /// label class -> groups carrying it (never empty: classes no group
+    /// drew are backfilled deterministically so every label routes).
+    label_groups: Vec<Vec<u32>>,
+}
+
+impl PathologicalPartitioner {
+    pub fn new(
+        num_groups: usize,
+        classes_per_group: usize,
+        num_labels: usize,
+        label_feature: &str,
+        seed: u64,
+    ) -> Result<Self, SpecError> {
+        let spec = PartitionerSpec::Pathological {
+            num_groups,
+            classes_per_group,
+            num_labels,
+            label_feature: label_feature.to_string(),
+            seed,
+        };
+        spec.validate()?;
+        let mut label_groups = vec![Vec::new(); num_labels];
+        let mut root = Rng::new(seed ^ PATH_SALT);
+        for g in 0..num_groups {
+            let mut rng = root.fork(g as u64);
+            for l in rng.sample_indices(num_labels, classes_per_group) {
+                label_groups[l].push(g as u32);
+            }
+        }
+        for (l, groups) in label_groups.iter_mut().enumerate() {
+            if groups.is_empty() {
+                groups.push((l % num_groups) as u32);
+            }
+        }
+        Ok(PathologicalPartitioner {
+            num_groups,
+            classes_per_group,
+            num_labels,
+            label_feature: label_feature.to_string(),
+            seed,
+            label_groups,
+        })
+    }
+}
+
+impl Partitioner for PathologicalPartitioner {
+    fn key(&self, example: &Example) -> Vec<u8> {
+        let l = label_of(example, &self.label_feature, self.num_labels);
+        let h = example.content_hash64() ^ self.seed.wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+        let bucket = &self.label_groups[l];
+        let g = bucket[Rng::new(h).gen_range(bucket.len() as u64) as usize];
+        format!("path-{g:06}").into_bytes()
+    }
+
+    fn name(&self) -> String {
+        format!("pathological:{}x{}", self.num_groups, self.classes_per_group)
+    }
+}
+
+/// Temporal split: one group per `period`-sized window of an integer
+/// time/sequence feature (`example_index` for the synthetic corpora).
+/// Negative timestamps clamp to window zero; examples without the
+/// feature share the `<missing>` group, same as [`FeatureKey`].
+pub struct TemporalPartitioner {
+    pub feature: String,
+    pub period: u64,
+}
+
+impl TemporalPartitioner {
+    pub fn new(feature: &str, period: u64) -> Self {
+        assert!(period > 0, "temporal period must be positive");
+        TemporalPartitioner { feature: feature.to_string(), period }
+    }
+}
+
+impl Partitioner for TemporalPartitioner {
+    fn key(&self, example: &Example) -> Vec<u8> {
+        match example.features.get(&self.feature) {
+            Some(Feature::Ints(v)) if !v.is_empty() => {
+                let t = v[0].max(0) as u64;
+                format!("time-{:06}", t / self.period).into_bytes()
+            }
+            _ => b"<missing>".to_vec(),
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("temporal:{}/{}", self.feature, self.period)
+    }
+}
+
+const MODM_POP_SALT: u64 = 0x6D6F_646D_5F70_6F70; // "modm_pop"
+const MODM_GEN_SALT: u64 = 0x6D6F_646D_5F67_656E; // "modm_gen"
+const MODM_FIT_SALT: u64 = 0x6D6F_646D_5F66_6974; // "modm_fit"
+
+/// One mixture component of a [`ModmModel`]: a log-normal over group
+/// sizes (the paper's Figure 3 size model) plus, optionally, a
+/// Dirichlet concentration over label classes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModmComponent {
+    /// Mixing proportion (normalized against the other components).
+    pub weight: f64,
+    /// Mean of ln(group size).
+    pub size_mu: f64,
+    /// Std-dev of ln(group size); 0 pins the component's size.
+    pub size_sigma: f64,
+    /// Dirichlet concentration over label classes; empty = size-only.
+    pub label_alpha: Vec<f64>,
+}
+
+/// A mixture of Dirichlet-multinomials over (group size, label
+/// histogram) observations — Scott & Cahill, arXiv 2406.02416. Either
+/// declared directly (scenario TOML) or fitted to an observed
+/// population with [`ModmModel::fit`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ModmModel {
+    pub components: Vec<ModmComponent>,
+}
+
+/// One observed group: its example count and (optionally empty) label
+/// histogram. What [`ModmModel::fit`] consumes — derivable from a
+/// `GroupIndex` (sizes) or a labeled read pass (sizes + labels).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GroupObservation {
+    pub size: u64,
+    pub label_counts: Vec<u64>,
+}
+
+/// Knobs for [`ModmModel::fit`]. Defaults: 2 components, 40 EM
+/// iterations, seed 0 (the seed only jitters the initial
+/// responsibilities; the fit is deterministic given (obs, opts)).
+#[derive(Debug, Clone)]
+pub struct ModmFitOptions {
+    pub components: usize,
+    pub iterations: usize,
+    pub seed: u64,
+}
+
+impl Default for ModmFitOptions {
+    fn default() -> Self {
+        ModmFitOptions { components: 2, iterations: 40, seed: 0 }
+    }
+}
+
+impl ModmModel {
+    /// Label-class count (all components agree; 0 = size-only model).
+    pub fn num_labels(&self) -> usize {
+        self.components.first().map(|c| c.label_alpha.len()).unwrap_or(0)
+    }
+
+    pub fn validate(&self) -> Result<(), SpecError> {
+        fn invalid(field: &'static str, reason: String) -> Result<(), SpecError> {
+            Err(SpecError::Invalid { field, reason })
+        }
+        if self.components.is_empty() {
+            return invalid("modm.components", "need at least one component".to_string());
+        }
+        let labels = self.components[0].label_alpha.len();
+        for (i, c) in self.components.iter().enumerate() {
+            if !c.weight.is_finite() || c.weight <= 0.0 {
+                return invalid(
+                    "modm.weight",
+                    format!("component {i}: must be finite positive, got {}", c.weight),
+                );
+            }
+            if !c.size_mu.is_finite() {
+                return invalid(
+                    "modm.size_mu",
+                    format!("component {i}: must be finite, got {}", c.size_mu),
+                );
+            }
+            if !c.size_sigma.is_finite() || c.size_sigma < 0.0 {
+                return invalid(
+                    "modm.size_sigma",
+                    format!("component {i}: must be finite non-negative, got {}", c.size_sigma),
+                );
+            }
+            if c.label_alpha.len() != labels {
+                return invalid(
+                    "modm.label_alpha",
+                    format!(
+                        "component {i} has {} label classes, component 0 has {labels}",
+                        c.label_alpha.len()
+                    ),
+                );
+            }
+            for &a in &c.label_alpha {
+                if !a.is_finite() || a <= 0.0 {
+                    return invalid(
+                        "modm.label_alpha",
+                        format!("component {i}: alphas must be finite positive, got {a}"),
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fit a `opts.components`-component model to observed groups with
+    /// EM. Deterministic: same (observations, options) → bit-identical
+    /// model, on every platform (the only special function involved,
+    /// `ln_gamma`, is in-repo).
+    ///
+    /// E-step: exact posterior responsibilities under ln-size Gaussian ×
+    /// Dirichlet-multinomial likelihood. M-step: weighted Gaussian
+    /// moments for (mu, sigma), and *moment-matched* Dirichlet alphas
+    /// (mean proportions scaled by a variance-implied precision) — the
+    /// standard closed-form approximation to the alpha MLE; the DM
+    /// likelihood in the E-step is what drives component separation.
+    pub fn fit(obs: &[GroupObservation], opts: &ModmFitOptions) -> Result<ModmModel, SpecError> {
+        fn invalid(reason: String) -> SpecError {
+            SpecError::Invalid { field: "modm.fit", reason }
+        }
+        let n = obs.len();
+        let m_count = opts.components;
+        if m_count == 0 {
+            return Err(invalid("need at least one component".to_string()));
+        }
+        if n < m_count {
+            return Err(invalid(format!(
+                "{n} observation(s) cannot support {m_count} components"
+            )));
+        }
+        let l_count = obs[0].label_counts.len();
+        if obs.iter().any(|o| o.label_counts.len() != l_count) {
+            return Err(invalid(
+                "observations disagree on the number of label classes".to_string(),
+            ));
+        }
+        let xs: Vec<f64> = obs.iter().map(|o| (o.size.max(1) as f64).ln()).collect();
+        // Init: hard-assign size quantile slices, softened by a seeded
+        // jitter so EM can move mass across the slice boundaries.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]).then(a.cmp(&b)));
+        let mut resp = vec![vec![0.0f64; m_count]; n];
+        let mut rng = Rng::new(opts.seed ^ MODM_FIT_SALT);
+        for (rank, &g) in order.iter().enumerate() {
+            let slice = (rank * m_count / n).min(m_count - 1);
+            resp[g][slice] = 1.0;
+            let mut total = 0.0;
+            for r in resp[g].iter_mut() {
+                *r += 0.25 * rng.next_f64();
+                total += *r;
+            }
+            for r in resp[g].iter_mut() {
+                *r /= total;
+            }
+        }
+        let mut model = modm_m_step(obs, &xs, &resp, l_count);
+        for _ in 1..opts.iterations.max(1) {
+            modm_e_step(obs, &xs, &model, &mut resp);
+            model = modm_m_step(obs, &xs, &resp, l_count);
+        }
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Sample `num_groups` (size, label histogram) observations from the
+    /// model — the generative direction, used by round-trip tests and to
+    /// preview a fitted model.
+    pub fn sample_observations(&self, num_groups: usize, seed: u64) -> Vec<GroupObservation> {
+        let l_count = self.num_labels();
+        let pick = weight_cdf(&self.components);
+        let mut root = Rng::new(seed ^ MODM_GEN_SALT);
+        let mut out = Vec::with_capacity(num_groups);
+        for g in 0..num_groups {
+            let mut rng = root.fork(g as u64);
+            let c = &self.components[search_cdf(&pick, rng.next_f64())];
+            let size = rng.log_normal(c.size_mu, c.size_sigma).round().max(1.0) as u64;
+            let label_counts = if l_count > 0 {
+                let p = rng.dirichlet(&c.label_alpha);
+                rng.multinomial(size, &p)
+            } else {
+                Vec::new()
+            };
+            out.push(GroupObservation { size, label_counts });
+        }
+        out
+    }
+}
+
+/// Normalized cumulative mixing weights.
+fn weight_cdf(components: &[ModmComponent]) -> Vec<f64> {
+    let total: f64 = components.iter().map(|c| c.weight).sum();
+    let mut cdf = Vec::with_capacity(components.len());
+    let mut acc = 0.0;
+    for c in components {
+        acc += c.weight / total;
+        cdf.push(acc);
+    }
+    cdf
+}
+
+fn modm_m_step(
+    obs: &[GroupObservation],
+    xs: &[f64],
+    resp: &[Vec<f64>],
+    l_count: usize,
+) -> ModmModel {
+    let n = obs.len();
+    let m_count = resp[0].len();
+    let global_mu = xs.iter().sum::<f64>() / n as f64;
+    let mut components = Vec::with_capacity(m_count);
+    for m in 0..m_count {
+        let w_m: f64 = resp.iter().map(|r| r[m]).sum();
+        if w_m < 1e-9 {
+            // A component EM emptied out: park it at the global size
+            // center with negligible weight instead of dividing by ~0.
+            components.push(ModmComponent {
+                weight: 1e-6,
+                size_mu: global_mu,
+                size_sigma: 1.0,
+                label_alpha: vec![1.0; l_count],
+            });
+            continue;
+        }
+        let mu = resp.iter().zip(xs).map(|(r, &x)| r[m] * x).sum::<f64>() / w_m;
+        let var = resp.iter().zip(xs).map(|(r, &x)| r[m] * (x - mu) * (x - mu)).sum::<f64>()
+            / w_m;
+        let sigma = var.max(0.0).sqrt().max(0.05);
+        let label_alpha = if l_count == 0 {
+            Vec::new()
+        } else {
+            modm_alpha_moment_match(obs, resp, m, l_count)
+        };
+        components.push(ModmComponent {
+            weight: (w_m / n as f64).max(1e-6),
+            size_mu: mu,
+            size_sigma: sigma,
+            label_alpha,
+        });
+    }
+    // Canonical order (ascending size center): the fit's output order
+    // is part of its determinism contract.
+    components.sort_by(|a, b| a.size_mu.total_cmp(&b.size_mu));
+    ModmModel { components }
+}
+
+/// Moment-matched Dirichlet concentration for component `m`: mean label
+/// proportions under the responsibilities, scaled by the precision the
+/// observed proportion variance implies (`s = (m1 - m2) / (m2 - m1²)`
+/// per class, averaged over well-conditioned classes).
+fn modm_alpha_moment_match(
+    obs: &[GroupObservation],
+    resp: &[Vec<f64>],
+    m: usize,
+    l_count: usize,
+) -> Vec<f64> {
+    let mut m1 = vec![0.0f64; l_count];
+    let mut m2 = vec![0.0f64; l_count];
+    let mut w_lab = 0.0f64;
+    for (g, o) in obs.iter().enumerate() {
+        let tot: u64 = o.label_counts.iter().sum();
+        if tot == 0 {
+            continue;
+        }
+        let r = resp[g][m];
+        w_lab += r;
+        for (l, &c) in o.label_counts.iter().enumerate() {
+            let p = c as f64 / tot as f64;
+            m1[l] += r * p;
+            m2[l] += r * p * p;
+        }
+    }
+    if w_lab < 1e-9 {
+        return vec![1.0; l_count];
+    }
+    for v in m1.iter_mut() {
+        *v /= w_lab;
+    }
+    for v in m2.iter_mut() {
+        *v /= w_lab;
+    }
+    let mut s_sum = 0.0f64;
+    let mut s_n = 0usize;
+    for l in 0..l_count {
+        let var_l = m2[l] - m1[l] * m1[l];
+        let num = m1[l] - m2[l];
+        if var_l > 1e-12 && num > 0.0 {
+            s_sum += num / var_l;
+            s_n += 1;
+        }
+    }
+    // No class with usable variance (e.g. every group one-hot on the
+    // same class): fall back to a moderately concentrated prior.
+    let s = if s_n == 0 { 100.0 } else { (s_sum / s_n as f64).clamp(0.01, 1e4) };
+    m1.iter().map(|&p| (s * p).max(1e-3)).collect()
+}
+
+fn modm_e_step(obs: &[GroupObservation], xs: &[f64], model: &ModmModel, resp: &mut [Vec<f64>]) {
+    let comps = &model.components;
+    let a_sums: Vec<f64> = comps.iter().map(|c| c.label_alpha.iter().sum()).collect();
+    let l_count = model.num_labels();
+    let mut lls = vec![0.0f64; comps.len()];
+    for (g, o) in obs.iter().enumerate() {
+        let tot: u64 = if l_count > 0 { o.label_counts.iter().sum() } else { 0 };
+        for (m, c) in comps.iter().enumerate() {
+            let mut ll = c.weight.max(1e-300).ln();
+            let z = (xs[g] - c.size_mu) / c.size_sigma;
+            ll += -c.size_sigma.ln() - 0.5 * z * z;
+            if tot > 0 {
+                // Dirichlet-multinomial log-likelihood, multinomial
+                // coefficient dropped (constant across components).
+                ll += ln_gamma(a_sums[m]) - ln_gamma(tot as f64 + a_sums[m]);
+                for (l, &cnt) in o.label_counts.iter().enumerate() {
+                    if cnt > 0 {
+                        let al = c.label_alpha[l];
+                        ll += ln_gamma(cnt as f64 + al) - ln_gamma(al);
+                    }
+                }
+            }
+            lls[m] = ll;
+        }
+        let max = lls.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut total = 0.0;
+        for (m, &ll) in lls.iter().enumerate() {
+            let e = (ll - max).exp();
+            resp[g][m] = e;
+            total += e;
+        }
+        for r in resp[g].iter_mut() {
+            *r /= total;
+        }
+    }
+}
+
+/// A full MoDM partitioner description: a model plus how to sample it
+/// into a synthetic population. Comes from the scenario registry (TOML
+/// declaration or an index-fitted model), not the inline `--by` grammar.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModmSpec {
+    /// Synthetic population size: groups to sample from the model.
+    pub num_groups: usize,
+    /// Feature carrying the label class; required when the model has
+    /// label alphas (see [`label_of`] for the missing-feature fallback).
+    pub label_feature: Option<String>,
+    pub seed: u64,
+    pub model: ModmModel,
+}
+
+impl ModmSpec {
+    pub fn validate(&self) -> Result<(), SpecError> {
+        if self.num_groups == 0 {
+            return Err(SpecError::Invalid {
+                field: "modm.num_groups",
+                reason: "must be at least 1".to_string(),
+            });
+        }
+        if self.num_groups > u32::MAX as usize {
+            return Err(SpecError::Invalid {
+                field: "modm.num_groups",
+                reason: format!("must fit in u32, got {}", self.num_groups),
+            });
+        }
+        self.model.validate()?;
+        if self.model.num_labels() > 0 && self.label_feature.is_none() {
+            return Err(SpecError::Invalid {
+                field: "modm.label_feature",
+                reason: "required when components carry label alphas".to_string(),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Mixtures-of-Dirichlet-Multinomials partitioner: at construction it
+/// samples a synthetic population of `num_groups` groups from the model
+/// (each group: a component, then a target size weight from that
+/// component's log-normal) and keeps only O(groups) state — per-group
+/// (component, weight) collapsed into per-component CDFs. Per example,
+/// [`key`](Partitioner::key) draws — from the example's own content
+/// hash, so the assignment stays a pure function — a component (biased
+/// by the example's label class through the component label means
+/// `theta = alpha / sum(alpha)`, when the model has labels), then a
+/// group inside it proportional to target size.
+///
+/// Scalability trade-off, documented in ARCHITECTURE.md: label bias is
+/// applied at *component* granularity (the per-group Dirichlet draw is
+/// integrated out at assignment time); per-group label overdispersion
+/// is what the DM likelihood captures during *fitting*. This keeps the
+/// population O(groups) and assignment stateless per §3.2.
+pub struct ModmPartitioner {
+    seed: u64,
+    label_feature: Option<String>,
+    num_labels: usize,
+    num_groups: usize,
+    /// Global group ids per component.
+    group_ids: Vec<Vec<u32>>,
+    /// Per-component cumulative normalized target-size CDF (parallel to
+    /// `group_ids`).
+    group_cdf: Vec<Vec<f64>>,
+    /// Component CDF without label context: P(m) ∝ S_m (total target
+    /// size mass).
+    comp_cdf: Vec<f64>,
+    /// Component CDF per label class: P(m | l) ∝ S_m · theta_m[l].
+    comp_cdf_by_label: Vec<Vec<f64>>,
+    /// Normalized target size share per global group id (diagnostics;
+    /// the round-trip tests compare realized histograms against this).
+    weights: Vec<f64>,
+}
+
+impl ModmPartitioner {
+    pub fn from_spec(spec: &ModmSpec) -> Result<Self, SpecError> {
+        spec.validate()?;
+        let comps = &spec.model.components;
+        let m_count = comps.len();
+        let l_count = spec.model.num_labels();
+        let pick = weight_cdf(comps);
+        let mut root = Rng::new(spec.seed ^ MODM_POP_SALT);
+        let mut group_ids = vec![Vec::new(); m_count];
+        let mut group_w = vec![Vec::new(); m_count];
+        let mut weights = vec![0.0f64; spec.num_groups];
+        for g in 0..spec.num_groups {
+            let mut rng = root.fork(g as u64);
+            let m = search_cdf(&pick, rng.next_f64());
+            let w = rng.log_normal(comps[m].size_mu, comps[m].size_sigma);
+            group_ids[m].push(g as u32);
+            group_w[m].push(w);
+            weights[g] = w;
+        }
+        let total_w: f64 = weights.iter().sum();
+        for w in weights.iter_mut() {
+            *w /= total_w;
+        }
+        let mass: Vec<f64> = group_w.iter().map(|ws| ws.iter().sum()).collect();
+        let group_cdf: Vec<Vec<f64>> = group_w
+            .iter()
+            .zip(&mass)
+            .map(|(ws, &s)| {
+                let mut acc = 0.0;
+                ws.iter().map(|w| {
+                    acc += w / s;
+                    acc
+                })
+                .collect()
+            })
+            .collect();
+        let comp_cdf = mass_cdf(&mass);
+        let comp_cdf_by_label = (0..l_count)
+            .map(|l| {
+                let biased: Vec<f64> = comps
+                    .iter()
+                    .zip(&mass)
+                    .map(|(c, &s)| {
+                        let a_sum: f64 = c.label_alpha.iter().sum();
+                        s * c.label_alpha[l] / a_sum
+                    })
+                    .collect();
+                mass_cdf(&biased)
+            })
+            .collect();
+        Ok(ModmPartitioner {
+            seed: spec.seed,
+            label_feature: spec.label_feature.clone(),
+            num_labels: l_count,
+            num_groups: spec.num_groups,
+            group_ids,
+            group_cdf,
+            comp_cdf,
+            comp_cdf_by_label,
+            weights,
+        })
+    }
+
+    /// Target (normalized) size share per global group id — what the
+    /// realized partition's group-size histogram converges to.
+    pub fn group_weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.num_groups
+    }
+}
+
+/// Cumulative distribution over possibly-zero masses (empty components
+/// contribute zero width and are skipped by the empty-bucket walk in
+/// `key`).
+fn mass_cdf(mass: &[f64]) -> Vec<f64> {
+    let total: f64 = mass.iter().sum();
+    let mut acc = 0.0;
+    mass.iter()
+        .map(|&m| {
+            acc += m / total;
+            acc
+        })
+        .collect()
+}
+
+impl Partitioner for ModmPartitioner {
+    fn key(&self, example: &Example) -> Vec<u8> {
+        let h = example.content_hash64() ^ self.seed.wrapping_mul(0xA076_1D64_78BD_642F);
+        let mut r = Rng::new(h);
+        let cdf = match (&self.label_feature, self.num_labels) {
+            (Some(f), l) if l > 0 => &self.comp_cdf_by_label[label_of(example, f, l)],
+            _ => &self.comp_cdf,
+        };
+        let mut m = search_cdf(cdf, r.next_f64());
+        // A boundary draw can land on a zero-mass (group-less)
+        // component; walk to the next populated one deterministically.
+        while self.group_ids[m].is_empty() {
+            m = (m + 1) % self.group_ids.len();
+        }
+        let gi = search_cdf(&self.group_cdf[m], r.next_f64());
+        let g = self.group_ids[m][gi];
+        format!("modm-{g:08}").into_bytes()
+    }
+
+    fn name(&self) -> String {
+        format!("modm:{}g/{}c", self.num_groups, self.group_ids.len())
     }
 }
 
@@ -279,5 +1277,233 @@ mod tests {
             prop_assert(k.starts_with(b"dp-"), "key prefix")
         });
         assert!((p.cdf.last().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dirichlet_try_new_rejects_bad_alpha() {
+        // The bugfix: degenerate alphas are typed errors, not panics or
+        // silent degenerate draws.
+        for bad in [f64::NAN, 0.0, -1.0, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = DirichletPartitioner::try_new(bad, 10, 1).unwrap_err();
+            assert!(matches!(err, SpecError::Invalid { field: "dirichlet.alpha", .. }), "{bad}");
+        }
+        assert!(matches!(
+            DirichletPartitioner::try_new(1.0, 0, 1),
+            Err(SpecError::Invalid { field: "dirichlet.max_groups", .. })
+        ));
+        assert!(DirichletPartitioner::try_new(1.0, 10, 1).is_ok());
+    }
+
+    #[test]
+    fn spec_parse_covers_the_grammar() {
+        let p = |s: &str| PartitionerSpec::parse(s, "domain", 7).unwrap();
+        assert_eq!(p("feature"), PartitionerSpec::Feature { feature: "domain".into() });
+        assert_eq!(p("feature:label"), PartitionerSpec::Feature { feature: "label".into() });
+        assert_eq!(p("random:50"), PartitionerSpec::Random { num_groups: 50, seed: 7 });
+        assert_eq!(
+            p("dirichlet:2.5"),
+            PartitionerSpec::Dirichlet {
+                alpha: 2.5,
+                max_groups: DEFAULT_DIRICHLET_MAX_GROUPS,
+                seed: 7
+            }
+        );
+        assert_eq!(
+            p("dirichlet:2.5:600"),
+            PartitionerSpec::Dirichlet { alpha: 2.5, max_groups: 600, seed: 7 }
+        );
+        assert_eq!(
+            p("pathological:40:2"),
+            PartitionerSpec::Pathological {
+                num_groups: 40,
+                classes_per_group: 2,
+                num_labels: 10,
+                label_feature: "label".into(),
+                seed: 7
+            }
+        );
+        assert_eq!(
+            p("temporal:16"),
+            PartitionerSpec::Temporal { feature: "example_index".into(), period: 16 }
+        );
+        assert_eq!(
+            p("temporal:16:ts"),
+            PartitionerSpec::Temporal { feature: "ts".into(), period: 16 }
+        );
+    }
+
+    #[test]
+    fn spec_parse_and_validate_yield_typed_errors() {
+        let parse = |s: &str| PartitionerSpec::parse(s, "domain", 7);
+        // Malformed strings (the old parser panicked on `dirichlet:x`).
+        for bad in ["", "bogus:1", "dirichlet:x", "random:", "random:1:2", "feature:"] {
+            assert!(
+                matches!(parse(bad), Err(SpecError::Malformed { .. })),
+                "{bad:?} should be malformed"
+            );
+        }
+        // Bare `feature` without a dataset context (the FromStr path).
+        assert!(matches!(
+            "feature".parse::<PartitionerSpec>(),
+            Err(SpecError::Malformed { .. })
+        ));
+        assert_eq!(
+            "random:9".parse::<PartitionerSpec>().unwrap(),
+            PartitionerSpec::Random { num_groups: 9, seed: DEFAULT_SEED }
+        );
+        // Parsed-but-invalid parameters ("NaN" parses as f64).
+        for bad in ["random:0", "dirichlet:NaN", "dirichlet:-2", "dirichlet:1:0",
+            "pathological:10:0", "pathological:10:11", "temporal:0"]
+        {
+            let spec = parse(bad).unwrap();
+            assert!(
+                matches!(spec.build(), Err(SpecError::Invalid { .. })),
+                "{bad:?} should be invalid"
+            );
+        }
+    }
+
+    #[test]
+    fn spec_build_matches_direct_construction() {
+        // The typed API must reproduce the exact keys of the pinned
+        // constructors — existing partitions never move.
+        let rand_spec = PartitionerSpec::parse("random:37", "domain", 42).unwrap().build().unwrap();
+        let dir_spec =
+            PartitionerSpec::parse("dirichlet:2.5:500", "domain", 42).unwrap().build().unwrap();
+        let rand = RandomPartitioner::new(37, 42);
+        let dir = DirichletPartitioner::new(2.5, 500, 42);
+        check(100, |rng| {
+            let e = ex(&gen_word(rng, 1..=30), &gen_word(rng, 3..=10));
+            prop_assert_eq(rand_spec.key(&e), rand.key(&e), "random via spec")?;
+            prop_assert_eq(dir_spec.key(&e), dir.key(&e), "dirichlet via spec")
+        });
+    }
+
+    #[test]
+    fn label_of_extracts_and_falls_back() {
+        let labeled = Example::new().with("label", Feature::ints(vec![13]));
+        assert_eq!(label_of(&labeled, "label", 10), 3);
+        let negative = Example::new().with("label", Feature::ints(vec![-1]));
+        assert_eq!(label_of(&negative, "label", 10), 9);
+        // Missing feature: deterministic pseudo-label.
+        let plain = Example::text("no label here");
+        let l = label_of(&plain, "label", 10);
+        assert!(l < 10);
+        assert_eq!(l, label_of(&plain, "label", 10));
+    }
+
+    #[test]
+    fn pathological_groups_see_few_classes() {
+        let p = PathologicalPartitioner::new(30, 2, 10, "label", 5).unwrap();
+        let mut classes_per_group: std::collections::HashMap<Vec<u8>, _> =
+            std::collections::HashMap::new();
+        for i in 0..3000i64 {
+            let e = Example::text(&format!("x{i}")).with("label", Feature::ints(vec![i % 10]));
+            classes_per_group
+                .entry(p.key(&e))
+                .or_insert_with(std::collections::HashSet::new)
+                .insert(i % 10);
+        }
+        assert!(classes_per_group.len() > 5, "{}", classes_per_group.len());
+        for (g, classes) in &classes_per_group {
+            assert!(
+                classes.len() <= 2,
+                "group {:?} saw {} classes",
+                String::from_utf8_lossy(g),
+                classes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn temporal_windows_by_period() {
+        let p = TemporalPartitioner::new("example_index", 16);
+        let at = |t: i64| {
+            p.key(&Example::text("x").with("example_index", Feature::ints(vec![t])))
+        };
+        assert_eq!(at(0), b"time-000000");
+        assert_eq!(at(15), b"time-000000");
+        assert_eq!(at(16), b"time-000001");
+        assert_eq!(at(-5), b"time-000000");
+        assert_eq!(p.key(&Example::text("x")), b"<missing>");
+    }
+
+    #[test]
+    fn modm_partitioner_tracks_target_weights() {
+        let spec = ModmSpec {
+            num_groups: 100,
+            label_feature: None,
+            seed: 9,
+            model: ModmModel {
+                components: vec![
+                    ModmComponent {
+                        weight: 0.8,
+                        size_mu: 3.0,
+                        size_sigma: 0.5,
+                        label_alpha: vec![],
+                    },
+                    ModmComponent {
+                        weight: 0.2,
+                        size_mu: 5.0,
+                        size_sigma: 0.5,
+                        label_alpha: vec![],
+                    },
+                ],
+            },
+        };
+        let p = ModmPartitioner::from_spec(&spec).unwrap();
+        assert_eq!(p.group_weights().len(), 100);
+        assert!((p.group_weights().iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // Realized assignment frequencies track the target size shares.
+        let n = 20_000usize;
+        let mut counts: std::collections::HashMap<Vec<u8>, u64> = std::collections::HashMap::new();
+        for i in 0..n {
+            let e = Example::text(&format!("doc {i}"));
+            *counts.entry(p.key(&e)).or_insert(0) += 1;
+        }
+        let mut l1 = 0.0;
+        for (g, &w) in p.group_weights().iter().enumerate() {
+            let key = format!("modm-{g:08}").into_bytes();
+            let realized = *counts.get(&key).unwrap_or(&0) as f64 / n as f64;
+            l1 += (realized - w).abs();
+        }
+        assert!(l1 < 0.15, "realized vs target L1 distance {l1}");
+    }
+
+    #[test]
+    fn modm_fit_is_deterministic() {
+        let truth = ModmModel {
+            components: vec![
+                ModmComponent { weight: 0.6, size_mu: 2.5, size_sigma: 0.4, label_alpha: vec![] },
+                ModmComponent { weight: 0.4, size_mu: 5.5, size_sigma: 0.5, label_alpha: vec![] },
+            ],
+        };
+        let obs = truth.sample_observations(400, 11);
+        let opts = ModmFitOptions { components: 2, iterations: 25, seed: 3 };
+        let a = ModmModel::fit(&obs, &opts).unwrap();
+        let b = ModmModel::fit(&obs, &opts).unwrap();
+        assert_eq!(a, b, "same observations + options must refit bit-identically");
+        assert!(a.components[0].size_mu < a.components[1].size_mu);
+    }
+
+    #[test]
+    fn modm_fit_rejects_degenerate_requests() {
+        let obs = vec![GroupObservation { size: 5, label_counts: vec![] }];
+        assert!(matches!(
+            ModmModel::fit(&obs, &ModmFitOptions { components: 2, ..Default::default() }),
+            Err(SpecError::Invalid { .. })
+        ));
+        assert!(matches!(
+            ModmModel::fit(&obs, &ModmFitOptions { components: 0, ..Default::default() }),
+            Err(SpecError::Invalid { .. })
+        ));
+        let ragged = vec![
+            GroupObservation { size: 5, label_counts: vec![1, 2] },
+            GroupObservation { size: 5, label_counts: vec![1, 2, 3] },
+        ];
+        assert!(matches!(
+            ModmModel::fit(&ragged, &ModmFitOptions { components: 1, ..Default::default() }),
+            Err(SpecError::Invalid { .. })
+        ));
     }
 }

@@ -44,6 +44,10 @@ use crate::util::threadpool::{parallel_for_each_mut, ThreadPool};
 use crate::util::timer::Timer;
 
 /// Tuning knobs for a partition run.
+///
+/// Superseded by [`PartitionRequest`] (which carries these knobs plus a
+/// [`SinkOptions`]); kept as a direct parameter of [`run_partition`]
+/// for one more release.
 #[derive(Debug, Clone)]
 pub struct PartitionOptions {
     /// Map workers (also the number of dataset splits requested).
@@ -529,6 +533,10 @@ pub fn run_partition(
 }
 
 /// Knobs specific to `--format paged` materialization.
+///
+/// Superseded by [`SinkOptions::Paged`] inside a [`PartitionRequest`];
+/// kept as a direct parameter of [`run_partition_paged`] for one more
+/// release.
 #[derive(Debug, Clone)]
 pub struct PagedPartitionOptions {
     /// Shard stores to hash groups across (1 = the classic single
@@ -750,6 +758,150 @@ fn paged_group_phase(
     Ok((set.num_groups() as u64, set.shard_stats()))
 }
 
+// ---------------------------------------------------------------------------
+// Unified request surface
+// ---------------------------------------------------------------------------
+
+/// Where a partition run materializes to.
+///
+/// This is the sink half of [`PartitionRequest`], which unifies the
+/// [`run_partition`] / [`run_partition_paged`] call pair behind one
+/// surface: the map/group tuning knobs are shared, only the sink
+/// differs.
+#[derive(Debug, Clone)]
+pub enum SinkOptions {
+    /// Sharded TFRecords + a `.gindex` (the classic streaming layout).
+    Streaming {
+        /// Output shards == group-by-key buckets.
+        num_shards: usize,
+    },
+    /// A sharded paged set (`.pstore` shards + a `.pset` manifest).
+    Paged { shards: usize, cache_pages: usize, hash_seed: u64 },
+}
+
+/// One request describing a full partition run: shared map/group tuning
+/// plus a [`SinkOptions`] choosing the output layout. Supersedes the
+/// `(PartitionOptions, PagedPartitionOptions)` pair; those remain as the
+/// internal tuning carrier and for callers not yet migrated, for one
+/// release.
+#[derive(Debug, Clone)]
+pub struct PartitionRequest {
+    /// Map workers (also the number of dataset splits requested).
+    pub num_workers: usize,
+    /// Max example payload bytes held in RAM while grouping one bucket.
+    pub spill_chunk_bytes: usize,
+    /// Count whitespace words of the `text` feature into the index
+    /// (streaming sink only; the paged index keeps no word counts).
+    pub count_words: bool,
+    pub sink: SinkOptions,
+}
+
+impl Default for PartitionRequest {
+    fn default() -> Self {
+        let base = PartitionOptions::default();
+        PartitionRequest {
+            num_workers: base.num_workers,
+            spill_chunk_bytes: base.spill_chunk_bytes,
+            count_words: base.count_words,
+            sink: SinkOptions::Streaming { num_shards: base.num_shards },
+        }
+    }
+}
+
+impl PartitionRequest {
+    /// A request for the streaming TFRecord sink with `num_shards` shards.
+    pub fn streaming(num_shards: usize) -> Self {
+        PartitionRequest { sink: SinkOptions::Streaming { num_shards }, ..Default::default() }
+    }
+
+    /// A request for the paged sink with `shards` shard stores.
+    pub fn paged(shards: usize, cache_pages: usize) -> Self {
+        PartitionRequest {
+            sink: SinkOptions::Paged { shards, cache_pages, hash_seed: 0 },
+            ..Default::default()
+        }
+    }
+
+    fn base_options(&self) -> PartitionOptions {
+        PartitionOptions {
+            num_workers: self.num_workers,
+            num_shards: match self.sink {
+                SinkOptions::Streaming { num_shards } => num_shards,
+                // The paged path re-buckets by shard placement itself.
+                SinkOptions::Paged { .. } => PartitionOptions::default().num_shards,
+            },
+            spill_chunk_bytes: self.spill_chunk_bytes,
+            count_words: self.count_words,
+        }
+    }
+}
+
+/// Sink-specific half of a [`PartitionSummary`].
+#[derive(Debug, Clone)]
+pub enum SinkReport {
+    Streaming { index_path: PathBuf, total_payload_bytes: u64, total_words: u64 },
+    Paged { manifest_path: PathBuf, shards: usize, shard_stats: Vec<PagedStat> },
+}
+
+/// Summary of a completed [`run_partition_request`] run: the counters
+/// every sink shares, plus the sink-specific artifacts.
+#[derive(Debug, Clone)]
+pub struct PartitionSummary {
+    pub num_examples: u64,
+    pub num_groups: u64,
+    pub map_secs: f64,
+    pub group_secs: f64,
+    pub wall_secs: f64,
+    pub sink: SinkReport,
+}
+
+/// Partition `dataset` with `partitioner` into `out_dir` under
+/// `prefix`, through whichever sink `req.sink` selects. Delegates to
+/// [`run_partition`] / [`run_partition_paged`], so behavior (including
+/// crash-safety and byte-identical layouts) is exactly theirs.
+pub fn run_partition_request(
+    dataset: &dyn BaseDataset,
+    partitioner: &dyn Partitioner,
+    out_dir: &Path,
+    prefix: &str,
+    req: &PartitionRequest,
+) -> Result<PartitionSummary> {
+    let opts = req.base_options();
+    match req.sink {
+        SinkOptions::Streaming { .. } => {
+            let r = run_partition(dataset, partitioner, out_dir, prefix, &opts)?;
+            Ok(PartitionSummary {
+                num_examples: r.num_examples,
+                num_groups: r.num_groups,
+                map_secs: r.map_secs,
+                group_secs: r.group_secs,
+                wall_secs: r.wall_secs,
+                sink: SinkReport::Streaming {
+                    index_path: r.index_path,
+                    total_payload_bytes: r.total_payload_bytes,
+                    total_words: r.total_words,
+                },
+            })
+        }
+        SinkOptions::Paged { shards, cache_pages, hash_seed } => {
+            let paged = PagedPartitionOptions { shards, cache_pages, hash_seed };
+            let r = run_partition_paged(dataset, partitioner, out_dir, prefix, &opts, &paged)?;
+            Ok(PartitionSummary {
+                num_examples: r.num_examples,
+                num_groups: r.num_groups,
+                map_secs: r.map_secs,
+                group_secs: r.group_secs,
+                wall_secs: r.wall_secs,
+                sink: SinkReport::Paged {
+                    manifest_path: r.manifest_path,
+                    shards: r.shards,
+                    shard_stats: r.shard_stats,
+                },
+            })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -962,6 +1114,52 @@ mod tests {
         assert_eq!(report.num_groups, 0);
         let shards = crate::records::sharded::discover_shards(&dir, "data").unwrap();
         assert_eq!(shards.len(), 3);
+    }
+
+    #[test]
+    fn unified_request_matches_legacy_paths() {
+        let ds = small_text();
+        let p = FeatureKey::new("domain");
+
+        // Streaming sink == run_partition.
+        let dir_old = tmp("req_stream_old");
+        let dir_new = tmp("req_stream_new");
+        let old = run_partition(&ds, &p, &dir_old, "data", &opts(4)).unwrap();
+        let req = PartitionRequest {
+            num_workers: 4,
+            sink: SinkOptions::Streaming { num_shards: 4 },
+            ..Default::default()
+        };
+        let new = run_partition_request(&ds, &p, &dir_new, "data", &req).unwrap();
+        assert_eq!(new.num_examples, old.num_examples);
+        assert_eq!(new.num_groups, old.num_groups);
+        match &new.sink {
+            SinkReport::Streaming { total_words, total_payload_bytes, .. } => {
+                assert_eq!(*total_words, old.total_words);
+                assert_eq!(*total_payload_bytes, old.total_payload_bytes);
+            }
+            other => panic!("expected streaming report, got {other:?}"),
+        }
+        assert_eq!(read_materialized(&dir_old, "data"), read_materialized(&dir_new, "data"));
+
+        // Paged sink == run_partition_paged (same groups via the reader).
+        let dir_paged = tmp("req_paged");
+        let mut req = PartitionRequest::paged(2, 32);
+        req.num_workers = 4;
+        let summary = run_partition_request(&ds, &p, &dir_paged, "data", &req).unwrap();
+        assert_eq!(summary.num_examples as usize, ds.len());
+        match &summary.sink {
+            SinkReport::Paged { shards, .. } => assert_eq!(*shards, 2),
+            other => panic!("expected paged report, got {other:?}"),
+        }
+        let r = crate::formats::ShardedPagedReader::open(&dir_paged, "data", 32).unwrap();
+        let oracle = oracle_groups(&ds, &p);
+        assert_eq!(r.num_groups(), oracle.len());
+        for (k, want) in &oracle {
+            let mut got = Vec::new();
+            assert!(r.visit_group(k, |ex| got.push(ex.encode())).unwrap());
+            assert_eq!(&got, want);
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod alloc;
 pub mod humanize;
 pub mod proptest_lite;
 pub mod rng;
+pub mod special;
 pub mod table;
 pub mod threadpool;
 pub mod timer;

@@ -13,8 +13,10 @@
 //! Gaussian (Box–Muller), log-normal (the paper's Figure 3 fits per-group
 //! sizes as log-normal), Zipf (bounded, via rejection-inversion — text
 //! token frequencies, per the paper's §4 discussion of heavy tails),
-//! Poisson, Dirichlet-process partition sampling (Appendix A.1's
-//! heterogeneous partitioner), and Fisher–Yates shuffling.
+//! Poisson, gamma (Marsaglia–Tsang) with Dirichlet and multinomial
+//! composites (the MoDM scenario sampler), Dirichlet-process partition
+//! sampling (Appendix A.1's heterogeneous partitioner), and
+//! Fisher–Yates shuffling.
 
 /// SplitMix64: deterministic, seedable, platform-stable.
 #[derive(Clone, Debug)]
@@ -129,6 +131,79 @@ impl Rng {
                 x as u64
             }
         }
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang squeeze (2000), the standard
+    /// rejection sampler; shapes below 1 use the boost
+    /// `Gamma(a) = Gamma(a+1) · U^(1/a)`.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0 && shape.is_finite(), "gamma shape {shape}");
+        if shape < 1.0 {
+            let boost = self.next_f64().max(1e-300).powf(1.0 / shape);
+            return self.gamma(shape + 1.0) * boost;
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * (x * x) * (x * x) {
+                return d * v;
+            }
+            if u > 1e-300 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alphas) draw: normalized independent gamma variates.
+    pub fn dirichlet(&mut self, alphas: &[f64]) -> Vec<f64> {
+        assert!(!alphas.is_empty());
+        let draws: Vec<f64> = alphas.iter().map(|&a| self.gamma(a)).collect();
+        let total: f64 = draws.iter().sum();
+        if total <= 0.0 {
+            // All gammas underflowed (pathologically tiny alphas): fall
+            // back to a deterministic one-hot on the largest alpha.
+            let mut out = vec![0.0; alphas.len()];
+            let argmax = alphas
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            out[argmax] = 1.0;
+            return out;
+        }
+        draws.iter().map(|&d| d / total).collect()
+    }
+
+    /// Multinomial(n, probs) draw by sequential binomial-free sampling:
+    /// `n` categorical draws against the probability CDF. O(n log k) —
+    /// fine for the group sizes the synthetic populations use.
+    pub fn multinomial(&mut self, n: u64, probs: &[f64]) -> Vec<u64> {
+        assert!(!probs.is_empty());
+        let mut cdf = Vec::with_capacity(probs.len());
+        let mut acc = 0.0;
+        for &p in probs {
+            acc += p.max(0.0);
+            cdf.push(acc);
+        }
+        let total = acc.max(1e-300);
+        let mut counts = vec![0u64; probs.len()];
+        for _ in 0..n {
+            let u = self.next_f64() * total;
+            let i = match cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+                Ok(i) => i,
+                Err(i) => i.min(probs.len() - 1),
+            };
+            counts[i] += 1;
+        }
+        counts
     }
 
     /// Fisher–Yates in-place shuffle.
@@ -386,6 +461,55 @@ mod tests {
             let s: u64 = (0..n).map(|_| r.poisson(lambda)).sum();
             let mean = s as f64 / n as f64;
             assert!((mean - lambda).abs() < lambda * 0.05, "{mean} vs {lambda}");
+        }
+    }
+
+    #[test]
+    fn gamma_moments() {
+        // Gamma(a, 1) has mean a and variance a — check both regimes of
+        // the sampler (shape < 1 boost path and the Marsaglia–Tsang core).
+        let mut r = Rng::new(21);
+        for &shape in &[0.5, 2.0, 9.0] {
+            let n = 40_000;
+            let xs: Vec<f64> = (0..n).map(|_| r.gamma(shape)).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+            assert!((mean - shape).abs() < shape * 0.05, "shape {shape}: mean {mean}");
+            assert!((var - shape).abs() < shape * 0.15, "shape {shape}: var {var}");
+            assert!(xs.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_with_alpha_proportional_means() {
+        let mut r = Rng::new(22);
+        let alphas = [2.0, 5.0, 1.0];
+        let n = 20_000;
+        let mut means = [0.0f64; 3];
+        for _ in 0..n {
+            let p = r.dirichlet(&alphas);
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            for (m, &pi) in means.iter_mut().zip(&p) {
+                *m += pi;
+            }
+        }
+        let total: f64 = alphas.iter().sum();
+        for (i, m) in means.iter().enumerate() {
+            let got = m / n as f64;
+            let want = alphas[i] / total;
+            assert!((got - want).abs() < 0.01, "component {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn multinomial_counts_sum_and_track_probs() {
+        let mut r = Rng::new(23);
+        let probs = [0.7, 0.2, 0.1];
+        let counts = r.multinomial(50_000, &probs);
+        assert_eq!(counts.iter().sum::<u64>(), 50_000);
+        for (i, &c) in counts.iter().enumerate() {
+            let got = c as f64 / 50_000.0;
+            assert!((got - probs[i]).abs() < 0.01, "cat {i}: {got} vs {}", probs[i]);
         }
     }
 

@@ -8,8 +8,13 @@ use std::sync::Mutex;
 
 use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
 use grouper::formats::{HierarchicalReader, HierarchicalStore, PagedReader, PagedStore};
-use grouper::pipeline::FeatureKey;
+use grouper::pipeline::{Partitioner, PartitionerSpec};
 use grouper::records::Example;
+
+/// The natural by-domain partitioner, built through the typed spec API.
+fn by_domain() -> Box<dyn Partitioner> {
+    PartitionerSpec::Feature { feature: "domain".into() }.build().unwrap()
+}
 
 fn tmp(name: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join("grouper_concurrent_it").join(name);
@@ -40,7 +45,7 @@ fn threads_on_disjoint_groups_match_serial() {
     let dir = tmp("disjoint");
     let ds = dataset(24, 7);
     // Small cache: concurrency must be correct under heavy eviction too.
-    PagedStore::build(&ds, &FeatureKey::new("domain"), &dir, "d", 8).unwrap();
+    PagedStore::build(&ds, by_domain().as_ref(), &dir, "d", 8).unwrap();
     let reader = PagedReader::open(&dir, "d", 8).unwrap();
     let want = serial_contents(&reader);
 
@@ -71,7 +76,7 @@ fn threads_on_disjoint_groups_match_serial() {
 fn threads_on_overlapping_groups_each_match_serial() {
     let dir = tmp("overlap");
     let ds = dataset(12, 13);
-    PagedStore::build(&ds, &FeatureKey::new("domain"), &dir, "d", 16).unwrap();
+    PagedStore::build(&ds, by_domain().as_ref(), &dir, "d", 16).unwrap();
     let reader = PagedReader::open(&dir, "d", 16).unwrap();
     let want = serial_contents(&reader);
 
@@ -263,7 +268,7 @@ fn compaction_under_a_pin_never_grows_the_file() {
 fn hierarchical_reader_is_shared_across_threads() {
     let dir = tmp("hier");
     let ds = dataset(16, 23);
-    HierarchicalStore::build(&ds, &FeatureKey::new("domain"), &dir, "h", 4).unwrap();
+    HierarchicalStore::build(&ds, by_domain().as_ref(), &dir, "h", 4).unwrap();
     let reader = HierarchicalReader::open(&dir, "h").unwrap();
     // Serial oracle.
     let mut want: HashMap<Vec<u8>, Vec<Vec<u8>>> = HashMap::new();

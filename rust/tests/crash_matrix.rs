@@ -29,7 +29,7 @@ use std::sync::Arc;
 use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
 use grouper::formats::paged_sharded::{shard_of_key, shard_prefix};
 use grouper::formats::{PagedReader, PagedShardSet, PagedStore, ShardedPagedReader};
-use grouper::pipeline::FeatureKey;
+use grouper::pipeline::PartitionerSpec;
 use grouper::records::Example;
 use grouper::store::vfs::{CrashImage, FaultPlan, FaultVfs, MemVfs};
 use grouper::util::proptest_lite::{check, prop_assert, prop_assert_eq};
@@ -606,7 +606,7 @@ fn memvfs_store_is_byte_identical_to_a_stdvfs_store() {
     let mut spec = DatasetSpec::fedccnews_mini(10, 17);
     spec.max_group_words = 800;
     let ds = SyntheticTextDataset::new(spec);
-    let part = FeatureKey::new("domain");
+    let part = PartitionerSpec::Feature { feature: "domain".into() }.build().unwrap();
 
     let std_dir = std::env::temp_dir().join("grouper_crash_matrix_parity");
     let _ = std::fs::remove_dir_all(&std_dir);

@@ -89,6 +89,28 @@ fn replication_contract_is_cross_linked() {
     assert!(readme.contains("replicate"), "README.md must mention `grouper replicate`");
 }
 
+/// The scenario registry is discoverable from both entry points: the
+/// README quickstart shows `--scenario`, and the architecture doc has a
+/// Scenarios section pointing at the registry source.
+#[test]
+fn scenario_registry_is_cross_linked() {
+    let root = repo_root();
+    let readme = std::fs::read_to_string(root.join("README.md")).unwrap();
+    let arch = std::fs::read_to_string(root.join("docs/ARCHITECTURE.md")).unwrap();
+    assert!(
+        readme.contains("--scenario"),
+        "README.md must show the partition --scenario quickstart"
+    );
+    assert!(
+        arch.contains("## Scenarios"),
+        "docs/ARCHITECTURE.md must document the scenario registry"
+    );
+    assert!(
+        arch.contains("scenario.rs") && arch.contains("partition.rs"),
+        "the Scenarios section must point at the registry and spec sources"
+    );
+}
+
 #[test]
 fn readme_and_architecture_link_each_other() {
     let root = repo_root();

@@ -22,7 +22,7 @@ use grouper::fed::{
 use grouper::fed::trainer::build_eval_clients;
 use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
 use grouper::grouper::{partition_dataset, PartitionedDataset};
-use grouper::pipeline::{FeatureKey, PartitionOptions};
+use grouper::pipeline::{PartitionOptions, PartitionerSpec};
 use grouper::runtime::{MockRuntime, ModelBackend};
 use grouper::tokenizer::{VocabBuilder, WordPiece};
 use grouper::util::rng::Rng;
@@ -41,7 +41,7 @@ fn setup(tag: &str, seed: u64) -> (PartitionedDataset, PartitionedDataset, WordP
         let ds = SyntheticTextDataset::new(spec);
         partition_dataset(
             &ds,
-            &FeatureKey::new("domain"),
+            PartitionerSpec::Feature { feature: "domain".into() }.build().unwrap().as_ref(),
             &dir,
             split,
             &PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() },

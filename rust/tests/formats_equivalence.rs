@@ -12,7 +12,7 @@ use std::collections::HashMap;
 use grouper::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
 use grouper::formats::streaming::{StreamingConfig, StreamingDataset};
 use grouper::formats::{HierarchicalReader, HierarchicalStore, InMemoryDataset};
-use grouper::pipeline::{run_partition, FeatureKey, PartitionOptions};
+use grouper::pipeline::{run_partition, PartitionOptions, PartitionerSpec};
 use grouper::store::vfs::MemVfs;
 
 fn work_dir(name: &str) -> std::path::PathBuf {
@@ -33,7 +33,7 @@ fn dataset() -> SyntheticTextDataset {
 #[test]
 fn all_three_formats_agree() {
     let ds = dataset();
-    let p = FeatureKey::new("domain");
+    let p = PartitionerSpec::Feature { feature: "domain".into() }.build().unwrap();
     let dir = work_dir("agree");
 
     // Streaming/in-memory read the pipeline materialization.
@@ -105,7 +105,7 @@ fn all_three_formats_agree() {
 #[test]
 fn formats_cover_every_generated_example() {
     let ds = dataset();
-    let p = FeatureKey::new("domain");
+    let p = PartitionerSpec::Feature { feature: "domain".into() }.build().unwrap();
     let dir = work_dir("coverage");
     run_partition(
         &ds,
@@ -137,7 +137,7 @@ fn hierarchical_store_is_vfs_portable() {
     // The same hierarchical build over MemVfs and over the real
     // filesystem must serve identical groups — the backend is a plug.
     let ds = dataset();
-    let p = FeatureKey::new("domain");
+    let p = PartitionerSpec::Feature { feature: "domain".into() }.build().unwrap();
     let std_dir = work_dir("hier_portable");
     HierarchicalStore::build(&ds, &p, &std_dir, "h", 4).unwrap();
     let mvfs = MemVfs::new();

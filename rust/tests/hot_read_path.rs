@@ -13,11 +13,16 @@ use std::sync::Mutex;
 use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
 use grouper::formats::{PagedReader, PagedStore, ShardedPagedReader};
 use grouper::pipeline::{
-    run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
+    run_partition_paged, PagedPartitionOptions, PartitionOptions, PartitionerSpec,
 };
 use grouper::store::cache::CachePolicy;
 use grouper::store::shared::ReadOpts;
 use grouper::store::vfs::{MemVfs, StdVfs};
+
+/// The natural by-domain partitioner, built through the typed spec API.
+fn by_domain() -> Box<dyn grouper::pipeline::Partitioner> {
+    PartitionerSpec::Feature { feature: "domain".into() }.build().unwrap()
+}
 
 fn tmp(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join("grouper_hot_read_it").join(name);
@@ -103,7 +108,7 @@ fn cohort_fetch_is_bit_identical_across_all_read_opts_on_disk() {
     let dir = tmp("single");
     let ds = dataset(20, 11);
     // Small cache so vectored prefetch + 2Q actually evict.
-    PagedStore::build(&ds, &FeatureKey::new("domain"), &dir, "d", 8).unwrap();
+    PagedStore::build(&ds, by_domain().as_ref(), &dir, "d", 8).unwrap();
 
     // Baseline: default opts, serial.
     let base_reader = PagedReader::open(&dir, "d", 8).unwrap();
@@ -139,7 +144,7 @@ fn cohort_fetch_is_bit_identical_across_all_read_opts_over_memvfs() {
     let vfs = MemVfs::new();
     let dir = Path::new("/hot/mem");
     let ds = dataset(14, 23);
-    PagedStore::build_with(&vfs, &ds, &FeatureKey::new("domain"), dir, "d", 8).unwrap();
+    PagedStore::build_with(&vfs, &ds, by_domain().as_ref(), dir, "d", 8).unwrap();
 
     let base = PagedReader::open_with(&vfs, dir, "d", 8).unwrap();
     let want = fetch_cohort(&base, 1);
@@ -164,7 +169,7 @@ fn sharded_cohort_fetch_is_bit_identical_across_all_read_opts() {
     let paged = PagedPartitionOptions { shards: 4, cache_pages: 16, hash_seed: 0 };
     run_partition_paged(
         &ds,
-        &FeatureKey::new("domain"),
+        by_domain().as_ref(),
         &dir,
         "d",
         &PartitionOptions::default(),
@@ -197,7 +202,7 @@ fn snapshot_opens_honor_read_opts_against_a_live_writer() {
     // snapshot must stay bit-stable under every option combination.
     let dir = tmp("live");
     let ds = dataset(10, 41);
-    PagedStore::build(&ds, &FeatureKey::new("domain"), &dir, "d", 16).unwrap();
+    PagedStore::build(&ds, by_domain().as_ref(), &dir, "d", 16).unwrap();
 
     let base = PagedReader::open_snapshot(&dir, "d", 16).unwrap();
     let want = fetch_cohort(&base, 1);

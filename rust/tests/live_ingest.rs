@@ -30,12 +30,17 @@ use grouper::fed::{
 use grouper::formats::streaming::StreamedGroup;
 use grouper::formats::{PagedReader, PagedStore, ShardedPagedReader};
 use grouper::pipeline::{
-    run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
+    run_partition_paged, PagedPartitionOptions, PartitionOptions, PartitionerSpec,
 };
 use grouper::records::Example;
 use grouper::runtime::MockRuntime;
 use grouper::serve::{RemoteClientSource, ServeOptions, StoreServer};
 use grouper::tokenizer::{VocabBuilder, WordPiece};
+
+/// The natural by-domain partitioner, built through the typed spec API.
+fn by_domain() -> Box<dyn grouper::pipeline::Partitioner> {
+    PartitionerSpec::Feature { feature: "domain".into() }.build().unwrap()
+}
 
 fn tmp(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(name);
@@ -49,7 +54,7 @@ fn materialize_sharded(dir: &Path, shards: usize) -> (SyntheticTextDataset, Word
     let ds = SyntheticTextDataset::new(spec);
     run_partition_paged(
         &ds,
-        &FeatureKey::new("domain"),
+        by_domain().as_ref(),
         dir,
         "train",
         &PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() },
@@ -96,7 +101,7 @@ fn quiescent_refresh_matches_classic_path_for_all_backends() {
     let dir = tmp("grouper_live_ingest_bitident");
     let (ds, wp) = materialize_sharded(&dir, 4);
     let single_dir = dir.join("single");
-    drop(PagedStore::build(&ds, &FeatureKey::new("domain"), &single_dir, "train", 32).unwrap());
+    drop(PagedStore::build(&ds, by_domain().as_ref(), &single_dir, "train", 32).unwrap());
 
     let mock = MockRuntime::standard();
     let tc_classic = TrainerConfig::new(fed(5)).with_read_workers(2);

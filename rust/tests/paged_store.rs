@@ -16,6 +16,11 @@ use grouper::formats::{PagedReader, PagedStore};
 use grouper::store::vfs::{MemVfs, OpenMode, Vfs, VfsFile};
 use grouper::util::rng::Rng;
 
+/// The natural by-domain partitioner, built through the typed spec API.
+fn by_domain() -> Box<dyn grouper::pipeline::Partitioner> {
+    grouper::pipeline::PartitionerSpec::Feature { feature: "domain".into() }.build().unwrap()
+}
+
 fn mem_dir(name: &str) -> PathBuf {
     PathBuf::from("/paged_it").join(name)
 }
@@ -48,7 +53,7 @@ fn acceptance_wal_crash_recover_bounded_cache_roundtrip() {
     //    unflushed, simulating a crash mid-run.
     {
         use grouper::pipeline::Partitioner;
-        let by_domain = grouper::pipeline::FeatureKey::new("domain");
+        let by_domain = by_domain();
         let mut store = PagedStore::create_with(&vfs, &dir, "news", 32).unwrap();
         let mut n = 0u64;
         for ex in ds.examples() {
@@ -167,7 +172,7 @@ fn paged_matches_every_other_format_on_the_same_dataset() {
     let store = PagedStore::build_with(
         &vfs,
         &ds,
-        &grouper::pipeline::FeatureKey::new("domain"),
+        by_domain().as_ref(),
         &dir,
         "eq",
         16,
@@ -198,7 +203,7 @@ fn stdvfs_and_memvfs_stores_roundtrip_identically() {
     let ds = dataset(8, 5);
     let std_dir = std::env::temp_dir().join("grouper_paged_it_parity");
     let _ = std::fs::remove_dir_all(&std_dir);
-    let part = grouper::pipeline::FeatureKey::new("domain");
+    let part = by_domain();
     drop(PagedStore::build(&ds, &part, &std_dir, "p", 16).unwrap());
     let vfs = MemVfs::new();
     let dir = mem_dir("parity");

@@ -4,7 +4,12 @@
 
 use grouper::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
 use grouper::grouper::{dataset_statistics, partition_dataset, PartitionedDataset};
-use grouper::pipeline::{DirichletPartitioner, FeatureKey, PartitionOptions, RandomPartitioner};
+use grouper::pipeline::{PartitionOptions, PartitionerSpec};
+
+/// Build a partitioner from the CLI spec grammar (seed fixed per test).
+fn built(spec: &str, seed: u64) -> Box<dyn grouper::pipeline::Partitioner> {
+    PartitionerSpec::parse(spec, "domain", seed).unwrap().build().unwrap()
+}
 
 fn work_dir(name: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join("grouper_e2e").join(name);
@@ -34,7 +39,7 @@ fn all_four_corpora_roundtrip_with_stats() {
         let ds = SyntheticTextDataset::new(spec.clone());
         let report = partition_dataset(
             &ds,
-            &FeatureKey::new(key),
+            PartitionerSpec::Feature { feature: key.to_string() }.build().unwrap().as_ref(),
             &dir,
             name,
             &PartitionOptions { num_shards: 4, num_workers: 3, ..Default::default() },
@@ -61,16 +66,16 @@ fn same_base_dataset_three_partitioners() {
     let opts = PartitionOptions { num_shards: 3, num_workers: 2, ..Default::default() };
 
     let d1 = work_dir("by_domain");
-    let r1 = partition_dataset(&ds, &FeatureKey::new("domain"), &d1, "p", &opts).unwrap();
+    let r1 = partition_dataset(&ds, built("feature:domain", 7).as_ref(), &d1, "p", &opts).unwrap();
     assert_eq!(r1.num_groups, 20);
 
     let d2 = work_dir("random");
-    let r2 = partition_dataset(&ds, &RandomPartitioner::new(10, 7), &d2, "p", &opts).unwrap();
+    let r2 = partition_dataset(&ds, built("random:10", 7).as_ref(), &d2, "p", &opts).unwrap();
     assert!(r2.num_groups <= 10 && r2.num_groups >= 8, "{}", r2.num_groups);
 
     let d3 = work_dir("dirichlet");
     let r3 =
-        partition_dataset(&ds, &DirichletPartitioner::new(3.0, 200, 7), &d3, "p", &opts).unwrap();
+        partition_dataset(&ds, built("dirichlet:3:200", 7).as_ref(), &d3, "p", &opts).unwrap();
     assert!(r3.num_groups >= 2);
 
     // All three cover the same examples.
@@ -101,9 +106,9 @@ fn repartitioning_is_idempotent() {
     let ds = SyntheticTextDataset::new(spec);
     let dir = work_dir("idem");
     let opts = PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() };
-    partition_dataset(&ds, &FeatureKey::new("article"), &dir, "w", &opts).unwrap();
+    partition_dataset(&ds, built("feature:article", 5).as_ref(), &dir, "w", &opts).unwrap();
     let idx1 = std::fs::read(dir.join("w.gindex")).unwrap();
-    partition_dataset(&ds, &FeatureKey::new("article"), &dir, "w", &opts).unwrap();
+    partition_dataset(&ds, built("feature:article", 5).as_ref(), &dir, "w", &opts).unwrap();
     let idx2 = std::fs::read(dir.join("w.gindex")).unwrap();
     assert_eq!(idx1, idx2, "re-running the pipeline must reproduce the index");
 }

@@ -39,7 +39,7 @@ use grouper::formats::{
     committed_state_with, PagedReader, PagedSetManifest, PagedStore, ShardedPagedReader,
 };
 use grouper::pipeline::{
-    run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
+    run_partition_paged, PagedPartitionOptions, PartitionOptions, PartitionerSpec,
 };
 use grouper::records::Example;
 use grouper::serve::{is_diverged, Replica, ReplicaClientSource, ServeOptions, StoreServer};
@@ -350,7 +350,7 @@ fn sharded_set_replicates_and_cohorts_match() {
     let ds = SyntheticTextDataset::new(spec);
     run_partition_paged(
         &ds,
-        &FeatureKey::new("domain"),
+        PartitionerSpec::Feature { feature: "domain".into() }.build().unwrap().as_ref(),
         &pdir,
         "train",
         &PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() },

@@ -1,0 +1,270 @@
+//! Scenario registry + MoDM end-to-end properties:
+//!
+//! 1. **MoDM round trip** — sampling a population from a ground-truth
+//!    mixture and re-fitting it recovers the components within the
+//!    documented tolerance (size_mu ±0.35, weights ±0.15 at 3000
+//!    groups), and the fit is bit-deterministic given (obs, options).
+//! 2. **Label skew is real** — populations sampled from the label-skew
+//!    builtin measure an order of magnitude more label divergence than
+//!    a uniform-alpha control.
+//! 3. **Registry round trip** — every builtin scenario survives
+//!    `scenario_to_toml` → `scenario_from_toml_str` exactly; unknown
+//!    and malformed keys are refused with the key named.
+//! 4. **Shard invariance** — every builtin scenario materializes
+//!    through the sharded paged sink bit-identically at `--shards 1`
+//!    and `--shards 4`, and `characterize_paged` reports on it.
+//! 5. **Spec grammar** — `--by` strings parse into typed specs,
+//!    round-trip through `Display`, and malformed/out-of-domain specs
+//!    yield typed `SpecError`s rather than panics.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use grouper::corpus::{DatasetSpec, SyntheticTextDataset};
+use grouper::formats::ShardedPagedReader;
+use grouper::pipeline::scenario::{find_builtin, scenario_from_toml_str, scenario_to_toml};
+use grouper::pipeline::{
+    builtin_scenarios, characterize_paged, heterogeneity, resolve_scenario, run_partition_paged,
+    ModmComponent, ModmFitOptions, ModmModel, PagedPartitionOptions, PartitionOptions,
+    PartitionerSpec, SpecError,
+};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("grouper_scenarios_test").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn small_text(groups: usize) -> SyntheticTextDataset {
+    let mut spec = DatasetSpec::fedccnews_mini(groups, 5);
+    spec.max_group_words = 1500;
+    SyntheticTextDataset::new(spec)
+}
+
+/// groups → encoded examples, read back through the unified reader.
+fn read_set(dir: &Path, prefix: &str) -> BTreeMap<Vec<u8>, Vec<Vec<u8>>> {
+    let r = ShardedPagedReader::open(dir, prefix, 32).unwrap();
+    let mut out = BTreeMap::new();
+    for k in r.keys() {
+        let mut v = Vec::new();
+        assert!(r.visit_group(k, |ex| v.push(ex.encode())).unwrap());
+        out.insert(k.clone(), v);
+    }
+    out
+}
+
+fn two_component_truth() -> ModmModel {
+    ModmModel {
+        components: vec![
+            ModmComponent { weight: 0.7, size_mu: 3.0, size_sigma: 0.5, label_alpha: vec![] },
+            ModmComponent { weight: 0.3, size_mu: 5.0, size_sigma: 0.5, label_alpha: vec![] },
+        ],
+    }
+}
+
+#[test]
+fn modm_fit_recovers_sampled_population() {
+    let truth = two_component_truth();
+    let obs = truth.sample_observations(3000, 11);
+    let opts = ModmFitOptions { components: 2, iterations: 60, seed: 0 };
+    let fitted = ModmModel::fit(&obs, &opts).unwrap();
+    // The M-step orders components by size_mu, so fitted[0] is the
+    // small-group component. Documented tolerance at 3000 groups:
+    // size_mu within 0.35 nats, weights within 0.15.
+    assert_eq!(fitted.components.len(), 2);
+    let (a, b) = (&fitted.components[0], &fitted.components[1]);
+    assert!((a.size_mu - 3.0).abs() < 0.35, "small size_mu {}", a.size_mu);
+    assert!((b.size_mu - 5.0).abs() < 0.35, "large size_mu {}", b.size_mu);
+    assert!((a.weight - 0.7).abs() < 0.15, "small weight {}", a.weight);
+    assert!((b.weight - 0.3).abs() < 0.15, "large weight {}", b.weight);
+    assert!(a.size_sigma > 0.0 && b.size_sigma > 0.0);
+
+    // Generative direction: a population sampled from the *fitted*
+    // model matches the observed size distribution's headline stats.
+    let resampled = fitted.sample_observations(3000, 99);
+    let h_obs = heterogeneity(&obs.iter().map(|o| o.size).collect::<Vec<_>>(), None);
+    let h_fit = heterogeneity(&resampled.iter().map(|o| o.size).collect::<Vec<_>>(), None);
+    let median_ratio = h_fit.sizes.median / h_obs.sizes.median.max(1.0);
+    assert!((0.7..1.4).contains(&median_ratio), "median ratio {median_ratio}");
+    assert!((h_fit.size_gini - h_obs.size_gini).abs() < 0.1);
+}
+
+#[test]
+fn modm_fit_is_deterministic() {
+    let obs = two_component_truth().sample_observations(400, 7);
+    let opts = ModmFitOptions::default();
+    let a = ModmModel::fit(&obs, &opts).unwrap();
+    let b = ModmModel::fit(&obs, &opts).unwrap();
+    assert_eq!(a, b, "same observations + options must refit bit-identically");
+    assert_eq!(obs, two_component_truth().sample_observations(400, 7));
+}
+
+#[test]
+fn label_skew_builtin_diverges_far_beyond_uniform_control() {
+    let skewed = match &find_builtin("label-skew", "domain", 42).unwrap().spec {
+        PartitionerSpec::Modm(m) => m.model.clone(),
+        other => panic!("label-skew is not MoDM: {other:?}"),
+    };
+    let uniform = ModmModel {
+        components: vec![ModmComponent {
+            weight: 1.0,
+            size_mu: 3.6,
+            size_sigma: 0.5,
+            label_alpha: vec![50.0; 10],
+        }],
+    };
+    let divergence = |model: &ModmModel| {
+        let obs = model.sample_observations(500, 21);
+        let sizes: Vec<u64> = obs.iter().map(|o| o.size).collect();
+        let hists: Vec<Vec<u64>> = obs.iter().map(|o| o.label_counts.clone()).collect();
+        heterogeneity(&sizes, Some(&hists)).label_divergence.unwrap()
+    };
+    let (skew_js, flat_js) = (divergence(&skewed), divergence(&uniform));
+    assert!(
+        skew_js > 3.0 * flat_js && skew_js > 0.1,
+        "label-skew JS {skew_js} vs uniform control {flat_js}"
+    );
+}
+
+#[test]
+fn builtin_scenarios_round_trip_through_toml() {
+    let suite = builtin_scenarios("domain", 42);
+    assert_eq!(suite.len(), 7);
+    for s in &suite {
+        let text = scenario_to_toml(s);
+        let back = scenario_from_toml_str(&text)
+            .unwrap_or_else(|e| panic!("{}: {e:#}\n{text}", s.name));
+        assert_eq!(back.name, s.name);
+        assert_eq!(back.spec, s.spec, "{} spec changed through TOML:\n{text}", s.name);
+    }
+}
+
+#[test]
+fn scenario_files_resolve_and_refuse_unknown_keys() {
+    let dir = tmp("toml-files");
+    let good = dir.join("skew.toml");
+    std::fs::write(
+        &good,
+        "name = \"my-skew\"\n\n[partitioner]\nkind = \"dirichlet\"\nalpha = 2.5\n",
+    )
+    .unwrap();
+    let s = resolve_scenario(good.to_str().unwrap(), "domain", 42).unwrap();
+    assert_eq!(s.name, "my-skew");
+    assert_eq!(
+        s.spec,
+        PartitionerSpec::Dirichlet { alpha: 2.5, max_groups: 10_000, seed: 42 }
+    );
+
+    // The misspelled key rides along with a valid spec, so the refusal
+    // (not a missing-key error) is what surfaces — naming the typo.
+    let typo = dir.join("typo.toml");
+    std::fs::write(
+        &typo,
+        "name = \"typo\"\n\n[partitioner]\nkind = \"random\"\ngroups = 10\ngrups = 10\n",
+    )
+    .unwrap();
+    let err = format!("{:#}", resolve_scenario(typo.to_str().unwrap(), "domain", 42).unwrap_err());
+    assert!(err.contains("grups"), "unknown key not named: {err}");
+
+    let err = format!("{:#}", resolve_scenario("no-such-scenario", "domain", 42).unwrap_err());
+    assert!(err.contains("by-feature") && err.contains("label-skew"), "{err}");
+}
+
+#[test]
+fn every_builtin_is_shard_invariant_end_to_end() {
+    let ds = small_text(12);
+    let opts = PartitionOptions { num_workers: 4, ..Default::default() };
+    for s in builtin_scenarios("domain", 42) {
+        let p = s.spec.build().unwrap();
+        let mut sets = Vec::new();
+        for shards in [1usize, 4] {
+            let dir = tmp(&format!("e2e-{}-{shards}", s.name));
+            let paged = PagedPartitionOptions { shards, cache_pages: 32, hash_seed: 0 };
+            let report =
+                run_partition_paged(&ds, p.as_ref(), &dir, "data", &opts, &paged).unwrap();
+            assert!(report.num_groups > 0, "{}: no groups", s.name);
+            let set = read_set(&dir, "data");
+            sets.push((dir, set));
+        }
+        assert_eq!(sets[0].1, sets[1].1, "{}: shard count changed the mapping", s.name);
+
+        // Table 1b's measurement pass runs on the same artifacts.
+        let h = characterize_paged(&sets[0].0, "data", 32, s.spec.label_feature()).unwrap();
+        assert_eq!(h.num_groups, sets[0].1.len(), "{}", s.name);
+        assert_eq!(h.num_examples, ds.spec.total_examples() as u64, "{}", s.name);
+        assert_eq!(
+            h.label_divergence.is_some(),
+            s.spec.label_feature().is_some(),
+            "{}: label divergence presence should track the spec's label model",
+            s.name
+        );
+    }
+}
+
+#[test]
+fn spec_grammar_parses_and_displays() {
+    let cases = [
+        ("feature:domain", PartitionerSpec::Feature { feature: "domain".into() }),
+        ("random:500", PartitionerSpec::Random { num_groups: 500, seed: 7 }),
+        (
+            "dirichlet:2.5:300",
+            PartitionerSpec::Dirichlet { alpha: 2.5, max_groups: 300, seed: 7 },
+        ),
+        (
+            "pathological:100:2:10",
+            PartitionerSpec::Pathological {
+                num_groups: 100,
+                classes_per_group: 2,
+                num_labels: 10,
+                label_feature: "label".into(),
+                seed: 7,
+            },
+        ),
+        (
+            "temporal:16:example_index",
+            PartitionerSpec::Temporal { feature: "example_index".into(), period: 16 },
+        ),
+    ];
+    for (text, want) in cases {
+        let spec = PartitionerSpec::parse(text, "domain", 7).unwrap();
+        assert_eq!(spec, want, "{text}");
+        // Display emits the same grammar, so specs survive a round trip.
+        assert_eq!(PartitionerSpec::parse(&spec.to_string(), "domain", 7).unwrap(), spec);
+    }
+    // Bare `feature` takes the dataset's key feature; FromStr has none.
+    assert_eq!(
+        PartitionerSpec::parse("feature", "domain", 7).unwrap(),
+        PartitionerSpec::Feature { feature: "domain".into() }
+    );
+    assert!(matches!("feature".parse::<PartitionerSpec>(), Err(SpecError::Malformed { .. })));
+}
+
+#[test]
+fn malformed_and_out_of_domain_specs_yield_typed_errors() {
+    let parse = |s: &str| PartitionerSpec::parse(s, "domain", 7);
+    for bad in ["bogus:1", "random:abc", "random", "dirichlet:1:2:3", "temporal:x"] {
+        match parse(bad) {
+            Err(SpecError::Malformed { spec, .. }) => assert_eq!(spec, bad),
+            other => panic!("{bad}: expected Malformed, got {other:?}"),
+        }
+    }
+    // Parses fine, fails domain validation with the field named —
+    // including the alpha <= 0 / NaN cases the Dirichlet partitioner
+    // used to panic on.
+    for (bad, field) in [
+        ("random:0", "random.num_groups"),
+        ("dirichlet:0", "dirichlet.alpha"),
+        ("dirichlet:-1.5", "dirichlet.alpha"),
+        ("dirichlet:NaN", "dirichlet.alpha"),
+        ("dirichlet:1:0", "dirichlet.max_groups"),
+        ("pathological:10:0", "pathological.classes_per_group"),
+        ("pathological:10:11:10", "pathological.classes_per_group"),
+        ("temporal:0", "temporal.period"),
+    ] {
+        match parse(bad).and_then(|s| s.build().map(|_| ())) {
+            Err(SpecError::Invalid { field: got, .. }) => assert_eq!(got, field, "{bad}"),
+            other => panic!("{bad}: expected Invalid({field}), got {other:?}"),
+        }
+    }
+}

@@ -31,7 +31,7 @@ use grouper::fed::trainer::{fetch_cohort, fetch_cohort_sharded, CohortFetchSpec}
 use grouper::fed::ClientSource;
 use grouper::formats::{PagedStore, ShardedPagedReader};
 use grouper::pipeline::{
-    run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions,
+    run_partition_paged, PagedPartitionOptions, PartitionOptions, PartitionerSpec,
 };
 use grouper::records::Example;
 use grouper::serve::proto::{
@@ -42,6 +42,11 @@ use grouper::store::vfs::{MemVfs, Vfs};
 use grouper::tokenizer::{VocabBuilder, WordPiece};
 use grouper::util::threadpool::ThreadPool;
 
+/// The natural by-domain partitioner, built through the typed spec API.
+fn by_domain() -> Box<dyn grouper::pipeline::Partitioner> {
+    PartitionerSpec::Feature { feature: "domain".into() }.build().unwrap()
+}
+
 fn materialize_paged(dir: &Path, shards: usize) -> (SyntheticTextDataset, WordPiece) {
     let _ = std::fs::remove_dir_all(dir);
     let mut spec = DatasetSpec::fedccnews_mini(24, 77);
@@ -49,7 +54,7 @@ fn materialize_paged(dir: &Path, shards: usize) -> (SyntheticTextDataset, WordPi
     let ds = SyntheticTextDataset::new(spec);
     run_partition_paged(
         &ds,
-        &FeatureKey::new("domain"),
+        by_domain().as_ref(),
         dir,
         "train",
         &PartitionOptions { num_shards: 2, num_workers: 2, ..Default::default() },

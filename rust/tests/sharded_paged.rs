@@ -23,8 +23,7 @@ use grouper::corpus::{BaseDataset, DatasetSpec, SyntheticTextDataset};
 use grouper::formats::paged_sharded::shard_prefix;
 use grouper::formats::{PagedShardSet, PagedStore, ShardedPagedReader};
 use grouper::pipeline::{
-    run_partition_paged, FeatureKey, PagedPartitionOptions, PartitionOptions, Partitioner,
-    RandomPartitioner,
+    run_partition_paged, PagedPartitionOptions, PartitionOptions, Partitioner, PartitionerSpec,
 };
 use grouper::records::Example;
 use grouper::store::shared::pin_count;
@@ -72,8 +71,8 @@ fn oracle(ds: &dyn BaseDataset, p: &dyn Partitioner) -> BTreeMap<Vec<u8>, Vec<Ve
 fn shard_count_never_changes_the_mapping() {
     let ds = small_text(30);
     let partitioners: Vec<(&str, Box<dyn Partitioner>)> = vec![
-        ("feature", Box::new(FeatureKey::new("domain"))),
-        ("random", Box::new(RandomPartitioner::new(13, 42))),
+        ("feature", "feature:domain".parse::<PartitionerSpec>().unwrap().build().unwrap()),
+        ("random", "random:13".parse::<PartitionerSpec>().unwrap().build().unwrap()),
     ];
     for (name, p) in &partitioners {
         let want = oracle(&ds, p.as_ref());
@@ -94,7 +93,7 @@ fn shard_count_never_changes_the_mapping() {
 #[test]
 fn single_shard_run_is_byte_identical_to_plain_build() {
     let ds = small_text(12);
-    let p = FeatureKey::new("domain");
+    let p = PartitionerSpec::Feature { feature: "domain".into() }.build().unwrap();
     let plain = tmp("ident-plain");
     let sharded = tmp("ident-set");
     let store = PagedStore::build(&ds, &p, &plain, "data", 64).unwrap();
@@ -191,7 +190,7 @@ fn reader_pins_every_shard_and_is_isolated_from_a_live_appender() {
 #[test]
 fn concurrent_reads_through_the_sharded_reader_match_serial() {
     let ds = small_text(20);
-    let p = FeatureKey::new("domain");
+    let p = PartitionerSpec::Feature { feature: "domain".into() }.build().unwrap();
     let dir = tmp("concurrent");
     let paged = PagedPartitionOptions { shards: 4, cache_pages: 16, hash_seed: 0 };
     run_partition_paged(&ds, &p, &dir, "data", &opts(), &paged).unwrap();
